@@ -1,0 +1,46 @@
+//! Longer context => better models (Tables 4 & 5 in miniature): train the
+//! same flash-attention classifier at four context lengths on long
+//! documents whose evidence spans 512 tokens, and watch accuracy climb
+//! with visible context.
+//!
+//! Run:  make artifacts && cargo run --release --example long_context
+//! Env:  STEPS=120
+
+use std::path::Path;
+
+use anyhow::Result;
+use flashattn::coordinator::tasks::run_task;
+use flashattn::data::longdoc::{expected_evidence_fraction, LongDoc};
+use flashattn::runtime::Runtime;
+use flashattn::util::table::Table;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(120);
+    let mut rt = Runtime::cpu(Path::new("artifacts"))?;
+    let ds = LongDoc { doc_len: 512, n_evidence: 8 };
+
+    let mut t = Table::new(
+        &format!("long-document accuracy vs context ({steps} steps each, chance 0.10)"),
+        &["context", "evidence visible", "accuracy", "ms/step"],
+    );
+    let mut accs = Vec::new();
+    for (tag, ctx) in [("longdoc_ctx64", 64usize), ("longdoc_ctx128", 128),
+                        ("longdoc_ctx256", 256), ("longdoc_ctx512", 512)] {
+        let res = run_task(&mut rt, tag, &ds, steps, 99)?;
+        accs.push(res.accuracy);
+        t.row(vec![
+            ctx.to_string(),
+            format!("{:.0}%", expected_evidence_fraction(512, ctx) * 100.0),
+            format!("{:.3}", res.accuracy),
+            format!("{:.0}", res.ms_per_step),
+        ]);
+    }
+    t.print();
+    println!("paper analogue: Table 5 (MIMIC-III F1 52.8 @512 -> 57.1 @16K) — same information-\n\
+              theoretic mechanism: truncation hides evidence the label needs.");
+    assert!(
+        accs.last().unwrap() + 1e-9 >= accs.first().unwrap() - 0.05,
+        "long-context accuracy collapsed: {accs:?}"
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: load the AOT attention artifacts and verify the whole stack
+//! agrees three ways on the same inputs:
+//!
+//!   1. the Pallas FlashAttention kernel (Algorithm 2) via PJRT,
+//!   2. the jnp reference oracle (Algorithm 0) via PJRT,
+//!   3. the pure-Rust FlashAttention mirror (this crate's attn::flash).
+//!
+//! Run:  make artifacts && cargo run --release --example quickstart
+
+use std::path::Path;
+
+use anyhow::Result;
+use flashattn::attn::flash::{flash_forward, Blocks};
+use flashattn::attn::AttnConfig;
+use flashattn::runtime::{Runtime, Value};
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+
+fn main() -> Result<()> {
+    let mut rt = Runtime::cpu(Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.client.platform_name());
+
+    // Inputs matching the artifact signature: [bh=8, n=128, d=64].
+    let (bh, n, d) = (8usize, 128usize, 64usize);
+    let mut rng = SplitMix64::new(42);
+    let mk = |rng: &mut SplitMix64| Value::F32 { shape: vec![bh, n, d], data: rng.normal_vec(bh * n * d, 1.0) };
+    let q = mk(&mut rng);
+    let k = mk(&mut rng);
+    let v = mk(&mut rng);
+    let inputs = vec![q.clone(), k.clone(), v.clone()];
+
+    // 1+2: both PJRT artifacts.
+    let flash = rt.run("attn_flash_fwd", &inputs)?.remove(0);
+    let reference = rt.run("attn_ref_fwd", &inputs)?.remove(0);
+
+    // 3: pure-Rust mirror, head slice by head slice.
+    let mut max_diff_rust = 0.0f32;
+    for b in 0..bh {
+        let slice = |val: &Value| {
+            let data = val.as_f32().unwrap();
+            Tensor::from_vec(&[n, d], data[b * n * d..(b + 1) * n * d].to_vec())
+        };
+        let out = flash_forward(
+            &slice(&q), &slice(&k), &slice(&v),
+            &AttnConfig::default(),
+            Blocks::explicit(16, 16),
+            &mut Hbm::new(),
+        );
+        let fl = slice(&flash);
+        max_diff_rust = max_diff_rust.max(out.o.max_abs_diff(&fl));
+    }
+
+    let max_diff_kernels = flash
+        .as_f32()?
+        .iter()
+        .zip(reference.as_f32()?)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+
+    println!("max |pallas_flash - jnp_reference|  = {max_diff_kernels:.2e}");
+    println!("max |pallas_flash - rust_mirror|    = {max_diff_rust:.2e}");
+    assert!(max_diff_kernels < 1e-4, "kernel vs oracle mismatch");
+    assert!(max_diff_rust < 1e-4, "kernel vs rust mirror mismatch");
+
+    // Bonus: causal + backward artifacts.
+    let causal = rt.run("attn_flash_fwd_causal", &inputs)?.remove(0);
+    println!("causal forward OK (first row attends only itself: o[0] == v[0]: {})",
+             causal.as_f32()?[..d]
+                 .iter()
+                 .zip(&v.as_f32()?[..d])
+                 .all(|(a, b)| (a - b).abs() < 1e-4));
+
+    let mut io4 = inputs.clone();
+    io4.push(mk(&mut rng)); // dO
+    let grads = rt.run("attn_flash_fwd_bwd", &io4)?;
+    println!("fwd+bwd artifact OK: outputs {:?}",
+             grads.iter().map(|g| g.shape().to_vec()).collect::<Vec<_>>());
+
+    println!("\nquickstart OK — all three implementations agree.");
+    Ok(())
+}

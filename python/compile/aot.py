@@ -1,0 +1,272 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+The manifest records, per artifact: file name, input/output names, shapes
+and dtypes — the complete calling convention the Rust runtime needs. For
+models it also records the flattened parameter order and the model config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.block_sparse import butterfly_mask, mask_sparsity
+from .kernels.flash_attention import BlockSizes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(x) -> str:
+    return jnp.dtype(x.dtype).name
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "models": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, specs, input_names, output_names):
+        """Lower fn(*specs) and record its calling convention."""
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        outs = jax.tree_util.tree_leaves(outs)
+        assert len(outs) == len(output_names), (name, len(outs), len(output_names))
+        flat_specs = jax.tree_util.tree_leaves(specs)
+        assert len(flat_specs) == len(input_names), (name, len(flat_specs), len(input_names))
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": _dtype_name(s)}
+                for n, s in zip(input_names, flat_specs)
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s.shape), "dtype": _dtype_name(s)}
+                for n, s in zip(output_names, outs)
+            ],
+        }
+        print(f"  wrote {fname}  ({len(text)//1024} KiB, "
+              f"{len(flat_specs)} in / {len(outs)} out)")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  wrote manifest.json ({len(self.manifest['artifacts'])} artifacts)")
+
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention micro-artifacts (quickstart, Rust x-check, serve demo)
+# ---------------------------------------------------------------------------
+
+
+def build_attention_artifacts(b: Builder, bh=8, n=128, d=64):
+    qkv = [spec((bh, n, d))] * 3
+    names = ["q", "k", "v"]
+    bs = BlockSizes(16, 16)
+
+    b.add("attn_flash_fwd", M.attention_entry("flash", block_sizes=bs),
+          qkv, names, ["o"])
+    b.add("attn_flash_fwd_causal",
+          M.attention_entry("flash", causal=True, block_sizes=bs),
+          qkv, names, ["o"])
+    b.add("attn_flash_fwd_dropout",
+          M.attention_entry("flash", causal=True, dropout_p=0.1,
+                            dropout_seed=42, block_sizes=bs),
+          qkv, names, ["o"])
+    b.add("attn_ref_fwd", M.attention_entry("reference"), qkv, names, ["o"])
+
+    mask = butterfly_mask(n // 16, n // 16)
+    b.add("attn_bsparse_fwd",
+          M.attention_entry("block_sparse", block_sizes=bs, block_mask=mask),
+          qkv, names, ["o"])
+    b.manifest["artifacts"]["attn_bsparse_fwd"]["sparsity"] = mask_sparsity(mask)
+
+    qkvd = qkv + [spec((bh, n, d))]
+    namesd = names + ["do"]
+    b.add("attn_flash_fwd_bwd",
+          M.attention_fwd_bwd_entry("flash", causal=True, block_sizes=bs),
+          qkvd, namesd, ["o", "dq", "dk", "dv"])
+    b.add("attn_ref_fwd_bwd",
+          M.attention_fwd_bwd_entry("reference", causal=True),
+          qkvd, namesd, ["o", "dq", "dk", "dv"])
+
+
+# ---------------------------------------------------------------------------
+# Model artifacts
+# ---------------------------------------------------------------------------
+
+
+def _model_entry(b: Builder, tag: str, cfg: M.ModelConfig, batch: int):
+    """init / train_step / eval artifacts for one model config."""
+    example = M.init_params(jax.random.PRNGKey(0), cfg)
+    leaves, treedef = M.flatten(example)
+    names = M.param_names(example)
+    pspecs = [spec(l.shape, l.dtype) for l in leaves]
+
+    b.manifest["models"][tag] = {
+        "config": {
+            "vocab": cfg.vocab, "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+            "d_model": cfg.d_model, "n_ctx": cfg.n_ctx, "attention": cfg.attention,
+            "n_classes": cfg.n_classes, "causal": cfg.causal, "batch": batch,
+        },
+        "param_names": names,
+        "param_shapes": [list(l.shape) for l in leaves],
+        "n_params": int(sum(np.prod(l.shape) for l in leaves)),
+    }
+
+    def init_fn(seed):
+        p = M.init_params(jax.random.PRNGKey(seed), cfg)
+        return tuple(M.flatten(p)[0])
+
+    b.add(f"{tag}_init", init_fn, [spec((), I32)], ["seed"], names)
+
+    unflat = lambda ls: M.unflatten(treedef, list(ls))
+    zero_names = [f"m/{n}" for n in names] + [f"v/{n}" for n in names]
+
+    if cfg.n_classes == 0:
+        tok_spec = spec((batch, cfg.n_ctx + 1), I32)
+
+        def train_fn(*args):
+            np_, nm, nv = len(names), len(names), len(names)
+            p = unflat(args[:np_])
+            m = unflat(args[np_:np_ + nm])
+            v = unflat(args[np_ + nm:np_ + nm + nv])
+            tokens, lr, t = args[-3], args[-2], args[-1]
+            p2, m2, v2, loss = M.lm_train_step(p, m, v, tokens, lr, t, cfg=cfg)
+            return (*M.flatten(p2)[0], *M.flatten(m2)[0], *M.flatten(v2)[0], loss)
+
+        in_specs = pspecs * 3 + [tok_spec, spec((), F32), spec((), F32)]
+        in_names = names + zero_names + ["tokens", "lr", "t"]
+        out_names = names + zero_names + ["loss"]
+        b.add(f"{tag}_train_step", train_fn, in_specs, in_names, out_names)
+
+        def eval_loss_fn(*args):
+            p = unflat(args[:len(names)])
+            return (M.lm_loss(p, cfg, args[-1]),)
+
+        b.add(f"{tag}_eval_loss", eval_loss_fn, pspecs + [tok_spec],
+              names + ["tokens"], ["loss"])
+
+        def logits_fn(*args):
+            p = unflat(args[:len(names)])
+            return (M.lm_logits(p, cfg, args[-1]),)
+
+        b.add(f"{tag}_logits", logits_fn,
+              pspecs + [spec((1, cfg.n_ctx), I32)],
+              names + ["tokens"], ["logits"])
+    else:
+        tok_spec = spec((batch, cfg.n_ctx), I32)
+        lab_spec = spec((batch,), I32)
+
+        def train_fn(*args):
+            np_ = len(names)
+            p = unflat(args[:np_])
+            m = unflat(args[np_:2 * np_])
+            v = unflat(args[2 * np_:3 * np_])
+            tokens, labels, lr, t = args[-4], args[-3], args[-2], args[-1]
+            p2, m2, v2, loss, acc = M.cls_train_step(p, m, v, tokens, labels,
+                                                     lr, t, cfg=cfg)
+            return (*M.flatten(p2)[0], *M.flatten(m2)[0], *M.flatten(v2)[0],
+                    loss, acc)
+
+        in_specs = pspecs * 3 + [tok_spec, lab_spec, spec((), F32), spec((), F32)]
+        in_names = names + zero_names + ["tokens", "labels", "lr", "t"]
+        out_names = names + zero_names + ["loss", "acc"]
+        b.add(f"{tag}_train_step", train_fn, in_specs, in_names, out_names)
+
+        def eval_fn(*args):
+            p = unflat(args[:len(names)])
+            loss, acc = M.cls_loss_acc(p, cfg, args[-2], args[-1])
+            return loss, acc
+
+        b.add(f"{tag}_eval", eval_fn, pspecs + [tok_spec, lab_spec],
+              names + ["tokens", "labels"], ["loss", "acc"])
+
+
+def build_model_artifacts(b: Builder):
+    # Causal LMs: flash vs reference attention, identical init -> identical
+    # training curves (Fig. 4 claim: exactness implies same ppl).
+    gpt = M.ModelConfig(vocab=256, n_layer=2, n_head=4, d_model=128,
+                        n_ctx=128, attention="flash")
+    _model_entry(b, "gpt_flash", gpt, batch=8)
+    _model_entry(b, "gpt_ref",
+                 M.ModelConfig(**{**gpt.__dict__, "attention": "reference"}),
+                 batch=8)
+    # Longer-context LM variants for the Table 4 analogue (ctx sweep).
+    for ctx in (64, 256):
+        cfg = M.ModelConfig(vocab=256, n_layer=2, n_head=4, d_model=128,
+                            n_ctx=ctx, attention="flash")
+        _model_entry(b, f"gpt_flash_ctx{ctx}", cfg, batch=8)
+
+    # Classifier family for the LRA-style Table 3 / 5 / 6 experiments.
+    for kind in ("flash", "reference", "block_sparse", "local", "linformer",
+                 "linear"):
+        cfg = M.ModelConfig(vocab=32, n_layer=2, n_head=4, d_model=64,
+                            n_ctx=128, attention=kind, n_classes=10,
+                            causal=False, block_q=16, block_k=16,
+                            local_window=16, linformer_k=32)
+        _model_entry(b, f"cls_{kind}", cfg, batch=16)
+
+    # Long-document classifier: context-length sweep (Table 5 analogue).
+    for ctx in (64, 128, 256, 512):
+        cfg = M.ModelConfig(vocab=32, n_layer=2, n_head=4, d_model=64,
+                            n_ctx=ctx, attention="flash", n_classes=10,
+                            causal=False)
+        _model_entry(b, f"longdoc_ctx{ctx}", cfg, batch=8)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact group filter: attn,models")
+    args = ap.parse_args()
+    groups = set((args.only or "attn,models").split(","))
+
+    b = Builder(args.out)
+    print("[aot] lowering artifacts ...")
+    if "attn" in groups:
+        build_attention_artifacts(b)
+    if "models" in groups:
+        build_model_artifacts(b)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

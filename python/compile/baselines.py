@@ -1,0 +1,66 @@
+"""jnp reference implementations of the approximate-attention baselines the
+paper compares against in Table 3 / Table 6 (accuracy side).
+
+These are *quality* baselines for the LRA-style experiments — their runtime
+and memory claims are reproduced analytically in the Rust simulator
+(rust/src/sim/baselines.rs). Only the variants whose accuracy the paper
+reports need real numerics: Local Attention [80], Linformer [84], and
+Linear Attention (Katharopoulos et al. [50], the Performer-family stand-in).
+
+All take [bh, n, d] and return [bh, n, d] like the flash kernels.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def local_attention(q, k, v, *, window: int = 64, causal: bool = False, tau=None):
+    """Sliding-window attention: token i attends to |i-j| <= window."""
+    n, d = q.shape[-2], q.shape[-1]
+    if tau is None:
+        tau = 1.0 / math.sqrt(d)
+    s = tau * jnp.einsum("...nd,...md->...nm", q, k)
+    idx = jnp.arange(n)
+    band = jnp.abs(idx[:, None] - idx[None, :]) <= window
+    if causal:
+        band = jnp.logical_and(band, idx[None, :] <= idx[:, None])
+    s = jnp.where(band, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...nm,...md->...nd", p, v)
+
+
+def linformer_attention(q, k, v, e_proj, f_proj, *, tau=None):
+    """Linformer: project keys/values along the sequence axis with learned
+    E, F in R^{n x k_proj} before standard attention. Non-causal."""
+    d = q.shape[-1]
+    if tau is None:
+        tau = 1.0 / math.sqrt(d)
+    k_low = jnp.einsum("nk,...nd->...kd", e_proj, k)   # [bh, k_proj, d]
+    v_low = jnp.einsum("nk,...nd->...kd", f_proj, v)
+    s = tau * jnp.einsum("...nd,...kd->...nk", q, k_low)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("...nk,...kd->...nd", p, v_low)
+
+
+def linear_attention(q, k, v, *, causal: bool = False):
+    """Linear attention with elu+1 feature map (Transformers are RNNs [50])."""
+    fq = jax.nn.elu(q) + 1.0
+    fk = jax.nn.elu(k) + 1.0
+    if causal:
+        # Prefix sums over the sequence: kv[i] = sum_{j<=i} fk_j v_j^T.
+        kv = jnp.cumsum(jnp.einsum("...nd,...ne->...nde", fk, v), axis=-3)
+        z = jnp.cumsum(fk, axis=-2)
+        num = jnp.einsum("...nd,...nde->...ne", fq, kv)
+        den = jnp.einsum("...nd,...nd->...n", fq, z)
+    else:
+        kv = jnp.einsum("...nd,...ne->...de", fk, v)
+        z = jnp.sum(fk, axis=-2)
+        num = jnp.einsum("...nd,...de->...ne", fq, kv)
+        den = jnp.einsum("...nd,...d->...n", fq, z)
+    return num / jnp.maximum(den[..., None], 1e-6)

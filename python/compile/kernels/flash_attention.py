@@ -1,0 +1,371 @@
+"""FlashAttention forward + backward as Pallas kernels (Algorithms 1/2/4).
+
+Faithful tiled realisation of the paper:
+
+* **Forward** (Algorithm 2): grid ``(batch*heads, T_r, T_c)``. Each grid step
+  owns one (B_r x B_c) tile of the attention matrix; the output block O_i and
+  the softmax statistics (l_i, m_i) live in revisited output blocks and are
+  updated with the online-softmax recurrence of Algorithm 1 lines 10-13
+  (init at j==0, final 1/l normalisation at j==T_c-1). The N x N matrix is
+  never materialised — only the current tile exists on-chip.
+* **Backward** (Algorithm 4): grid ``(batch*heads, T_c, T_r)`` — outer loop
+  over K/V blocks exactly as the paper writes it. dK_j/dV_j accumulate in
+  revisited output blocks over the inner i loop; dQ_i accumulates across the
+  outer j loop. P_ij is *recomputed* on-chip from (Q_i, K_j, l_i, m_i); the
+  dropout mask is regenerated from the counter-based RNG state (prng.py), so
+  nothing quadratic is ever read from HBM.
+* **Masking**: causal and key-padding masks are fused into the tile compute
+  (Algorithm 2 line 11). Causally fully-masked tiles are *skipped* via
+  ``pl.when`` — the block-level analogue of the paper's Fig. 6 causal
+  speedup.
+* **Hardware adaptation** (DESIGN.md §3): B_c=⌈M/4d⌉, B_r=min(B_c,d) map the
+  paper's SRAM budget to a VMEM budget; the BlockSpec index maps express the
+  HBM→VMEM schedule the CUDA kernel wrote with shared-memory staging; tile
+  matmuls target the MXU. ``interpret=True`` is required for CPU PJRT — on a
+  real TPU the backward would be split into a dQ kernel and a dKV kernel so
+  every output block is revisited consecutively.
+
+The module also provides ``flash_attention`` — a ``jax.custom_vjp`` wrapper
+used by the L2 model so that *training graphs* lower through Algorithm 4
+rather than jax autodiff of the forward.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .prng import keep_from_counter, tile_counters
+
+NEG_INF = -1e30
+DEFAULT_SRAM_FLOATS = 48 * 1024  # 192 KB of f32 — one A100 SM's SRAM (§2.1)
+
+
+class BlockSizes(NamedTuple):
+    """Tile geometry, derived from the SRAM budget per Algorithm 1 line 1."""
+
+    block_q: int   # B_r
+    block_k: int   # B_c
+
+    @staticmethod
+    def from_sram(d: int, n: int, sram_floats: int = DEFAULT_SRAM_FLOATS) -> "BlockSizes":
+        bc = max(1, math.ceil(sram_floats / (4 * d)))
+        br = min(bc, d)
+        # Round to a hardware-friendly multiple (MXU lane width) and clamp to n.
+        def tidy(b: int) -> int:
+            b = min(b, n)
+            if b >= 8:
+                b -= b % 8
+            return max(b, 1)
+
+        return BlockSizes(tidy(br), tidy(bc))
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, l_ref, m_ref, *,
+                tau, causal, p_drop, seed, br, bc, n_rows, n_cols, t_c):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():  # Algorithm 2 line 3
+        o_ref[...] = jnp.zeros_like(o_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+
+    # Causally fully-masked tile: first column of the tile is beyond the last
+    # row of the tile -> skip all compute (block-level causal early-exit).
+    run = (j * bc <= i * br + (br - 1)) if causal else (j >= 0)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]              # (B_r, d)   Algorithm 2 line 9
+        k = k_ref[0]              # (B_c, d)
+        v = v_ref[0]
+        s = tau * jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # line 10
+
+        rows = i * br + jax.lax.iota(jnp.int32, br)
+        cols = j * bc + jax.lax.iota(jnp.int32, bc)
+        if causal:                # line 11: MASK
+            s = jnp.where(cols[None, :] <= rows[:, None], s, NEG_INF)
+        s = jnp.where(cols[None, :] < kvlen_ref[0], s, NEG_INF)
+
+        m_tile = jnp.max(s, axis=1)                       # line 12
+        p = jnp.exp(s - m_tile[:, None])
+        l_tile = jnp.sum(p, axis=1)
+
+        m_old = m_ref[0]
+        l_old = l_ref[0]
+        m_new = jnp.maximum(m_old, m_tile)                # line 13
+        alpha = jnp.exp(m_old - m_new)
+        beta = jnp.exp(m_tile - m_new)
+        l_new = alpha * l_old + beta * l_tile
+
+        if p_drop > 0.0:                                  # line 14: dropout on P~
+            ctr = tile_counters(b, i * br, j * bc, br, bc, n_rows, n_cols)
+            p = p * keep_from_counter(ctr, seed, p_drop) * (1.0 / (1.0 - p_drop))
+
+        # line 15, kept *unnormalised* in the revisited block; the diag(l)^-1
+        # normalisation is applied once at the last j (mathematically equal to
+        # renormalising every step, with T_c fewer divisions).
+        pv = jnp.dot(p, v, preferred_element_type=jnp.float32)
+        o_ref[0] = alpha[:, None] * o_ref[0] + beta[:, None] * pv
+        m_ref[0] = m_new                                  # line 16
+        l_ref[0] = l_new
+
+    @pl.when(j == t_c - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / l_ref[0][:, None]
+
+
+def flash_attention_fwd(q, k, v, kv_len=None, *, tau=None, causal=False,
+                        dropout_p=0.0, dropout_seed=0,
+                        block_sizes: BlockSizes | None = None,
+                        sram_floats: int = DEFAULT_SRAM_FLOATS,
+                        interpret: bool = True):
+    """Algorithm 2. q,k,v: [bh, n, d] (+ optional kv_len: [bh] int32).
+
+    Returns (O, l, m) — the output plus the softmax statistics saved for the
+    backward pass. Handles n not divisible by the block sizes by padding
+    (padded keys are masked via kv_len; padded query rows are sliced off).
+    """
+    bh, n, d = q.shape
+    if tau is None:
+        tau = 1.0 / math.sqrt(d)
+    bs = block_sizes or BlockSizes.from_sram(d, n, sram_floats)
+    br, bc = bs.block_q, bs.block_k
+    nq = _ceil_to(n, br)
+    nk = _ceil_to(n, bc)
+    t_r, t_c = nq // br, nk // bc
+
+    if kv_len is None:
+        kv_len = jnp.full((bh,), n, dtype=jnp.int32)
+    kv_len = jnp.minimum(kv_len.astype(jnp.int32), n)
+
+    qp = _pad_axis(q.astype(jnp.float32), 1, nq)
+    kp = _pad_axis(k.astype(jnp.float32), 1, nk)
+    vp = _pad_axis(v.astype(jnp.float32), 1, nk)
+
+    kernel = functools.partial(
+        _fwd_kernel, tau=tau, causal=causal, p_drop=dropout_p,
+        seed=dropout_seed, br=br, bc=bc, n_rows=n, n_cols=n, t_c=t_c)
+
+    o, l, m = pl.pallas_call(
+        kernel,
+        grid=(bh, t_r, t_c),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i, j: (b,)),
+            pl.BlockSpec((1, br, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bc, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bc, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, br), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, br), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nq, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nq), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qp, kp, vp)
+    return o[:, :n, :], l[:, :n], m[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, do_ref, l_ref, m_ref,
+                dq_ref, dk_ref, dv_ref, *,
+                tau, causal, p_drop, seed, br, bc, n_rows, n_cols):
+    b = pl.program_id(0)
+    j = pl.program_id(1)   # outer: K/V blocks (Algorithm 4 line 6)
+    i = pl.program_id(2)   # inner: Q blocks  (Algorithm 4 line 9)
+
+    @pl.when(j == 0)
+    def _init_dq():        # dQ = 0 in HBM (Algorithm 4 line 5)
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    @pl.when(i == 0)
+    def _init_dkv():       # dK~_j = dV~_j = 0 (Algorithm 4 line 8)
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    run = (j * bc <= i * br + (br - 1)) if causal else (j >= 0)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        o = o_ref[0]
+        do = do_ref[0]
+        l = l_ref[0]
+        m = m_ref[0]
+
+        s = tau * jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # line 11
+        rows = i * br + jax.lax.iota(jnp.int32, br)
+        cols = j * bc + jax.lax.iota(jnp.int32, bc)
+        if causal:                                                     # line 12
+            s = jnp.where(cols[None, :] <= rows[:, None], s, NEG_INF)
+        s = jnp.where(cols[None, :] < kvlen_ref[0], s, NEG_INF)
+
+        # line 13: recompute P_ij from the saved statistics — the paper's
+        # recomputation trick; no N x N read from HBM.
+        p = jnp.exp(s - m[:, None]) / l[:, None]
+
+        if p_drop > 0.0:                                               # line 14
+            ctr = tile_counters(b, i * br, j * bc, br, bc, n_rows, n_cols)
+            z = keep_from_counter(ctr, seed, p_drop) * (1.0 / (1.0 - p_drop))
+            p_dropped = p * z                                          # line 15
+        else:
+            z = None
+            p_dropped = p
+
+        dv_ref[0] += jnp.dot(p_dropped.T, do,                          # line 16
+                             preferred_element_type=jnp.float32)
+        dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)      # line 17
+        if z is not None:
+            dp = dp * z                                                # line 18
+        di = jnp.sum(do * o, axis=1)                                   # line 19
+        ds = p * (dp - di[:, None])                                    # line 20
+        dq_ref[0] += tau * jnp.dot(ds, k,                              # line 21
+                                   preferred_element_type=jnp.float32)
+        dk_ref[0] += tau * jnp.dot(ds.T, q,                            # line 22
+                                   preferred_element_type=jnp.float32)
+
+
+def flash_attention_bwd(q, k, v, o, do, l, m, kv_len=None, *, tau=None,
+                        causal=False, dropout_p=0.0, dropout_seed=0,
+                        block_sizes: BlockSizes | None = None,
+                        sram_floats: int = DEFAULT_SRAM_FLOATS,
+                        interpret: bool = True):
+    """Algorithm 4. Returns (dQ, dK, dV), all [bh, n, d]."""
+    bh, n, d = q.shape
+    if tau is None:
+        tau = 1.0 / math.sqrt(d)
+    bs = block_sizes or BlockSizes.from_sram(d, n, sram_floats)
+    br, bc = bs.block_q, bs.block_k
+    nq = _ceil_to(n, br)
+    nk = _ceil_to(n, bc)
+    t_r, t_c = nq // br, nk // bc
+
+    if kv_len is None:
+        kv_len = jnp.full((bh,), n, dtype=jnp.int32)
+    kv_len = jnp.minimum(kv_len.astype(jnp.int32), n)
+
+    f32 = lambda x: x.astype(jnp.float32)
+    qp, op, dop = (_pad_axis(f32(x), 1, nq) for x in (q, o, do))
+    kp, vp = (_pad_axis(f32(x), 1, nk) for x in (k, v))
+    # Padded query rows: l=0 would divide by zero in P recompute; set l=1,
+    # m=0 there (s rows are fully masked anyway once sliced off — but the
+    # pad rows do contribute dK/dV unless P=0, so force P=0 via m=+large).
+    lp = _pad_axis(l, 1, nq)
+    mp = _pad_axis(m, 1, nq)
+    if nq != n:
+        pad_rows = jnp.arange(nq) >= n
+        lp = jnp.where(pad_rows[None, :], 1.0, lp)
+        mp = jnp.where(pad_rows[None, :], -NEG_INF, mp)  # exp(s - huge) = 0
+
+    kernel = functools.partial(
+        _bwd_kernel, tau=tau, causal=causal, p_drop=dropout_p,
+        seed=dropout_seed, br=br, bc=bc, n_rows=n, n_cols=n)
+
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(bh, t_c, t_r),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j, i: (b,)),
+            pl.BlockSpec((1, br, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bc, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bc, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, br, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, br, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, br), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, br), lambda b, j, i: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bc, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bc, d), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nq, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nk, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qp, kp, vp, op, dop, lp, mp)
+    return dq[:, :n, :], dk[:, :n, :], dv[:, :n, :]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper — the L2 model's attention primitive
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, tau=None, causal=False, dropout_p=0.0,
+                    dropout_seed=0):
+    """Exact attention via the FlashAttention kernels. q,k,v: [bh, n, d].
+
+    Differentiable: the VJP runs Algorithm 4 (recomputation), so training
+    graphs built on this primitive lower to the paper's backward, not to
+    autodiff-of-the-forward (which would materialise the N x N matrix).
+    """
+    o, _, _ = flash_attention_fwd(q, k, v, tau=tau, causal=causal,
+                                  dropout_p=dropout_p, dropout_seed=dropout_seed)
+    return o
+
+
+def _fa_fwd(q, k, v, tau, causal, dropout_p, dropout_seed):
+    o, l, m = flash_attention_fwd(q, k, v, tau=tau, causal=causal,
+                                  dropout_p=dropout_p, dropout_seed=dropout_seed)
+    return o, (q, k, v, o, l, m)
+
+
+def _fa_bwd(tau, causal, dropout_p, dropout_seed, res, do):
+    q, k, v, o, l, m = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m, tau=tau,
+                                     causal=causal, dropout_p=dropout_p,
+                                     dropout_seed=dropout_seed)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def mha_flash(q, k, v, *, causal=False, dropout_p=0.0, dropout_seed=0, tau=None):
+    """[b, h, n, d] convenience wrapper: folds (b, h) into the kernel grid."""
+    b, h, n, d = q.shape
+    fold = lambda x: x.reshape(b * h, n, d)
+    o = flash_attention(fold(q), fold(k), fold(v), tau, causal, dropout_p,
+                        dropout_seed)
+    return o.reshape(b, h, n, d)

@@ -1,0 +1,68 @@
+"""Counter-based dropout RNG shared by the reference oracle and the kernels.
+
+The paper (Algorithm 2 line 1 / Algorithm 4 lines 1,14) saves the RNG *state*
+R from the forward pass and regenerates the dropout mask on-chip in the
+backward pass, so no O(N^2) mask ever touches HBM. We realise that with a
+stateless counter-based generator: the keep-decision for attention-matrix
+entry (bh, row, col) is a pure hash of (seed, linear_counter). Both the
+Pallas kernels (per tile, from global offsets) and the jnp oracle (whole
+array) evaluate the same function, so fwd, bwd, and oracle agree bit-exactly.
+
+Hash: murmur3 finalizer over counter*GOLDEN + seed. Quality is ample for a
+dropout mask and it lowers to plain uint32 HLO ops on any backend.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _u32(x):
+    """uint32 view of a traced or concrete scalar."""
+    return jax.lax.convert_element_type(x, jnp.uint32) if hasattr(x, "dtype") else np.uint32(x)
+
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+
+
+def hash_u32(counter: jnp.ndarray, seed) -> jnp.ndarray:
+    """murmur3 fmix32 of counter*GOLDEN + seed; uint32 in, uint32 out."""
+    h = counter.astype(jnp.uint32) * _GOLDEN + np.uint32(seed)
+    h = h ^ (h >> np.uint32(16))
+    h = h * _C1
+    h = h ^ (h >> np.uint32(13))
+    h = h * _C2
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def uniform01(counter: jnp.ndarray, seed) -> jnp.ndarray:
+    """Uniform [0,1) float32 from the top 24 bits of the hash."""
+    return (hash_u32(counter, seed) >> np.uint32(8)).astype(jnp.float32) * np.float32(1.0 / (1 << 24))
+
+
+def keep_from_counter(counter: jnp.ndarray, seed, p_drop: float) -> jnp.ndarray:
+    """1.0 where the element is kept (prob 1-p), 0.0 where dropped."""
+    return (uniform01(counter, seed) >= np.float32(p_drop)).astype(jnp.float32)
+
+
+def dropout_mask(seed, shape, p_drop: float) -> jnp.ndarray:
+    """Whole-array keep mask for the oracle: counters are row-major linear
+    indices over `shape`, matching the kernels' (bh*n + row)*m + col layout."""
+    total = 1
+    for s in shape:
+        total *= s
+    counters = jnp.arange(total, dtype=jnp.uint32).reshape(shape)
+    return keep_from_counter(counters, seed, p_drop)
+
+
+def tile_counters(bh, row0, col0, br: int, bc: int, n_rows: int, n_cols: int) -> jnp.ndarray:
+    """[br, bc] counters for the attention-matrix tile whose top-left global
+    entry is (bh, row0, col0) in a [BH, n_rows, n_cols] matrix."""
+    rows = (_u32(row0) + jax.lax.iota(jnp.uint32, br))[:, None]
+    cols = (_u32(col0) + jax.lax.iota(jnp.uint32, bc))[None, :]
+    return (_u32(bh) * np.uint32(n_rows) + rows) * np.uint32(n_cols) + cols

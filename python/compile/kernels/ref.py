@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracle for attention (Algorithm 0 of the paper).
+
+This is the correctness ground truth for the Pallas kernels: a direct,
+materialise-everything implementation of
+
+    S = tau * Q K^T,  S_masked = MASK(S),  P = softmax(S_masked),
+    P_dropped = dropout(P, p),  O = P_dropped V
+
+with the same masking conventions and the same counter-based dropout RNG as
+the kernels, so fwd/bwd comparisons are exact up to float error.
+
+Backward-pass oracles come from jax autodiff of this forward.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .prng import dropout_mask
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps softmax NaN-free on fully masked rows
+
+
+def causal_mask_bias(n: int) -> jnp.ndarray:
+    """[n, n] additive bias: 0 on/below the diagonal, NEG_INF above."""
+    idx = jnp.arange(n)
+    return jnp.where(idx[None, :] <= idx[:, None], 0.0, NEG_INF).astype(jnp.float32)
+
+
+def padding_mask_bias(kv_len: jnp.ndarray, n: int) -> jnp.ndarray:
+    """[n] additive key-padding bias from a scalar valid-length."""
+    return jnp.where(jnp.arange(n) < kv_len, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    tau: float | None = None,
+    causal: bool = False,
+    kv_len: jnp.ndarray | None = None,
+    dropout_p: float = 0.0,
+    dropout_seed: int = 0,
+) -> jnp.ndarray:
+    """Standard attention (Algorithm 0). q,k,v: [..., n, d] -> [..., n, d].
+
+    tau defaults to 1/sqrt(d). kv_len, if given, is a scalar (or batched
+    scalar) valid key length implementing the paper's padding mask.
+    """
+    n, d = q.shape[-2], q.shape[-1]
+    if tau is None:
+        tau = 1.0 / (d ** 0.5)
+    s = tau * jnp.einsum("...nd,...md->...nm", q, k)
+    if causal:
+        s = s + causal_mask_bias(n)
+    if kv_len is not None:
+        bias = padding_mask_bias(kv_len, n)
+        s = s + jnp.broadcast_to(bias, s.shape)
+    # Numerically-stable softmax with explicit max-shift, as in Section 3.1.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    el = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / el
+    if dropout_p > 0.0:
+        keep = dropout_mask(dropout_seed, s.shape, dropout_p)
+        p = p * keep / (1.0 - dropout_p)
+    return jnp.einsum("...nm,...md->...nd", p, v)
+
+
+def attention_ref_stats(q, k, v, *, tau=None, causal=False, kv_len=None):
+    """Forward that also returns the softmax statistics (m, l) the kernel
+    must save for the backward pass (Algorithm 2 returns O, l, m)."""
+    n, d = q.shape[-2], q.shape[-1]
+    if tau is None:
+        tau = 1.0 / (d ** 0.5)
+    s = tau * jnp.einsum("...nd,...md->...nm", q, k)
+    if causal:
+        s = s + causal_mask_bias(n)
+    if kv_len is not None:
+        s = s + jnp.broadcast_to(padding_mask_bias(kv_len, n), s.shape)
+    m = jnp.max(s, axis=-1)
+    el = jnp.sum(jnp.exp(s - m[..., None]), axis=-1)
+    o = jnp.einsum("...nm,...md->...nd", jnp.exp(s - m[..., None]) / el[..., None], v)
+    return o, el, m
+
+
+def attention_ref_bwd(q, k, v, do, **kw):
+    """Oracle input gradients via jax autodiff of the reference forward."""
+    def f(q_, k_, v_):
+        return attention_ref(q_, k_, v_, **kw)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(do)
+
+
+def block_sparse_attention_ref(q, k, v, block_mask, br: int, bc: int, *, tau=None):
+    """Reference for block-sparse attention (Section 3.3): S masked to -inf
+    wherever the (B_r x B_c)-block mask is zero, then softmax and PV."""
+    n, d = q.shape[-2], q.shape[-1]
+    if tau is None:
+        tau = 1.0 / (d ** 0.5)
+    s = tau * jnp.einsum("...nd,...md->...nm", q, k)
+    dense = jnp.repeat(jnp.repeat(block_mask, br, axis=0), bc, axis=1)[:n, :n]
+    s = jnp.where(dense.astype(bool), s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("...nm,...md->...nd", p, v)

@@ -1,0 +1,331 @@
+"""L2: the JAX compute graphs that lower to the Rust-served artifacts.
+
+A GPT-style transformer (causal LM) and a sequence classifier (for the
+LRA-style tasks), both parameterised over the attention implementation:
+
+* ``flash``        — the L1 Pallas FlashAttention kernel (Algorithms 2+4 via
+                     jax.custom_vjp, so the *training* graph contains the
+                     paper's recomputation backward);
+* ``reference``    — standard attention (Algorithm 0): materialises the
+                     N x N matrix. The exactness baseline;
+* ``block_sparse`` — block-sparse FlashAttention (Algorithm 5), butterfly
+                     pattern (Section 3.3);
+* ``local`` / ``linformer`` / ``linear`` — approximate-attention quality
+                     baselines for the Table 3 / Table 6 experiments.
+
+Everything here is build-time only. `aot.py` lowers `init`, `train_step`,
+`eval` entry points to HLO text; the Rust coordinator owns the training
+loop, data, and LR schedule, feeding parameters back in each step.
+
+Parameters are a nested dict; the *flattened leaf order* (jax pytree order:
+sorted dict keys) is the artifact calling convention and is recorded in the
+manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import baselines
+from .kernels import ref
+from .kernels.block_sparse import (block_sparse_attention_fwd, butterfly_mask,
+                                   make_block_sparse_attention)
+from .kernels.flash_attention import BlockSizes, mha_flash
+
+Params = dict
+
+ATTENTION_KINDS = ("flash", "reference", "block_sparse", "local", "linformer",
+                   "linear")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyperparameters (GPT-2 family shape, scaled down)."""
+
+    vocab: int = 256
+    n_layer: int = 2
+    n_head: int = 4
+    d_model: int = 128
+    n_ctx: int = 128
+    attention: str = "flash"
+    n_classes: int = 0          # 0 => causal LM; >0 => classifier
+    causal: bool = True
+    local_window: int = 32      # for attention == "local"
+    linformer_k: int = 32       # for attention == "linformer"
+    block_q: int = 16           # flash / block_sparse tile geometry
+    block_k: int = 16
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def block_mask(self) -> np.ndarray:
+        t_r = self.n_ctx // self.block_q
+        t_c = self.n_ctx // self.block_k
+        return butterfly_mask(t_r, t_c)
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by depth."""
+
+    def dense(key, shape, scale=0.02):
+        return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+    keys = iter(jax.random.split(key, 64))
+    p: Params = {
+        "wte": dense(next(keys), (cfg.vocab, cfg.d_model)),
+        "wpe": dense(next(keys), (cfg.n_ctx, cfg.d_model)),
+        "ln_f": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+    }
+    resid_scale = 0.02 / math.sqrt(2 * cfg.n_layer)
+    for layer in range(cfg.n_layer):
+        blk = {
+            "ln1": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+            "ln2": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+            "attn": {
+                "wqkv": dense(next(keys), (cfg.d_model, 3 * cfg.d_model)),
+                "bqkv": jnp.zeros((3 * cfg.d_model,)),
+                "wo": dense(next(keys), (cfg.d_model, cfg.d_model), resid_scale),
+                "bo": jnp.zeros((cfg.d_model,)),
+            },
+            "mlp": {
+                "w1": dense(next(keys), (cfg.d_model, 4 * cfg.d_model)),
+                "b1": jnp.zeros((4 * cfg.d_model,)),
+                "w2": dense(next(keys), (4 * cfg.d_model, cfg.d_model), resid_scale),
+                "b2": jnp.zeros((cfg.d_model,)),
+            },
+        }
+        if cfg.attention == "linformer":
+            blk["attn"]["e_proj"] = dense(next(keys), (cfg.n_ctx, cfg.linformer_k),
+                                          1.0 / math.sqrt(cfg.n_ctx))
+            blk["attn"]["f_proj"] = dense(next(keys), (cfg.n_ctx, cfg.linformer_k),
+                                          1.0 / math.sqrt(cfg.n_ctx))
+        p[f"h{layer}"] = blk
+    if cfg.n_classes > 0:
+        p["head"] = {
+            "w": dense(next(keys), (cfg.d_model, cfg.n_classes)),
+            "b": jnp.zeros((cfg.n_classes,)),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, ap: Params, q, k, v):
+    """Dispatch on cfg.attention. q,k,v: [B, H, T, dh] -> [B, H, T, dh]."""
+    b, h, t, dh = q.shape
+    fold = lambda x: x.reshape(b * h, t, dh)
+    unfold = lambda x: x.reshape(b, h, t, dh)
+    causal = cfg.causal
+    if cfg.attention == "flash":
+        return mha_flash(q, k, v, causal=causal)
+    if cfg.attention == "reference":
+        return unfold(ref.attention_ref(fold(q), fold(k), fold(v), causal=causal))
+    if cfg.attention == "block_sparse":
+        f = make_block_sparse_attention(
+            cfg.block_mask(), causal=causal,
+            block_sizes=BlockSizes(cfg.block_q, cfg.block_k))
+        return unfold(f(fold(q), fold(k), fold(v)))
+    if cfg.attention == "local":
+        return unfold(baselines.local_attention(
+            fold(q), fold(k), fold(v), window=cfg.local_window, causal=causal))
+    if cfg.attention == "linformer":
+        assert not causal, "Linformer is not causal (paper Appendix E)"
+        return unfold(baselines.linformer_attention(
+            fold(q), fold(k), fold(v), ap["e_proj"], ap["f_proj"]))
+    if cfg.attention == "linear":
+        return unfold(baselines.linear_attention(
+            fold(q), fold(k), fold(v), causal=causal))
+    raise ValueError(f"unknown attention kind {cfg.attention!r}")
+
+
+def transformer_hidden(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    """Token ids [B, T] -> final hidden states [B, T, D]."""
+    bsz, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:t]
+    for layer in range(cfg.n_layer):
+        blk = params[f"h{layer}"]
+        h = layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        qkv = h @ blk["attn"]["wqkv"] + blk["attn"]["bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        split_heads = lambda y: y.reshape(bsz, t, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+        o = _attention(cfg, blk["attn"], split_heads(q), split_heads(k), split_heads(v))
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, t, cfg.d_model)
+        x = x + o @ blk["attn"]["wo"] + blk["attn"]["bo"]
+        h = layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        x = x + jax.nn.gelu(h @ blk["mlp"]["w1"] + blk["mlp"]["b1"]) @ blk["mlp"]["w2"] + blk["mlp"]["b2"]
+    return layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+
+
+def lm_logits(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    """[B, T] -> [B, T, V] (tied embedding head)."""
+    return transformer_hidden(params, cfg, tokens) @ params["wte"].T
+
+
+def lm_loss(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    """Next-token cross-entropy. tokens: [B, T+1] (inputs ++ shifted targets)."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = lm_logits(params, cfg, inputs)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def cls_logits(params: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    """[B, T] -> [B, n_classes] via mean-pooled hidden states."""
+    hidden = transformer_hidden(params, cfg, tokens).mean(axis=1)
+    return hidden @ params["head"]["w"] + params["head"]["b"]
+
+
+def cls_loss_acc(params: Params, cfg: ModelConfig, tokens, labels):
+    logits = cls_logits(params, cfg, tokens)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step (fused into the artifact: one PJRT call per step)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+def adamw_update(params, grads, m, v, t, lr, oc: OptConfig):
+    """Standard AdamW with bias correction; decay skipped on 1-D tensors."""
+
+    def upd(p, g, m_, v_):
+        m_n = oc.beta1 * m_ + (1 - oc.beta1) * g
+        v_n = oc.beta2 * v_ + (1 - oc.beta2) * g * g
+        m_hat = m_n / (1 - oc.beta1 ** t)
+        v_hat = v_n / (1 - oc.beta2 ** t)
+        step = lr * m_hat / (jnp.sqrt(v_hat) + oc.eps)
+        if p.ndim >= 2:
+            step = step + lr * oc.weight_decay * p
+        return p - step, m_n, v_n
+
+    flat = jax.tree_util.tree_map(upd, params, grads, m, v)
+    unzip = lambda i: jax.tree_util.tree_map(lambda x: x[i], flat,
+                                             is_leaf=lambda x: isinstance(x, tuple))
+    return unzip(0), unzip(1), unzip(2)
+
+
+def lm_train_step(params, m, v, tokens, lr, t, *, cfg: ModelConfig,
+                  oc: OptConfig = OptConfig()):
+    """One fused LM training step. Returns (params', m', v', loss)."""
+    loss, grads = jax.value_and_grad(lambda p: lm_loss(p, cfg, tokens))(params)
+    params, m, v = adamw_update(params, grads, m, v, t, lr, oc)
+    return params, m, v, loss
+
+
+def cls_train_step(params, m, v, tokens, labels, lr, t, *, cfg: ModelConfig,
+                   oc: OptConfig = OptConfig()):
+    """One fused classifier training step -> (params', m', v', loss, acc)."""
+    (loss, acc), grads = jax.value_and_grad(
+        lambda p: cls_loss_acc(p, cfg, tokens, labels), has_aux=True)(params)
+    params, m, v = adamw_update(params, grads, m, v, t, lr, oc)
+    return params, m, v, loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Attention-only entry points (micro-bench + Rust cross-check artifacts)
+# ---------------------------------------------------------------------------
+
+
+def attention_entry(kind: str, *, causal=False, dropout_p=0.0, dropout_seed=0,
+                    block_sizes: BlockSizes | None = None, block_mask=None):
+    """Returns f(q, k, v) -> o for a [bh, n, d] attention forward."""
+
+    def f(q, k, v):
+        if kind == "flash":
+            from .kernels.flash_attention import flash_attention_fwd
+            o, _, _ = flash_attention_fwd(q, k, v, causal=causal,
+                                          dropout_p=dropout_p,
+                                          dropout_seed=dropout_seed,
+                                          block_sizes=block_sizes)
+            return (o,)
+        if kind == "reference":
+            return (ref.attention_ref(q, k, v, causal=causal,
+                                      dropout_p=dropout_p,
+                                      dropout_seed=dropout_seed),)
+        if kind == "block_sparse":
+            o, _, _ = block_sparse_attention_fwd(q, k, v, block_mask,
+                                                 causal=causal,
+                                                 dropout_p=dropout_p,
+                                                 dropout_seed=dropout_seed,
+                                                 block_sizes=block_sizes)
+            return (o,)
+        raise ValueError(kind)
+
+    return f
+
+
+def attention_fwd_bwd_entry(kind: str, *, causal=False,
+                            block_sizes: BlockSizes | None = None):
+    """Returns f(q, k, v, do) -> (o, dq, dk, dv)."""
+
+    def f(q, k, v, do):
+        if kind == "flash":
+            from .kernels.flash_attention import (flash_attention_bwd,
+                                                  flash_attention_fwd)
+            o, l, m_ = flash_attention_fwd(q, k, v, causal=causal,
+                                           block_sizes=block_sizes)
+            dq, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m_,
+                                             causal=causal,
+                                             block_sizes=block_sizes)
+            return o, dq, dk, dv
+        if kind == "reference":
+            o = ref.attention_ref(q, k, v, causal=causal)
+            dq, dk, dv = ref.attention_ref_bwd(q, k, v, do, causal=causal)
+            return o, dq, dk, dv
+        raise ValueError(kind)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Flat calling convention (shared with the manifest / Rust side)
+# ---------------------------------------------------------------------------
+
+
+def param_names(params: Params) -> list[str]:
+    """Slash-joined leaf names in jax pytree (= artifact argument) order."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    return ["/".join(str(k.key) for k in path) for path, _ in leaves]
+
+
+def flatten(params: Params):
+    return jax.tree_util.tree_flatten(params)
+
+
+def unflatten(treedef, leaves) -> Params:
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run from python/ (Makefile does `cd python && pytest tests/`); make
+# `compile.*` importable when invoked from the repo root too.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

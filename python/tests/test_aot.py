@@ -1,0 +1,104 @@
+"""AOT pipeline tests: the manifest contract the Rust runtime depends on.
+
+Fast checks against a freshly-built mini artifact set (one attention entry),
+plus consistency checks on the full artifacts/ directory when present.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))), "artifacts")
+
+
+class TestBuilder:
+    def test_mini_build_roundtrip(self, tmp_path):
+        b = aot.Builder(str(tmp_path))
+        f = M.attention_entry("reference")
+        specs = [jax.ShapeDtypeStruct((2, 8, 4), jnp.float32)] * 3
+        b.add("mini_attn", f, specs, ["q", "k", "v"], ["o"])
+        b.finish()
+        man = json.load(open(tmp_path / "manifest.json"))
+        a = man["artifacts"]["mini_attn"]
+        assert a["file"] == "mini_attn.hlo.txt"
+        assert a["inputs"][0]["shape"] == [2, 8, 4]
+        assert a["outputs"][0]["dtype"] == "float32"
+        text = open(tmp_path / "mini_attn.hlo.txt").read()
+        assert text.startswith("HloModule"), text[:40]
+        assert "f32[2,8,4]" in text
+
+    def test_arity_mismatch_caught(self, tmp_path):
+        b = aot.Builder(str(tmp_path))
+        f = M.attention_entry("reference")
+        specs = [jax.ShapeDtypeStruct((2, 8, 4), jnp.float32)] * 3
+        with pytest.raises(AssertionError):
+            b.add("bad", f, specs, ["q", "k"], ["o"])  # wrong input arity
+
+    def test_hlo_text_has_no_serialized_proto_markers(self, tmp_path):
+        """Interchange must be HLO *text* (xla_extension 0.5.1 rejects
+        jax>=0.5 serialized protos with 64-bit ids)."""
+        b = aot.Builder(str(tmp_path))
+        f = M.attention_entry("reference")
+        specs = [jax.ShapeDtypeStruct((1, 4, 4), jnp.float32)] * 3
+        b.add("t", f, specs, ["q", "k", "v"], ["o"])
+        raw = open(tmp_path / "t.hlo.txt", "rb").read()
+        raw.decode("utf-8")  # must be valid text
+        assert b"ENTRY" in raw
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="artifacts not built")
+class TestFullManifest:
+    @classmethod
+    def manifest(cls):
+        return json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+
+    def test_all_artifact_files_exist(self):
+        man = self.manifest()
+        for name, a in man["artifacts"].items():
+            path = os.path.join(ARTIFACTS, a["file"])
+            assert os.path.exists(path), f"{name}: {path} missing"
+            assert os.path.getsize(path) > 100
+
+    def test_model_param_counts_consistent(self):
+        man = self.manifest()
+        for tag, m in man["models"].items():
+            total = sum(int(np.prod(s)) for s in m["param_shapes"])
+            assert total == m["n_params"], tag
+            assert len(m["param_names"]) == len(m["param_shapes"]), tag
+
+    def test_train_step_signature_convention(self):
+        """train_step = params*3 ++ extras -> params*3 ++ scalars."""
+        man = self.manifest()
+        for tag, m in man["models"].items():
+            n = len(m["param_names"])
+            a = man["artifacts"][f"{tag}_train_step"]
+            n_extra_in = len(a["inputs"]) - 3 * n
+            n_extra_out = len(a["outputs"]) - 3 * n
+            is_cls = m["config"]["n_classes"] > 0
+            assert n_extra_in == (4 if is_cls else 3), tag
+            assert n_extra_out == (2 if is_cls else 1), tag
+            # scalar outputs are f32 rank-0
+            for out in a["outputs"][3 * n:]:
+                assert out["shape"] == [] and out["dtype"] == "float32", (tag, out)
+
+    def test_init_outputs_match_param_shapes(self):
+        man = self.manifest()
+        for tag, m in man["models"].items():
+            a = man["artifacts"][f"{tag}_init"]
+            assert [o["shape"] for o in a["outputs"]] == m["param_shapes"], tag
+
+    def test_experiment_grid_models_present(self):
+        man = self.manifest()
+        for tag in ["gpt_flash", "gpt_ref", "cls_flash", "cls_reference",
+                    "cls_block_sparse", "cls_local", "cls_linformer",
+                    "cls_linear", "longdoc_ctx512"]:
+            assert tag in man["models"], tag

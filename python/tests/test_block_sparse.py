@@ -1,0 +1,164 @@
+"""L1 correctness: block-sparse FlashAttention (Algorithm 5) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_sparse import (
+    block_sparse_attention_bwd,
+    block_sparse_attention_fwd,
+    butterfly_mask,
+    local_global_mask,
+    mask_sparsity,
+)
+from compile.kernels.flash_attention import BlockSizes, flash_attention_fwd
+
+
+def rand_qkv(seed, bh, n, d):
+    key = jax.random.PRNGKey(seed)
+    return tuple(jax.random.normal(jax.random.fold_in(key, i), (bh, n, d))
+                 for i in range(3))
+
+
+def assert_close(a, b, atol=2e-5, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=1e-4,
+                               err_msg=msg)
+
+
+class TestMasks:
+    def test_butterfly_includes_diagonal(self):
+        m = butterfly_mask(16, 16)
+        assert all(m[i, i] == 1 for i in range(16))
+
+    def test_butterfly_sparsity_shrinks_with_t(self):
+        """s ~ log(T)/T: sparsity fraction decreases as blocks grow."""
+        s = [mask_sparsity(butterfly_mask(t, t)) for t in (8, 32, 128)]
+        assert s[0] > s[1] > s[2]
+
+    def test_local_global_shape(self):
+        m = local_global_mask(8, 8, window=1, n_global=1)
+        assert m[4, 4] == 1 and m[4, 3] == 1 and m[4, 5] == 1
+        assert m[4, 0] == 1 and m[0, 6] == 1
+        assert m[4, 6] == 0
+
+    def test_dense_mask_sparsity_is_one(self):
+        assert mask_sparsity(np.ones((4, 4), np.int32)) == 1.0
+
+
+class TestBlockSparseForward:
+    def test_matches_masked_oracle(self):
+        q, k, v = rand_qkv(0, 2, 64, 16)
+        mask = butterfly_mask(8, 8)
+        o, _, _ = block_sparse_attention_fwd(q, k, v, mask, block_sizes=BlockSizes(8, 8))
+        assert_close(o, ref.block_sparse_attention_ref(q, k, v, jnp.asarray(mask), 8, 8))
+
+    def test_dense_mask_equals_flash(self):
+        """Algorithm 5 with all-ones mask is exactly Algorithm 2."""
+        q, k, v = rand_qkv(1, 1, 64, 16)
+        mask = np.ones((8, 8), np.int32)
+        o1, l1, m1 = block_sparse_attention_fwd(q, k, v, mask, block_sizes=BlockSizes(8, 8))
+        o2, l2, m2 = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(8, 8))
+        assert_close(o1, o2, atol=1e-6)
+        assert_close(l1, l2, atol=1e-6)
+        assert_close(m1, m2, atol=1e-6)
+
+    def test_diagonal_only_mask(self):
+        """Identity block mask == block-local attention."""
+        q, k, v = rand_qkv(2, 1, 32, 8)
+        mask = np.eye(4, dtype=np.int32)
+        o, _, _ = block_sparse_attention_fwd(q, k, v, mask, block_sizes=BlockSizes(8, 8))
+        for blk in range(4):
+            sl = slice(blk * 8, (blk + 1) * 8)
+            orf = ref.attention_ref(q[:, sl], k[:, sl], v[:, sl], tau=1.0 / np.sqrt(8))
+            assert_close(o[:, sl], orf, msg=f"block {blk}")
+
+    def test_causal_plus_sparse(self):
+        q, k, v = rand_qkv(3, 1, 64, 16)
+        mask = butterfly_mask(8, 8)
+        o, _, _ = block_sparse_attention_fwd(q, k, v, mask, causal=True,
+                                             block_sizes=BlockSizes(8, 8))
+        # Oracle: dense causal ref with the block mask also applied.
+        dense = np.repeat(np.repeat(mask, 8, 0), 8, 1)
+        tri = np.tril(np.ones((64, 64)))
+        full = jnp.asarray(dense * tri)
+        s = (1.0 / 4.0) * jnp.einsum("bnd,bmd->bnm", q, k)
+        s = jnp.where(full.astype(bool), s, ref.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        orf = jnp.einsum("bnm,bmd->bnd", p, v)
+        assert_close(o, orf)
+
+    def test_dropout(self):
+        q, k, v = rand_qkv(4, 1, 32, 8)
+        mask = np.ones((4, 4), np.int32)
+        o1, _, _ = block_sparse_attention_fwd(q, k, v, mask, dropout_p=0.25,
+                                              dropout_seed=5, block_sizes=BlockSizes(8, 8))
+        o2, _, _ = flash_attention_fwd(q, k, v, dropout_p=0.25, dropout_seed=5,
+                                       block_sizes=BlockSizes(8, 8))
+        assert_close(o1, o2, atol=1e-6)
+
+    def test_zero_row_outputs_zero(self):
+        q, k, v = rand_qkv(5, 1, 32, 8)
+        mask = np.zeros((4, 4), np.int32)
+        mask[1:, :] = 1
+        o, _, _ = block_sparse_attention_fwd(q, k, v, mask, block_sizes=BlockSizes(8, 8))
+        assert np.abs(np.asarray(o)[0, :8]).max() == 0.0
+
+
+class TestBlockSparseBackward:
+    @pytest.mark.parametrize("pattern", ["butterfly", "local_global"])
+    def test_matches_autodiff_oracle(self, pattern):
+        q, k, v = rand_qkv(6, 2, 64, 16)
+        mask = (butterfly_mask(8, 8) if pattern == "butterfly"
+                else local_global_mask(8, 8))
+        do = jax.random.normal(jax.random.PRNGKey(7), q.shape)
+        bs = BlockSizes(8, 8)
+        o, l, m = block_sparse_attention_fwd(q, k, v, mask, block_sizes=bs)
+        dq, dk, dv = block_sparse_attention_bwd(q, k, v, o, do, l, m, mask,
+                                                block_sizes=bs)
+        f = lambda q_, k_, v_: ref.block_sparse_attention_ref(
+            q_, k_, v_, jnp.asarray(mask), 8, 8)
+        _, vjp = jax.vjp(f, q, k, v)
+        dqr, dkr, dvr = vjp(do)
+        assert_close(dq, dqr, atol=1e-4)
+        assert_close(dk, dkr, atol=1e-4)
+        assert_close(dv, dvr, atol=1e-4)
+
+    def test_masked_blocks_contribute_no_grad(self):
+        q, k, v = rand_qkv(8, 1, 32, 8)
+        mask = np.eye(4, dtype=np.int32)
+        do = jnp.ones_like(q)
+        bs = BlockSizes(8, 8)
+        o, l, m = block_sparse_attention_fwd(q, k, v, mask, block_sizes=bs)
+        dq, dk, dv = block_sparse_attention_bwd(q, k, v, o, do, l, m, mask,
+                                                block_sizes=bs)
+        # With identity blocks, dK for block j only depends on Q/dO of block j:
+        # verify against per-block dense attention gradients.
+        for blk in range(4):
+            sl = slice(blk * 8, (blk + 1) * 8)
+            f = lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, tau=1.0 / np.sqrt(8))
+            _, vjp = jax.vjp(f, q[:, sl], k[:, sl], v[:, sl])
+            dqr, dkr, dvr = vjp(do[:, sl])
+            assert_close(dq[:, sl], dqr, atol=1e-4)
+            assert_close(dk[:, sl], dkr, atol=1e-4)
+            assert_close(dv[:, sl], dvr, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.sampled_from([2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**16),
+    density=st.floats(min_value=0.3, max_value=1.0),
+)
+def test_hypothesis_random_masks(t, seed, density):
+    """Random block masks (diagonal kept) match the dense masked oracle."""
+    rng = np.random.RandomState(seed % (2**31))
+    mask = (rng.rand(t, t) < density).astype(np.int32)
+    np.fill_diagonal(mask, 1)
+    n = t * 8
+    q, k, v = rand_qkv(seed, 1, n, 8)
+    o, _, _ = block_sparse_attention_fwd(q, k, v, mask, block_sizes=BlockSizes(8, 8))
+    assert_close(o, ref.block_sparse_attention_ref(q, k, v, jnp.asarray(mask), 8, 8),
+                 atol=1e-4)

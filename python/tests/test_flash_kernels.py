@@ -1,0 +1,361 @@
+"""L1 correctness: Pallas FlashAttention kernels vs the pure-jnp oracle.
+
+Covers Algorithm 2 (forward), Algorithm 4 (backward), masking (causal +
+key padding), dropout (counter RNG regeneration), tau scaling, the saved
+softmax statistics (l, m), and non-divisible shapes (padding path).
+Hypothesis sweeps shapes and block geometries.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import (
+    BlockSizes,
+    flash_attention,
+    flash_attention_bwd,
+    flash_attention_fwd,
+    mha_flash,
+)
+
+ATOL = 2e-5
+
+
+def rand_qkv(seed, bh, n, d, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (scale * jax.random.normal(jax.random.fold_in(key, i), (bh, n, d))
+               for i in range(3))
+    return q, k, v
+
+
+def assert_close(a, b, atol=ATOL, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=1e-4,
+                               err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+class TestForward:
+    def test_matches_oracle_basic(self):
+        q, k, v = rand_qkv(0, 2, 64, 32)
+        o, _, _ = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+        assert_close(o, ref.attention_ref(q, k, v))
+
+    def test_saved_statistics_match_oracle(self):
+        """Algorithm 2 returns (O, l, m); they must equal the oracle's."""
+        q, k, v = rand_qkv(1, 2, 48, 16)
+        o, l, m = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+        oref, lref, mref = ref.attention_ref_stats(q, k, v)
+        assert_close(o, oref)
+        assert_close(l, lref)
+        assert_close(m, mref)
+
+    def test_causal(self):
+        q, k, v = rand_qkv(2, 2, 64, 16)
+        o, _, _ = flash_attention_fwd(q, k, v, causal=True, block_sizes=BlockSizes(16, 16))
+        assert_close(o, ref.attention_ref(q, k, v, causal=True))
+
+    def test_causal_first_row_attends_only_itself(self):
+        q, k, v = rand_qkv(3, 1, 32, 8)
+        o, _, _ = flash_attention_fwd(q, k, v, causal=True, block_sizes=BlockSizes(8, 8))
+        assert_close(o[0, 0], v[0, 0])
+
+    def test_key_padding_mask(self):
+        q, k, v = rand_qkv(4, 3, 64, 16)
+        kvl = jnp.array([64, 33, 7], dtype=jnp.int32)
+        o, _, _ = flash_attention_fwd(q, k, v, kv_len=kvl, block_sizes=BlockSizes(16, 16))
+        for b in range(3):
+            orf = ref.attention_ref(q[b:b + 1], k[b:b + 1], v[b:b + 1], kv_len=kvl[b])
+            assert_close(o[b], orf[0], msg=f"batch {b}")
+
+    def test_kv_len_zero_gives_uniform_average(self):
+        """Fully-padded rows fall back to a uniform softmax (same as oracle)."""
+        q, k, v = rand_qkv(5, 1, 16, 8)
+        kvl = jnp.array([0], dtype=jnp.int32)
+        o, _, _ = flash_attention_fwd(q, k, v, kv_len=kvl, block_sizes=BlockSizes(8, 8))
+        assert_close(o[0], jnp.broadcast_to(v[0].mean(0), (16, 8)), atol=1e-4)
+
+    def test_custom_tau(self):
+        q, k, v = rand_qkv(6, 1, 32, 16)
+        o, _, _ = flash_attention_fwd(q, k, v, tau=0.5, block_sizes=BlockSizes(8, 8))
+        assert_close(o, ref.attention_ref(q, k, v, tau=0.5))
+
+    def test_tau_defaults_to_rsqrt_d(self):
+        q, k, v = rand_qkv(7, 1, 32, 16)
+        o1, _, _ = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(8, 8))
+        o2, _, _ = flash_attention_fwd(q, k, v, tau=1.0 / 4.0, block_sizes=BlockSizes(8, 8))
+        assert_close(o1, o2)
+
+    def test_non_divisible_n(self):
+        """n=50 with 16x16 blocks exercises the padding path."""
+        q, k, v = rand_qkv(8, 2, 50, 16)
+        o, _, _ = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+        assert_close(o, ref.attention_ref(q, k, v))
+
+    def test_asymmetric_blocks(self):
+        q, k, v = rand_qkv(9, 1, 64, 16)
+        o, _, _ = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(8, 32))
+        assert_close(o, ref.attention_ref(q, k, v))
+
+    def test_single_block_degenerate(self):
+        """B_r = B_c = n: one tile — reduces to standard attention."""
+        q, k, v = rand_qkv(10, 1, 16, 8)
+        o, _, _ = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+        assert_close(o, ref.attention_ref(q, k, v))
+
+    def test_block_size_invariance(self):
+        """Theorem 1: the result is independent of the tiling."""
+        q, k, v = rand_qkv(11, 1, 64, 16)
+        outs = [flash_attention_fwd(q, k, v, block_sizes=BlockSizes(br, bc))[0]
+                for br, bc in [(8, 8), (16, 32), (64, 64), (8, 64)]]
+        for o in outs[1:]:
+            assert_close(o, outs[0], atol=1e-5)
+
+    def test_large_logits_numerically_stable(self):
+        """Online softmax max-shift: huge logits must not overflow."""
+        q, k, v = rand_qkv(12, 1, 32, 16, scale=30.0)
+        o, _, _ = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(8, 8))
+        assert np.isfinite(np.asarray(o)).all()
+        # logits are O(100); a few ulps of exp-rescale noise is expected
+        assert_close(o, ref.attention_ref(q, k, v), atol=1e-3)
+
+    def test_extra_memory_is_linear(self):
+        """Theorem 1: besides O, only l and m (O(N) each) are produced."""
+        q, k, v = rand_qkv(13, 1, 64, 16)
+        o, l, m = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+        assert o.shape == (1, 64, 16) and l.shape == (1, 64) and m.shape == (1, 64)
+
+
+# ---------------------------------------------------------------------------
+# Dropout (counter-RNG regeneration)
+# ---------------------------------------------------------------------------
+
+
+class TestDropout:
+    def test_forward_matches_oracle(self):
+        q, k, v = rand_qkv(20, 2, 32, 16)
+        o, _, _ = flash_attention_fwd(q, k, v, dropout_p=0.2, dropout_seed=11,
+                                      block_sizes=BlockSizes(8, 8))
+        assert_close(o, ref.attention_ref(q, k, v, dropout_p=0.2, dropout_seed=11))
+
+    def test_mask_independent_of_tiling(self):
+        """The counter RNG keys on *global* coordinates, so the dropout
+        pattern must not change with block geometry."""
+        q, k, v = rand_qkv(21, 1, 32, 8)
+        o1, _, _ = flash_attention_fwd(q, k, v, dropout_p=0.4, dropout_seed=3,
+                                       block_sizes=BlockSizes(8, 8))
+        o2, _, _ = flash_attention_fwd(q, k, v, dropout_p=0.4, dropout_seed=3,
+                                       block_sizes=BlockSizes(16, 32))
+        assert_close(o1, o2, atol=1e-6)
+
+    def test_different_seeds_differ(self):
+        q, k, v = rand_qkv(22, 1, 32, 8)
+        o1, _, _ = flash_attention_fwd(q, k, v, dropout_p=0.5, dropout_seed=1,
+                                       block_sizes=BlockSizes(8, 8))
+        o2, _, _ = flash_attention_fwd(q, k, v, dropout_p=0.5, dropout_seed=2,
+                                       block_sizes=BlockSizes(8, 8))
+        assert np.abs(np.asarray(o1) - np.asarray(o2)).max() > 1e-3
+
+    def test_p_zero_is_identity(self):
+        q, k, v = rand_qkv(23, 1, 32, 8)
+        o1, _, _ = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(8, 8))
+        o2, _, _ = flash_attention_fwd(q, k, v, dropout_p=0.0, dropout_seed=5,
+                                       block_sizes=BlockSizes(8, 8))
+        assert_close(o1, o2, atol=0)
+
+    def test_backward_regenerates_same_mask(self):
+        """Algorithm 4 line 14: bwd reconstructs the fwd mask from R."""
+        q, k, v = rand_qkv(24, 2, 32, 16)
+        do = jax.random.normal(jax.random.PRNGKey(99), q.shape)
+        o, l, m = flash_attention_fwd(q, k, v, dropout_p=0.3, dropout_seed=7,
+                                      block_sizes=BlockSizes(8, 8))
+        dq, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m, dropout_p=0.3,
+                                         dropout_seed=7, block_sizes=BlockSizes(8, 8))
+        dqr, dkr, dvr = ref.attention_ref_bwd(q, k, v, do, dropout_p=0.3, dropout_seed=7)
+        assert_close(dq, dqr)
+        assert_close(dk, dkr)
+        assert_close(dv, dvr)
+
+    def test_drop_rate_statistics(self):
+        from compile.kernels.prng import dropout_mask
+        keep = np.asarray(dropout_mask(0, (1, 128, 128), 0.3))
+        rate = 1.0 - keep.mean()
+        assert abs(rate - 0.3) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Backward (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+
+class TestBackward:
+    @pytest.mark.parametrize("causal", [False, True])
+    def test_matches_autodiff_oracle(self, causal):
+        q, k, v = rand_qkv(30, 2, 48, 16)
+        do = jax.random.normal(jax.random.PRNGKey(31), q.shape)
+        o, l, m = flash_attention_fwd(q, k, v, causal=causal, block_sizes=BlockSizes(16, 16))
+        dq, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m, causal=causal,
+                                         block_sizes=BlockSizes(16, 16))
+        dqr, dkr, dvr = ref.attention_ref_bwd(q, k, v, do, causal=causal)
+        assert_close(dq, dqr)
+        assert_close(dk, dkr)
+        assert_close(dv, dvr)
+
+    def test_padding_mask_bwd(self):
+        q, k, v = rand_qkv(32, 2, 32, 8)
+        kvl = jnp.array([32, 13], dtype=jnp.int32)
+        do = jax.random.normal(jax.random.PRNGKey(33), q.shape)
+        o, l, m = flash_attention_fwd(q, k, v, kv_len=kvl, block_sizes=BlockSizes(8, 8))
+        dq, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m, kv_len=kvl,
+                                         block_sizes=BlockSizes(8, 8))
+        for b in range(2):
+            f = lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, kv_len=kvl[b])
+            _, vjp = jax.vjp(f, q[b:b + 1], k[b:b + 1], v[b:b + 1])
+            dqr, dkr, dvr = vjp(do[b:b + 1])
+            assert_close(dq[b], dqr[0], msg=f"dq b={b}")
+            assert_close(dk[b], dkr[0], msg=f"dk b={b}")
+            assert_close(dv[b], dvr[0], msg=f"dv b={b}")
+
+    def test_masked_keys_get_zero_grad(self):
+        q, k, v = rand_qkv(34, 1, 32, 8)
+        kvl = jnp.array([10], dtype=jnp.int32)
+        do = jnp.ones_like(q)
+        o, l, m = flash_attention_fwd(q, k, v, kv_len=kvl, block_sizes=BlockSizes(8, 8))
+        _, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m, kv_len=kvl,
+                                        block_sizes=BlockSizes(8, 8))
+        assert np.abs(np.asarray(dk)[0, 10:]).max() == 0.0
+        assert np.abs(np.asarray(dv)[0, 10:]).max() == 0.0
+
+    def test_non_divisible_n_bwd(self):
+        q, k, v = rand_qkv(35, 1, 41, 8)
+        do = jax.random.normal(jax.random.PRNGKey(36), q.shape)
+        o, l, m = flash_attention_fwd(q, k, v, block_sizes=BlockSizes(16, 16))
+        dq, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m, block_sizes=BlockSizes(16, 16))
+        dqr, dkr, dvr = ref.attention_ref_bwd(q, k, v, do)
+        assert_close(dq, dqr)
+        assert_close(dk, dkr)
+        assert_close(dv, dvr)
+
+    def test_block_size_invariance_bwd(self):
+        q, k, v = rand_qkv(37, 1, 64, 16)
+        do = jax.random.normal(jax.random.PRNGKey(38), q.shape)
+        grads = []
+        for bs in [BlockSizes(8, 8), BlockSizes(32, 16), BlockSizes(64, 64)]:
+            o, l, m = flash_attention_fwd(q, k, v, block_sizes=bs)
+            grads.append(flash_attention_bwd(q, k, v, o, do, l, m, block_sizes=bs))
+        for g in grads[1:]:
+            for a, b in zip(g, grads[0]):
+                assert_close(a, b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper + MHA convenience
+# ---------------------------------------------------------------------------
+
+
+class TestCustomVjp:
+    def test_grad_through_flash_attention(self):
+        q, k, v = rand_qkv(40, 2, 32, 16)
+        f = lambda q_, k_, v_: (flash_attention(q_, k_, v_, None, True, 0.0, 0) ** 2).sum()
+        g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        fr = lambda q_, k_, v_: (ref.attention_ref(q_, k_, v_, causal=True) ** 2).sum()
+        gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g, gr):
+            assert_close(a, b, atol=1e-4)
+
+    def test_jittable(self):
+        q, k, v = rand_qkv(41, 1, 32, 8)
+        o = jax.jit(lambda *a: flash_attention(*a, None, False, 0.0, 0))(q, k, v)
+        assert_close(o, ref.attention_ref(q, k, v))
+
+    def test_mha_shape(self):
+        key = jax.random.PRNGKey(42)
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, 4, 32, 8))
+                   for i in range(3))
+        o = mha_flash(q, k, v, causal=True)
+        assert o.shape == (2, 4, 32, 8)
+        oref = ref.attention_ref(q.reshape(8, 32, 8), k.reshape(8, 32, 8),
+                                 v.reshape(8, 32, 8), causal=True).reshape(2, 4, 32, 8)
+        assert_close(o, oref)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=96),
+    d=st.sampled_from([4, 8, 16, 32]),
+    br=st.sampled_from([8, 16, 32]),
+    bc=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_hypothesis_forward(n, d, br, bc, causal, seed):
+    q, k, v = rand_qkv(seed, 1, n, d)
+    o, l, m = flash_attention_fwd(q, k, v, causal=causal, block_sizes=BlockSizes(br, bc))
+    oref, lref, mref = ref.attention_ref_stats(q, k, v, causal=causal)
+    assert_close(o, oref, atol=1e-4)
+    assert_close(l, lref, atol=1e-4)
+    assert_close(m, mref, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=64),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    p=st.sampled_from([0.0, 0.1, 0.5]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_hypothesis_backward(n, d, causal, p, seed):
+    q, k, v = rand_qkv(seed, 1, n, d)
+    do = jax.random.normal(jax.random.PRNGKey(seed + 1), q.shape)
+    bs = BlockSizes(8, 8)
+    o, l, m = flash_attention_fwd(q, k, v, causal=causal, dropout_p=p,
+                                  dropout_seed=seed, block_sizes=bs)
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, do, l, m, causal=causal,
+                                     dropout_p=p, dropout_seed=seed, block_sizes=bs)
+    dqr, dkr, dvr = ref.attention_ref_bwd(q, k, v, do, causal=causal,
+                                          dropout_p=p, dropout_seed=seed)
+    assert_close(dq, dqr, atol=1e-4)
+    assert_close(dk, dkr, atol=1e-4)
+    assert_close(dv, dvr, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    kv_frac=st.floats(min_value=0.05, max_value=1.0),
+    n=st.sampled_from([16, 32, 48]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_hypothesis_padding(kv_frac, n, seed):
+    q, k, v = rand_qkv(seed, 1, n, 8)
+    kvl = jnp.array([max(1, int(kv_frac * n))], dtype=jnp.int32)
+    o, _, _ = flash_attention_fwd(q, k, v, kv_len=kvl, block_sizes=BlockSizes(8, 8))
+    assert_close(o, ref.attention_ref(q, k, v, kv_len=kvl[0]), atol=1e-4)
+
+
+class TestBlockSizes:
+    def test_paper_formula(self):
+        """Algorithm 1 line 1: B_c = ceil(M/4d), B_r = min(B_c, d)."""
+        bs = BlockSizes.from_sram(d=64, n=4096, sram_floats=48 * 1024)
+        assert bs.block_k == 192  # ceil(49152 / 256)
+        assert bs.block_q == 64   # min(192, 64)
+
+    def test_clamped_to_n(self):
+        bs = BlockSizes.from_sram(d=64, n=32)
+        assert bs.block_q <= 32 and bs.block_k <= 32
+
+    def test_block_q_never_exceeds_d_rounded(self):
+        for d in (16, 32, 64, 128):
+            bs = BlockSizes.from_sram(d=d, n=8192)
+            assert bs.block_q <= d

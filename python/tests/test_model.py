@@ -1,0 +1,179 @@
+"""L2 model tests: shapes, exactness (flash == reference), descent, AdamW."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def tiny_cfg(**kw):
+    base = dict(vocab=32, n_layer=2, n_head=2, d_model=32, n_ctx=16,
+                attention="flash")
+    base.update(kw)
+    return M.ModelConfig(**base)
+
+
+def rand_tokens(key, b, t, vocab):
+    return jax.random.randint(key, (b, t), 0, vocab)
+
+
+class TestShapes:
+    def test_lm_logits_shape(self):
+        cfg = tiny_cfg()
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = rand_tokens(jax.random.PRNGKey(1), 2, cfg.n_ctx, cfg.vocab)
+        assert M.lm_logits(p, cfg, toks).shape == (2, cfg.n_ctx, cfg.vocab)
+
+    def test_cls_logits_shape(self):
+        cfg = tiny_cfg(n_classes=4, causal=False)
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = rand_tokens(jax.random.PRNGKey(1), 3, cfg.n_ctx, cfg.vocab)
+        assert M.cls_logits(p, cfg, toks).shape == (3, 4)
+
+    def test_param_names_deterministic(self):
+        cfg = tiny_cfg()
+        p1 = M.init_params(jax.random.PRNGKey(0), cfg)
+        p2 = M.init_params(jax.random.PRNGKey(7), cfg)
+        assert M.param_names(p1) == M.param_names(p2)
+
+    def test_linformer_has_projection_params(self):
+        cfg = tiny_cfg(attention="linformer", causal=False, n_classes=2)
+        names = M.param_names(M.init_params(jax.random.PRNGKey(0), cfg))
+        assert any("e_proj" in n for n in names)
+        assert any("f_proj" in n for n in names)
+
+    def test_flatten_roundtrip(self):
+        cfg = tiny_cfg()
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        leaves, treedef = M.flatten(p)
+        p2 = M.unflatten(treedef, leaves)
+        toks = rand_tokens(jax.random.PRNGKey(1), 1, cfg.n_ctx, cfg.vocab)
+        np.testing.assert_array_equal(M.lm_logits(p, cfg, toks),
+                                      M.lm_logits(p2, cfg, toks))
+
+
+class TestExactness:
+    """The paper's central quality claim: FlashAttention is *exact*, so a
+    model using it is the same model (Table 2: identical ppl)."""
+
+    def test_flash_equals_reference_logits(self):
+        cfg_f = tiny_cfg(attention="flash")
+        cfg_r = tiny_cfg(attention="reference")
+        p = M.init_params(jax.random.PRNGKey(0), cfg_f)
+        toks = rand_tokens(jax.random.PRNGKey(1), 2, cfg_f.n_ctx, cfg_f.vocab)
+        lf = M.lm_logits(p, cfg_f, toks)
+        lr = M.lm_logits(p, cfg_r, toks)
+        np.testing.assert_allclose(lf, lr, atol=2e-4, rtol=1e-4)
+
+    def test_flash_equals_reference_gradients(self):
+        cfg_f = tiny_cfg(attention="flash")
+        cfg_r = tiny_cfg(attention="reference")
+        p = M.init_params(jax.random.PRNGKey(0), cfg_f)
+        toks = rand_tokens(jax.random.PRNGKey(1), 2, cfg_f.n_ctx + 1, cfg_f.vocab)
+        gf = jax.grad(lambda p_: M.lm_loss(p_, cfg_f, toks))(p)
+        gr = jax.grad(lambda p_: M.lm_loss(p_, cfg_r, toks))(p)
+        for a, b in zip(M.flatten(gf)[0], M.flatten(gr)[0]):
+            np.testing.assert_allclose(a, b, atol=5e-4, rtol=1e-3)
+
+    def test_block_sparse_close_to_dense_when_full_mask(self):
+        cfg_b = tiny_cfg(attention="block_sparse", block_q=16, block_k=16)
+        cfg_r = tiny_cfg(attention="reference")
+        # n_ctx=16 with 16x16 blocks -> a single (all-ones) butterfly block.
+        p = M.init_params(jax.random.PRNGKey(0), cfg_b)
+        toks = rand_tokens(jax.random.PRNGKey(1), 2, cfg_b.n_ctx, cfg_b.vocab)
+        np.testing.assert_allclose(M.lm_logits(p, cfg_b, toks),
+                                   M.lm_logits(p, cfg_r, toks),
+                                   atol=2e-4, rtol=1e-4)
+
+
+class TestTraining:
+    def test_lm_loss_starts_near_uniform(self):
+        cfg = tiny_cfg()
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        toks = rand_tokens(jax.random.PRNGKey(1), 4, cfg.n_ctx + 1, cfg.vocab)
+        loss = M.lm_loss(p, cfg, toks)
+        assert abs(float(loss) - np.log(cfg.vocab)) < 0.3
+
+    @pytest.mark.parametrize("attention", ["flash", "reference"])
+    def test_train_step_descends(self, attention):
+        cfg = tiny_cfg(attention=attention)
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, p)
+        m, v = zeros, zeros
+        toks = rand_tokens(jax.random.PRNGKey(1), 4, cfg.n_ctx + 1, cfg.vocab)
+        step = jax.jit(lambda p, m, v, t: M.lm_train_step(
+            p, m, v, toks, jnp.float32(1e-2), t, cfg=cfg))
+        losses = []
+        for t in range(1, 9):
+            p, m, v, loss = step(p, m, v, jnp.float32(t))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_cls_train_step_improves_acc(self):
+        cfg = tiny_cfg(n_classes=2, causal=False)
+        key = jax.random.PRNGKey(0)
+        p = M.init_params(key, cfg)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, p)
+        m, v = zeros, zeros
+        # Learnable toy rule: label = first token > vocab/2.
+        toks = rand_tokens(jax.random.PRNGKey(1), 16, cfg.n_ctx, cfg.vocab)
+        labels = (toks[:, 0] > cfg.vocab // 2).astype(jnp.int32)
+        step = jax.jit(lambda p, m, v, t: M.cls_train_step(
+            p, m, v, toks, labels, jnp.float32(1e-2), t, cfg=cfg))
+        accs = []
+        for t in range(1, 25):
+            p, m, v, loss, acc = step(p, m, v, jnp.float32(t))
+            accs.append(float(acc))
+        assert accs[-1] > 0.9, accs
+
+    def test_adamw_bias_correction_first_step(self):
+        """After one step from zero moments, update ≈ lr * sign(g)."""
+        p = {"w": jnp.array([[1.0, -1.0]])}
+        g = {"w": jnp.array([[0.5, -0.25]])}
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, p)
+        oc = M.OptConfig(weight_decay=0.0)
+        p2, m2, v2 = M.adamw_update(p, g, zeros, zeros, jnp.float32(1.0),
+                                    jnp.float32(0.1), oc)
+        np.testing.assert_allclose(p2["w"], p["w"] - 0.1 * jnp.sign(g["w"]),
+                                   atol=1e-4)
+
+    def test_weight_decay_skips_vectors(self):
+        p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        g = jax.tree_util.tree_map(jnp.zeros_like, p)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, p)
+        oc = M.OptConfig(weight_decay=0.5)
+        p2, _, _ = M.adamw_update(p, g, zeros, zeros, jnp.float32(1.0),
+                                  jnp.float32(0.1), oc)
+        assert float(jnp.abs(p2["b"] - 1.0).max()) == 0.0   # no decay on bias
+        assert float(p2["w"][0, 0]) < 1.0                   # decay on matrix
+
+
+class TestBaselineAttention:
+    def test_local_attention_window(self):
+        from compile import baselines
+        key = jax.random.PRNGKey(0)
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, 16, 8))
+                   for i in range(3))
+        o = baselines.local_attention(q, k, v, window=16)
+        from compile.kernels import ref
+        np.testing.assert_allclose(o, ref.attention_ref(q, k, v), atol=1e-5)
+
+    def test_linear_attention_causal_matches_noncausal_last_token(self):
+        from compile import baselines
+        key = jax.random.PRNGKey(1)
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, 12, 8))
+                   for i in range(3))
+        oc = baselines.linear_attention(q, k, v, causal=True)
+        on = baselines.linear_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(oc[0, -1], on[0, -1], atol=1e-5)
+
+    def test_linformer_shapes(self):
+        from compile import baselines
+        key = jax.random.PRNGKey(2)
+        q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (2, 16, 8))
+                   for i in range(3))
+        e = jax.random.normal(jax.random.fold_in(key, 9), (16, 4)) * 0.25
+        o = baselines.linformer_attention(q, k, v, e, e)
+        assert o.shape == (2, 16, 8)

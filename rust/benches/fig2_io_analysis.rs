@@ -1,0 +1,152 @@
+//! Figure 2: the IO analysis that anchors the whole paper.
+//!
+//! * Left  — GFLOPs / HBM-GB / runtime of standard vs Flash attention at
+//!   GPT-2-medium shape (N=1024, d=64, 16 heads, batch 64, fwd+bwd).
+//!   Measured two ways: analytic counts (sim::cost) and the *instrumented
+//!   pure-Rust mirrors* executing the real algorithms with an HBM counter.
+//! * Middle — forward runtime vs block size B_c: HBM accesses fall, then
+//!   runtime flattens when compute-bound (paper: beyond B_c=256).
+//! * Right — block-sparse runtime vs sparsity at N=4096: runtime improves
+//!   proportionally to the nonzero fraction (Proposition 4).
+
+use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
+use flashattn::attn::masks::BlockMask;
+use flashattn::attn::standard::{standard_backward, standard_forward};
+use flashattn::attn::AttnConfig;
+use flashattn::bench::out_dir;
+use flashattn::sim::baselines::Method;
+use flashattn::sim::cost;
+use flashattn::sim::hbm::Hbm;
+use flashattn::sim::roofline::{BenchConfig, Pass, Roofline};
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+use flashattn::util::table::Table;
+
+fn main() {
+    fig2_left();
+    fig2_middle();
+    fig2_right();
+}
+
+fn fig2_left() {
+    // GPT-2 medium attention: N=1024, d=64, 16 heads, batch 64, fp16.
+    let cfg = BenchConfig { batch: 64, heads: 16, ..Default::default() };
+    let (n, d) = (1024u64, 64u64);
+    let bh = cfg.bh();
+    let rl = Roofline::a100();
+    let blocks = Method::flash_blocks(&rl.spec, d, n);
+
+    let std_c = cost::standard_fwd(n, d, false, false).add(cost::standard_bwd(n, d, false, false));
+    let fla_c = cost::flash_fwd(n, d, blocks, false, false).add(cost::flash_bwd(n, d, blocks, false, false));
+
+    let gf = |c: &cost::Cost| c.flops as f64 * bh as f64 / 1e9;
+    let gb = |c: &cost::Cost| c.hbm_elems as f64 * cfg.bytes_per_elem * bh as f64 / 1e9;
+    let ms = |m: Method| rl.time_ms(m, Pass::FwdBwd, n, &cfg).unwrap();
+
+    let mut t = Table::new(
+        "Fig 2 left — GPT-2 medium attention fwd+bwd (paper: std 66.6 GF / 40.3 GB / 41.7 ms; flash 75.2 GF / 4.4 GB / 7.3 ms)",
+        &["Attention", "GFLOPs", "HBM R/W (GB)", "Runtime (ms)"],
+    );
+    t.row(vec!["Standard".into(), format!("{:.1}", gf(&std_c)), format!("{:.1}", gb(&std_c)),
+               format!("{:.1}", ms(Method::PyTorch))]);
+    t.row(vec!["FlashAttention".into(), format!("{:.1}", gf(&fla_c)), format!("{:.1}", gb(&fla_c)),
+               format!("{:.1}", ms(Method::FlashAttention))]);
+    t.print();
+    t.write_csv(&out_dir().join("fig2_left.csv")).unwrap();
+    println!(
+        "shape ratios — FLOPs flash/std: {:.2} (paper 1.13: recompute costs MORE flops), \
+         HBM std/flash: {:.1}x (paper 9.2x), runtime std/flash: {:.1}x (paper 5.7x).\n\
+         Absolute GFLOPs differ from the paper by a per-GPU/causal accounting constant; \
+         the ordering (more FLOPs, far less IO, faster) is the claim under test.",
+        gf(&fla_c) / gf(&std_c),
+        gb(&std_c) / gb(&fla_c),
+        ms(Method::PyTorch) / ms(Method::FlashAttention)
+    );
+
+    // Instrumented validation: run the actual mirrored algorithms at a
+    // scaled shape and check measured accesses match the analytic counts.
+    let (ni, di) = (256usize, 32usize);
+    let mut rng = SplitMix64::new(0);
+    let q = Tensor::randn(&[ni, di], &mut rng, 1.0);
+    let k = Tensor::randn(&[ni, di], &mut rng, 1.0);
+    let v = Tensor::randn(&[ni, di], &mut rng, 1.0);
+    let acfg = AttnConfig::default();
+    let bl = Blocks::explicit(32, 64);
+
+    let mut h_std = Hbm::new();
+    let out = standard_forward(&q, &k, &v, &acfg, &mut h_std);
+    standard_backward(&q, &k, &v, &out.o, &acfg, &mut h_std);
+    let pred_std = cost::standard_fwd(ni as u64, di as u64, false, false)
+        .add(cost::standard_bwd(ni as u64, di as u64, false, false));
+
+    let mut h_fla = Hbm::new();
+    let f = flash_forward(&q, &k, &v, &acfg, bl, &mut h_fla);
+    flash_backward(&q, &k, &v, &f.o, &out.o, &f.l, &f.m, &acfg, bl, &mut h_fla);
+    let pred_fla = cost::flash_fwd(ni as u64, di as u64, bl, false, false)
+        .add(cost::flash_bwd(ni as u64, di as u64, bl, false, false));
+
+    println!("instrumented-vs-analytic (N={ni}, d={di}):");
+    println!("  standard: measured {} vs analytic {}  ({})", h_std.accesses(), pred_std.hbm_elems,
+             if h_std.accesses() == pred_std.hbm_elems { "EXACT" } else { "≈" });
+    println!("  flash:    measured {} vs analytic {}  ({})", h_fla.accesses(), pred_fla.hbm_elems,
+             if h_fla.accesses() == pred_fla.hbm_elems { "EXACT" } else { "≈" });
+    println!();
+}
+
+fn fig2_middle() {
+    // Forward runtime + HBM accesses vs block size B_c at N=1024 d=64.
+    let (n, d) = (1024u64, 64u64);
+    let cfg = BenchConfig { batch: 64, heads: 16, ..Default::default() };
+    let rl = Roofline::a100();
+    let mut t = Table::new(
+        "Fig 2 middle — fwd runtime vs block size (runtime falls with HBM accesses, flattens when compute-bound)",
+        &["B_c", "HBM accesses (M elems)", "model fwd (ms)"],
+    );
+    for bc in [16u64, 32, 64, 128, 256, 512, 1024] {
+        let blocks = Blocks::explicit(64.min(bc as usize), bc as usize);
+        let c = cost::flash_fwd(n, d, blocks, false, false);
+        let bytes = c.hbm_elems as f64 * cfg.bytes_per_elem * cfg.bh() as f64;
+        let flops = c.flops as f64 * cfg.bh() as f64;
+        let ms = (bytes / rl.spec.eff_bw() + flops / rl.spec.eff_flops_fp16()) * 1e3;
+        t.row(vec![bc.to_string(), format!("{:.1}", c.hbm_elems as f64 * cfg.bh() as f64 / 1e6),
+                   format!("{ms:.2}")]);
+    }
+    t.print();
+    t.write_csv(&out_dir().join("fig2_middle.csv")).unwrap();
+}
+
+fn fig2_right() {
+    // Block-sparse runtime vs sparsity at N=4096 (fwd+bwd).
+    let (n, d) = (4096u64, 64u64);
+    let cfg = BenchConfig { batch: 64, heads: 16, ..Default::default() };
+    let rl = Roofline::a100();
+    let blocks = Blocks::explicit(64, 256);
+    let t_r = (n as usize) / 64;
+    let t_c = (n as usize) / 256;
+    let mut dense_ms = None;
+    let mut t = Table::new(
+        "Fig 2 right — block-sparse flash runtime ∝ sparsity (N=4096, fwd+bwd)",
+        &["nonzero fraction s", "model (ms)", "vs dense flash"],
+    );
+    for keep_every in [1usize, 2, 4, 8] {
+        // Structured mask: keep every k-th column block (plus diagonal).
+        let mut mask = BlockMask::zeros(t_r, t_c);
+        for i in 0..t_r {
+            for j in 0..t_c {
+                if j % keep_every == 0 || j == (i * t_c) / t_r {
+                    mask.set(i, j, true);
+                }
+            }
+        }
+        let c = cost::block_sparse_fwd(n, d, blocks, &mask, false)
+            .add(cost::block_sparse_bwd(n, d, blocks, &mask, false));
+        let bytes = c.hbm_elems as f64 * cfg.bytes_per_elem * cfg.bh() as f64;
+        let flops = c.flops as f64 * cfg.bh() as f64;
+        let ms = (bytes / rl.spec.eff_bw() + flops / rl.spec.eff_flops_fp16()) * 1e3;
+        let dense = *dense_ms.get_or_insert(ms); // first row (s=1) is the baseline
+        t.row(vec![format!("{:.3}", mask.sparsity()), format!("{ms:.2}"),
+                   format!("{:.2}x", dense / ms)]);
+    }
+    t.print();
+    t.write_csv(&out_dir().join("fig2_right.csv")).unwrap();
+}

@@ -1,0 +1,71 @@
+//! Figure 3: runtime (left) and memory footprint (right) of FlashAttention
+//! and block-sparse FlashAttention vs exact/approximate/sparse baselines,
+//! sweeping sequence length 128 → 64K.
+//!
+//! Shape claims checked: flash up to 3x faster than PyTorch at common
+//! lengths; approximate methods cross over between 512 and 2K; block-sparse
+//! flash fastest everywhere; memory linear in N and up to 20x smaller than
+//! exact baselines; everything except Linformer and the flash variants OOMs
+//! before 64K on a 40GB card.
+
+use flashattn::bench::{ms_cell, out_dir};
+use flashattn::sim::baselines::{Method, SWEEP_METHODS};
+use flashattn::sim::roofline::{BenchConfig, Pass, Roofline};
+use flashattn::util::table::Table;
+
+const NS: [u64; 10] = [128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536];
+
+fn main() {
+    let rl = Roofline::a100();
+    let cfg = BenchConfig::default();
+
+    // Left: fwd+bwd runtime.
+    let mut headers: Vec<String> = vec!["method".into()];
+    headers.extend(NS.iter().map(|n| n.to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new("Fig 3 left — fwd+bwd runtime (ms), A100-40GB model", &hrefs);
+    for m in SWEEP_METHODS {
+        let mut row = vec![m.name().to_string()];
+        for &n in &NS {
+            row.push(ms_cell(rl.time_ms(*m, Pass::FwdBwd, n, &cfg)));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(&out_dir().join("fig3_runtime.csv")).unwrap();
+
+    // Right: memory footprint.
+    let mut t = Table::new("Fig 3 right — attention memory (MB)", &hrefs);
+    for m in SWEEP_METHODS {
+        let mut row = vec![m.name().to_string()];
+        for &n in &NS {
+            row.push(ms_cell(rl.mem_mb(*m, n, &cfg)));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(&out_dir().join("fig3_memory.csv")).unwrap();
+
+    // Claim checklist.
+    let check = |name: &str, ok: bool| println!("  [{}] {}", if ok { "OK" } else { "FAIL" }, name);
+    println!("shape checks:");
+    let sp1k = rl.speedup_vs_standard(Method::FlashAttention, Pass::FwdBwd, 1024, &cfg).unwrap();
+    check(&format!("flash faster than PyTorch at 1K ({sp1k:.2}x)"), sp1k > 1.4);
+    let f = |m: Method, n: u64| rl.time_ms(m, Pass::FwdBwd, n, &cfg);
+    check("flash beats Linformer at 256", f(Method::FlashAttention, 256) < f(Method::Linformer, 256));
+    check("Linformer beats flash at 8K (crossover happened)",
+          f(Method::Linformer, 8192) < f(Method::FlashAttention, 8192));
+    let bs_fastest_64k = SWEEP_METHODS.iter().all(|m| {
+        f(*m, 65536).map(|t| t * 1.2 >= f(Method::BlockSparseFlash, 65536).unwrap()).unwrap_or(true)
+    });
+    check("block-sparse flash fastest at 64K", bs_fastest_64k);
+    let mem_ratio = rl.mem_mb(Method::PyTorch, 4096, &cfg).unwrap()
+        / rl.mem_mb(Method::FlashAttention, 4096, &cfg).unwrap();
+    check(&format!("memory saving vs exact at 4K ({mem_ratio:.0}x, paper: up to 20x)"), mem_ratio > 10.0);
+    let survivors: Vec<&str> = SWEEP_METHODS
+        .iter()
+        .filter(|m| f(**m, 65536).is_some())
+        .map(|m| m.name())
+        .collect();
+    println!("  survivors at 64K: {survivors:?} (paper: Linformer + flash variants)");
+}

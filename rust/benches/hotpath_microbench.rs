@@ -1,0 +1,114 @@
+//! Hot-path microbenchmarks (real wall-clock, this machine) used by the
+//! EXPERIMENTS.md §Perf iteration log:
+//!
+//!  * pure-Rust mirrors: flash_forward vs standard_forward per [n, d] slice
+//!    (the instrumented engine behind fig2);
+//!  * PJRT artifact execution: flash vs reference attention artifacts, and
+//!    the fused train step (the L3 request path);
+//!  * Value<->Literal conversion overhead (the coordinator's serialization
+//!    cost per step).
+
+use std::path::Path;
+use std::time::Instant;
+
+use flashattn::attn::flash::{flash_forward, Blocks};
+use flashattn::attn::standard::standard_forward;
+use flashattn::attn::AttnConfig;
+use flashattn::bench::median_time;
+use flashattn::runtime::{Runtime, Value};
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+use flashattn::util::table::Table;
+
+fn mirrors() {
+    let mut t = Table::new(
+        "pure-Rust mirrors (per [n,d]=[n,64] slice, median of 5)",
+        &["n", "standard (ms)", "flash (ms)", "flash blocks"],
+    );
+    for n in [128usize, 256, 512, 1024] {
+        let mut rng = SplitMix64::new(0);
+        let q = Tensor::randn(&[n, 64], &mut rng, 1.0);
+        let k = Tensor::randn(&[n, 64], &mut rng, 1.0);
+        let v = Tensor::randn(&[n, 64], &mut rng, 1.0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::from_sram(48 * 1024, 64, n);
+        let ts = median_time(5, || {
+            std::hint::black_box(standard_forward(&q, &k, &v, &cfg, &mut Hbm::new()));
+        });
+        let tf = median_time(5, || {
+            std::hint::black_box(flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new()));
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", ts * 1e3),
+            format!("{:.2}", tf * 1e3),
+            format!("({},{})", blocks.b_r, blocks.b_c),
+        ]);
+    }
+    t.print();
+}
+
+fn artifacts() {
+    let mut rt = match Runtime::cpu(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping artifact microbench: {e:#}");
+            return;
+        }
+    };
+    let mut rng = SplitMix64::new(1);
+    let mk = |rng: &mut SplitMix64| Value::F32 {
+        shape: vec![8, 128, 64],
+        data: rng.normal_vec(8 * 128 * 64, 1.0),
+    };
+    let q = mk(&mut rng);
+    let k = mk(&mut rng);
+    let v = mk(&mut rng);
+    let inputs = vec![q, k, v];
+
+    let mut t = Table::new("PJRT artifact execution (CPU, median of 5)", &["artifact", "ms"]);
+    for name in ["attn_ref_fwd", "attn_flash_fwd", "attn_flash_fwd_causal", "attn_bsparse_fwd"] {
+        rt.load(name).expect("compile");
+        let tm = median_time(5, || {
+            rt.run(name, &inputs).expect("run");
+        });
+        t.row(vec![name.into(), format!("{:.2}", tm * 1e3)]);
+    }
+    t.print();
+    println!(
+        "NOTE: interpret-mode Pallas lowers to scalar-ish HLO loops — CPU wallclock of the \
+         flash artifacts is a correctness vehicle, not a TPU performance proxy (DESIGN.md §3)."
+    );
+
+    // Value<->Literal conversion cost (per train-step state round trip).
+    let big = Value::F32 { shape: vec![256, 128], data: vec![1.0; 256 * 128] };
+    let conv = median_time(20, || {
+        let lit = big.to_literal().unwrap();
+        std::hint::black_box(Value::from_literal(&lit).unwrap());
+    });
+    println!("Value<->Literal round trip (256x128 f32): {:.3} ms", conv * 1e3);
+
+    // Fused train step end-to-end (the serving-relevant hot path).
+    if rt.manifest.artifacts.contains_key("gpt_flash_train_step") {
+        use flashattn::coordinator::{LmTrainer, TrainConfig};
+        use flashattn::data::corpus::Corpus;
+        let corpus = Corpus::builtin(50_000, 2);
+        let cfg = TrainConfig { model: "gpt_flash".into(), steps: 1, eval_every: 0, ..Default::default() };
+        let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+        let batch = corpus.lm_batch(tr.batch, tr.n_ctx, &mut SplitMix64::new(3));
+        tr.step(&mut rt, &batch).unwrap(); // warmup: includes artifact compile
+        let t0 = Instant::now();
+        let iters = 5;
+        for _ in 0..iters {
+            tr.step(&mut rt, &batch).unwrap();
+        }
+        println!("gpt_flash fused train step: {:.0} ms/step (mean over {iters}, post-compile)",
+                 t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+    }
+}
+
+fn main() {
+    mirrors();
+    artifacts();
+}

@@ -1,0 +1,55 @@
+//! Table 1: BERT-large MLPerf training time — the paper reports 20.0 min
+//! (Nvidia MLPerf 1.1) vs 17.4 min (FlashAttention), a 15% end-to-end gain
+//! at seq length 512.
+//!
+//! Reproduction: the Amdahl end-to-end model (sim::e2e) at BERT-large shape
+//! gives the expected step-time ratio; applied to the MLPerf baseline time
+//! it regenerates the table. A real (tiny-scale) training run demonstrating
+//! the identical-loss property lives in table2_gpt2_training.rs.
+
+use flashattn::bench::out_dir;
+use flashattn::sim::baselines::Method;
+use flashattn::sim::e2e::{attention_share, e2e_speedup, ModelShape};
+use flashattn::sim::roofline::Roofline;
+use flashattn::util::table::Table;
+
+fn main() {
+    let rl = Roofline::a100();
+    let shape = ModelShape::bert_large(512);
+    // Nvidia's MLPerf submission uses Apex FMHA, not naive PyTorch — the
+    // relevant baseline for the 15% claim.
+    let speedup = e2e_speedup(&rl, &shape, Method::ApexFmha, "ours").unwrap();
+    let share = attention_share(&rl, &shape, Method::ApexFmha).unwrap();
+    let paper_baseline_min = 20.0;
+    let model_flash_min = paper_baseline_min / speedup;
+
+    let mut t = Table::new(
+        "Table 1 — BERT-large to 72.0% MLM accuracy, 8xA100 (paper: 20.0 vs 17.4 min)",
+        &["BERT implementation", "training time (min)", "source"],
+    );
+    t.row(vec!["Nvidia MLPerf 1.1 (FMHA)".into(), format!("{paper_baseline_min:.1}"), "paper".into()]);
+    t.row(vec![
+        "FlashAttention (model)".into(),
+        format!("{model_flash_min:.1}"),
+        format!("e2e model: {speedup:.3}x speedup"),
+    ]);
+    t.row(vec!["FlashAttention (paper)".into(), "17.4".into(), "paper".into()]);
+    t.print();
+    t.write_csv(&out_dir().join("table1.csv")).unwrap();
+
+    println!(
+        "attention share of FMHA-baseline step at seq 512: {:.1}% -> end-to-end gain {:.1}% (paper: 15%)",
+        share * 100.0,
+        (speedup - 1.0) * 100.0
+    );
+    let ok = (1.0..1.35).contains(&speedup);
+    println!("[{}] flash does not lose end-to-end; gain <= the paper's 15%",
+             if ok { "OK" } else { "FAIL" });
+    println!(
+        "documented deviation (EXPERIMENTS.md): at N=512 attention is only ~{:.0}% of a BERT\n\
+         step, so a pure attention-swap model caps the gain near {:.0}%; the paper's full 15%\n\
+         also includes their non-attention fusions on top of the MLPerf baseline.",
+        share * 100.0,
+        share * 100.0 * 0.5
+    );
+}

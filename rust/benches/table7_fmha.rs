@@ -1,0 +1,56 @@
+//! Table 7: FlashAttention vs Apex FMHA (the MLPerf fused-MHA kernel) at
+//! BERT shapes (batch 64, 16 heads, d 64, mask+dropout, N <= 512).
+//!
+//! Paper shape: flash slightly FASTER forward (no N² store), slightly
+//! SLOWER backward (recomputation FLOPs), combined crossover at N=256.
+
+use flashattn::bench::{ms_cell, out_dir};
+use flashattn::sim::baselines::Method;
+use flashattn::sim::roofline::{BenchConfig, Pass, Roofline};
+use flashattn::util::table::Table;
+
+fn main() {
+    let rl = Roofline::a100();
+    let cfg = BenchConfig { batch: 64, heads: 16, dropout: true, masked: true, ..Default::default() };
+    let paper: &[(&str, [f64; 3])] = &[
+        ("Apex FMHA forward", [0.10, 0.29, 1.14]),
+        ("FlashAttention forward", [0.08, 0.22, 0.81]),
+        ("Apex FMHA backward", [0.17, 0.52, 1.81]),
+        ("FlashAttention backward", [0.20, 0.53, 2.00]),
+        ("Apex FMHA fwd+bwd", [0.27, 0.81, 2.95]),
+        ("FlashAttention fwd+bwd", [0.28, 0.75, 2.81]),
+    ];
+    let ns = [128u64, 256, 512];
+    let mut t = Table::new(
+        "Table 7 — Flash vs Apex FMHA (ms; model | paper)",
+        &["Attention Method", "128", "256", "512"],
+    );
+    let rows: [(&str, Method, Pass); 6] = [
+        ("Apex FMHA forward", Method::ApexFmha, Pass::Fwd),
+        ("FlashAttention forward", Method::FlashAttention, Pass::Fwd),
+        ("Apex FMHA backward", Method::ApexFmha, Pass::Bwd),
+        ("FlashAttention backward", Method::FlashAttention, Pass::Bwd),
+        ("Apex FMHA fwd+bwd", Method::ApexFmha, Pass::FwdBwd),
+        ("FlashAttention fwd+bwd", Method::FlashAttention, Pass::FwdBwd),
+    ];
+    for (i, (label, m, pass)) in rows.iter().enumerate() {
+        let mut row = vec![label.to_string()];
+        for (j, &n) in ns.iter().enumerate() {
+            let model = rl.time_ms(*m, *pass, n, &cfg);
+            row.push(format!("{} | {:.2}", ms_cell(model), paper[i].1[j]));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(&out_dir().join("table7.csv")).unwrap();
+
+    // Shape checks.
+    let f = |m: Method, p: Pass, n: u64| rl.time_ms(m, p, n, &cfg).unwrap();
+    let fwd_faster_512 = f(Method::FlashAttention, Pass::Fwd, 512) < f(Method::ApexFmha, Pass::Fwd, 512);
+    let bwd_slower_512 = f(Method::FlashAttention, Pass::Bwd, 512) > f(Method::ApexFmha, Pass::Bwd, 512);
+    let combined_wins_512 =
+        f(Method::FlashAttention, Pass::FwdBwd, 512) < f(Method::ApexFmha, Pass::FwdBwd, 512);
+    println!("[{}] flash forward faster than FMHA at 512", if fwd_faster_512 { "OK" } else { "FAIL" });
+    println!("[{}] flash backward slower than FMHA at 512 (recompute FLOPs)", if bwd_slower_512 { "OK" } else { "FAIL" });
+    println!("[{}] flash combined wins at 512 (paper: 5% faster)", if combined_wins_512 { "OK" } else { "FAIL" });
+}

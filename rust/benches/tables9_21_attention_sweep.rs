@@ -1,0 +1,96 @@
+//! Tables 9–21 (Appendix E.6): the full benchmarking grid — forward,
+//! backward, and combined runtimes for all 12 methods × 10 sequence
+//! lengths × {dropout} × {masking}, plus the memory-usage table, printed
+//! in exactly the paper's layout, with the paper's own numbers alongside
+//! at the calibration-independent columns for comparison.
+
+use flashattn::bench::{ms_cell, out_dir};
+use flashattn::sim::baselines::SWEEP_METHODS;
+use flashattn::sim::roofline::{BenchConfig, Pass, Roofline};
+use flashattn::util::table::Table;
+
+const NS: [u64; 10] = [128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536];
+
+fn sweep(rl: &Roofline, pass: Pass, dropout: bool, masked: bool, table_no: u32) {
+    let cfg = BenchConfig { dropout, masked, ..Default::default() };
+    let mut headers: Vec<String> = vec!["Attention Method".into()];
+    headers.extend(NS.iter().map(|n| n.to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        &format!(
+            "Table {table_no} — {:?} runtime (ms), dropout={} masking={}",
+            pass, dropout, masked
+        ),
+        &hrefs,
+    );
+    for m in SWEEP_METHODS {
+        let mut row = vec![m.name().to_string()];
+        for &n in &NS {
+            row.push(ms_cell(rl.time_ms(*m, pass, n, &cfg)));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(&out_dir().join(format!("table{table_no}.csv"))).unwrap();
+}
+
+fn main() {
+    let rl = Roofline::a100();
+    // Table 8's grid: (dropout, masking) x (fwd, bwd, combined).
+    let combos: [(bool, bool, [u32; 3]); 4] = [
+        (true, true, [9, 10, 11]),
+        (false, true, [12, 13, 14]),
+        (true, false, [15, 16, 17]),
+        (false, false, [18, 19, 20]),
+    ];
+    for (dropout, masked, tables) in combos {
+        sweep(&rl, Pass::Fwd, dropout, masked, tables[0]);
+        sweep(&rl, Pass::Bwd, dropout, masked, tables[1]);
+        sweep(&rl, Pass::FwdBwd, dropout, masked, tables[2]);
+    }
+
+    // Table 21: memory usage (combined, no dropout/mask).
+    let cfg = BenchConfig::default();
+    let mut headers: Vec<String> = vec!["Attention Method".into()];
+    headers.extend(NS.iter().map(|n| n.to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new("Table 21 — memory usage (MB)", &hrefs);
+    for m in SWEEP_METHODS {
+        let mut row = vec![m.name().to_string()];
+        for &n in &NS {
+            row.push(ms_cell(rl.mem_mb(*m, n, &cfg)));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_csv(&out_dir().join("table21.csv")).unwrap();
+
+    // Paper-vs-model comparison at an extrapolated column (N=4096, Table 18
+    // fwd / Table 19 bwd / Table 21 mem) — N=1024 is the calibration anchor,
+    // so 4096 tests the *structural* extrapolation.
+    println!("## paper-vs-model at N=4096 (model calibrated only at N=1024)");
+    let paper_fwd_4096: &[(&str, f64)] = &[
+        ("PyTorch Attention", 16.47),
+        ("Reformer", 41.11),
+        ("Local Attention", 11.56),
+        ("Linformer", 2.09),
+        ("Smyrf", 22.23),
+        ("LSformer", 21.71),
+        ("Block Sparse", 16.15),
+        ("Longformer", 11.07),
+        ("BigBird", 11.59),
+        ("FlashAttention", 8.42),
+        ("Block-Sparse FlashAttention", 0.96),
+    ];
+    let cfg = BenchConfig::default();
+    let mut t = Table::new("fwd @4096: paper vs model", &["method", "paper (ms)", "model (ms)", "ratio"]);
+    for (name, paper) in paper_fwd_4096 {
+        let m = SWEEP_METHODS.iter().find(|m| m.name() == *name).unwrap();
+        if let Some(model) = rl.time_ms(*m, Pass::Fwd, 4096, &cfg) {
+            t.row(vec![name.to_string(), format!("{paper:.2}"), format!("{model:.2}"),
+                       format!("{:.2}", model / paper)]);
+        }
+    }
+    t.print();
+    t.write_csv(&out_dir().join("paper_vs_model_4096.csv")).unwrap();
+}

@@ -1,0 +1,220 @@
+//! Multi-device FlashAttention (paper §5 "Multi-GPU IO-Aware Methods" and
+//! Appendix D.1), implemented as a real parallel algorithm:
+//!
+//! The K/V sequence is sharded across W workers; each worker runs the
+//! ordinary single-device kernel (Algorithm 1) over its shard, producing a
+//! *partial* (O_w, l_w, m_w). Partials combine with exactly the softmax
+//! decomposition of Section 3.1:
+//!
+//! ```text
+//! m = max(m_a, m_b)
+//! l = e^{m_a - m} l_a + e^{m_b - m} l_b
+//! O = ( e^{m_a - m} l_a O_a + e^{m_b - m} l_b O_b ) / l
+//! ```
+//!
+//! which is associative — workers can reduce in any tree order. The merge
+//! moves only O(N·d) per worker across the interconnect (no N² traffic),
+//! giving the extra hierarchy level the paper sketches: HBM↔SRAM within a
+//! device, HBM↔HBM (NVLink) between devices.
+//!
+//! `flash_forward_sharded` runs the shards on OS threads (std::thread::scope)
+//! as the laptop-scale stand-in for the GPUs; `multi_gpu_cost` extends the
+//! IO model with the interconnect term.
+
+use super::flash::{flash_forward, Blocks};
+use super::{AttnConfig, AttnOutput};
+use crate::sim::hbm::Hbm;
+use crate::tensor::Tensor;
+
+/// Merge two attention partials over disjoint key sets (associative).
+pub fn merge_partials(a: &AttnOutput, b: &AttnOutput) -> AttnOutput {
+    let n = a.l.len();
+    let d = a.o.cols();
+    assert_eq!(b.l.len(), n);
+    let mut o = Tensor::zeros(&[n, d]);
+    let mut l = vec![0.0f32; n];
+    let mut m = vec![0.0f32; n];
+    for r in 0..n {
+        let m_new = a.m[r].max(b.m[r]);
+        let wa = (a.m[r] - m_new).exp() * a.l[r];
+        let wb = (b.m[r] - m_new).exp() * b.l[r];
+        let l_new = wa + wb;
+        let inv = 1.0 / l_new.max(1e-37);
+        let (ra, rb) = (a.o.row(r), b.o.row(r));
+        let ro = o.row_mut(r);
+        for c in 0..d {
+            ro[c] = (wa * ra[c] + wb * rb[c]) * inv;
+        }
+        l[r] = l_new;
+        m[r] = m_new;
+    }
+    AttnOutput { o, l, m }
+}
+
+/// Sequence-parallel flash forward: shard K/V rows over `workers` threads,
+/// each running Algorithm 1 on its shard, then tree-merge the partials.
+/// Exact for non-causal attention (each shard sees a contiguous key range;
+/// causal masking needs per-shard column offsets, handled via kv offsets).
+pub fn flash_forward_sharded(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+) -> AttnOutput {
+    assert!(cfg.dropout_p == 0.0, "sharded path: dropout handled per-device in future work");
+    assert!(!cfg.causal, "sharded path is non-causal (shards are key ranges)");
+    let n = k.rows();
+    let w = workers.max(1).min(n);
+    let shard = (n + w - 1) / w;
+
+    let mut partials: Vec<Option<AttnOutput>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for wi in 0..w {
+            let lo = wi * shard;
+            let hi = ((wi + 1) * shard).min(n);
+            if lo >= hi {
+                continue;
+            }
+            let kw = k.slice_rows(lo, hi);
+            let vw = v.slice_rows(lo, hi);
+            let cfg_w = AttnConfig {
+                // Padding mask applies to *global* columns; shards beyond
+                // kv_len contribute nothing via their local mask.
+                kv_len: cfg.kv_len.map(|kl| kl.saturating_sub(lo).min(hi - lo)),
+                ..cfg.clone()
+            };
+            handles.push(scope.spawn(move || {
+                // Each worker has its own HBM counter (its own device).
+                flash_forward(q, &kw, &vw, &cfg_w, blocks, &mut Hbm::new())
+            }));
+        }
+        for h in handles {
+            partials.push(Some(h.join().expect("worker panicked")));
+        }
+    });
+
+    // Tree reduction (any order is exact — associativity test below).
+    let mut acc: Option<AttnOutput> = None;
+    for p in partials.into_iter().flatten() {
+        acc = Some(match acc {
+            None => p,
+            Some(a) => merge_partials(&a, &p),
+        });
+    }
+    acc.expect("at least one shard")
+}
+
+/// IO model for W-way sequence-parallel flash (Appendix D.1): per-device
+/// HBM traffic for an N/W key shard plus the O(N·d·W) interconnect merge.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiGpuCost {
+    /// Per-device HBM elements (the slowest device bounds the step).
+    pub hbm_per_device: u64,
+    /// Elements crossing the interconnect for the merge.
+    pub interconnect_elems: u64,
+}
+
+pub fn multi_gpu_cost(n: u64, d: u64, blocks: Blocks, workers: u64) -> MultiGpuCost {
+    let shard = n.div_ceil(workers);
+    // Each device: full Q (all rows attend its shard) vs shard of K/V.
+    let per_dev = crate::sim::cost::flash_fwd_rect(n, shard, d, blocks);
+    // Merge: each device ships (O, l, m) = N(d+2) elements.
+    MultiGpuCost {
+        hbm_per_device: per_dev.hbm_elems,
+        interconnect_elems: workers * n * (d + 2),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::standard::standard_forward;
+    use crate::util::prop::{for_each_case, usize_in};
+    use crate::util::rng::SplitMix64;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = SplitMix64::new(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+        )
+    }
+
+    #[test]
+    fn sharded_matches_single_device() {
+        let (q, k, v) = qkv(64, 16, 0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::explicit(16, 16);
+        let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+        for workers in [1usize, 2, 3, 4, 8] {
+            let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, workers);
+            assert!(
+                single.o.max_abs_diff(&multi.o) < 1e-4,
+                "workers={workers}: diff {}",
+                single.o.max_abs_diff(&multi.o)
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let (q, k, v) = qkv(32, 8, 1);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::explicit(8, 8);
+        // Three disjoint key shards.
+        let parts: Vec<AttnOutput> = [(0, 12), (12, 20), (20, 32)]
+            .iter()
+            .map(|&(lo, hi)| {
+                flash_forward(&q, &k.slice_rows(lo, hi), &v.slice_rows(lo, hi), &cfg, blocks, &mut Hbm::new())
+            })
+            .collect();
+        let abc = merge_partials(&merge_partials(&parts[0], &parts[1]), &parts[2]);
+        let a_bc = merge_partials(&parts[0], &merge_partials(&parts[1], &parts[2]));
+        let cba = merge_partials(&merge_partials(&parts[2], &parts[1]), &parts[0]);
+        assert!(abc.o.max_abs_diff(&a_bc.o) < 1e-5);
+        assert!(abc.o.max_abs_diff(&cba.o) < 1e-5);
+    }
+
+    #[test]
+    fn sharded_with_padding_mask() {
+        let (q, k, v) = qkv(48, 8, 2);
+        let cfg = AttnConfig { kv_len: Some(29), ..Default::default() };
+        let blocks = Blocks::explicit(8, 8);
+        let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+        let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 3);
+        assert!(single.o.max_abs_diff(&multi.o) < 1e-4);
+    }
+
+    #[test]
+    fn property_random_worker_counts() {
+        for_each_case("sharded", 8, |rng| {
+            let n = usize_in(rng, 8, 48);
+            let d = *crate::util::prop::choose(rng, &[4usize, 8]);
+            let w = usize_in(rng, 1, 6);
+            let q = Tensor::randn(&[n, d], rng, 1.0);
+            let k = Tensor::randn(&[n, d], rng, 1.0);
+            let v = Tensor::randn(&[n, d], rng, 1.0);
+            let cfg = AttnConfig::default();
+            let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+            let multi = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(8, 8), w);
+            assert!(single.o.max_abs_diff(&multi.o) < 1e-4, "n={n} d={d} w={w}");
+        });
+    }
+
+    #[test]
+    fn interconnect_traffic_linear_not_quadratic() {
+        let blocks = Blocks::explicit(64, 256);
+        let c2 = multi_gpu_cost(8192, 64, blocks, 4);
+        let c1 = multi_gpu_cost(4096, 64, blocks, 4);
+        let ratio = c2.interconnect_elems as f64 / c1.interconnect_elems as f64;
+        assert!((1.9..2.1).contains(&ratio), "merge traffic must be O(N): {ratio}");
+        // Per-device HBM shrinks as workers grow.
+        let w8 = multi_gpu_cost(8192, 64, blocks, 8).hbm_per_device;
+        let w2 = multi_gpu_cost(8192, 64, blocks, 2).hbm_per_device;
+        assert!(w8 < w2);
+    }
+}

@@ -1,0 +1,459 @@
+//! Algorithms 1/2 (FlashAttention forward) and Algorithm 4 (backward) as
+//! faithful tiled Rust implementations with explicit "SRAM" tile buffers and
+//! HBM accounting at exactly the lines the paper's pseudo-code moves data.
+//!
+//! Loop order matches the paper exactly: outer loop over K/V blocks j,
+//! inner loop over Q blocks i, with O/l/m read-modified-written to HBM every
+//! inner iteration (Algorithm 1 lines 12-13) — that is what produces the
+//! Θ(N²d²/M) access count of Theorem 2.
+
+use super::masks::{dropout_scale, masked_score, NEG_INF};
+use super::{AttnConfig, AttnGrads, AttnOutput};
+use crate::sim::hbm::Hbm;
+use crate::tensor::Tensor;
+
+/// Tile geometry per Algorithm 1 line 1: B_c = ceil(M/4d), B_r = min(B_c, d).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blocks {
+    pub b_r: usize,
+    pub b_c: usize,
+}
+
+impl Blocks {
+    pub fn from_sram(m_floats: usize, d: usize, n: usize) -> Blocks {
+        let b_c = ((m_floats + 4 * d - 1) / (4 * d)).max(1).min(n);
+        let b_r = b_c.min(d).min(n);
+        Blocks { b_r, b_c }
+    }
+
+    pub fn explicit(b_r: usize, b_c: usize) -> Blocks {
+        Blocks { b_r, b_c }
+    }
+
+    /// SRAM floats consumed by one iteration's tiles:
+    /// K_j, V_j (B_c x d each), Q_i, O_i (B_r x d each), S_ij (B_r x B_c).
+    pub fn sram_floats(&self, d: usize) -> usize {
+        2 * self.b_c * d + 2 * self.b_r * d + self.b_r * self.b_c
+    }
+}
+
+/// Algorithm 1/2: tiled exact forward. q,k,v: [n, d].
+pub fn flash_forward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    hbm: &mut Hbm,
+) -> AttnOutput {
+    // Rectangular in general: n query rows attend n_k key rows (n_k < n in
+    // the sequence-parallel sharded path, attn::distributed).
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    let tau = cfg.tau_for(d);
+    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_r = (n + b_r - 1) / b_r;
+    let t_c = (n_k + b_c - 1) / b_c;
+
+    // Line 2: initialise O = 0, l = 0, m = -inf in HBM.
+    let mut o = Tensor::zeros(&[n, d]);
+    let mut l = vec![0.0f32; n];
+    let mut m = vec![f32::NEG_INFINITY; n];
+    hbm.store(n * d + 2 * n);
+    // On-chip scratch, allocated once (perf: no allocation in the tile loop).
+    let mut p_buf = vec![0.0f32; b_c];
+    let mut pv = vec![0.0f32; d];
+
+    for j in 0..t_c {
+        let c0 = j * b_c;
+        let c1 = ((j + 1) * b_c).min(n_k);
+        // Line 6: load K_j, V_j from HBM to SRAM.
+        hbm.load(2 * (c1 - c0) * d);
+        let kj = k.slice_rows(c0, c1);
+        let vj = v.slice_rows(c0, c1);
+
+        for i in 0..t_r {
+            let r0 = i * b_r;
+            let r1 = ((i + 1) * b_r).min(n);
+            // Causal block skip: whole tile above the diagonal.
+            if cfg.causal && c0 > r1 - 1 {
+                continue;
+            }
+            // Line 8: load Q_i, O_i, l_i, m_i.
+            hbm.load((r1 - r0) * d * 2 + 2 * (r1 - r0));
+            let qi = q.slice_rows(r0, r1);
+
+            // Line 9: S_ij = tau Q_i K_j^T (on chip).
+            let mut s = qi.matmul_bt(&kj).scale(tau);
+            for (rr, row) in (r0..r1).enumerate() {
+                for (cc, col) in (c0..c1).enumerate() {
+                    let x = s.data[rr * (c1 - c0) + cc];
+                    s.data[rr * (c1 - c0) + cc] = masked_score(x, row, col, cfg.causal, kv_len);
+                }
+            }
+
+            // Lines 10-12: online softmax update.
+            let bc = c1 - c0;
+            for (rr, row) in (r0..r1).enumerate() {
+                let srow = &s.data[rr * bc..(rr + 1) * bc];
+                let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
+                let p = &mut p_buf[..bc];
+                let mut l_tile = 0.0f32;
+                for (pw, &x) in p.iter_mut().zip(srow) {
+                    *pw = (x - m_tile).exp();
+                    l_tile += *pw;
+                }
+
+                let m_new = m[row].max(m_tile);
+                let alpha = (m[row] - m_new).exp();
+                let beta = (m_tile - m_new).exp();
+                let l_new = alpha * l[row] + beta * l_tile;
+
+                if cfg.dropout_p > 0.0 {
+                    for (cc, pw) in p.iter_mut().enumerate() {
+                        *pw *= dropout_scale(
+                            cfg.bh_index,
+                            row,
+                            c0 + cc,
+                            n,
+                            cfg.dropout_seed,
+                            cfg.dropout_p,
+                        );
+                    }
+                }
+
+                // Line 12: O_i <- diag(l_new)^-1 (l_i e^{m-m_new} O_i + e^{mt-m_new} P~ V_j).
+                // P~ V_j accumulated row-of-V-major: contiguous, vectorisable
+                // (perf pass: was column-major with stride-d access).
+                pv[..d].fill(0.0);
+                for (cc, &pw) in p.iter().enumerate() {
+                    if pw != 0.0 {
+                        let vrow = &vj.data[cc * d..(cc + 1) * d];
+                        for c in 0..d {
+                            pv[c] += pw * vrow[c];
+                        }
+                    }
+                }
+                let inv = 1.0 / l_new.max(1e-37);
+                let a_coef = l[row] * alpha * inv;
+                let b_coef = beta * inv;
+                let orow = o.row_mut(row);
+                for c in 0..d {
+                    orow[c] = a_coef * orow[c] + b_coef * pv[c];
+                }
+                l[row] = l_new;
+                m[row] = m_new;
+            }
+            // Lines 12-13: write O_i, l_i, m_i back to HBM.
+            hbm.store((r1 - r0) * d + 2 * (r1 - r0));
+        }
+    }
+
+    AttnOutput { o, l, m }
+}
+
+/// Algorithm 4: tiled backward with on-chip recomputation of P_ij.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_backward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    l: &[f32],
+    m: &[f32],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    hbm: &mut Hbm,
+) -> AttnGrads {
+    let (n, d) = (q.rows(), q.cols());
+    let tau = cfg.tau_for(d);
+    let kv_len = cfg.kv_len.unwrap_or(n);
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_r = (n + b_r - 1) / b_r;
+    let t_c = (n + b_c - 1) / b_c;
+
+    // Line 5: initialise dQ, dK, dV = 0 in HBM.
+    let mut dq = Tensor::zeros(&[n, d]);
+    let mut dk = Tensor::zeros(&[n, d]);
+    let mut dv = Tensor::zeros(&[n, d]);
+    hbm.store(3 * n * d);
+
+    for j in 0..t_c {
+        let c0 = j * b_c;
+        let c1 = ((j + 1) * b_c).min(n);
+        let bc = c1 - c0;
+        // Line 7: load K_j, V_j.
+        hbm.load(2 * bc * d);
+        let kj = k.slice_rows(c0, c1);
+        let vj = v.slice_rows(c0, c1);
+        // Line 8: dK~_j, dV~_j = 0 on SRAM.
+        let mut dkj = Tensor::zeros(&[bc, d]);
+        let mut dvj = Tensor::zeros(&[bc, d]);
+
+        for i in 0..t_r {
+            let r0 = i * b_r;
+            let r1 = ((i + 1) * b_r).min(n);
+            let br = r1 - r0;
+            if cfg.causal && c0 > r1 - 1 {
+                continue;
+            }
+            // Line 10: load Q_i, O_i, dO_i, dQ_i, l_i, m_i.
+            hbm.load(4 * br * d + 2 * br);
+            let qi = q.slice_rows(r0, r1);
+
+            // Lines 11-13: recompute S_ij, P_ij on chip.
+            let mut s = qi.matmul_bt(&kj).scale(tau);
+            for rr in 0..br {
+                for cc in 0..bc {
+                    let x = s.data[rr * bc + cc];
+                    s.data[rr * bc + cc] = masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+                }
+            }
+            let mut p = Tensor::zeros(&[br, bc]);
+            for rr in 0..br {
+                let row = r0 + rr;
+                let lr = l[row].max(1e-37);
+                for cc in 0..bc {
+                    p.data[rr * bc + cc] = (s.data[rr * bc + cc] - m[row]).exp() / lr;
+                }
+            }
+
+            // Lines 14-15: regenerate dropout mask, P^dropped = P o Z.
+            let mut p_dropped = p.clone();
+            if cfg.dropout_p > 0.0 {
+                for rr in 0..br {
+                    for cc in 0..bc {
+                        p_dropped.data[rr * bc + cc] *= dropout_scale(
+                            cfg.bh_index,
+                            r0 + rr,
+                            c0 + cc,
+                            n,
+                            cfg.dropout_seed,
+                            cfg.dropout_p,
+                        );
+                    }
+                }
+            }
+
+            // Line 16: dV~_j += (P^dropped)^T dO_i.
+            for rr in 0..br {
+                let dorow = dout.row(r0 + rr);
+                for cc in 0..bc {
+                    let pw = p_dropped.data[rr * bc + cc];
+                    if pw != 0.0 {
+                        let dvrow = &mut dvj.data[cc * d..(cc + 1) * d];
+                        for c in 0..d {
+                            dvrow[c] += pw * dorow[c];
+                        }
+                    }
+                }
+            }
+
+            // Lines 17-20: dP, D_i, dS.
+            let mut ds = Tensor::zeros(&[br, bc]);
+            for rr in 0..br {
+                let row = r0 + rr;
+                let dorow = dout.row(row);
+                let orow = o.row(row);
+                // Line 19: D_i = rowsum(dO o O).
+                let mut di = 0.0f32;
+                for c in 0..d {
+                    di += dorow[c] * orow[c];
+                }
+                for cc in 0..bc {
+                    // Line 17: dP^dropped = dO V^T ; line 18: dP = dP^dropped o Z.
+                    let vrow = &vj.data[cc * d..(cc + 1) * d];
+                    let mut dp = 0.0f32;
+                    for c in 0..d {
+                        dp += dorow[c] * vrow[c];
+                    }
+                    if cfg.dropout_p > 0.0 {
+                        dp *= dropout_scale(
+                            cfg.bh_index,
+                            row,
+                            c0 + cc,
+                            n,
+                            cfg.dropout_seed,
+                            cfg.dropout_p,
+                        );
+                    }
+                    // Line 20: dS = P o (dP - D_i).
+                    ds.data[rr * bc + cc] = p.data[rr * bc + cc] * (dp - di);
+                }
+            }
+
+            // Line 21: dQ_i += tau dS K_j (written to HBM).
+            for rr in 0..br {
+                let dqrow = dq.row_mut(r0 + rr);
+                for cc in 0..bc {
+                    let w = tau * ds.data[rr * bc + cc];
+                    if w != 0.0 {
+                        let krow = &kj.data[cc * d..(cc + 1) * d];
+                        for c in 0..d {
+                            dqrow[c] += w * krow[c];
+                        }
+                    }
+                }
+            }
+            hbm.store(br * d); // dQ_i writeback
+
+            // Line 22: dK~_j += tau dS^T Q_i.
+            for rr in 0..br {
+                let qrow = qi.row(rr);
+                for cc in 0..bc {
+                    let w = tau * ds.data[rr * bc + cc];
+                    if w != 0.0 {
+                        let dkrow = &mut dkj.data[cc * d..(cc + 1) * d];
+                        for c in 0..d {
+                            dkrow[c] += w * qrow[c];
+                        }
+                    }
+                }
+            }
+        }
+
+        // Line 24: write dK_j, dV_j to HBM.
+        for cc in 0..bc {
+            for c in 0..d {
+                dk.data[(c0 + cc) * d + c] = dkj.data[cc * d + c];
+                dv.data[(c0 + cc) * d + c] = dvj.data[cc * d + c];
+            }
+        }
+        hbm.store(2 * bc * d);
+    }
+
+    AttnGrads { dq, dk, dv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::standard::{standard_backward, standard_forward};
+    use crate::util::prop::{assert_allclose, for_each_case, usize_in};
+    use crate::util::rng::SplitMix64;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = SplitMix64::new(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+        )
+    }
+
+    #[test]
+    fn blocks_paper_formula() {
+        let b = Blocks::from_sram(48 * 1024, 64, 4096);
+        assert_eq!(b.b_c, 192);
+        assert_eq!(b.b_r, 64);
+    }
+
+    #[test]
+    fn matches_standard_forward() {
+        let (q, k, v) = qkv(48, 8, 0);
+        let std = standard_forward(&q, &k, &v, &AttnConfig::default(), &mut Hbm::new());
+        let fla = flash_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(8, 16), &mut Hbm::new());
+        assert!(std.o.max_abs_diff(&fla.o) < 1e-5);
+        assert_allclose(&std.l, &fla.l, 1e-4, 1e-4, "l");
+        assert_allclose(&std.m, &fla.m, 1e-6, 0.0, "m");
+    }
+
+    #[test]
+    fn matches_standard_causal_and_padding() {
+        let (q, k, v) = qkv(40, 8, 1);
+        let cfg = AttnConfig { causal: true, kv_len: Some(23), ..Default::default() };
+        let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+        let fla = flash_forward(&q, &k, &v, &cfg, Blocks::explicit(8, 8), &mut Hbm::new());
+        assert!(std.o.max_abs_diff(&fla.o) < 1e-5);
+    }
+
+    #[test]
+    fn dropout_matches_standard() {
+        let (q, k, v) = qkv(32, 8, 2);
+        let cfg = AttnConfig { dropout_p: 0.25, dropout_seed: 9, bh_index: 3, ..Default::default() };
+        let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+        let fla = flash_forward(&q, &k, &v, &cfg, Blocks::explicit(8, 8), &mut Hbm::new());
+        assert!(std.o.max_abs_diff(&fla.o) < 1e-5);
+    }
+
+    #[test]
+    fn block_size_invariance() {
+        let (q, k, v) = qkv(64, 16, 3);
+        let cfg = AttnConfig::default();
+        let base = flash_forward(&q, &k, &v, &cfg, Blocks::explicit(64, 64), &mut Hbm::new());
+        for (br, bc) in [(8, 8), (16, 32), (8, 64), (64, 8)] {
+            let f = flash_forward(&q, &k, &v, &cfg, Blocks::explicit(br, bc), &mut Hbm::new());
+            assert!(base.o.max_abs_diff(&f.o) < 1e-5, "blocks ({br},{bc})");
+        }
+    }
+
+    #[test]
+    fn backward_matches_standard() {
+        let (q, k, v) = qkv(32, 8, 4);
+        let cfg = AttnConfig::causal();
+        let blocks = Blocks::explicit(8, 8);
+        let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
+        let mut rng = SplitMix64::new(9);
+        let dout = Tensor::randn(&[32, 8], &mut rng, 1.0);
+        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, &fwd.l, &fwd.m, &cfg, blocks, &mut Hbm::new());
+        let sg = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
+        assert!(fg.dq.max_abs_diff(&sg.dq) < 1e-4);
+        assert!(fg.dk.max_abs_diff(&sg.dk) < 1e-4);
+        assert!(fg.dv.max_abs_diff(&sg.dv) < 1e-4);
+    }
+
+    #[test]
+    fn backward_dropout_matches_standard() {
+        let (q, k, v) = qkv(24, 8, 5);
+        let cfg = AttnConfig { dropout_p: 0.2, dropout_seed: 5, ..Default::default() };
+        let blocks = Blocks::explicit(8, 8);
+        let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
+        let mut rng = SplitMix64::new(10);
+        let dout = Tensor::randn(&[24, 8], &mut rng, 1.0);
+        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, &fwd.l, &fwd.m, &cfg, blocks, &mut Hbm::new());
+        let sg = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
+        assert!(fg.dq.max_abs_diff(&sg.dq) < 1e-4);
+        assert!(fg.dk.max_abs_diff(&sg.dk) < 1e-4);
+        assert!(fg.dv.max_abs_diff(&sg.dv) < 1e-4);
+    }
+
+    #[test]
+    fn property_random_shapes_match_standard() {
+        for_each_case("flash_vs_standard", 15, |rng| {
+            let n = usize_in(rng, 2, 48);
+            let d = *crate::util::prop::choose(rng, &[2usize, 4, 8]);
+            let b_r = usize_in(rng, 1, n);
+            let b_c = usize_in(rng, 1, n);
+            let causal = rng.next_f32() < 0.5;
+            let q = Tensor::randn(&[n, d], rng, 1.0);
+            let k = Tensor::randn(&[n, d], rng, 1.0);
+            let v = Tensor::randn(&[n, d], rng, 1.0);
+            let cfg = AttnConfig { causal, ..Default::default() };
+            let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+            let fla = flash_forward(&q, &k, &v, &cfg, Blocks::explicit(b_r, b_c), &mut Hbm::new());
+            assert!(
+                std.o.max_abs_diff(&fla.o) < 1e-4,
+                "n={n} d={d} blocks=({b_r},{b_c}) causal={causal}"
+            );
+        });
+    }
+
+    #[test]
+    fn io_flash_less_than_standard_at_scale() {
+        // The paper's headline: fewer HBM accesses once N >> M/d.
+        let (q, k, v) = qkv(256, 16, 6);
+        let mut h_std = Hbm::new();
+        standard_forward(&q, &k, &v, &AttnConfig::default(), &mut h_std);
+        let mut h_fla = Hbm::new();
+        let blocks = Blocks::from_sram(4096, 16, 256);
+        flash_forward(&q, &k, &v, &AttnConfig::default(), blocks, &mut h_fla);
+        assert!(
+            h_fla.accesses() < h_std.accesses(),
+            "flash {} vs std {}",
+            h_fla.accesses(),
+            h_std.accesses()
+        );
+    }
+}

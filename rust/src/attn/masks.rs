@@ -1,0 +1,175 @@
+//! Masking and block-sparsity patterns — Rust mirrors of the kernel-side
+//! helpers (causal / key-padding biases, butterfly + local-global block
+//! masks, kernel-identical dropout).
+
+use crate::util::rng::kernel_dropout_keep;
+
+pub const NEG_INF: f32 = -1e30;
+
+/// Apply the fused mask of Algorithm 2 line 11 to a scores entry.
+#[inline]
+pub fn masked_score(s: f32, row: usize, col: usize, causal: bool, kv_len: usize) -> f32 {
+    if (causal && col > row) || col >= kv_len {
+        NEG_INF
+    } else {
+        s
+    }
+}
+
+/// Dropout scale for attention entry (row, col): 0 if dropped, 1/(1-p) if
+/// kept — identical stream to the Pallas kernels (see util::rng).
+#[inline]
+pub fn dropout_scale(
+    bh: u32,
+    row: usize,
+    col: usize,
+    n: usize,
+    seed: u32,
+    p_drop: f32,
+) -> f32 {
+    if p_drop <= 0.0 {
+        1.0
+    } else if kernel_dropout_keep(bh, row as u32, col as u32, n as u32, seed, p_drop) {
+        1.0 / (1.0 - p_drop)
+    } else {
+        0.0
+    }
+}
+
+/// Block-sparsity mask M in {0,1}^{t_r x t_c} (Section 3.3).
+#[derive(Clone, Debug)]
+pub struct BlockMask {
+    pub t_r: usize,
+    pub t_c: usize,
+    pub bits: Vec<u8>,
+}
+
+impl BlockMask {
+    pub fn dense(t_r: usize, t_c: usize) -> BlockMask {
+        BlockMask { t_r, t_c, bits: vec![1; t_r * t_c] }
+    }
+
+    pub fn zeros(t_r: usize, t_c: usize) -> BlockMask {
+        BlockMask { t_r, t_c, bits: vec![0; t_r * t_c] }
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.t_c + j] != 0
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.bits[i * self.t_c + j] = v as u8;
+    }
+
+    /// Fixed butterfly pattern (Pixelated Butterfly [17]) — diagonal plus
+    /// power-of-two off-diagonals. Mirrors `butterfly_mask` in
+    /// python/compile/kernels/block_sparse.py.
+    pub fn butterfly(t_r: usize, t_c: usize) -> BlockMask {
+        let mut m = BlockMask::zeros(t_r, t_c);
+        for i in 0..t_r {
+            m.set(i, i.min(t_c - 1), true);
+            let mut stride = 1usize;
+            while stride < t_r.max(t_c) {
+                if i >= stride && i - stride < t_c {
+                    m.set(i, i - stride, true);
+                }
+                if i + stride < t_c {
+                    m.set(i, i + stride, true);
+                }
+                stride *= 2;
+            }
+        }
+        m
+    }
+
+    /// Sliding-window + global blocks (Longformer/BigBird shape).
+    pub fn local_global(t_r: usize, t_c: usize, window: usize, n_global: usize) -> BlockMask {
+        let mut m = BlockMask::zeros(t_r, t_c);
+        for i in 0..t_r {
+            let lo = i.saturating_sub(window);
+            let hi = (i + window + 1).min(t_c);
+            for j in lo..hi {
+                m.set(i, j, true);
+            }
+            for j in 0..n_global.min(t_c) {
+                m.set(i, j, true);
+            }
+        }
+        for i in 0..n_global.min(t_r) {
+            for j in 0..t_c {
+                m.set(i, j, true);
+            }
+        }
+        m
+    }
+
+    /// s — fraction of nonzero blocks (Proposition 4).
+    pub fn sparsity(&self) -> f64 {
+        self.bits.iter().filter(|&&b| b != 0).count() as f64 / self.bits.len() as f64
+    }
+
+    pub fn nonzero_blocks(&self) -> usize {
+        self.bits.iter().filter(|&&b| b != 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_score_causal() {
+        assert_eq!(masked_score(1.0, 3, 4, true, 10), NEG_INF);
+        assert_eq!(masked_score(1.0, 4, 4, true, 10), 1.0);
+        assert_eq!(masked_score(1.0, 5, 4, true, 10), 1.0);
+    }
+
+    #[test]
+    fn masked_score_padding() {
+        assert_eq!(masked_score(1.0, 0, 7, false, 7), NEG_INF);
+        assert_eq!(masked_score(1.0, 0, 6, false, 7), 1.0);
+    }
+
+    #[test]
+    fn butterfly_has_diagonal() {
+        let m = BlockMask::butterfly(16, 16);
+        for i in 0..16 {
+            assert!(m.get(i, i));
+        }
+    }
+
+    #[test]
+    fn butterfly_sparsity_decreases() {
+        let s8 = BlockMask::butterfly(8, 8).sparsity();
+        let s64 = BlockMask::butterfly(64, 64).sparsity();
+        assert!(s8 > s64, "{s8} vs {s64}");
+    }
+
+    #[test]
+    fn butterfly_matches_python_8x8() {
+        // Cross-checked against python butterfly_mask(8, 8).
+        let m = BlockMask::butterfly(8, 8);
+        let expected_row0 = [1, 1, 1, 0, 1, 0, 0, 0];
+        for (j, &e) in expected_row0.iter().enumerate() {
+            assert_eq!(m.get(0, j) as u8, e, "col {j}");
+        }
+    }
+
+    #[test]
+    fn local_global_window() {
+        let m = BlockMask::local_global(8, 8, 1, 1);
+        assert!(m.get(4, 3) && m.get(4, 4) && m.get(4, 5));
+        assert!(!m.get(4, 6));
+        assert!(m.get(4, 0) && m.get(0, 7));
+    }
+
+    #[test]
+    fn dense_sparsity_is_one() {
+        assert_eq!(BlockMask::dense(4, 4).sparsity(), 1.0);
+    }
+
+    #[test]
+    fn dropout_scale_zero_p_is_identity() {
+        assert_eq!(dropout_scale(0, 1, 2, 16, 0, 0.0), 1.0);
+    }
+}

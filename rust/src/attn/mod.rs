@@ -1,0 +1,73 @@
+//! Pure-Rust mirrors of the paper's algorithms, in two roles:
+//!
+//! 1. **Numeric**: independent implementations of Algorithm 0 (standard),
+//!    Algorithms 1/2/4 (FlashAttention fwd/bwd) and Algorithm 5
+//!    (block-sparse) used to cross-check the PJRT artifacts and each other
+//!    (three-way agreement: Rust mirror == Pallas kernel == jnp oracle).
+//! 2. **Instrumented**: every function takes a `sim::hbm::Hbm` counter and
+//!    records loads/stores at exactly the points the paper's pseudo-code
+//!    touches HBM, turning the IO-complexity theorems into measurements.
+//!
+//! All functions operate on one batch*head slice `[n, d]`; callers fold the
+//! leading dims.
+
+pub mod block_sparse;
+pub mod distributed;
+pub mod flash;
+pub mod masks;
+pub mod standard;
+
+use crate::tensor::Tensor;
+
+/// Shared configuration for the attention mirrors.
+#[derive(Clone, Debug)]
+pub struct AttnConfig {
+    /// Softmax scaling tau; None => 1/sqrt(d).
+    pub tau: Option<f32>,
+    pub causal: bool,
+    /// Valid key length (padding mask); None => n.
+    pub kv_len: Option<usize>,
+    pub dropout_p: f32,
+    pub dropout_seed: u32,
+    /// batch*head index — seeds the dropout counter stream.
+    pub bh_index: u32,
+}
+
+impl Default for AttnConfig {
+    fn default() -> Self {
+        AttnConfig {
+            tau: None,
+            causal: false,
+            kv_len: None,
+            dropout_p: 0.0,
+            dropout_seed: 0,
+            bh_index: 0,
+        }
+    }
+}
+
+impl AttnConfig {
+    pub fn causal() -> Self {
+        AttnConfig { causal: true, ..Default::default() }
+    }
+
+    pub fn tau_for(&self, d: usize) -> f32 {
+        self.tau.unwrap_or(1.0 / (d as f32).sqrt())
+    }
+}
+
+/// Forward outputs: O plus the softmax statistics the paper saves (l, m).
+#[derive(Clone, Debug)]
+pub struct AttnOutput {
+    pub o: Tensor,
+    pub l: Vec<f32>,
+    pub m: Vec<f32>,
+}
+
+/// Gradients returned by the backward passes.
+#[derive(Clone, Debug)]
+pub struct AttnGrads {
+    pub dq: Tensor,
+    pub dk: Tensor,
+    pub dv: Tensor,
+}

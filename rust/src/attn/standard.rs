@@ -1,0 +1,225 @@
+//! Algorithm 0 (standard attention) and Algorithm 3 (standard backward) —
+//! the materialise-everything baseline, instrumented with the HBM traffic
+//! the paper attributes to it: Θ(Nd + N²) per pass (Theorems 2/5).
+
+use super::masks::{dropout_scale, masked_score};
+use super::{AttnConfig, AttnGrads, AttnOutput};
+use crate::sim::hbm::Hbm;
+use crate::tensor::Tensor;
+
+/// Algorithm 0: S = tau Q K^T (write S), P = softmax(S) (read S, write P),
+/// O = P V (read P, V, write O). q,k,v: [n, d].
+pub fn standard_forward(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig, hbm: &mut Hbm) -> AttnOutput {
+    let (n, d) = (q.rows(), q.cols());
+    let tau = cfg.tau_for(d);
+    let kv_len = cfg.kv_len.unwrap_or(n);
+
+    // Line 1: load Q, K; compute S; write S to HBM.
+    hbm.load(n * d * 2);
+    let mut s = q.matmul_bt(k).scale(tau);
+    for row in 0..n {
+        for col in 0..n {
+            let x = s.data[row * n + col];
+            s.data[row * n + col] = masked_score(x, row, col, cfg.causal, kv_len);
+        }
+    }
+    hbm.store(n * n);
+
+    // Line 2: read S; compute P = softmax(S); write P.
+    hbm.load(n * n);
+    let mut l = vec![0.0f32; n];
+    let mut m = vec![0.0f32; n];
+    let mut p = s.clone();
+    for row in 0..n {
+        let prow = p.row_mut(row);
+        let mx = prow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0;
+        for x in prow.iter_mut() {
+            *x = (*x - mx).exp();
+            z += *x;
+        }
+        for x in prow.iter_mut() {
+            *x /= z;
+        }
+        l[row] = z;
+        m[row] = mx;
+    }
+    if cfg.dropout_p > 0.0 {
+        for row in 0..n {
+            for col in 0..n {
+                p.data[row * n + col] *=
+                    dropout_scale(cfg.bh_index, row, col, n, cfg.dropout_seed, cfg.dropout_p);
+            }
+        }
+    }
+    hbm.store(n * n);
+
+    // Line 3: load P, V; compute O = P V; write O.
+    hbm.load(n * n + n * d);
+    let o = p.matmul(v);
+    hbm.store(n * d);
+
+    AttnOutput { o, l, m }
+}
+
+/// Algorithm 3: standard attention backward, materialising P, dP, dS.
+/// Needs P from the forward (re-derived here from q,k for self-containment,
+/// with the same HBM accounting the paper uses: P is *read* from HBM).
+pub fn standard_backward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    dout: &Tensor,
+    cfg: &AttnConfig,
+    hbm: &mut Hbm,
+) -> AttnGrads {
+    let (n, d) = (q.rows(), q.cols());
+    let tau = cfg.tau_for(d);
+    let kv_len = cfg.kv_len.unwrap_or(n);
+
+    // Recreate P (in the real Algorithm 3 it was stored by the forward;
+    // accounting: read P from HBM).
+    let mut s = q.matmul_bt(k).scale(tau);
+    for row in 0..n {
+        for col in 0..n {
+            let x = s.data[row * n + col];
+            s.data[row * n + col] = masked_score(x, row, col, cfg.causal, kv_len);
+        }
+    }
+    let mut p = s.softmax_rows();
+    let p_pre = p.clone();
+    if cfg.dropout_p > 0.0 {
+        for row in 0..n {
+            for col in 0..n {
+                p.data[row * n + col] *=
+                    dropout_scale(cfg.bh_index, row, col, n, cfg.dropout_seed, cfg.dropout_p);
+            }
+        }
+    }
+
+    // Line 1: load P, dO; dV = P^T dO; write dV.
+    hbm.load(n * n + n * d);
+    let dv = p.matmul_at(dout);
+    hbm.store(n * d);
+
+    // Line 2: load dO, V; dP = dO V^T; write dP.
+    hbm.load(n * d * 2);
+    let mut dp = dout.matmul_bt(v);
+    hbm.store(n * n);
+    if cfg.dropout_p > 0.0 {
+        for row in 0..n {
+            for col in 0..n {
+                dp.data[row * n + col] *=
+                    dropout_scale(cfg.bh_index, row, col, n, cfg.dropout_seed, cfg.dropout_p);
+            }
+        }
+    }
+
+    // Line 3: read P, dP; dS = P o (dP - rowdot); write dS.
+    hbm.load(n * n * 2);
+    let mut ds = Tensor::zeros(&[n, n]);
+    for row in 0..n {
+        let mut di = 0.0f32;
+        for col in 0..n {
+            di += p_pre.data[row * n + col] * dp.data[row * n + col];
+        }
+        for col in 0..n {
+            ds.data[row * n + col] =
+                p_pre.data[row * n + col] * (dp.data[row * n + col] - di);
+        }
+    }
+    hbm.store(n * n);
+
+    // Lines 4-5: dQ = tau dS K, dK = tau dS^T Q.
+    hbm.load(n * n + n * d);
+    let dq = ds.matmul(k).scale(tau);
+    hbm.store(n * d);
+    hbm.load(n * n + n * d);
+    let dk = ds.matmul_at(q).scale(tau);
+    hbm.store(n * d);
+
+    AttnGrads { dq, dk, dv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::SplitMix64;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = SplitMix64::new(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+        )
+    }
+
+    #[test]
+    fn uniform_when_keys_identical() {
+        // All keys equal -> softmax uniform -> O = mean(V).
+        let (q, _, v) = qkv(8, 4, 0);
+        let k = Tensor::full(&[8, 4], 0.5);
+        let out = standard_forward(&q, &k, &v, &AttnConfig::default(), &mut Hbm::new());
+        let mut mean = vec![0.0f32; 4];
+        for r in 0..8 {
+            for c in 0..4 {
+                mean[c] += v.data[r * 4 + c] / 8.0;
+            }
+        }
+        for r in 0..8 {
+            assert_allclose(out.o.row(r), &mean, 1e-5, 0.0, "uniform");
+        }
+    }
+
+    #[test]
+    fn causal_first_row_is_v0() {
+        let (q, k, v) = qkv(8, 4, 1);
+        let out = standard_forward(&q, &k, &v, &AttnConfig::causal(), &mut Hbm::new());
+        assert_allclose(out.o.row(0), v.row(0), 1e-6, 0.0, "first row");
+    }
+
+    #[test]
+    fn hbm_accesses_quadratic() {
+        // Theorem 2: standard attention -> Theta(Nd + N^2).
+        let (q, k, v) = qkv(64, 8, 2);
+        let mut hbm = Hbm::new();
+        standard_forward(&q, &k, &v, &AttnConfig::default(), &mut hbm);
+        let n = 64u64;
+        let d = 8u64;
+        let expected = 4 * n * n + 4 * n * d; // 4 N^2 + 4 Nd from the 3 steps
+        assert_eq!(hbm.accesses(), expected);
+    }
+
+    #[test]
+    fn grads_match_finite_difference() {
+        let (q, k, v) = qkv(6, 3, 3);
+        let cfg = AttnConfig::default();
+        let dout = Tensor::full(&[6, 3], 1.0);
+        let g = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
+        let eps = 1e-3f32;
+        let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
+            standard_forward(q_, k_, v_, &cfg, &mut Hbm::new()).o.data.iter().sum()
+        };
+        for (which, (x, gx)) in [(0, (&q, &g.dq)), (1, (&k, &g.dk)), (2, (&v, &g.dv))] {
+            for idx in [0usize, 7, 17] {
+                let mut xp = x.clone();
+                xp.data[idx] += eps;
+                let mut xm = x.clone();
+                xm.data[idx] -= eps;
+                let (fp, fm) = match which {
+                    0 => (f(&xp, &k, &v), f(&xm, &k, &v)),
+                    1 => (f(&q, &xp, &v), f(&q, &xm, &v)),
+                    _ => (f(&q, &k, &xp), f(&q, &k, &xm)),
+                };
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = gx.data[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 + 0.05 * an.abs(),
+                    "which={which} idx={idx}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Shared bench harness: wall-clock measurement (median-of-k), result
+//! directories, and the paper-vs-model comparison rows every bench target
+//! prints.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Median wall time in seconds of `k` runs of `f` (after one warmup).
+pub fn median_time<F: FnMut()>(k: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..k.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+/// Where bench CSVs are written.
+pub fn out_dir() -> PathBuf {
+    let p = PathBuf::from("bench_out");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Format an optional ms cell ("-" for OOM/unsupported, like the paper).
+pub fn ms_cell(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x >= 100.0 => format!("{x:.0}"),
+        Some(x) if x >= 10.0 => format!("{x:.1}"),
+        Some(x) => format!("{x:.2}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Geometric mean (used for the LRA overall speedup, App. E.3).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_time_positive() {
+        let t = median_time(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn ms_cell_formats() {
+        assert_eq!(ms_cell(None), "-");
+        assert_eq!(ms_cell(Some(0.43)), "0.43");
+        assert_eq!(ms_cell(Some(41.7)), "41.7");
+        assert_eq!(ms_cell(Some(9341.3)), "9341");
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,71 @@
+//! Training configuration + LR schedule (linear warmup, cosine decay —
+//! the schedule the paper's GPT-2 recipe uses, scaled down).
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Manifest model tag, e.g. "gpt_flash" or "cls_linformer".
+    pub model: String,
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub lr_max: f64,
+    pub lr_min: f64,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "gpt_flash".to_string(),
+            steps: 200,
+            warmup_steps: 20,
+            lr_max: 3e-3,
+            lr_min: 3e-4,
+            eval_every: 25,
+            seed: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// LR at step t (1-based): linear warmup then cosine decay to lr_min.
+    pub fn lr_at(&self, t: usize) -> f64 {
+        if t <= self.warmup_steps {
+            return self.lr_max * t as f64 / self.warmup_steps.max(1) as f64;
+        }
+        let span = (self.steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let frac = ((t - self.warmup_steps) as f64 / span).min(1.0);
+        self.lr_min
+            + 0.5 * (self.lr_max - self.lr_min) * (1.0 + (std::f64::consts::PI * frac).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let c = TrainConfig { warmup_steps: 10, lr_max: 1.0, lr_min: 0.0, steps: 100, ..Default::default() };
+        assert!((c.lr_at(5) - 0.5).abs() < 1e-9);
+        assert!((c.lr_at(10) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let c = TrainConfig { warmup_steps: 10, lr_max: 1.0, lr_min: 0.1, steps: 100, ..Default::default() };
+        assert!((c.lr_at(100) - 0.1).abs() < 1e-6);
+        assert!(c.lr_at(50) < 1.0 && c.lr_at(50) > 0.1);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let c = TrainConfig { warmup_steps: 5, steps: 50, ..Default::default() };
+        let mut prev = f64::INFINITY;
+        for t in 6..=50 {
+            let lr = c.lr_at(t);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+}

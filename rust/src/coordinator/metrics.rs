@@ -1,0 +1,126 @@
+//! Training metrics: loss/accuracy history, EMA smoothing, step timing,
+//! CSV export for the loss curves recorded in EXPERIMENTS.md.
+
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub step: usize,
+    pub loss: f64,
+    pub acc: Option<f64>,
+    pub lr: f64,
+    pub step_seconds: f64,
+}
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub name: String,
+    pub points: Vec<Point>,
+    pub ema_loss: f64,
+    ema_beta: f64,
+    started: Instant,
+    last_step: Instant,
+}
+
+impl Metrics {
+    pub fn new(name: &str) -> Metrics {
+        Metrics {
+            name: name.to_string(),
+            points: Vec::new(),
+            ema_loss: f64::NAN,
+            ema_beta: 0.9,
+            started: Instant::now(),
+            last_step: Instant::now(),
+        }
+    }
+
+    pub fn record(&mut self, step: usize, loss: f64, acc: Option<f64>, lr: f64) {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last_step).as_secs_f64();
+        self.last_step = now;
+        self.ema_loss = if self.ema_loss.is_nan() {
+            loss
+        } else {
+            self.ema_beta * self.ema_loss + (1.0 - self.ema_beta) * loss
+        };
+        self.points.push(Point { step, loss, acc, lr, step_seconds: dt });
+    }
+
+    pub fn first_loss(&self) -> Option<f64> {
+        self.points.first().map(|p| p.loss)
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Mean step time over the last half of training (post-warmup).
+    pub fn steady_step_seconds(&self) -> f64 {
+        let half = &self.points[self.points.len() / 2..];
+        if half.is_empty() {
+            return 0.0;
+        }
+        half.iter().map(|p| p.step_seconds).sum::<f64>() / half.len() as f64
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,acc,lr,step_seconds")?;
+        for p in &self.points {
+            writeln!(
+                f,
+                "{},{:.6},{},{:.6e},{:.4}",
+                p.step,
+                p.loss,
+                p.acc.map(|a| format!("{a:.4}")).unwrap_or_default(),
+                p.lr,
+                p.step_seconds
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_smooths() {
+        let mut m = Metrics::new("t");
+        m.record(1, 10.0, None, 1e-3);
+        m.record(2, 0.0, None, 1e-3);
+        assert!((m.ema_loss - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn history_ordered() {
+        let mut m = Metrics::new("t");
+        for s in 1..=5 {
+            m.record(s, 5.0 - s as f64, None, 1e-3);
+        }
+        assert_eq!(m.first_loss(), Some(4.0));
+        assert_eq!(m.last_loss(), Some(0.0));
+        assert_eq!(m.points.len(), 5);
+    }
+
+    #[test]
+    fn csv_writes(){
+        let mut m = Metrics::new("t");
+        m.record(1, 1.0, Some(0.5), 1e-3);
+        let p = std::env::temp_dir().join("flashattn_metrics_test.csv");
+        m.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("step,loss"));
+        assert!(s.lines().count() == 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: the training/serving driver that owns the event loop.
+//!
+//! FlashAttention's contribution lives at L1/L2 (the kernel), so per the
+//! architecture this layer is a driver: it loads the AOT train-step
+//! executables, owns parameters/optimizer state as host values fed back
+//! each step, runs the data pipeline and LR schedule, logs metrics, and
+//! serves batched inference from the logits artifact.
+
+pub mod config;
+pub mod metrics;
+pub mod server;
+pub mod tasks;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use metrics::Metrics;
+pub use trainer::{ClsTrainer, LmTrainer};

@@ -1,0 +1,132 @@
+//! Minimal batched-inference server demo over the logits artifact: a
+//! request queue, greedy/temperature sampling, and latency/throughput
+//! accounting. Demonstrates the "Python never on the request path"
+//! property of the stack: serving is a loop of PJRT executions.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::trainer::LmTrainer;
+use crate::runtime::Runtime;
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub prompt: String,
+    pub text: String,
+    pub tokens_generated: usize,
+    pub latency_ms: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub tokens: usize,
+    pub total_ms: f64,
+}
+
+impl ServeStats {
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.total_ms == 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / (self.total_ms / 1e3)
+        }
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_ms / self.requests as f64
+        }
+    }
+}
+
+pub struct Server {
+    pub trainer: LmTrainer,
+    pub temperature: f32,
+    pub stats: ServeStats,
+    rng: SplitMix64,
+}
+
+impl Server {
+    pub fn new(trainer: LmTrainer) -> Server {
+        Server { trainer, temperature: 0.8, stats: ServeStats::default(), rng: SplitMix64::new(0x5EED) }
+    }
+
+    /// Sample the next byte from logits at `position` with temperature.
+    fn sample(&mut self, logits: &[f32], vocab: usize) -> i32 {
+        if self.temperature <= 0.0 {
+            return logits
+                .iter()
+                .take(vocab)
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0);
+        }
+        let inv_t = 1.0 / self.temperature;
+        let mx = logits.iter().take(vocab).cloned().fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f32> = logits
+            .iter()
+            .take(vocab)
+            .map(|&l| ((l - mx) * inv_t).exp())
+            .collect();
+        let total: f32 = weights.iter().sum();
+        let mut r = self.rng.next_f32() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i as i32;
+            }
+        }
+        (vocab - 1) as i32
+    }
+
+    /// Generate `max_new` bytes continuing `prompt` (sliding-window ctx).
+    pub fn complete(&mut self, rt: &mut Runtime, prompt: &str, max_new: usize) -> Result<Completion> {
+        let n_ctx = self.trainer.n_ctx;
+        let t0 = Instant::now();
+        let mut tokens: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();
+        for _ in 0..max_new {
+            // Left-pad/truncate to the fixed artifact window.
+            let start = tokens.len().saturating_sub(n_ctx);
+            let mut window: Vec<i32> = vec![32; n_ctx.saturating_sub(tokens.len())];
+            window.extend(&tokens[start..]);
+            let pos = (tokens.len() - start) + n_ctx.saturating_sub(tokens.len()) - 1;
+            let logits = self.trainer.logits(rt, &window)?;
+            let data = logits.as_f32()?;
+            let vocab = logits.shape()[2];
+            let row = &data[pos * vocab..(pos + 1) * vocab];
+            let next = self.sample(row, vocab);
+            tokens.push(next);
+        }
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.requests += 1;
+        self.stats.tokens += max_new;
+        self.stats.total_ms += latency_ms;
+        let text: String = tokens
+            .iter()
+            .skip(prompt.len())
+            .map(|&t| {
+                let b = t.clamp(0, 255) as u8;
+                if (32..127).contains(&b) { b as char } else { '.' }
+            })
+            .collect();
+        Ok(Completion { prompt: prompt.to_string(), text, tokens_generated: max_new, latency_ms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = ServeStats { requests: 4, tokens: 400, total_ms: 2000.0 };
+        assert_eq!(s.tokens_per_second(), 200.0);
+        assert_eq!(s.mean_latency_ms(), 500.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Experiment drivers wiring datasets to trainers — the building blocks the
+//! bench targets (Tables 3/5/6) call.
+
+use anyhow::Result;
+
+use super::config::TrainConfig;
+use super::trainer::ClsTrainer;
+use crate::data::batch::ClsDataset;
+use crate::data::image::ImageCls;
+use crate::data::listops::ListOps;
+use crate::data::pathfinder::Pathfinder;
+use crate::data::retrieval::Retrieval;
+use crate::data::textcls::TextCls;
+use crate::runtime::Runtime;
+
+/// Result of one (model, task) fine-tune.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub model: String,
+    pub task: &'static str,
+    pub accuracy: f64,
+    pub eval_loss: f64,
+    pub seconds: f64,
+    pub ms_per_step: f64,
+}
+
+/// Train `model` on `ds` for `steps` steps and evaluate.
+pub fn run_task(
+    rt: &mut Runtime,
+    model: &str,
+    ds: &dyn ClsDataset,
+    steps: usize,
+    seed: u64,
+) -> Result<TaskResult> {
+    let cfg = TrainConfig {
+        model: model.to_string(),
+        steps,
+        warmup_steps: (steps / 10).max(1),
+        lr_max: 2e-3,
+        lr_min: 2e-4,
+        eval_every: (steps / 4).max(1),
+        seed,
+    };
+    let mut tr = ClsTrainer::new(rt, cfg)?;
+    let t0 = std::time::Instant::now();
+    tr.train(rt, ds)?;
+    let seconds = t0.elapsed().as_secs_f64();
+    let (eval_loss, accuracy) = tr.eval(rt, ds, 8)?;
+    Ok(TaskResult {
+        model: model.to_string(),
+        task: ds.name(),
+        accuracy,
+        eval_loss,
+        seconds,
+        ms_per_step: tr.metrics.steady_step_seconds() * 1e3,
+    })
+}
+
+/// The LRA-style task suite at the classifier context length.
+pub fn lra_tasks(n_ctx: usize) -> Vec<Box<dyn ClsDataset>> {
+    vec![
+        Box::new(ListOps::default()),
+        Box::new(TextCls::default()),
+        Box::new(Retrieval::default()),
+        Box::new(ImageCls::for_seq(n_ctx)),
+        Box::new(Pathfinder::for_seq(n_ctx)),
+    ]
+}
+
+/// Chance accuracy for a dataset (the Table 6 "random performance" bar).
+pub fn chance_accuracy(ds: &dyn ClsDataset) -> f64 {
+    1.0 / ds.n_classes() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_all_five_lra_tasks() {
+        let tasks = lra_tasks(128);
+        assert_eq!(tasks.len(), 5);
+        let names: Vec<_> = tasks.iter().map(|t| t.name()).collect();
+        assert_eq!(names, vec!["ListOps", "Text", "Retrieval", "Image", "Pathfinder"]);
+    }
+
+    #[test]
+    fn chance_levels() {
+        assert_eq!(chance_accuracy(&ListOps::default()), 0.1);
+        assert_eq!(chance_accuracy(&TextCls::default()), 0.5);
+    }
+}

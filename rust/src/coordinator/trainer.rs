@@ -1,0 +1,308 @@
+//! Training loops over the AOT artifacts. One PJRT call per step: the
+//! fused train-step executable takes (params, m, v, batch, lr, t) and
+//! returns (params', m', v', loss[, acc]); the coordinator owns the state
+//! vectors and feeds them back — Python never runs.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::config::TrainConfig;
+use super::metrics::Metrics;
+use crate::data::batch::{Batch, ClsDataset};
+use crate::data::corpus::Corpus;
+use crate::runtime::{Runtime, Value};
+use crate::util::rng::SplitMix64;
+
+/// Shared state-holding core for both trainers.
+struct ModelState {
+    tag: String,
+    params: Vec<Value>,
+    m: Vec<Value>,
+    v: Vec<Value>,
+    n_param_tensors: usize,
+    step: usize,
+}
+
+impl ModelState {
+    fn init(rt: &mut Runtime, tag: &str, seed: i32) -> Result<ModelState> {
+        let info = rt.manifest.model(tag)?.clone();
+        let n = info.param_names.len();
+        let params = rt
+            .run(&format!("{tag}_init"), &[Value::scalar_i32(seed)])
+            .with_context(|| format!("init {tag}"))?;
+        ensure!(params.len() == n, "init returned {} tensors, expected {n}", params.len());
+        let zeros: Vec<Value> = params
+            .iter()
+            .map(|p| Value::zeros_like_shape(p.shape()))
+            .collect();
+        Ok(ModelState { tag: tag.to_string(), params, m: zeros.clone(), v: zeros, n_param_tensors: n, step: 0 })
+    }
+
+    /// Assemble (params ++ m ++ v ++ extras) and apply the returned state.
+    fn step_with(&mut self, rt: &mut Runtime, extras: Vec<Value>, n_scalar_outputs: usize) -> Result<Vec<f64>> {
+        self.step += 1;
+        let mut inputs =
+            Vec::with_capacity(3 * self.n_param_tensors + extras.len());
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.extend(extras);
+        let mut out = rt.run(&format!("{}_train_step", self.tag), &inputs)?;
+        let n = self.n_param_tensors;
+        ensure!(out.len() == 3 * n + n_scalar_outputs, "train_step arity");
+        let scalars: Vec<f64> = out[3 * n..]
+            .iter()
+            .map(|v| v.scalar().map(|x| x as f64))
+            .collect::<Result<_>>()?;
+        out.truncate(3 * n);
+        let v = out.split_off(2 * n);
+        let m = out.split_off(n);
+        self.params = out;
+        self.m = m;
+        self.v = v;
+        Ok(scalars)
+    }
+
+    /// Save parameters to a simple binary checkpoint (name/shape/data).
+    fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write as _;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"FACK0001")?;
+        f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for p in &self.params {
+            let data = p.as_f32()?;
+            f.write_all(&(p.shape().len() as u32).to_le_bytes())?;
+            for &d in p.shape() {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, path: &Path) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        ensure!(&bytes[..8] == b"FACK0001", "bad checkpoint magic");
+        let mut off = 8usize;
+        let rd_u32 = |b: &[u8], o: &mut usize| {
+            let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
+            *o += 4;
+            v
+        };
+        let count = rd_u32(&bytes, &mut off) as usize;
+        ensure!(count == self.params.len(), "checkpoint tensor count mismatch");
+        let mut params = Vec::with_capacity(count);
+        for i in 0..count {
+            let rank = rd_u32(&bytes, &mut off) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(rd_u32(&bytes, &mut off) as usize);
+            }
+            ensure!(shape == self.params[i].shape(), "checkpoint shape mismatch at tensor {i}");
+            let n: usize = shape.iter().product();
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+                off += 4;
+            }
+            params.push(Value::F32 { shape, data });
+        }
+        self.params = params;
+        Ok(())
+    }
+}
+
+/// Causal-LM trainer over a byte corpus (`gpt_*` artifacts).
+pub struct LmTrainer {
+    state: ModelState,
+    pub cfg: TrainConfig,
+    pub metrics: Metrics,
+    pub batch: usize,
+    pub n_ctx: usize,
+    rng: SplitMix64,
+}
+
+impl LmTrainer {
+    pub fn new(rt: &mut Runtime, cfg: TrainConfig) -> Result<LmTrainer> {
+        let info = rt.manifest.model(&cfg.model)?;
+        let batch = info.cfg_usize("batch").context("model batch")?;
+        let n_ctx = info.cfg_usize("n_ctx").context("model n_ctx")?;
+        let state = ModelState::init(rt, &cfg.model.clone(), cfg.seed as i32)?;
+        Ok(LmTrainer {
+            state,
+            metrics: Metrics::new(&cfg.model),
+            batch,
+            n_ctx,
+            rng: SplitMix64::new(cfg.seed ^ 0xBEEF),
+            cfg,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.state.params.iter().map(Value::numel).sum()
+    }
+
+    /// One fused training step on a batch of [batch, n_ctx+1] tokens.
+    pub fn step(&mut self, rt: &mut Runtime, batch: &Batch) -> Result<f64> {
+        ensure!(batch.seq == self.n_ctx + 1, "LM batch must be n_ctx+1 tokens");
+        let lr = self.cfg.lr_at(self.state.step + 1) as f32;
+        let t = (self.state.step + 1) as f32;
+        let extras = vec![
+            Value::I32 { shape: vec![batch.batch, batch.seq], data: batch.tokens.clone() },
+            Value::F32 { shape: vec![], data: vec![lr] },
+            Value::F32 { shape: vec![], data: vec![t] },
+        ];
+        let scalars = self.state.step_with(rt, extras, 1)?;
+        let loss = scalars[0];
+        self.metrics.record(self.state.step, loss, None, lr as f64);
+        Ok(loss)
+    }
+
+    /// Full training run over the corpus; returns (first, last) loss.
+    pub fn train(&mut self, rt: &mut Runtime, corpus: &Corpus) -> Result<(f64, f64)> {
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for s in 0..self.cfg.steps {
+            let batch = corpus.lm_batch(self.batch, self.n_ctx, &mut self.rng);
+            let loss = self.step(rt, &batch)?;
+            if s == 0 {
+                first = loss;
+            }
+            last = loss;
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+                println!(
+                    "[{}] step {:>4}  loss {:.4}  ema {:.4}  ({:.0} ms/step)",
+                    self.cfg.model,
+                    s + 1,
+                    loss,
+                    self.metrics.ema_loss,
+                    self.metrics.steady_step_seconds() * 1e3
+                );
+            }
+        }
+        Ok((first, last))
+    }
+
+    /// Held-out loss via the eval artifact.
+    pub fn eval_loss(&mut self, rt: &mut Runtime, batch: &Batch) -> Result<f64> {
+        let mut inputs = self.state.params.clone();
+        inputs.push(Value::I32 { shape: vec![batch.batch, batch.seq], data: batch.tokens.clone() });
+        let out = rt.run(&format!("{}_eval_loss", self.cfg.model), &inputs)?;
+        Ok(out[0].scalar()? as f64)
+    }
+
+    /// Next-token logits for a single [1, n_ctx] prompt (serving path).
+    pub fn logits(&mut self, rt: &mut Runtime, tokens: &[i32]) -> Result<Value> {
+        ensure!(tokens.len() == self.n_ctx, "prompt must be exactly n_ctx tokens");
+        let mut inputs = self.state.params.clone();
+        inputs.push(Value::I32 { shape: vec![1, self.n_ctx], data: tokens.to_vec() });
+        let mut out = rt.run(&format!("{}_logits", self.cfg.model), &inputs)?;
+        Ok(out.remove(0))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.state.save(path)
+    }
+
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        self.state.load(path)
+    }
+}
+
+/// Classifier trainer for the LRA-style tasks (`cls_*`, `longdoc_*`).
+pub struct ClsTrainer {
+    state: ModelState,
+    pub cfg: TrainConfig,
+    pub metrics: Metrics,
+    pub batch: usize,
+    pub n_ctx: usize,
+    rng: SplitMix64,
+}
+
+impl ClsTrainer {
+    pub fn new(rt: &mut Runtime, cfg: TrainConfig) -> Result<ClsTrainer> {
+        let info = rt.manifest.model(&cfg.model)?;
+        let batch = info.cfg_usize("batch").context("model batch")?;
+        let n_ctx = info.cfg_usize("n_ctx").context("model n_ctx")?;
+        let state = ModelState::init(rt, &cfg.model.clone(), cfg.seed as i32)?;
+        Ok(ClsTrainer {
+            state,
+            metrics: Metrics::new(&cfg.model),
+            batch,
+            n_ctx,
+            rng: SplitMix64::new(cfg.seed ^ 0xC1A55),
+            cfg,
+        })
+    }
+
+    pub fn step(&mut self, rt: &mut Runtime, batch: &Batch) -> Result<(f64, f64)> {
+        ensure!(batch.seq == self.n_ctx, "cls batch must be n_ctx tokens");
+        let lr = self.cfg.lr_at(self.state.step + 1) as f32;
+        let t = (self.state.step + 1) as f32;
+        let extras = vec![
+            Value::I32 { shape: vec![batch.batch, batch.seq], data: batch.tokens.clone() },
+            Value::I32 { shape: vec![batch.batch], data: batch.labels.clone() },
+            Value::F32 { shape: vec![], data: vec![lr] },
+            Value::F32 { shape: vec![], data: vec![t] },
+        ];
+        let scalars = self.state.step_with(rt, extras, 2)?;
+        self.metrics.record(self.state.step, scalars[0], Some(scalars[1]), lr as f64);
+        Ok((scalars[0], scalars[1]))
+    }
+
+    /// Train on a synthetic dataset; returns mean training accuracy over
+    /// the last quarter of steps (a stable proxy for held-out accuracy
+    /// since every batch is freshly generated — nothing is memorised).
+    pub fn train(&mut self, rt: &mut Runtime, ds: &dyn ClsDataset) -> Result<f64> {
+        for s in 0..self.cfg.steps {
+            let batch = ds.batch(self.batch, self.n_ctx, &mut self.rng);
+            let (loss, acc) = self.step(rt, &batch)?;
+            if self.cfg.eval_every > 0 && (s + 1) % self.cfg.eval_every == 0 {
+                println!(
+                    "[{} on {}] step {:>4}  loss {:.4}  acc {:.3}",
+                    self.cfg.model,
+                    ds.name(),
+                    s + 1,
+                    loss,
+                    acc
+                );
+            }
+        }
+        Ok(self.tail_accuracy())
+    }
+
+    /// Mean accuracy over the last 25% of recorded steps.
+    pub fn tail_accuracy(&self) -> f64 {
+        let pts = &self.metrics.points;
+        if pts.is_empty() {
+            return 0.0;
+        }
+        let tail = &pts[pts.len() - pts.len() / 4 - 1..];
+        tail.iter().filter_map(|p| p.acc).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Held-out evaluation on fresh batches.
+    pub fn eval(&mut self, rt: &mut Runtime, ds: &dyn ClsDataset, batches: usize) -> Result<(f64, f64)> {
+        let mut tot_loss = 0.0;
+        let mut tot_acc = 0.0;
+        for _ in 0..batches {
+            let batch = ds.batch(self.batch, self.n_ctx, &mut self.rng);
+            let mut inputs = self.state.params.clone();
+            inputs.push(Value::I32 { shape: vec![batch.batch, batch.seq], data: batch.tokens });
+            inputs.push(Value::I32 { shape: vec![batch.batch], data: batch.labels });
+            let out = rt.run(&format!("{}_eval", self.cfg.model), &inputs)?;
+            tot_loss += out[0].scalar()? as f64;
+            tot_acc += out[1].scalar()? as f64;
+        }
+        Ok((tot_loss / batches as f64, tot_acc / batches as f64))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.state.save(path)
+    }
+}

@@ -1,0 +1,75 @@
+//! Shared batch containers and the classification-dataset interface.
+
+use crate::util::rng::SplitMix64;
+
+/// A batch of token sequences (+ optional labels) in artifact layout.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    /// Row-major [batch, seq] token ids.
+    pub tokens: Vec<i32>,
+    /// [batch] class labels (empty for LM batches).
+    pub labels: Vec<i32>,
+}
+
+impl Batch {
+    pub fn new_lm(batch: usize, seq: usize, tokens: Vec<i32>) -> Batch {
+        assert_eq!(tokens.len(), batch * seq);
+        Batch { batch, seq, tokens, labels: Vec::new() }
+    }
+
+    pub fn new_cls(batch: usize, seq: usize, tokens: Vec<i32>, labels: Vec<i32>) -> Batch {
+        assert_eq!(tokens.len(), batch * seq);
+        assert_eq!(labels.len(), batch);
+        Batch { batch, seq, tokens, labels }
+    }
+
+    pub fn row(&self, b: usize) -> &[i32] {
+        &self.tokens[b * self.seq..(b + 1) * self.seq]
+    }
+}
+
+/// A generator of labelled sequences for the classifier experiments.
+pub trait ClsDataset {
+    /// Informative name for logs/tables.
+    fn name(&self) -> &'static str;
+    /// Number of classes (labels are 0..n_classes).
+    fn n_classes(&self) -> usize;
+    /// Vocabulary size the tokens are drawn from.
+    fn vocab(&self) -> usize;
+    /// Generate one (tokens, label) example of exactly `seq` tokens.
+    fn sample(&self, seq: usize, rng: &mut SplitMix64) -> (Vec<i32>, i32);
+
+    /// Assemble a batch.
+    fn batch(&self, batch: usize, seq: usize, rng: &mut SplitMix64) -> Batch {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (t, l) = self.sample(seq, rng);
+            assert_eq!(t.len(), seq, "{}: wrong length", self.name());
+            debug_assert!(t.iter().all(|&x| (x as usize) < self.vocab()));
+            tokens.extend_from_slice(&t);
+            labels.push(l);
+        }
+        Batch::new_cls(batch, seq, tokens, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_batch_layout() {
+        let b = Batch::new_lm(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(b.row(0), &[1, 2, 3]);
+        assert_eq!(b.row(1), &[4, 5, 6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_size_panics() {
+        Batch::new_lm(2, 3, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Byte-level language-modelling corpus: a built-in public-domain text
+//! (stand-in for OpenWebText at laptop scale) plus a Markov-expanded
+//! synthetic continuation so windows of any context length are available.
+//! Byte tokenizer => vocab 256, matching the `gpt_*` artifact configs.
+
+use super::batch::Batch;
+use crate::util::rng::SplitMix64;
+
+/// Public-domain seed text (Project Gutenberg openings + common prose).
+const SEED_TEXT: &str = "\
+It is a truth universally acknowledged, that a single man in possession \
+of a good fortune, must be in want of a wife. However little known the \
+feelings or views of such a man may be on his first entering a \
+neighbourhood, this truth is so well fixed in the minds of the \
+surrounding families, that he is considered the rightful property of \
+some one or other of their daughters. \
+Call me Ishmael. Some years ago, never mind how long precisely, having \
+little or no money in my purse, and nothing particular to interest me on \
+shore, I thought I would sail about a little and see the watery part of \
+the world. It is a way I have of driving off the spleen and regulating \
+the circulation. \
+Whether I shall turn out to be the hero of my own life, or whether that \
+station will be held by anybody else, these pages must show. To begin my \
+life with the beginning of my life, I record that I was born on a Friday, \
+at twelve o'clock at night. \
+In the beginning the Universe was created. This has made a lot of people \
+very angry and been widely regarded as a bad move. All happy families \
+are alike; each unhappy family is unhappy in its own way. It was the \
+best of times, it was the worst of times, it was the age of wisdom, it \
+was the age of foolishness, it was the epoch of belief, it was the epoch \
+of incredulity, it was the season of Light, it was the season of \
+Darkness, it was the spring of hope, it was the winter of despair. ";
+
+/// The training corpus: seed text expanded by an order-3 byte Markov chain
+/// to `target_len` bytes, so statistics stay English-like but the model can
+/// always find fresh windows.
+pub struct Corpus {
+    pub bytes: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn builtin(target_len: usize, seed: u64) -> Corpus {
+        let base = SEED_TEXT.as_bytes().to_vec();
+        if target_len <= base.len() {
+            return Corpus { bytes: base };
+        }
+        // Order-3 Markov expansion.
+        let mut rng = SplitMix64::new(seed);
+        let mut out = base.clone();
+        let ctx_of = |bytes: &[u8], i: usize| {
+            (bytes[i] as usize) | (bytes[i + 1] as usize) << 8 | (bytes[i + 2] as usize) << 16
+        };
+        // successor lists keyed by 3-byte context
+        let mut succ: std::collections::HashMap<usize, Vec<u8>> = std::collections::HashMap::new();
+        for i in 0..base.len().saturating_sub(3) {
+            succ.entry(ctx_of(&base, i)).or_default().push(base[i + 3]);
+        }
+        while out.len() < target_len {
+            let i = out.len() - 3;
+            let key = ctx_of(&out, i);
+            let next = match succ.get(&key) {
+                Some(cands) => cands[rng.below(cands.len() as u64) as usize],
+                None => b' ',
+            };
+            out.push(next);
+        }
+        Corpus { bytes: out }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Sample an LM batch of [batch, seq+1] token windows (inputs+targets).
+    pub fn lm_batch(&self, batch: usize, seq: usize, rng: &mut SplitMix64) -> Batch {
+        let window = seq + 1;
+        assert!(self.bytes.len() > window, "corpus shorter than window");
+        let mut tokens = Vec::with_capacity(batch * window);
+        for _ in 0..batch {
+            let start = rng.below((self.bytes.len() - window) as u64) as usize;
+            tokens.extend(self.bytes[start..start + window].iter().map(|&b| b as i32));
+        }
+        Batch::new_lm(batch, window, tokens)
+    }
+
+    /// A deterministic validation batch (fixed offsets, disjoint-ish from
+    /// random training windows in expectation).
+    pub fn eval_batch(&self, batch: usize, seq: usize) -> Batch {
+        let window = seq + 1;
+        let stride = (self.bytes.len() - window) / batch.max(1);
+        let mut tokens = Vec::with_capacity(batch * window);
+        for b in 0..batch {
+            let start = b * stride;
+            tokens.extend(self.bytes[start..start + window].iter().map(|&x| x as i32));
+        }
+        Batch::new_lm(batch, window, tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expands_to_target() {
+        let c = Corpus::builtin(10_000, 0);
+        assert!(c.len() >= 10_000);
+    }
+
+    #[test]
+    fn expansion_is_asciiish() {
+        let c = Corpus::builtin(5_000, 1);
+        let printable = c.bytes.iter().filter(|&&b| (32..127).contains(&b)).count();
+        assert!(printable as f64 / c.len() as f64 > 0.99);
+    }
+
+    #[test]
+    fn lm_batch_shape_and_range() {
+        let c = Corpus::builtin(4_000, 2);
+        let mut rng = SplitMix64::new(3);
+        let b = c.lm_batch(4, 64, &mut rng);
+        assert_eq!(b.batch, 4);
+        assert_eq!(b.seq, 65);
+        assert!(b.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = Corpus::builtin(4_000, 7);
+        let b1 = c.lm_batch(2, 32, &mut SplitMix64::new(9));
+        let b2 = c.lm_batch(2, 32, &mut SplitMix64::new(9));
+        assert_eq!(b1.tokens, b2.tokens);
+    }
+
+    #[test]
+    fn eval_batch_fixed() {
+        let c = Corpus::builtin(4_000, 7);
+        assert_eq!(c.eval_batch(2, 32).tokens, c.eval_batch(2, 32).tokens);
+    }
+}

@@ -1,0 +1,165 @@
+//! ListOps-style task (LRA): evaluate a nested prefix expression over
+//! digits with MAX / MIN / MED / SM (sum mod 10) operators. The label is
+//! the expression's value (10 classes). Long-range structure comes from
+//! deep nesting: the answer depends on tokens far apart.
+//!
+//! Token vocabulary (fits the cls_* artifact vocab of 32):
+//!   0..=9  digits, 10 '[', 11 ']', 12 MAX, 13 MIN, 14 MED, 15 SM, 16 PAD.
+
+use super::batch::ClsDataset;
+use crate::util::rng::SplitMix64;
+
+pub const TOK_OPEN: i32 = 10;
+pub const TOK_CLOSE: i32 = 11;
+pub const TOK_MAX: i32 = 12;
+pub const TOK_MIN: i32 = 13;
+pub const TOK_MED: i32 = 14;
+pub const TOK_SM: i32 = 15;
+pub const TOK_PAD: i32 = 16;
+
+pub struct ListOps {
+    pub max_depth: usize,
+    pub max_args: usize,
+}
+
+impl Default for ListOps {
+    fn default() -> Self {
+        ListOps { max_depth: 4, max_args: 5 }
+    }
+}
+
+impl ListOps {
+    /// Generate one expression tree; returns (tokens, value).
+    fn gen_expr(&self, depth: usize, budget: &mut usize, rng: &mut SplitMix64) -> (Vec<i32>, i32) {
+        // Leaf if out of budget or depth, or randomly.
+        if depth >= self.max_depth || *budget < 8 || rng.next_f32() < 0.35 {
+            let d = rng.below(10) as i32;
+            *budget = budget.saturating_sub(1);
+            return (vec![d], d);
+        }
+        let op = TOK_MAX + rng.below(4) as i32;
+        let n_args = 2 + rng.below((self.max_args - 1) as u64) as usize;
+        let mut toks = vec![TOK_OPEN, op];
+        *budget = budget.saturating_sub(3);
+        let mut vals = Vec::new();
+        for _ in 0..n_args {
+            let (t, v) = self.gen_expr(depth + 1, budget, rng);
+            toks.extend(t);
+            vals.push(v);
+        }
+        toks.push(TOK_CLOSE);
+        let val = match op {
+            TOK_MAX => *vals.iter().max().unwrap(),
+            TOK_MIN => *vals.iter().min().unwrap(),
+            TOK_MED => {
+                let mut s = vals.clone();
+                s.sort();
+                s[s.len() / 2]
+            }
+            _ => vals.iter().sum::<i32>() % 10, // SM
+        };
+        (toks, val)
+    }
+}
+
+impl ClsDataset for ListOps {
+    fn name(&self) -> &'static str {
+        "ListOps"
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn vocab(&self) -> usize {
+        17
+    }
+
+    fn sample(&self, seq: usize, rng: &mut SplitMix64) -> (Vec<i32>, i32) {
+        let mut budget = seq.saturating_sub(4);
+        let (mut toks, val) = self.gen_expr(0, &mut budget, rng);
+        toks.truncate(seq);
+        while toks.len() < seq {
+            toks.push(TOK_PAD);
+        }
+        (toks, val)
+    }
+}
+
+/// Independent evaluator used to cross-check generation (tests).
+pub fn eval_tokens(toks: &[i32]) -> Option<i32> {
+    fn parse(toks: &[i32], pos: &mut usize) -> Option<i32> {
+        let t = *toks.get(*pos)?;
+        *pos += 1;
+        if (0..=9).contains(&t) {
+            return Some(t);
+        }
+        if t != TOK_OPEN {
+            return None;
+        }
+        let op = *toks.get(*pos)?;
+        *pos += 1;
+        let mut vals = Vec::new();
+        while *toks.get(*pos)? != TOK_CLOSE {
+            vals.push(parse(toks, pos)?);
+        }
+        *pos += 1; // consume ']'
+        Some(match op {
+            TOK_MAX => *vals.iter().max()?,
+            TOK_MIN => *vals.iter().min()?,
+            TOK_MED => {
+                let mut s = vals.clone();
+                s.sort();
+                s[s.len() / 2]
+            }
+            TOK_SM => vals.iter().sum::<i32>() % 10,
+            _ => return None,
+        })
+    }
+    let mut pos = 0;
+    parse(toks, &mut pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_independent_evaluator() {
+        let ds = ListOps::default();
+        let mut rng = SplitMix64::new(0);
+        let mut checked = 0;
+        for _ in 0..200 {
+            let (toks, label) = ds.sample(128, &mut rng);
+            // Strip padding for the evaluator.
+            let core: Vec<i32> = toks.iter().cloned().filter(|&t| t != TOK_PAD).collect();
+            if let Some(v) = eval_tokens(&core) {
+                assert_eq!(v, label, "tokens {core:?}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 150, "only {checked} parseable");
+    }
+
+    #[test]
+    fn labels_in_range_and_varied() {
+        let ds = ListOps::default();
+        let mut rng = SplitMix64::new(1);
+        let mut seen = [false; 10];
+        for _ in 0..500 {
+            let (_, l) = ds.sample(64, &mut rng);
+            assert!((0..10).contains(&l));
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8);
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let ds = ListOps::default();
+        let mut rng = SplitMix64::new(2);
+        let (toks, _) = ds.sample(256, &mut rng);
+        assert_eq!(toks.len(), 256);
+        assert!(toks.iter().all(|&t| (t as usize) < ds.vocab()));
+    }
+}

@@ -1,0 +1,25 @@
+//! Synthetic data substrates for the paper's quality experiments
+//! (DESIGN.md §4 substitutions):
+//!
+//! * [`corpus`] — byte-level LM corpus (GPT-2 / Table 2/4 analogue);
+//! * [`listops`] — nested list-operation expressions (LRA ListOps);
+//! * [`textcls`] — long-range byte classification (LRA Text);
+//! * [`retrieval`] — two-document topic matching (LRA Retrieval);
+//! * [`image`] — shape images one pixel per token (LRA Image);
+//! * [`pathfinder`] — connected-path images fed pixel-by-pixel
+//!   (LRA Pathfinder / Path-X / Path-256);
+//! * [`longdoc`] — documents whose label needs evidence spread across the
+//!   whole document (MIMIC-III / ECtHR, Table 5).
+//!
+//! All generators are deterministic given a seed.
+
+pub mod batch;
+pub mod corpus;
+pub mod image;
+pub mod listops;
+pub mod longdoc;
+pub mod pathfinder;
+pub mod retrieval;
+pub mod textcls;
+
+pub use batch::{Batch, ClsDataset};

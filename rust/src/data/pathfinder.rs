@@ -1,0 +1,188 @@
+//! Pathfinder-style task (LRA Pathfinder / Path-X / Path-256): a square
+//! black-and-white image contains dashed curves; two endpoints are marked.
+//! Label: 1 if the endpoints lie on the *same* curve. The image is fed to
+//! the transformer one pixel per token, so an s x s grid is a sequence of
+//! length s² — the paper scales s from 32 (Pathfinder) to 128 (Path-X,
+//! 16K tokens) and 256 (Path-256, 64K tokens); we scale s to the artifact
+//! context lengths (s=11 -> 121 tokens, s=16 -> 256, s=22 -> 484).
+//!
+//! vocab: 0 empty, 1 path pixel, 2 endpoint marker.
+
+use super::batch::ClsDataset;
+use crate::util::rng::SplitMix64;
+
+pub struct Pathfinder {
+    pub side: usize,
+    /// Number of distractor curves.
+    pub n_distractors: usize,
+}
+
+impl Pathfinder {
+    pub fn for_seq(seq: usize) -> Pathfinder {
+        let side = (seq as f64).sqrt().floor() as usize;
+        Pathfinder { side, n_distractors: 2 }
+    }
+}
+
+fn walk(
+    grid: &mut [i32],
+    side: usize,
+    start: (usize, usize),
+    len: usize,
+    rng: &mut SplitMix64,
+) -> (usize, usize) {
+    let (mut r, mut c) = start;
+    grid[r * side + c] = 1;
+    let mut dir = rng.below(4) as i32;
+    for _ in 0..len {
+        // Mostly continue straight; occasionally turn — curve-like walks.
+        if rng.next_f32() < 0.35 {
+            dir = (dir + if rng.next_f32() < 0.5 { 1 } else { 3 }) % 4;
+        }
+        let (dr, dc): (i32, i32) = match dir {
+            0 => (0, 1),
+            1 => (1, 0),
+            2 => (0, -1),
+            _ => (-1, 0),
+        };
+        let nr = r as i32 + dr;
+        let nc = c as i32 + dc;
+        if nr < 0 || nc < 0 || nr >= side as i32 || nc >= side as i32 {
+            dir = (dir + 2) % 4; // bounce
+            continue;
+        }
+        r = nr as usize;
+        c = nc as usize;
+        grid[r * side + c] = 1;
+    }
+    (r, c)
+}
+
+impl ClsDataset for Pathfinder {
+    fn name(&self) -> &'static str {
+        "Pathfinder"
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn vocab(&self) -> usize {
+        3
+    }
+
+    fn sample(&self, seq: usize, rng: &mut SplitMix64) -> (Vec<i32>, i32) {
+        let side = self.side;
+        assert!(side * side <= seq, "side {side} too large for seq {seq}");
+        let mut grid = vec![0i32; side * side];
+        let path_len = side * 2;
+        let rand_cell =
+            |rng: &mut SplitMix64| (rng.below(side as u64) as usize, rng.below(side as u64) as usize);
+
+        let label = (rng.next_f32() < 0.5) as i32;
+        let a = rand_cell(rng);
+        let end_a = walk(&mut grid, side, a, path_len, rng);
+        let (e1, e2) = if label == 1 {
+            // Positive: endpoints on the same curve.
+            (a, end_a)
+        } else {
+            // Negative: second endpoint on a *different* curve.
+            let mut b = rand_cell(rng);
+            while grid[b.0 * side + b.1] == 1 {
+                b = rand_cell(rng);
+            }
+            let _ = walk(&mut grid, side, b, path_len, rng);
+            (a, b)
+        };
+        for _ in 0..self.n_distractors {
+            let s = rand_cell(rng);
+            let _ = walk(&mut grid, side, s, path_len / 2, rng);
+        }
+        grid[e1.0 * side + e1.1] = 2;
+        grid[e2.0 * side + e2.1] = 2;
+
+        let mut toks = grid;
+        toks.resize(seq, 0);
+        (toks, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_two_endpoints() {
+        let ds = Pathfinder::for_seq(128);
+        let mut rng = SplitMix64::new(0);
+        for _ in 0..50 {
+            let (toks, _) = ds.sample(128, &mut rng);
+            assert_eq!(toks.iter().filter(|&&t| t == 2).count(), 2);
+        }
+    }
+
+    #[test]
+    fn balanced_and_in_vocab() {
+        let ds = Pathfinder::for_seq(128);
+        let mut rng = SplitMix64::new(1);
+        let mut ones = 0;
+        for _ in 0..300 {
+            let (toks, l) = ds.sample(128, &mut rng);
+            assert!(toks.iter().all(|&t| (0..3).contains(&t)));
+            ones += l;
+        }
+        assert!((90..210).contains(&ones), "{ones}");
+    }
+
+    #[test]
+    fn side_scales_with_seq() {
+        assert_eq!(Pathfinder::for_seq(121).side, 11);
+        assert_eq!(Pathfinder::for_seq(256).side, 16);
+        assert_eq!(Pathfinder::for_seq(512).side, 22);
+    }
+
+    #[test]
+    fn positive_examples_have_connected_endpoints() {
+        // BFS over path pixels: endpoints must be connected when label=1.
+        let ds = Pathfinder { side: 11, n_distractors: 0 };
+        let mut rng = SplitMix64::new(2);
+        let mut pos_checked = 0;
+        for _ in 0..100 {
+            let (toks, label) = ds.sample(128, &mut rng);
+            if label != 1 {
+                continue;
+            }
+            let side = 11;
+            let idx: Vec<usize> = toks
+                .iter()
+                .take(side * side)
+                .enumerate()
+                .filter(|(_, &t)| t == 2)
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(idx.len(), 2);
+            // BFS from idx[0] over nonzero cells.
+            let mut seen = vec![false; side * side];
+            let mut queue = vec![idx[0]];
+            seen[idx[0]] = true;
+            while let Some(p) = queue.pop() {
+                let (r, c) = (p / side, p % side);
+                for (dr, dc) in [(0i32, 1i32), (1, 0), (0, -1), (-1, 0)] {
+                    let nr = r as i32 + dr;
+                    let nc = c as i32 + dc;
+                    if nr < 0 || nc < 0 || nr >= side as i32 || nc >= side as i32 {
+                        continue;
+                    }
+                    let np = nr as usize * side + nc as usize;
+                    if !seen[np] && toks[np] != 0 {
+                        seen[np] = true;
+                        queue.push(np);
+                    }
+                }
+            }
+            assert!(seen[idx[1]], "positive example endpoints disconnected");
+            pos_checked += 1;
+        }
+        assert!(pos_checked > 20);
+    }
+}

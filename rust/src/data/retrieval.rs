@@ -1,0 +1,114 @@
+//! Retrieval task (LRA Retrieval analogue): two documents are concatenated
+//! with a separator; the label is whether they share the same "topic key".
+//! Each document embeds its topic as a sparse motif of key-dependent
+//! tokens, so the model must compare information across the two halves —
+//! the long-range *cross-document* dependency the LRA task tests.
+
+use super::batch::ClsDataset;
+use crate::util::rng::SplitMix64;
+
+pub struct Retrieval {
+    pub n_topics: usize,
+    /// Motif tokens embedded per document half.
+    pub n_motif: usize,
+}
+
+impl Default for Retrieval {
+    fn default() -> Self {
+        Retrieval { n_topics: 8, n_motif: 6 }
+    }
+}
+
+/// vocab: 0..=15 filler, 16..=23 topic motif tokens, 24 separator.
+const MOTIF_BASE: i32 = 16;
+const SEP: i32 = 24;
+
+impl Retrieval {
+    fn fill_half(&self, out: &mut [i32], topic: usize, rng: &mut SplitMix64) {
+        for t in out.iter_mut() {
+            *t = rng.below(16) as i32;
+        }
+        let len = out.len();
+        let stride = (len / self.n_motif).max(1);
+        for i in 0..self.n_motif {
+            let jitter = rng.below(stride as u64) as usize;
+            let pos = (i * stride + jitter).min(len - 1);
+            out[pos] = MOTIF_BASE + topic as i32;
+        }
+    }
+}
+
+impl ClsDataset for Retrieval {
+    fn name(&self) -> &'static str {
+        "Retrieval"
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn vocab(&self) -> usize {
+        25
+    }
+
+    fn sample(&self, seq: usize, rng: &mut SplitMix64) -> (Vec<i32>, i32) {
+        let half = (seq - 1) / 2;
+        let label = (rng.next_f32() < 0.5) as i32;
+        let topic_a = rng.below(self.n_topics as u64) as usize;
+        let topic_b = if label == 1 {
+            topic_a
+        } else {
+            let mut t = rng.below(self.n_topics as u64) as usize;
+            while t == topic_a {
+                t = rng.below(self.n_topics as u64) as usize;
+            }
+            t
+        };
+        let mut toks = vec![0i32; seq];
+        {
+            let (a, rest) = toks.split_at_mut(half);
+            self.fill_half(a, topic_a, rng);
+            rest[0] = SEP;
+            let blen = rest.len() - 1;
+            self.fill_half(&mut rest[1..1 + blen], topic_b, rng);
+        }
+        (toks, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_matches_topic_agreement() {
+        let ds = Retrieval::default();
+        let mut rng = SplitMix64::new(0);
+        for _ in 0..100 {
+            let (toks, label) = ds.sample(129, &mut rng);
+            let sep = toks.iter().position(|&t| t == SEP).unwrap();
+            let topic = |half: &[i32]| {
+                half.iter().find(|&&t| t >= MOTIF_BASE).map(|&t| t - MOTIF_BASE)
+            };
+            let ta = topic(&toks[..sep]).unwrap();
+            let tb = topic(&toks[sep + 1..]).unwrap();
+            assert_eq!((ta == tb) as i32, label);
+        }
+    }
+
+    #[test]
+    fn balanced() {
+        let ds = Retrieval::default();
+        let mut rng = SplitMix64::new(1);
+        let ones: i32 = (0..600).map(|_| ds.sample(65, &mut rng).1).sum();
+        assert!((200..400).contains(&ones), "{ones}");
+    }
+
+    #[test]
+    fn in_vocab() {
+        let ds = Retrieval::default();
+        let mut rng = SplitMix64::new(2);
+        let (toks, _) = ds.sample(128, &mut rng);
+        assert!(toks.iter().all(|&t| (t as usize) < ds.vocab()));
+    }
+}

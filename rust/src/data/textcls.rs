@@ -1,0 +1,96 @@
+//! Byte-classification task (LRA Text analogue): the label is decided by
+//! "sentiment" marker tokens scattered uniformly over the whole sequence
+//! amid filler noise — a model must aggregate signal across the full range
+//! to beat chance, and local-window models degrade as the sequence grows.
+
+use super::batch::ClsDataset;
+use crate::util::rng::SplitMix64;
+
+pub struct TextCls {
+    /// Number of marker tokens hidden in the sequence.
+    pub n_markers: usize,
+}
+
+impl Default for TextCls {
+    fn default() -> Self {
+        TextCls { n_markers: 9 }
+    }
+}
+
+/// vocab: 0..=15 filler, 16 = positive marker, 17 = negative marker.
+const POS: i32 = 16;
+const NEG: i32 = 17;
+
+impl ClsDataset for TextCls {
+    fn name(&self) -> &'static str {
+        "Text"
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+
+    fn vocab(&self) -> usize {
+        18
+    }
+
+    fn sample(&self, seq: usize, rng: &mut SplitMix64) -> (Vec<i32>, i32) {
+        let mut toks: Vec<i32> = (0..seq).map(|_| rng.below(16) as i32).collect();
+        // Majority class decided up-front; markers placed at uniform slots.
+        let label = (rng.next_f32() < 0.5) as i32;
+        let n = self.n_markers.min(seq);
+        let majority = (n / 2) + 1;
+        let mut kinds: Vec<i32> = (0..n)
+            .map(|i| if i < majority { if label == 1 { POS } else { NEG } } else if label == 1 { NEG } else { POS })
+            .collect();
+        rng.shuffle(&mut kinds);
+        // Uniform placement => evidence spans the entire sequence.
+        let stride = seq / n.max(1);
+        for (i, kind) in kinds.into_iter().enumerate() {
+            let jitter = rng.below(stride.max(1) as u64) as usize;
+            let pos = (i * stride + jitter).min(seq - 1);
+            toks[pos] = kind;
+        }
+        (toks, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_recoverable_by_majority() {
+        let ds = TextCls::default();
+        let mut rng = SplitMix64::new(0);
+        for _ in 0..200 {
+            let (toks, label) = ds.sample(128, &mut rng);
+            let pos = toks.iter().filter(|&&t| t == POS).count() as i32;
+            let neg = toks.iter().filter(|&&t| t == NEG).count() as i32;
+            assert_eq!((pos > neg) as i32, label);
+        }
+    }
+
+    #[test]
+    fn markers_spread_across_sequence() {
+        let ds = TextCls::default();
+        let mut rng = SplitMix64::new(1);
+        let (toks, _) = ds.sample(256, &mut rng);
+        let marker_pos: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, &t)| t >= POS)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(marker_pos.first().copied().unwrap_or(256) < 64);
+        assert!(marker_pos.last().copied().unwrap_or(0) > 192);
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let ds = TextCls::default();
+        let mut rng = SplitMix64::new(2);
+        let ones: i32 = (0..1000).map(|_| ds.sample(64, &mut rng).1).sum();
+        assert!((350..650).contains(&ones), "{ones}");
+    }
+}

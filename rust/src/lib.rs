@@ -1,0 +1,26 @@
+//! # flashattn — IO-aware exact attention, reproduced end to end
+//!
+//! A three-layer reproduction of *FlashAttention: Fast and Memory-Efficient
+//! Exact Attention with IO-Awareness* (Dao et al., NeurIPS 2022):
+//!
+//! * **L1** — Pallas kernels (Algorithms 2/4/5) under `python/compile/kernels/`,
+//!   AOT-lowered to HLO text artifacts;
+//! * **L2** — JAX transformer models calling those kernels (`python/compile/`);
+//! * **L3** — this crate: the PJRT runtime that loads and executes the
+//!   artifacts ([`runtime`]), the training/serving coordinator
+//!   ([`coordinator`], [`data`]), pure-Rust mirrors of the paper's
+//!   algorithms with instrumented HBM accounting ([`attn`], [`tensor`]),
+//!   and the GPU memory-hierarchy simulator that regenerates every table
+//!   and figure of the paper's evaluation ([`sim`]).
+//!
+//! See DESIGN.md for the system inventory and per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod attn;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,234 @@
+//! flashattn CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         manifest + artifact summary
+//!   train      [--model gpt_flash --steps 200 ...]       LM training
+//!   train-cls  [--model cls_flash --task listops ...]    classifier training
+//!   serve      [--prompt "..." --max-new 64 ...]         batched inference demo
+//!   sim        [--table fig1|fig3|mem --device a100]     simulator tables
+//!
+//! Benchmarks regenerating every paper table/figure live under
+//! `cargo bench` (rust/benches/); runnable examples under examples/.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+use flashattn::coordinator::server::Server;
+use flashattn::coordinator::{tasks, LmTrainer, TrainConfig};
+use flashattn::data::corpus::Corpus;
+use flashattn::data::listops::ListOps;
+use flashattn::data::longdoc::LongDoc;
+use flashattn::data::pathfinder::Pathfinder;
+use flashattn::data::textcls::TextCls;
+use flashattn::data::ClsDataset;
+use flashattn::runtime::Runtime;
+use flashattn::sim::baselines::{Method, SWEEP_METHODS};
+use flashattn::sim::device::GpuSpec;
+use flashattn::sim::roofline::{BenchConfig, Pass, Roofline};
+use flashattn::util::cli::Args;
+use flashattn::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "train" => train(&args),
+        "train-cls" => train_cls(&args),
+        "serve" => serve(&args),
+        "sim" => sim(&args),
+        _ => {
+            println!(
+                "usage: flashattn <info|train|train-cls|serve|sim> [options]\n\
+                 see `cargo bench` for the paper table/figure reproductions"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn info(args: &Args) -> Result<()> {
+    let mut rt = Runtime::cpu(Path::new(&artifacts_dir(args)))?;
+    println!("platform: {} ({} devices)", rt.client.platform_name(), rt.client.device_count());
+    println!("artifacts: {}", rt.manifest.artifacts.len());
+    let mut t = Table::new("models", &["tag", "attention", "ctx", "params"]);
+    for (name, m) in &rt.manifest.models {
+        t.row(vec![
+            name.clone(),
+            m.cfg_str("attention").unwrap_or("?").to_string(),
+            m.cfg_usize("n_ctx").unwrap_or(0).to_string(),
+            m.n_params.to_string(),
+        ]);
+    }
+    t.print();
+    // Smoke-run the quickstart artifact.
+    let name = "attn_flash_fwd";
+    if rt.manifest.artifacts.contains_key(name) {
+        rt.load(name)?;
+        println!("compiled {name} OK ({:.2}s)", rt.compile_seconds);
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let mut rt = Runtime::cpu(Path::new(&artifacts_dir(args)))?;
+    let cfg = TrainConfig {
+        model: args.get_or("model", "gpt_flash").to_string(),
+        steps: args.get_usize("steps", 200),
+        warmup_steps: args.get_usize("warmup", 20),
+        lr_max: args.get_f64("lr", 3e-3),
+        lr_min: args.get_f64("lr-min", 3e-4),
+        eval_every: args.get_usize("log-every", 25),
+        seed: args.get_usize("seed", 0) as u64,
+    };
+    let corpus = Corpus::builtin(args.get_usize("corpus-bytes", 200_000), 1);
+    let mut tr = LmTrainer::new(&mut rt, cfg)?;
+    println!("model {} — {} parameters", tr.cfg.model, tr.n_params());
+    let (first, last) = tr.train(&mut rt, &corpus)?;
+    let eval = tr.eval_loss(&mut rt, &corpus.eval_batch(tr.batch, tr.n_ctx))?;
+    println!(
+        "done: loss {first:.4} -> {last:.4} (eval {eval:.4}, ppl {:.2}) in {:.1}s",
+        eval.exp(),
+        tr.metrics.total_seconds()
+    );
+    if let Some(csv) = args.get("csv") {
+        tr.metrics.write_csv(Path::new(csv))?;
+        println!("wrote {csv}");
+    }
+    if let Some(ckpt) = args.get("save") {
+        tr.save(Path::new(ckpt))?;
+        println!("saved checkpoint {ckpt}");
+    }
+    Ok(())
+}
+
+fn dataset_by_name(name: &str, n_ctx: usize) -> Result<Box<dyn ClsDataset>> {
+    Ok(match name {
+        "listops" => Box::new(ListOps::default()),
+        "text" => Box::new(TextCls::default()),
+        "pathfinder" => Box::new(Pathfinder::for_seq(n_ctx)),
+        "longdoc" => Box::new(LongDoc::default()),
+        _ => bail!("unknown task {name:?} (listops|text|pathfinder|longdoc)"),
+    })
+}
+
+fn train_cls(args: &Args) -> Result<()> {
+    let mut rt = Runtime::cpu(Path::new(&artifacts_dir(args)))?;
+    let model = args.get_or("model", "cls_flash").to_string();
+    let n_ctx = rt.manifest.model(&model)?.cfg_usize("n_ctx").unwrap_or(128);
+    let ds = dataset_by_name(args.get_or("task", "listops"), n_ctx)?;
+    let steps = args.get_usize("steps", 150);
+    let res = tasks::run_task(&mut rt, &model, ds.as_ref(), steps, args.get_usize("seed", 0) as u64)?;
+    println!(
+        "{} on {}: accuracy {:.3} (chance {:.3}), eval loss {:.4}, {:.0} ms/step, {:.1}s total",
+        res.model,
+        res.task,
+        res.accuracy,
+        tasks::chance_accuracy(ds.as_ref()),
+        res.eval_loss,
+        res.ms_per_step,
+        res.seconds
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let mut rt = Runtime::cpu(Path::new(&artifacts_dir(args)))?;
+    let cfg = TrainConfig {
+        model: args.get_or("model", "gpt_flash").to_string(),
+        steps: args.get_usize("warm-steps", 50),
+        ..Default::default()
+    };
+    let corpus = Corpus::builtin(100_000, 1);
+    let mut tr = LmTrainer::new(&mut rt, cfg)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        tr.load(Path::new(ckpt))?;
+        println!("loaded checkpoint {ckpt}");
+    } else {
+        println!("no --ckpt: warming the model with {} quick steps", tr.cfg.steps);
+        tr.train(&mut rt, &corpus)?;
+    }
+    let mut server = Server::new(tr);
+    let prompt = args.get_or("prompt", "It is a truth ").to_string();
+    let max_new = args.get_usize("max-new", 64);
+    for i in 0..args.get_usize("requests", 3) {
+        let c = server.complete(&mut rt, &prompt, max_new)?;
+        println!("[req {i}] {:.0} ms: {}{}", c.latency_ms, c.prompt, c.text);
+    }
+    println!(
+        "served {} requests, {:.1} tok/s, mean latency {:.0} ms",
+        server.stats.requests,
+        server.stats.tokens_per_second(),
+        server.stats.mean_latency_ms()
+    );
+    Ok(())
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let spec = GpuSpec::by_name(args.get_or("device", "a100"))
+        .ok_or_else(|| anyhow::anyhow!("unknown device"))?;
+    let rl = Roofline::new(spec);
+    let cfg = BenchConfig::default()
+        .with_dropout(args.has_flag("dropout"))
+        .with_mask(args.has_flag("mask"));
+    match args.get_or("table", "fig3") {
+        "fig1" => {
+            let mut t = Table::new(
+                &format!("Fig 1 right — attention speedup over PyTorch ({})", rl.spec.name),
+                &["seq len", "PyTorch ms", "Flash ms", "speedup"],
+            );
+            for n in [128u64, 256, 512, 1024, 2048, 4096] {
+                let py = rl.time_ms(Method::PyTorch, Pass::FwdBwd, n, &cfg);
+                let fl = rl.time_ms(Method::FlashAttention, Pass::FwdBwd, n, &cfg);
+                let sp = match (py, fl) {
+                    (Some(p), Some(f)) => format!("{:.2}x", p / f),
+                    _ => "-".into(),
+                };
+                t.row(vec![
+                    n.to_string(),
+                    flashattn::bench::ms_cell(py),
+                    flashattn::bench::ms_cell(fl),
+                    sp,
+                ]);
+            }
+            t.print();
+        }
+        "mem" => {
+            let mut t = Table::new(
+                "Table 21 — memory (MB)",
+                &["method", "1024", "8192", "65536"],
+            );
+            for m in SWEEP_METHODS {
+                t.row(vec![
+                    m.name().to_string(),
+                    flashattn::bench::ms_cell(rl.mem_mb(*m, 1024, &cfg)),
+                    flashattn::bench::ms_cell(rl.mem_mb(*m, 8192, &cfg)),
+                    flashattn::bench::ms_cell(rl.mem_mb(*m, 65536, &cfg)),
+                ]);
+            }
+            t.print();
+        }
+        _ => {
+            let ns = [128u64, 512, 1024, 4096, 16384, 65536];
+            let mut headers = vec!["method".to_string()];
+            headers.extend(ns.iter().map(|n| n.to_string()));
+            let mut t = Table::new(
+                &format!("Fig 3 left — fwd+bwd runtime ms ({})", rl.spec.name),
+                &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+            );
+            for m in SWEEP_METHODS {
+                let mut row = vec![m.name().to_string()];
+                for &n in &ns {
+                    row.push(flashattn::bench::ms_cell(rl.time_ms(*m, Pass::FwdBwd, n, &cfg)));
+                }
+                t.row(row);
+            }
+            t.print();
+        }
+    }
+    Ok(())
+}

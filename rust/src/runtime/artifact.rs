@@ -1,0 +1,273 @@
+//! Artifact manifest: the calling convention emitted by python/compile/aot.py
+//! (`artifacts/manifest.json`) — per-artifact input/output names, shapes and
+//! dtypes, plus per-model parameter ordering and configs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("float32")
+                .to_string(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub config: BTreeMap<String, Json>,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub n_params: usize,
+}
+
+impl ModelInfo {
+    pub fn cfg_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(Json::as_usize)
+    }
+
+    pub fn cfg_str(&self, key: &str) -> Option<&str> {
+        self.config.get(key).and_then(Json::as_str)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                        .to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        if let Some(ms) = j.get("models").and_then(Json::as_obj) {
+            for (name, m) in ms {
+                let param_names = m
+                    .get("param_names")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_str().map(String::from))
+                    .collect();
+                let param_shapes = m
+                    .get("param_shapes")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| {
+                        v.as_arr().map(|a| {
+                            a.iter().map(|x| x.as_usize().unwrap_or(0)).collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        config: m
+                            .get("config")
+                            .and_then(Json::as_obj)
+                            .cloned()
+                            .unwrap_or_default(),
+                        param_names,
+                        param_shapes,
+                        n_params: m.get("n_params").and_then(Json::as_usize).unwrap_or(0),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+/// Validate a set of host values against the artifact's input specs.
+pub fn check_inputs(spec: &ArtifactSpec, values: &[super::Value]) -> Result<()> {
+    if values.len() != spec.inputs.len() {
+        bail!(
+            "artifact {}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            values.len()
+        );
+    }
+    for (ts, v) in spec.inputs.iter().zip(values) {
+        if ts.shape != v.shape() {
+            bail!(
+                "artifact {} input {:?}: expected shape {:?}, got {:?}",
+                spec.name,
+                ts.name,
+                ts.shape,
+                v.shape()
+            );
+        }
+        if ts.dtype != v.dtype_name() {
+            bail!(
+                "artifact {} input {:?}: expected {}, got {}",
+                spec.name,
+                ts.name,
+                ts.dtype,
+                v.dtype_name()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Value;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "attn": {
+          "file": "attn.hlo.txt",
+          "inputs": [
+            {"name": "q", "shape": [2, 4, 8], "dtype": "float32"},
+            {"name": "seed", "shape": [], "dtype": "int32"}
+          ],
+          "outputs": [{"name": "o", "shape": [2, 4, 8], "dtype": "float32"}]
+        }
+      },
+      "models": {
+        "gpt": {
+          "config": {"vocab": 256, "n_ctx": 128, "attention": "flash"},
+          "param_names": ["wte", "wpe"],
+          "param_shapes": [[256, 128], [128, 128]],
+          "n_params": 49152
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.artifact("attn").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![2, 4, 8]);
+        assert_eq!(a.inputs[1].dtype, "int32");
+        let g = m.model("gpt").unwrap();
+        assert_eq!(g.cfg_usize("vocab"), Some(256));
+        assert_eq!(g.cfg_str("attention"), Some("flash"));
+        assert_eq!(g.param_names, vec!["wte", "wpe"]);
+        assert_eq!(g.n_params, 49152);
+    }
+
+    #[test]
+    fn unknown_artifact_err() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn input_validation() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.artifact("attn").unwrap();
+        let good = vec![
+            Value::F32 { shape: vec![2, 4, 8], data: vec![0.0; 64] },
+            Value::scalar_i32(0),
+        ];
+        assert!(check_inputs(a, &good).is_ok());
+        let bad_shape = vec![
+            Value::F32 { shape: vec![2, 4, 4], data: vec![0.0; 32] },
+            Value::scalar_i32(0),
+        ];
+        assert!(check_inputs(a, &bad_shape).is_err());
+        let bad_dtype = vec![
+            Value::F32 { shape: vec![2, 4, 8], data: vec![0.0; 64] },
+            Value::scalar_f32(0.0),
+        ];
+        assert!(check_inputs(a, &bad_dtype).is_err());
+        assert!(check_inputs(a, &good[..1].to_vec()).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! The PJRT execution engine: compile-once cache of loaded executables,
+//! typed execute with input validation, and simple step timing.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{check_inputs, ArtifactSpec, Manifest};
+use super::value::Value;
+
+/// One compiled artifact, ready to run.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run with host values; returns host values (one per manifest output).
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        check_inputs(&self.spec, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = Value::from_result_literal(lit)?;
+        anyhow::ensure!(
+            outs.len() == self.spec.outputs.len(),
+            "artifact {}: expected {} outputs, got {}",
+            self.spec.name,
+            self.spec.outputs.len(),
+            outs.len()
+        );
+        Ok(outs)
+    }
+
+    /// Run and report wall time (used by the perf harness).
+    pub fn run_timed(&self, inputs: &[Value]) -> Result<(Vec<Value>, f64)> {
+        let t0 = Instant::now();
+        let out = self.run(inputs)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// PJRT client + manifest + compile cache. The single entry point the
+/// coordinator uses to talk to the artifacts.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executable>,
+    /// Cumulative compile seconds (visible in metrics).
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the given artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new(), compile_seconds: 0.0 })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.artifact(name)?.clone();
+            let path = self.manifest.hlo_path(&spec);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.compile_seconds += t0.elapsed().as_secs_f64();
+            self.cache.insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.load(name)?;
+        self.cache[name].run(inputs)
+    }
+
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the Rust hot path. Python is never on the request path — the Rust binary
+//! is self-contained once `make artifacts` has run.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py for why), parsed by
+//! `xla::HloModuleProto::from_text_file`, compiled with the PJRT CPU client,
+//! and executed with `Literal` inputs built from [`Value`] host tensors.
+
+pub mod artifact;
+pub mod exec;
+pub mod value;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use exec::{Executable, Runtime};
+pub use value::Value;

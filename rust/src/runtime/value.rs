@@ -1,0 +1,131 @@
+//! Host tensors crossing the PJRT boundary: f32 and i32, shape-carrying.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, Shape};
+
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Value {
+        Value::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Value {
+        Value::F32 { shape: t.shape.clone(), data: t.data.clone() }
+    }
+
+    pub fn zeros_like_shape(shape: &[usize]) -> Value {
+        Value::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Value::F32 { .. } => "float32",
+            Value::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("value is {}, expected float32", self.dtype_name()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("value is {}, expected int32", self.dtype_name()),
+        }
+    }
+
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Ok(Tensor::from_vec(self.shape(), self.as_f32()?.to_vec()))
+    }
+
+    /// Scalar extraction (rank-0 or single-element).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32 { data, .. } => Literal::vec1(data),
+            Value::I32 { data, .. } => Literal::vec1(data),
+        };
+        lit.reshape(&dims).context("reshape literal")
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Value> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(Value::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            ElementType::S32 => Ok(Value::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported artifact dtype {other:?}"),
+        }
+    }
+
+    /// Destructure a (possibly nested 1-tuple of) tuple literal into Values.
+    pub fn from_result_literal(lit: Literal) -> Result<Vec<Value>> {
+        match lit.shape()? {
+            Shape::Tuple(_) => {
+                let parts = lit.to_tuple()?;
+                parts.iter().map(Value::from_literal).collect()
+            }
+            _ => Ok(vec![Value::from_literal(&lit)?]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let v = Value::scalar_f32(3.5);
+        assert_eq!(v.scalar().unwrap(), 3.5);
+        assert_eq!(v.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let v = Value::from_tensor(&t);
+        assert_eq!(v.to_tensor().unwrap(), t);
+        assert_eq!(v.numel(), 6);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let v = Value::scalar_i32(1);
+        assert!(v.as_f32().is_err());
+        assert!(v.as_i32().is_ok());
+    }
+}

@@ -1,0 +1,136 @@
+//! Published GPU specs used by the roofline model (paper §2.1 and App. E.5).
+
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM capacity in bytes.
+    pub hbm_bytes: u64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// On-chip SRAM per SM, bytes (the paper's M).
+    pub sram_bytes_per_sm: usize,
+    pub n_sm: usize,
+    /// Peak fp16/bf16 tensor-core throughput, FLOP/s.
+    pub peak_flops_fp16: f64,
+    /// Peak fp32 throughput, FLOP/s.
+    pub peak_flops_fp32: f64,
+    /// Per-kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Achievable fraction of peak bandwidth for attention-shaped access.
+    pub bw_efficiency: f64,
+    /// Achievable fraction of peak FLOPs for attention-shaped matmuls.
+    pub flop_efficiency: f64,
+}
+
+impl GpuSpec {
+    /// A100-SXM4-40GB: 1.555 TB/s, 192 KB SRAM/SM, 108 SMs, 312 TFLOPs fp16.
+    pub fn a100_40gb() -> GpuSpec {
+        GpuSpec {
+            name: "A100-40GB",
+            hbm_bytes: 40 * (1 << 30),
+            hbm_bw: 1.555e12,
+            sram_bytes_per_sm: 192 * 1024,
+            n_sm: 108,
+            peak_flops_fp16: 312e12,
+            peak_flops_fp32: 19.5e12,
+            launch_overhead: 5e-6,
+            bw_efficiency: 0.65,
+            flop_efficiency: 0.45,
+        }
+    }
+
+    /// A100-SXM4-80GB: 2.0 TB/s variant.
+    pub fn a100_80gb() -> GpuSpec {
+        GpuSpec {
+            name: "A100-80GB",
+            hbm_bytes: 80 * (1 << 30),
+            hbm_bw: 2.0e12,
+            ..GpuSpec::a100_40gb()
+        }
+    }
+
+    /// RTX 3090: 936 GB/s, 128 KB SRAM/SM, 82 SMs, 71 TFLOPs fp16 (dense).
+    pub fn rtx3090() -> GpuSpec {
+        GpuSpec {
+            name: "RTX3090",
+            hbm_bytes: 24 * (1 << 30),
+            hbm_bw: 936e9,
+            sram_bytes_per_sm: 128 * 1024,
+            n_sm: 82,
+            peak_flops_fp16: 71e12,
+            peak_flops_fp32: 35.6e12,
+            launch_overhead: 5e-6,
+            bw_efficiency: 0.65,
+            flop_efficiency: 0.45,
+        }
+    }
+
+    /// T4: 320 GB/s, 96 KB SRAM/SM (64 KB usable shared), 40 SMs, 65 TFLOPs.
+    pub fn t4() -> GpuSpec {
+        GpuSpec {
+            name: "T4",
+            hbm_bytes: 16 * (1 << 30),
+            hbm_bw: 320e9,
+            sram_bytes_per_sm: 64 * 1024,
+            n_sm: 40,
+            peak_flops_fp16: 65e12,
+            peak_flops_fp32: 8.1e12,
+            launch_overhead: 5e-6,
+            bw_efficiency: 0.6,
+            flop_efficiency: 0.4,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" | "a100-40gb" => Some(GpuSpec::a100_40gb()),
+            "a100-80gb" => Some(GpuSpec::a100_80gb()),
+            "rtx3090" | "3090" => Some(GpuSpec::rtx3090()),
+            "t4" => Some(GpuSpec::t4()),
+            _ => None,
+        }
+    }
+
+    /// The paper's M: on-chip memory per SM in f32 elements (fp16: x2).
+    pub fn sram_floats(&self) -> usize {
+        self.sram_bytes_per_sm / 4
+    }
+
+    /// Effective bandwidth/FLOP rates.
+    pub fn eff_bw(&self) -> f64 {
+        self.hbm_bw * self.bw_efficiency
+    }
+
+    pub fn eff_flops_fp16(&self) -> f64 {
+        self.peak_flops_fp16 * self.flop_efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuSpec::by_name("a100").unwrap().name, "A100-40GB");
+        assert_eq!(GpuSpec::by_name("T4").unwrap().name, "T4");
+        assert!(GpuSpec::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn a100_sram_is_48k_floats() {
+        // The paper's "M around 100KB" for fp16 => 48K f32 elements.
+        assert_eq!(GpuSpec::a100_40gb().sram_floats(), 48 * 1024);
+    }
+
+    #[test]
+    fn bandwidth_ordering_matches_paper_e5() {
+        // App. E.5: speedups higher on 3090 than A100 (lower bw), and T4
+        // lowest bw of all.
+        let a = GpuSpec::a100_40gb();
+        let r = GpuSpec::rtx3090();
+        let t = GpuSpec::t4();
+        assert!(a.hbm_bw > r.hbm_bw && r.hbm_bw > t.hbm_bw);
+        assert!(t.sram_bytes_per_sm < a.sram_bytes_per_sm);
+    }
+}

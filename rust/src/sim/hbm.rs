@@ -1,0 +1,70 @@
+//! Instrumented HBM traffic counter — the measurement side of the paper's
+//! IO-complexity analysis (Section 3.2).
+//!
+//! The pure-Rust algorithm mirrors in `attn/` call `load`/`store` at exactly
+//! the points Algorithms 0/1/4/5 perform HBM transfers, so the counters
+//! *measure* what Theorems 2/5 and Proposition 4 *predict*. `cargo test
+//! io_complexity` asserts the two agree within constant factors, and
+//! `benches/fig2_io_analysis.rs` regenerates Fig. 2 from the counts.
+
+#[derive(Clone, Debug, Default)]
+pub struct Hbm {
+    /// f32 elements read from HBM.
+    pub loads: u64,
+    /// f32 elements written to HBM.
+    pub stores: u64,
+}
+
+impl Hbm {
+    pub fn new() -> Hbm {
+        Hbm::default()
+    }
+
+    pub fn load(&mut self, elems: usize) {
+        self.loads += elems as u64;
+    }
+
+    pub fn store(&mut self, elems: usize) {
+        self.stores += elems as u64;
+    }
+
+    /// Total accesses in elements.
+    pub fn accesses(&self) -> u64 {
+        self.loads + self.stores
+    }
+
+    /// Total traffic in bytes (f32).
+    pub fn bytes(&self) -> u64 {
+        self.accesses() * 4
+    }
+
+    pub fn reset(&mut self) {
+        self.loads = 0;
+        self.stores = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let mut h = Hbm::new();
+        h.load(10);
+        h.store(5);
+        h.load(1);
+        assert_eq!(h.loads, 11);
+        assert_eq!(h.stores, 5);
+        assert_eq!(h.accesses(), 16);
+        assert_eq!(h.bytes(), 64);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut h = Hbm::new();
+        h.load(3);
+        h.reset();
+        assert_eq!(h.accesses(), 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! The GPU-substrate simulator — our substitution for the authors' A100
+//! testbed (DESIGN.md §4).
+//!
+//! Structure: `device` holds published hardware specs; `cost` holds *exact*
+//! closed-form IO/FLOP counts for the paper's algorithms (matching the
+//! instrumented mirrors in `attn/` access-for-access); `baselines` holds
+//! structural cost models for the nine approximate/sparse baselines of
+//! Appendix E; `roofline` converts counts to runtime/memory via a roofline
+//! model with a single per-method scale calibrated at one anchor point
+//! (N=1024) from the paper's own tables — the *scaling shape* comes purely
+//! from the algorithm structure.
+
+pub mod baselines;
+pub mod calibrate;
+pub mod cost;
+pub mod device;
+pub mod e2e;
+pub mod hbm;
+pub mod roofline;

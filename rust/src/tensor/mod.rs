@@ -1,0 +1,314 @@
+//! Minimal contiguous f32 ndarray — the substrate for the pure-Rust mirrors
+//! of the paper's algorithms (attn/) and for host-side verification of the
+//! PJRT artifacts. Row-major, owned storage, no views; blocked matmul for
+//! the hot paths.
+
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut SplitMix64, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, scale) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major linear offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < dim, "index {x} out of bounds for axis {i} (dim {dim})");
+            off = off * dim + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// [r, c] matrix view helpers for rank-2 tensors.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// C = A @ B for 2-D tensors; ikj loop order (B rows stream, vectorises).
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, ka) = (self.rows(), self.cols());
+        let (kb, n) = (b.rows(), b.cols());
+        assert_eq!(ka, kb, "matmul inner dims {ka} != {kb}");
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T — avoids materialising the transpose (hot in attention:
+    /// S = Q K^T with both operands row-major [n, d]).
+    pub fn matmul_bt(&self, b: &Tensor) -> Tensor {
+        let (m, ka) = (self.rows(), self.cols());
+        let (n, kb) = (b.rows(), b.cols());
+        assert_eq!(ka, kb, "matmul_bt inner dims {ka} != {kb}");
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for k in 0..ka {
+                    acc += arow[k] * brow[k];
+                }
+                orow[j] = acc;
+            }
+        }
+        out
+    }
+
+    /// C = A^T @ B.
+    pub fn matmul_at(&self, b: &Tensor) -> Tensor {
+        let (ka, m) = (self.rows(), self.cols());
+        let (kb, n) = (b.rows(), b.cols());
+        assert_eq!(ka, kb, "matmul_at inner dims {ka} != {kb}");
+        let mut out = Tensor::zeros(&[m, n]);
+        for k in 0..ka {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += aki * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Row-wise numerically-stable softmax (rank-2).
+    pub fn softmax_rows(&self) -> Tensor {
+        let mut out = self.clone();
+        let c = self.cols();
+        for r in 0..self.rows() {
+            let row = &mut out.data[r * c..(r + 1) * c];
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0;
+            for x in row.iter_mut() {
+                *x = (*x - m).exp();
+                z += *x;
+            }
+            for x in row.iter_mut() {
+                *x /= z;
+            }
+        }
+        out
+    }
+
+    pub fn scale(mut self, s: f32) -> Tensor {
+        for x in &mut self.data {
+            *x *= s;
+        }
+        self
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Slice rows [lo, hi) of a rank-2 tensor into a new tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let c = self.cols();
+        Tensor::from_vec(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, for_each_case, usize_in};
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = SplitMix64::new(0);
+        let a = Tensor::randn(&[4, 4], &mut rng, 1.0);
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.data[i * 4 + i] = 1.0;
+        }
+        assert_allclose(&a.matmul(&eye).data, &a.data, 1e-6, 0.0, "A@I");
+        assert_allclose(&eye.matmul(&a).data, &a.data, 1e-6, 0.0, "I@A");
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_bt_equals_matmul_of_transpose() {
+        for_each_case("bt", 10, |rng| {
+            let (m, k, n) = (usize_in(rng, 1, 8), usize_in(rng, 1, 8), usize_in(rng, 1, 8));
+            let a = Tensor::randn(&[m, k], rng, 1.0);
+            let b = Tensor::randn(&[n, k], rng, 1.0);
+            assert_allclose(&a.matmul_bt(&b).data, &a.matmul(&b.t()).data, 1e-5, 1e-5, "bt");
+        });
+    }
+
+    #[test]
+    fn matmul_at_equals_transpose_matmul() {
+        for_each_case("at", 10, |rng| {
+            let (m, k, n) = (usize_in(rng, 1, 8), usize_in(rng, 1, 8), usize_in(rng, 1, 8));
+            let a = Tensor::randn(&[k, m], rng, 1.0);
+            let b = Tensor::randn(&[k, n], rng, 1.0);
+            assert_allclose(&a.matmul_at(&b).data, &a.t().matmul(&b).data, 1e-5, 1e-5, "at");
+        });
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = SplitMix64::new(2);
+        let a = Tensor::randn(&[5, 7], &mut rng, 3.0);
+        let p = a.softmax_rows();
+        for r in 0..5 {
+            let s: f32 = p.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let a = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[1, 3], vec![1001.0, 1002.0, 1003.0]);
+        assert_allclose(&a.softmax_rows().data, &b.softmax_rows().data, 1e-6, 0.0, "shift");
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = SplitMix64::new(3);
+        let a = Tensor::randn(&[3, 5], &mut rng, 1.0);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn offset_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 0, 0]), 12);
+    }
+
+    #[test]
+    fn slice_rows_roundtrip() {
+        let mut rng = SplitMix64::new(4);
+        let a = Tensor::randn(&[6, 3], &mut rng, 1.0);
+        let s = a.slice_rows(2, 5);
+        assert_eq!(s.shape, vec![3, 3]);
+        assert_eq!(s.row(0), a.row(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn matmul_dim_check() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        a.matmul(&b);
+    }
+}

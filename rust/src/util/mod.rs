@@ -1,0 +1,9 @@
+//! Small self-contained utilities: PRNG, JSON, CLI parsing, table printing,
+//! and a mini property-testing harness (the crate universe available offline
+//! has no rand/serde/clap/proptest, so these are built in-repo).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,87 @@
+//! Mini property-testing harness (no proptest offline): seeded random case
+//! generation with failure reporting. Shrinking is replaced by reporting the
+//! failing seed so a case can be replayed deterministically.
+
+use super::rng::SplitMix64;
+
+/// Run `body` over `cases` seeded RNGs; panic with the failing case index
+/// and seed on the first assertion failure.
+pub fn for_each_case(name: &str, cases: usize, mut body: impl FnMut(&mut SplitMix64)) {
+    for case in 0..cases {
+        let seed = 0xF1A5_4A77 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi] (inclusive).
+pub fn usize_in(rng: &mut SplitMix64, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Pick one element of a slice.
+pub fn choose<'a, T>(rng: &mut SplitMix64, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len() as u64) as usize]
+}
+
+/// Assert |a - b| <= atol + rtol * |b| elementwise.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "{what}: element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        for_each_case("count", 17, |_| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn reports_failing_case() {
+        for_each_case("fails", 5, |rng| {
+            let x = rng.next_f32();
+            assert!(x < 2.0); // always true
+            assert!(false, "boom");
+        });
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..1000 {
+            let x = usize_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&x));
+        }
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 0.0, 0.0, "eq");
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1")]
+    fn allclose_rejects_diff() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 0.0, "diff");
+    }
+}

@@ -1,0 +1,143 @@
+//! Deterministic PRNGs: SplitMix64 for data/test generation, plus the same
+//! counter-based murmur3-finalizer hash the L1 kernels use for dropout
+//! (python/compile/kernels/prng.py) so Rust can reproduce kernel dropout
+//! masks bit-exactly.
+
+/// SplitMix64 — fast, seedable, full-period 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self(seed)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Rejection-free modulo is fine for our n << 2^64 use cases.
+        self.next_u64() % n.max(1)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()) as f32
+    }
+
+    /// Fill a vector with N(0, scale^2) samples.
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * scale).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// murmur3 fmix32 over `counter * GOLDEN + seed` — identical to
+/// `hash_u32` in python/compile/kernels/prng.py.
+pub fn kernel_hash_u32(counter: u32, seed: u32) -> u32 {
+    let mut h = counter.wrapping_mul(0x9E37_79B9).wrapping_add(seed);
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    h
+}
+
+/// Uniform [0,1) float from the top 24 bits — mirrors `uniform01`.
+pub fn kernel_uniform01(counter: u32, seed: u32) -> f32 {
+    (kernel_hash_u32(counter, seed) >> 8) as f32 * (1.0 / (1 << 24) as f32)
+}
+
+/// Dropout keep decision for attention entry (bh, row, col) of an
+/// [BH, n, n] attention matrix — mirrors the kernels' `keep_from_counter`
+/// + `tile_counters` composition.
+pub fn kernel_dropout_keep(bh: u32, row: u32, col: u32, n: u32, seed: u32, p_drop: f32) -> bool {
+    let counter = (bh.wrapping_mul(n).wrapping_add(row))
+        .wrapping_mul(n)
+        .wrapping_add(col);
+    kernel_uniform01(counter, seed) >= p_drop
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_f32_in_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(3);
+        let xs: Vec<f32> = (0..50_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn dropout_rate_matches_p() {
+        let n = 256u32;
+        let mut dropped = 0usize;
+        for row in 0..n {
+            for col in 0..n {
+                if !kernel_dropout_keep(0, row, col, n, 9, 0.3) {
+                    dropped += 1;
+                }
+            }
+        }
+        let rate = dropped as f64 / (n as f64 * n as f64);
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

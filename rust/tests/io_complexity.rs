@@ -1,0 +1,172 @@
+//! Integration tests for the paper's IO-complexity results: the analytic
+//! closed forms in sim::cost must match the *instrumented* algorithm
+//! mirrors access-for-access, and the asymptotics of Theorems 2/5 and
+//! Propositions 3/4 must hold over parameter sweeps.
+
+use flashattn::attn::block_sparse::block_sparse_forward;
+use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
+use flashattn::attn::masks::BlockMask;
+use flashattn::attn::standard::{standard_backward, standard_forward};
+use flashattn::attn::AttnConfig;
+use flashattn::sim::cost;
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::prop::{for_each_case, usize_in};
+use flashattn::util::rng::SplitMix64;
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = SplitMix64::new(seed);
+    (
+        Tensor::randn(&[n, d], &mut rng, 1.0),
+        Tensor::randn(&[n, d], &mut rng, 1.0),
+        Tensor::randn(&[n, d], &mut rng, 1.0),
+    )
+}
+
+#[test]
+fn standard_fwd_analytic_matches_instrumented_exactly() {
+    for (n, d) in [(64usize, 8usize), (128, 16), (96, 32)] {
+        let (q, k, v) = qkv(n, d, 0);
+        let mut hbm = Hbm::new();
+        standard_forward(&q, &k, &v, &AttnConfig::default(), &mut hbm);
+        let pred = cost::standard_fwd(n as u64, d as u64, false, false);
+        assert_eq!(hbm.accesses(), pred.hbm_elems, "n={n} d={d}");
+    }
+}
+
+#[test]
+fn standard_bwd_analytic_matches_instrumented_exactly() {
+    let (n, d) = (64usize, 8usize);
+    let (q, k, v) = qkv(n, d, 1);
+    let dout = Tensor::full(&[n, d], 1.0);
+    let mut hbm = Hbm::new();
+    standard_backward(&q, &k, &v, &dout, &AttnConfig::default(), &mut hbm);
+    let pred = cost::standard_bwd(n as u64, d as u64, false, false);
+    assert_eq!(hbm.accesses(), pred.hbm_elems);
+}
+
+#[test]
+fn flash_fwd_analytic_matches_instrumented_exactly() {
+    // Divisible tilings: the closed form is exact.
+    for (n, d, br, bc) in [(128usize, 16usize, 16usize, 32usize), (256, 8, 32, 64), (64, 4, 8, 8)] {
+        let (q, k, v) = qkv(n, d, 2);
+        let blocks = Blocks::explicit(br, bc);
+        let mut hbm = Hbm::new();
+        flash_forward(&q, &k, &v, &AttnConfig::default(), blocks, &mut hbm);
+        let pred = cost::flash_fwd(n as u64, d as u64, blocks, false, false);
+        assert_eq!(hbm.accesses(), pred.hbm_elems, "n={n} d={d} blocks=({br},{bc})");
+    }
+}
+
+#[test]
+fn flash_bwd_analytic_matches_instrumented_exactly() {
+    let (n, d, br, bc) = (128usize, 16usize, 16usize, 32usize);
+    let (q, k, v) = qkv(n, d, 3);
+    let blocks = Blocks::explicit(br, bc);
+    let cfg = AttnConfig::default();
+    let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
+    let dout = Tensor::full(&[n, d], 1.0);
+    let mut hbm = Hbm::new();
+    flash_backward(&q, &k, &v, &fwd.o, &dout, &fwd.l, &fwd.m, &cfg, blocks, &mut hbm);
+    let pred = cost::flash_bwd(n as u64, d as u64, blocks, false, false);
+    assert_eq!(hbm.accesses(), pred.hbm_elems);
+}
+
+#[test]
+fn flash_fwd_causal_analytic_matches_instrumented() {
+    let (n, d, br, bc) = (128usize, 8usize, 16usize, 16usize);
+    let (q, k, v) = qkv(n, d, 4);
+    let blocks = Blocks::explicit(br, bc);
+    let cfg = AttnConfig::causal();
+    let mut hbm = Hbm::new();
+    flash_forward(&q, &k, &v, &cfg, blocks, &mut hbm);
+    let pred = cost::flash_fwd(n as u64, d as u64, blocks, true, false);
+    assert_eq!(hbm.accesses(), pred.hbm_elems);
+}
+
+#[test]
+fn block_sparse_analytic_matches_instrumented() {
+    let (n, d, br, bc) = (128usize, 8usize, 16usize, 16usize);
+    let (q, k, v) = qkv(n, d, 5);
+    let blocks = Blocks::explicit(br, bc);
+    let mask = BlockMask::butterfly(n / br, n / bc);
+    let mut hbm = Hbm::new();
+    block_sparse_forward(&q, &k, &v, &mask, &AttnConfig::default(), blocks, &mut hbm);
+    let pred = cost::block_sparse_fwd(n as u64, d as u64, blocks, &mask, false);
+    assert_eq!(hbm.accesses(), pred.hbm_elems);
+}
+
+#[test]
+fn theorem2_flash_quadratic_in_n_inverse_in_m() {
+    // Θ(N²d²/M): fix d; doubling N quadruples the dominant term; doubling
+    // B_c (∝ M) halves it.
+    let d = 64u64;
+    let c = |n: u64, bc: usize| {
+        cost::flash_fwd(n, d, Blocks::explicit(64, bc), false, false).hbm_elems as f64
+    };
+    let r_n = c(16384, 128) / c(8192, 128);
+    assert!((3.5..4.3).contains(&r_n), "N-scaling {r_n}");
+    let r_m = c(16384, 128) / c(16384, 256);
+    assert!((1.7..2.2).contains(&r_m), "M-scaling {r_m}");
+}
+
+#[test]
+fn theorem2_standard_quadratic_in_n_independent_of_m() {
+    let d = 64u64;
+    let c = |n: u64| cost::standard_fwd(n, d, false, false).hbm_elems as f64;
+    let r = c(16384) / c(8192);
+    assert!((3.8..4.1).contains(&r), "{r}");
+}
+
+#[test]
+fn proposition3_lower_bound_at_m_equals_nd() {
+    // With M = Nd (whole input in SRAM), flash still moves Ω(Nd): inputs
+    // and outputs must cross HBM at least once.
+    let (n, d) = (1024u64, 64u64);
+    let blocks = Blocks::from_sram((n * d) as usize, d as usize, n as usize);
+    let c = cost::flash_fwd(n, d, blocks, false, false);
+    assert!(c.hbm_elems >= 3 * n * d, "below the Ω(Nd) floor: {}", c.hbm_elems);
+}
+
+#[test]
+fn proposition4_block_sparse_proportional_to_sparsity() {
+    for_each_case("prop4", 8, |rng| {
+        let t = usize_in(rng, 4, 16);
+        let n = (t * 32) as u64;
+        let blocks = Blocks::explicit(32, 32);
+        let density = 0.2 + 0.8 * rng.next_f64();
+        let mut mask = BlockMask::zeros(t, t);
+        for i in 0..t {
+            mask.set(i, i, true);
+            for j in 0..t {
+                if rng.next_f64() < density {
+                    mask.set(i, j, true);
+                }
+            }
+        }
+        let dense = BlockMask::dense(t, t);
+        let cs = cost::block_sparse_fwd(n, 64, blocks, &mask, false).hbm_elems as f64;
+        let cd = cost::block_sparse_fwd(n, 64, blocks, &dense, false).hbm_elems as f64;
+        let ratio = cs / cd;
+        let s = mask.sparsity();
+        assert!((ratio - s).abs() < 0.3, "ratio {ratio} vs s {s}");
+    });
+}
+
+#[test]
+fn theorem1_flash_exact_over_random_workloads() {
+    // Exactness + O(N) extra memory, property-tested across shapes.
+    for_each_case("thm1", 10, |rng| {
+        let n = usize_in(rng, 4, 64);
+        let d = *flashattn::util::prop::choose(rng, &[2usize, 4, 8, 16]);
+        let q = Tensor::randn(&[n, d], rng, 1.0);
+        let k = Tensor::randn(&[n, d], rng, 1.0);
+        let v = Tensor::randn(&[n, d], rng, 1.0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::explicit(usize_in(rng, 1, n), usize_in(rng, 1, n));
+        let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+        let fla = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
+        assert!(std.o.max_abs_diff(&fla.o) < 1e-4);
+        assert_eq!(fla.l.len() + fla.m.len(), 2 * n); // O(N) statistics
+    });
+}

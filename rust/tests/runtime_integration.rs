@@ -1,0 +1,200 @@
+//! Integration tests over the PJRT runtime + real artifacts. These require
+//! `make artifacts` to have run; they are skipped (with a notice) if the
+//! artifacts directory is missing so `cargo test` works on a fresh clone.
+
+use std::path::Path;
+
+use flashattn::attn::flash::{flash_forward, Blocks};
+use flashattn::attn::AttnConfig;
+use flashattn::coordinator::{LmTrainer, TrainConfig};
+use flashattn::coordinator::trainer::ClsTrainer;
+use flashattn::data::corpus::Corpus;
+use flashattn::data::listops::ListOps;
+use flashattn::data::ClsDataset;
+use flashattn::runtime::{Runtime, Value};
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+
+fn runtime() -> Option<Runtime> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::cpu(Path::new("artifacts")).expect("runtime"))
+}
+
+fn rand_qkv(rt: &Runtime, name: &str, seed: u64) -> Vec<Value> {
+    let spec = rt.manifest.artifact(name).unwrap();
+    let mut rng = SplitMix64::new(seed);
+    spec.inputs
+        .iter()
+        .map(|ts| Value::F32 { shape: ts.shape.clone(), data: rng.normal_vec(ts.numel(), 1.0) })
+        .collect()
+}
+
+#[test]
+fn flash_artifact_matches_reference_artifact() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = rand_qkv(&rt, "attn_flash_fwd", 0);
+    let flash = rt.run("attn_flash_fwd", &inputs).unwrap().remove(0);
+    let reference = rt.run("attn_ref_fwd", &inputs).unwrap().remove(0);
+    let diff = flash
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(reference.as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff < 1e-4, "kernel vs oracle diff {diff}");
+}
+
+#[test]
+fn flash_artifact_matches_rust_mirror() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = rand_qkv(&rt, "attn_flash_fwd_causal", 1);
+    let flash = rt.run("attn_flash_fwd_causal", &inputs).unwrap().remove(0);
+    let spec = rt.manifest.artifact("attn_flash_fwd_causal").unwrap();
+    let (bh, n, d) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1], spec.inputs[0].shape[2]);
+    for b in [0usize, bh - 1] {
+        let slice = |val: &Value| {
+            Tensor::from_vec(&[n, d], val.as_f32().unwrap()[b * n * d..(b + 1) * n * d].to_vec())
+        };
+        let out = flash_forward(
+            &slice(&inputs[0]), &slice(&inputs[1]), &slice(&inputs[2]),
+            &AttnConfig::causal(), Blocks::explicit(16, 16), &mut Hbm::new());
+        assert!(out.o.max_abs_diff(&slice(&flash)) < 1e-4, "bh slice {b}");
+    }
+}
+
+#[test]
+fn fwd_bwd_artifacts_agree() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = rand_qkv(&rt, "attn_flash_fwd_bwd", 2);
+    let flash = rt.run("attn_flash_fwd_bwd", &inputs).unwrap();
+    let reference = rt.run("attn_ref_fwd_bwd", &inputs).unwrap();
+    for (i, (f, r)) in flash.iter().zip(&reference).enumerate() {
+        let diff = f
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(r.as_f32().unwrap())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 2e-4, "output {i} (o/dq/dk/dv) diff {diff}");
+    }
+}
+
+#[test]
+fn dropout_artifact_is_deterministic_and_differs_from_plain() {
+    let Some(mut rt) = runtime() else { return };
+    let inputs = rand_qkv(&rt, "attn_flash_fwd_dropout", 3);
+    let a = rt.run("attn_flash_fwd_dropout", &inputs).unwrap().remove(0);
+    let b = rt.run("attn_flash_fwd_dropout", &inputs).unwrap().remove(0);
+    assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "counter RNG must be deterministic");
+    let plain = rt.run("attn_flash_fwd_causal", &inputs).unwrap().remove(0);
+    let diff = a
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(plain.as_f32().unwrap())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 1e-3, "dropout had no effect");
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let Some(mut rt) = runtime() else { return };
+    let a = rt.run("gpt_flash_init", &[Value::scalar_i32(5)]).unwrap();
+    let b = rt.run("gpt_flash_init", &[Value::scalar_i32(5)]).unwrap();
+    let c = rt.run("gpt_flash_init", &[Value::scalar_i32(6)]).unwrap();
+    // Compare the largest tensor (a randomly-initialised weight matrix —
+    // the first pytree leaf is a zero bias, identical across seeds).
+    let big = (0..a.len()).max_by_key(|&i| a[i].numel()).unwrap();
+    assert_eq!(a[big].as_f32().unwrap(), b[big].as_f32().unwrap());
+    assert_ne!(a[big].as_f32().unwrap(), c[big].as_f32().unwrap());
+}
+
+#[test]
+fn lm_training_reduces_loss() {
+    let Some(mut rt) = runtime() else { return };
+    let corpus = Corpus::builtin(50_000, 3);
+    let cfg = TrainConfig { model: "gpt_flash".into(), steps: 8, eval_every: 0, ..Default::default() };
+    let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+    let (first, last) = tr.train(&mut rt, &corpus).unwrap();
+    assert!(last < first, "loss did not fall: {first} -> {last}");
+    assert!(first > 4.0 && first < 7.0, "initial loss should be near ln(256)={:.2}: {first}", (256f64).ln());
+}
+
+#[test]
+fn flash_and_reference_models_train_identically() {
+    let Some(mut rt) = runtime() else { return };
+    let corpus = Corpus::builtin(50_000, 4);
+    let mut curves = Vec::new();
+    for model in ["gpt_flash", "gpt_ref"] {
+        let cfg = TrainConfig { model: model.into(), steps: 5, eval_every: 0, seed: 11, ..Default::default() };
+        let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+        tr.train(&mut rt, &corpus).unwrap();
+        curves.push(tr.metrics.points.iter().map(|p| p.loss).collect::<Vec<_>>());
+    }
+    for (s, (a, b)) in curves[0].iter().zip(&curves[1]).enumerate() {
+        assert!((a - b).abs() < 2e-2, "step {s}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn cls_training_step_runs_and_is_finite() {
+    let Some(mut rt) = runtime() else { return };
+    let ds = ListOps::default();
+    let cfg = TrainConfig { model: "cls_flash".into(), steps: 2, eval_every: 0, ..Default::default() };
+    let mut tr = ClsTrainer::new(&mut rt, cfg).unwrap();
+    let mut rng = SplitMix64::new(5);
+    let batch = ds.batch(tr.batch, tr.n_ctx, &mut rng);
+    let (loss, acc) = tr.step(&mut rt, &batch).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    let Some(mut rt) = runtime() else { return };
+    let corpus = Corpus::builtin(50_000, 6);
+    let cfg = TrainConfig { model: "gpt_flash".into(), steps: 3, eval_every: 0, ..Default::default() };
+    let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+    tr.train(&mut rt, &corpus).unwrap();
+    let eval_batch = corpus.eval_batch(tr.batch, tr.n_ctx);
+    let loss_before = tr.eval_loss(&mut rt, &eval_batch).unwrap();
+    let path = std::env::temp_dir().join("flashattn_ckpt_test.bin");
+    tr.save(&path).unwrap();
+
+    let cfg2 = TrainConfig { model: "gpt_flash".into(), steps: 0, eval_every: 0, seed: 99, ..Default::default() };
+    let mut tr2 = LmTrainer::new(&mut rt, cfg2).unwrap();
+    tr2.load(&path).unwrap();
+    let loss_after = tr2.eval_loss(&mut rt, &eval_batch).unwrap();
+    assert!((loss_before - loss_after).abs() < 1e-5, "{loss_before} vs {loss_after}");
+}
+
+#[test]
+fn input_shape_mismatch_is_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    let bad = vec![Value::scalar_f32(0.0); 3];
+    assert!(rt.run("attn_flash_fwd", &bad).is_err());
+}
+
+#[test]
+fn manifest_models_cover_experiment_grid() {
+    let Some(rt) = runtime() else { return };
+    for tag in ["gpt_flash", "gpt_ref", "gpt_flash_ctx64", "gpt_flash_ctx256",
+                "cls_flash", "cls_reference", "cls_block_sparse", "cls_local",
+                "cls_linformer", "cls_linear",
+                "longdoc_ctx64", "longdoc_ctx128", "longdoc_ctx256", "longdoc_ctx512"] {
+        assert!(rt.manifest.models.contains_key(tag), "missing model {tag}");
+        for suffix in ["init", "train_step"] {
+            assert!(
+                rt.manifest.artifacts.contains_key(&format!("{tag}_{suffix}")),
+                "missing artifact {tag}_{suffix}"
+            );
+        }
+    }
+}
