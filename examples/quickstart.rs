@@ -3,7 +3,8 @@
 //!
 //!   1. the Pallas FlashAttention kernel (Algorithm 2) via PJRT,
 //!   2. the jnp reference oracle (Algorithm 0) via PJRT,
-//!   3. the pure-Rust FlashAttention mirror (this crate's attn::flash).
+//!   3. the pure-Rust FlashAttention mirror (this crate's attn::flash),
+//!   4. the fast Q-outer production kernel (attn::flash2, multi-threaded).
 //!
 //! Run:  make artifacts && cargo run --release --example quickstart
 
@@ -11,6 +12,7 @@ use std::path::Path;
 
 use anyhow::Result;
 use flashattn::attn::flash::{flash_forward, Blocks};
+use flashattn::attn::flash2::flash2_forward;
 use flashattn::attn::AttnConfig;
 use flashattn::runtime::{Runtime, Value};
 use flashattn::sim::hbm::Hbm;
@@ -34,8 +36,9 @@ fn main() -> Result<()> {
     let flash = rt.run("attn_flash_fwd", &inputs)?.remove(0);
     let reference = rt.run("attn_ref_fwd", &inputs)?.remove(0);
 
-    // 3: pure-Rust mirror, head slice by head slice.
+    // 3+4: pure-Rust mirrors (faithful + fast), head slice by head slice.
     let mut max_diff_rust = 0.0f32;
+    let mut max_diff_fast = 0.0f32;
     for b in 0..bh {
         let slice = |val: &Value| {
             let data = val.as_f32().unwrap();
@@ -47,8 +50,16 @@ fn main() -> Result<()> {
             Blocks::explicit(16, 16),
             &mut Hbm::new(),
         );
+        let fast = flash2_forward(
+            &slice(&q), &slice(&k), &slice(&v),
+            &AttnConfig::default(),
+            Blocks::explicit(16, 16),
+            4,
+            &mut Hbm::new(),
+        );
         let fl = slice(&flash);
         max_diff_rust = max_diff_rust.max(out.o.max_abs_diff(&fl));
+        max_diff_fast = max_diff_fast.max(fast.o.max_abs_diff(&fl));
     }
 
     let max_diff_kernels = flash
@@ -60,8 +71,10 @@ fn main() -> Result<()> {
 
     println!("max |pallas_flash - jnp_reference|  = {max_diff_kernels:.2e}");
     println!("max |pallas_flash - rust_mirror|    = {max_diff_rust:.2e}");
+    println!("max |pallas_flash - rust_flash2|    = {max_diff_fast:.2e}");
     assert!(max_diff_kernels < 1e-4, "kernel vs oracle mismatch");
     assert!(max_diff_rust < 1e-4, "kernel vs rust mirror mismatch");
+    assert!(max_diff_fast < 1e-4, "kernel vs fast rust kernel mismatch");
 
     // Bonus: causal + backward artifacts.
     let causal = rt.run("attn_flash_fwd_causal", &inputs)?.remove(0);
@@ -77,6 +90,6 @@ fn main() -> Result<()> {
     println!("fwd+bwd artifact OK: outputs {:?}",
              grads.iter().map(|g| g.shape().to_vec()).collect::<Vec<_>>());
 
-    println!("\nquickstart OK — all three implementations agree.");
+    println!("\nquickstart OK — all four implementations agree.");
     Ok(())
 }

@@ -81,15 +81,23 @@ fn fig2_left() {
 
     let mut h_fla = Hbm::new();
     let f = flash_forward(&q, &k, &v, &acfg, bl, &mut h_fla);
-    flash_backward(&q, &k, &v, &f.o, &out.o, &f.l, &f.m, &acfg, bl, &mut h_fla);
+    flash_backward(&q, &k, &v, &f.o, &out.o, f.stats(), &acfg, bl, &mut h_fla);
     let pred_fla = cost::flash_fwd(ni as u64, di as u64, bl, false, false)
         .add(cost::flash_bwd(ni as u64, di as u64, bl, false, false));
+
+    let mut h_fl2 = Hbm::new();
+    flashattn::attn::flash2::flash2_forward(&q, &k, &v, &acfg, bl, 4, &mut h_fl2);
+    let pred_fl2 = cost::flash2_fwd(ni as u64, di as u64, bl, false, false);
 
     println!("instrumented-vs-analytic (N={ni}, d={di}):");
     println!("  standard: measured {} vs analytic {}  ({})", h_std.accesses(), pred_std.hbm_elems,
              if h_std.accesses() == pred_std.hbm_elems { "EXACT" } else { "≈" });
     println!("  flash:    measured {} vs analytic {}  ({})", h_fla.accesses(), pred_fla.hbm_elems,
              if h_fla.accesses() == pred_fla.hbm_elems { "EXACT" } else { "≈" });
+    println!("  flash2:   measured {} vs analytic {} fwd-only ({}); O/stats stores {} = N·d + N",
+             h_fl2.accesses(), pred_fl2.hbm_elems,
+             if h_fl2.accesses() == pred_fl2.hbm_elems { "EXACT" } else { "≈" },
+             h_fl2.stores);
     println!();
 }
 

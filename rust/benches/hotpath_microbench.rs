@@ -3,6 +3,10 @@
 //!
 //!  * pure-Rust mirrors: flash_forward vs standard_forward per [n, d] slice
 //!    (the instrumented engine behind fig2);
+//!  * fast-kernel head-to-head: flash (faithful Algorithm 1) vs flash2
+//!    (Q-outer, register-blocked, multi-threaded) at n ∈ {512, 1K, 4K},
+//!    emitting BENCH_attn.json (mean ns/iter per kernel) so future PRs can
+//!    track the perf trajectory;
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
@@ -12,9 +16,10 @@ use std::path::Path;
 use std::time::Instant;
 
 use flashattn::attn::flash::{flash_forward, Blocks};
+use flashattn::attn::flash2::flash2_forward;
 use flashattn::attn::standard::standard_forward;
 use flashattn::attn::AttnConfig;
-use flashattn::bench::median_time;
+use flashattn::bench::{mean_time, median_time};
 use flashattn::runtime::{Runtime, Value};
 use flashattn::sim::hbm::Hbm;
 use flashattn::tensor::Tensor;
@@ -47,6 +52,66 @@ fn mirrors() {
         ]);
     }
     t.print();
+}
+
+/// flash vs flash2 head-to-head at d=64 — the kernel the production paths
+/// route through vs the instrumented reference it is tested against.
+/// Emits BENCH_attn.json at the repo root for the perf trajectory.
+fn fast_kernel_head_to_head() {
+    let d = 64usize;
+    let workers = 4usize;
+    let mut t = Table::new(
+        "fast kernel head-to-head (per [n,64] slice, mean ns/iter)",
+        &["n", "flash (ms)", "flash2 w1 (ms)", "flash2 w4 (ms)", "speedup w1", "speedup w4"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for n in [512usize, 1024, 4096] {
+        let mut rng = SplitMix64::new(1);
+        let q = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::from_sram(48 * 1024, d, n);
+        let iters = if n >= 4096 { 2 } else { 5 };
+        let t_flash = mean_time(iters, || {
+            std::hint::black_box(flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new()));
+        });
+        let t_f2_w1 = mean_time(iters, || {
+            std::hint::black_box(flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new()));
+        });
+        let t_f2_w4 = mean_time(iters, || {
+            std::hint::black_box(flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new()));
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", t_flash * 1e3),
+            format!("{:.2}", t_f2_w1 * 1e3),
+            format!("{:.2}", t_f2_w4 * 1e3),
+            format!("{:.2}x", t_flash / t_f2_w1),
+            format!("{:.2}x", t_flash / t_f2_w4),
+        ]);
+        json_rows.push(format!(
+            "    {{\"n\": {n}, \"flash_ns\": {:.0}, \"flash2_w1_ns\": {:.0}, \
+             \"flash2_w{workers}_ns\": {:.0}, \"speedup_w1\": {:.3}, \"speedup_w{workers}\": {:.3}}}",
+            t_flash * 1e9,
+            t_f2_w1 * 1e9,
+            t_f2_w4 * 1e9,
+            t_flash / t_f2_w1,
+            t_flash / t_f2_w4,
+        ));
+    }
+    t.print();
+    let json = format!(
+        "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
+         \"d\": {d},\n  \"workers\": {workers},\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    // Repo root regardless of the cwd cargo bench picked.
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_attn.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => println!("could not write BENCH_attn.json: {e}"),
+    }
 }
 
 fn artifacts() {
@@ -110,5 +175,6 @@ fn artifacts() {
 
 fn main() {
     mirrors();
+    fast_kernel_head_to_head();
     artifacts();
 }

@@ -1,7 +1,7 @@
 //! Algorithm 5: block-sparse FlashAttention — the dense tiled loop with
 //! zero blocks skipped. IO complexity Θ(Nd + N²d²s/M) (Proposition 4).
 
-use super::flash::Blocks;
+use super::flash::{tile_fully_unmasked, Blocks};
 use super::masks::{masked_score, BlockMask, NEG_INF};
 use super::{AttnConfig, AttnOutput};
 use crate::sim::hbm::Hbm;
@@ -29,6 +29,10 @@ pub fn block_sparse_forward(
     let mut l = vec![0.0f32; n];
     let mut m = vec![f32::NEG_INFINITY; n];
     hbm.store(n * d + 2 * n);
+    // On-chip scratch, allocated once (perf: no allocation in the tile loop,
+    // matching the flash mirror's earlier perf pass).
+    let mut p_buf = vec![0.0f32; b_c];
+    let mut pv = vec![0.0f32; d];
 
     for j in 0..t_c {
         let c0 = j * b_c;
@@ -54,28 +58,47 @@ pub fn block_sparse_forward(
             let qi = q.slice_rows(r0, r1);
             let bc = c1 - c0;
             let mut s = qi.matmul_bt(&kj).scale(tau);
-            for (rr, row) in (r0..r1).enumerate() {
-                for (cc, col) in (c0..c1).enumerate() {
-                    let x = s.data[rr * bc + cc];
-                    s.data[rr * bc + cc] = masked_score(x, row, col, cfg.causal, kv_len);
+            // Causal fast path: tiles that provably contain no masked entry
+            // skip the per-element pass (same rule as the flash kernels).
+            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+                for (rr, row) in (r0..r1).enumerate() {
+                    for (cc, col) in (c0..c1).enumerate() {
+                        let x = s.data[rr * bc + cc];
+                        s.data[rr * bc + cc] = masked_score(x, row, col, cfg.causal, kv_len);
+                    }
                 }
             }
             for (rr, row) in (r0..r1).enumerate() {
                 let srow = &s.data[rr * bc..(rr + 1) * bc];
                 let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
-                let p: Vec<f32> = srow.iter().map(|x| (x - m_tile).exp()).collect();
-                let l_tile: f32 = p.iter().sum();
+                let p = &mut p_buf[..bc];
+                let mut l_tile = 0.0f32;
+                for (pw, &x) in p.iter_mut().zip(srow) {
+                    *pw = (x - m_tile).exp();
+                    l_tile += *pw;
+                }
                 let m_new = m[row].max(m_tile);
                 let alpha = (m[row] - m_new).exp();
                 let beta = (m_tile - m_new).exp();
                 let l_new = alpha * l[row] + beta * l_tile;
+                // P̃·V accumulated row-of-V-major: contiguous and
+                // vectorisable, with the same per-column summation order as
+                // the old stride-d loop. The O update below now uses the
+                // flash kernel's inv-premultiplied form (one divide per
+                // row) — same numerics to rounding, not bitwise.
+                pv[..d].fill(0.0);
+                for (cc, &pw) in p.iter().enumerate() {
+                    let vrow = &vj.data[cc * d..(cc + 1) * d];
+                    for c in 0..d {
+                        pv[c] += pw * vrow[c];
+                    }
+                }
+                let inv = 1.0 / l_new.max(1e-37);
+                let a_coef = l[row] * alpha * inv;
+                let b_coef = beta * inv;
                 let orow = o.row_mut(row);
                 for c in 0..d {
-                    let mut pv = 0.0f32;
-                    for (cc, &pw) in p.iter().enumerate() {
-                        pv += pw * vj.data[cc * d + c];
-                    }
-                    orow[c] = (l[row] * alpha * orow[c] + beta * pv) / l_new.max(1e-37);
+                    orow[c] = a_coef * orow[c] + b_coef * pv[c];
                 }
                 l[row] = l_new;
                 m[row] = m_new;

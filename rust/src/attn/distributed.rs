@@ -20,8 +20,15 @@
 //! `flash_forward_sharded` runs the shards on OS threads (std::thread::scope)
 //! as the laptop-scale stand-in for the GPUs; `multi_gpu_cost` extends the
 //! IO model with the interconnect term.
+//!
+//! Per the two-kernel policy (attn module docs) each worker runs the *fast*
+//! Q-outer kernel `attn::flash2` over its key shard (single-threaded within
+//! the shard — the device-level parallelism is the shard fan-out). The fast
+//! kernel returns a logsumexp statistic; `(l, m) = (1, L)` is an exact
+//! decomposition (l·eᵐ = e^L), so the softmax merge below is unchanged.
 
-use super::flash::{flash_forward, Blocks};
+use super::flash::Blocks;
+use super::flash2::flash2_forward;
 use super::{AttnConfig, AttnOutput};
 use crate::sim::hbm::Hbm;
 use crate::tensor::Tensor;
@@ -87,8 +94,9 @@ pub fn flash_forward_sharded(
                 ..cfg.clone()
             };
             handles.push(scope.spawn(move || {
-                // Each worker has its own HBM counter (its own device).
-                flash_forward(q, &kw, &vw, &cfg_w, blocks, &mut Hbm::new())
+                // Each worker has its own HBM counter (its own device) and
+                // runs the fast kernel single-threaded over its shard.
+                flash2_forward(q, &kw, &vw, &cfg_w, blocks, 1, &mut Hbm::new()).into_attn_output()
             }));
         }
         for h in handles {
@@ -119,8 +127,9 @@ pub struct MultiGpuCost {
 
 pub fn multi_gpu_cost(n: u64, d: u64, blocks: Blocks, workers: u64) -> MultiGpuCost {
     let shard = n.div_ceil(workers);
-    // Each device: full Q (all rows attend its shard) vs shard of K/V.
-    let per_dev = crate::sim::cost::flash_fwd_rect(n, shard, d, blocks);
+    // Each device: full Q (all rows attend its shard) vs shard of K/V,
+    // running the fast Q-outer kernel (matching flash_forward_sharded).
+    let per_dev = crate::sim::cost::flash2_fwd_rect(n, shard, d, blocks);
     // Merge: each device ships (O, l, m) = N(d+2) elements.
     MultiGpuCost {
         hbm_per_device: per_dev.hbm_elems,
@@ -131,6 +140,7 @@ pub fn multi_gpu_cost(n: u64, d: u64, blocks: Blocks, workers: u64) -> MultiGpuC
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attn::flash::flash_forward;
     use crate::attn::standard::standard_forward;
     use crate::util::prop::{for_each_case, usize_in};
     use crate::util::rng::SplitMix64;

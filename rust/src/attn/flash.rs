@@ -5,12 +5,27 @@
 //! Loop order matches the paper exactly: outer loop over K/V blocks j,
 //! inner loop over Q blocks i, with O/l/m read-modified-written to HBM every
 //! inner iteration (Algorithm 1 lines 12-13) — that is what produces the
-//! Θ(N²d²/M) access count of Theorem 2.
+//! Θ(N²d²/M) access count of Theorem 2. This is the *faithful instrumented
+//! reference* of the two-kernel policy (see the `attn` module docs); the
+//! fast Q-outer production kernel lives in `attn::flash2`. The only
+//! concession to speed here is `tile_fully_unmasked`: tiles that provably
+//! contain no masked entry skip the per-element mask pass, which changes
+//! neither numerics nor HBM accounting.
 
 use super::masks::{dropout_scale, masked_score, NEG_INF};
-use super::{AttnConfig, AttnGrads, AttnOutput};
+use super::{AttnConfig, AttnGrads, AttnOutput, AttnStats};
 use crate::sim::hbm::Hbm;
 use crate::tensor::Tensor;
+
+/// True iff the tile rows×cols [r0, r1) × [c0, c1) cannot contain a masked
+/// entry: entirely at-or-below the causal diagonal (every col ≤ every row,
+/// i.e. c1 - 1 ≤ r0) and inside the valid key length. Tiles above the
+/// diagonal are skipped outright; this is the complement — fully *live*
+/// tiles skip the per-element `masked_score` pass.
+#[inline]
+pub(crate) fn tile_fully_unmasked(causal: bool, r0: usize, c1: usize, kv_len: usize) -> bool {
+    (!causal || c1 <= r0 + 1) && c1 <= kv_len
+}
 
 /// Tile geometry per Algorithm 1 line 1: B_c = ceil(M/4d), B_r = min(B_c, d).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -86,10 +101,12 @@ pub fn flash_forward(
 
             // Line 9: S_ij = tau Q_i K_j^T (on chip).
             let mut s = qi.matmul_bt(&kj).scale(tau);
-            for (rr, row) in (r0..r1).enumerate() {
-                for (cc, col) in (c0..c1).enumerate() {
-                    let x = s.data[rr * (c1 - c0) + cc];
-                    s.data[rr * (c1 - c0) + cc] = masked_score(x, row, col, cfg.causal, kv_len);
+            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+                for (rr, row) in (r0..r1).enumerate() {
+                    for (cc, col) in (c0..c1).enumerate() {
+                        let x = s.data[rr * (c1 - c0) + cc];
+                        s.data[rr * (c1 - c0) + cc] = masked_score(x, row, col, cfg.causal, kv_len);
+                    }
                 }
             }
 
@@ -154,6 +171,11 @@ pub fn flash_forward(
 }
 
 /// Algorithm 4: tiled backward with on-chip recomputation of P_ij.
+///
+/// `stats` accepts either saved-statistics representation (see
+/// [`AttnStats`]): the paper's (l, m) pair from [`flash_forward`] or the
+/// single logsumexp from [`super::flash2::flash2_forward`] — the
+/// recomputation only ever needs `P_ij = exp(s_ij - L_i)`.
 #[allow(clippy::too_many_arguments)]
 pub fn flash_backward(
     q: &Tensor,
@@ -161,8 +183,7 @@ pub fn flash_backward(
     v: &Tensor,
     o: &Tensor,
     dout: &Tensor,
-    l: &[f32],
-    m: &[f32],
+    stats: AttnStats<'_>,
     cfg: &AttnConfig,
     blocks: Blocks,
     hbm: &mut Hbm,
@@ -205,18 +226,20 @@ pub fn flash_backward(
 
             // Lines 11-13: recompute S_ij, P_ij on chip.
             let mut s = qi.matmul_bt(&kj).scale(tau);
-            for rr in 0..br {
-                for cc in 0..bc {
-                    let x = s.data[rr * bc + cc];
-                    s.data[rr * bc + cc] = masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+                for rr in 0..br {
+                    for cc in 0..bc {
+                        let x = s.data[rr * bc + cc];
+                        s.data[rr * bc + cc] =
+                            masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+                    }
                 }
             }
             let mut p = Tensor::zeros(&[br, bc]);
             for rr in 0..br {
-                let row = r0 + rr;
-                let lr = l[row].max(1e-37);
+                let lse = stats.lse(r0 + rr);
                 for cc in 0..bc {
-                    p.data[rr * bc + cc] = (s.data[rr * bc + cc] - m[row]).exp() / lr;
+                    p.data[rr * bc + cc] = (s.data[rr * bc + cc] - lse).exp();
                 }
             }
 
@@ -397,7 +420,7 @@ mod tests {
         let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
         let mut rng = SplitMix64::new(9);
         let dout = Tensor::randn(&[32, 8], &mut rng, 1.0);
-        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, &fwd.l, &fwd.m, &cfg, blocks, &mut Hbm::new());
+        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new());
         let sg = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
         assert!(fg.dq.max_abs_diff(&sg.dq) < 1e-4);
         assert!(fg.dk.max_abs_diff(&sg.dk) < 1e-4);
@@ -412,7 +435,7 @@ mod tests {
         let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
         let mut rng = SplitMix64::new(10);
         let dout = Tensor::randn(&[24, 8], &mut rng, 1.0);
-        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, &fwd.l, &fwd.m, &cfg, blocks, &mut Hbm::new());
+        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new());
         let sg = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
         assert!(fg.dq.max_abs_diff(&sg.dq) < 1e-4);
         assert!(fg.dk.max_abs_diff(&sg.dk) < 1e-4);

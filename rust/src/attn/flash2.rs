@@ -1,0 +1,423 @@
+//! Fast exact forward kernel (FlashAttention-2-style) — the production half
+//! of the two-kernel policy (see the `attn` module docs).
+//!
+//! Differences from the faithful Algorithm 1 mirror in `attn::flash`, each
+//! one of the overheads FlashAttention-2 (Dao, 2023) identifies:
+//!
+//! * **Q-outer loop order.** The outer loop walks Q row blocks; each row
+//!   block's accumulators (unnormalised O~, running max m, running sum l)
+//!   live on chip for the entire K/V sweep and are written to HBM exactly
+//!   once. Counted O/stats store traffic drops from Θ(T_c·(N·d + 2N))
+//!   (Algorithm 1 lines 2, 12-13) to exactly N·d + N.
+//! * **Single normalisation epilogue.** No per-tile diag(l)⁻¹ rescale: the
+//!   division by l happens once per row after the sweep, and the (l, m)
+//!   pair collapses into one logsumexp statistic L = m + ln(l) (Rabe &
+//!   Staats 2021) — all the backward pass needs ([`AttnStats`]).
+//! * **Row-block parallelism.** Output rows are disjoint across Q row
+//!   blocks, so blocks fan out over `std::thread::scope` workers with zero
+//!   synchronisation (the same worker pattern as `attn::distributed`, one
+//!   hierarchy level down). Per-block arithmetic is independent of the
+//!   partition, so output is **bitwise identical for any worker count**.
+//!   Callers fold batch·head slices into the same pool by invoking the
+//!   kernel per slice with `workers` spread across slices.
+//! * **Register-blocked micro-kernels.** S = tau·Q·Kᵀ and the P̃·V update
+//!   run through `tensor::dot4` / `tensor::pv_accum` (4-wide unrolled
+//!   accumulators) into scratch buffers allocated once per worker — no
+//!   allocation inside the tile loop, unlike the reference kernel's
+//!   per-tile `matmul_bt`.
+//!
+//! The kernel is exact: parity with `flash_forward` / `standard_forward`
+//! (including causal, padding and dropout) is property-tested below.
+
+use super::flash::{tile_fully_unmasked, Blocks};
+use super::masks::{dropout_scale, masked_score, NEG_INF};
+use super::{AttnConfig, AttnOutput, AttnStats};
+use crate::sim::hbm::Hbm;
+use crate::tensor::{matmul_bt_scaled_into, pv_accum, Tensor};
+
+/// Forward outputs of the fast kernel: O plus the per-row logsumexp.
+#[derive(Clone, Debug)]
+pub struct Flash2Output {
+    pub o: Tensor,
+    /// L_i = m_i + ln(l_i) — the single softmax statistic per row.
+    pub lse: Vec<f32>,
+}
+
+impl Flash2Output {
+    /// Borrow the statistics for the backward pass.
+    pub fn stats(&self) -> AttnStats<'_> {
+        AttnStats::Lse(&self.lse)
+    }
+
+    /// Convert to the (l, m)-pair output type: (l, m) = (1, L) is a valid
+    /// decomposition (l·eᵐ = e^L), so merge/consumer code written against
+    /// [`AttnOutput`] — e.g. `attn::distributed::merge_partials` — works
+    /// unchanged.
+    pub fn into_attn_output(self) -> AttnOutput {
+        let n = self.lse.len();
+        AttnOutput { o: self.o, l: vec![1.0; n], m: self.lse }
+    }
+}
+
+/// Fast exact forward. q: [n, d]; k, v: [n_k, d] (rectangular shapes serve
+/// the sequence-parallel sharded path). `workers` bounds the thread count;
+/// the result is bitwise independent of it.
+pub fn flash2_forward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> Flash2Output {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    let tau = cfg.tau_for(d);
+    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+    let b_r = blocks.b_r;
+    let t_r = n.div_ceil(b_r);
+
+    let mut o = Tensor::zeros(&[n, d]);
+    let mut lse = vec![0.0f32; n];
+    if t_r == 0 || n_k == 0 {
+        return Flash2Output { o, lse };
+    }
+
+    let w = workers.max(1).min(t_r);
+    let chunk = t_r.div_ceil(w);
+
+    std::thread::scope(|scope| {
+        // Carve the output into disjoint per-worker windows: worker wi owns
+        // row blocks [wi*chunk, (wi+1)*chunk)— a contiguous row range, so
+        // chunks_mut yields exactly one window per (nonempty) worker.
+        let o_chunks = o.data.chunks_mut(chunk * b_r * d);
+        let lse_chunks = lse.chunks_mut(chunk * b_r);
+        let mut handles = Vec::new();
+        for (wi, (o_mine, lse_mine)) in o_chunks.zip(lse_chunks).enumerate() {
+            let rb_lo = wi * chunk;
+            let rb_hi = ((wi + 1) * chunk).min(t_r);
+            handles.push(scope.spawn(move || {
+                row_block_sweep(q, k, v, cfg, blocks, tau, kv_len, rb_lo, rb_hi, o_mine, lse_mine)
+            }));
+        }
+        // Per-worker HBM counters merge associatively: totals are exact and
+        // independent of the partition.
+        for h in handles {
+            let local = h.join().expect("flash2 worker panicked");
+            hbm.merge(&local);
+        }
+    });
+
+    Flash2Output { o, lse }
+}
+
+/// Sequential sweep over row blocks [rb_lo, rb_hi): the whole K/V stream
+/// per block with on-chip accumulators, one epilogue store per block.
+#[allow(clippy::too_many_arguments)]
+fn row_block_sweep(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_len: usize,
+    rb_lo: usize,
+    rb_hi: usize,
+    o_out: &mut [f32],
+    lse_out: &mut [f32],
+) -> Hbm {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_c = n_k.div_ceil(b_c);
+    let row_base = rb_lo * b_r;
+    let mut hbm = Hbm::new();
+
+    // Worker-local scratch, allocated once (nothing allocates in the loop).
+    let mut s_buf = vec![0.0f32; b_r * b_c];
+    let mut acc = vec![0.0f32; b_r * d]; // unnormalised O~
+    let mut m_run = vec![f32::NEG_INFINITY; b_r];
+    let mut l_run = vec![0.0f32; b_r];
+
+    for i in rb_lo..rb_hi {
+        let r0 = i * b_r;
+        let r1 = ((i + 1) * b_r).min(n);
+        let br = r1 - r0;
+        // Q_i is loaded once per row block; O/l/m never round-trip to HBM —
+        // they live in `acc`/`m_run`/`l_run` until the epilogue.
+        hbm.load(br * d);
+        let q_rows = &q.data[r0 * d..r1 * d];
+        acc[..br * d].fill(0.0);
+        m_run[..br].fill(f32::NEG_INFINITY);
+        l_run[..br].fill(0.0);
+
+        for j in 0..t_c {
+            let c0 = j * b_c;
+            let c1 = ((j + 1) * b_c).min(n_k);
+            let bc = c1 - c0;
+            // Above-diagonal tiles contribute nothing (same skip as flash).
+            if cfg.causal && c0 > r1 - 1 {
+                continue;
+            }
+            // K_j, V_j stream through SRAM once per row block.
+            hbm.load(2 * bc * d);
+            let kj = &k.data[c0 * d..c1 * d];
+            let vj = &v.data[c0 * d..c1 * d];
+
+            // S = tau Q_i K_jᵀ, register-blocked, into the reused buffer.
+            let s = &mut s_buf[..br * bc];
+            matmul_bt_scaled_into(q_rows, kj, d, tau, s);
+            // Causal fast path: fully-live tiles skip the mask pass.
+            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+                for rr in 0..br {
+                    for cc in 0..bc {
+                        let x = s[rr * bc + cc];
+                        s[rr * bc + cc] =
+                            masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+                    }
+                }
+            }
+
+            // Online softmax with deferred normalisation: rescale the
+            // accumulators only when the running max actually moves.
+            for rr in 0..br {
+                let row = r0 + rr;
+                let srow = &mut s[rr * bc..(rr + 1) * bc];
+                let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
+                let m_new = m_run[rr].max(m_tile);
+                let alpha = (m_run[rr] - m_new).exp(); // exp(-inf)=0 first tile
+                let arow = &mut acc[rr * d..(rr + 1) * d];
+                if alpha != 1.0 {
+                    l_run[rr] *= alpha;
+                    for x in arow.iter_mut() {
+                        *x *= alpha;
+                    }
+                }
+                m_run[rr] = m_new;
+                let mut l_tile = 0.0f32;
+                for pw in srow.iter_mut() {
+                    *pw = (*pw - m_new).exp();
+                    l_tile += *pw;
+                }
+                // As in flash/standard: the normaliser excludes dropout.
+                l_run[rr] += l_tile;
+                if cfg.dropout_p > 0.0 {
+                    for (cc, pw) in srow.iter_mut().enumerate() {
+                        *pw *= dropout_scale(
+                            cfg.bh_index,
+                            row,
+                            c0 + cc,
+                            n,
+                            cfg.dropout_seed,
+                            cfg.dropout_p,
+                        );
+                    }
+                }
+                pv_accum(srow, vj, d, arow);
+            }
+        }
+
+        // Epilogue: one division per row, one HBM store per row block
+        // (O rows + a single logsumexp stat each).
+        for rr in 0..br {
+            let inv = 1.0 / l_run[rr].max(1e-37);
+            let arow = &acc[rr * d..(rr + 1) * d];
+            let out_off = (r0 - row_base + rr) * d;
+            let orow = &mut o_out[out_off..out_off + d];
+            for c in 0..d {
+                orow[c] = arow[c] * inv;
+            }
+            lse_out[r0 - row_base + rr] = m_run[rr] + l_run[rr].max(1e-37).ln();
+        }
+        hbm.store(br * d + br);
+    }
+
+    hbm
+}
+
+/// Fixed cross-kernel agreement probe (causal + padding + rectangular-ish
+/// shape, multi-threaded): max |flash2 - flash| over the workload. Used by
+/// the coordinator preflight before any training/serving runs.
+pub fn self_check() -> f32 {
+    use crate::util::rng::SplitMix64;
+    let (n, d) = (48usize, 16usize);
+    let mut rng = SplitMix64::new(0xF1A5_42);
+    let q = Tensor::randn(&[n, d], &mut rng, 1.0);
+    let k = Tensor::randn(&[n, d], &mut rng, 1.0);
+    let v = Tensor::randn(&[n, d], &mut rng, 1.0);
+    let cfg = AttnConfig { causal: true, kv_len: Some(37), ..Default::default() };
+    let blocks = Blocks::explicit(8, 8);
+    let reference = super::flash::flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
+    let fast = flash2_forward(&q, &k, &v, &cfg, blocks, 3, &mut Hbm::new());
+    let mut diff = reference.o.max_abs_diff(&fast.o);
+    for r in 0..n {
+        diff = diff.max((reference.stats().lse(r) - fast.lse[r]).abs());
+    }
+    diff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::flash::{flash_backward, flash_forward};
+    use crate::attn::standard::{standard_backward, standard_forward};
+    use crate::tensor::dot4;
+    use crate::util::prop::{for_each_case, usize_in};
+    use crate::util::rng::SplitMix64;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = SplitMix64::new(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+            Tensor::randn(&[n, d], &mut rng, 1.0),
+        )
+    }
+
+    #[test]
+    fn matches_standard_forward() {
+        let (q, k, v) = qkv(48, 8, 0);
+        let std = standard_forward(&q, &k, &v, &AttnConfig::default(), &mut Hbm::new());
+        let fast =
+            flash2_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(8, 16), 2, &mut Hbm::new());
+        assert!(std.o.max_abs_diff(&fast.o) < 1e-5);
+        for r in 0..48 {
+            assert!(
+                (std.stats().lse(r) - fast.lse[r]).abs() < 1e-4,
+                "lse row {r}: {} vs {}",
+                std.stats().lse(r),
+                fast.lse[r]
+            );
+        }
+    }
+
+    #[test]
+    fn property_parity_flash2_vs_flash_vs_standard() {
+        // The ISSUE grid: (n, d, B_r, B_c, causal, kv_len, dropout_p, workers).
+        for_each_case("flash2_parity", 20, |rng| {
+            let n = usize_in(rng, 2, 48);
+            let d = *crate::util::prop::choose(rng, &[2usize, 4, 8]);
+            let b_r = usize_in(rng, 1, n);
+            let b_c = usize_in(rng, 1, n);
+            let causal = rng.next_f32() < 0.5;
+            let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n)) } else { None };
+            let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
+            let workers = usize_in(rng, 1, 6);
+            let q = Tensor::randn(&[n, d], rng, 1.0);
+            let k = Tensor::randn(&[n, d], rng, 1.0);
+            let v = Tensor::randn(&[n, d], rng, 1.0);
+            let cfg = AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let blocks = Blocks::explicit(b_r, b_c);
+            let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+            let fla = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
+            let fa2 = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            let ctx = format!(
+                "n={n} d={d} blocks=({b_r},{b_c}) causal={causal} kv_len={kv_len:?} p={dropout_p} w={workers}"
+            );
+            assert!(std.o.max_abs_diff(&fa2.o) < 1e-4, "vs standard: {ctx}");
+            assert!(fla.o.max_abs_diff(&fa2.o) < 1e-4, "vs flash: {ctx}");
+        });
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        // Per-row-block arithmetic is partition-independent, so the
+        // epilogue output must be bitwise identical for any worker count.
+        let (q, k, v) = qkv(64, 16, 3);
+        let cfg = AttnConfig::causal();
+        let blocks = Blocks::explicit(8, 16);
+        let base = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+        for workers in [2usize, 3, 4, 8, 64] {
+            let multi = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            assert_eq!(base.o.data, multi.o.data, "O not bitwise equal at workers={workers}");
+            assert_eq!(base.lse, multi.lse, "lse not bitwise equal at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn hbm_accounting_independent_of_worker_count() {
+        let (q, k, v) = qkv(64, 8, 4);
+        let blocks = Blocks::explicit(16, 16);
+        let mut h1 = Hbm::new();
+        flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 1, &mut h1);
+        let mut h4 = Hbm::new();
+        flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 4, &mut h4);
+        assert_eq!(h1.loads, h4.loads);
+        assert_eq!(h1.stores, h4.stores);
+    }
+
+    #[test]
+    fn o_and_stats_written_exactly_once() {
+        // The tentpole IO claim: store traffic is exactly N·d + N floats —
+        // one O row + one stat per row, once — for any tiling.
+        for (n, d, br, bc) in [(64usize, 8usize, 16usize, 16usize), (48, 4, 8, 32), (40, 8, 16, 8)] {
+            let (q, k, v) = qkv(n, d, 5);
+            let mut hbm = Hbm::new();
+            flash2_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(br, bc), 2, &mut hbm);
+            assert_eq!(hbm.stores, (n * d + n) as u64, "n={n} d={d} blocks=({br},{bc})");
+        }
+    }
+
+    #[test]
+    fn backward_consumes_lse_stats() {
+        // flash2 forward -> Algorithm 4 backward via AttnStats::Lse.
+        let (q, k, v) = qkv(32, 8, 6);
+        let cfg = AttnConfig::causal();
+        let blocks = Blocks::explicit(8, 8);
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let mut rng = SplitMix64::new(9);
+        let dout = Tensor::randn(&[32, 8], &mut rng, 1.0);
+        let fg =
+            flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new());
+        let sg = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
+        assert!(fg.dq.max_abs_diff(&sg.dq) < 1e-4);
+        assert!(fg.dk.max_abs_diff(&sg.dk) < 1e-4);
+        assert!(fg.dv.max_abs_diff(&sg.dv) < 1e-4);
+    }
+
+    #[test]
+    fn rectangular_kv_matches_standard_padding() {
+        // Rectangular K/V (n_k != n) is what the sharded path feeds.
+        let mut rng = SplitMix64::new(8);
+        let q = Tensor::randn(&[24, 8], &mut rng, 1.0);
+        let k = Tensor::randn(&[40, 8], &mut rng, 1.0);
+        let v = Tensor::randn(&[40, 8], &mut rng, 1.0);
+        let cfg = AttnConfig { kv_len: Some(33), tau: Some(0.25), ..Default::default() };
+        let fast = flash2_forward(&q, &k, &v, &cfg, Blocks::explicit(8, 8), 3, &mut Hbm::new());
+        // Oracle: dense softmax over the first kv_len keys.
+        let tau = 0.25f32;
+        for r in 0..24 {
+            let mut scores: Vec<f32> =
+                (0..33).map(|c| tau * dot4(q.row(r), k.row(c))).collect();
+            let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - mx).exp();
+                z += *s;
+            }
+            for c in 0..8 {
+                let expect: f32 =
+                    (0..33).map(|cc| scores[cc] / z * v.row(cc)[c]).sum();
+                assert!((fast.o.row(r)[c] - expect).abs() < 1e-4, "row {r} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn into_attn_output_round_trips_stats() {
+        let (q, k, v) = qkv(16, 4, 10);
+        let fast = flash2_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(4, 4), 1, &mut Hbm::new());
+        let lse_before = fast.lse.clone();
+        let out = fast.into_attn_output();
+        for r in 0..16 {
+            assert!((out.stats().lse(r) - lse_before[r]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn self_check_is_tight() {
+        assert!(self_check() < 1e-4, "self_check diff {}", self_check());
+    }
+}

@@ -8,12 +8,37 @@
 //!    records loads/stores at exactly the points the paper's pseudo-code
 //!    touches HBM, turning the IO-complexity theorems into measurements.
 //!
+//! # Two-kernel policy
+//!
+//! The crate deliberately carries **two** exact forward kernels:
+//!
+//! * [`flash::flash_forward`] — the *faithful instrumented reference*.
+//!   Loop order, accumulator round-trips and HBM accounting match
+//!   Algorithm 1 line for line (K/V-outer, O/l/m read-modified-written to
+//!   HBM every inner iteration). Its measured traffic realises the
+//!   Θ(N²d²/M) count of Theorem 2, which several tests and figures assert
+//!   exactly — so this kernel must stay slow-but-faithful.
+//! * [`flash2::flash2_forward`] — the *fast production kernel*
+//!   (FlashAttention-2-style): outer loop over Q row blocks so the O/ℓ
+//!   accumulators stay on chip for the whole K/V sweep, a single
+//!   normalisation epilogue per row, one logsumexp statistic instead of
+//!   the (l, m) pair, register-blocked micro-kernels
+//!   (`tensor::dot4`/`tensor::pv_accum`) and `std::thread::scope`
+//!   parallelism across row blocks. Everything on a hot path (the
+//!   sequence-parallel sharded driver, the coordinator preflight, the
+//!   serve-path IO model, the perf benches) routes through it; the
+//!   reference kernel remains the oracle it is tested against.
+//!
+//! Both kernels produce softmax statistics; [`AttnStats`] abstracts over
+//! the two representations so the backward pass accepts either.
+//!
 //! All functions operate on one batch*head slice `[n, d]`; callers fold the
 //! leading dims.
 
 pub mod block_sparse;
 pub mod distributed;
 pub mod flash;
+pub mod flash2;
 pub mod masks;
 pub mod standard;
 
@@ -56,6 +81,50 @@ impl AttnConfig {
     }
 }
 
+/// Row-wise softmax statistics saved by a forward pass, in either of the
+/// two equivalent representations:
+///
+/// * `Pair` — the paper's (l, m) pair (Algorithm 1/2): row max `m_i` and
+///   the sum of exponentials `l_i` relative to it.
+/// * `Lse` — the single logsumexp `L_i = m_i + ln(l_i)` (Rabe & Staats
+///   2021; FlashAttention-2), which is all the backward pass needs:
+///   `P_ij = exp(s_ij - L_i)`.
+///
+/// [`flash::flash_backward`] consumes either, so outputs from the faithful
+/// kernel and the fast kernel are interchangeable.
+#[derive(Clone, Copy, Debug)]
+pub enum AttnStats<'a> {
+    Pair { l: &'a [f32], m: &'a [f32] },
+    Lse(&'a [f32]),
+}
+
+impl AttnStats<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            AttnStats::Pair { l, .. } => l.len(),
+            AttnStats::Lse(lse) => lse.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logsumexp of row `r` under either representation.
+    #[inline]
+    pub fn lse(&self, r: usize) -> f32 {
+        match self {
+            AttnStats::Pair { l, m } => m[r] + l[r].max(1e-37).ln(),
+            AttnStats::Lse(lse) => lse[r],
+        }
+    }
+
+    /// Materialise the logsumexp vector (diagnostics / serialisation).
+    pub fn to_lse_vec(&self) -> Vec<f32> {
+        (0..self.len()).map(|r| self.lse(r)).collect()
+    }
+}
+
 /// Forward outputs: O plus the softmax statistics the paper saves (l, m).
 #[derive(Clone, Debug)]
 pub struct AttnOutput {
@@ -64,10 +133,38 @@ pub struct AttnOutput {
     pub m: Vec<f32>,
 }
 
+impl AttnOutput {
+    /// Borrow the saved statistics in (l, m) form for the backward pass.
+    pub fn stats(&self) -> AttnStats<'_> {
+        AttnStats::Pair { l: &self.l, m: &self.m }
+    }
+}
+
 /// Gradients returned by the backward passes.
 #[derive(Clone, Debug)]
 pub struct AttnGrads {
     pub dq: Tensor,
     pub dk: Tensor,
     pub dv: Tensor,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_pair_and_lse_agree() {
+        let l = vec![2.0f32, 0.5, 1.0];
+        let m = vec![0.0f32, 1.5, -2.0];
+        let pair = AttnStats::Pair { l: &l, m: &m };
+        let lse_vec = pair.to_lse_vec();
+        let lse = AttnStats::Lse(&lse_vec);
+        assert_eq!(pair.len(), 3);
+        assert!(!pair.is_empty());
+        for r in 0..3 {
+            let expect = m[r] + l[r].ln();
+            assert!((pair.lse(r) - expect).abs() < 1e-6);
+            assert!((lse.lse(r) - expect).abs() < 1e-6);
+        }
+    }
 }

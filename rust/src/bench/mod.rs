@@ -19,6 +19,19 @@ pub fn median_time<F: FnMut()>(k: usize, mut f: F) -> f64 {
     times[times.len() / 2]
 }
 
+/// Mean wall time in seconds of `k` runs of `f` (after one warmup) — the
+/// perf-trajectory metric BENCH_attn.json records (means compose across
+/// runs; medians don't).
+pub fn mean_time<F: FnMut()>(k: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let k = k.max(1);
+    let t0 = Instant::now();
+    for _ in 0..k {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / k as f64
+}
+
 /// Where bench CSVs are written.
 pub fn out_dir() -> PathBuf {
     let p = PathBuf::from("bench_out");
@@ -51,6 +64,14 @@ mod tests {
     #[test]
     fn median_time_positive() {
         let t = median_time(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn mean_time_positive() {
+        let t = mean_time(3, || {
             std::hint::black_box((0..1000).sum::<u64>());
         });
         assert!(t >= 0.0);

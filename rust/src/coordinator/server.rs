@@ -8,7 +8,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::trainer::LmTrainer;
+use crate::attn::flash::Blocks;
 use crate::runtime::Runtime;
+use crate::sim::cost;
 use crate::util::rng::SplitMix64;
 
 #[derive(Clone, Debug)]
@@ -54,6 +56,19 @@ pub struct Server {
 impl Server {
     pub fn new(trainer: LmTrainer) -> Server {
         Server { trainer, temperature: 0.8, stats: ServeStats::default(), rng: SplitMix64::new(0x5EED) }
+    }
+
+    /// Modeled attention accumulator *write* traffic per forward at the
+    /// serving context length, in f32 elements per head slice: (faithful
+    /// Algorithm-1 kernel, fast Q-outer flash2 kernel). The fast kernel
+    /// writes O/stats exactly once (N·d + N) instead of once per inner
+    /// iteration — the IO win the serve path routes through; d = 64 is the
+    /// paper's GPT-2 head dim.
+    pub fn modeled_attn_io(&self) -> (u64, u64) {
+        let n = self.trainer.n_ctx as u64;
+        let d = 64u64;
+        let blocks = Blocks::from_sram(48 * 1024, d as usize, n as usize);
+        (cost::flash_fwd_stores(n, d, blocks, true), cost::flash2_fwd_stores(n, d))
     }
 
     /// Sample the next byte from logits at `position` with temperature.

@@ -4,15 +4,31 @@
 //! vectors and feeds them back — Python never runs.
 
 use std::path::Path;
+use std::sync::OnceLock;
 
 use anyhow::{ensure, Context, Result};
 
 use super::config::TrainConfig;
 use super::metrics::Metrics;
+use crate::attn::flash2;
 use crate::data::batch::{Batch, ClsDataset};
 use crate::data::corpus::Corpus;
 use crate::runtime::{Runtime, Value};
 use crate::util::rng::SplitMix64;
+
+/// One-time preflight on the training/serving path: the fast attention
+/// kernel (`attn::flash2`, which the sharded driver and perf paths route
+/// through) must agree with the paper-faithful reference mirror before any
+/// step runs. Costs one tiny [48, 16] workload, once per process.
+fn preflight_fast_kernel() -> Result<()> {
+    static DIFF: OnceLock<f32> = OnceLock::new();
+    let diff = *DIFF.get_or_init(flash2::self_check);
+    ensure!(
+        diff < 1e-4,
+        "fast attention kernel (attn::flash2) disagrees with the reference mirror: max diff {diff}"
+    );
+    Ok(())
+}
 
 /// Shared state-holding core for both trainers.
 struct ModelState {
@@ -26,6 +42,7 @@ struct ModelState {
 
 impl ModelState {
     fn init(rt: &mut Runtime, tag: &str, seed: i32) -> Result<ModelState> {
+        preflight_fast_kernel()?;
         let info = rt.manifest.model(tag)?.clone();
         let n = info.param_names.len();
         let params = rt
@@ -304,5 +321,17 @@ impl ClsTrainer {
 
     pub fn save(&self, path: &Path) -> Result<()> {
         self.state.save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preflight_accepts_the_fast_kernel() {
+        preflight_fast_kernel().unwrap();
+        // Cached: second call must not re-run the workload (OnceLock).
+        preflight_fast_kernel().unwrap();
     }
 }

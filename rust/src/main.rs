@@ -165,6 +165,13 @@ fn serve(args: &Args) -> Result<()> {
         server.stats.tokens_per_second(),
         server.stats.mean_latency_ms()
     );
+    let (io_flash, io_flash2) = server.modeled_attn_io();
+    println!(
+        "modeled attention O/stats write traffic per head slice at n_ctx: \
+         flash {io_flash} vs flash2 {io_flash2} elems ({:.2}x fewer accumulator \
+         round-trips from the Q-outer kernel)",
+        io_flash as f64 / io_flash2 as f64
+    );
     Ok(())
 }
 

@@ -137,6 +137,60 @@ pub fn flash_bwd(n: u64, d: u64, blocks: Blocks, causal: bool, dropout: bool) ->
     Cost { hbm_elems: hbm, flops: live * flops_per_pair, kernels: 1 }
 }
 
+/// Fast Q-outer forward (attn::flash2::flash2_forward) — matches its
+/// instrumented counter access-for-access on divisible tilings: Q loaded
+/// once (N·d), K/V streamed once per live row-block pair (2·B_c·d each),
+/// and O plus the single logsumexp stat written exactly once (N·d + N).
+/// The Θ(T_c·N·d) read-modify-write traffic of Algorithm 1 lines 2/8/12-13
+/// is gone — that is the FlashAttention-2-style IO win.
+pub fn flash2_fwd(n: u64, d: u64, blocks: Blocks, causal: bool, dropout: bool) -> Cost {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    let live = live_pairs(n, b_r, b_c, causal);
+    let hbm = n * d                 // Q_i loaded once per row block
+        + live * (2 * b_c * d)      // K_j/V_j per live pair
+        + (n * d + n);              // epilogue: O + logsumexp, once
+    let tile = b_r * b_c;
+    // Same matmul/softmax work as flash minus the per-tile rescale; one
+    // divide+multiply epilogue per row.
+    let mut flops_per_pair = 4 * tile * d + SOFTMAX_OPS_PER_ELEM * tile + 2 * b_r;
+    if dropout {
+        flops_per_pair += DROPOUT_OPS_PER_ELEM * tile;
+    }
+    let epilogue_flops = n * (d + 2);
+    Cost { hbm_elems: hbm, flops: live * flops_per_pair + epilogue_flops, kernels: 1 }
+}
+
+/// Store-side (write) HBM traffic of the faithful Algorithm-1 forward:
+/// the O/l/m init plus one accumulator write-back per live tile pair
+/// (Algorithm 1 lines 2, 12-13) — Θ(T_c·(N·d + 2N)) on dense tilings.
+pub fn flash_fwd_stores(n: u64, d: u64, blocks: Blocks, causal: bool) -> u64 {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    (n * d + 2 * n) + live_pairs(n, b_r, b_c, causal) * (b_r * d + 2 * b_r)
+}
+
+/// Store-side HBM traffic of the fast Q-outer forward: O and the logsumexp
+/// stat leave chip exactly once — N·d + N, independent of the tiling.
+pub fn flash2_fwd_stores(n: u64, d: u64) -> u64 {
+    n * d + n
+}
+
+/// Rectangular fast forward: per-device cost of the sequence-parallel
+/// multi-GPU extension (attn::distributed) with each device running
+/// flash2 over its key shard.
+pub fn flash2_fwd_rect(n_q: u64, n_k: u64, d: u64, blocks: Blocks) -> Cost {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    let t_r = n_q.div_ceil(b_r);
+    let t_c = n_k.div_ceil(b_c);
+    let live = t_r * t_c;
+    let hbm = n_q * d + live * (2 * b_c * d) + (n_q * d + n_q);
+    let tile = b_r * b_c;
+    Cost {
+        hbm_elems: hbm,
+        flops: live * (4 * tile * d + SOFTMAX_OPS_PER_ELEM * tile + 2 * b_r) + n_q * (d + 2),
+        kernels: 1,
+    }
+}
+
 /// Rectangular flash forward: n_q query rows attending n_k key rows —
 /// the per-device cost of the sequence-parallel multi-GPU extension
 /// (attn::distributed), where each device holds a key shard.
@@ -277,6 +331,40 @@ mod tests {
             "ratio {ratio} s {}",
             butter.sparsity()
         );
+    }
+
+    #[test]
+    fn flash2_store_traffic_is_single_writeback() {
+        let blocks = Blocks::explicit(64, 64);
+        let f1 = flash_fwd_stores(1024, 64, blocks, false);
+        let f2 = flash2_fwd_stores(1024, 64);
+        assert_eq!(f2, 1024 * 64 + 1024);
+        // Algorithm 1 rewrites the accumulators once per K/V block:
+        // (1 + T_c)·(N·d + 2N) on a dense divisible tiling.
+        assert_eq!(f1, (1 + 16) * (1024 * 64 + 2 * 1024));
+        assert!(f1 > 16 * f2);
+    }
+
+    #[test]
+    fn flash2_fewer_total_accesses_on_square_blocks() {
+        // With B_r = B_c the Q-outer kernel wins on totals too: per live
+        // pair it streams 2·B·d (K/V) instead of 3·B·d + 4·B (Q/O/l/m).
+        let n = 4096;
+        let d = 64;
+        let blocks = Blocks::explicit(128, 128);
+        let f1 = flash_fwd(n, d, blocks, false, false).hbm_elems;
+        let f2 = flash2_fwd(n, d, blocks, false, false).hbm_elems;
+        assert!(f2 < f1, "flash2 {f2} vs flash {f1}");
+    }
+
+    #[test]
+    fn flash2_causal_halves_live_traffic() {
+        let n = 2048;
+        let d = 64;
+        let blocks = Blocks::explicit(64, 64);
+        let full = flash2_fwd(n, d, blocks, false, false).hbm_elems as f64;
+        let caus = flash2_fwd(n, d, blocks, true, false).hbm_elems as f64;
+        assert!(caus < 0.65 * full, "causal {caus} vs full {full}");
     }
 
     #[test]

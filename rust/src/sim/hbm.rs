@@ -42,6 +42,14 @@ impl Hbm {
         self.loads = 0;
         self.stores = 0;
     }
+
+    /// Fold another counter into this one — used by the multi-worker fast
+    /// kernel (`attn::flash2`), where each worker counts its own traffic
+    /// and totals merge associatively (so counts are partition-independent).
+    pub fn merge(&mut self, other: &Hbm) {
+        self.loads += other.loads;
+        self.stores += other.stores;
+    }
 }
 
 #[cfg(test)]
@@ -66,5 +74,18 @@ mod tests {
         h.load(3);
         h.reset();
         assert_eq!(h.accesses(), 0);
+    }
+
+    #[test]
+    fn merge_adds_both_directions() {
+        let mut a = Hbm::new();
+        a.load(3);
+        a.store(1);
+        let mut b = Hbm::new();
+        b.load(10);
+        b.store(20);
+        a.merge(&b);
+        assert_eq!(a.loads, 13);
+        assert_eq!(a.stores, 21);
     }
 }

@@ -215,6 +215,94 @@ impl Tensor {
         let c = self.cols();
         Tensor::from_vec(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
     }
+
+}
+
+/// out[i*n + j] = scale * (a row i · b row j) for row-major `a`: [m, k] and
+/// `b`: [n, k] given as flat slices — the register-blocked fast path behind
+/// S = tau·Q·Kᵀ in `attn::flash2`. Unlike [`Tensor::matmul_bt`] it takes
+/// raw slices and a caller-provided output buffer (no Tensor views, no
+/// allocation in the tile loop) and fuses the softmax scale. The dot
+/// products run through [`dot4`], which reassociates the f32 sum
+/// (4 accumulator chains), so results differ from `matmul_bt` by rounding
+/// only — the reference kernel keeps its strictly sequential sum for the
+/// instrumented mirrors.
+pub fn matmul_bt_scaled_into(a: &[f32], b: &[f32], k: usize, scale: f32, out: &mut [f32]) {
+    assert!(k > 0, "matmul_bt_scaled_into: k must be positive");
+    debug_assert_eq!(a.len() % k, 0, "a not a whole number of rows");
+    debug_assert_eq!(b.len() % k, 0, "b not a whole number of rows");
+    let m = a.len() / k;
+    let n = b.len() / k;
+    assert!(out.len() >= m * n, "output buffer too small: {} < {}", out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = scale * dot4(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Dot product with 4 unrolled accumulators. f32 addition is not
+/// associative, so the single-chain reduction in `matmul_bt` cannot be
+/// vectorised or pipelined by the compiler; four independent chains expose
+/// the ILP/SIMD the hardware has, at the cost of a reassociated (but
+/// equally accurate) sum.
+#[inline]
+pub fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot4 length mismatch");
+    let k = a.len().min(b.len());
+    let mut ca = a[..k].chunks_exact(4);
+    let mut cb = b[..k].chunks_exact(4);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        s0 += xa[0] * xb[0];
+        s1 += xa[1] * xb[1];
+        s2 += xa[2] * xb[2];
+        s3 += xa[3] * xb[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (xa, xb) in ca.remainder().iter().zip(cb.remainder()) {
+        s += xa * xb;
+    }
+    s
+}
+
+/// acc[c] += Σ_cc p[cc] · v[cc*d + c] — the P̃·V micro-kernel for
+/// `attn::flash2`: row-of-V-major (contiguous, vectorisable across c) with
+/// 4 V rows in flight per pass so the accumulator row is loaded/stored once
+/// per group instead of once per weight. Groups whose 4 weights are all
+/// zero (dropout) are skipped.
+#[inline]
+pub fn pv_accum(p: &[f32], v: &[f32], d: usize, acc: &mut [f32]) {
+    debug_assert!(v.len() >= p.len() * d, "V too small for P");
+    let accd = &mut acc[..d];
+    let bc = p.len();
+    let bc4 = bc - bc % 4;
+    let mut cc = 0;
+    while cc < bc4 {
+        let (w0, w1, w2, w3) = (p[cc], p[cc + 1], p[cc + 2], p[cc + 3]);
+        if w0 != 0.0 || w1 != 0.0 || w2 != 0.0 || w3 != 0.0 {
+            let v0 = &v[cc * d..(cc + 1) * d];
+            let v1 = &v[(cc + 1) * d..(cc + 2) * d];
+            let v2 = &v[(cc + 2) * d..(cc + 3) * d];
+            let v3 = &v[(cc + 3) * d..(cc + 4) * d];
+            for c in 0..d {
+                accd[c] += w0 * v0[c] + w1 * v1[c] + w2 * v2[c] + w3 * v3[c];
+            }
+        }
+        cc += 4;
+    }
+    while cc < bc {
+        let w = p[cc];
+        if w != 0.0 {
+            let vr = &v[cc * d..(cc + 1) * d];
+            for c in 0..d {
+                accd[c] += w * vr[c];
+            }
+        }
+        cc += 1;
+    }
 }
 
 #[cfg(test)]
@@ -310,5 +398,61 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[4, 2]);
         a.matmul(&b);
+    }
+
+    #[test]
+    fn dot4_matches_sequential_sum() {
+        let mut rng = SplitMix64::new(7);
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 64, 100] {
+            let a = rng.normal_vec(len, 1.0);
+            let b = rng.normal_vec(len, 1.0);
+            let seq: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot4(&a, &b);
+            assert!(
+                (seq - fast).abs() <= 1e-5 + 1e-5 * seq.abs(),
+                "len {len}: {seq} vs {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_bt_scaled_into_matches_reference() {
+        for_each_case("bt_into", 10, |rng| {
+            let (m, k, n) = (usize_in(rng, 1, 9), usize_in(rng, 1, 9), usize_in(rng, 1, 9));
+            let a = Tensor::randn(&[m, k], rng, 1.0);
+            let b = Tensor::randn(&[n, k], rng, 1.0);
+            let scale = 0.5 + rng.next_f32();
+            let reference = a.matmul_bt(&b).scale(scale);
+            let mut out = vec![0.0f32; m * n];
+            matmul_bt_scaled_into(&a.data, &b.data, k, scale, &mut out);
+            assert_allclose(&out, &reference.data, 1e-5, 1e-4, "bt_into");
+        });
+    }
+
+    #[test]
+    fn pv_accum_matches_naive_and_accumulates() {
+        for_each_case("pv", 10, |rng| {
+            let (bc, d) = (usize_in(rng, 1, 11), usize_in(rng, 1, 9));
+            let p = rng.normal_vec(bc, 1.0);
+            let v = rng.normal_vec(bc * d, 1.0);
+            let init = rng.normal_vec(d, 1.0);
+            let mut acc = init.clone();
+            pv_accum(&p, &v, d, &mut acc);
+            for c in 0..d {
+                let naive: f32 =
+                    init[c] + (0..bc).map(|cc| p[cc] * v[cc * d + c]).sum::<f32>();
+                assert!((acc[c] - naive).abs() < 1e-4, "c={c}: {} vs {naive}", acc[c]);
+            }
+        });
+    }
+
+    #[test]
+    fn pv_accum_skips_zero_weight_groups() {
+        // All-zero P must leave the accumulator untouched (dropout path).
+        let p = vec![0.0f32; 8];
+        let v = vec![1.0f32; 8 * 4];
+        let mut acc = vec![2.5f32; 4];
+        pv_accum(&p, &v, 4, &mut acc);
+        assert_eq!(acc, vec![2.5; 4]);
     }
 }

@@ -5,6 +5,7 @@
 
 use flashattn::attn::block_sparse::block_sparse_forward;
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
+use flashattn::attn::flash2::flash2_forward;
 use flashattn::attn::masks::BlockMask;
 use flashattn::attn::standard::{standard_backward, standard_forward};
 use flashattn::attn::AttnConfig;
@@ -67,9 +68,67 @@ fn flash_bwd_analytic_matches_instrumented_exactly() {
     let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
     let dout = Tensor::full(&[n, d], 1.0);
     let mut hbm = Hbm::new();
-    flash_backward(&q, &k, &v, &fwd.o, &dout, &fwd.l, &fwd.m, &cfg, blocks, &mut hbm);
+    flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut hbm);
     let pred = cost::flash_bwd(n as u64, d as u64, blocks, false, false);
     assert_eq!(hbm.accesses(), pred.hbm_elems);
+}
+
+#[test]
+fn flash2_fwd_analytic_matches_instrumented_exactly() {
+    // Divisible tilings: the closed form is exact, for any worker count.
+    for (n, d, br, bc) in [(128usize, 16usize, 16usize, 32usize), (256, 8, 32, 64), (64, 4, 8, 8)] {
+        let (q, k, v) = qkv(n, d, 12);
+        let blocks = Blocks::explicit(br, bc);
+        for workers in [1usize, 3, 8] {
+            let mut hbm = Hbm::new();
+            flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, workers, &mut hbm);
+            let pred = cost::flash2_fwd(n as u64, d as u64, blocks, false, false);
+            assert_eq!(
+                hbm.accesses(),
+                pred.hbm_elems,
+                "n={n} d={d} blocks=({br},{bc}) workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn flash2_causal_analytic_matches_instrumented() {
+    let (n, d, br, bc) = (128usize, 8usize, 16usize, 16usize);
+    let (q, k, v) = qkv(n, d, 13);
+    let blocks = Blocks::explicit(br, bc);
+    let mut hbm = Hbm::new();
+    flash2_forward(&q, &k, &v, &AttnConfig::causal(), blocks, 4, &mut hbm);
+    let pred = cost::flash2_fwd(n as u64, d as u64, blocks, true, false);
+    assert_eq!(hbm.accesses(), pred.hbm_elems);
+}
+
+#[test]
+fn flash2_writes_o_and_stats_exactly_once_vs_flash_per_iteration() {
+    // The tentpole IO claim, measured: Algorithm 1 stores the O/l/m
+    // accumulators once per live (i, j) pair plus the init — Θ(T_c·N·d) —
+    // while the Q-outer kernel stores O and the logsumexp exactly once:
+    // N·d + N floats, regardless of tiling or worker count.
+    let (n, d) = (256usize, 16usize);
+    let (q, k, v) = qkv(n, d, 14);
+    let blocks = Blocks::explicit(32, 32); // T_r = T_c = 8, divisible
+    let t_c = 8u64;
+
+    let mut h_flash = Hbm::new();
+    flash_forward(&q, &k, &v, &AttnConfig::default(), blocks, &mut h_flash);
+    let mut h_flash2 = Hbm::new();
+    flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 4, &mut h_flash2);
+
+    let nd = (n * d) as u64;
+    assert_eq!(h_flash2.stores, nd + n as u64, "flash2 single epilogue write");
+    assert_eq!(
+        h_flash.stores,
+        (1 + t_c) * (nd + 2 * n as u64),
+        "flash rewrites accumulators once per K/V block"
+    );
+    assert!(h_flash.stores > t_c * h_flash2.stores / 2);
+    assert_eq!(cost::flash2_fwd_stores(n as u64, d as u64), h_flash2.stores);
+    assert_eq!(cost::flash_fwd_stores(n as u64, d as u64, blocks, false), h_flash.stores);
 }
 
 #[test]

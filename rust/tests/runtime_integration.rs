@@ -5,6 +5,7 @@
 use std::path::Path;
 
 use flashattn::attn::flash::{flash_forward, Blocks};
+use flashattn::attn::flash2::flash2_forward;
 use flashattn::attn::AttnConfig;
 use flashattn::coordinator::{LmTrainer, TrainConfig};
 use flashattn::coordinator::trainer::ClsTrainer;
@@ -64,6 +65,11 @@ fn flash_artifact_matches_rust_mirror() {
             &slice(&inputs[0]), &slice(&inputs[1]), &slice(&inputs[2]),
             &AttnConfig::causal(), Blocks::explicit(16, 16), &mut Hbm::new());
         assert!(out.o.max_abs_diff(&slice(&flash)) < 1e-4, "bh slice {b}");
+        // The fast production kernel must agree with the artifact too.
+        let fast = flash2_forward(
+            &slice(&inputs[0]), &slice(&inputs[1]), &slice(&inputs[2]),
+            &AttnConfig::causal(), Blocks::explicit(16, 16), 2, &mut Hbm::new());
+        assert!(fast.o.max_abs_diff(&slice(&flash)) < 1e-4, "flash2 bh slice {b}");
     }
 }
 

@@ -1,0 +1,158 @@
+//! Vendored minimal `anyhow`: the subset of the real crate's API this
+//! workspace uses (`Error`, `Result`, `Context`, `anyhow!`, `bail!`,
+//! `ensure!`), re-implemented over a plain message string because the
+//! offline crate universe has no crates.io access.
+//!
+//! Semantics mirror anyhow where it matters to callers:
+//! * `Error` deliberately does NOT implement `std::error::Error`, so the
+//!   blanket `From<E: std::error::Error>` conversion (what makes `?` work
+//!   on io/parse/xla errors inside `fn ... -> anyhow::Result<T>`) does not
+//!   overlap with the reflexive `From<T> for T`.
+//! * `.context(..)` / `.with_context(..)` prepend "context: cause" the way
+//!   anyhow's `{:#}` alternate formatting renders an error chain.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` — `Err` defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options, exactly like anyhow's.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("parsing int")?;
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing int:"), "{e}");
+        assert_eq!(parse("-3").unwrap_err().to_string(), "negative: -3");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn nested_context_chains() {
+        let base: Result<()> = Err(anyhow!("root cause {}", 42));
+        let e = base.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root cause 42");
+        assert_eq!(format!("{e:#}"), "outer: root cause 42");
+    }
+}
