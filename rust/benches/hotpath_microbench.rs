@@ -3,20 +3,25 @@
 //!
 //!  * pure-Rust mirrors: flash_forward vs standard_forward per [n, d] slice
 //!    (the instrumented engine behind fig2);
-//!  * fast-kernel head-to-head: flash (faithful Algorithm 1) vs flash2
-//!    (Q-outer, register-blocked, multi-threaded) at n ∈ {512, 1K, 4K},
-//!    emitting BENCH_attn.json (mean ns/iter per kernel) so future PRs can
+//!  * fast-kernel head-to-head, forward AND backward: flash (faithful
+//!    Algorithms 1/4) vs flash2 (Q-outer fwd; two-phase Q-outer dQ +
+//!    column-parallel dK/dV bwd) at n ∈ {512, 1K, 4K}, emitting
+//!    BENCH_attn.json (mean ns/iter per kernel and pass) so future PRs can
 //!    track the perf trajectory;
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
 //!    cost per step).
+//!
+//! `BENCH_SMOKE=1` shrinks sizes and iteration counts so CI can run the
+//! whole bench as a cheap regression gate (BENCH_attn.json is still
+//! written, flagged `"smoke": true`).
 
 use std::path::Path;
 use std::time::Instant;
 
-use flashattn::attn::flash::{flash_forward, Blocks};
-use flashattn::attn::flash2::flash2_forward;
+use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
+use flashattn::attn::flash2::{flash2_backward, flash2_forward};
 use flashattn::attn::standard::standard_forward;
 use flashattn::attn::AttnConfig;
 use flashattn::bench::{mean_time, median_time};
@@ -54,25 +59,39 @@ fn mirrors() {
     t.print();
 }
 
-/// flash vs flash2 head-to-head at d=64 — the kernel the production paths
-/// route through vs the instrumented reference it is tested against.
-/// Emits BENCH_attn.json at the repo root for the perf trajectory.
-fn fast_kernel_head_to_head() {
+/// flash vs flash2 head-to-head at d=64, forward and backward — the
+/// kernels the production paths route through vs the instrumented
+/// references they are tested against. Emits BENCH_attn.json at the repo
+/// root for the perf trajectory. The backward comparison runs both kernels
+/// on the same square tiling (the regime the two-phase kernel targets;
+/// see sim::cost::flash2_bwd) and the same flash2-forward outputs.
+fn fast_kernel_head_to_head(smoke: bool) {
     let d = 64usize;
     let workers = 4usize;
     let mut t = Table::new(
         "fast kernel head-to-head (per [n,64] slice, mean ns/iter)",
-        &["n", "flash (ms)", "flash2 w1 (ms)", "flash2 w4 (ms)", "speedup w1", "speedup w4"],
+        &[
+            "n",
+            "flash fwd (ms)",
+            "flash2 fwd w1 (ms)",
+            "flash2 fwd w4 (ms)",
+            "flash bwd (ms)",
+            "flash2 bwd w1 (ms)",
+            "flash2 bwd w4 (ms)",
+        ],
     );
     let mut json_rows: Vec<String> = Vec::new();
-    for n in [512usize, 1024, 4096] {
+    let sizes: &[usize] = if smoke { &[128, 256] } else { &[512, 1024, 4096] };
+    for &n in sizes {
         let mut rng = SplitMix64::new(1);
         let q = Tensor::randn(&[n, d], &mut rng, 1.0);
         let k = Tensor::randn(&[n, d], &mut rng, 1.0);
         let v = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
         let cfg = AttnConfig::default();
         let blocks = Blocks::from_sram(48 * 1024, d, n);
-        let iters = if n >= 4096 { 2 } else { 5 };
+        let bwd_blocks = Blocks::explicit(n.min(64), n.min(64));
+        let iters = if smoke { 1 } else if n >= 4096 { 2 } else { 5 };
         let t_flash = mean_time(iters, || {
             std::hint::black_box(flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new()));
         });
@@ -82,28 +101,54 @@ fn fast_kernel_head_to_head() {
         let t_f2_w4 = mean_time(iters, || {
             std::hint::black_box(flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new()));
         });
+        // Backward: both kernels consume the same forward outputs.
+        let fwd = flash2_forward(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let bwd_iters = if smoke { 1 } else if n >= 4096 { 1 } else { 3 };
+        let t_bwd_flash = mean_time(bwd_iters, || {
+            std::hint::black_box(flash_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, &mut Hbm::new(),
+            ));
+        });
+        let t_bwd_f2_w1 = mean_time(bwd_iters, || {
+            std::hint::black_box(flash2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, 1, &mut Hbm::new(),
+            ));
+        });
+        let t_bwd_f2_w4 = mean_time(bwd_iters, || {
+            std::hint::black_box(flash2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, workers, &mut Hbm::new(),
+            ));
+        });
         t.row(vec![
             n.to_string(),
             format!("{:.2}", t_flash * 1e3),
             format!("{:.2}", t_f2_w1 * 1e3),
             format!("{:.2}", t_f2_w4 * 1e3),
-            format!("{:.2}x", t_flash / t_f2_w1),
-            format!("{:.2}x", t_flash / t_f2_w4),
+            format!("{:.2}", t_bwd_flash * 1e3),
+            format!("{:.2}", t_bwd_f2_w1 * 1e3),
+            format!("{:.2}", t_bwd_f2_w4 * 1e3),
         ]);
         json_rows.push(format!(
             "    {{\"n\": {n}, \"flash_ns\": {:.0}, \"flash2_w1_ns\": {:.0}, \
-             \"flash2_w{workers}_ns\": {:.0}, \"speedup_w1\": {:.3}, \"speedup_w{workers}\": {:.3}}}",
+             \"flash2_w{workers}_ns\": {:.0}, \"speedup_w1\": {:.3}, \"speedup_w{workers}\": {:.3}, \
+             \"flash_bwd_ns\": {:.0}, \"flash2_bwd_w1_ns\": {:.0}, \"flash2_bwd_w{workers}_ns\": {:.0}, \
+             \"speedup_bwd_w1\": {:.3}, \"speedup_bwd_w{workers}\": {:.3}}}",
             t_flash * 1e9,
             t_f2_w1 * 1e9,
             t_f2_w4 * 1e9,
             t_flash / t_f2_w1,
             t_flash / t_f2_w4,
+            t_bwd_flash * 1e9,
+            t_bwd_f2_w1 * 1e9,
+            t_bwd_f2_w4 * 1e9,
+            t_bwd_flash / t_bwd_f2_w1,
+            t_bwd_flash / t_bwd_f2_w4,
         ));
     }
     t.print();
     let json = format!(
         "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
-         \"d\": {d},\n  \"workers\": {workers},\n  \"results\": [\n{}\n  ]\n}}\n",
+         \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
         json_rows.join(",\n")
     );
     // Repo root regardless of the cwd cargo bench picked.
@@ -174,7 +219,10 @@ fn artifacts() {
 }
 
 fn main() {
-    mirrors();
-    fast_kernel_head_to_head();
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    if !smoke {
+        mirrors();
+    }
+    fast_kernel_head_to_head(smoke);
     artifacts();
 }

@@ -34,6 +34,14 @@ use crate::sim::hbm::Hbm;
 use crate::tensor::Tensor;
 
 /// Merge two attention partials over disjoint key sets (associative).
+///
+/// Fully-masked rows arrive as `m = -inf` (the fast kernel's zero-mass
+/// convention, `Flash2Output::into_attn_output`): when only one side is
+/// masked its weight `e^{-inf - m} · l` is exactly 0 and the live side
+/// wins; when *both* sides are masked, `m_a - m_new = -inf - -inf` would
+/// be NaN, so that case is handled explicitly — the merged row keeps the
+/// defined all-masked semantics (zero output, zero mass, `m = -inf`),
+/// which composes associatively with any later live partial.
 pub fn merge_partials(a: &AttnOutput, b: &AttnOutput) -> AttnOutput {
     let n = a.l.len();
     let d = a.o.cols();
@@ -43,6 +51,12 @@ pub fn merge_partials(a: &AttnOutput, b: &AttnOutput) -> AttnOutput {
     let mut m = vec![0.0f32; n];
     for r in 0..n {
         let m_new = a.m[r].max(b.m[r]);
+        if m_new == f32::NEG_INFINITY {
+            // Both partials fully masked: no probability mass anywhere.
+            l[r] = 0.0;
+            m[r] = f32::NEG_INFINITY;
+            continue; // output row stays zero
+        }
         let wa = (a.m[r] - m_new).exp() * a.l[r];
         let wb = (b.m[r] - m_new).exp() * b.l[r];
         let l_new = wa + wb;
@@ -73,6 +87,17 @@ pub fn flash_forward_sharded(
     assert!(cfg.dropout_p == 0.0, "sharded path: dropout handled per-device in future work");
     assert!(!cfg.causal, "sharded path is non-causal (shards are key ranges)");
     let n = k.rows();
+    let kv_len = cfg.kv_len.unwrap_or(n).min(n);
+    if kv_len == 0 {
+        // Every key masked (or none exist): the defined all-masked result —
+        // zero output, zero mass, m = -inf — without spawning any worker.
+        let nq = q.rows();
+        return AttnOutput {
+            o: Tensor::zeros(&[nq, q.cols()]),
+            l: vec![0.0; nq],
+            m: vec![f32::NEG_INFINITY; nq],
+        };
+    }
     let w = workers.max(1).min(n);
     let shard = (n + w - 1) / w;
 
@@ -82,7 +107,11 @@ pub fn flash_forward_sharded(
         for wi in 0..w {
             let lo = wi * shard;
             let hi = ((wi + 1) * shard).min(n);
-            if lo >= hi {
+            // Skip empty shards and *dead* shards — key ranges entirely
+            // beyond the valid prefix, whose remapped kv_len would be 0.
+            // They used to spawn workers whose fully-masked partials only
+            // merged away via the 1/l clamp; now they never run.
+            if lo >= hi || lo >= kv_len {
                 continue;
             }
             let kw = k.slice_rows(lo, hi);
@@ -197,6 +226,78 @@ mod tests {
         let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
         let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 3);
         assert!(single.o.max_abs_diff(&multi.o) < 1e-4);
+    }
+
+    #[test]
+    fn dead_shards_skipped_kv_len_within_one_shard() {
+        // Regression: kv_len ≤ one shard width means every shard but the
+        // first is entirely beyond the valid key prefix. Those shards must
+        // be skipped up front, and the result must match the dense oracle
+        // with no NaN/Inf anywhere.
+        let (q, k, v) = qkv(48, 8, 7);
+        let blocks = Blocks::explicit(8, 8);
+        for kv_len in [5usize, 8, 1] {
+            let cfg = AttnConfig { kv_len: Some(kv_len), ..Default::default() };
+            let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
+            for workers in [6usize, 8, 48] {
+                let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, workers);
+                assert!(
+                    multi.o.data.iter().all(|x| x.is_finite()),
+                    "kv_len={kv_len} workers={workers}: non-finite output"
+                );
+                assert!(
+                    single.o.max_abs_diff(&multi.o) < 1e-4,
+                    "kv_len={kv_len} workers={workers}: diff {}",
+                    single.o.max_abs_diff(&multi.o)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kv_len_zero_gives_zero_output_no_nan() {
+        let (q, k, v) = qkv(16, 4, 9);
+        let cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
+        let out = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3);
+        assert!(out.o.data.iter().all(|&x| x == 0.0));
+        assert!(out.l.iter().all(|&x| x == 0.0));
+        assert!(out.m.iter().all(|&x| x == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn property_merge_handles_all_masked_partials() {
+        // The -inf/-inf case: merging two fully-masked partials must stay
+        // NaN-free and keep zero-mass semantics; merging masked with live
+        // must reproduce the live partial exactly; and the all-masked
+        // identity must be associative with live merges.
+        use crate::attn::flash2::flash2_forward;
+        for_each_case("merge_masked", 8, |rng| {
+            let n = usize_in(rng, 2, 24);
+            let d = *crate::util::prop::choose(rng, &[2usize, 4, 8]);
+            let q = Tensor::randn(&[n, d], rng, 1.0);
+            let k = Tensor::randn(&[n, d], rng, 1.0);
+            let v = Tensor::randn(&[n, d], rng, 1.0);
+            let blocks = Blocks::explicit(4, 4);
+            let dead_cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
+            let dead = flash2_forward(&q, &k, &v, &dead_cfg, blocks, 1, &mut Hbm::new())
+                .into_attn_output();
+            let live = flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 1, &mut Hbm::new())
+                .into_attn_output();
+
+            let both_dead = merge_partials(&dead, &dead);
+            assert!(both_dead.o.data.iter().all(|&x| x == 0.0), "n={n} d={d}: dead+dead O");
+            assert!(both_dead.l.iter().all(|&x| x == 0.0));
+            assert!(both_dead.m.iter().all(|&x| x == f32::NEG_INFINITY));
+
+            for merged in [
+                merge_partials(&dead, &live),
+                merge_partials(&live, &dead),
+                merge_partials(&both_dead, &live),
+            ] {
+                assert!(merged.o.data.iter().all(|x| x.is_finite()), "n={n} d={d}");
+                assert!(live.o.max_abs_diff(&merged.o) < 1e-5, "n={n} d={d}");
+            }
+        });
     }
 
     #[test]

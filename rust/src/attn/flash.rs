@@ -176,6 +176,10 @@ pub fn flash_forward(
 /// [`AttnStats`]): the paper's (l, m) pair from [`flash_forward`] or the
 /// single logsumexp from [`super::flash2::flash2_forward`] — the
 /// recomputation only ever needs `P_ij = exp(s_ij - L_i)`.
+///
+/// Shapes may be rectangular, matching the forwards: q, o, dout: [n, d];
+/// k, v: [n_k, d] (the sequence-parallel sharded layout). The key-side
+/// tiling, padding mask and dK/dV shapes all follow n_k, not n.
 #[allow(clippy::too_many_arguments)]
 pub fn flash_backward(
     q: &Tensor,
@@ -189,21 +193,26 @@ pub fn flash_backward(
     hbm: &mut Hbm,
 ) -> AttnGrads {
     let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    assert_eq!(k.cols(), d, "flash_backward: K feature dim mismatch");
+    assert_eq!((v.rows(), v.cols()), (n_k, d), "flash_backward: V shape mismatch");
+    assert_eq!((dout.rows(), dout.cols()), (n, d), "flash_backward: dO shape mismatch");
+    assert_eq!(stats.len(), n, "flash_backward: stats length mismatch");
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n);
+    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = (n + b_r - 1) / b_r;
-    let t_c = (n + b_c - 1) / b_c;
+    let t_c = (n_k + b_c - 1) / b_c;
 
     // Line 5: initialise dQ, dK, dV = 0 in HBM.
     let mut dq = Tensor::zeros(&[n, d]);
-    let mut dk = Tensor::zeros(&[n, d]);
-    let mut dv = Tensor::zeros(&[n, d]);
-    hbm.store(3 * n * d);
+    let mut dk = Tensor::zeros(&[n_k, d]);
+    let mut dv = Tensor::zeros(&[n_k, d]);
+    hbm.store(n * d + 2 * n_k * d);
 
     for j in 0..t_c {
         let c0 = j * b_c;
-        let c1 = ((j + 1) * b_c).min(n);
+        let c1 = ((j + 1) * b_c).min(n_k);
         let bc = c1 - c0;
         // Line 7: load K_j, V_j.
         hbm.load(2 * bc * d);
@@ -238,6 +247,11 @@ pub fn flash_backward(
             let mut p = Tensor::zeros(&[br, bc]);
             for rr in 0..br {
                 let lse = stats.lse(r0 + rr);
+                // lse = -inf marks a fully-masked forward row (zero mass);
+                // exp(s - -inf) would overflow to +inf, so leave P at 0.
+                if lse == f32::NEG_INFINITY {
+                    continue;
+                }
                 for cc in 0..bc {
                     p.data[rr * bc + cc] = (s.data[rr * bc + cc] - lse).exp();
                 }

@@ -1,5 +1,6 @@
-//! Fast exact forward kernel (FlashAttention-2-style) — the production half
-//! of the two-kernel policy (see the `attn` module docs).
+//! Fast exact forward **and backward** kernels (FlashAttention-2-style) —
+//! the production half of the two-kernel policy (see the `attn` module
+//! docs).
 //!
 //! Differences from the faithful Algorithm 1 mirror in `attn::flash`, each
 //! one of the overheads FlashAttention-2 (Dao, 2023) identifies:
@@ -26,14 +27,40 @@
 //!   allocation inside the tile loop, unlike the reference kernel's
 //!   per-tile `matmul_bt`.
 //!
-//! The kernel is exact: parity with `flash_forward` / `standard_forward`
-//! (including causal, padding and dropout) is property-tested below.
+//! The same ideas give [`flash2_backward`], the fast gradient kernel:
+//!
+//! * **Two-phase split.** dQ rows are disjoint across Q row blocks and
+//!   dK/dV rows are disjoint across K/V column blocks, so instead of
+//!   Algorithm 4's single K/V-outer sweep (which read-modify-writes dQ_i
+//!   to HBM on *every* inner tile), phase 1 sweeps Q row blocks with the
+//!   dQ accumulator on chip for the whole K/V stream (written once) and
+//!   phase 2 sweeps K/V column blocks with dK~/dV~ on chip (written
+//!   once). Each phase fans out over `std::thread::scope` workers with
+//!   bitwise worker-count-independent output, exactly like the forward.
+//! * **Single-statistic recomputation.** Both phases rebuild
+//!   `P_ij = exp(s_ij − L_i)` from the forward's logsumexp (Rabe & Staats
+//!   2021) via the same register-blocked `tensor::dot4` path — no (l, m)
+//!   pair, no per-tile rescale.
+//! * **D precomputed in one epilogue pass.** `D_i = rowsum(dO ∘ O)` is
+//!   computed once up front (2·N·d loads, N stores) instead of
+//!   re-deriving it inside every tile.
+//! * **Causal tile skip.** Tiles entirely above the diagonal are skipped
+//!   in both phases, same as the forwards.
+//!
+//! Fully-masked rows have defined semantics end to end: the forward emits
+//! a zero output row with `lse = -inf` (no NaN/Inf), and the backward
+//! treats `lse = -inf` as "no probability mass" — zero gradient
+//! contribution.
+//!
+//! Both kernels are exact: parity with the `flash`/`standard` mirrors
+//! (including causal, padding, dropout and rectangular K/V) is
+//! property-tested below.
 
 use super::flash::{tile_fully_unmasked, Blocks};
 use super::masks::{dropout_scale, masked_score, NEG_INF};
-use super::{AttnConfig, AttnOutput, AttnStats};
+use super::{AttnConfig, AttnGrads, AttnOutput, AttnStats};
 use crate::sim::hbm::Hbm;
-use crate::tensor::{matmul_bt_scaled_into, pv_accum, Tensor};
+use crate::tensor::{dot4, matmul_bt_scaled_into, pv_accum, Tensor};
 
 /// Forward outputs of the fast kernel: O plus the per-row logsumexp.
 #[derive(Clone, Debug)]
@@ -81,6 +108,9 @@ pub fn flash2_forward(
     let mut o = Tensor::zeros(&[n, d]);
     let mut lse = vec![0.0f32; n];
     if t_r == 0 || n_k == 0 {
+        // No keys at all: every row is fully masked — same defined
+        // semantics as the masked epilogue path (zero rows, lse = -inf).
+        lse.fill(f32::NEG_INFINITY);
         return Flash2Output { o, lse };
     }
 
@@ -186,6 +216,15 @@ fn row_block_sweep(
                 let row = r0 + rr;
                 let srow = &mut s[rr * bc..(rr + 1) * bc];
                 let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
+                // Fully-masked row slice: contributes no probability mass.
+                // Folding it in would poison m_run with the NEG_INF sentinel
+                // and make exp(s - m_new) = 1 for masked entries, so rows
+                // with *no* live key anywhere would attend uniformly to
+                // masked keys; skipping keeps them at (acc, l, m) =
+                // (0, 0, -inf) and the epilogue gives them a zero output.
+                if m_tile <= NEG_INF {
+                    continue;
+                }
                 let m_new = m_run[rr].max(m_tile);
                 let alpha = (m_run[rr] - m_new).exp(); // exp(-inf)=0 first tile
                 let arow = &mut acc[rr * d..(rr + 1) * d];
@@ -222,14 +261,22 @@ fn row_block_sweep(
         // Epilogue: one division per row, one HBM store per row block
         // (O rows + a single logsumexp stat each).
         for rr in 0..br {
-            let inv = 1.0 / l_run[rr].max(1e-37);
-            let arow = &acc[rr * d..(rr + 1) * d];
             let out_off = (r0 - row_base + rr) * d;
             let orow = &mut o_out[out_off..out_off + d];
+            if l_run[rr] == 0.0 {
+                // Every key masked for this row: zero output, lse = -inf
+                // (log of zero mass) — defined, NaN/Inf-free semantics that
+                // `merge_partials` and the backward both understand.
+                orow.fill(0.0);
+                lse_out[r0 - row_base + rr] = f32::NEG_INFINITY;
+                continue;
+            }
+            let inv = 1.0 / l_run[rr];
+            let arow = &acc[rr * d..(rr + 1) * d];
             for c in 0..d {
                 orow[c] = arow[c] * inv;
             }
-            lse_out[r0 - row_base + rr] = m_run[rr] + l_run[rr].max(1e-37).ln();
+            lse_out[r0 - row_base + rr] = m_run[rr] + l_run[rr].ln();
         }
         hbm.store(br * d + br);
     }
@@ -237,10 +284,355 @@ fn row_block_sweep(
     hbm
 }
 
+/// Fast exact backward: the gradient half of the production kernel pair.
+///
+/// Two phases, both recomputing `P_ij = exp(s_ij − L_i)` on chip from the
+/// forward's logsumexp:
+///
+/// 1. **dQ, Q-outer.** For each Q row block the dQ accumulator stays on
+///    chip for the entire K/V stream and is written to HBM exactly once —
+///    Algorithm 4 instead read-modify-writes dQ_i per inner tile
+///    (its line 21), Θ(T_c·N·d) gradient traffic this phase deletes.
+/// 2. **dK/dV, column-parallel.** For each K/V column block the dK~/dV~
+///    accumulators stay on chip for the entire Q/dO stream and are written
+///    exactly once (Algorithm 4 already had this structure; here the
+///    column blocks additionally fan out over workers).
+///
+/// `D_i = rowsum(dO ∘ O)` is precomputed in one epilogue pass rather than
+/// re-derived per tile. Both phases parallelise over `std::thread::scope`
+/// workers with output that is **bitwise identical for any worker count**
+/// (per-block arithmetic is partition-independent, exactly as in
+/// [`flash2_forward`]). Shapes may be rectangular: q, o, dout: [n, d];
+/// k, v: [n_k, d] — the sharded sequence-parallel layout. Rows whose
+/// logsumexp is `-inf` (fully masked in the forward) contribute zero
+/// gradient everywhere.
+///
+/// Like the forward, tiles beyond `kv_len` are streamed-and-masked, not
+/// skipped: `sim::cost::flash2_bwd` models the causal skip but not the
+/// padding mask, and the exactness tests assert measured == analytic
+/// traffic. Key ranges that are *entirely* dead are cheaper to drop one
+/// level up (as `flash_forward_sharded` now does with dead shards).
+#[allow(clippy::too_many_arguments)]
+pub fn flash2_backward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: AttnStats<'_>,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> AttnGrads {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    assert_eq!(k.cols(), d, "flash2_backward: K feature dim mismatch");
+    assert_eq!((v.rows(), v.cols()), (n_k, d), "flash2_backward: V shape mismatch");
+    assert_eq!((o.rows(), o.cols()), (n, d), "flash2_backward: O shape mismatch");
+    assert_eq!((dout.rows(), dout.cols()), (n, d), "flash2_backward: dO shape mismatch");
+    assert_eq!(stats.len(), n, "flash2_backward: stats length mismatch");
+    let tau = cfg.tau_for(d);
+    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_r = n.div_ceil(b_r);
+    let t_c = n_k.div_ceil(b_c);
+
+    let mut dq = Tensor::zeros(&[n, d]);
+    let mut dk = Tensor::zeros(&[n_k, d]);
+    let mut dv = Tensor::zeros(&[n_k, d]);
+    if t_r == 0 || t_c == 0 {
+        return AttnGrads { dq, dk, dv };
+    }
+
+    // Phase 0 (epilogue pass): D_i = rowsum(dO ∘ O), loaded once here and
+    // streamed alongside the logsumexp in both phases below. The lse is
+    // materialised on chip from either stats representation.
+    hbm.load(2 * n * d);
+    let d_vec: Vec<f32> = (0..n).map(|r| dot4(dout.row(r), o.row(r))).collect();
+    hbm.store(n);
+    let lse = stats.to_lse_vec();
+
+    // Phase 1: dQ with a Q-outer sweep. Disjoint per-worker dQ windows,
+    // exactly the forward's partition.
+    let w = workers.max(1).min(t_r);
+    let chunk = t_r.div_ceil(w);
+    std::thread::scope(|scope| {
+        let dq_chunks = dq.data.chunks_mut(chunk * b_r * d);
+        let mut handles = Vec::new();
+        for (wi, dq_mine) in dq_chunks.enumerate() {
+            let rb_lo = wi * chunk;
+            let rb_hi = ((wi + 1) * chunk).min(t_r);
+            let (lse, d_vec) = (&lse, &d_vec);
+            handles.push(scope.spawn(move || {
+                dq_row_sweep(q, k, v, dout, lse, d_vec, cfg, blocks, tau, kv_len, rb_lo, rb_hi, dq_mine)
+            }));
+        }
+        for h in handles {
+            let local = h.join().expect("flash2_backward dQ worker panicked");
+            hbm.merge(&local);
+        }
+    });
+
+    // Phase 2: dK/dV with a column-block-parallel sweep over disjoint
+    // per-worker dK/dV windows.
+    let w = workers.max(1).min(t_c);
+    let chunk = t_c.div_ceil(w);
+    std::thread::scope(|scope| {
+        let dk_chunks = dk.data.chunks_mut(chunk * b_c * d);
+        let dv_chunks = dv.data.chunks_mut(chunk * b_c * d);
+        let mut handles = Vec::new();
+        for (wi, (dk_mine, dv_mine)) in dk_chunks.zip(dv_chunks).enumerate() {
+            let cb_lo = wi * chunk;
+            let cb_hi = ((wi + 1) * chunk).min(t_c);
+            let (lse, d_vec) = (&lse, &d_vec);
+            handles.push(scope.spawn(move || {
+                dkv_col_sweep(
+                    q, k, v, dout, lse, d_vec, cfg, blocks, tau, kv_len, cb_lo, cb_hi, dk_mine,
+                    dv_mine,
+                )
+            }));
+        }
+        for h in handles {
+            let local = h.join().expect("flash2_backward dK/dV worker panicked");
+            hbm.merge(&local);
+        }
+    });
+
+    AttnGrads { dq, dk, dv }
+}
+
+/// Phase-1 sweep over Q row blocks [rb_lo, rb_hi): the whole K/V stream per
+/// block with the dQ accumulator on chip, one dQ store per block.
+#[allow(clippy::too_many_arguments)]
+fn dq_row_sweep(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    dout: &Tensor,
+    lse: &[f32],
+    d_vec: &[f32],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_len: usize,
+    rb_lo: usize,
+    rb_hi: usize,
+    dq_out: &mut [f32],
+) -> Hbm {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_c = n_k.div_ceil(b_c);
+    let row_base = rb_lo * b_r;
+    let mut hbm = Hbm::new();
+
+    // Worker-local scratch, allocated once (nothing allocates in the loop).
+    let mut s_buf = vec![0.0f32; b_r * b_c];
+    let mut dp_buf = vec![0.0f32; b_r * b_c];
+
+    for i in rb_lo..rb_hi {
+        let r0 = i * b_r;
+        let r1 = ((i + 1) * b_r).min(n);
+        let br = r1 - r0;
+        // Q_i, dO_i, D_i, L_i are loaded once per row block; dQ_i lives in
+        // the (zero-initialised, worker-owned) output window until the
+        // single store below — it never round-trips to HBM mid-sweep.
+        hbm.load(2 * br * d + 2 * br);
+        let q_rows = &q.data[r0 * d..r1 * d];
+        let do_rows = &dout.data[r0 * d..r1 * d];
+        let dq_acc = &mut dq_out[(r0 - row_base) * d..(r1 - row_base) * d];
+
+        for j in 0..t_c {
+            let c0 = j * b_c;
+            let c1 = ((j + 1) * b_c).min(n_k);
+            let bc = c1 - c0;
+            // Above-diagonal tiles contribute nothing (same skip as fwd).
+            if cfg.causal && c0 > r1 - 1 {
+                continue;
+            }
+            // K_j, V_j stream through SRAM once per row block.
+            hbm.load(2 * bc * d);
+            let kj = &k.data[c0 * d..c1 * d];
+            let vj = &v.data[c0 * d..c1 * d];
+
+            // S = tau Q_i K_jᵀ and dP^dropped = dO_i V_jᵀ, register-blocked.
+            let s = &mut s_buf[..br * bc];
+            matmul_bt_scaled_into(q_rows, kj, d, tau, s);
+            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+                for rr in 0..br {
+                    for cc in 0..bc {
+                        let x = s[rr * bc + cc];
+                        s[rr * bc + cc] = masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+                    }
+                }
+            }
+            let dp = &mut dp_buf[..br * bc];
+            matmul_bt_scaled_into(do_rows, vj, d, 1.0, dp);
+
+            for rr in 0..br {
+                let row = r0 + rr;
+                let l_row = lse[row];
+                // Fully-masked forward row: zero mass, zero gradient.
+                if l_row == f32::NEG_INFINITY {
+                    continue;
+                }
+                let di = d_vec[row];
+                let srow = &mut s[rr * bc..(rr + 1) * bc];
+                let dprow = &dp[rr * bc..(rr + 1) * bc];
+                // dS~ = tau · P ∘ (dP − D_i), overwriting the score buffer;
+                // masked entries have P = exp(NEG_INF − L) = 0.
+                for cc in 0..bc {
+                    let p = (srow[cc] - l_row).exp();
+                    let mut dp_cc = dprow[cc];
+                    if cfg.dropout_p > 0.0 {
+                        dp_cc *= dropout_scale(
+                            cfg.bh_index,
+                            row,
+                            c0 + cc,
+                            n,
+                            cfg.dropout_seed,
+                            cfg.dropout_p,
+                        );
+                    }
+                    srow[cc] = tau * p * (dp_cc - di);
+                }
+                // dQ_i(rr) += dS~ K_j — the P̃·V micro-kernel reused.
+                pv_accum(srow, kj, d, &mut dq_acc[rr * d..(rr + 1) * d]);
+            }
+        }
+        // Epilogue: dQ_i leaves chip exactly once.
+        hbm.store(br * d);
+    }
+
+    hbm
+}
+
+/// Phase-2 sweep over K/V column blocks [cb_lo, cb_hi): the whole Q/dO
+/// stream per block with dK~/dV~ on chip, one dK/dV store per block.
+#[allow(clippy::too_many_arguments)]
+fn dkv_col_sweep(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    dout: &Tensor,
+    lse: &[f32],
+    d_vec: &[f32],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_len: usize,
+    cb_lo: usize,
+    cb_hi: usize,
+    dk_out: &mut [f32],
+    dv_out: &mut [f32],
+) -> Hbm {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_r = n.div_ceil(b_r);
+    let col_base = cb_lo * b_c;
+    let mut hbm = Hbm::new();
+
+    let mut s_buf = vec![0.0f32; b_r * b_c];
+    let mut dp_buf = vec![0.0f32; b_r * b_c];
+
+    for j in cb_lo..cb_hi {
+        let c0 = j * b_c;
+        let c1 = ((j + 1) * b_c).min(n_k);
+        let bc = c1 - c0;
+        // K_j, V_j loaded once per column block; dK~_j/dV~_j accumulate in
+        // the worker-owned output windows until the single store.
+        hbm.load(2 * bc * d);
+        let kj = &k.data[c0 * d..c1 * d];
+        let vj = &v.data[c0 * d..c1 * d];
+        let dk_acc = &mut dk_out[(c0 - col_base) * d..(c1 - col_base) * d];
+        let dv_acc = &mut dv_out[(c0 - col_base) * d..(c1 - col_base) * d];
+
+        for i in 0..t_r {
+            let r0 = i * b_r;
+            let r1 = ((i + 1) * b_r).min(n);
+            let br = r1 - r0;
+            if cfg.causal && c0 > r1 - 1 {
+                continue;
+            }
+            // Q_i, dO_i, D_i, L_i stream through SRAM once per column block.
+            hbm.load(2 * br * d + 2 * br);
+            let q_rows = &q.data[r0 * d..r1 * d];
+            let do_rows = &dout.data[r0 * d..r1 * d];
+
+            let s = &mut s_buf[..br * bc];
+            matmul_bt_scaled_into(q_rows, kj, d, tau, s);
+            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+                for rr in 0..br {
+                    for cc in 0..bc {
+                        let x = s[rr * bc + cc];
+                        s[rr * bc + cc] = masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+                    }
+                }
+            }
+            let dp = &mut dp_buf[..br * bc];
+            matmul_bt_scaled_into(do_rows, vj, d, 1.0, dp);
+
+            for rr in 0..br {
+                let row = r0 + rr;
+                let l_row = lse[row];
+                if l_row == f32::NEG_INFINITY {
+                    continue;
+                }
+                let di = d_vec[row];
+                let dorow = &do_rows[rr * d..(rr + 1) * d];
+                let qrow = &q_rows[rr * d..(rr + 1) * d];
+                for cc in 0..bc {
+                    let p = (s[rr * bc + cc] - l_row).exp();
+                    if p == 0.0 {
+                        continue; // masked (or fully underflowed) entry
+                    }
+                    let z = if cfg.dropout_p > 0.0 {
+                        dropout_scale(
+                            cfg.bh_index,
+                            row,
+                            c0 + cc,
+                            n,
+                            cfg.dropout_seed,
+                            cfg.dropout_p,
+                        )
+                    } else {
+                        1.0
+                    };
+                    // dV~_j(cc) += (P ∘ Z)ᵀ dO_i — dropped entries skip.
+                    let pz = p * z;
+                    if pz != 0.0 {
+                        let dvrow = &mut dv_acc[cc * d..(cc + 1) * d];
+                        for c in 0..d {
+                            dvrow[c] += pz * dorow[c];
+                        }
+                    }
+                    // dS~ = tau · P ∘ (dP ∘ Z − D_i); dK~_j(cc) += dS~ᵀ Q_i.
+                    let w = tau * p * (dp[rr * bc + cc] * z - di);
+                    if w != 0.0 {
+                        let dkrow = &mut dk_acc[cc * d..(cc + 1) * d];
+                        for c in 0..d {
+                            dkrow[c] += w * qrow[c];
+                        }
+                    }
+                }
+            }
+        }
+        // Epilogue: dK_j and dV_j leave chip exactly once.
+        hbm.store(2 * bc * d);
+    }
+
+    hbm
+}
+
 /// Fixed cross-kernel agreement probe (causal + padding + rectangular-ish
-/// shape, multi-threaded): max |flash2 - flash| over the workload. Used by
-/// the coordinator preflight before any training/serving runs.
+/// shape, multi-threaded) covering the full fast pair: max deviation of
+/// flash2's forward (O, logsumexp) **and** backward (dQ, dK, dV) from the
+/// paper-faithful reference kernels over the workload. Used by the
+/// coordinator preflight before any training/serving runs.
 pub fn self_check() -> f32 {
+    use super::{attention_backward, BackwardKernel};
     use crate::util::rng::SplitMix64;
     let (n, d) = (48usize, 16usize);
     let mut rng = SplitMix64::new(0xF1A5_42);
@@ -255,7 +647,19 @@ pub fn self_check() -> f32 {
     for r in 0..n {
         diff = diff.max((reference.stats().lse(r) - fast.lse[r]).abs());
     }
-    diff
+    // The gradient half of the pair, through the shared entry point.
+    let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
+    let slow = attention_backward(
+        BackwardKernel::Flash,
+        &q, &k, &v, &reference.o, &dout, reference.stats(), &cfg, blocks, &mut Hbm::new(),
+    );
+    let fast_g = attention_backward(
+        BackwardKernel::Flash2 { workers: 3 },
+        &q, &k, &v, &fast.o, &dout, fast.stats(), &cfg, blocks, &mut Hbm::new(),
+    );
+    diff.max(slow.dq.max_abs_diff(&fast_g.dq))
+        .max(slow.dk.max_abs_diff(&fast_g.dk))
+        .max(slow.dv.max_abs_diff(&fast_g.dv))
 }
 
 #[cfg(test)]
@@ -419,5 +823,216 @@ mod tests {
     #[test]
     fn self_check_is_tight() {
         assert!(self_check() < 1e-4, "self_check diff {}", self_check());
+    }
+
+    /// Dense softmax-attention gradients on (possibly rectangular) shapes —
+    /// an oracle independent of every tiled kernel under test.
+    fn dense_backward_oracle(
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        dout: &Tensor,
+        cfg: &AttnConfig,
+    ) -> (Tensor, Tensor, Tensor) {
+        use crate::attn::masks::{dropout_scale, masked_score, NEG_INF};
+        let (n, d) = (q.rows(), q.cols());
+        let n_k = k.rows();
+        let tau = cfg.tau_for(d);
+        let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+        let mut dq = Tensor::zeros(&[n, d]);
+        let mut dk = Tensor::zeros(&[n_k, d]);
+        let mut dv = Tensor::zeros(&[n_k, d]);
+        for r in 0..n {
+            let s: Vec<f32> = (0..n_k)
+                .map(|c| masked_score(tau * dot4(q.row(r), k.row(c)), r, c, cfg.causal, kv_len))
+                .collect();
+            let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if mx <= NEG_INF {
+                continue; // fully-masked row: zero mass, zero gradient
+            }
+            let e: Vec<f32> =
+                s.iter().map(|&x| if x <= NEG_INF { 0.0 } else { (x - mx).exp() }).collect();
+            let z_sum: f32 = e.iter().sum();
+            let p: Vec<f32> = e.iter().map(|&x| x / z_sum).collect();
+            let zs: Vec<f32> = (0..n_k)
+                .map(|c| dropout_scale(cfg.bh_index, r, c, n, cfg.dropout_seed, cfg.dropout_p))
+                .collect();
+            let orow: Vec<f32> = (0..d)
+                .map(|cd| (0..n_k).map(|c| p[c] * zs[c] * v.row(c)[cd]).sum())
+                .collect();
+            let di = dot4(dout.row(r), &orow);
+            for c in 0..n_k {
+                let pz = p[c] * zs[c];
+                for cd in 0..d {
+                    dv.row_mut(c)[cd] += pz * dout.row(r)[cd];
+                }
+                let dp = dot4(dout.row(r), v.row(c)) * zs[c];
+                let ds = tau * p[c] * (dp - di);
+                for cd in 0..d {
+                    dq.row_mut(r)[cd] += ds * k.row(c)[cd];
+                    dk.row_mut(c)[cd] += ds * q.row(r)[cd];
+                }
+            }
+        }
+        (dq, dk, dv)
+    }
+
+    #[test]
+    fn backward_property_parity_vs_flash_and_standard() {
+        // The ISSUE grid: causal × dropout × kv_len (× blocks × workers),
+        // flash2_backward against both reference gradient producers.
+        for_each_case("flash2_bwd_parity", 20, |rng| {
+            let n = usize_in(rng, 2, 40);
+            let d = *crate::util::prop::choose(rng, &[2usize, 4, 8]);
+            let b_r = usize_in(rng, 1, n);
+            let b_c = usize_in(rng, 1, n);
+            let causal = rng.next_f32() < 0.5;
+            let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n)) } else { None };
+            let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
+            let workers = usize_in(rng, 1, 6);
+            let q = Tensor::randn(&[n, d], rng, 1.0);
+            let k = Tensor::randn(&[n, d], rng, 1.0);
+            let v = Tensor::randn(&[n, d], rng, 1.0);
+            let dout = Tensor::randn(&[n, d], rng, 1.0);
+            let cfg = AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let blocks = Blocks::explicit(b_r, b_c);
+            let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            let fast = flash2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, workers, &mut Hbm::new(),
+            );
+            let slow = flash_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new(),
+            );
+            let std = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
+            let ctx = format!(
+                "n={n} d={d} blocks=({b_r},{b_c}) causal={causal} kv_len={kv_len:?} p={dropout_p} w={workers}"
+            );
+            assert!(fast.dq.max_abs_diff(&slow.dq) < 1e-4, "dq vs flash: {ctx}");
+            assert!(fast.dk.max_abs_diff(&slow.dk) < 1e-4, "dk vs flash: {ctx}");
+            assert!(fast.dv.max_abs_diff(&slow.dv) < 1e-4, "dv vs flash: {ctx}");
+            assert!(fast.dq.max_abs_diff(&std.dq) < 1e-4, "dq vs standard: {ctx}");
+            assert!(fast.dk.max_abs_diff(&std.dk) < 1e-4, "dk vs standard: {ctx}");
+            assert!(fast.dv.max_abs_diff(&std.dv) < 1e-4, "dv vs standard: {ctx}");
+        });
+    }
+
+    #[test]
+    fn backward_grads_match_finite_difference() {
+        // Direct check against the forward itself: d(sum O)/dx by central
+        // differences, causal + padding active.
+        let (n, d) = (6usize, 4usize);
+        let (q, k, v) = qkv(n, d, 11);
+        let cfg = AttnConfig { causal: true, kv_len: Some(5), ..Default::default() };
+        let blocks = Blocks::explicit(2, 3);
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let dout = Tensor::full(&[n, d], 1.0);
+        let g = flash2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 2, &mut Hbm::new(),
+        );
+        let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
+            flash2_forward(q_, k_, v_, &cfg, blocks, 1, &mut Hbm::new()).o.data.iter().sum()
+        };
+        let eps = 1e-3f32;
+        for (which, (x, gx)) in [(0, (&q, &g.dq)), (1, (&k, &g.dk)), (2, (&v, &g.dv))] {
+            for idx in [0usize, 7, 17, 23] {
+                let mut xp = x.clone();
+                xp.data[idx] += eps;
+                let mut xm = x.clone();
+                xm.data[idx] -= eps;
+                let (fp, fm) = match which {
+                    0 => (f(&xp, &k, &v), f(&xm, &k, &v)),
+                    1 => (f(&q, &xp, &v), f(&q, &xm, &v)),
+                    _ => (f(&q, &k, &xp), f(&q, &k, &xm)),
+                };
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = gx.data[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 + 0.05 * an.abs(),
+                    "which={which} idx={idx}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_deterministic_across_worker_counts() {
+        // Mirrors the forward test: per-block arithmetic is partition-
+        // independent, so all three gradients must be bitwise identical
+        // for any worker count.
+        let (q, k, v) = qkv(64, 16, 13);
+        let cfg = AttnConfig::causal();
+        let blocks = Blocks::explicit(8, 16);
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+        let mut rng = SplitMix64::new(14);
+        let dout = Tensor::randn(&[64, 16], &mut rng, 1.0);
+        let base = flash2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 1, &mut Hbm::new(),
+        );
+        for workers in [2usize, 3, 4, 8, 64] {
+            let multi = flash2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, workers, &mut Hbm::new(),
+            );
+            assert_eq!(base.dq.data, multi.dq.data, "dQ not bitwise equal at workers={workers}");
+            assert_eq!(base.dk.data, multi.dk.data, "dK not bitwise equal at workers={workers}");
+            assert_eq!(base.dv.data, multi.dv.data, "dV not bitwise equal at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn backward_rectangular_kv_matches_dense_oracle() {
+        // Rectangular K/V (n_k != n) — the sharded layout — for both the
+        // new fast backward and the (previously square-only) Algorithm 4
+        // reference, against a dense oracle.
+        let mut rng = SplitMix64::new(15);
+        let q = Tensor::randn(&[24, 8], &mut rng, 1.0);
+        let k = Tensor::randn(&[40, 8], &mut rng, 1.0);
+        let v = Tensor::randn(&[40, 8], &mut rng, 1.0);
+        let dout = Tensor::randn(&[24, 8], &mut rng, 1.0);
+        let cfg = AttnConfig { kv_len: Some(33), tau: Some(0.25), ..Default::default() };
+        let blocks = Blocks::explicit(8, 8);
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 3, &mut Hbm::new());
+        let (dq_o, dk_o, dv_o) = dense_backward_oracle(&q, &k, &v, &dout, &cfg);
+        let fast = flash2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 3, &mut Hbm::new(),
+        );
+        assert!(fast.dq.max_abs_diff(&dq_o) < 1e-4, "flash2 dq {}", fast.dq.max_abs_diff(&dq_o));
+        assert!(fast.dk.max_abs_diff(&dk_o) < 1e-4, "flash2 dk {}", fast.dk.max_abs_diff(&dk_o));
+        assert!(fast.dv.max_abs_diff(&dv_o) < 1e-4, "flash2 dv {}", fast.dv.max_abs_diff(&dv_o));
+        let slow = flash_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new(),
+        );
+        assert!(slow.dq.max_abs_diff(&dq_o) < 1e-4, "flash dq {}", slow.dq.max_abs_diff(&dq_o));
+        assert!(slow.dk.max_abs_diff(&dk_o) < 1e-4, "flash dk {}", slow.dk.max_abs_diff(&dk_o));
+        assert!(slow.dv.max_abs_diff(&dv_o) < 1e-4, "flash dv {}", slow.dv.max_abs_diff(&dv_o));
+    }
+
+    #[test]
+    fn fully_masked_rows_zero_output_zero_grads_no_nan() {
+        // kv_len = 0: every row is fully masked. Forward must emit zero
+        // rows with lse = -inf (not NaN, not a uniform average of V);
+        // backward must return all-zero, finite gradients.
+        let (q, k, v) = qkv(16, 4, 16);
+        let cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
+        let blocks = Blocks::explicit(4, 4);
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        assert!(fwd.o.data.iter().all(|&x| x == 0.0), "O must be zero for masked rows");
+        assert!(fwd.lse.iter().all(|&x| x == f32::NEG_INFINITY), "lse must be -inf");
+        let mut rng = SplitMix64::new(17);
+        let dout = Tensor::randn(&[16, 4], &mut rng, 1.0);
+        let g = flash2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 2, &mut Hbm::new(),
+        );
+        for (name, t) in [("dq", &g.dq), ("dk", &g.dk), ("dv", &g.dv)] {
+            assert!(t.data.iter().all(|&x| x == 0.0), "{name} must be zero");
+        }
+        // Partially-masked workload stays NaN-free with dead rows present:
+        // causal + kv_len=1 leaves only column 0 live.
+        let cfg = AttnConfig { causal: true, kv_len: Some(1), ..Default::default() };
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        assert!(fwd.o.data.iter().all(|x| x.is_finite()));
+        let g = flash2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 2, &mut Hbm::new(),
+        );
+        assert!(g.dq.data.iter().chain(&g.dk.data).chain(&g.dv.data).all(|x| x.is_finite()));
     }
 }

@@ -29,8 +29,37 @@
 //!   serve-path IO model, the perf benches) routes through it; the
 //!   reference kernel remains the oracle it is tested against.
 //!
-//! Both kernels produce softmax statistics; [`AttnStats`] abstracts over
-//! the two representations so the backward pass accepts either.
+//! The policy extends to the **backward pair**:
+//!
+//! * [`flash::flash_backward`] — faithful Algorithm 4 (K/V-outer, dQ_i
+//!   read-modify-written to HBM every inner tile, per its line 21). Its
+//!   instrumented traffic matches `sim::cost::flash_bwd` exactly: this is
+//!   the IO-theorem oracle for gradient claims and must stay
+//!   slow-but-faithful.
+//! * [`flash2::flash2_backward`] — the fast production gradient kernel:
+//!   `D = rowsum(dO ∘ O)` precomputed in one epilogue pass, a Q-outer dQ
+//!   phase with the accumulator on chip for the whole K/V stream (written
+//!   once), and a column-block-parallel dK/dV phase — both recomputing
+//!   `P = exp(s − L)` from the logsumexp through the same register-blocked
+//!   micro-kernels, bitwise worker-count independent. The mirror-side
+//!   gradient hot paths — the trainer's preflight gate and the perf
+//!   benches — route through it (`sim::cost::flash2_bwd` mirrors its
+//!   traffic); the fused train step itself still executes as a PJRT
+//!   artifact.
+//!
+//! Every `AttnGrads` producer is reachable through the shared
+//! [`attention_backward`] entry point, selected by [`BackwardKernel`] —
+//! call sites pick a policy role, not a concrete function.
+//!
+//! All kernels produce softmax statistics; [`AttnStats`] abstracts over
+//! the two representations so either backward accepts either forward's
+//! output. Fully-masked rows (e.g. `kv_len` = 0 shards) have defined
+//! semantics on the fast/production paths — flash2 forward, the sharded
+//! driver and `merge_partials`, and both tiled backwards: zero output
+//! row, logsumexp −∞ (`AttnStats::lse` maps zero-mass `(l, m)` pairs to
+//! −∞ too), zero gradient — never NaN/Inf. The faithful `flash_forward`
+//! keeps Algorithm 1's literal arithmetic and is not given special
+//! masked-row handling.
 //!
 //! All functions operate on one batch*head slice `[n, d]`; callers fold the
 //! leading dims.
@@ -110,11 +139,21 @@ impl AttnStats<'_> {
         self.len() == 0
     }
 
-    /// Logsumexp of row `r` under either representation.
+    /// Logsumexp of row `r` under either representation. A zero-mass row
+    /// (`l = 0`, the all-masked convention of `merge_partials` and the
+    /// sharded path) maps to `-inf`, matching the fast kernel's encoding,
+    /// so the backward passes' zero-gradient guard fires for Pair stats
+    /// too instead of seeing the finite `ln(1e-37)` clamp.
     #[inline]
     pub fn lse(&self, r: usize) -> f32 {
         match self {
-            AttnStats::Pair { l, m } => m[r] + l[r].max(1e-37).ln(),
+            AttnStats::Pair { l, m } => {
+                if l[r] == 0.0 {
+                    f32::NEG_INFINITY
+                } else {
+                    m[r] + l[r].max(1e-37).ln()
+                }
+            }
             AttnStats::Lse(lse) => lse[r],
         }
     }
@@ -148,9 +187,99 @@ pub struct AttnGrads {
     pub dv: Tensor,
 }
 
+/// Which gradient kernel an `AttnGrads` producer routes through — the
+/// backward half of the two-kernel policy (module docs above).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackwardKernel {
+    /// Algorithm 3: the materialise-everything baseline (square shapes;
+    /// ignores the saved statistics and recomputes P densely).
+    Standard,
+    /// Algorithm 4: the faithful instrumented K/V-outer reference — the
+    /// IO-theorem oracle.
+    Flash,
+    /// The fast two-phase production kernel (Q-outer dQ + column-parallel
+    /// dK/dV) with `workers` row/column-block threads.
+    Flash2 { workers: usize },
+}
+
+/// Shared entry point for every backward pass. All hot paths (trainer
+/// preflight, benches, future autograd plumbing) select a
+/// [`BackwardKernel`] role here instead of naming kernel functions, so
+/// swapping the production gradient kernel is a one-line policy change.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_backward(
+    kernel: BackwardKernel,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: AttnStats<'_>,
+    cfg: &AttnConfig,
+    blocks: flash::Blocks,
+    hbm: &mut crate::sim::hbm::Hbm,
+) -> AttnGrads {
+    match kernel {
+        BackwardKernel::Standard => standard::standard_backward(q, k, v, dout, cfg, hbm),
+        BackwardKernel::Flash => {
+            flash::flash_backward(q, k, v, o, dout, stats, cfg, blocks, hbm)
+        }
+        BackwardKernel::Flash2 { workers } => {
+            flash2::flash2_backward(q, k, v, o, dout, stats, cfg, blocks, workers, hbm)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::hbm::Hbm;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn entry_point_kernels_agree() {
+        // All three BackwardKernel roles produce the same gradients for
+        // the same workload (the dispatch itself is what's under test —
+        // numeric parity is property-tested per kernel).
+        let mut rng = SplitMix64::new(21);
+        let n = 24usize;
+        let d = 8usize;
+        let q = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let cfg = AttnConfig::causal();
+        let blocks = flash::Blocks::explicit(8, 8);
+        let fwd = flash2::flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let grads: Vec<AttnGrads> = [
+            BackwardKernel::Standard,
+            BackwardKernel::Flash,
+            BackwardKernel::Flash2 { workers: 3 },
+        ]
+        .into_iter()
+        .map(|kernel| {
+            attention_backward(
+                kernel, &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new(),
+            )
+        })
+        .collect();
+        for g in &grads[1..] {
+            assert!(grads[0].dq.max_abs_diff(&g.dq) < 1e-4);
+            assert!(grads[0].dk.max_abs_diff(&g.dk) < 1e-4);
+            assert!(grads[0].dv.max_abs_diff(&g.dv) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn stats_zero_mass_pair_maps_to_neg_inf() {
+        // The all-masked convention: (l, m) = (0, -inf) must read as
+        // lse = -inf (so backward passes skip the row), not ln(1e-37).
+        let l = vec![0.0f32, 1.0];
+        let m = vec![f32::NEG_INFINITY, 0.5];
+        let pair = AttnStats::Pair { l: &l, m: &m };
+        assert_eq!(pair.lse(0), f32::NEG_INFINITY);
+        assert!((pair.lse(1) - 0.5).abs() < 1e-6);
+    }
 
     #[test]
     fn stats_pair_and_lse_agree() {

@@ -17,15 +17,20 @@ use crate::runtime::{Runtime, Value};
 use crate::util::rng::SplitMix64;
 
 /// One-time preflight on the training/serving path: the fast attention
-/// kernel (`attn::flash2`, which the sharded driver and perf paths route
-/// through) must agree with the paper-faithful reference mirror before any
-/// step runs. Costs one tiny [48, 16] workload, once per process.
+/// kernel *pair* (`attn::flash2` forward + backward — the kernels the
+/// sharded driver and the perf benches route through, backward via the
+/// shared `attn::attention_backward` entry point) must agree with the
+/// paper-faithful reference mirrors before any step runs. The fused train
+/// step itself executes as a PJRT artifact; this gate keeps the Rust
+/// mirrors honest before they are used for IO claims or serving math.
+/// Costs one tiny [48, 16] fwd+bwd workload, once per process.
 fn preflight_fast_kernel() -> Result<()> {
     static DIFF: OnceLock<f32> = OnceLock::new();
     let diff = *DIFF.get_or_init(flash2::self_check);
     ensure!(
         diff < 1e-4,
-        "fast attention kernel (attn::flash2) disagrees with the reference mirror: max diff {diff}"
+        "fast attention kernel pair (attn::flash2 fwd/bwd) disagrees with the reference mirrors: \
+         max diff {diff}"
     );
     Ok(())
 }

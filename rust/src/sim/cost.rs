@@ -137,6 +137,45 @@ pub fn flash_bwd(n: u64, d: u64, blocks: Blocks, causal: bool, dropout: bool) ->
     Cost { hbm_elems: hbm, flops: live * flops_per_pair, kernels: 1 }
 }
 
+/// Fast two-phase backward (attn::flash2::flash2_backward) — matches its
+/// instrumented counter access-for-access on divisible tilings:
+///
+///   D pass:   dO, O loaded once (2Nd), D stored once (N);
+///   phase 1:  Q/dO/D/L loaded once per row block (2Nd + 2N total), K/V
+///             streamed per live pair (2·B_c·d), dQ stored once (Nd);
+///   phase 2:  K/V loaded once per column block (2Nd total), Q/dO/D/L
+///             streamed per live pair (2·B_r·d + 2·B_r), dK/dV stored
+///             once (2Nd).
+///
+/// Total 9Nd + 3N + live·(2·B_c·d + 2·B_r·d + 2·B_r). The trade vs
+/// Algorithm 4: the Θ(T_c·N·d) dQ read-modify-write traffic of its line
+/// 21 — and its 3Nd zero-init store — are gone, in exchange for phase 1
+/// re-streaming K/V once per *row* block. Per live pair that is
+/// 2·B_c·d + 2·B_r·d here vs 5·B_r·d there, so the fast kernel is
+/// strictly below the reference whenever 3·B_r > 2·B_c (square-ish
+/// tiles, which is what the production backward paths use) and the
+/// tiling has more than a couple of blocks per side.
+pub fn flash2_bwd(n: u64, d: u64, blocks: Blocks, causal: bool, dropout: bool) -> Cost {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    let live = live_pairs(n, b_r, b_c, causal);
+    let hbm = (2 * n * d + n)                    // D = rowsum(dO ∘ O) pass
+        + (2 * n * d + 2 * n)                    // phase 1: Q_i, dO_i, D_i, L_i once
+        + live * (2 * b_c * d)                   // phase 1: K_j/V_j per live pair
+        + n * d                                  // phase 1: dQ stored once
+        + 2 * n * d                              // phase 2: K_j/V_j once per column block
+        + live * (2 * b_r * d + 2 * b_r)         // phase 2: Q_i/dO_i/D_i/L_i per live pair
+        + 2 * n * d;                             // phase 2: dK/dV stored once
+    let tile = b_r * b_c;
+    // Per live pair: S and dP matmuls in both phases (4 × 2·tile·d), the
+    // dQ/dK/dV accumulations (3 × 2·tile·d), and the elementwise
+    // exp/dS work; plus the D precompute pass.
+    let mut flops_per_pair = 14 * tile * d + 7 * tile;
+    if dropout {
+        flops_per_pair += 2 * DROPOUT_OPS_PER_ELEM * tile;
+    }
+    Cost { hbm_elems: hbm, flops: live * flops_per_pair + 2 * n * d, kernels: 2 }
+}
+
 /// Fast Q-outer forward (attn::flash2::flash2_forward) — matches its
 /// instrumented counter access-for-access on divisible tilings: Q loaded
 /// once (N·d), K/V streamed once per live row-block pair (2·B_c·d each),
@@ -355,6 +394,25 @@ mod tests {
         let f1 = flash_fwd(n, d, blocks, false, false).hbm_elems;
         let f2 = flash2_fwd(n, d, blocks, false, false).hbm_elems;
         assert!(f2 < f1, "flash2 {f2} vs flash {f1}");
+    }
+
+    #[test]
+    fn flash2_bwd_below_algorithm4_reference() {
+        // The backward half of the fast-kernel pair must beat the faithful
+        // Algorithm 4 count, and the gap should track T_c (the deleted
+        // per-tile dQ round trips).
+        let n = 4096;
+        let d = 64;
+        for blocks in [Blocks::explicit(128, 128), Blocks::explicit(256, 128), Blocks::explicit(64, 64)] {
+            let slow = flash_bwd(n, d, blocks, false, false).hbm_elems;
+            let fast = flash2_bwd(n, d, blocks, false, false).hbm_elems;
+            assert!(fast < slow, "flash2_bwd {fast} vs flash_bwd {slow}");
+        }
+        // Causal variant stays below too.
+        let blocks = Blocks::explicit(128, 128);
+        let slow = flash_bwd(n, d, blocks, true, false).hbm_elems;
+        let fast = flash2_bwd(n, d, blocks, true, false).hbm_elems;
+        assert!(fast < slow, "causal: flash2_bwd {fast} vs flash_bwd {slow}");
     }
 
     #[test]
