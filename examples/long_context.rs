@@ -36,8 +36,10 @@ fn main() -> Result<()> {
         ]);
     }
     t.print();
-    println!("paper analogue: Table 5 (MIMIC-III F1 52.8 @512 -> 57.1 @16K) — same information-\n\
-              theoretic mechanism: truncation hides evidence the label needs.");
+    println!(
+        "paper analogue: Table 5 (MIMIC-III F1 52.8 @512 -> 57.1 @16K) — same information-\n\
+         theoretic mechanism: truncation hides evidence the label needs."
+    );
     assert!(
         accs.last().unwrap() + 1e-9 >= accs.first().unwrap() - 0.05,
         "long-context accuracy collapsed: {accs:?}"

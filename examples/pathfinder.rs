@@ -42,12 +42,19 @@ fn main() -> Result<()> {
     let ds = Pathfinder::for_seq(seq);
     let mut rng = SplitMix64::new(0);
     let (toks, label) = ds.sample(seq, &mut rng);
-    println!("sample image ({}x{}, label = {}):\n{}", ds.side, ds.side, label, render(&toks, ds.side));
+    println!(
+        "sample image ({}x{}, label = {}):\n{}",
+        ds.side,
+        ds.side,
+        label,
+        render(&toks, ds.side)
+    );
 
     let mut rt = Runtime::cpu(Path::new("artifacts"))?;
     let res = run_task(&mut rt, tag, &ds, steps, 17)?;
     println!(
-        "pathfinder seq={} ({}x{} grid): accuracy {:.3} vs chance {:.3} after {} steps ({:.0} ms/step)",
+        "pathfinder seq={} ({}x{} grid): accuracy {:.3} vs chance {:.3} after {} steps \
+         ({:.0} ms/step)",
         seq, ds.side, ds.side, res.accuracy, chance_accuracy(&ds), steps, res.ms_per_step
     );
     println!("paper analogue: Table 6 — Path-X 61.4% / Path-256 63.1%, first better-than-chance

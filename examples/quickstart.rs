@@ -26,7 +26,10 @@ fn main() -> Result<()> {
     // Inputs matching the artifact signature: [bh=8, n=128, d=64].
     let (bh, n, d) = (8usize, 128usize, 64usize);
     let mut rng = SplitMix64::new(42);
-    let mk = |rng: &mut SplitMix64| Value::F32 { shape: vec![bh, n, d], data: rng.normal_vec(bh * n * d, 1.0) };
+    let mk = |rng: &mut SplitMix64| Value::F32 {
+        shape: vec![bh, n, d],
+        data: rng.normal_vec(bh * n * d, 1.0),
+    };
     let q = mk(&mut rng);
     let k = mk(&mut rng);
     let v = mk(&mut rng);
@@ -78,17 +81,18 @@ fn main() -> Result<()> {
 
     // Bonus: causal + backward artifacts.
     let causal = rt.run("attn_flash_fwd_causal", &inputs)?.remove(0);
-    println!("causal forward OK (first row attends only itself: o[0] == v[0]: {})",
-             causal.as_f32()?[..d]
-                 .iter()
-                 .zip(&v.as_f32()?[..d])
-                 .all(|(a, b)| (a - b).abs() < 1e-4));
+    println!(
+        "causal forward OK (first row attends only itself: o[0] == v[0]: {})",
+        causal.as_f32()?[..d].iter().zip(&v.as_f32()?[..d]).all(|(a, b)| (a - b).abs() < 1e-4)
+    );
 
     let mut io4 = inputs.clone();
     io4.push(mk(&mut rng)); // dO
     let grads = rt.run("attn_flash_fwd_bwd", &io4)?;
-    println!("fwd+bwd artifact OK: outputs {:?}",
-             grads.iter().map(|g| g.shape().to_vec()).collect::<Vec<_>>());
+    println!(
+        "fwd+bwd artifact OK: outputs {:?}",
+        grads.iter().map(|g| g.shape().to_vec()).collect::<Vec<_>>()
+    );
 
     println!("\nquickstart OK — all four implementations agree.");
     Ok(())

@@ -20,7 +20,12 @@ fn main() -> Result<()> {
 
     let mut rt = Runtime::cpu(Path::new("artifacts"))?;
     let corpus = Corpus::builtin(150_000, 1);
-    let cfg = TrainConfig { model: "gpt_flash".into(), steps: warm, eval_every: warm.max(1), ..Default::default() };
+    let cfg = TrainConfig {
+        model: "gpt_flash".into(),
+        steps: warm,
+        eval_every: warm.max(1),
+        ..Default::default()
+    };
     let mut tr = LmTrainer::new(&mut rt, cfg)?;
     println!("warming the model: {warm} training steps ...");
     tr.train(&mut rt, &corpus)?;

@@ -47,7 +47,9 @@ fn main() -> Result<()> {
     println!("loss: {first:.4} -> {last:.4}   eval loss {eval:.4} (ppl {:.2})", eval.exp());
     tr.metrics.write_csv(Path::new("bench_out/train_gpt_loss_curve.csv"))?;
     tr.save(Path::new("bench_out/gpt_flash.ckpt"))?;
-    println!("loss curve -> bench_out/train_gpt_loss_curve.csv; checkpoint -> bench_out/gpt_flash.ckpt");
+    println!(
+        "loss curve -> bench_out/train_gpt_loss_curve.csv; checkpoint -> bench_out/gpt_flash.ckpt"
+    );
     assert!(last < first - 1.0, "loss should fall by >1 nat over the run");
 
     // Exactness twin: same seed, same data order, reference attention.
@@ -56,7 +58,13 @@ fn main() -> Result<()> {
     let mut max_diff = 0.0f64;
     let mut curves = Vec::new();
     for model in ["gpt_flash", "gpt_ref"] {
-        let cfg = TrainConfig { model: model.into(), steps: twin_steps, eval_every: 0, seed: 7, ..Default::default() };
+        let cfg = TrainConfig {
+            model: model.into(),
+            steps: twin_steps,
+            eval_every: 0,
+            seed: 7,
+            ..Default::default()
+        };
         let mut t2 = LmTrainer::new(&mut rt, cfg)?;
         t2.train(&mut rt, &corpus)?;
         curves.push(t2.metrics.points.iter().map(|p| p.loss).collect::<Vec<_>>());

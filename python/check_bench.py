@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over BENCH_attn.json.
+
+The hotpath microbench (rust/benches/hotpath_microbench.rs) emits mean
+ns/iter for the fast-kernel head-to-head (flash vs flash2, forward and
+backward) and for the batched multi-head scheduler vs the per-slice loop
+it replaced. This script fails the build when either perf property is
+lost:
+
+  1. flash2 slower than the faithful flash reference on ANY (pass, n)
+     cell. flash2 exists to be the fast production kernel and normally
+     wins by 1.3-5x, so the gate only grants FLASH2_TOL of timer-noise
+     headroom (CI smoke runs are 3 iterations on a shared runner — a
+     zero-tolerance comparison would flake on scheduling hiccups, not
+     regressions). The best production configuration (min over worker
+     counts) is what callers use, so that is what is gated.
+  2. the batched scheduler slower than the per-slice loop on any
+     (pass, n) cell, with a slightly larger allowance: batching saves
+     pool spin-ups and idle workers, but on big slices the two run
+     nearly the same work, so timer noise gets BATCHED_TOL headroom.
+
+Usage: python3 python/check_bench.py [BENCH_attn.json]
+"""
+
+import json
+import sys
+
+FLASH2_TOL = 1.05  # flash2 may be at most 5% over flash (noise only)
+BATCHED_TOL = 1.10  # batched may be at most 10% over the per-slice loop
+# Smoke mode measures tiny sizes over few iterations on a shared CI
+# runner, so timing noise is proportionally larger. flash2 wins by
+# 1.3-5x, so 1.15x headroom still catches any genuine loss. The batched
+# scheduler's expected smoke margin is thinner (at n=256 every slice
+# already saturates the workers, so it only saves pool spin-ups): gate
+# it loosely enough in smoke mode that only an egregious scheduling
+# regression (e.g. serialized workers, ~2x+) trips; full runs keep the
+# tight bound.
+SMOKE_FLASH2_TOL = 1.15
+SMOKE_BATCHED_TOL = 1.5
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_attn.json"
+    with open(path) as f:
+        data = json.load(f)
+    workers = data["workers"]
+    smoke = bool(data.get("smoke"))
+    flash2_tol = SMOKE_FLASH2_TOL if smoke else FLASH2_TOL
+    batched_tol = SMOKE_BATCHED_TOL if smoke else BATCHED_TOL
+    failures = []
+    cells = 0
+
+    print(f"perf gate over {path} (smoke={smoke}, workers={workers}, "
+          f"tolerances flash2 {flash2_tol}x / batched {batched_tol}x)")
+    for row in data.get("results", []):
+        n = row["n"]
+        for pass_name, ref_key, fast_keys in [
+            ("fwd", "flash_ns", ["flash2_w1_ns", f"flash2_w{workers}_ns"]),
+            ("bwd", "flash_bwd_ns", ["flash2_bwd_w1_ns", f"flash2_bwd_w{workers}_ns"]),
+        ]:
+            cells += 1
+            ref = row[ref_key]
+            fast = min(row[k] for k in fast_keys)
+            ratio = fast / ref if ref else float("inf")
+            verdict = "ok" if fast <= flash2_tol * ref else "REGRESSION"
+            print(f"  {pass_name:>3} n={n:>5}: flash {ref:>12.0f} ns  "
+                  f"flash2 {fast:>12.0f} ns  ratio {ratio:.3f}  {verdict}")
+            if fast > flash2_tol * ref:
+                failures.append(
+                    f"flash2 {pass_name} slower than flash at n={n}: "
+                    f"{fast:.0f} ns vs {ref:.0f} ns (tol {flash2_tol}x)")
+
+    for row in data.get("batched", []):
+        n = row["n"]
+        for pass_name, loop_key, batched_key in [
+            ("fwd", "per_slice_fwd_ns", "batched_fwd_ns"),
+            ("bwd", "per_slice_bwd_ns", "batched_bwd_ns"),
+        ]:
+            cells += 1
+            loop_ns = row[loop_key]
+            batched_ns = row[batched_key]
+            ratio = batched_ns / loop_ns if loop_ns else float("inf")
+            verdict = "ok" if batched_ns <= batched_tol * loop_ns else "REGRESSION"
+            print(f"  batched {pass_name:>3} n={n:>5}: per-slice {loop_ns:>12.0f} ns  "
+                  f"batched {batched_ns:>12.0f} ns  ratio {ratio:.3f}  {verdict}")
+            if batched_ns > batched_tol * loop_ns:
+                failures.append(
+                    f"batched {pass_name} slower than per-slice loop at n={n}: "
+                    f"{batched_ns:.0f} ns vs {loop_ns:.0f} ns (tol {batched_tol}x)")
+
+    if cells == 0:
+        # An empty/renamed results array must not silently disable the gate.
+        print("PERF GATE ERROR: no (pass, n) cells found in the bench JSON")
+        return 1
+    if failures:
+        print("\nPERF REGRESSIONS:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"perf gate passed ({cells} cells): flash2 beats flash and "
+          "batched beats the per-slice loop")
+    return 0
+
+if __name__ == "__main__":
+    sys.exit(main())

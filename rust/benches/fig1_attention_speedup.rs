@@ -33,7 +33,8 @@ fn speedup_table(spec: GpuSpec, d: u64, cfg0: BenchConfig, pass: Pass, tag: &str
 
 fn main() {
     println!("=== Fig 1 right: GPT-2 attention speedup (batch 64, 16 heads, d 64) ===\n");
-    let gpt2 = BenchConfig { batch: 64, heads: 16, dropout: true, masked: true, ..Default::default() };
+    let gpt2 =
+        BenchConfig { batch: 64, heads: 16, dropout: true, masked: true, ..Default::default() };
     let t = speedup_table(GpuSpec::a100_40gb(), 64, gpt2, Pass::FwdBwd, "dropout+mask");
     t.print();
     t.write_csv(&out_dir().join("fig1_gpt2_speedup.csv")).unwrap();
@@ -41,8 +42,14 @@ fn main() {
     println!("=== Fig 5: A100, d=64, all mask/dropout combos (fwd+bwd) ===\n");
     for (dropout, masked) in [(false, false), (true, false), (false, true), (true, true)] {
         let cfg = BenchConfig { dropout, masked, ..Default::default() };
-        speedup_table(GpuSpec::a100_40gb(), 64, cfg, Pass::FwdBwd,
-                      &format!("dropout={dropout} mask={masked}")).print();
+        speedup_table(
+            GpuSpec::a100_40gb(),
+            64,
+            cfg,
+            Pass::FwdBwd,
+            &format!("dropout={dropout} mask={masked}"),
+        )
+        .print();
     }
 
     println!("=== Fig 6: A100, head dim 128 ===\n");
@@ -65,14 +72,22 @@ fn main() {
     let peak: f64 = (7..13)
         .map(|i| {
             rl_a100
-                .speedup_vs_standard(Method::FlashAttention, Pass::Fwd, 1 << i,
-                                     &BenchConfig { batch: 64, heads: 16, dropout: true, masked: true, ..base })
+                .speedup_vs_standard(
+                    Method::FlashAttention,
+                    Pass::Fwd,
+                    1 << i,
+                    &BenchConfig { batch: 64, heads: 16, dropout: true, masked: true, ..base },
+                )
                 .unwrap_or(0.0)
         })
         .fold(0.0, f64::max);
     println!("peak attention speedup (GPT-2 shapes): {peak:.1}x (paper: up to 7.6x)");
-    let s_a100 = rl_a100.speedup_vs_standard(Method::FlashAttention, Pass::Fwd, 1024, &base).unwrap();
+    let s_a100 =
+        rl_a100.speedup_vs_standard(Method::FlashAttention, Pass::Fwd, 1024, &base).unwrap();
     let s_t4 = rl_t4.speedup_vs_standard(Method::FlashAttention, Pass::Fwd, 1024, &base).unwrap();
-    println!("T4 speedup {s_t4:.2}x <= A100 speedup {s_a100:.2}x (paper Fig. 8: smaller SRAM, less speedup): {}",
-             if s_t4 <= s_a100 * 1.05 { "OK" } else { "MISMATCH" });
+    println!(
+        "T4 speedup {s_t4:.2}x <= A100 speedup {s_a100:.2}x (paper Fig. 8: smaller SRAM, less \
+         speedup): {}",
+        if s_t4 <= s_a100 * 1.05 { "OK" } else { "MISMATCH" }
+    );
 }

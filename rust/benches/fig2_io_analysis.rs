@@ -37,20 +37,30 @@ fn fig2_left() {
     let blocks = Method::flash_blocks(&rl.spec, d, n);
 
     let std_c = cost::standard_fwd(n, d, false, false).add(cost::standard_bwd(n, d, false, false));
-    let fla_c = cost::flash_fwd(n, d, blocks, false, false).add(cost::flash_bwd(n, d, blocks, false, false));
+    let fla_c = cost::flash_fwd(n, d, blocks, false, false)
+        .add(cost::flash_bwd(n, d, blocks, false, false));
 
     let gf = |c: &cost::Cost| c.flops as f64 * bh as f64 / 1e9;
     let gb = |c: &cost::Cost| c.hbm_elems as f64 * cfg.bytes_per_elem * bh as f64 / 1e9;
     let ms = |m: Method| rl.time_ms(m, Pass::FwdBwd, n, &cfg).unwrap();
 
     let mut t = Table::new(
-        "Fig 2 left — GPT-2 medium attention fwd+bwd (paper: std 66.6 GF / 40.3 GB / 41.7 ms; flash 75.2 GF / 4.4 GB / 7.3 ms)",
+        "Fig 2 left — GPT-2 medium attention fwd+bwd (paper: std 66.6 GF / 40.3 GB / 41.7 ms; \
+         flash 75.2 GF / 4.4 GB / 7.3 ms)",
         &["Attention", "GFLOPs", "HBM R/W (GB)", "Runtime (ms)"],
     );
-    t.row(vec!["Standard".into(), format!("{:.1}", gf(&std_c)), format!("{:.1}", gb(&std_c)),
-               format!("{:.1}", ms(Method::PyTorch))]);
-    t.row(vec!["FlashAttention".into(), format!("{:.1}", gf(&fla_c)), format!("{:.1}", gb(&fla_c)),
-               format!("{:.1}", ms(Method::FlashAttention))]);
+    t.row(vec![
+        "Standard".into(),
+        format!("{:.1}", gf(&std_c)),
+        format!("{:.1}", gb(&std_c)),
+        format!("{:.1}", ms(Method::PyTorch)),
+    ]);
+    t.row(vec![
+        "FlashAttention".into(),
+        format!("{:.1}", gf(&fla_c)),
+        format!("{:.1}", gb(&fla_c)),
+        format!("{:.1}", ms(Method::FlashAttention)),
+    ]);
     t.print();
     t.write_csv(&out_dir().join("fig2_left.csv")).unwrap();
     println!(
@@ -90,14 +100,25 @@ fn fig2_left() {
     let pred_fl2 = cost::flash2_fwd(ni as u64, di as u64, bl, false, false);
 
     println!("instrumented-vs-analytic (N={ni}, d={di}):");
-    println!("  standard: measured {} vs analytic {}  ({})", h_std.accesses(), pred_std.hbm_elems,
-             if h_std.accesses() == pred_std.hbm_elems { "EXACT" } else { "≈" });
-    println!("  flash:    measured {} vs analytic {}  ({})", h_fla.accesses(), pred_fla.hbm_elems,
-             if h_fla.accesses() == pred_fla.hbm_elems { "EXACT" } else { "≈" });
-    println!("  flash2:   measured {} vs analytic {} fwd-only ({}); O/stats stores {} = N·d + N",
-             h_fl2.accesses(), pred_fl2.hbm_elems,
-             if h_fl2.accesses() == pred_fl2.hbm_elems { "EXACT" } else { "≈" },
-             h_fl2.stores);
+    println!(
+        "  standard: measured {} vs analytic {}  ({})",
+        h_std.accesses(),
+        pred_std.hbm_elems,
+        if h_std.accesses() == pred_std.hbm_elems { "EXACT" } else { "≈" }
+    );
+    println!(
+        "  flash:    measured {} vs analytic {}  ({})",
+        h_fla.accesses(),
+        pred_fla.hbm_elems,
+        if h_fla.accesses() == pred_fla.hbm_elems { "EXACT" } else { "≈" }
+    );
+    println!(
+        "  flash2:   measured {} vs analytic {} fwd-only ({}); O/stats stores {} = N·d + N",
+        h_fl2.accesses(),
+        pred_fl2.hbm_elems,
+        if h_fl2.accesses() == pred_fl2.hbm_elems { "EXACT" } else { "≈" },
+        h_fl2.stores
+    );
     println!();
 }
 
@@ -107,7 +128,8 @@ fn fig2_middle() {
     let cfg = BenchConfig { batch: 64, heads: 16, ..Default::default() };
     let rl = Roofline::a100();
     let mut t = Table::new(
-        "Fig 2 middle — fwd runtime vs block size (runtime falls with HBM accesses, flattens when compute-bound)",
+        "Fig 2 middle — fwd runtime vs block size (runtime falls with HBM accesses, flattens \
+         when compute-bound)",
         &["B_c", "HBM accesses (M elems)", "model fwd (ms)"],
     );
     for bc in [16u64, 32, 64, 128, 256, 512, 1024] {
@@ -116,8 +138,11 @@ fn fig2_middle() {
         let bytes = c.hbm_elems as f64 * cfg.bytes_per_elem * cfg.bh() as f64;
         let flops = c.flops as f64 * cfg.bh() as f64;
         let ms = (bytes / rl.spec.eff_bw() + flops / rl.spec.eff_flops_fp16()) * 1e3;
-        t.row(vec![bc.to_string(), format!("{:.1}", c.hbm_elems as f64 * cfg.bh() as f64 / 1e6),
-                   format!("{ms:.2}")]);
+        t.row(vec![
+            bc.to_string(),
+            format!("{:.1}", c.hbm_elems as f64 * cfg.bh() as f64 / 1e6),
+            format!("{ms:.2}"),
+        ]);
     }
     t.print();
     t.write_csv(&out_dir().join("fig2_middle.csv")).unwrap();
@@ -152,8 +177,11 @@ fn fig2_right() {
         let flops = c.flops as f64 * cfg.bh() as f64;
         let ms = (bytes / rl.spec.eff_bw() + flops / rl.spec.eff_flops_fp16()) * 1e3;
         let dense = *dense_ms.get_or_insert(ms); // first row (s=1) is the baseline
-        t.row(vec![format!("{:.3}", mask.sparsity()), format!("{ms:.2}"),
-                   format!("{:.2}x", dense / ms)]);
+        t.row(vec![
+            format!("{:.3}", mask.sparsity()),
+            format!("{ms:.2}"),
+            format!("{:.2}x", dense / ms),
+        ]);
     }
     t.print();
     t.write_csv(&out_dir().join("fig2_right.csv")).unwrap();

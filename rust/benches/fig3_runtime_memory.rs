@@ -52,16 +52,24 @@ fn main() {
     let sp1k = rl.speedup_vs_standard(Method::FlashAttention, Pass::FwdBwd, 1024, &cfg).unwrap();
     check(&format!("flash faster than PyTorch at 1K ({sp1k:.2}x)"), sp1k > 1.4);
     let f = |m: Method, n: u64| rl.time_ms(m, Pass::FwdBwd, n, &cfg);
-    check("flash beats Linformer at 256", f(Method::FlashAttention, 256) < f(Method::Linformer, 256));
-    check("Linformer beats flash at 8K (crossover happened)",
-          f(Method::Linformer, 8192) < f(Method::FlashAttention, 8192));
+    check(
+        "flash beats Linformer at 256",
+        f(Method::FlashAttention, 256) < f(Method::Linformer, 256),
+    );
+    check(
+        "Linformer beats flash at 8K (crossover happened)",
+        f(Method::Linformer, 8192) < f(Method::FlashAttention, 8192),
+    );
     let bs_fastest_64k = SWEEP_METHODS.iter().all(|m| {
         f(*m, 65536).map(|t| t * 1.2 >= f(Method::BlockSparseFlash, 65536).unwrap()).unwrap_or(true)
     });
     check("block-sparse flash fastest at 64K", bs_fastest_64k);
     let mem_ratio = rl.mem_mb(Method::PyTorch, 4096, &cfg).unwrap()
         / rl.mem_mb(Method::FlashAttention, 4096, &cfg).unwrap();
-    check(&format!("memory saving vs exact at 4K ({mem_ratio:.0}x, paper: up to 20x)"), mem_ratio > 10.0);
+    check(
+        &format!("memory saving vs exact at 4K ({mem_ratio:.0}x, paper: up to 20x)"),
+        mem_ratio > 10.0,
+    );
     let survivors: Vec<&str> = SWEEP_METHODS
         .iter()
         .filter(|m| f(**m, 65536).is_some())

@@ -8,18 +8,26 @@
 //!    column-parallel dK/dV bwd) at n ∈ {512, 1K, 4K}, emitting
 //!    BENCH_attn.json (mean ns/iter per kernel and pass) so future PRs can
 //!    track the perf trajectory;
+//!  * batched multi-head scheduler vs the per-slice loop it replaced
+//!    (attn::batched, fwd AND bwd): one pool over every slice·block work
+//!    item vs one pool spin-up per slice, same worker budget — rows land
+//!    in BENCH_attn.json under "batched";
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
 //!    cost per step).
 //!
 //! `BENCH_SMOKE=1` shrinks sizes and iteration counts so CI can run the
-//! whole bench as a cheap regression gate (BENCH_attn.json is still
-//! written, flagged `"smoke": true`).
+//! whole bench cheaply; BENCH_attn.json is still written (flagged
+//! `"smoke": true`) and the CI perf-regression gate
+//! (python/check_bench.py) parses it and fails on any (pass, n) cell
+//! where flash2 lost to flash, or where batched lost to the per-slice
+//! loop.
 
 use std::path::Path;
 use std::time::Instant;
 
+use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
 use flashattn::attn::standard::standard_forward;
@@ -30,6 +38,13 @@ use flashattn::sim::hbm::Hbm;
 use flashattn::tensor::Tensor;
 use flashattn::util::rng::SplitMix64;
 use flashattn::util::table::Table;
+
+/// Head dim and worker budget shared by both head-to-head sections AND the
+/// BENCH_attn.json header — the JSON row keys embed WORKERS
+/// ("flash2_w{WORKERS}_ns"), and python/check_bench.py resolves them via
+/// the header's "workers" field, so these must stay a single definition.
+const D: usize = 64;
+const WORKERS: usize = 4;
 
 fn mirrors() {
     let mut t = Table::new(
@@ -61,13 +76,13 @@ fn mirrors() {
 
 /// flash vs flash2 head-to-head at d=64, forward and backward — the
 /// kernels the production paths route through vs the instrumented
-/// references they are tested against. Emits BENCH_attn.json at the repo
-/// root for the perf trajectory. The backward comparison runs both kernels
-/// on the same square tiling (the regime the two-phase kernel targets;
-/// see sim::cost::flash2_bwd) and the same flash2-forward outputs.
-fn fast_kernel_head_to_head(smoke: bool) {
-    let d = 64usize;
-    let workers = 4usize;
+/// references they are tested against. Returns the BENCH_attn.json result
+/// rows. The backward comparison runs both kernels on the same
+/// Blocks::for_backward square tiling (the regime the two-phase kernel
+/// targets; see sim::cost::flash2_bwd) and the same flash2-forward
+/// outputs.
+fn fast_kernel_head_to_head(smoke: bool) -> Vec<String> {
+    let (d, workers) = (D, WORKERS);
     let mut t = Table::new(
         "fast kernel head-to-head (per [n,64] slice, mean ns/iter)",
         &[
@@ -90,8 +105,8 @@ fn fast_kernel_head_to_head(smoke: bool) {
         let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
         let cfg = AttnConfig::default();
         let blocks = Blocks::from_sram(48 * 1024, d, n);
-        let bwd_blocks = Blocks::explicit(n.min(64), n.min(64));
-        let iters = if smoke { 1 } else if n >= 4096 { 2 } else { 5 };
+        let bwd_blocks = Blocks::for_backward(48 * 1024, d);
+        let iters = if smoke { 5 } else if n >= 4096 { 2 } else { 5 };
         let t_flash = mean_time(iters, || {
             std::hint::black_box(flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new()));
         });
@@ -99,11 +114,13 @@ fn fast_kernel_head_to_head(smoke: bool) {
             std::hint::black_box(flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new()));
         });
         let t_f2_w4 = mean_time(iters, || {
-            std::hint::black_box(flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new()));
+            std::hint::black_box(flash2_forward(
+                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+            ));
         });
         // Backward: both kernels consume the same forward outputs.
         let fwd = flash2_forward(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
-        let bwd_iters = if smoke { 1 } else if n >= 4096 { 1 } else { 3 };
+        let bwd_iters = if smoke { 5 } else if n >= 4096 { 1 } else { 3 };
         let t_bwd_flash = mean_time(bwd_iters, || {
             std::hint::black_box(flash_backward(
                 &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, &mut Hbm::new(),
@@ -130,8 +147,9 @@ fn fast_kernel_head_to_head(smoke: bool) {
         ]);
         json_rows.push(format!(
             "    {{\"n\": {n}, \"flash_ns\": {:.0}, \"flash2_w1_ns\": {:.0}, \
-             \"flash2_w{workers}_ns\": {:.0}, \"speedup_w1\": {:.3}, \"speedup_w{workers}\": {:.3}, \
-             \"flash_bwd_ns\": {:.0}, \"flash2_bwd_w1_ns\": {:.0}, \"flash2_bwd_w{workers}_ns\": {:.0}, \
+             \"flash2_w{workers}_ns\": {:.0}, \"speedup_w1\": {:.3}, \
+             \"speedup_w{workers}\": {:.3}, \"flash_bwd_ns\": {:.0}, \
+             \"flash2_bwd_w1_ns\": {:.0}, \"flash2_bwd_w{workers}_ns\": {:.0}, \
              \"speedup_bwd_w1\": {:.3}, \"speedup_bwd_w{workers}\": {:.3}}}",
             t_flash * 1e9,
             t_f2_w1 * 1e9,
@@ -146,12 +164,117 @@ fn fast_kernel_head_to_head(smoke: bool) {
         ));
     }
     t.print();
+    json_rows
+}
+
+/// Batched multi-head scheduler vs the per-slice loop it replaced, on the
+/// same worker budget: `slices` (batch × heads) [n, 64] slices run either
+/// as one `flash2_forward_batched`/`flash2_backward_batched` call (every
+/// slice·block work item in one pool) or as `slices` per-slice kernel
+/// invocations (one pool spin-up each — the old hot-path shape). Returns
+/// BENCH_attn.json "batched" rows; the acceptance bar is batched no
+/// slower on every (pass, n) cell.
+fn batched_head_to_head(smoke: bool) -> Vec<String> {
+    let (d, workers) = (D, WORKERS);
+    let (batch, heads) = (2usize, 4usize);
+    let slices = batch * heads;
+    let mut t = Table::new(
+        "batched scheduler vs per-slice loop (2x4 slices of [n,64], mean ns/iter)",
+        &[
+            "n",
+            "per-slice fwd (ms)",
+            "batched fwd (ms)",
+            "per-slice bwd (ms)",
+            "batched bwd (ms)",
+        ],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let sizes: &[usize] = if smoke { &[128, 256] } else { &[512, 1024, 4096] };
+    for &n in sizes {
+        let mut rng = SplitMix64::new(2);
+        let q = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let dout = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::from_sram(48 * 1024, d, n);
+        let bwd_blocks = Blocks::for_backward(48 * 1024, d);
+        // The per-slice loop gets its slices pre-cut (a real per-slice
+        // caller holds them already) — only kernel time is measured.
+        let cut = |t4: &Tensor| -> Vec<Tensor> {
+            (0..slices)
+                .map(|s| {
+                    Tensor::from_vec(&[n, d], t4.data[s * n * d..(s + 1) * n * d].to_vec())
+                })
+                .collect()
+        };
+        let (qs, ks, vs, dos) = (cut(&q), cut(&k), cut(&v), cut(&dout));
+        let per_cfg: Vec<AttnConfig> =
+            (0..slices).map(|s| AttnConfig { bh_index: s as u32, ..cfg.clone() }).collect();
+        let iters = if smoke { 5 } else if n >= 4096 { 1 } else { 2 };
+        let t_loop_fwd = mean_time(iters, || {
+            for s in 0..slices {
+                std::hint::black_box(flash2_forward(
+                    &qs[s], &ks[s], &vs[s], &per_cfg[s], blocks, workers, &mut Hbm::new(),
+                ));
+            }
+        });
+        let t_batched_fwd = mean_time(iters, || {
+            std::hint::black_box(flash2_forward_batched(
+                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+            ));
+        });
+        // Backward: both sides consume the same (batched) forward outputs.
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let fwd_o_slices = cut(&fwd.o);
+        let t_loop_bwd = mean_time(iters, || {
+            for s in 0..slices {
+                std::hint::black_box(flash2_backward(
+                    &qs[s], &ks[s], &vs[s], &fwd_o_slices[s], &dos[s], fwd.stats.slice(s),
+                    &per_cfg[s], bwd_blocks, workers, &mut Hbm::new(),
+                ));
+            }
+        });
+        let t_batched_bwd = mean_time(iters, || {
+            std::hint::black_box(flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, workers,
+                &mut Hbm::new(),
+            ));
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", t_loop_fwd * 1e3),
+            format!("{:.2}", t_batched_fwd * 1e3),
+            format!("{:.2}", t_loop_bwd * 1e3),
+            format!("{:.2}", t_batched_bwd * 1e3),
+        ]);
+        json_rows.push(format!(
+            "    {{\"n\": {n}, \"slices\": {slices}, \"per_slice_fwd_ns\": {:.0}, \
+             \"batched_fwd_ns\": {:.0}, \"fwd_speedup\": {:.3}, \"per_slice_bwd_ns\": {:.0}, \
+             \"batched_bwd_ns\": {:.0}, \"bwd_speedup\": {:.3}}}",
+            t_loop_fwd * 1e9,
+            t_batched_fwd * 1e9,
+            t_loop_fwd / t_batched_fwd,
+            t_loop_bwd * 1e9,
+            t_batched_bwd * 1e9,
+            t_loop_bwd / t_batched_bwd,
+        ));
+    }
+    t.print();
+    json_rows
+}
+
+/// Assemble BENCH_attn.json (head-to-head + batched rows) at the repo
+/// root regardless of the cwd cargo bench picked.
+fn write_bench_json(smoke: bool, results: &[String], batched: &[String]) {
+    let (d, workers) = (D, WORKERS);
     let json = format!(
         "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
-         \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \"results\": [\n{}\n  ]\n}}\n",
-        json_rows.join(",\n")
+         \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \
+         \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ]\n}}\n",
+        results.join(",\n"),
+        batched.join(",\n")
     );
-    // Repo root regardless of the cwd cargo bench picked.
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_attn.json");
     match std::fs::write(&out, &json) {
         Ok(()) => println!("wrote {}", out.display()),
@@ -204,7 +327,12 @@ fn artifacts() {
         use flashattn::coordinator::{LmTrainer, TrainConfig};
         use flashattn::data::corpus::Corpus;
         let corpus = Corpus::builtin(50_000, 2);
-        let cfg = TrainConfig { model: "gpt_flash".into(), steps: 1, eval_every: 0, ..Default::default() };
+        let cfg = TrainConfig {
+            model: "gpt_flash".into(),
+            steps: 1,
+            eval_every: 0,
+            ..Default::default()
+        };
         let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
         let batch = corpus.lm_batch(tr.batch, tr.n_ctx, &mut SplitMix64::new(3));
         tr.step(&mut rt, &batch).unwrap(); // warmup: includes artifact compile
@@ -213,8 +341,10 @@ fn artifacts() {
         for _ in 0..iters {
             tr.step(&mut rt, &batch).unwrap();
         }
-        println!("gpt_flash fused train step: {:.0} ms/step (mean over {iters}, post-compile)",
-                 t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+        println!(
+            "gpt_flash fused train step: {:.0} ms/step (mean over {iters}, post-compile)",
+            t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+        );
     }
 }
 
@@ -223,6 +353,8 @@ fn main() {
     if !smoke {
         mirrors();
     }
-    fast_kernel_head_to_head(smoke);
+    let results = fast_kernel_head_to_head(smoke);
+    let batched = batched_head_to_head(smoke);
+    write_bench_json(smoke, &results, &batched);
     artifacts();
 }

@@ -27,7 +27,11 @@ fn main() {
         "Table 1 — BERT-large to 72.0% MLM accuracy, 8xA100 (paper: 20.0 vs 17.4 min)",
         &["BERT implementation", "training time (min)", "source"],
     );
-    t.row(vec!["Nvidia MLPerf 1.1 (FMHA)".into(), format!("{paper_baseline_min:.1}"), "paper".into()]);
+    t.row(vec![
+        "Nvidia MLPerf 1.1 (FMHA)".into(),
+        format!("{paper_baseline_min:.1}"),
+        "paper".into(),
+    ]);
     t.row(vec![
         "FlashAttention (model)".into(),
         format!("{model_flash_min:.1}"),
@@ -38,13 +42,16 @@ fn main() {
     t.write_csv(&out_dir().join("table1.csv")).unwrap();
 
     println!(
-        "attention share of FMHA-baseline step at seq 512: {:.1}% -> end-to-end gain {:.1}% (paper: 15%)",
+        "attention share of FMHA-baseline step at seq 512: {:.1}% -> end-to-end gain {:.1}% \
+         (paper: 15%)",
         share * 100.0,
         (speedup - 1.0) * 100.0
     );
     let ok = (1.0..1.35).contains(&speedup);
-    println!("[{}] flash does not lose end-to-end; gain <= the paper's 15%",
-             if ok { "OK" } else { "FAIL" });
+    println!(
+        "[{}] flash does not lose end-to-end; gain <= the paper's 15%",
+        if ok { "OK" } else { "FAIL" }
+    );
     println!(
         "documented deviation (EXPERIMENTS.md): at N=512 attention is only ~{:.0}% of a BERT\n\
          step, so a pure attention-swap model caps the gain near {:.0}%; the paper's full 15%\n\

@@ -23,7 +23,8 @@ use flashattn::util::table::Table;
 fn model_table() {
     let rl = Roofline::a100();
     let mut t = Table::new(
-        "Table 2 — GPT-2 training speed model (paper speedups: HF 1.0x, Megatron 2.0x/1.8x, Flash 3.5x/3.0x)",
+        "Table 2 — GPT-2 training speed model (paper speedups: HF 1.0x, Megatron 2.0x/1.8x, \
+         Flash 3.5x/3.0x)",
         &["Model implementation", "rel. speed (model)", "rel. speed (paper)", "ppl"],
     );
     for (shape, paper) in [
@@ -33,20 +34,36 @@ fn model_table() {
         let hf = step_seconds(&rl, &shape, Method::PyTorch, "huggingface").unwrap();
         let meg = step_seconds(&rl, &shape, Method::Megatron, "megatron").unwrap();
         let fla = step_seconds(&rl, &shape, Method::FlashAttention, "ours").unwrap();
-        t.row(vec![format!("{} - Huggingface", shape.name), "1.00x".into(),
-                   format!("{:.1}x", paper[0]), "same".into()]);
-        t.row(vec![format!("{} - Megatron-LM", shape.name), format!("{:.2}x", hf / meg),
-                   format!("{:.1}x", paper[1]), "same".into()]);
-        t.row(vec![format!("{} - FlashAttention", shape.name), format!("{:.2}x", hf / fla),
-                   format!("{:.1}x", paper[2]), "same".into()]);
+        t.row(vec![
+            format!("{} - Huggingface", shape.name),
+            "1.00x".into(),
+            format!("{:.1}x", paper[0]),
+            "same".into(),
+        ]);
+        t.row(vec![
+            format!("{} - Megatron-LM", shape.name),
+            format!("{:.2}x", hf / meg),
+            format!("{:.1}x", paper[1]),
+            "same".into(),
+        ]);
+        t.row(vec![
+            format!("{} - FlashAttention", shape.name),
+            format!("{:.2}x", hf / fla),
+            format!("{:.1}x", paper[2]),
+            "same".into(),
+        ]);
     }
     t.print();
     t.write_csv(&out_dir().join("table2.csv")).unwrap();
 }
 
 fn exactness_run() {
-    let steps: usize = std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(15);
-    println!("## Fig 4 analogue — identical loss curves (flash vs reference attention), {steps} steps each");
+    let steps: usize =
+        std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(15);
+    println!(
+        "## Fig 4 analogue — identical loss curves (flash vs reference attention), {steps} steps \
+         each"
+    );
     let mut rt = match Runtime::cpu(Path::new("artifacts")) {
         Ok(rt) => rt,
         Err(e) => {
@@ -57,7 +74,13 @@ fn exactness_run() {
     let corpus = Corpus::builtin(100_000, 1);
     let mut curves: Vec<(String, Vec<f64>, f64)> = Vec::new();
     for model in ["gpt_flash", "gpt_ref"] {
-        let cfg = TrainConfig { model: model.into(), steps, eval_every: 0, seed: 7, ..Default::default() };
+        let cfg = TrainConfig {
+            model: model.into(),
+            steps,
+            eval_every: 0,
+            seed: 7,
+            ..Default::default()
+        };
         let mut tr = LmTrainer::new(&mut rt, cfg).expect("trainer");
         let t0 = std::time::Instant::now();
         tr.train(&mut rt, &corpus).expect("train");
@@ -75,7 +98,10 @@ fn exactness_run() {
     t.print();
     t.write_csv(&out_dir().join("table2_loss_curves.csv")).unwrap();
     println!("max |loss_flash - loss_ref| over {steps} steps: {max_diff:.2e}");
-    println!("[{}] curves coincide (exact attention => same model)", if max_diff < 2e-2 { "OK" } else { "FAIL" });
+    println!(
+        "[{}] curves coincide (exact attention => same model)",
+        if max_diff < 2e-2 { "OK" } else { "FAIL" }
+    );
     println!(
         "CPU wallclock: flash {ta:.1}s vs reference {tb:.1}s — NOTE: interpret-mode \
          Pallas on CPU is a correctness vehicle; speed claims live in the IO model above."

@@ -33,7 +33,8 @@ fn sim_speedup(m: Method) -> String {
 }
 
 fn main() {
-    let steps: usize = std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(30);
+    let steps: usize =
+        std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(30);
     let models = [
         ("cls_reference", "Transformer (reference)", Some(Method::PyTorch)),
         ("cls_flash", "FlashAttention", Some(Method::FlashAttention)),
@@ -78,7 +79,8 @@ fn main() {
                 }
             }
         }
-        let avg = if accs.is_empty() { f64::NAN } else { accs.iter().sum::<f64>() / accs.len() as f64 };
+        let avg =
+            if accs.is_empty() { f64::NAN } else { accs.iter().sum::<f64>() / accs.len() as f64 };
         row.push(format!("{avg:.3}"));
         row.push(method.map(sim_speedup).unwrap_or_else(|| "2.3x*".into()));
         t.row(row);

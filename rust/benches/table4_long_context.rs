@@ -20,7 +20,8 @@ use flashattn::util::table::Table;
 
 fn speed_model() {
     let rl = Roofline::a100();
-    let meg_1k = step_seconds(&rl, &ModelShape::gpt2_small(1024), Method::Megatron, "megatron").unwrap();
+    let meg_1k =
+        step_seconds(&rl, &ModelShape::gpt2_small(1024), Method::Megatron, "megatron").unwrap();
     let mut t = Table::new(
         "Table 4 — speed model (paper: Megatron 1K = 1.0x; Flash 1K/2K/4K = 1.7x/1.6x/1.3x)",
         &["implementation", "context", "tokens/step", "rel. speed (model)", "paper"],
@@ -48,12 +49,15 @@ fn speed_model() {
             s
         }, Method::FlashAttention, "ours")
         .unwrap();
-    println!("[{}] flash@4K still faster than Megatron@1K (model {rl_check:.2}x > 1.0)",
-             if rl_check > 1.0 { "OK" } else { "FAIL" });
+    println!(
+        "[{}] flash@4K still faster than Megatron@1K (model {rl_check:.2}x > 1.0)",
+        if rl_check > 1.0 { "OK" } else { "FAIL" }
+    );
 }
 
 fn quality_runs() {
-    let steps: usize = std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
+    let steps: usize =
+        std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
     println!("## quality: eval loss vs context length (real runs, {steps} steps)");
     let mut rt = match Runtime::cpu(Path::new("artifacts")) {
         Ok(rt) => rt,
@@ -70,7 +74,8 @@ fn quality_runs() {
     );
     let mut losses = Vec::new();
     for tag in ["gpt_flash_ctx64", "gpt_flash", "gpt_flash_ctx256"] {
-        let cfg = TrainConfig { model: tag.into(), steps, eval_every: 0, seed: 5, ..Default::default() };
+        let cfg =
+            TrainConfig { model: tag.into(), steps, eval_every: 0, seed: 5, ..Default::default() };
         let mut tr = match LmTrainer::new(&mut rt, cfg) {
             Ok(tr) => tr,
             Err(e) => {
@@ -81,14 +86,23 @@ fn quality_runs() {
         tr.train(&mut rt, &corpus).expect("train");
         let eval = tr.eval_loss(&mut rt, &corpus.eval_batch(tr.batch, tr.n_ctx)).expect("eval");
         losses.push(eval);
-        t.row(vec![tag.into(), tr.n_ctx.to_string(), format!("{eval:.4}"), format!("{:.2}", eval.exp())]);
+        t.row(vec![
+            tag.into(),
+            tr.n_ctx.to_string(),
+            format!("{eval:.4}"),
+            format!("{:.2}", eval.exp()),
+        ]);
     }
     t.print();
     t.write_csv(&out_dir().join("table4_quality.csv")).unwrap();
     if losses.len() == 3 {
         let ok = losses[2] <= losses[0];
-        println!("[{}] longer context => lower eval loss ({:.4} -> {:.4})",
-                 if ok { "OK" } else { "FAIL" }, losses[0], losses[2]);
+        println!(
+            "[{}] longer context => lower eval loss ({:.4} -> {:.4})",
+            if ok { "OK" } else { "FAIL" },
+            losses[0],
+            losses[2]
+        );
     }
 }
 

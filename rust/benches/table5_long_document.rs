@@ -14,7 +14,8 @@ use flashattn::runtime::Runtime;
 use flashattn::util::table::Table;
 
 fn main() {
-    let steps: usize = std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(30);
+    let steps: usize =
+        std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(30);
     let mut rt = match Runtime::cpu(Path::new("artifacts")) {
         Ok(rt) => rt,
         Err(e) => {
@@ -24,7 +25,10 @@ fn main() {
     };
     let ds = LongDoc { doc_len: 512, n_evidence: 8 };
     let mut t = Table::new(
-        &format!("Table 5 — LongDoc accuracy vs context ({steps} steps; paper: F1 rises 52.8 -> 57.1 on MIMIC)"),
+        &format!(
+            "Table 5 — LongDoc accuracy vs context ({steps} steps; paper: F1 rises 52.8 -> 57.1 \
+             on MIMIC)"
+        ),
         &["context", "evidence visible", "accuracy", "chance"],
     );
     let mut accs = Vec::new();
@@ -51,8 +55,12 @@ fn main() {
     t.write_csv(&out_dir().join("table5.csv")).unwrap();
     if accs.len() >= 2 {
         let ok = accs.last().unwrap() >= accs.first().unwrap();
-        println!("[{}] accuracy non-decreasing with context ({:.3} -> {:.3})",
-                 if ok { "OK" } else { "FAIL" }, accs[0], accs[accs.len() - 1]);
+        println!(
+            "[{}] accuracy non-decreasing with context ({:.3} -> {:.3})",
+            if ok { "OK" } else { "FAIL" },
+            accs[0],
+            accs[accs.len() - 1]
+        );
     }
     println!("note: the full-context model can in principle reach 100%; truncated models are
 information-bounded (e.g. 64/512 ctx sees only ~12% of the evidence).");

@@ -27,8 +27,14 @@ fn feasibility() {
         "Table 6a — who can even run Path-X (16K) / Path-256 (64K)? (A100-40GB memory model)",
         &["method", "mem @16K (MB)", "runs 16K?", "mem @64K (MB)", "runs 64K?"],
     );
-    for m in [Method::PyTorch, Method::Reformer, Method::Linformer, Method::LocalAttention,
-              Method::FlashAttention, Method::BlockSparseFlash] {
+    for m in [
+        Method::PyTorch,
+        Method::Reformer,
+        Method::Linformer,
+        Method::LocalAttention,
+        Method::FlashAttention,
+        Method::BlockSparseFlash,
+    ] {
         let m16 = rl.mem_mb(m, 16384, &cfg);
         let m64 = rl.mem_mb(m, 65536, &cfg);
         let runs16 = rl.time_ms(m, Pass::FwdBwd, 16384, &cfg).is_some();
@@ -46,14 +52,19 @@ fn feasibility() {
     let std_oom = rl.time_ms(Method::PyTorch, Pass::FwdBwd, 16384, &cfg).is_none();
     let flash_ok = rl.time_ms(Method::FlashAttention, Pass::FwdBwd, 16384, &cfg).is_some();
     let bs_ok_64 = rl.time_ms(Method::BlockSparseFlash, Pass::FwdBwd, 65536, &cfg).is_some();
-    println!("[{}] standard OOMs at Path-X scale; flash fits; block-sparse flash fits Path-256",
-             if std_oom && flash_ok && bs_ok_64 { "OK" } else { "FAIL" });
+    println!(
+        "[{}] standard OOMs at Path-X scale; flash fits; block-sparse flash fits Path-256",
+        if std_oom && flash_ok && bs_ok_64 { "OK" } else { "FAIL" }
+    );
     let _ = SWEEP_METHODS; // full grid available via tables9_21 bench
 }
 
 fn quality() {
-    let steps: usize = std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
-    println!("## Table 6b — pathfinder accuracy at growing sequence length (real runs, {steps} steps)");
+    let steps: usize =
+        std::env::var("FLASHATTN_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
+    println!(
+        "## Table 6b — pathfinder accuracy at growing sequence length (real runs, {steps} steps)"
+    );
     let mut rt = match Runtime::cpu(Path::new("artifacts")) {
         Ok(rt) => rt,
         Err(e) => {
@@ -62,10 +73,13 @@ fn quality() {
         }
     };
     let mut t = Table::new(
-        "Pathfinder (flash classifier): accuracy vs chance 0.5 (paper: Path-X 61.4%, Path-256 63.1%)",
+        "Pathfinder (flash classifier): accuracy vs chance 0.5 (paper: Path-X 61.4%, Path-256 \
+         63.1%)",
         &["sequence", "grid", "accuracy", "beats chance?"],
     );
-    for (tag, seq) in [("longdoc_ctx128", 128usize), ("longdoc_ctx256", 256), ("longdoc_ctx512", 512)] {
+    for (tag, seq) in
+        [("longdoc_ctx128", 128usize), ("longdoc_ctx256", 256), ("longdoc_ctx512", 512)]
+    {
         let ds = Pathfinder::for_seq(seq);
         match run_task(&mut rt, tag, &ds, steps, 21) {
             Ok(res) => {

@@ -11,7 +11,8 @@ use flashattn::util::table::Table;
 
 fn main() {
     let rl = Roofline::a100();
-    let cfg = BenchConfig { batch: 64, heads: 16, dropout: true, masked: true, ..Default::default() };
+    let cfg =
+        BenchConfig { batch: 64, heads: 16, dropout: true, masked: true, ..Default::default() };
     let paper: &[(&str, [f64; 3])] = &[
         ("Apex FMHA forward", [0.10, 0.29, 1.14]),
         ("FlashAttention forward", [0.08, 0.22, 0.81]),
@@ -46,11 +47,22 @@ fn main() {
 
     // Shape checks.
     let f = |m: Method, p: Pass, n: u64| rl.time_ms(m, p, n, &cfg).unwrap();
-    let fwd_faster_512 = f(Method::FlashAttention, Pass::Fwd, 512) < f(Method::ApexFmha, Pass::Fwd, 512);
-    let bwd_slower_512 = f(Method::FlashAttention, Pass::Bwd, 512) > f(Method::ApexFmha, Pass::Bwd, 512);
+    let fwd_faster_512 =
+        f(Method::FlashAttention, Pass::Fwd, 512) < f(Method::ApexFmha, Pass::Fwd, 512);
+    let bwd_slower_512 =
+        f(Method::FlashAttention, Pass::Bwd, 512) > f(Method::ApexFmha, Pass::Bwd, 512);
     let combined_wins_512 =
         f(Method::FlashAttention, Pass::FwdBwd, 512) < f(Method::ApexFmha, Pass::FwdBwd, 512);
-    println!("[{}] flash forward faster than FMHA at 512", if fwd_faster_512 { "OK" } else { "FAIL" });
-    println!("[{}] flash backward slower than FMHA at 512 (recompute FLOPs)", if bwd_slower_512 { "OK" } else { "FAIL" });
-    println!("[{}] flash combined wins at 512 (paper: 5% faster)", if combined_wins_512 { "OK" } else { "FAIL" });
+    println!(
+        "[{}] flash forward faster than FMHA at 512",
+        if fwd_faster_512 { "OK" } else { "FAIL" }
+    );
+    println!(
+        "[{}] flash backward slower than FMHA at 512 (recompute FLOPs)",
+        if bwd_slower_512 { "OK" } else { "FAIL" }
+    );
+    println!(
+        "[{}] flash combined wins at 512 (paper: 5% faster)",
+        if combined_wins_512 { "OK" } else { "FAIL" }
+    );
 }

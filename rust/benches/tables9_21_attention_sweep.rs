@@ -83,12 +83,17 @@ fn main() {
         ("Block-Sparse FlashAttention", 0.96),
     ];
     let cfg = BenchConfig::default();
-    let mut t = Table::new("fwd @4096: paper vs model", &["method", "paper (ms)", "model (ms)", "ratio"]);
+    let mut t =
+        Table::new("fwd @4096: paper vs model", &["method", "paper (ms)", "model (ms)", "ratio"]);
     for (name, paper) in paper_fwd_4096 {
         let m = SWEEP_METHODS.iter().find(|m| m.name() == *name).unwrap();
         if let Some(model) = rl.time_ms(*m, Pass::Fwd, 4096, &cfg) {
-            t.row(vec![name.to_string(), format!("{paper:.2}"), format!("{model:.2}"),
-                       format!("{:.2}", model / paper)]);
+            t.row(vec![
+                name.to_string(),
+                format!("{paper:.2}"),
+                format!("{model:.2}"),
+                format!("{:.2}", model / paper),
+            ]);
         }
     }
     t.print();

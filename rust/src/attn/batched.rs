@@ -1,0 +1,782 @@
+//! Batched multi-head scheduler for the fast kernel pair — work
+//! partitioning in the FlashAttention-2 (Dao, 2023) sense: most of the
+//! practical speedup comes not from kernel math but from scheduling over
+//! batch × heads × row blocks so every worker stays occupied even when a
+//! single slice is small.
+//!
+//! Until this module, every hot path invoked `attn::flash2` once per
+//! (batch, head) slice, paying a `std::thread::scope` pool spin-up per
+//! slice and idling workers whenever one slice had fewer row blocks than
+//! threads. The entry points here flatten **all** batch·head·row-block
+//! (and, in the backward, batch·head·column-block) work items into a
+//! single dynamically-drained pool:
+//!
+//! * [`flash2_forward_batched`] / [`flash2_backward_batched`] — the
+//!   `[batch, heads, n, d]` entry points; the trainer preflight, the serve
+//!   IO model, `attention_backward_batched` and the perf benches route
+//!   through these.
+//! * [`flash2_forward_many`] / [`flash2_backward_many`] — the
+//!   shape-heterogeneous core (each slice carries its own q/k/v and
+//!   [`AttnConfig`]), which also schedules the sequence-parallel sharded
+//!   driver's per-shard work (`attn::distributed::flash_forward_sharded`).
+//!
+//! Two guarantees, both asserted by the tests below:
+//!
+//! * **Bitwise parity with the per-slice loop, for any worker count.** A
+//!   work item is one (slice, row/column block) pair, dispatched through
+//!   exactly the per-slice kernels' block sweeps
+//!   (`flash2::row_block_sweep` and friends), and block arithmetic is
+//!   self-contained — so output is bitwise identical to calling the
+//!   per-slice kernel slice by slice, regardless of worker count or the
+//!   dynamic claim order.
+//! * **Unchanged per-slice HBM traffic.** Batching reorganises *when*
+//!   work runs, never what moves: per the paper's per-slice IO analysis
+//!   the instrumented counters must (and do) sum to exactly
+//!   slice-count × the per-slice counts — the closed forms
+//!   `sim::cost::flash2_fwd_batched` / `flash2_bwd_batched` are asserted
+//!   access-for-access in `rust/tests/io_complexity.rs`.
+//!
+//! Dropout streams stay per-slice: slice `s` runs with
+//! `bh_index = cfg.bh_index + s`, exactly what the per-slice loop did.
+
+use std::sync::Mutex;
+
+use super::flash::Blocks;
+use super::flash2::{dkv_col_sweep, dq_row_sweep, row_block_sweep, Flash2Output};
+use super::{AttnConfig, AttnGrads, AttnStats};
+use crate::sim::hbm::Hbm;
+use crate::tensor::{dot4, Tensor};
+
+/// One independent forward slice for the many-slice scheduler: flat
+/// row-major q: [n, d] and k, v: [n_k, d], plus the slice's own config
+/// (the sharded driver remaps `kv_len` per shard; the batched entry
+/// points advance `bh_index` per slice).
+pub struct AttnSlice<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub n: usize,
+    pub n_k: usize,
+    pub d: usize,
+    pub cfg: AttnConfig,
+}
+
+/// One independent backward slice: the forward's inputs and outputs plus
+/// dO and the forward's logsumexp row.
+pub struct AttnGradSlice<'a> {
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub o: &'a [f32],
+    pub dout: &'a [f32],
+    pub lse: &'a [f32],
+    pub n: usize,
+    pub n_k: usize,
+    pub d: usize,
+    pub cfg: AttnConfig,
+}
+
+/// Softmax statistics for a batched workload: one logsumexp row per
+/// (batch, head) slice, stored flat as [slices · n].
+#[derive(Clone, Debug)]
+pub struct BatchedAttnStats {
+    /// Query rows per slice.
+    pub n: usize,
+    pub lse: Vec<f32>,
+}
+
+impl BatchedAttnStats {
+    pub fn slices(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            self.lse.len() / self.n
+        }
+    }
+
+    /// Borrow slice `s`'s statistics in the per-slice representation.
+    pub fn slice(&self, s: usize) -> AttnStats<'_> {
+        AttnStats::Lse(&self.lse[s * self.n..(s + 1) * self.n])
+    }
+}
+
+/// Forward outputs of the batched fast kernel: O shaped
+/// [batch, heads, n, d] plus one logsumexp row per slice.
+#[derive(Clone, Debug)]
+pub struct BatchedFlash2Output {
+    pub o: Tensor,
+    pub stats: BatchedAttnStats,
+}
+
+/// Drain `items` through one `std::thread::scope` pool of (at most)
+/// `workers` threads. Items are claimed dynamically — a worker that
+/// finishes a cheap item immediately pulls the next, so small slices never
+/// strand threads — and each item's arithmetic is self-contained, making
+/// the result independent of the claim order and worker count. Per-item
+/// HBM counters merge associatively into `hbm`, so traffic totals are
+/// partition-independent too.
+fn run_pool<T, F>(items: Vec<T>, workers: usize, hbm: &mut Hbm, work: F)
+where
+    T: Send,
+    F: Fn(T) -> Hbm + Sync,
+{
+    if items.is_empty() {
+        return;
+    }
+    let w = workers.max(1).min(items.len());
+    let queue = Mutex::new(items.into_iter());
+    // The guard lives only inside this call — claiming an item never
+    // blocks other workers while the item is being processed.
+    let claim = || queue.lock().expect("batched work queue poisoned").next();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..w {
+            handles.push(scope.spawn(|| {
+                let mut local = Hbm::new();
+                while let Some(item) = claim() {
+                    local.merge(&work(item));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            hbm.merge(&h.join().expect("batched attention worker panicked"));
+        }
+    });
+}
+
+/// Split `data` into disjoint mutable windows of the given `sizes`
+/// (consumed front to back; any tail past the last size is dropped).
+fn split_windows<'a>(
+    mut data: &'a mut [f32],
+    sizes: impl Iterator<Item = usize>,
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::new();
+    for sz in sizes {
+        let (head, tail) = data.split_at_mut(sz);
+        out.push(head);
+        data = tail;
+    }
+    out
+}
+
+/// Rows covered by row/column block `b` of size `bsz` over `total` rows.
+fn block_rows(b: usize, bsz: usize, total: usize) -> usize {
+    ((b + 1) * bsz).min(total) - b * bsz
+}
+
+/// Fast exact forward over many independent slices through ONE worker
+/// pool: every (slice, row block) pair becomes a work item. Outputs (and
+/// HBM totals) are bitwise identical to running [`super::flash2::flash2_forward`]
+/// per slice, for any `workers`.
+pub fn flash2_forward_many(
+    slices: &[AttnSlice<'_>],
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> Vec<Flash2Output> {
+    for (s, sl) in slices.iter().enumerate() {
+        assert_eq!(sl.q.len(), sl.n * sl.d, "slice {s}: Q shape mismatch");
+        assert_eq!(sl.k.len(), sl.n_k * sl.d, "slice {s}: K shape mismatch");
+        assert_eq!(sl.v.len(), sl.n_k * sl.d, "slice {s}: V shape mismatch");
+    }
+    let mut outs: Vec<Flash2Output> = slices
+        .iter()
+        .map(|sl| {
+            let mut lse = vec![0.0f32; sl.n];
+            if sl.n_k == 0 {
+                // No keys: same defined all-masked semantics as the
+                // per-slice kernel's early return (zero rows, lse = -inf).
+                lse.fill(f32::NEG_INFINITY);
+            }
+            Flash2Output { o: Tensor::zeros(&[sl.n, sl.d]), lse }
+        })
+        .collect();
+
+    struct FwdItem<'a> {
+        s: usize,
+        rb: usize,
+        o_win: &'a mut [f32],
+        lse_win: &'a mut [f32],
+    }
+
+    let mut items: Vec<FwdItem<'_>> = Vec::new();
+    for (s, (sl, out)) in slices.iter().zip(outs.iter_mut()).enumerate() {
+        if sl.n_k == 0 {
+            continue;
+        }
+        let t_r = sl.n.div_ceil(blocks.b_r);
+        let o_wins = split_windows(
+            &mut out.o.data,
+            (0..t_r).map(|rb| block_rows(rb, blocks.b_r, sl.n) * sl.d),
+        );
+        let lse_wins =
+            split_windows(&mut out.lse, (0..t_r).map(|rb| block_rows(rb, blocks.b_r, sl.n)));
+        for (rb, (o_win, lse_win)) in o_wins.into_iter().zip(lse_wins).enumerate() {
+            items.push(FwdItem { s, rb, o_win, lse_win });
+        }
+    }
+
+    run_pool(items, workers, hbm, |it| {
+        let sl = &slices[it.s];
+        let tau = sl.cfg.tau_for(sl.d);
+        let kv_len = sl.cfg.kv_len.unwrap_or(sl.n_k).min(sl.n_k);
+        row_block_sweep(
+            sl.q, sl.k, sl.v, sl.n, sl.n_k, sl.d, &sl.cfg, blocks, tau, kv_len, it.rb,
+            it.rb + 1, it.o_win, it.lse_win,
+        )
+    });
+
+    outs
+}
+
+/// Fast exact backward over many independent slices through one worker
+/// pool per phase: the per-slice D epilogue runs inline, then every
+/// (slice, row block) dQ item and every (slice, column block) dK/dV item
+/// is scheduled dynamically. Bitwise identical to running
+/// [`super::flash2::flash2_backward`] per slice, for any `workers`.
+pub fn flash2_backward_many(
+    slices: &[AttnGradSlice<'_>],
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> Vec<AttnGrads> {
+    for (s, sl) in slices.iter().enumerate() {
+        assert_eq!(sl.q.len(), sl.n * sl.d, "slice {s}: Q shape mismatch");
+        assert_eq!(sl.k.len(), sl.n_k * sl.d, "slice {s}: K shape mismatch");
+        assert_eq!(sl.v.len(), sl.n_k * sl.d, "slice {s}: V shape mismatch");
+        assert_eq!(sl.o.len(), sl.n * sl.d, "slice {s}: O shape mismatch");
+        assert_eq!(sl.dout.len(), sl.n * sl.d, "slice {s}: dO shape mismatch");
+        assert_eq!(sl.lse.len(), sl.n, "slice {s}: stats length mismatch");
+    }
+    let mut grads: Vec<AttnGrads> = slices
+        .iter()
+        .map(|sl| AttnGrads {
+            dq: Tensor::zeros(&[sl.n, sl.d]),
+            dk: Tensor::zeros(&[sl.n_k, sl.d]),
+            dv: Tensor::zeros(&[sl.n_k, sl.d]),
+        })
+        .collect();
+
+    // Phase 0, per slice: D_i = rowsum(dO ∘ O) in one epilogue pass each —
+    // the same accounting as the per-slice kernel (dO/O loaded once, D
+    // stored once). O(slices·n·d) work, so it stays on this thread; slices
+    // with no rows or no keys are skipped exactly like the per-slice
+    // kernel's early return (no traffic, zero gradients).
+    let d_vecs: Vec<Vec<f32>> = slices
+        .iter()
+        .map(|sl| {
+            if sl.n == 0 || sl.n_k == 0 {
+                return Vec::new();
+            }
+            hbm.load(2 * sl.n * sl.d);
+            let dv: Vec<f32> = (0..sl.n)
+                .map(|r| dot4(&sl.dout[r * sl.d..(r + 1) * sl.d], &sl.o[r * sl.d..(r + 1) * sl.d]))
+                .collect();
+            hbm.store(sl.n);
+            dv
+        })
+        .collect();
+
+    struct DqItem<'a> {
+        s: usize,
+        rb: usize,
+        dq_win: &'a mut [f32],
+    }
+    struct DkvItem<'a> {
+        s: usize,
+        cb: usize,
+        dk_win: &'a mut [f32],
+        dv_win: &'a mut [f32],
+    }
+
+    let mut dq_items: Vec<DqItem<'_>> = Vec::new();
+    let mut dkv_items: Vec<DkvItem<'_>> = Vec::new();
+    for (s, (sl, g)) in slices.iter().zip(grads.iter_mut()).enumerate() {
+        if sl.n == 0 || sl.n_k == 0 {
+            continue;
+        }
+        let t_r = sl.n.div_ceil(blocks.b_r);
+        let t_c = sl.n_k.div_ceil(blocks.b_c);
+        let dq_wins = split_windows(
+            &mut g.dq.data,
+            (0..t_r).map(|rb| block_rows(rb, blocks.b_r, sl.n) * sl.d),
+        );
+        for (rb, dq_win) in dq_wins.into_iter().enumerate() {
+            dq_items.push(DqItem { s, rb, dq_win });
+        }
+        let dk_wins = split_windows(
+            &mut g.dk.data,
+            (0..t_c).map(|cb| block_rows(cb, blocks.b_c, sl.n_k) * sl.d),
+        );
+        let dv_wins = split_windows(
+            &mut g.dv.data,
+            (0..t_c).map(|cb| block_rows(cb, blocks.b_c, sl.n_k) * sl.d),
+        );
+        for (cb, (dk_win, dv_win)) in dk_wins.into_iter().zip(dv_wins).enumerate() {
+            dkv_items.push(DkvItem { s, cb, dk_win, dv_win });
+        }
+    }
+
+    // Phase 1: all slices' dQ row blocks through one pool.
+    run_pool(dq_items, workers, hbm, |it| {
+        let sl = &slices[it.s];
+        let tau = sl.cfg.tau_for(sl.d);
+        let kv_len = sl.cfg.kv_len.unwrap_or(sl.n_k).min(sl.n_k);
+        dq_row_sweep(
+            sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
+            blocks, tau, kv_len, it.rb, it.rb + 1, it.dq_win,
+        )
+    });
+
+    // Phase 2: all slices' dK/dV column blocks through one pool.
+    run_pool(dkv_items, workers, hbm, |it| {
+        let sl = &slices[it.s];
+        let tau = sl.cfg.tau_for(sl.d);
+        let kv_len = sl.cfg.kv_len.unwrap_or(sl.n_k).min(sl.n_k);
+        dkv_col_sweep(
+            sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
+            blocks, tau, kv_len, it.cb, it.cb + 1, it.dk_win, it.dv_win,
+        )
+    });
+
+    grads
+}
+
+/// Check and decompose a [batch, heads, rows, d] tensor.
+fn dims4(t: &Tensor, what: &str) -> (usize, usize, usize, usize) {
+    assert_eq!(t.rank(), 4, "{what} must be [batch, heads, rows, d]");
+    (t.shape[0], t.shape[1], t.shape[2], t.shape[3])
+}
+
+/// Copy (batch·head) slice `s` of a rank-4 tensor out as an [n, d] matrix
+/// (tests and the reference kernels' per-slice fallback paths).
+pub fn bh_slice(t: &Tensor, s: usize) -> Tensor {
+    let (_, _, n, d) = dims4(t, "bh_slice input");
+    Tensor::from_vec(&[n, d], t.data[s * n * d..(s + 1) * n * d].to_vec())
+}
+
+/// Batched multi-head fast forward. q: [batch, heads, n, d];
+/// k, v: [batch, heads, n_k, d] (rectangular K/V serves cross-attention
+/// and sharded layouts). All batch·head·row-block work items run in one
+/// `std::thread::scope` pool; the result is bitwise independent of
+/// `workers` and bitwise identical to the per-slice loop it replaces.
+/// Slice `s` runs with `bh_index = cfg.bh_index + s`, so dropout streams
+/// match the per-slice convention.
+pub fn flash2_forward_batched(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> BatchedFlash2Output {
+    let (b, h, n, d) = dims4(q, "flash2_forward_batched Q");
+    let (bk, hk, n_k, dk) = dims4(k, "flash2_forward_batched K");
+    assert_eq!((bk, hk, dk), (b, h, d), "flash2_forward_batched: K batch/heads/feature mismatch");
+    assert_eq!(v.shape, k.shape, "flash2_forward_batched: V shape mismatch");
+    let slices: Vec<AttnSlice<'_>> = (0..b * h)
+        .map(|s| AttnSlice {
+            q: &q.data[s * n * d..(s + 1) * n * d],
+            k: &k.data[s * n_k * d..(s + 1) * n_k * d],
+            v: &v.data[s * n_k * d..(s + 1) * n_k * d],
+            n,
+            n_k,
+            d,
+            cfg: AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() },
+        })
+        .collect();
+    let outs = flash2_forward_many(&slices, blocks, workers, hbm);
+    let mut o = Tensor::zeros(&[b, h, n, d]);
+    let mut lse = Vec::with_capacity(b * h * n);
+    for (s, out) in outs.into_iter().enumerate() {
+        o.data[s * n * d..(s + 1) * n * d].copy_from_slice(&out.o.data);
+        lse.extend_from_slice(&out.lse);
+    }
+    BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }
+}
+
+/// Batched multi-head fast backward: the gradient counterpart of
+/// [`flash2_forward_batched`], with every batch·head·block work item of
+/// each phase in one pool. `stats` holds one logsumexp row per slice
+/// (the batched forward's output). Returns [batch, heads, …, d] gradients;
+/// bitwise identical to the per-slice loop for any `workers`.
+pub fn flash2_backward_batched(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> AttnGrads {
+    let (b, h, n, d) = dims4(q, "flash2_backward_batched Q");
+    let (bk, hk, n_k, dk) = dims4(k, "flash2_backward_batched K");
+    assert_eq!((bk, hk, dk), (b, h, d), "flash2_backward_batched: K batch/heads/feature mismatch");
+    assert_eq!(v.shape, k.shape, "flash2_backward_batched: V shape mismatch");
+    assert_eq!(o.shape, q.shape, "flash2_backward_batched: O shape mismatch");
+    assert_eq!(dout.shape, q.shape, "flash2_backward_batched: dO shape mismatch");
+    assert_eq!(stats.n, n, "flash2_backward_batched: stats row-count mismatch");
+    assert_eq!(stats.lse.len(), b * h * n, "flash2_backward_batched: stats slice-count mismatch");
+    let slices: Vec<AttnGradSlice<'_>> = (0..b * h)
+        .map(|s| AttnGradSlice {
+            q: &q.data[s * n * d..(s + 1) * n * d],
+            k: &k.data[s * n_k * d..(s + 1) * n_k * d],
+            v: &v.data[s * n_k * d..(s + 1) * n_k * d],
+            o: &o.data[s * n * d..(s + 1) * n * d],
+            dout: &dout.data[s * n * d..(s + 1) * n * d],
+            lse: &stats.lse[s * n..(s + 1) * n],
+            n,
+            n_k,
+            d,
+            cfg: AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() },
+        })
+        .collect();
+    let per_slice = flash2_backward_many(&slices, blocks, workers, hbm);
+    let mut dq4 = Tensor::zeros(&[b, h, n, d]);
+    let mut dk4 = Tensor::zeros(&[b, h, n_k, d]);
+    let mut dv4 = Tensor::zeros(&[b, h, n_k, d]);
+    for (s, g) in per_slice.into_iter().enumerate() {
+        dq4.data[s * n * d..(s + 1) * n * d].copy_from_slice(&g.dq.data);
+        dk4.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dk.data);
+        dv4.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dv.data);
+    }
+    AttnGrads { dq: dq4, dk: dk4, dv: dv4 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::flash2::{flash2_backward, flash2_forward};
+    use crate::attn::{attention_backward_batched, BackwardKernel};
+    use crate::util::prop::{choose, for_each_case, usize_in};
+    use crate::util::rng::SplitMix64;
+
+    fn rand4(shape: &[usize], rng: &mut SplitMix64) -> Tensor {
+        Tensor::randn(shape, rng, 1.0)
+    }
+
+    /// Reference: the per-slice loop the batched entry points replace.
+    fn per_slice_forward(
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        cfg: &AttnConfig,
+        blocks: Blocks,
+        workers: usize,
+        hbm: &mut Hbm,
+    ) -> BatchedFlash2Output {
+        let (b, h, n, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
+        let mut o = Tensor::zeros(&[b, h, n, d]);
+        let mut lse = Vec::new();
+        for s in 0..b * h {
+            let cfg_s = AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() };
+            let (qs, ks, vs) = (bh_slice(q, s), bh_slice(k, s), bh_slice(v, s));
+            let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, workers, hbm);
+            o.data[s * n * d..(s + 1) * n * d].copy_from_slice(&f.o.data);
+            lse.extend_from_slice(&f.lse);
+        }
+        BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }
+    }
+
+    #[test]
+    fn batched_forward_bitwise_matches_per_slice_loop() {
+        // The ISSUE grid: batch × heads × (n, n_k) rectangular × causal ×
+        // kv_len × dropout × blocks × workers. Parity must be bitwise —
+        // the scheduler reuses the identical per-block sweeps.
+        for_each_case("batched_fwd_parity", 20, |rng| {
+            let b = usize_in(rng, 1, 3);
+            let h = usize_in(rng, 1, 3);
+            let n = usize_in(rng, 2, 32);
+            let n_k = if rng.next_f32() < 0.5 { n } else { usize_in(rng, 1, 40) };
+            let d = *choose(rng, &[2usize, 4, 8]);
+            let blocks = Blocks::explicit(usize_in(rng, 1, n), usize_in(rng, 1, n_k));
+            let causal = rng.next_f32() < 0.5;
+            let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
+            let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
+            let workers = usize_in(rng, 1, 6);
+            let q = rand4(&[b, h, n, d], rng);
+            let k = rand4(&[b, h, n_k, d], rng);
+            let v = rand4(&[b, h, n_k, d], rng);
+            let cfg =
+                AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let ctx = format!(
+                "b={b} h={h} n={n} n_k={n_k} d={d} blocks=({},{}) causal={causal} \
+                 kv_len={kv_len:?} p={dropout_p} w={workers}",
+                blocks.b_r, blocks.b_c
+            );
+            let loop_out = per_slice_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+            let batched =
+                flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            assert_eq!(batched.o.data, loop_out.o.data, "O not bitwise equal: {ctx}");
+            assert_eq!(batched.stats.lse, loop_out.stats.lse, "lse not bitwise equal: {ctx}");
+        });
+    }
+
+    #[test]
+    fn batched_backward_bitwise_matches_per_slice_loop() {
+        for_each_case("batched_bwd_parity", 20, |rng| {
+            let b = usize_in(rng, 1, 3);
+            let h = usize_in(rng, 1, 3);
+            let n = usize_in(rng, 2, 28);
+            let n_k = if rng.next_f32() < 0.5 { n } else { usize_in(rng, 1, 36) };
+            let d = *choose(rng, &[2usize, 4, 8]);
+            let blocks = Blocks::explicit(usize_in(rng, 1, n), usize_in(rng, 1, n_k));
+            let causal = rng.next_f32() < 0.5;
+            let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
+            let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
+            let workers = usize_in(rng, 1, 6);
+            let q = rand4(&[b, h, n, d], rng);
+            let k = rand4(&[b, h, n_k, d], rng);
+            let v = rand4(&[b, h, n_k, d], rng);
+            let dout = rand4(&[b, h, n, d], rng);
+            let cfg =
+                AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let ctx = format!(
+                "b={b} h={h} n={n} n_k={n_k} d={d} blocks=({},{}) causal={causal} \
+                 kv_len={kv_len:?} p={dropout_p} w={workers}",
+                blocks.b_r, blocks.b_c
+            );
+            let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            let batched = flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut Hbm::new(),
+            );
+            // Per-slice loop on identical inputs.
+            let (mut dq, mut dk, mut dv) = (
+                Tensor::zeros(&[b, h, n, d]),
+                Tensor::zeros(&[b, h, n_k, d]),
+                Tensor::zeros(&[b, h, n_k, d]),
+            );
+            for s in 0..b * h {
+                let cfg_s = AttnConfig { bh_index: s as u32, ..cfg.clone() };
+                let (qs, ks, vs) = (bh_slice(&q, s), bh_slice(&k, s), bh_slice(&v, s));
+                let os = bh_slice(&fwd.o, s);
+                let dos = bh_slice(&dout, s);
+                let g = flash2_backward(
+                    &qs, &ks, &vs, &os, &dos, fwd.stats.slice(s), &cfg_s, blocks, 1,
+                    &mut Hbm::new(),
+                );
+                dq.data[s * n * d..(s + 1) * n * d].copy_from_slice(&g.dq.data);
+                dk.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dk.data);
+                dv.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dv.data);
+            }
+            assert_eq!(batched.dq.data, dq.data, "dQ not bitwise equal: {ctx}");
+            assert_eq!(batched.dk.data, dk.data, "dK not bitwise equal: {ctx}");
+            assert_eq!(batched.dv.data, dv.data, "dV not bitwise equal: {ctx}");
+        });
+    }
+
+    #[test]
+    fn batched_deterministic_and_traffic_invariant_across_worker_counts() {
+        // Output bitwise identical AND instrumented HBM totals identical
+        // for any worker count — scheduling must change neither numerics
+        // nor modeled traffic.
+        let mut rng = SplitMix64::new(31);
+        let (b, h, n, d) = (2usize, 3usize, 40usize, 8usize);
+        let q = rand4(&[b, h, n, d], &mut rng);
+        let k = rand4(&[b, h, n, d], &mut rng);
+        let v = rand4(&[b, h, n, d], &mut rng);
+        let dout = rand4(&[b, h, n, d], &mut rng);
+        let cfg = AttnConfig::causal();
+        let blocks = Blocks::explicit(8, 8);
+        let mut h1 = Hbm::new();
+        let base = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut h1);
+        let mut hb1 = Hbm::new();
+        let gbase = flash2_backward_batched(
+            &q, &k, &v, &base.o, &dout, &base.stats, &cfg, blocks, 1, &mut hb1,
+        );
+        for workers in [2usize, 3, 5, 8, 64] {
+            let mut hw = Hbm::new();
+            let multi = flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut hw);
+            assert_eq!(base.o.data, multi.o.data, "O at workers={workers}");
+            assert_eq!(base.stats.lse, multi.stats.lse, "lse at workers={workers}");
+            assert_eq!((h1.loads, h1.stores), (hw.loads, hw.stores), "fwd hbm at w={workers}");
+            let mut hbw = Hbm::new();
+            let g = flash2_backward_batched(
+                &q, &k, &v, &base.o, &dout, &base.stats, &cfg, blocks, workers, &mut hbw,
+            );
+            assert_eq!(gbase.dq.data, g.dq.data, "dQ at workers={workers}");
+            assert_eq!(gbase.dk.data, g.dk.data, "dK at workers={workers}");
+            assert_eq!(gbase.dv.data, g.dv.data, "dV at workers={workers}");
+            assert_eq!((hb1.loads, hb1.stores), (hbw.loads, hbw.stores), "bwd hbm at w={workers}");
+        }
+    }
+
+    #[test]
+    fn batched_backward_grads_match_finite_difference() {
+        // FD check straight through the batched pair: d(sum O)/dx by
+        // central differences on a [2, 2, n, d] causal+padded workload.
+        let mut rng = SplitMix64::new(33);
+        let (b, h, n, d) = (2usize, 2usize, 6usize, 4usize);
+        let q = rand4(&[b, h, n, d], &mut rng);
+        let k = rand4(&[b, h, n, d], &mut rng);
+        let v = rand4(&[b, h, n, d], &mut rng);
+        let cfg = AttnConfig { causal: true, kv_len: Some(5), ..Default::default() };
+        let blocks = Blocks::explicit(2, 3);
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let dout = Tensor::full(&[b, h, n, d], 1.0);
+        let g = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 2, &mut Hbm::new(),
+        );
+        let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
+            flash2_forward_batched(q_, k_, v_, &cfg, blocks, 1, &mut Hbm::new())
+                .o
+                .data
+                .iter()
+                .sum()
+        };
+        let eps = 1e-3f32;
+        // Indices spread across all four slices.
+        for (which, (x, gx)) in [(0, (&q, &g.dq)), (1, (&k, &g.dk)), (2, (&v, &g.dv))] {
+            for idx in [0usize, 13, 29, 41, 57, 73, 89] {
+                let mut xp = x.clone();
+                xp.data[idx] += eps;
+                let mut xm = x.clone();
+                xm.data[idx] -= eps;
+                let (fp, fm) = match which {
+                    0 => (f(&xp, &k, &v), f(&xm, &k, &v)),
+                    1 => (f(&q, &xp, &v), f(&q, &xm, &v)),
+                    _ => (f(&q, &k, &xp), f(&q, &k, &xm)),
+                };
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = gx.data[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 + 0.05 * an.abs(),
+                    "which={which} idx={idx}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn entry_point_reference_kernels_agree_with_batched_fast_path() {
+        // attention_backward_batched: every BackwardKernel role accepts
+        // the [batch, heads, n, d] layout and they agree numerically —
+        // gradient producers pick a policy role, not a layout.
+        let mut rng = SplitMix64::new(35);
+        let (b, h, n, d) = (2usize, 2usize, 16usize, 8usize);
+        let q = rand4(&[b, h, n, d], &mut rng);
+        let k = rand4(&[b, h, n, d], &mut rng);
+        let v = rand4(&[b, h, n, d], &mut rng);
+        let dout = rand4(&[b, h, n, d], &mut rng);
+        let cfg = AttnConfig::causal();
+        let blocks = Blocks::explicit(4, 4);
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let grads: Vec<AttnGrads> = [
+            BackwardKernel::Standard,
+            BackwardKernel::Flash,
+            BackwardKernel::Flash2 { workers: 3 },
+        ]
+        .into_iter()
+        .map(|kernel| {
+            attention_backward_batched(
+                kernel, &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &mut Hbm::new(),
+            )
+        })
+        .collect();
+        for g in &grads[1..] {
+            assert!(grads[0].dq.max_abs_diff(&g.dq) < 1e-4);
+            assert!(grads[0].dk.max_abs_diff(&g.dk) < 1e-4);
+            assert!(grads[0].dv.max_abs_diff(&g.dv) < 1e-4);
+        }
+        assert_eq!(grads[2].dq.shape, vec![b, h, n, d]);
+    }
+
+    #[test]
+    fn many_entry_handles_heterogeneous_slices() {
+        // The sharded-driver shape: slices with different key counts and
+        // per-slice kv_len remaps in one pool, bitwise equal to per-slice
+        // calls.
+        let mut rng = SplitMix64::new(37);
+        let q = Tensor::randn(&[24, 8], &mut rng, 1.0);
+        let k = Tensor::randn(&[40, 8], &mut rng, 1.0);
+        let v = Tensor::randn(&[40, 8], &mut rng, 1.0);
+        let blocks = Blocks::explicit(8, 8);
+        let ranges = [(0usize, 12usize, Some(12usize)), (12, 20, Some(8)), (20, 40, Some(1))];
+        let slices: Vec<AttnSlice<'_>> = ranges
+            .iter()
+            .map(|&(lo, hi, kv)| AttnSlice {
+                q: &q.data[..],
+                k: &k.data[lo * 8..hi * 8],
+                v: &v.data[lo * 8..hi * 8],
+                n: 24,
+                n_k: hi - lo,
+                d: 8,
+                cfg: AttnConfig { kv_len: kv, ..Default::default() },
+            })
+            .collect();
+        let outs = flash2_forward_many(&slices, blocks, 3, &mut Hbm::new());
+        for (i, (&(lo, hi, kv), out)) in ranges.iter().zip(&outs).enumerate() {
+            let ks = k.slice_rows(lo, hi);
+            let vs = v.slice_rows(lo, hi);
+            let cfg = AttnConfig { kv_len: kv, ..Default::default() };
+            let reference = flash2_forward(&q, &ks, &vs, &cfg, blocks, 1, &mut Hbm::new());
+            assert_eq!(out.o.data, reference.o.data, "shard {i} O");
+            assert_eq!(out.lse, reference.lse, "shard {i} lse");
+        }
+    }
+
+    #[test]
+    fn no_keys_slice_keeps_all_masked_semantics() {
+        // n_k = 0 (an empty shard / fully-dead slice) must reproduce the
+        // per-slice kernel's defined semantics with no NaN anywhere.
+        let mut rng = SplitMix64::new(39);
+        let (b, h, n, d) = (1usize, 2usize, 8usize, 4usize);
+        let q = rand4(&[b, h, n, d], &mut rng);
+        let k = Tensor::zeros(&[b, h, 0, d]);
+        let v = Tensor::zeros(&[b, h, 0, d]);
+        let blocks = Blocks::explicit(4, 4);
+        let fwd =
+            flash2_forward_batched(&q, &k, &v, &AttnConfig::default(), blocks, 2, &mut Hbm::new());
+        assert!(fwd.o.data.iter().all(|&x| x == 0.0));
+        assert!(fwd.stats.lse.iter().all(|&x| x == f32::NEG_INFINITY));
+        let dout = Tensor::full(&[b, h, n, d], 1.0);
+        let g = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &AttnConfig::default(), blocks, 2,
+            &mut Hbm::new(),
+        );
+        assert!(g.dq.data.iter().all(|&x| x == 0.0));
+        assert_eq!(g.dk.numel(), 0);
+        assert_eq!(g.dv.numel(), 0);
+    }
+
+    #[test]
+    fn batched_hbm_equals_sum_of_per_slice_counts() {
+        // The tentpole IO invariant: batching must not change per-slice
+        // traffic, so totals are exactly slices × the per-slice count.
+        let mut rng = SplitMix64::new(41);
+        let (b, h, n, d) = (2usize, 2usize, 32usize, 8usize);
+        let q = rand4(&[b, h, n, d], &mut rng);
+        let k = rand4(&[b, h, n, d], &mut rng);
+        let v = rand4(&[b, h, n, d], &mut rng);
+        let blocks = Blocks::explicit(8, 8);
+        let cfg = AttnConfig::default();
+        let mut h_batched = Hbm::new();
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 3, &mut h_batched);
+        let mut h_slice = Hbm::new();
+        let qs = bh_slice(&q, 0);
+        let ks = bh_slice(&k, 0);
+        let vs = bh_slice(&v, 0);
+        flash2_forward(&qs, &ks, &vs, &cfg, blocks, 1, &mut h_slice);
+        assert_eq!(h_batched.loads, 4 * h_slice.loads);
+        assert_eq!(h_batched.stores, 4 * h_slice.stores);
+        // Backward too.
+        let dout = rand4(&[b, h, n, d], &mut rng);
+        let mut hb_batched = Hbm::new();
+        flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 3, &mut hb_batched,
+        );
+        let f = flash2_forward(&qs, &ks, &vs, &cfg, blocks, 1, &mut Hbm::new());
+        let mut hb_slice = Hbm::new();
+        let dos = bh_slice(&dout, 0);
+        flash2_backward(
+            &qs, &ks, &vs, &f.o, &dos, f.stats(), &cfg, blocks, 1, &mut hb_slice,
+        );
+        assert_eq!(hb_batched.loads, 4 * hb_slice.loads);
+        assert_eq!(hb_batched.stores, 4 * hb_slice.stores);
+    }
+}

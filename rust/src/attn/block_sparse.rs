@@ -21,8 +21,8 @@ pub fn block_sparse_forward(
     let tau = cfg.tau_for(d);
     let kv_len = cfg.kv_len.unwrap_or(n);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
-    let t_r = (n + b_r - 1) / b_r;
-    let t_c = (n + b_c - 1) / b_c;
+    let t_r = n.div_ceil(b_r);
+    let t_c = n.div_ceil(b_c);
     assert_eq!((mask.t_r, mask.t_c), (t_r, t_c), "mask geometry mismatch");
 
     let mut o = Tensor::zeros(&[n, d]);
@@ -146,7 +146,9 @@ mod tests {
         for i in 0..4 {
             mask.set(i, i, true);
         }
-        let bs = block_sparse_forward(&q, &k, &v, &mask, &AttnConfig::default(), blocks, &mut Hbm::new());
+        let bs = block_sparse_forward(
+            &q, &k, &v, &mask, &AttnConfig::default(), blocks, &mut Hbm::new(),
+        );
         for blk in 0..4 {
             let (r0, r1) = (blk * 8, (blk + 1) * 8);
             let ql = q.slice_rows(r0, r1);
@@ -182,7 +184,9 @@ mod tests {
         let mut mask = BlockMask::zeros(2, 2);
         mask.set(1, 0, true);
         mask.set(1, 1, true);
-        let bs = block_sparse_forward(&q, &k, &v, &mask, &AttnConfig::default(), blocks, &mut Hbm::new());
+        let bs = block_sparse_forward(
+            &q, &k, &v, &mask, &AttnConfig::default(), blocks, &mut Hbm::new(),
+        );
         assert!(bs.o.slice_rows(0, 8).data.iter().all(|&x| x == 0.0));
     }
 

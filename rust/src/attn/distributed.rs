@@ -21,14 +21,19 @@
 //! as the laptop-scale stand-in for the GPUs; `multi_gpu_cost` extends the
 //! IO model with the interconnect term.
 //!
-//! Per the two-kernel policy (attn module docs) each worker runs the *fast*
-//! Q-outer kernel `attn::flash2` over its key shard (single-threaded within
-//! the shard — the device-level parallelism is the shard fan-out). The fast
-//! kernel returns a logsumexp statistic; `(l, m) = (1, L)` is an exact
-//! decomposition (l·eᵐ = e^L), so the softmax merge below is unchanged.
+//! Per the two-kernel policy (attn module docs) each shard runs the *fast*
+//! Q-outer kernel over its key range — and per the batched-entry-point
+//! policy the shards are not spawned one thread each: they are handed to
+//! the batched scheduler (`attn::batched::flash2_forward_many`), which
+//! flattens every shard × row-block work item into a single worker pool.
+//! Skewed shards (the dead-shard skip below, ragged tails) therefore never
+//! strand threads, and per-shard outputs stay bitwise identical to a
+//! per-shard kernel call. The fast kernel returns a logsumexp statistic;
+//! `(l, m) = (1, L)` is an exact decomposition (l·eᵐ = e^L), so the
+//! softmax merge below is unchanged.
 
+use super::batched::{flash2_forward_many, AttnSlice};
 use super::flash::Blocks;
-use super::flash2::flash2_forward;
 use super::{AttnConfig, AttnOutput};
 use crate::sim::hbm::Hbm;
 use crate::tensor::Tensor;
@@ -99,49 +104,52 @@ pub fn flash_forward_sharded(
         };
     }
     let w = workers.max(1).min(n);
-    let shard = (n + w - 1) / w;
+    let shard = n.div_ceil(w);
+    let d = k.cols();
 
-    let mut partials: Vec<Option<AttnOutput>> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for wi in 0..w {
-            let lo = wi * shard;
-            let hi = ((wi + 1) * shard).min(n);
-            // Skip empty shards and *dead* shards — key ranges entirely
-            // beyond the valid prefix, whose remapped kv_len would be 0.
-            // They used to spawn workers whose fully-masked partials only
-            // merged away via the 1/l clamp; now they never run.
-            if lo >= hi || lo >= kv_len {
-                continue;
-            }
-            let kw = k.slice_rows(lo, hi);
-            let vw = v.slice_rows(lo, hi);
-            let cfg_w = AttnConfig {
+    // One descriptor per live shard; empty shards and *dead* shards — key
+    // ranges entirely beyond the valid prefix, whose remapped kv_len would
+    // be 0 — never become work items. (They used to spawn workers whose
+    // fully-masked partials only merged away via the 1/l clamp.)
+    let mut shards: Vec<AttnSlice<'_>> = Vec::new();
+    for wi in 0..w {
+        let lo = wi * shard;
+        let hi = ((wi + 1) * shard).min(n);
+        if lo >= hi || lo >= kv_len {
+            continue;
+        }
+        shards.push(AttnSlice {
+            q: &q.data[..],
+            k: &k.data[lo * d..hi * d],
+            v: &v.data[lo * d..hi * d],
+            n: q.rows(),
+            n_k: hi - lo,
+            d,
+            cfg: AttnConfig {
                 // Padding mask applies to *global* columns; shards beyond
                 // kv_len contribute nothing via their local mask.
                 kv_len: cfg.kv_len.map(|kl| kl.saturating_sub(lo).min(hi - lo)),
                 ..cfg.clone()
-            };
-            handles.push(scope.spawn(move || {
-                // Each worker has its own HBM counter (its own device) and
-                // runs the fast kernel single-threaded over its shard.
-                flash2_forward(q, &kw, &vw, &cfg_w, blocks, 1, &mut Hbm::new()).into_attn_output()
-            }));
-        }
-        for h in handles {
-            partials.push(Some(h.join().expect("worker panicked")));
-        }
-    });
+            },
+        });
+    }
+    // All shard × row-block work items drain through one pool of `workers`
+    // threads. Each simulated device counts its own HBM traffic in the
+    // model (`multi_gpu_cost`); the merged counter here is discarded, as
+    // the per-worker counters were before.
+    let partials = flash2_forward_many(&shards, blocks, workers, &mut Hbm::new());
 
-    // Tree reduction (any order is exact — associativity test below).
+    // Tree reduction in shard order (any order is exact — associativity
+    // test below).
     let mut acc: Option<AttnOutput> = None;
-    for p in partials.into_iter().flatten() {
+    for p in partials {
+        let p = p.into_attn_output();
         acc = Some(match acc {
             None => p,
             Some(a) => merge_partials(&a, &p),
         });
     }
-    acc.expect("at least one shard")
+    acc.expect("at least one live shard")
 }
 
 /// IO model for W-way sequence-parallel flash (Appendix D.1): per-device
@@ -208,7 +216,8 @@ mod tests {
         let parts: Vec<AttnOutput> = [(0, 12), (12, 20), (20, 32)]
             .iter()
             .map(|&(lo, hi)| {
-                flash_forward(&q, &k.slice_rows(lo, hi), &v.slice_rows(lo, hi), &cfg, blocks, &mut Hbm::new())
+                let (ks, vs) = (k.slice_rows(lo, hi), v.slice_rows(lo, hi));
+                flash_forward(&q, &ks, &vs, &cfg, blocks, &mut Hbm::new())
             })
             .collect();
         let abc = merge_partials(&merge_partials(&parts[0], &parts[1]), &parts[2]);
@@ -281,8 +290,9 @@ mod tests {
             let dead_cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
             let dead = flash2_forward(&q, &k, &v, &dead_cfg, blocks, 1, &mut Hbm::new())
                 .into_attn_output();
-            let live = flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 1, &mut Hbm::new())
-                .into_attn_output();
+            let live =
+                flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 1, &mut Hbm::new())
+                    .into_attn_output();
 
             let both_dead = merge_partials(&dead, &dead);
             assert!(both_dead.o.data.iter().all(|&x| x == 0.0), "n={n} d={d}: dead+dead O");

@@ -36,13 +36,34 @@ pub struct Blocks {
 
 impl Blocks {
     pub fn from_sram(m_floats: usize, d: usize, n: usize) -> Blocks {
-        let b_c = ((m_floats + 4 * d - 1) / (4 * d)).max(1).min(n);
+        let b_c = m_floats.div_ceil(4 * d).max(1).min(n);
         let b_r = b_c.min(d).min(n);
         Blocks { b_r, b_c }
     }
 
     pub fn explicit(b_r: usize, b_c: usize) -> Blocks {
         Blocks { b_r, b_c }
+    }
+
+    /// Backward-specific tile policy (ROADMAP item): the fast two-phase
+    /// backward (`attn::flash2::flash2_backward`) streams K/V once per
+    /// *row* block in phase 1 and Q/dO once per *column* block in phase 2
+    /// — per live tile pair that is 2·B_c·d + 2·B_r·d elements against
+    /// Algorithm 4's 5·B_r·d, so the fast kernel wins exactly when
+    /// 3·B_r > 2·B_c (see `sim::cost::flash2_bwd`). The paper's forward
+    /// rule `B_r = min(B_c, d)` picks wide flat tiles that violate the
+    /// inequality as soon as B_c > 3d/2; for the backward pair both
+    /// kernels instead take the largest *square* tile B_r = B_c = B —
+    /// square satisfies the inequality by construction — whose working
+    /// set fits in M floats: K_j, V_j, Q_i, dO_i and the on-chip dQ or
+    /// dK~/dV~ accumulators (≤ 6·B·d) plus the S and dP tiles (2·B²).
+    pub fn for_backward(m_floats: usize, d: usize) -> Blocks {
+        let fits = |b: usize| 6 * b * d + 2 * b * b <= m_floats;
+        let mut b = 1usize;
+        while fits(b + 1) {
+            b += 1;
+        }
+        Blocks { b_r: b, b_c: b }
     }
 
     /// SRAM floats consumed by one iteration's tiles:
@@ -68,8 +89,8 @@ pub fn flash_forward(
     let tau = cfg.tau_for(d);
     let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
-    let t_r = (n + b_r - 1) / b_r;
-    let t_c = (n_k + b_c - 1) / b_c;
+    let t_r = n.div_ceil(b_r);
+    let t_c = n_k.div_ceil(b_c);
 
     // Line 2: initialise O = 0, l = 0, m = -inf in HBM.
     let mut o = Tensor::zeros(&[n, d]);
@@ -201,8 +222,8 @@ pub fn flash_backward(
     let tau = cfg.tau_for(d);
     let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
-    let t_r = (n + b_r - 1) / b_r;
-    let t_c = (n_k + b_c - 1) / b_c;
+    let t_r = n.div_ceil(b_r);
+    let t_c = n_k.div_ceil(b_c);
 
     // Line 5: initialise dQ, dK, dV = 0 in HBM.
     let mut dq = Tensor::zeros(&[n, d]);
@@ -352,12 +373,8 @@ pub fn flash_backward(
         }
 
         // Line 24: write dK_j, dV_j to HBM.
-        for cc in 0..bc {
-            for c in 0..d {
-                dk.data[(c0 + cc) * d + c] = dkj.data[cc * d + c];
-                dv.data[(c0 + cc) * d + c] = dvj.data[cc * d + c];
-            }
-        }
+        dk.data[c0 * d..c1 * d].copy_from_slice(&dkj.data);
+        dv.data[c0 * d..c1 * d].copy_from_slice(&dvj.data);
         hbm.store(2 * bc * d);
     }
 
@@ -391,7 +408,9 @@ mod tests {
     fn matches_standard_forward() {
         let (q, k, v) = qkv(48, 8, 0);
         let std = standard_forward(&q, &k, &v, &AttnConfig::default(), &mut Hbm::new());
-        let fla = flash_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(8, 16), &mut Hbm::new());
+        let fla = flash_forward(
+            &q, &k, &v, &AttnConfig::default(), Blocks::explicit(8, 16), &mut Hbm::new(),
+        );
         assert!(std.o.max_abs_diff(&fla.o) < 1e-5);
         assert_allclose(&std.l, &fla.l, 1e-4, 1e-4, "l");
         assert_allclose(&std.m, &fla.m, 1e-6, 0.0, "m");
@@ -409,7 +428,8 @@ mod tests {
     #[test]
     fn dropout_matches_standard() {
         let (q, k, v) = qkv(32, 8, 2);
-        let cfg = AttnConfig { dropout_p: 0.25, dropout_seed: 9, bh_index: 3, ..Default::default() };
+        let cfg =
+            AttnConfig { dropout_p: 0.25, dropout_seed: 9, bh_index: 3, ..Default::default() };
         let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
         let fla = flash_forward(&q, &k, &v, &cfg, Blocks::explicit(8, 8), &mut Hbm::new());
         assert!(std.o.max_abs_diff(&fla.o) < 1e-5);
@@ -434,7 +454,8 @@ mod tests {
         let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
         let mut rng = SplitMix64::new(9);
         let dout = Tensor::randn(&[32, 8], &mut rng, 1.0);
-        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new());
+        let fg =
+            flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new());
         let sg = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
         assert!(fg.dq.max_abs_diff(&sg.dq) < 1e-4);
         assert!(fg.dk.max_abs_diff(&sg.dk) < 1e-4);
@@ -449,7 +470,8 @@ mod tests {
         let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
         let mut rng = SplitMix64::new(10);
         let dout = Tensor::randn(&[24, 8], &mut rng, 1.0);
-        let fg = flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new());
+        let fg =
+            flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new());
         let sg = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
         assert!(fg.dq.max_abs_diff(&sg.dq) < 1e-4);
         assert!(fg.dk.max_abs_diff(&sg.dk) < 1e-4);

@@ -19,8 +19,11 @@
 //!   synchronisation (the same worker pattern as `attn::distributed`, one
 //!   hierarchy level down). Per-block arithmetic is independent of the
 //!   partition, so output is **bitwise identical for any worker count**.
-//!   Callers fold batch·head slices into the same pool by invoking the
-//!   kernel per slice with `workers` spread across slices.
+//!   Batch·head workloads do NOT call this kernel per slice on hot paths:
+//!   `attn::batched` flattens every batch·head·row-block work item into
+//!   one pool (`flash2_forward_batched` / `flash2_backward_batched`),
+//!   reusing the per-block sweeps below — the per-slice entry points here
+//!   remain the reference the batched scheduler is tested against.
 //! * **Register-blocked micro-kernels.** S = tau·Q·Kᵀ and the P̃·V update
 //!   run through `tensor::dot4` / `tensor::pv_accum` (4-wide unrolled
 //!   accumulators) into scratch buffers allocated once per worker — no
@@ -116,6 +119,7 @@ pub fn flash2_forward(
 
     let w = workers.max(1).min(t_r);
     let chunk = t_r.div_ceil(w);
+    let (qd, kd, vd) = (q.data.as_slice(), k.data.as_slice(), v.data.as_slice());
 
     std::thread::scope(|scope| {
         // Carve the output into disjoint per-worker windows: worker wi owns
@@ -128,7 +132,10 @@ pub fn flash2_forward(
             let rb_lo = wi * chunk;
             let rb_hi = ((wi + 1) * chunk).min(t_r);
             handles.push(scope.spawn(move || {
-                row_block_sweep(q, k, v, cfg, blocks, tau, kv_len, rb_lo, rb_hi, o_mine, lse_mine)
+                row_block_sweep(
+                    qd, kd, vd, n, n_k, d, cfg, blocks, tau, kv_len, rb_lo, rb_hi, o_mine,
+                    lse_mine,
+                )
             }));
         }
         // Per-worker HBM counters merge associatively: totals are exact and
@@ -144,11 +151,18 @@ pub fn flash2_forward(
 
 /// Sequential sweep over row blocks [rb_lo, rb_hi): the whole K/V stream
 /// per block with on-chip accumulators, one epilogue store per block.
-#[allow(clippy::too_many_arguments)]
-fn row_block_sweep(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
+/// Operates on flat row-major slices (q: [n, d]; k, v: [n_k, d]) so the
+/// batched scheduler (`attn::batched`) can dispatch single-block work
+/// items through exactly this code path — per-block arithmetic is
+/// self-contained, which is what makes every caller's output bitwise
+/// independent of how blocks are distributed over workers.
+pub(crate) fn row_block_sweep(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    n_k: usize,
+    d: usize,
     cfg: &AttnConfig,
     blocks: Blocks,
     tau: f32,
@@ -158,8 +172,6 @@ fn row_block_sweep(
     o_out: &mut [f32],
     lse_out: &mut [f32],
 ) -> Hbm {
-    let (n, d) = (q.rows(), q.cols());
-    let n_k = k.rows();
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_c = n_k.div_ceil(b_c);
     let row_base = rb_lo * b_r;
@@ -178,7 +190,7 @@ fn row_block_sweep(
         // Q_i is loaded once per row block; O/l/m never round-trip to HBM —
         // they live in `acc`/`m_run`/`l_run` until the epilogue.
         hbm.load(br * d);
-        let q_rows = &q.data[r0 * d..r1 * d];
+        let q_rows = &q[r0 * d..r1 * d];
         acc[..br * d].fill(0.0);
         m_run[..br].fill(f32::NEG_INFINITY);
         l_run[..br].fill(0.0);
@@ -193,8 +205,8 @@ fn row_block_sweep(
             }
             // K_j, V_j stream through SRAM once per row block.
             hbm.load(2 * bc * d);
-            let kj = &k.data[c0 * d..c1 * d];
-            let vj = &v.data[c0 * d..c1 * d];
+            let kj = &k[c0 * d..c1 * d];
+            let vj = &v[c0 * d..c1 * d];
 
             // S = tau Q_i K_jᵀ, register-blocked, into the reused buffer.
             let s = &mut s_buf[..br * bc];
@@ -312,7 +324,6 @@ fn row_block_sweep(
 /// padding mask, and the exactness tests assert measured == analytic
 /// traffic. Key ranges that are *entirely* dead are cheaper to drop one
 /// level up (as `flash_forward_sharded` now does with dead shards).
-#[allow(clippy::too_many_arguments)]
 pub fn flash2_backward(
     q: &Tensor,
     k: &Tensor,
@@ -352,6 +363,8 @@ pub fn flash2_backward(
     let d_vec: Vec<f32> = (0..n).map(|r| dot4(dout.row(r), o.row(r))).collect();
     hbm.store(n);
     let lse = stats.to_lse_vec();
+    let (qd, kd, vd, dod) =
+        (q.data.as_slice(), k.data.as_slice(), v.data.as_slice(), dout.data.as_slice());
 
     // Phase 1: dQ with a Q-outer sweep. Disjoint per-worker dQ windows,
     // exactly the forward's partition.
@@ -365,7 +378,10 @@ pub fn flash2_backward(
             let rb_hi = ((wi + 1) * chunk).min(t_r);
             let (lse, d_vec) = (&lse, &d_vec);
             handles.push(scope.spawn(move || {
-                dq_row_sweep(q, k, v, dout, lse, d_vec, cfg, blocks, tau, kv_len, rb_lo, rb_hi, dq_mine)
+                dq_row_sweep(
+                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, cfg, blocks, tau, kv_len, rb_lo,
+                    rb_hi, dq_mine,
+                )
             }));
         }
         for h in handles {
@@ -388,8 +404,8 @@ pub fn flash2_backward(
             let (lse, d_vec) = (&lse, &d_vec);
             handles.push(scope.spawn(move || {
                 dkv_col_sweep(
-                    q, k, v, dout, lse, d_vec, cfg, blocks, tau, kv_len, cb_lo, cb_hi, dk_mine,
-                    dv_mine,
+                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, cfg, blocks, tau, kv_len, cb_lo,
+                    cb_hi, dk_mine, dv_mine,
                 )
             }));
         }
@@ -403,15 +419,18 @@ pub fn flash2_backward(
 }
 
 /// Phase-1 sweep over Q row blocks [rb_lo, rb_hi): the whole K/V stream per
-/// block with the dQ accumulator on chip, one dQ store per block.
-#[allow(clippy::too_many_arguments)]
-fn dq_row_sweep(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    dout: &Tensor,
+/// block with the dQ accumulator on chip, one dQ store per block. Flat
+/// row-major slices, single-block-dispatchable — see [`row_block_sweep`].
+pub(crate) fn dq_row_sweep(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
     lse: &[f32],
     d_vec: &[f32],
+    n: usize,
+    n_k: usize,
+    d: usize,
     cfg: &AttnConfig,
     blocks: Blocks,
     tau: f32,
@@ -420,8 +439,6 @@ fn dq_row_sweep(
     rb_hi: usize,
     dq_out: &mut [f32],
 ) -> Hbm {
-    let (n, d) = (q.rows(), q.cols());
-    let n_k = k.rows();
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_c = n_k.div_ceil(b_c);
     let row_base = rb_lo * b_r;
@@ -439,8 +456,8 @@ fn dq_row_sweep(
         // the (zero-initialised, worker-owned) output window until the
         // single store below — it never round-trips to HBM mid-sweep.
         hbm.load(2 * br * d + 2 * br);
-        let q_rows = &q.data[r0 * d..r1 * d];
-        let do_rows = &dout.data[r0 * d..r1 * d];
+        let q_rows = &q[r0 * d..r1 * d];
+        let do_rows = &dout[r0 * d..r1 * d];
         let dq_acc = &mut dq_out[(r0 - row_base) * d..(r1 - row_base) * d];
 
         for j in 0..t_c {
@@ -453,8 +470,8 @@ fn dq_row_sweep(
             }
             // K_j, V_j stream through SRAM once per row block.
             hbm.load(2 * bc * d);
-            let kj = &k.data[c0 * d..c1 * d];
-            let vj = &v.data[c0 * d..c1 * d];
+            let kj = &k[c0 * d..c1 * d];
+            let vj = &v[c0 * d..c1 * d];
 
             // S = tau Q_i K_jᵀ and dP^dropped = dO_i V_jᵀ, register-blocked.
             let s = &mut s_buf[..br * bc];
@@ -509,15 +526,18 @@ fn dq_row_sweep(
 }
 
 /// Phase-2 sweep over K/V column blocks [cb_lo, cb_hi): the whole Q/dO
-/// stream per block with dK~/dV~ on chip, one dK/dV store per block.
-#[allow(clippy::too_many_arguments)]
-fn dkv_col_sweep(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    dout: &Tensor,
+/// stream per block with dK~/dV~ on chip, one dK/dV store per block. Flat
+/// row-major slices, single-block-dispatchable — see [`row_block_sweep`].
+pub(crate) fn dkv_col_sweep(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
     lse: &[f32],
     d_vec: &[f32],
+    n: usize,
+    n_k: usize,
+    d: usize,
     cfg: &AttnConfig,
     blocks: Blocks,
     tau: f32,
@@ -527,8 +547,6 @@ fn dkv_col_sweep(
     dk_out: &mut [f32],
     dv_out: &mut [f32],
 ) -> Hbm {
-    let (n, d) = (q.rows(), q.cols());
-    let n_k = k.rows();
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = n.div_ceil(b_r);
     let col_base = cb_lo * b_c;
@@ -544,8 +562,8 @@ fn dkv_col_sweep(
         // K_j, V_j loaded once per column block; dK~_j/dV~_j accumulate in
         // the worker-owned output windows until the single store.
         hbm.load(2 * bc * d);
-        let kj = &k.data[c0 * d..c1 * d];
-        let vj = &v.data[c0 * d..c1 * d];
+        let kj = &k[c0 * d..c1 * d];
+        let vj = &v[c0 * d..c1 * d];
         let dk_acc = &mut dk_out[(c0 - col_base) * d..(c1 - col_base) * d];
         let dv_acc = &mut dv_out[(c0 - col_base) * d..(c1 - col_base) * d];
 
@@ -558,8 +576,8 @@ fn dkv_col_sweep(
             }
             // Q_i, dO_i, D_i, L_i stream through SRAM once per column block.
             hbm.load(2 * br * d + 2 * br);
-            let q_rows = &q.data[r0 * d..r1 * d];
-            let do_rows = &dout.data[r0 * d..r1 * d];
+            let q_rows = &q[r0 * d..r1 * d];
+            let do_rows = &dout[r0 * d..r1 * d];
 
             let s = &mut s_buf[..br * bc];
             matmul_bt_scaled_into(q_rows, kj, d, tau, s);
@@ -629,9 +647,13 @@ fn dkv_col_sweep(
 /// Fixed cross-kernel agreement probe (causal + padding + rectangular-ish
 /// shape, multi-threaded) covering the full fast pair: max deviation of
 /// flash2's forward (O, logsumexp) **and** backward (dQ, dK, dV) from the
-/// paper-faithful reference kernels over the workload. Used by the
-/// coordinator preflight before any training/serving runs.
+/// paper-faithful reference kernels over the workload, plus the batched
+/// multi-head scheduler (`attn::batched` — the entry points every hot path
+/// actually calls) against the per-slice pair, where agreement must be
+/// bitwise. Used by the coordinator preflight before any training/serving
+/// runs.
 pub fn self_check() -> f32 {
+    use super::batched::{bh_slice, flash2_backward_batched, flash2_forward_batched};
     use super::{attention_backward, BackwardKernel};
     use crate::util::rng::SplitMix64;
     let (n, d) = (48usize, 16usize);
@@ -657,9 +679,45 @@ pub fn self_check() -> f32 {
         BackwardKernel::Flash2 { workers: 3 },
         &q, &k, &v, &fast.o, &dout, fast.stats(), &cfg, blocks, &mut Hbm::new(),
     );
-    diff.max(slow.dq.max_abs_diff(&fast_g.dq))
+    diff = diff
+        .max(slow.dq.max_abs_diff(&fast_g.dq))
         .max(slow.dk.max_abs_diff(&fast_g.dk))
-        .max(slow.dv.max_abs_diff(&fast_g.dv))
+        .max(slow.dv.max_abs_diff(&fast_g.dv));
+
+    // Batched scheduler probe: a [2, 2, n, d] workload through the batched
+    // pair vs the per-slice pair, slice by slice (slice s advances
+    // bh_index by s on both sides). These are the entry points the
+    // trainer/serve/bench hot paths call; agreement is bitwise, so any
+    // nonzero deviation here is a scheduling bug, not float noise.
+    let (bsz, heads, nb, db) = (2usize, 2usize, 24usize, 8usize);
+    let len = nb * db;
+    let q4 = Tensor::randn(&[bsz, heads, nb, db], &mut rng, 1.0);
+    let k4 = Tensor::randn(&[bsz, heads, nb, db], &mut rng, 1.0);
+    let v4 = Tensor::randn(&[bsz, heads, nb, db], &mut rng, 1.0);
+    let dout4 = Tensor::randn(&[bsz, heads, nb, db], &mut rng, 1.0);
+    let bcfg = AttnConfig { causal: true, kv_len: Some(19), ..Default::default() };
+    let bfwd = flash2_forward_batched(&q4, &k4, &v4, &bcfg, blocks, 3, &mut Hbm::new());
+    let bg = flash2_backward_batched(
+        &q4, &k4, &v4, &bfwd.o, &dout4, &bfwd.stats, &bcfg, blocks, 3, &mut Hbm::new(),
+    );
+    let max_abs =
+        |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    for s in 0..bsz * heads {
+        let cfg_s = AttnConfig { bh_index: s as u32, ..bcfg.clone() };
+        let (qs, ks, vs) = (bh_slice(&q4, s), bh_slice(&k4, s), bh_slice(&v4, s));
+        let dos = bh_slice(&dout4, s);
+        let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, 1, &mut Hbm::new());
+        let g = flash2_backward(
+            &qs, &ks, &vs, &f.o, &dos, f.stats(), &cfg_s, blocks, 1, &mut Hbm::new(),
+        );
+        diff = diff
+            .max(max_abs(&bfwd.o.data[s * len..(s + 1) * len], &f.o.data))
+            .max(max_abs(&bfwd.stats.lse[s * nb..(s + 1) * nb], &f.lse))
+            .max(max_abs(&bg.dq.data[s * len..(s + 1) * len], &g.dq.data))
+            .max(max_abs(&bg.dk.data[s * len..(s + 1) * len], &g.dk.data))
+            .max(max_abs(&bg.dv.data[s * len..(s + 1) * len], &g.dv.data));
+    }
+    diff
 }
 
 #[cfg(test)]
@@ -684,8 +742,9 @@ mod tests {
     fn matches_standard_forward() {
         let (q, k, v) = qkv(48, 8, 0);
         let std = standard_forward(&q, &k, &v, &AttnConfig::default(), &mut Hbm::new());
-        let fast =
-            flash2_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(8, 16), 2, &mut Hbm::new());
+        let fast = flash2_forward(
+            &q, &k, &v, &AttnConfig::default(), Blocks::explicit(8, 16), 2, &mut Hbm::new(),
+        );
         assert!(std.o.max_abs_diff(&fast.o) < 1e-5);
         for r in 0..48 {
             assert!(
@@ -712,13 +771,15 @@ mod tests {
             let q = Tensor::randn(&[n, d], rng, 1.0);
             let k = Tensor::randn(&[n, d], rng, 1.0);
             let v = Tensor::randn(&[n, d], rng, 1.0);
-            let cfg = AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let cfg =
+                AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let blocks = Blocks::explicit(b_r, b_c);
             let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
             let fla = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
             let fa2 = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
             let ctx = format!(
-                "n={n} d={d} blocks=({b_r},{b_c}) causal={causal} kv_len={kv_len:?} p={dropout_p} w={workers}"
+                "n={n} d={d} blocks=({b_r},{b_c}) causal={causal} kv_len={kv_len:?} \
+                 p={dropout_p} w={workers}"
             );
             assert!(std.o.max_abs_diff(&fa2.o) < 1e-4, "vs standard: {ctx}");
             assert!(fla.o.max_abs_diff(&fa2.o) < 1e-4, "vs flash: {ctx}");
@@ -756,10 +817,13 @@ mod tests {
     fn o_and_stats_written_exactly_once() {
         // The tentpole IO claim: store traffic is exactly N·d + N floats —
         // one O row + one stat per row, once — for any tiling.
-        for (n, d, br, bc) in [(64usize, 8usize, 16usize, 16usize), (48, 4, 8, 32), (40, 8, 16, 8)] {
+        for (n, d, br, bc) in [(64usize, 8usize, 16usize, 16usize), (48, 4, 8, 32), (40, 8, 16, 8)]
+        {
             let (q, k, v) = qkv(n, d, 5);
             let mut hbm = Hbm::new();
-            flash2_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(br, bc), 2, &mut hbm);
+            flash2_forward(
+                &q, &k, &v, &AttnConfig::default(), Blocks::explicit(br, bc), 2, &mut hbm,
+            );
             assert_eq!(hbm.stores, (n * d + n) as u64, "n={n} d={d} blocks=({br},{bc})");
         }
     }
@@ -812,7 +876,9 @@ mod tests {
     #[test]
     fn into_attn_output_round_trips_stats() {
         let (q, k, v) = qkv(16, 4, 10);
-        let fast = flash2_forward(&q, &k, &v, &AttnConfig::default(), Blocks::explicit(4, 4), 1, &mut Hbm::new());
+        let fast = flash2_forward(
+            &q, &k, &v, &AttnConfig::default(), Blocks::explicit(4, 4), 1, &mut Hbm::new(),
+        );
         let lse_before = fast.lse.clone();
         let out = fast.into_attn_output();
         for r in 0..16 {
@@ -894,7 +960,8 @@ mod tests {
             let k = Tensor::randn(&[n, d], rng, 1.0);
             let v = Tensor::randn(&[n, d], rng, 1.0);
             let dout = Tensor::randn(&[n, d], rng, 1.0);
-            let cfg = AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let cfg =
+                AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let blocks = Blocks::explicit(b_r, b_c);
             let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
             let fast = flash2_backward(
@@ -905,7 +972,8 @@ mod tests {
             );
             let std = standard_backward(&q, &k, &v, &dout, &cfg, &mut Hbm::new());
             let ctx = format!(
-                "n={n} d={d} blocks=({b_r},{b_c}) causal={causal} kv_len={kv_len:?} p={dropout_p} w={workers}"
+                "n={n} d={d} blocks=({b_r},{b_c}) causal={causal} kv_len={kv_len:?} \
+                 p={dropout_p} w={workers}"
             );
             assert!(fast.dq.max_abs_diff(&slow.dq) < 1e-4, "dq vs flash: {ctx}");
             assert!(fast.dk.max_abs_diff(&slow.dk) < 1e-4, "dk vs flash: {ctx}");

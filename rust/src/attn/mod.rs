@@ -51,6 +51,21 @@
 //! [`attention_backward`] entry point, selected by [`BackwardKernel`] —
 //! call sites pick a policy role, not a concrete function.
 //!
+//! **Batched entry points are the hot-path API.** Real workloads are
+//! [batch, heads, n, d]; scheduling them one slice at a time pays a
+//! thread-pool spin-up per slice and idles workers on short sequences —
+//! the occupancy gap FlashAttention-2 attributes most of its speedup to
+//! closing. [`batched`] therefore flattens every batch·head·row-block
+//! (and column-block) work item into a single worker pool:
+//! `flash2_forward_batched` / `flash2_backward_batched` (and, batched
+//! across shards, the sequence-parallel driver in [`distributed`]) are
+//! what the trainer preflight, the serve IO model and the perf benches
+//! call. Per-slice kernel calls remain for tests and reference use only:
+//! they are the oracle the batched scheduler is bitwise-tested against.
+//! Batching never changes per-slice HBM traffic
+//! (`sim::cost::flash2_fwd_batched` = slices × per-slice, asserted
+//! exactly), so every IO claim carries over unchanged.
+//!
 //! All kernels produce softmax statistics; [`AttnStats`] abstracts over
 //! the two representations so either backward accepts either forward's
 //! output. Fully-masked rows (e.g. `kv_len` = 0 shards) have defined
@@ -64,6 +79,7 @@
 //! All functions operate on one batch*head slice `[n, d]`; callers fold the
 //! leading dims.
 
+pub mod batched;
 pub mod block_sparse;
 pub mod distributed;
 pub mod flash;
@@ -74,7 +90,7 @@ pub mod standard;
 use crate::tensor::Tensor;
 
 /// Shared configuration for the attention mirrors.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct AttnConfig {
     /// Softmax scaling tau; None => 1/sqrt(d).
     pub tau: Option<f32>,
@@ -85,19 +101,6 @@ pub struct AttnConfig {
     pub dropout_seed: u32,
     /// batch*head index — seeds the dropout counter stream.
     pub bh_index: u32,
-}
-
-impl Default for AttnConfig {
-    fn default() -> Self {
-        AttnConfig {
-            tau: None,
-            causal: false,
-            kv_len: None,
-            dropout_p: 0.0,
-            dropout_seed: 0,
-            bh_index: 0,
-        }
-    }
 }
 
 impl AttnConfig {
@@ -202,11 +205,12 @@ pub enum BackwardKernel {
     Flash2 { workers: usize },
 }
 
-/// Shared entry point for every backward pass. All hot paths (trainer
-/// preflight, benches, future autograd plumbing) select a
-/// [`BackwardKernel`] role here instead of naming kernel functions, so
-/// swapping the production gradient kernel is a one-line policy change.
-#[allow(clippy::too_many_arguments)]
+/// Shared per-slice entry point for every backward pass. Call sites
+/// select a [`BackwardKernel`] role here instead of naming kernel
+/// functions, so swapping the production gradient kernel is a one-line
+/// policy change. Hot paths with a [batch, heads, n, d] workload go
+/// through [`attention_backward_batched`] instead; this per-slice form is
+/// for tests, reference comparisons and single-slice callers.
 pub fn attention_backward(
     kernel: BackwardKernel,
     q: &Tensor,
@@ -228,6 +232,59 @@ pub fn attention_backward(
             flash2::flash2_backward(q, k, v, o, dout, stats, cfg, blocks, workers, hbm)
         }
     }
+}
+
+/// Batched counterpart of [`attention_backward`]: gradients for a whole
+/// [batch, heads, n, d] workload through one entry point, so every
+/// gradient producer gets batching for free. The fast production kernel
+/// schedules all batch·head·block work items into a single worker pool
+/// ([`batched::flash2_backward_batched`]); the reference kernels fall
+/// back to a per-slice loop with identical slice semantics (slice `s`
+/// runs with `bh_index = cfg.bh_index + s`, the same dropout streams as
+/// the batched path) — callers swap policy roles without touching layout
+/// code.
+pub fn attention_backward_batched(
+    kernel: BackwardKernel,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &batched::BatchedAttnStats,
+    cfg: &AttnConfig,
+    blocks: flash::Blocks,
+    hbm: &mut crate::sim::hbm::Hbm,
+) -> AttnGrads {
+    if let BackwardKernel::Flash2 { workers } = kernel {
+        return batched::flash2_backward_batched(
+            q, k, v, o, dout, stats, cfg, blocks, workers, hbm,
+        );
+    }
+    assert_eq!(q.rank(), 4, "attention_backward_batched: Q must be [batch, heads, n, d]");
+    let (b, h, n, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
+    let n_k = k.shape[2];
+    let mut dq = Tensor::zeros(&[b, h, n, d]);
+    let mut dk = Tensor::zeros(&[b, h, n_k, d]);
+    let mut dv = Tensor::zeros(&[b, h, n_k, d]);
+    for s in 0..b * h {
+        let cfg_s = AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() };
+        let g = attention_backward(
+            kernel,
+            &batched::bh_slice(q, s),
+            &batched::bh_slice(k, s),
+            &batched::bh_slice(v, s),
+            &batched::bh_slice(o, s),
+            &batched::bh_slice(dout, s),
+            stats.slice(s),
+            &cfg_s,
+            blocks,
+            hbm,
+        );
+        dq.data[s * n * d..(s + 1) * n * d].copy_from_slice(&g.dq.data);
+        dk.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dk.data);
+        dv.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dv.data);
+    }
+    AttnGrads { dq, dk, dv }
 }
 
 #[cfg(test)]

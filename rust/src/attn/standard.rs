@@ -9,7 +9,13 @@ use crate::tensor::Tensor;
 
 /// Algorithm 0: S = tau Q K^T (write S), P = softmax(S) (read S, write P),
 /// O = P V (read P, V, write O). q,k,v: [n, d].
-pub fn standard_forward(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig, hbm: &mut Hbm) -> AttnOutput {
+pub fn standard_forward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    hbm: &mut Hbm,
+) -> AttnOutput {
     let (n, d) = (q.rows(), q.cols());
     let tau = cfg.tau_for(d);
     let kv_len = cfg.kv_len.unwrap_or(n);

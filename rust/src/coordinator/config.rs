@@ -46,14 +46,26 @@ mod tests {
 
     #[test]
     fn warmup_ramps_linearly() {
-        let c = TrainConfig { warmup_steps: 10, lr_max: 1.0, lr_min: 0.0, steps: 100, ..Default::default() };
+        let c = TrainConfig {
+            warmup_steps: 10,
+            lr_max: 1.0,
+            lr_min: 0.0,
+            steps: 100,
+            ..Default::default()
+        };
         assert!((c.lr_at(5) - 0.5).abs() < 1e-9);
         assert!((c.lr_at(10) - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn cosine_decays_to_min() {
-        let c = TrainConfig { warmup_steps: 10, lr_max: 1.0, lr_min: 0.1, steps: 100, ..Default::default() };
+        let c = TrainConfig {
+            warmup_steps: 10,
+            lr_max: 1.0,
+            lr_min: 0.1,
+            steps: 100,
+            ..Default::default()
+        };
         assert!((c.lr_at(100) - 0.1).abs() < 1e-6);
         assert!(c.lr_at(50) < 1.0 && c.lr_at(50) > 0.1);
     }

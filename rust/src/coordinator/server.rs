@@ -55,20 +55,31 @@ pub struct Server {
 
 impl Server {
     pub fn new(trainer: LmTrainer) -> Server {
-        Server { trainer, temperature: 0.8, stats: ServeStats::default(), rng: SplitMix64::new(0x5EED) }
+        Server {
+            trainer,
+            temperature: 0.8,
+            stats: ServeStats::default(),
+            rng: SplitMix64::new(0x5EED),
+        }
     }
 
-    /// Modeled attention accumulator *write* traffic per forward at the
-    /// serving context length, in f32 elements per head slice: (faithful
-    /// Algorithm-1 kernel, fast Q-outer flash2 kernel). The fast kernel
-    /// writes O/stats exactly once (N·d + N) instead of once per inner
-    /// iteration — the IO win the serve path routes through; d = 64 is the
-    /// paper's GPT-2 head dim.
+    /// Modeled attention accumulator *write* traffic for one full serving
+    /// forward — all `n_head` slices of the layer at the serving context
+    /// length, in f32 elements: (faithful Algorithm-1 kernel × heads, fast
+    /// batched kernel). The serve path routes through the batched entry
+    /// point (`attn::batched`), which schedules every head·row-block work
+    /// item in one pool but still writes each slice's O/stats exactly once
+    /// — heads × (N·d + N) — instead of once per inner iteration; d = 64
+    /// is the paper's GPT-2 head dim.
     pub fn modeled_attn_io(&self) -> (u64, u64) {
         let n = self.trainer.n_ctx as u64;
+        let heads = self.trainer.n_head as u64;
         let d = 64u64;
         let blocks = Blocks::from_sram(48 * 1024, d as usize, n as usize);
-        (cost::flash_fwd_stores(n, d, blocks, true), cost::flash2_fwd_stores(n, d))
+        (
+            heads * cost::flash_fwd_stores(n, d, blocks, true),
+            cost::flash2_fwd_batched_stores(heads, n, d),
+        )
     }
 
     /// Sample the next byte from logits at `position` with temperature.
@@ -101,7 +112,12 @@ impl Server {
     }
 
     /// Generate `max_new` bytes continuing `prompt` (sliding-window ctx).
-    pub fn complete(&mut self, rt: &mut Runtime, prompt: &str, max_new: usize) -> Result<Completion> {
+    pub fn complete(
+        &mut self,
+        rt: &mut Runtime,
+        prompt: &str,
+        max_new: usize,
+    ) -> Result<Completion> {
         let n_ctx = self.trainer.n_ctx;
         let t0 = Instant::now();
         let mut tokens: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();

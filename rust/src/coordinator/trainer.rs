@@ -17,20 +17,23 @@ use crate::runtime::{Runtime, Value};
 use crate::util::rng::SplitMix64;
 
 /// One-time preflight on the training/serving path: the fast attention
-/// kernel *pair* (`attn::flash2` forward + backward — the kernels the
-/// sharded driver and the perf benches route through, backward via the
-/// shared `attn::attention_backward` entry point) must agree with the
-/// paper-faithful reference mirrors before any step runs. The fused train
-/// step itself executes as a PJRT artifact; this gate keeps the Rust
-/// mirrors honest before they are used for IO claims or serving math.
-/// Costs one tiny [48, 16] fwd+bwd workload, once per process.
+/// kernel *pair* (`attn::flash2` forward + backward, through the shared
+/// `attn::attention_backward` entry point) must agree with the
+/// paper-faithful reference mirrors, AND the batched multi-head scheduler
+/// (`attn::batched` — the [batch, heads, n, d] entry points the GPT-2
+/// trainer step, the serve IO model, the sharded driver and the perf
+/// benches route through) must agree bitwise with the per-slice pair,
+/// before any step runs. The fused train step itself executes as a PJRT
+/// artifact; this gate keeps the Rust mirrors honest before they are used
+/// for IO claims or serving math. Costs one tiny [48, 16] fwd+bwd workload
+/// plus a [2, 2, 24, 8] batched one, once per process.
 fn preflight_fast_kernel() -> Result<()> {
     static DIFF: OnceLock<f32> = OnceLock::new();
     let diff = *DIFF.get_or_init(flash2::self_check);
     ensure!(
         diff < 1e-4,
-        "fast attention kernel pair (attn::flash2 fwd/bwd) disagrees with the reference mirrors: \
-         max diff {diff}"
+        "fast attention kernels (attn::flash2 fwd/bwd pair or the attn::batched multi-head \
+         scheduler) disagree with the reference mirrors: max diff {diff}"
     );
     Ok(())
 }
@@ -58,14 +61,25 @@ impl ModelState {
             .iter()
             .map(|p| Value::zeros_like_shape(p.shape()))
             .collect();
-        Ok(ModelState { tag: tag.to_string(), params, m: zeros.clone(), v: zeros, n_param_tensors: n, step: 0 })
+        Ok(ModelState {
+            tag: tag.to_string(),
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            n_param_tensors: n,
+            step: 0,
+        })
     }
 
     /// Assemble (params ++ m ++ v ++ extras) and apply the returned state.
-    fn step_with(&mut self, rt: &mut Runtime, extras: Vec<Value>, n_scalar_outputs: usize) -> Result<Vec<f64>> {
+    fn step_with(
+        &mut self,
+        rt: &mut Runtime,
+        extras: Vec<Value>,
+        n_scalar_outputs: usize,
+    ) -> Result<Vec<f64>> {
         self.step += 1;
-        let mut inputs =
-            Vec::with_capacity(3 * self.n_param_tensors + extras.len());
+        let mut inputs = Vec::with_capacity(3 * self.n_param_tensors + extras.len());
         inputs.extend(self.params.iter().cloned());
         inputs.extend(self.m.iter().cloned());
         inputs.extend(self.v.iter().cloned());
@@ -146,6 +160,10 @@ pub struct LmTrainer {
     pub metrics: Metrics,
     pub batch: usize,
     pub n_ctx: usize,
+    /// Attention heads per layer — the head-slice count the serve path's
+    /// batched IO model multiplies over (1 if the manifest predates the
+    /// n_head config key).
+    pub n_head: usize,
     rng: SplitMix64,
 }
 
@@ -154,12 +172,14 @@ impl LmTrainer {
         let info = rt.manifest.model(&cfg.model)?;
         let batch = info.cfg_usize("batch").context("model batch")?;
         let n_ctx = info.cfg_usize("n_ctx").context("model n_ctx")?;
+        let n_head = info.cfg_usize("n_head").unwrap_or(1);
         let state = ModelState::init(rt, &cfg.model.clone(), cfg.seed as i32)?;
         Ok(LmTrainer {
             state,
             metrics: Metrics::new(&cfg.model),
             batch,
             n_ctx,
+            n_head,
             rng: SplitMix64::new(cfg.seed ^ 0xBEEF),
             cfg,
         })
@@ -309,7 +329,12 @@ impl ClsTrainer {
     }
 
     /// Held-out evaluation on fresh batches.
-    pub fn eval(&mut self, rt: &mut Runtime, ds: &dyn ClsDataset, batches: usize) -> Result<(f64, f64)> {
+    pub fn eval(
+        &mut self,
+        rt: &mut Runtime,
+        ds: &dyn ClsDataset,
+        batches: usize,
+    ) -> Result<(f64, f64)> {
         let mut tot_loss = 0.0;
         let mut tot_acc = 0.0;
         for _ in 0..batches {

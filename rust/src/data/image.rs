@@ -90,8 +90,10 @@ mod tests {
         for _ in 0..50 {
             let (toks, label) = ds.sample(128, &mut rng);
             let s = 11;
-            let col_max: i32 = (0..s).map(|c| (0..s).map(|r| toks[r * s + c]).sum::<i32>()).max().unwrap();
-            let row_max: i32 = (0..s).map(|r| (0..s).map(|c| toks[r * s + c]).sum::<i32>()).max().unwrap();
+            let col_max: i32 =
+                (0..s).map(|c| (0..s).map(|r| toks[r * s + c]).sum::<i32>()).max().unwrap();
+            let row_max: i32 =
+                (0..s).map(|r| (0..s).map(|c| toks[r * s + c]).sum::<i32>()).max().unwrap();
             match label {
                 0 => assert_eq!(col_max, 3 * s as i32),
                 1 => assert_eq!(row_max, 3 * s as i32),

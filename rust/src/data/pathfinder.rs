@@ -76,8 +76,9 @@ impl ClsDataset for Pathfinder {
         assert!(side * side <= seq, "side {side} too large for seq {seq}");
         let mut grid = vec![0i32; side * side];
         let path_len = side * 2;
-        let rand_cell =
-            |rng: &mut SplitMix64| (rng.below(side as u64) as usize, rng.below(side as u64) as usize);
+        let rand_cell = |rng: &mut SplitMix64| {
+            (rng.below(side as u64) as usize, rng.below(side as u64) as usize)
+        };
 
         let label = (rng.next_f32() < 0.5) as i32;
         let a = rand_cell(rng);

@@ -41,7 +41,19 @@ impl ClsDataset for TextCls {
         let n = self.n_markers.min(seq);
         let majority = (n / 2) + 1;
         let mut kinds: Vec<i32> = (0..n)
-            .map(|i| if i < majority { if label == 1 { POS } else { NEG } } else if label == 1 { NEG } else { POS })
+            .map(|i| {
+                if i < majority {
+                    if label == 1 {
+                        POS
+                    } else {
+                        NEG
+                    }
+                } else if label == 1 {
+                    NEG
+                } else {
+                    POS
+                }
+            })
             .collect();
         rng.shuffle(&mut kinds);
         // Uniform placement => evidence spans the entire sequence.

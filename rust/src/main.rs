@@ -122,7 +122,8 @@ fn train_cls(args: &Args) -> Result<()> {
     let n_ctx = rt.manifest.model(&model)?.cfg_usize("n_ctx").unwrap_or(128);
     let ds = dataset_by_name(args.get_or("task", "listops"), n_ctx)?;
     let steps = args.get_usize("steps", 150);
-    let res = tasks::run_task(&mut rt, &model, ds.as_ref(), steps, args.get_usize("seed", 0) as u64)?;
+    let res =
+        tasks::run_task(&mut rt, &model, ds.as_ref(), steps, args.get_usize("seed", 0) as u64)?;
     println!(
         "{} on {}: accuracy {:.3} (chance {:.3}), eval loss {:.4}, {:.0} ms/step, {:.1}s total",
         res.model,
@@ -167,9 +168,10 @@ fn serve(args: &Args) -> Result<()> {
     );
     let (io_flash, io_flash2) = server.modeled_attn_io();
     println!(
-        "modeled attention O/stats write traffic per head slice at n_ctx: \
-         flash {io_flash} vs flash2 {io_flash2} elems ({:.2}x fewer accumulator \
-         round-trips from the Q-outer kernel)",
+        "modeled attention O/stats write traffic per forward ({} head slices at n_ctx): \
+         flash {io_flash} vs batched flash2 {io_flash2} elems ({:.2}x fewer accumulator \
+         round-trips from the Q-outer kernel; heads share one worker pool)",
+        server.trainer.n_head,
         io_flash as f64 / io_flash2 as f64
     );
     Ok(())

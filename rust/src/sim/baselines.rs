@@ -157,7 +157,11 @@ impl Method {
                 let _ = k;
                 let s_frac = 0.125;
                 let quad = (4.0 * (n * n) as f64 * s_frac) as u64;
-                Cost { hbm_elems: quad + 4 * n * d, flops: (4.0 * (n * n * d) as f64 * s_frac) as u64, kernels: 6 }
+                Cost {
+                    hbm_elems: quad + 4 * n * d,
+                    flops: (4.0 * (n * n * d) as f64 * s_frac) as u64,
+                    kernels: 6,
+                }
             }
             Method::Longformer => Cost {
                 // window k + global k, materialised banded kernels.

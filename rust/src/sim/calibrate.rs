@@ -118,7 +118,8 @@ pub fn runtime_scale(m: Method, pass: Pass, _rl: &Roofline) -> f64 {
             // Calibrate fwd and bwd independently; FwdBwd is their sum, so
             // use the blended scale implied by the anchor sums.
             let (cfg, n) = anchor_cfg(m);
-            let raw = raw_pass_ms(m, Pass::Fwd, &spec, &cfg, n) + raw_pass_ms(m, Pass::Bwd, &spec, &cfg, n);
+            let raw = raw_pass_ms(m, Pass::Fwd, &spec, &cfg, n)
+                + raw_pass_ms(m, Pass::Bwd, &spec, &cfg, n);
             paper_anchor_ms(m, Pass::FwdBwd) / raw
         }
         p => {

@@ -24,15 +24,39 @@ pub struct ModelShape {
 
 impl ModelShape {
     pub fn bert_large(seq: u64) -> ModelShape {
-        ModelShape { name: "BERT-large", n_layer: 24, d_model: 1024, n_head: 16, seq, batch: 56, vocab: 30522 }
+        ModelShape {
+            name: "BERT-large",
+            n_layer: 24,
+            d_model: 1024,
+            n_head: 16,
+            seq,
+            batch: 56,
+            vocab: 30522,
+        }
     }
 
     pub fn gpt2_small(seq: u64) -> ModelShape {
-        ModelShape { name: "GPT-2 small", n_layer: 12, d_model: 768, n_head: 12, seq, batch: 32, vocab: 50257 }
+        ModelShape {
+            name: "GPT-2 small",
+            n_layer: 12,
+            d_model: 768,
+            n_head: 12,
+            seq,
+            batch: 32,
+            vocab: 50257,
+        }
     }
 
     pub fn gpt2_medium(seq: u64) -> ModelShape {
-        ModelShape { name: "GPT-2 medium", n_layer: 24, d_model: 1024, n_head: 16, seq, batch: 32, vocab: 50257 }
+        ModelShape {
+            name: "GPT-2 medium",
+            n_layer: 24,
+            d_model: 1024,
+            n_head: 16,
+            seq,
+            batch: 32,
+            vocab: 50257,
+        }
     }
 
     pub fn d_head(&self) -> u64 {
@@ -59,7 +83,12 @@ pub fn framework_factor(framework: &str) -> f64 {
 }
 
 /// Model one training step (seconds) of `shape` with attention `method`.
-pub fn step_seconds(rl: &Roofline, shape: &ModelShape, method: Method, framework: &str) -> Option<f64> {
+pub fn step_seconds(
+    rl: &Roofline,
+    shape: &ModelShape,
+    method: Method,
+    framework: &str,
+) -> Option<f64> {
     let cfg = BenchConfig {
         batch: shape.batch,
         heads: shape.n_head,
@@ -76,7 +105,12 @@ pub fn step_seconds(rl: &Roofline, shape: &ModelShape, method: Method, framework
 }
 
 /// End-to-end speedup of flash over `baseline` for a model shape.
-pub fn e2e_speedup(rl: &Roofline, shape: &ModelShape, baseline: Method, framework: &str) -> Option<f64> {
+pub fn e2e_speedup(
+    rl: &Roofline,
+    shape: &ModelShape,
+    baseline: Method,
+    framework: &str,
+) -> Option<f64> {
     let base = step_seconds(rl, shape, baseline, framework)?;
     let flash = step_seconds(rl, shape, Method::FlashAttention, "ours")?;
     Some(base / flash)

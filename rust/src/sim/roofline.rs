@@ -33,7 +33,14 @@ pub struct BenchConfig {
 
 impl Default for BenchConfig {
     fn default() -> Self {
-        BenchConfig { batch: 16, heads: 8, d: 64, dropout: false, masked: false, bytes_per_elem: 2.0 }
+        BenchConfig {
+            batch: 16,
+            heads: 8,
+            d: 64,
+            dropout: false,
+            masked: false,
+            bytes_per_elem: 2.0,
+        }
     }
 }
 
@@ -114,7 +121,13 @@ impl Roofline {
     }
 
     /// Speedup of `m` over the PyTorch standard implementation.
-    pub fn speedup_vs_standard(&self, m: Method, pass: Pass, n: u64, cfg: &BenchConfig) -> Option<f64> {
+    pub fn speedup_vs_standard(
+        &self,
+        m: Method,
+        pass: Pass,
+        n: u64,
+        cfg: &BenchConfig,
+    ) -> Option<f64> {
         let t = self.time_ms(m, pass, n, cfg)?;
         let base = self.time_ms(Method::PyTorch, pass, n, cfg)?;
         Some(base / t)
@@ -136,7 +149,8 @@ mod tests {
         // Paper Table 20 combined speedups hover 1.6-1.7x; thresholds sit
         // just below, scaling in from short sequences.
         for (n, min_speedup) in [(256u64, 1.15), (512, 1.3), (1024, 1.5), (2048, 1.5)] {
-            let s = rl().speedup_vs_standard(Method::FlashAttention, Pass::FwdBwd, n, &cfg).unwrap();
+            let s =
+                rl().speedup_vs_standard(Method::FlashAttention, Pass::FwdBwd, n, &cfg).unwrap();
             assert!(s > min_speedup, "n={n}: speedup {s}");
         }
     }

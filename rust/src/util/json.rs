@@ -98,8 +98,12 @@ impl<'a> Parser<'a> {
             self.i += 1;
             Ok(())
         } else {
-            bail!("expected {:?} at byte {} (found {:?})", c as char, self.i,
-                  self.peek().map(|b| b as char))
+            bail!(
+                "expected {:?} at byte {} (found {:?})",
+                c as char,
+                self.i,
+                self.peek().map(|b| b as char)
+            )
         }
     }
 

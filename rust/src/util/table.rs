@@ -40,7 +40,8 @@ impl Table {
         let line = |out: &mut String, cells: &[String]| {
             let mut s = String::from("|");
             for i in 0..ncol {
-                let _ = write!(s, " {:<w$} |", cells.get(i).map(|c| c.as_str()).unwrap_or(""), w = widths[i]);
+                let cell = cells.get(i).map(|c| c.as_str()).unwrap_or("");
+                let _ = write!(s, " {:<w$} |", cell, w = widths[i]);
             }
             let _ = writeln!(out, "{s}");
         };

@@ -3,6 +3,7 @@
 //! mirrors access-for-access, and the asymptotics of Theorems 2/5 and
 //! Propositions 3/4 must hold over parameter sweeps.
 
+use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
 use flashattn::attn::block_sparse::block_sparse_forward;
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
@@ -103,7 +104,9 @@ fn flash2_bwd_analytic_matches_instrumented_exactly() {
         let dout = Tensor::full(&[n, d], 1.0);
         for workers in [1usize, 3, 8] {
             let mut hbm = Hbm::new();
-            flash2_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, workers, &mut hbm);
+            flash2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, workers, &mut hbm,
+            );
             let pred = cost::flash2_bwd(n as u64, d as u64, blocks, false, false);
             assert_eq!(
                 hbm.accesses(),
@@ -112,6 +115,95 @@ fn flash2_bwd_analytic_matches_instrumented_exactly() {
             );
         }
     }
+}
+
+fn qkv4(b: usize, h: usize, n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = SplitMix64::new(seed);
+    (
+        Tensor::randn(&[b, h, n, d], &mut rng, 1.0),
+        Tensor::randn(&[b, h, n, d], &mut rng, 1.0),
+        Tensor::randn(&[b, h, n, d], &mut rng, 1.0),
+    )
+}
+
+#[test]
+fn flash2_fwd_batched_analytic_matches_instrumented_exactly() {
+    // The tentpole IO constraint, asserted access-for-access: folding
+    // batch·head·row-block work into one pool must leave the per-slice
+    // HBM count untouched, so measured == slices × per-slice closed form,
+    // for any worker count.
+    for (b, h, n, d, br, bc) in [
+        (2usize, 3usize, 128usize, 16usize, 16usize, 32usize),
+        (1, 4, 64, 8, 8, 8),
+        (3, 1, 96, 4, 32, 16),
+    ] {
+        let (q, k, v) = qkv4(b, h, n, d, 21);
+        let blocks = Blocks::explicit(br, bc);
+        for workers in [1usize, 3, 8] {
+            let mut hbm = Hbm::new();
+            flash2_forward_batched(&q, &k, &v, &AttnConfig::default(), blocks, workers, &mut hbm);
+            let pred =
+                cost::flash2_fwd_batched((b * h) as u64, n as u64, d as u64, blocks, false, false);
+            assert_eq!(
+                hbm.accesses(),
+                pred.hbm_elems,
+                "b={b} h={h} n={n} d={d} blocks=({br},{bc}) workers={workers}"
+            );
+            assert_eq!(
+                pred.hbm_elems,
+                (b * h) as u64
+                    * cost::flash2_fwd(n as u64, d as u64, blocks, false, false).hbm_elems
+            );
+        }
+    }
+}
+
+#[test]
+fn flash2_bwd_batched_analytic_matches_instrumented_exactly() {
+    for (b, h, n, d, br, bc) in
+        [(2usize, 3usize, 128usize, 16usize, 16usize, 32usize), (1, 4, 64, 8, 8, 8)]
+    {
+        let (q, k, v) = qkv4(b, h, n, d, 22);
+        let blocks = Blocks::explicit(br, bc);
+        let cfg = AttnConfig::default();
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let dout = Tensor::full(&[b, h, n, d], 1.0);
+        for workers in [1usize, 3, 8] {
+            let mut hbm = Hbm::new();
+            flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut hbm,
+            );
+            let pred =
+                cost::flash2_bwd_batched((b * h) as u64, n as u64, d as u64, blocks, false, false);
+            assert_eq!(
+                hbm.accesses(),
+                pred.hbm_elems,
+                "b={b} h={h} n={n} d={d} blocks=({br},{bc}) workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn flash2_batched_causal_analytic_matches_instrumented() {
+    // Causal tile-skip accounting survives batching (fwd and bwd).
+    let (b, h, n, d) = (2usize, 2usize, 128usize, 8usize);
+    let (q, k, v) = qkv4(b, h, n, d, 23);
+    let blocks = Blocks::explicit(16, 16);
+    let cfg = AttnConfig::causal();
+    let mut h_fwd = Hbm::new();
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 4, &mut h_fwd);
+    assert_eq!(
+        h_fwd.accesses(),
+        cost::flash2_fwd_batched(4, n as u64, d as u64, blocks, true, false).hbm_elems
+    );
+    let dout = Tensor::full(&[b, h, n, d], 1.0);
+    let mut h_bwd = Hbm::new();
+    flash2_backward_batched(&q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 4, &mut h_bwd);
+    assert_eq!(
+        h_bwd.accesses(),
+        cost::flash2_bwd_batched(4, n as u64, d as u64, blocks, true, false).hbm_elems
+    );
 }
 
 #[test]

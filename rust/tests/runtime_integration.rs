@@ -126,11 +126,16 @@ fn init_is_deterministic_per_seed() {
 fn lm_training_reduces_loss() {
     let Some(mut rt) = runtime() else { return };
     let corpus = Corpus::builtin(50_000, 3);
-    let cfg = TrainConfig { model: "gpt_flash".into(), steps: 8, eval_every: 0, ..Default::default() };
+    let cfg =
+        TrainConfig { model: "gpt_flash".into(), steps: 8, eval_every: 0, ..Default::default() };
     let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
     let (first, last) = tr.train(&mut rt, &corpus).unwrap();
     assert!(last < first, "loss did not fall: {first} -> {last}");
-    assert!(first > 4.0 && first < 7.0, "initial loss should be near ln(256)={:.2}: {first}", (256f64).ln());
+    assert!(
+        first > 4.0 && first < 7.0,
+        "initial loss should be near ln(256)={:.2}: {first}",
+        (256f64).ln()
+    );
 }
 
 #[test]
@@ -139,7 +144,13 @@ fn flash_and_reference_models_train_identically() {
     let corpus = Corpus::builtin(50_000, 4);
     let mut curves = Vec::new();
     for model in ["gpt_flash", "gpt_ref"] {
-        let cfg = TrainConfig { model: model.into(), steps: 5, eval_every: 0, seed: 11, ..Default::default() };
+        let cfg = TrainConfig {
+            model: model.into(),
+            steps: 5,
+            eval_every: 0,
+            seed: 11,
+            ..Default::default()
+        };
         let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
         tr.train(&mut rt, &corpus).unwrap();
         curves.push(tr.metrics.points.iter().map(|p| p.loss).collect::<Vec<_>>());
@@ -153,7 +164,8 @@ fn flash_and_reference_models_train_identically() {
 fn cls_training_step_runs_and_is_finite() {
     let Some(mut rt) = runtime() else { return };
     let ds = ListOps::default();
-    let cfg = TrainConfig { model: "cls_flash".into(), steps: 2, eval_every: 0, ..Default::default() };
+    let cfg =
+        TrainConfig { model: "cls_flash".into(), steps: 2, eval_every: 0, ..Default::default() };
     let mut tr = ClsTrainer::new(&mut rt, cfg).unwrap();
     let mut rng = SplitMix64::new(5);
     let batch = ds.batch(tr.batch, tr.n_ctx, &mut rng);
@@ -166,7 +178,8 @@ fn cls_training_step_runs_and_is_finite() {
 fn checkpoint_roundtrip() {
     let Some(mut rt) = runtime() else { return };
     let corpus = Corpus::builtin(50_000, 6);
-    let cfg = TrainConfig { model: "gpt_flash".into(), steps: 3, eval_every: 0, ..Default::default() };
+    let cfg =
+        TrainConfig { model: "gpt_flash".into(), steps: 3, eval_every: 0, ..Default::default() };
     let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
     tr.train(&mut rt, &corpus).unwrap();
     let eval_batch = corpus.eval_batch(tr.batch, tr.n_ctx);
@@ -174,7 +187,13 @@ fn checkpoint_roundtrip() {
     let path = std::env::temp_dir().join("flashattn_ckpt_test.bin");
     tr.save(&path).unwrap();
 
-    let cfg2 = TrainConfig { model: "gpt_flash".into(), steps: 0, eval_every: 0, seed: 99, ..Default::default() };
+    let cfg2 = TrainConfig {
+        model: "gpt_flash".into(),
+        steps: 0,
+        eval_every: 0,
+        seed: 99,
+        ..Default::default()
+    };
     let mut tr2 = LmTrainer::new(&mut rt, cfg2).unwrap();
     tr2.load(&path).unwrap();
     let loss_after = tr2.eval_loss(&mut rt, &eval_batch).unwrap();
