@@ -12,6 +12,10 @@
 //!    (attn::batched, fwd AND bwd): one pool over every slice·block work
 //!    item vs one pool spin-up per slice, same worker budget — rows land
 //!    in BENCH_attn.json under "batched";
+//!  * sharded sequence-parallel driver vs the single-device pair
+//!    (attn::distributed ring schedule, fwd AND bwd, bitwise-identical
+//!    arithmetic): rows land in BENCH_attn.json under "sharded" and the
+//!    gate bounds the scheduling overhead;
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
@@ -28,6 +32,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
+use flashattn::attn::distributed::{flash_backward_sharded, flash_forward_sharded};
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
 use flashattn::attn::standard::standard_forward;
@@ -264,16 +269,99 @@ fn batched_head_to_head(smoke: bool) -> Vec<String> {
     json_rows
 }
 
-/// Assemble BENCH_attn.json (head-to-head + batched rows) at the repo
-/// root regardless of the cwd cargo bench picked.
-fn write_bench_json(smoke: bool, results: &[String], batched: &[String]) {
+/// Sharded sequence-parallel driver vs the single-device fast pair on
+/// the same worker budget (fwd and bwd). The ring schedule performs the
+/// single-device kernel's arithmetic bit for bit (asserted in
+/// attn::distributed tests), so any time it loses is scheduling
+/// overhead — the JSON rows feed python/check_bench.py, which fails the
+/// build if sharding regresses past the allowed overhead bound.
+fn sharded_head_to_head(smoke: bool) -> Vec<String> {
+    let (d, workers) = (D, WORKERS);
+    let shards = 4usize;
+    let mut t = Table::new(
+        "sharded driver vs single device (per [n,64] slice, mean ns/iter)",
+        &["n", "single fwd (ms)", "sharded fwd (ms)", "single bwd (ms)", "sharded bwd (ms)"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let sizes: &[usize] = if smoke { &[128, 256] } else { &[512, 1024, 4096] };
+    for &n in sizes {
+        let mut rng = SplitMix64::new(3);
+        let q = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::from_sram(48 * 1024, d, n);
+        let bwd_blocks = Blocks::for_backward(48 * 1024, d);
+        let iters = if smoke {
+            5
+        } else if n >= 4096 {
+            2
+        } else {
+            5
+        };
+        let t_single_fwd = mean_time(iters, || {
+            std::hint::black_box(flash2_forward(
+                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+            ));
+        });
+        let t_sharded_fwd = mean_time(iters, || {
+            std::hint::black_box(flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers));
+        });
+        // Backward: both sides consume the same forward outputs.
+        let fwd = flash2_forward(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let bwd_iters = if smoke {
+            5
+        } else if n >= 4096 {
+            1
+        } else {
+            3
+        };
+        let t_single_bwd = mean_time(bwd_iters, || {
+            std::hint::black_box(flash2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, workers,
+                &mut Hbm::new(),
+            ));
+        });
+        let t_sharded_bwd = mean_time(bwd_iters, || {
+            std::hint::black_box(flash_backward_sharded(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, shards, workers,
+            ));
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", t_single_fwd * 1e3),
+            format!("{:.2}", t_sharded_fwd * 1e3),
+            format!("{:.2}", t_single_bwd * 1e3),
+            format!("{:.2}", t_sharded_bwd * 1e3),
+        ]);
+        json_rows.push(format!(
+            "    {{\"n\": {n}, \"shards\": {shards}, \"single_fwd_ns\": {:.0}, \
+             \"sharded_fwd_ns\": {:.0}, \"fwd_overhead\": {:.3}, \"single_bwd_ns\": {:.0}, \
+             \"sharded_bwd_ns\": {:.0}, \"bwd_overhead\": {:.3}}}",
+            t_single_fwd * 1e9,
+            t_sharded_fwd * 1e9,
+            t_sharded_fwd / t_single_fwd,
+            t_single_bwd * 1e9,
+            t_sharded_bwd * 1e9,
+            t_sharded_bwd / t_single_bwd,
+        ));
+    }
+    t.print();
+    json_rows
+}
+
+/// Assemble BENCH_attn.json (head-to-head + batched + sharded rows) at
+/// the repo root regardless of the cwd cargo bench picked.
+fn write_bench_json(smoke: bool, results: &[String], batched: &[String], sharded: &[String]) {
     let (d, workers) = (D, WORKERS);
     let json = format!(
         "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
          \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \
-         \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ]\n}}\n",
+         \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ],\n  \"sharded\": [\n{}\n  ]\n}}\n",
         results.join(",\n"),
-        batched.join(",\n")
+        batched.join(",\n"),
+        sharded.join(",\n")
     );
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_attn.json");
     match std::fs::write(&out, &json) {
@@ -355,6 +443,7 @@ fn main() {
     }
     let results = fast_kernel_head_to_head(smoke);
     let batched = batched_head_to_head(smoke);
-    write_bench_json(smoke, &results, &batched);
+    let sharded = sharded_head_to_head(smoke);
+    write_bench_json(smoke, &results, &batched, &sharded);
     artifacts();
 }

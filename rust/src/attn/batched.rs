@@ -17,8 +17,9 @@
 //!   through these.
 //! * [`flash2_forward_many`] / [`flash2_backward_many`] — the
 //!   shape-heterogeneous core (each slice carries its own q/k/v and
-//!   [`AttnConfig`]), which also schedules the sequence-parallel sharded
-//!   driver's per-shard work (`attn::distributed::flash_forward_sharded`).
+//!   [`AttnConfig`], including a per-shard `kv_offset`), which also
+//!   schedules the sequence-parallel tree schedule's per-shard partials
+//!   (`attn::distributed::shard_partials`).
 //!
 //! Two guarantees, both asserted by the tests below:
 //!
@@ -49,8 +50,9 @@ use crate::tensor::{dot4, Tensor};
 
 /// One independent forward slice for the many-slice scheduler: flat
 /// row-major q: [n, d] and k, v: [n_k, d], plus the slice's own config
-/// (the sharded driver remaps `kv_len` per shard; the batched entry
-/// points advance `bh_index` per slice).
+/// (the sharded driver sets `kv_offset` per shard so every decision is
+/// made in global key coordinates; the batched entry points advance
+/// `bh_index` per slice).
 pub struct AttnSlice<'a> {
     pub q: &'a [f32],
     pub k: &'a [f32],
@@ -115,7 +117,7 @@ pub struct BatchedFlash2Output {
 /// the result independent of the claim order and worker count. Per-item
 /// HBM counters merge associatively into `hbm`, so traffic totals are
 /// partition-independent too.
-fn run_pool<T, F>(items: Vec<T>, workers: usize, hbm: &mut Hbm, work: F)
+pub(crate) fn run_pool<T, F>(items: Vec<T>, workers: usize, hbm: &mut Hbm, work: F)
 where
     T: Send,
     F: Fn(T) -> Hbm + Sync,
@@ -147,7 +149,7 @@ where
 
 /// Split `data` into disjoint mutable windows of the given `sizes`
 /// (consumed front to back; any tail past the last size is dropped).
-fn split_windows<'a>(
+pub(crate) fn split_windows<'a>(
     mut data: &'a mut [f32],
     sizes: impl Iterator<Item = usize>,
 ) -> Vec<&'a mut [f32]> {
@@ -161,7 +163,7 @@ fn split_windows<'a>(
 }
 
 /// Rows covered by row/column block `b` of size `bsz` over `total` rows.
-fn block_rows(b: usize, bsz: usize, total: usize) -> usize {
+pub(crate) fn block_rows(b: usize, bsz: usize, total: usize) -> usize {
     ((b + 1) * bsz).min(total) - b * bsz
 }
 
@@ -220,9 +222,9 @@ pub fn flash2_forward_many(
     run_pool(items, workers, hbm, |it| {
         let sl = &slices[it.s];
         let tau = sl.cfg.tau_for(sl.d);
-        let kv_len = sl.cfg.kv_len.unwrap_or(sl.n_k).min(sl.n_k);
+        let kv_limit = sl.cfg.kv_limit(sl.n_k);
         row_block_sweep(
-            sl.q, sl.k, sl.v, sl.n, sl.n_k, sl.d, &sl.cfg, blocks, tau, kv_len, it.rb,
+            sl.q, sl.k, sl.v, sl.n, sl.n_k, sl.d, &sl.cfg, blocks, tau, kv_limit, it.rb,
             it.rb + 1, it.o_win, it.lse_win,
         )
     });
@@ -322,10 +324,10 @@ pub fn flash2_backward_many(
     run_pool(dq_items, workers, hbm, |it| {
         let sl = &slices[it.s];
         let tau = sl.cfg.tau_for(sl.d);
-        let kv_len = sl.cfg.kv_len.unwrap_or(sl.n_k).min(sl.n_k);
+        let kv_limit = sl.cfg.kv_limit(sl.n_k);
         dq_row_sweep(
             sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
-            blocks, tau, kv_len, it.rb, it.rb + 1, it.dq_win,
+            blocks, tau, kv_limit, it.rb, it.rb + 1, it.dq_win,
         )
     });
 
@@ -333,10 +335,10 @@ pub fn flash2_backward_many(
     run_pool(dkv_items, workers, hbm, |it| {
         let sl = &slices[it.s];
         let tau = sl.cfg.tau_for(sl.d);
-        let kv_len = sl.cfg.kv_len.unwrap_or(sl.n_k).min(sl.n_k);
+        let kv_limit = sl.cfg.kv_limit(sl.n_k);
         dkv_col_sweep(
             sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
-            blocks, tau, kv_len, it.cb, it.cb + 1, it.dk_win, it.dv_win,
+            blocks, tau, kv_limit, it.cb, it.cb + 1, it.dk_win, it.dv_win,
         )
     });
 

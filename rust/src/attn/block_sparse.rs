@@ -18,8 +18,14 @@ pub fn block_sparse_forward(
     hbm: &mut Hbm,
 ) -> AttnOutput {
     let (n, d) = (q.rows(), q.cols());
+    // The block-sparse mirror is single-device: K/V are square with Q and
+    // the sparsity pattern M is indexed in local tile coordinates, so a
+    // key shard cannot be expressed here. Reject the sharded config
+    // loudly instead of silently placing M's blocks on the wrong global
+    // columns; sequence-parallel callers shard the dense kernels.
+    assert_eq!(cfg.kv_offset, 0, "block_sparse_forward: key shards are not supported");
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n);
+    let kv_limit = cfg.kv_limit(n);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = n.div_ceil(b_r);
     let t_c = n.div_ceil(b_c);
@@ -59,12 +65,13 @@ pub fn block_sparse_forward(
             let bc = c1 - c0;
             let mut s = qi.matmul_bt(&kj).scale(tau);
             // Causal fast path: tiles that provably contain no masked entry
-            // skip the per-element pass (same rule as the flash kernels).
-            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+            // skip the per-element pass (same rule as the flash kernels;
+            // local == global here, kv_offset is asserted 0 above).
+            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_limit) {
                 for (rr, row) in (r0..r1).enumerate() {
                     for (cc, col) in (c0..c1).enumerate() {
                         let x = s.data[rr * bc + cc];
-                        s.data[rr * bc + cc] = masked_score(x, row, col, cfg.causal, kv_len);
+                        s.data[rr * bc + cc] = masked_score(x, row, col, cfg.causal, kv_limit);
                     }
                 }
             }

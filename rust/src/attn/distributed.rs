@@ -1,42 +1,107 @@
 //! Multi-device FlashAttention (paper §5 "Multi-GPU IO-Aware Methods" and
-//! Appendix D.1), implemented as a real parallel algorithm:
+//! Appendix D.1, with FlashAttention-2's sequence-parallel work
+//! partitioning): the key sequence is sharded into contiguous,
+//! tile-aligned ranges, and **every shard kernel runs in global key
+//! coordinates** ([`AttnConfig::kv_offset`]) — the causal mask, the key
+//! padding and the counter-based dropout stream all see
+//! `kv_offset + local_col`, so a shard makes exactly the decisions the
+//! unsharded kernel makes for the same attention entries. That
+//! coordinate plumbing is what lets this path run causal + dropout
+//! configurations (the two asserts that used to reject them are gone).
 //!
-//! The K/V sequence is sharded across W workers; each worker runs the
-//! ordinary single-device kernel (Algorithm 1) over its shard, producing a
-//! *partial* (O_w, l_w, m_w). Partials combine with exactly the softmax
-//! decomposition of Section 3.1:
+//! Two schedules over the same shards:
 //!
-//! ```text
-//! m = max(m_a, m_b)
-//! l = e^{m_a - m} l_a + e^{m_b - m} l_b
-//! O = ( e^{m_a - m} l_a O_a + e^{m_b - m} l_b O_b ) / l
-//! ```
+//! * **Ring schedule** ([`flash_forward_sharded`] /
+//!   [`flash_backward_sharded`]) — the production path. Each Q row
+//!   block's on-chip softmax (or dQ) state stays resident on the device
+//!   owning those rows while the K/V shards visit in global order; the
+//!   per-row arithmetic is therefore the *single-device kernel's op
+//!   sequence*, restarted at shard boundaries, and the output is
+//!   **bitwise identical** to `attn::flash2` for any shard count and
+//!   any worker count (asserted over the causal × dropout × kv_len
+//!   grid below). dK/dV needs no state threading at all: a shard owns
+//!   its key rows, so its column blocks dispatch independently.
+//! * **Tree schedule** ([`shard_partials`] + [`merge_partials`]) — the
+//!   paper's §5 softmax decomposition. Every live shard computes a full
+//!   partial (O_w, l_w, m_w) through the batched scheduler
+//!   (`attn::batched::flash2_forward_many`), and partials combine with
+//!   the Section 3.1 identity:
 //!
-//! which is associative — workers can reduce in any tree order. The merge
-//! moves only O(N·d) per worker across the interconnect (no N² traffic),
-//! giving the extra hierarchy level the paper sketches: HBM↔SRAM within a
-//! device, HBM↔HBM (NVLink) between devices.
+//!   ```text
+//!   m = max(m_a, m_b)
+//!   l = e^{m_a - m} l_a + e^{m_b - m} l_b
+//!   O = ( e^{m_a - m} l_a O_a + e^{m_b - m} l_b O_b ) / l
+//!   ```
 //!
-//! `flash_forward_sharded` runs the shards on OS threads (std::thread::scope)
-//! as the laptop-scale stand-in for the GPUs; `multi_gpu_cost` extends the
-//! IO model with the interconnect term.
+//!   which is associative — partials can reduce in any tree order,
+//!   moving only O(N·d) per device across the interconnect. The merge
+//!   renormalises, so this schedule is exact to fp rounding (not
+//!   bitwise); use it when the interconnect favours an all-reduce over
+//!   a ring.
 //!
-//! Per the two-kernel policy (attn module docs) each shard runs the *fast*
-//! Q-outer kernel over its key range — and per the batched-entry-point
-//! policy the shards are not spawned one thread each: they are handed to
-//! the batched scheduler (`attn::batched::flash2_forward_many`), which
-//! flattens every shard × row-block work item into a single worker pool.
-//! Skewed shards (the dead-shard skip below, ragged tails) therefore never
-//! strand threads, and per-shard outputs stay bitwise identical to a
-//! per-shard kernel call. The fast kernel returns a logsumexp statistic;
-//! `(l, m) = (1, L)` is an exact decomposition (l·eᵐ = e^L), so the
-//! softmax merge below is unchanged.
+//! **Dead shards never become work items.** A shard wholly beyond the
+//! valid key prefix (`lo ≥ kv_len`) or wholly above the causal diagonal
+//! for every query row (`lo ≥ n_q`) contributes nothing; both schedules
+//! drop it up front, and `multi_gpu_cost` models the saved traffic (the
+//! causal-skip term: per-device HBM counts only tiles at or below the
+//! diagonal in global coordinates, and dead shards ship no partial).
+//!
+//! Threads (`std::thread::scope` via `attn::batched::run_pool`) are the
+//! laptop-scale stand-in for the devices.
 
-use super::batched::{flash2_forward_many, AttnSlice};
+use super::batched::{block_rows, flash2_forward_many, run_pool, split_windows, AttnSlice};
 use super::flash::Blocks;
-use super::{AttnConfig, AttnOutput};
+use super::flash2::{dkv_col_sweep, stream_kv, stream_kv_dq, write_epilogue, RowBlockState};
+use super::{AttnConfig, AttnGrads, AttnOutput, AttnStats};
 use crate::sim::hbm::Hbm;
-use crate::tensor::Tensor;
+use crate::tensor::{dot4, Tensor};
+
+/// One key shard: global key rows [lo, hi). Shard boundaries are
+/// aligned to whole column tiles (`Blocks::b_c`), so a shard's tiles
+/// are exactly the single-device kernel's tiles for those columns —
+/// the alignment that makes the ring schedule bitwise-exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// Split `n_k` keys into at most `shards` contiguous tile-aligned
+/// ranges (fewer when there are fewer column tiles than shards).
+pub fn shard_ranges(n_k: usize, b_c: usize, shards: usize) -> Vec<Shard> {
+    let t_c = n_k.div_ceil(b_c);
+    if t_c == 0 {
+        return Vec::new();
+    }
+    let s = shards.max(1).min(t_c);
+    let per = t_c.div_ceil(s);
+    let mut out = Vec::new();
+    let mut b = 0usize;
+    while b < t_c {
+        let b_hi = (b + per).min(t_c);
+        out.push(Shard { lo: b * b_c, hi: (b_hi * b_c).min(n_k) });
+        b = b_hi;
+    }
+    out
+}
+
+/// True iff the shard can contribute to no query row: wholly beyond the
+/// valid key prefix, or (causal) wholly above the diagonal for every
+/// row. Generalises the old beyond-`kv_len` skip — such shards never
+/// become work items on either schedule.
+pub fn shard_is_dead(sh: Shard, n_q: usize, cfg: &AttnConfig) -> bool {
+    let glo = cfg.kv_offset + sh.lo;
+    cfg.kv_len.is_some_and(|kl| glo >= kl) || (cfg.causal && glo >= n_q)
+}
+
+/// The defined all-masked result: zero output, zero mass, m = -inf.
+fn all_masked_output(n_q: usize, d: usize) -> AttnOutput {
+    AttnOutput {
+        o: Tensor::zeros(&[n_q, d]),
+        l: vec![0.0; n_q],
+        m: vec![f32::NEG_INFINITY; n_q],
+    }
+}
 
 /// Merge two attention partials over disjoint key sets (associative).
 ///
@@ -47,6 +112,14 @@ use crate::tensor::Tensor;
 /// be NaN, so that case is handled explicitly — the merged row keeps the
 /// defined all-masked semantics (zero output, zero mass, `m = -inf`),
 /// which composes associatively with any later live partial.
+///
+/// The same zero-mass branch catches **underflowed** mass: when both
+/// sides' weights `e^{m - m_new} · l` land below the smallest normal
+/// f32 (denormal or zero `l` paired with a very negative max), the old
+/// `1 / l.max(1e-37)` clamp scaled junk by ~1e37; now any total below
+/// `f32::MIN_POSITIVE` routes through the explicit all-masked path,
+/// which stays associative with live partials (their weights dominate
+/// identically in either grouping).
 pub fn merge_partials(a: &AttnOutput, b: &AttnOutput) -> AttnOutput {
     let n = a.l.len();
     let d = a.o.cols();
@@ -65,7 +138,13 @@ pub fn merge_partials(a: &AttnOutput, b: &AttnOutput) -> AttnOutput {
         let wa = (a.m[r] - m_new).exp() * a.l[r];
         let wb = (b.m[r] - m_new).exp() * b.l[r];
         let l_new = wa + wb;
-        let inv = 1.0 / l_new.max(1e-37);
+        if l_new < f32::MIN_POSITIVE {
+            // Zero or subnormal total mass: the defined zero-mass row.
+            l[r] = 0.0;
+            m[r] = f32::NEG_INFINITY;
+            continue;
+        }
+        let inv = 1.0 / l_new;
         let (ra, rb) = (a.o.row(r), b.o.row(r));
         let ro = o.row_mut(r);
         for c in 0..d {
@@ -77,83 +156,327 @@ pub fn merge_partials(a: &AttnOutput, b: &AttnOutput) -> AttnOutput {
     AttnOutput { o, l, m }
 }
 
-/// Sequence-parallel flash forward: shard K/V rows over `workers` threads,
-/// each running Algorithm 1 on its shard, then tree-merge the partials.
-/// Exact for non-causal attention (each shard sees a contiguous key range;
-/// causal masking needs per-shard column offsets, handled via kv offsets).
+/// Sequence-parallel fast forward, ring schedule: K/V is sharded into
+/// `shards` tile-aligned ranges; each Q row block's on-chip state stays
+/// resident while the live shards stream through it in global order
+/// (`std::thread::scope` workers drain the row-block work items). Every
+/// shard sweep runs with that shard's global `kv_offset`, so causal,
+/// padding and dropout decisions match the single-device kernel
+/// entry-for-entry — the output (O and logsumexp, returned in the
+/// `(l, m) = (1, L)` decomposition) is **bitwise identical** to
+/// [`super::flash2::flash2_forward`] for any shard count and worker
+/// count.
 pub fn flash_forward_sharded(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     cfg: &AttnConfig,
     blocks: Blocks,
+    shards: usize,
     workers: usize,
 ) -> AttnOutput {
-    assert!(cfg.dropout_p == 0.0, "sharded path: dropout handled per-device in future work");
-    assert!(!cfg.causal, "sharded path is non-causal (shards are key ranges)");
-    let n = k.rows();
-    let kv_len = cfg.kv_len.unwrap_or(n).min(n);
-    if kv_len == 0 {
-        // Every key masked (or none exist): the defined all-masked result —
-        // zero output, zero mass, m = -inf — without spawning any worker.
-        let nq = q.rows();
-        return AttnOutput {
-            o: Tensor::zeros(&[nq, q.cols()]),
-            l: vec![0.0; nq],
-            m: vec![f32::NEG_INFINITY; nq],
-        };
+    let (n_q, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    assert_eq!(k.cols(), d, "flash_forward_sharded: K feature dim mismatch");
+    assert_eq!((v.rows(), v.cols()), (n_k, d), "flash_forward_sharded: V shape mismatch");
+    let kv_limit = cfg.kv_limit(n_k);
+    if n_k == 0 || kv_limit <= cfg.kv_offset {
+        // Every key masked (or none exist): the defined all-masked result
+        // without spawning any worker.
+        return all_masked_output(n_q, d);
     }
-    let w = workers.max(1).min(n);
-    let shard = n.div_ceil(w);
-    let d = k.cols();
+    let live: Vec<Shard> = shard_ranges(n_k, blocks.b_c, shards)
+        .into_iter()
+        .filter(|&sh| !shard_is_dead(sh, n_q, cfg))
+        .collect();
+    if live.is_empty() {
+        return all_masked_output(n_q, d);
+    }
+    let tau = cfg.tau_for(d);
+    let b_r = blocks.b_r;
+    let t_r = n_q.div_ceil(b_r);
+    let mut o = Tensor::zeros(&[n_q, d]);
+    let mut lse = vec![0.0f32; n_q];
 
-    // One descriptor per live shard; empty shards and *dead* shards — key
-    // ranges entirely beyond the valid prefix, whose remapped kv_len would
-    // be 0 — never become work items. (They used to spawn workers whose
-    // fully-masked partials only merged away via the 1/l clamp.)
-    let mut shards: Vec<AttnSlice<'_>> = Vec::new();
-    for wi in 0..w {
-        let lo = wi * shard;
-        let hi = ((wi + 1) * shard).min(n);
-        if lo >= hi || lo >= kv_len {
+    struct FwdItem<'a> {
+        rb: usize,
+        o_win: &'a mut [f32],
+        lse_win: &'a mut [f32],
+    }
+    let o_wins = split_windows(&mut o.data, (0..t_r).map(|rb| block_rows(rb, b_r, n_q) * d));
+    let lse_wins = split_windows(&mut lse, (0..t_r).map(|rb| block_rows(rb, b_r, n_q)));
+    let items: Vec<FwdItem<'_>> = o_wins
+        .into_iter()
+        .zip(lse_wins)
+        .enumerate()
+        .map(|(rb, (o_win, lse_win))| FwdItem { rb, o_win, lse_win })
+        .collect();
+
+    let (qd, kd, vd) = (q.data.as_slice(), k.data.as_slice(), v.data.as_slice());
+    // Each simulated device counts its own traffic in the analytic model
+    // (`multi_gpu_cost`); the merged counter here is discarded.
+    run_pool(items, workers, &mut Hbm::new(), |it| {
+        let mut hbm = Hbm::new();
+        let r0 = it.rb * b_r;
+        let r1 = ((it.rb + 1) * b_r).min(n_q);
+        let br = r1 - r0;
+        hbm.load(br * d); // Q_i loaded once, before the shards visit
+        let mut state = RowBlockState::new(blocks, d); // fresh = already reset
+        for sh in &live {
+            // Shards wholly above this row block's diagonal would have
+            // every tile skipped — don't visit them at all.
+            if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
+                continue;
+            }
+            let cfg_s = cfg.for_shard(sh.lo);
+            stream_kv(
+                &mut state,
+                &qd[r0 * d..r1 * d],
+                &kd[sh.lo * d..sh.hi * d],
+                &vd[sh.lo * d..sh.hi * d],
+                sh.hi - sh.lo,
+                n_q,
+                d,
+                r0,
+                r1,
+                &cfg_s,
+                blocks,
+                tau,
+                kv_limit,
+                &mut hbm,
+            );
+        }
+        write_epilogue(&state, br, d, it.o_win, it.lse_win, &mut hbm);
+        hbm
+    });
+
+    // (l, m) = (1, L) is an exact decomposition (l·eᵐ = e^L); zero-mass
+    // rows keep the explicit (0, -inf) convention.
+    let l = lse.iter().map(|&x| if x == f32::NEG_INFINITY { 0.0 } else { 1.0 }).collect();
+    AttnOutput { o, l, m: lse }
+}
+
+/// Sequence-parallel fast backward, ring schedule — the gradient
+/// counterpart of [`flash_forward_sharded`], bitwise identical to
+/// [`super::flash2::flash2_backward`] for any shard/worker count:
+///
+/// * **dQ** threads each row block's on-chip accumulator through the
+///   live shards in global order (the accumulation order per element is
+///   the global column order either way);
+/// * **dK/dV** needs no threading: a shard owns its key rows, so every
+///   (shard, column block) pair is an independent work item writing its
+///   own dK/dV window, with the full Q/dO stream and global-coordinate
+///   masking.
+pub fn flash_backward_sharded(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: AttnStats<'_>,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+) -> AttnGrads {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    assert_eq!(k.cols(), d, "flash_backward_sharded: K feature dim mismatch");
+    assert_eq!((v.rows(), v.cols()), (n_k, d), "flash_backward_sharded: V shape mismatch");
+    assert_eq!((o.rows(), o.cols()), (n, d), "flash_backward_sharded: O shape mismatch");
+    assert_eq!((dout.rows(), dout.cols()), (n, d), "flash_backward_sharded: dO shape mismatch");
+    assert_eq!(stats.len(), n, "flash_backward_sharded: stats length mismatch");
+    let tau = cfg.tau_for(d);
+    let kv_limit = cfg.kv_limit(n_k);
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_r = n.div_ceil(b_r);
+    let mut dq = Tensor::zeros(&[n, d]);
+    let mut dk = Tensor::zeros(&[n_k, d]);
+    let mut dv = Tensor::zeros(&[n_k, d]);
+    if t_r == 0 || n_k == 0 {
+        return AttnGrads { dq, dk, dv };
+    }
+    // D and the logsumexp are global per-row quantities, computed once —
+    // identical to the single-device kernel's phase 0.
+    let d_vec: Vec<f32> = (0..n).map(|r| dot4(dout.row(r), o.row(r))).collect();
+    let lse = stats.to_lse_vec();
+    let ranges = shard_ranges(n_k, b_c, shards);
+    let live: Vec<Shard> =
+        ranges.iter().copied().filter(|&sh| !shard_is_dead(sh, n, cfg)).collect();
+
+    let (qd, kd, vd, dod) =
+        (q.data.as_slice(), k.data.as_slice(), v.data.as_slice(), dout.data.as_slice());
+    let (lse_ref, d_ref) = (lse.as_slice(), d_vec.as_slice());
+
+    // Phase 1: dQ — one work item per Q row block, shards visiting in
+    // global order with the accumulator resident.
+    struct DqItem<'a> {
+        rb: usize,
+        dq_win: &'a mut [f32],
+    }
+    let dq_items: Vec<DqItem<'_>> =
+        split_windows(&mut dq.data, (0..t_r).map(|rb| block_rows(rb, b_r, n) * d))
+            .into_iter()
+            .enumerate()
+            .map(|(rb, dq_win)| DqItem { rb, dq_win })
+            .collect();
+    run_pool(dq_items, workers, &mut Hbm::new(), |it| {
+        let mut hbm = Hbm::new();
+        let r0 = it.rb * b_r;
+        let r1 = ((it.rb + 1) * b_r).min(n);
+        let br = r1 - r0;
+        hbm.load(2 * br * d + 2 * br); // Q_i, dO_i, D_i, L_i once
+        let mut s_buf = vec![0.0f32; b_r * b_c];
+        let mut dp_buf = vec![0.0f32; b_r * b_c];
+        for sh in &live {
+            if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
+                continue;
+            }
+            let cfg_s = cfg.for_shard(sh.lo);
+            stream_kv_dq(
+                it.dq_win,
+                &qd[r0 * d..r1 * d],
+                &dod[r0 * d..r1 * d],
+                &kd[sh.lo * d..sh.hi * d],
+                &vd[sh.lo * d..sh.hi * d],
+                sh.hi - sh.lo,
+                n,
+                d,
+                r0,
+                r1,
+                lse_ref,
+                d_ref,
+                &cfg_s,
+                blocks,
+                tau,
+                kv_limit,
+                &mut s_buf,
+                &mut dp_buf,
+                &mut hbm,
+            );
+        }
+        hbm.store(br * d); // dQ_i leaves the device exactly once
+        hbm
+    });
+
+    // Phase 2: dK/dV — every (live shard, column block) pair is an
+    // independent work item; dead shards keep their zero windows, which
+    // is exactly what the single-device kernel computes for them.
+    struct DkvItem<'a> {
+        shard: Shard,
+        cb: usize,
+        dk_win: &'a mut [f32],
+        dv_win: &'a mut [f32],
+    }
+    let mut sizes: Vec<(Shard, usize, usize)> = Vec::new(); // (shard, local cb, elems)
+    for &sh in &ranges {
+        let t_c_sh = (sh.hi - sh.lo).div_ceil(b_c);
+        for cb in 0..t_c_sh {
+            let c0 = sh.lo + cb * b_c;
+            let c1 = (sh.lo + (cb + 1) * b_c).min(sh.hi);
+            sizes.push((sh, cb, (c1 - c0) * d));
+        }
+    }
+    let dk_wins = split_windows(&mut dk.data, sizes.iter().map(|&(_, _, sz)| sz));
+    let dv_wins = split_windows(&mut dv.data, sizes.iter().map(|&(_, _, sz)| sz));
+    let mut dkv_items: Vec<DkvItem<'_>> = Vec::new();
+    for ((shard, cb, _), (dk_win, dv_win)) in
+        sizes.iter().copied().zip(dk_wins.into_iter().zip(dv_wins))
+    {
+        if shard_is_dead(shard, n, cfg) {
             continue;
         }
-        shards.push(AttnSlice {
-            q: &q.data[..],
-            k: &k.data[lo * d..hi * d],
-            v: &v.data[lo * d..hi * d],
-            n: q.rows(),
-            n_k: hi - lo,
+        dkv_items.push(DkvItem { shard, cb, dk_win, dv_win });
+    }
+    run_pool(dkv_items, workers, &mut Hbm::new(), |it| {
+        let sh = it.shard;
+        let cfg_s = cfg.for_shard(sh.lo);
+        dkv_col_sweep(
+            qd,
+            &kd[sh.lo * d..sh.hi * d],
+            &vd[sh.lo * d..sh.hi * d],
+            dod,
+            lse_ref,
+            d_ref,
+            n,
+            sh.hi - sh.lo,
             d,
-            cfg: AttnConfig {
-                // Padding mask applies to *global* columns; shards beyond
-                // kv_len contribute nothing via their local mask.
-                kv_len: cfg.kv_len.map(|kl| kl.saturating_sub(lo).min(hi - lo)),
-                ..cfg.clone()
-            },
-        });
-    }
-    // All shard × row-block work items drain through one pool of `workers`
-    // threads. Each simulated device counts its own HBM traffic in the
-    // model (`multi_gpu_cost`); the merged counter here is discarded, as
-    // the per-worker counters were before.
-    let partials = flash2_forward_many(&shards, blocks, workers, &mut Hbm::new());
+            &cfg_s,
+            blocks,
+            tau,
+            kv_limit,
+            it.cb,
+            it.cb + 1,
+            it.dk_win,
+            it.dv_win,
+        )
+    });
 
-    // Tree reduction in shard order (any order is exact — associativity
-    // test below).
-    let mut acc: Option<AttnOutput> = None;
-    for p in partials {
-        let p = p.into_attn_output();
-        acc = Some(match acc {
-            None => p,
-            Some(a) => merge_partials(&a, &p),
-        });
-    }
-    acc.expect("at least one live shard")
+    AttnGrads { dq, dk, dv }
+}
+
+/// Tree schedule, step 1: one softmax partial per live shard, scheduled
+/// through the batched many-slice entry point (all shard × row-block
+/// work items in one pool). Each slice carries `kv_offset = shard.lo`
+/// and the caller's *global* `kv_len` — the per-shard `kv_len` remap
+/// that used to live here was the local-coordinate bug. Dead shards are
+/// dropped up front; the result may therefore hold fewer than `shards`
+/// partials (possibly zero when every key is masked).
+pub fn shard_partials(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+) -> Vec<AttnOutput> {
+    let n_k = k.rows();
+    let d = k.cols();
+    let live: Vec<Shard> = shard_ranges(n_k, blocks.b_c, shards)
+        .into_iter()
+        .filter(|&sh| !shard_is_dead(sh, q.rows(), cfg))
+        .collect();
+    let slices: Vec<AttnSlice<'_>> = live
+        .iter()
+        .map(|sh| AttnSlice {
+            q: &q.data[..],
+            k: &k.data[sh.lo * d..sh.hi * d],
+            v: &v.data[sh.lo * d..sh.hi * d],
+            n: q.rows(),
+            n_k: sh.hi - sh.lo,
+            d,
+            cfg: cfg.for_shard(sh.lo),
+        })
+        .collect();
+    flash2_forward_many(&slices, blocks, workers, &mut Hbm::new())
+        .into_iter()
+        .map(|p| p.into_attn_output())
+        .collect()
+}
+
+/// Tree schedule, step 2: reduce the shard partials with
+/// [`merge_partials`] (here in shard order; any order is exact — the
+/// associativity property tests below). Exact to fp rounding against
+/// the single-device kernel; the ring schedule is the bitwise path.
+pub fn flash_forward_sharded_tree(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+) -> AttnOutput {
+    let partials = shard_partials(q, k, v, cfg, blocks, shards, workers);
+    partials
+        .into_iter()
+        .reduce(|a, b| merge_partials(&a, &b))
+        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()))
 }
 
 /// IO model for W-way sequence-parallel flash (Appendix D.1): per-device
-/// HBM traffic for an N/W key shard plus the O(N·d·W) interconnect merge.
+/// HBM traffic for a key shard plus the O(N·d·W) interconnect merge.
 #[derive(Clone, Copy, Debug)]
 pub struct MultiGpuCost {
     /// Per-device HBM elements (the slowest device bounds the step).
@@ -162,22 +485,45 @@ pub struct MultiGpuCost {
     pub interconnect_elems: u64,
 }
 
-pub fn multi_gpu_cost(n: u64, d: u64, blocks: Blocks, workers: u64) -> MultiGpuCost {
-    let shard = n.div_ceil(workers);
-    // Each device: full Q (all rows attend its shard) vs shard of K/V,
-    // running the fast Q-outer kernel (matching flash_forward_sharded).
-    let per_dev = crate::sim::cost::flash2_fwd_rect(n, shard, d, blocks);
-    // Merge: each device ships (O, l, m) = N(d+2) elements.
-    MultiGpuCost {
-        hbm_per_device: per_dev.hbm_elems,
-        interconnect_elems: workers * n * (d + 2),
+/// W-way cost with the causal-skip and dead-shard traffic terms: each
+/// live shard runs the fast Q-outer kernel over its global column range
+/// (`sim::cost::flash2_fwd_shard` — tiles above the diagonal, judged in
+/// global coordinates, are never loaded), the slowest device bounds
+/// per-device HBM, and only live shards ship their N·(d+2) partial
+/// across the interconnect. Shards wholly beyond `kv_len` contribute
+/// nothing to either term, mirroring the driver's dead-shard skip.
+pub fn multi_gpu_cost(
+    n: u64,
+    d: u64,
+    blocks: Blocks,
+    shards: u64,
+    causal: bool,
+    kv_len: Option<u64>,
+) -> MultiGpuCost {
+    // Model EXACTLY the partition the driver builds: same tile-aligned
+    // ranges, same dead-shard predicate — the cost model cannot drift
+    // from the schedule it claims to mirror.
+    let cfg = AttnConfig { causal, kv_len: kv_len.map(|kl| kl as usize), ..Default::default() };
+    let mut hbm_max = 0u64;
+    let mut live_shards = 0u64;
+    for sh in shard_ranges(n as usize, blocks.b_c, shards as usize) {
+        if shard_is_dead(sh, n as usize, &cfg) {
+            continue; // dead shard: no work item, no partial shipped
+        }
+        live_shards += 1;
+        let dev =
+            crate::sim::cost::flash2_fwd_shard(n, d, blocks, sh.lo as u64, sh.hi as u64, causal);
+        hbm_max = hbm_max.max(dev.hbm_elems);
     }
+    // Merge: each live device ships (O, l, m) = N(d+2) elements.
+    MultiGpuCost { hbm_per_device: hbm_max, interconnect_elems: live_shards * n * (d + 2) }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attn::flash::flash_forward;
+    use crate::attn::flash2::{flash2_backward, flash2_forward};
     use crate::attn::standard::standard_forward;
     use crate::util::prop::{for_each_case, usize_in};
     use crate::util::rng::SplitMix64;
@@ -192,16 +538,210 @@ mod tests {
     }
 
     #[test]
+    fn shard_ranges_tile_aligned_and_clamped() {
+        let ranges = shard_ranges(48, 8, 7); // 6 tiles, 7 shards -> 6 shards
+        assert_eq!(ranges.len(), 6);
+        for (i, sh) in ranges.iter().enumerate() {
+            assert_eq!(sh.lo % 8, 0, "shard {i} not tile-aligned");
+            assert!(sh.lo < sh.hi);
+        }
+        assert_eq!(ranges.first().unwrap().lo, 0);
+        assert_eq!(ranges.last().unwrap().hi, 48);
+        // Ragged tail stays aligned at the starts.
+        let ragged = shard_ranges(20, 8, 2); // 3 tiles -> per=2 -> [0,16) [16,20)
+        assert_eq!(ragged, vec![Shard { lo: 0, hi: 16 }, Shard { lo: 16, hi: 20 }]);
+        assert!(shard_ranges(0, 8, 4).is_empty());
+    }
+
+    #[test]
+    fn dead_shard_predicate_uses_global_coordinates() {
+        let causal = AttnConfig::causal();
+        // Shard starting at or past the last query row is wholly acausal.
+        assert!(shard_is_dead(Shard { lo: 16, hi: 24 }, 16, &causal));
+        assert!(!shard_is_dead(Shard { lo: 8, hi: 16 }, 16, &causal));
+        // Beyond the padded prefix.
+        let padded = AttnConfig { kv_len: Some(10), ..Default::default() };
+        assert!(shard_is_dead(Shard { lo: 16, hi: 24 }, 64, &padded));
+        assert!(!shard_is_dead(Shard { lo: 8, hi: 16 }, 64, &padded));
+        // kv_offset shifts the shard's global position.
+        let shifted = padded.for_shard(8);
+        assert!(shard_is_dead(Shard { lo: 2, hi: 8 }, 64, &shifted));
+    }
+
+    #[test]
+    fn sharded_bitwise_identical_to_single_device() {
+        // The acceptance grid: causal × dropout × kv_len × shard counts
+        // {1, 2, 3, 7} × worker counts — the ring schedule must
+        // reproduce the single-device fast kernel bit for bit.
+        let (n, d) = (48usize, 8usize);
+        let (q, k, v) = qkv(n, d, 21);
+        let blocks = Blocks::explicit(8, 8);
+        for causal in [false, true] {
+            for dropout_p in [0.0f32, 0.2] {
+                for kv_len in [None, Some(33), Some(5)] {
+                    let cfg = AttnConfig {
+                        causal,
+                        dropout_p,
+                        dropout_seed: 7,
+                        kv_len,
+                        ..Default::default()
+                    };
+                    let single = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+                    for shards in [1usize, 2, 3, 7] {
+                        for workers in [1usize, 3, 8] {
+                            let multi =
+                                flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers);
+                            let ctx = format!(
+                                "causal={causal} p={dropout_p} kv_len={kv_len:?} \
+                                 shards={shards} workers={workers}"
+                            );
+                            assert_eq!(multi.o.data, single.o.data, "O not bitwise: {ctx}");
+                            assert_eq!(multi.m, single.lse, "lse not bitwise: {ctx}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_backward_bitwise_identical_to_single_device() {
+        // Same grid through the sharded backward: dQ (state threaded
+        // through shards) and dK/dV (per-shard column blocks) must both
+        // be bitwise equal to flash2_backward.
+        let (n, d) = (40usize, 8usize);
+        let (q, k, v) = qkv(n, d, 22);
+        let mut rng = SplitMix64::new(23);
+        let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let blocks = Blocks::explicit(8, 8);
+        for causal in [false, true] {
+            for dropout_p in [0.0f32, 0.2] {
+                for kv_len in [None, Some(27), Some(6)] {
+                    let cfg = AttnConfig {
+                        causal,
+                        dropout_p,
+                        dropout_seed: 9,
+                        kv_len,
+                        ..Default::default()
+                    };
+                    let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+                    let single = flash2_backward(
+                        &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 1, &mut Hbm::new(),
+                    );
+                    for shards in [1usize, 2, 3, 7] {
+                        for workers in [1usize, 4] {
+                            let multi = flash_backward_sharded(
+                                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards,
+                                workers,
+                            );
+                            let ctx = format!(
+                                "causal={causal} p={dropout_p} kv_len={kv_len:?} \
+                                 shards={shards} workers={workers}"
+                            );
+                            assert_eq!(multi.dq.data, single.dq.data, "dQ not bitwise: {ctx}");
+                            assert_eq!(multi.dk.data, single.dk.data, "dK not bitwise: {ctx}");
+                            assert_eq!(multi.dv.data, single.dv.data, "dV not bitwise: {ctx}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_backward_grads_match_finite_difference() {
+        // FD straight through the sharded pair with causal + padding +
+        // dropout all active (the dropout mask is a deterministic
+        // function of indices, so the loss stays differentiable).
+        let (n, d) = (6usize, 4usize);
+        let (q, k, v) = qkv(n, d, 24);
+        let cfg = AttnConfig {
+            causal: true,
+            kv_len: Some(5),
+            dropout_p: 0.25,
+            dropout_seed: 3,
+            ..Default::default()
+        };
+        let blocks = Blocks::explicit(2, 2);
+        let (shards, workers) = (3usize, 2usize);
+        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers);
+        let dout = Tensor::full(&[n, d], 1.0);
+        let g = flash_backward_sharded(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, workers,
+        );
+        let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
+            flash_forward_sharded(q_, k_, v_, &cfg, blocks, shards, workers)
+                .o
+                .data
+                .iter()
+                .sum()
+        };
+        let eps = 1e-3f32;
+        for (which, (x, gx)) in [(0, (&q, &g.dq)), (1, (&k, &g.dk)), (2, (&v, &g.dv))] {
+            for idx in [0usize, 7, 13, 19, 23] {
+                let mut xp = x.clone();
+                xp.data[idx] += eps;
+                let mut xm = x.clone();
+                xm.data[idx] -= eps;
+                let (fp, fm) = match which {
+                    0 => (f(&xp, &k, &v), f(&xm, &k, &v)),
+                    1 => (f(&q, &xp, &v), f(&q, &xm, &v)),
+                    _ => (f(&q, &k, &xp), f(&q, &k, &xm)),
+                };
+                let fd = (fp - fm) / (2.0 * eps);
+                let an = gx.data[idx];
+                assert!(
+                    (fd - an).abs() < 3e-2 + 0.05 * an.abs(),
+                    "which={which} idx={idx}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tree_schedule_matches_single_device_on_the_grid() {
+        // The §5 merge path now covers causal + dropout via global
+        // coordinates; exact to fp rounding for any shard count.
+        let (n, d) = (48usize, 8usize);
+        let (q, k, v) = qkv(n, d, 25);
+        let blocks = Blocks::explicit(8, 8);
+        for causal in [false, true] {
+            for dropout_p in [0.0f32, 0.2] {
+                for kv_len in [None, Some(29)] {
+                    let cfg = AttnConfig {
+                        causal,
+                        dropout_p,
+                        dropout_seed: 5,
+                        kv_len,
+                        ..Default::default()
+                    };
+                    let single = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+                    for shards in [2usize, 3, 6] {
+                        let tree =
+                            flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, 4);
+                        let diff = single.o.max_abs_diff(&tree.o);
+                        assert!(
+                            diff < 1e-4,
+                            "causal={causal} p={dropout_p} kv_len={kv_len:?} \
+                             shards={shards}: diff {diff}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn sharded_matches_single_device() {
         let (q, k, v) = qkv(64, 16, 0);
         let cfg = AttnConfig::default();
         let blocks = Blocks::explicit(16, 16);
         let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
-        for workers in [1usize, 2, 3, 4, 8] {
-            let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, workers);
+        for shards in [1usize, 2, 3, 4, 8] {
+            let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, shards);
             assert!(
                 single.o.max_abs_diff(&multi.o) < 1e-4,
-                "workers={workers}: diff {}",
+                "shards={shards}: diff {}",
                 single.o.max_abs_diff(&multi.o)
             );
         }
@@ -233,7 +773,7 @@ mod tests {
         let cfg = AttnConfig { kv_len: Some(29), ..Default::default() };
         let blocks = Blocks::explicit(8, 8);
         let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
-        let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 3);
+        let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 3, 3);
         assert!(single.o.max_abs_diff(&multi.o) < 1e-4);
     }
 
@@ -248,15 +788,15 @@ mod tests {
         for kv_len in [5usize, 8, 1] {
             let cfg = AttnConfig { kv_len: Some(kv_len), ..Default::default() };
             let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
-            for workers in [6usize, 8, 48] {
-                let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, workers);
+            for shards in [6usize, 8, 48] {
+                let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 4);
                 assert!(
                     multi.o.data.iter().all(|x| x.is_finite()),
-                    "kv_len={kv_len} workers={workers}: non-finite output"
+                    "kv_len={kv_len} shards={shards}: non-finite output"
                 );
                 assert!(
                     single.o.max_abs_diff(&multi.o) < 1e-4,
-                    "kv_len={kv_len} workers={workers}: diff {}",
+                    "kv_len={kv_len} shards={shards}: diff {}",
                     single.o.max_abs_diff(&multi.o)
                 );
             }
@@ -267,10 +807,14 @@ mod tests {
     fn kv_len_zero_gives_zero_output_no_nan() {
         let (q, k, v) = qkv(16, 4, 9);
         let cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
-        let out = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3);
+        let out = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3, 3);
         assert!(out.o.data.iter().all(|&x| x == 0.0));
         assert!(out.l.iter().all(|&x| x == 0.0));
         assert!(out.m.iter().all(|&x| x == f32::NEG_INFINITY));
+        // Tree schedule: every shard is dead, same defined result.
+        let tree = flash_forward_sharded_tree(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3, 3);
+        assert!(tree.o.data.iter().all(|&x| x == 0.0));
+        assert!(tree.m.iter().all(|&x| x == f32::NEG_INFINITY));
     }
 
     #[test]
@@ -279,7 +823,6 @@ mod tests {
         // NaN-free and keep zero-mass semantics; merging masked with live
         // must reproduce the live partial exactly; and the all-masked
         // identity must be associative with live merges.
-        use crate::attn::flash2::flash2_forward;
         for_each_case("merge_masked", 8, |rng| {
             let n = usize_in(rng, 2, 24);
             let d = *crate::util::prop::choose(rng, &[2usize, 4, 8]);
@@ -311,31 +854,123 @@ mod tests {
     }
 
     #[test]
-    fn property_random_worker_counts() {
+    fn property_merge_zero_mass_on_denormal_weights() {
+        // Satellite bugfix: when both partials' merge weights underflow
+        // to subnormals, the old `1 / l.max(1e-37)` clamp scaled junk by
+        // ~1e37. Such rows must take the defined zero-mass branch and
+        // stay associative with live partials.
+        let (n, d) = (3usize, 4usize);
+        let mk = |l: f32, m: f32, val: f32| AttnOutput {
+            o: Tensor::full(&[n, d], val),
+            l: vec![l; n],
+            m: vec![m; n],
+        };
+        let a = mk(1.0e-38, -200.0, 7.0); // subnormal mass, junk payload
+        let b = mk(1.0e-39, -200.0, -9.0);
+        let ab = merge_partials(&a, &b);
+        assert!(ab.o.data.iter().all(|&x| x == 0.0), "underflowed mass must zero the row");
+        assert!(ab.l.iter().all(|&x| x == 0.0));
+        assert!(ab.m.iter().all(|&x| x == f32::NEG_INFINITY));
+        assert!(ab.o.data.iter().all(|x| x.is_finite()));
+
+        // Associativity with a live partial, both groupings: the
+        // denormal partials' weights vanish against a live max either
+        // way, so all orders agree with the live partial.
+        let live = mk(2.0, 1.0, 0.5);
+        for merged in [
+            merge_partials(&ab, &live),
+            merge_partials(&live, &ab),
+            merge_partials(&a, &merge_partials(&b, &live)),
+            merge_partials(&merge_partials(&live, &a), &b),
+        ] {
+            assert!(merged.o.data.iter().all(|x| x.is_finite()));
+            assert!(live.o.max_abs_diff(&merged.o) < 1e-6);
+            for r in 0..n {
+                assert!((merged.l[r] - live.l[r]).abs() < 1e-6);
+                assert!((merged.m[r] - live.m[r]).abs() < 1e-6);
+            }
+        }
+
+        // Randomised denormal sweep: merges never produce NaN/Inf, the
+        // zero-mass rows keep the (0, -inf) convention, and grouping
+        // does not matter. The l pool is chosen so no subset sum lands
+        // in the cutoff's rounding window (any denormal-only total
+        // stays below f32::MIN_POSITIVE, any total with a live partial
+        // is ≥ 1) — at the exact cutoff boundary associativity cannot
+        // hold for ANY flooring rule, which is why production masses
+        // are ≥ 1 per live row.
+        for_each_case("merge_denormal", 8, |rng| {
+            let pick = |rng: &mut SplitMix64| {
+                let ls = [0.0f32, 1.0e-39, 5.0e-40, 1.0, 2.0];
+                let l = ls[(rng.next_u64() % ls.len() as u64) as usize];
+                let m = if l == 0.0 { f32::NEG_INFINITY } else { -200.0 };
+                mk(l, m, rng.next_f32() * 4.0 - 2.0)
+            };
+            let (x, y, z) = (pick(rng), pick(rng), pick(rng));
+            let lhs = merge_partials(&merge_partials(&x, &y), &z);
+            let rhs = merge_partials(&x, &merge_partials(&y, &z));
+            for t in [&lhs, &rhs] {
+                for r in 0..n {
+                    assert!(t.o.row(r).iter().all(|x| x.is_finite()));
+                    assert!(t.l[r].is_finite());
+                    if t.l[r] == 0.0 {
+                        assert_eq!(t.m[r], f32::NEG_INFINITY);
+                        assert!(t.o.row(r).iter().all(|&x| x == 0.0));
+                    }
+                }
+            }
+            assert!(lhs.o.max_abs_diff(&rhs.o) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn property_random_shard_and_worker_counts() {
         for_each_case("sharded", 8, |rng| {
             let n = usize_in(rng, 8, 48);
             let d = *crate::util::prop::choose(rng, &[4usize, 8]);
+            let shards = usize_in(rng, 1, 6);
             let w = usize_in(rng, 1, 6);
             let q = Tensor::randn(&[n, d], rng, 1.0);
             let k = Tensor::randn(&[n, d], rng, 1.0);
             let v = Tensor::randn(&[n, d], rng, 1.0);
             let cfg = AttnConfig::default();
             let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
-            let multi = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(8, 8), w);
-            assert!(single.o.max_abs_diff(&multi.o) < 1e-4, "n={n} d={d} w={w}");
+            let multi = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(8, 8), shards, w);
+            assert!(single.o.max_abs_diff(&multi.o) < 1e-4, "n={n} d={d} shards={shards} w={w}");
         });
     }
 
     #[test]
     fn interconnect_traffic_linear_not_quadratic() {
         let blocks = Blocks::explicit(64, 256);
-        let c2 = multi_gpu_cost(8192, 64, blocks, 4);
-        let c1 = multi_gpu_cost(4096, 64, blocks, 4);
+        let c2 = multi_gpu_cost(8192, 64, blocks, 4, false, None);
+        let c1 = multi_gpu_cost(4096, 64, blocks, 4, false, None);
         let ratio = c2.interconnect_elems as f64 / c1.interconnect_elems as f64;
         assert!((1.9..2.1).contains(&ratio), "merge traffic must be O(N): {ratio}");
         // Per-device HBM shrinks as workers grow.
-        let w8 = multi_gpu_cost(8192, 64, blocks, 8).hbm_per_device;
-        let w2 = multi_gpu_cost(8192, 64, blocks, 2).hbm_per_device;
+        let w8 = multi_gpu_cost(8192, 64, blocks, 8, false, None).hbm_per_device;
+        let w2 = multi_gpu_cost(8192, 64, blocks, 2, false, None).hbm_per_device;
         assert!(w8 < w2);
+    }
+
+    #[test]
+    fn multi_gpu_cost_causal_skip_and_dead_shards() {
+        let blocks = Blocks::explicit(64, 64);
+        let (n, d, w) = (4096u64, 64u64, 4u64);
+        // Causal-skip term: every device loads fewer K/V tiles.
+        let full = multi_gpu_cost(n, d, blocks, w, false, None);
+        let caus = multi_gpu_cost(n, d, blocks, w, true, None);
+        assert!(
+            caus.hbm_per_device < full.hbm_per_device,
+            "causal {} !< full {}",
+            caus.hbm_per_device,
+            full.hbm_per_device
+        );
+        assert_eq!(caus.interconnect_elems, full.interconnect_elems);
+        // Dead shards beyond kv_len ship no partial: with the valid
+        // prefix inside the first shard, interconnect is one device's.
+        let padded = multi_gpu_cost(n, d, blocks, w, false, Some(100));
+        assert_eq!(padded.interconnect_elems, n * (d + 2));
+        assert!(padded.hbm_per_device <= full.hbm_per_device);
     }
 }

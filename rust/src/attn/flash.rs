@@ -21,7 +21,10 @@ use crate::tensor::Tensor;
 /// entry: entirely at-or-below the causal diagonal (every col ≤ every row,
 /// i.e. c1 - 1 ≤ r0) and inside the valid key length. Tiles above the
 /// diagonal are skipped outright; this is the complement — fully *live*
-/// tiles skip the per-element `masked_score` pass.
+/// tiles skip the per-element `masked_score` pass. `c1` and `kv_len` are
+/// **global** key coordinates (callers pass `cfg.kv_offset + local_c1`
+/// and `cfg.kv_limit(n_k)`), so shard slices take exactly the fast path
+/// the unsharded kernel takes.
 #[inline]
 pub(crate) fn tile_fully_unmasked(causal: bool, r0: usize, c1: usize, kv_len: usize) -> bool {
     (!causal || c1 <= r0 + 1) && c1 <= kv_len
@@ -87,7 +90,7 @@ pub fn flash_forward(
     let (n, d) = (q.rows(), q.cols());
     let n_k = k.rows();
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+    let kv_limit = cfg.kv_limit(n_k);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = n.div_ceil(b_r);
     let t_c = n_k.div_ceil(b_c);
@@ -112,8 +115,9 @@ pub fn flash_forward(
         for i in 0..t_r {
             let r0 = i * b_r;
             let r1 = ((i + 1) * b_r).min(n);
-            // Causal block skip: whole tile above the diagonal.
-            if cfg.causal && c0 > r1 - 1 {
+            // Causal block skip: whole tile above the diagonal, in
+            // global key coordinates.
+            if cfg.causal && cfg.kv_offset + c0 > r1 - 1 {
                 continue;
             }
             // Line 8: load Q_i, O_i, l_i, m_i.
@@ -122,11 +126,12 @@ pub fn flash_forward(
 
             // Line 9: S_ij = tau Q_i K_j^T (on chip).
             let mut s = qi.matmul_bt(&kj).scale(tau);
-            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+            if !tile_fully_unmasked(cfg.causal, r0, cfg.kv_offset + c1, kv_limit) {
                 for (rr, row) in (r0..r1).enumerate() {
                     for (cc, col) in (c0..c1).enumerate() {
                         let x = s.data[rr * (c1 - c0) + cc];
-                        s.data[rr * (c1 - c0) + cc] = masked_score(x, row, col, cfg.causal, kv_len);
+                        s.data[rr * (c1 - c0) + cc] =
+                            masked_score(x, row, cfg.kv_offset + col, cfg.causal, kv_limit);
                     }
                 }
             }
@@ -153,7 +158,7 @@ pub fn flash_forward(
                         *pw *= dropout_scale(
                             cfg.bh_index,
                             row,
-                            c0 + cc,
+                            cfg.kv_offset + c0 + cc,
                             n,
                             cfg.dropout_seed,
                             cfg.dropout_p,
@@ -220,7 +225,7 @@ pub fn flash_backward(
     assert_eq!((dout.rows(), dout.cols()), (n, d), "flash_backward: dO shape mismatch");
     assert_eq!(stats.len(), n, "flash_backward: stats length mismatch");
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+    let kv_limit = cfg.kv_limit(n_k);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = n.div_ceil(b_r);
     let t_c = n_k.div_ceil(b_c);
@@ -247,7 +252,7 @@ pub fn flash_backward(
             let r0 = i * b_r;
             let r1 = ((i + 1) * b_r).min(n);
             let br = r1 - r0;
-            if cfg.causal && c0 > r1 - 1 {
+            if cfg.causal && cfg.kv_offset + c0 > r1 - 1 {
                 continue;
             }
             // Line 10: load Q_i, O_i, dO_i, dQ_i, l_i, m_i.
@@ -256,12 +261,12 @@ pub fn flash_backward(
 
             // Lines 11-13: recompute S_ij, P_ij on chip.
             let mut s = qi.matmul_bt(&kj).scale(tau);
-            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+            if !tile_fully_unmasked(cfg.causal, r0, cfg.kv_offset + c1, kv_limit) {
                 for rr in 0..br {
                     for cc in 0..bc {
                         let x = s.data[rr * bc + cc];
                         s.data[rr * bc + cc] =
-                            masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+                            masked_score(x, r0 + rr, cfg.kv_offset + c0 + cc, cfg.causal, kv_limit);
                     }
                 }
             }
@@ -286,7 +291,7 @@ pub fn flash_backward(
                         p_dropped.data[rr * bc + cc] *= dropout_scale(
                             cfg.bh_index,
                             r0 + rr,
-                            c0 + cc,
+                            cfg.kv_offset + c0 + cc,
                             n,
                             cfg.dropout_seed,
                             cfg.dropout_p,
@@ -331,7 +336,7 @@ pub fn flash_backward(
                         dp *= dropout_scale(
                             cfg.bh_index,
                             row,
-                            c0 + cc,
+                            cfg.kv_offset + c0 + cc,
                             n,
                             cfg.dropout_seed,
                             cfg.dropout_p,

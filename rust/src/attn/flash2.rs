@@ -104,7 +104,7 @@ pub fn flash2_forward(
     let (n, d) = (q.rows(), q.cols());
     let n_k = k.rows();
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+    let kv_limit = cfg.kv_limit(n_k);
     let b_r = blocks.b_r;
     let t_r = n.div_ceil(b_r);
 
@@ -133,7 +133,7 @@ pub fn flash2_forward(
             let rb_hi = ((wi + 1) * chunk).min(t_r);
             handles.push(scope.spawn(move || {
                 row_block_sweep(
-                    qd, kd, vd, n, n_k, d, cfg, blocks, tau, kv_len, rb_lo, rb_hi, o_mine,
+                    qd, kd, vd, n, n_k, d, cfg, blocks, tau, kv_limit, rb_lo, rb_hi, o_mine,
                     lse_mine,
                 )
             }));
@@ -149,13 +149,184 @@ pub fn flash2_forward(
     Flash2Output { o, lse }
 }
 
+/// On-chip online-softmax state for one Q row block: the unnormalised
+/// O~ accumulator, the running max/sum pair and the S scratch tile.
+/// [`stream_kv`] advances it over one K/V slice and is **resumable**:
+/// threading one state through consecutive slices of the key sequence
+/// in global order performs bit-for-bit the arithmetic of a single call
+/// over the concatenated keys, provided every slice spans whole column
+/// tiles. That resumability is what makes the sharded ring schedule
+/// (`attn::distributed`) bitwise identical to this single-device kernel.
+pub(crate) struct RowBlockState {
+    pub acc: Vec<f32>, // unnormalised O~, [b_r, d]
+    pub m_run: Vec<f32>,
+    pub l_run: Vec<f32>,
+    s_buf: Vec<f32>, // S tile scratch, [b_r, b_c]
+}
+
+impl RowBlockState {
+    pub(crate) fn new(blocks: Blocks, d: usize) -> RowBlockState {
+        RowBlockState {
+            acc: vec![0.0; blocks.b_r * d],
+            m_run: vec![f32::NEG_INFINITY; blocks.b_r],
+            l_run: vec![0.0; blocks.b_r],
+            s_buf: vec![0.0; blocks.b_r * blocks.b_c],
+        }
+    }
+
+    pub(crate) fn reset(&mut self, br: usize, d: usize) {
+        self.acc[..br * d].fill(0.0);
+        self.m_run[..br].fill(f32::NEG_INFINITY);
+        self.l_run[..br].fill(0.0);
+    }
+}
+
+/// Stream one K/V slice (local columns [0, n_k), global offset
+/// `cfg.kv_offset`) through the online softmax of query rows [r0, r1).
+/// All mask and dropout decisions are made in **global** key
+/// coordinates: `kv_limit` is the global padding limit
+/// (`AttnConfig::kv_limit` of the *whole* key range) and the dropout
+/// counter hashes `kv_offset + local_col` — a shard therefore computes
+/// exactly what the unsharded kernel computes for the same columns.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_kv(
+    state: &mut RowBlockState,
+    q_rows: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_k: usize,
+    n: usize,
+    d: usize,
+    r0: usize,
+    r1: usize,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_limit: usize,
+    hbm: &mut Hbm,
+) {
+    let b_c = blocks.b_c;
+    let t_c = n_k.div_ceil(b_c);
+    let br = r1 - r0;
+    let RowBlockState { acc, m_run, l_run, s_buf } = state;
+
+    for j in 0..t_c {
+        let c0 = j * b_c;
+        let c1 = ((j + 1) * b_c).min(n_k);
+        let bc = c1 - c0;
+        let g0 = cfg.kv_offset + c0; // global column of the tile's first key
+        // Above-diagonal tiles contribute nothing (same skip as flash),
+        // judged on global columns so shards skip correctly.
+        if cfg.causal && g0 > r1 - 1 {
+            continue;
+        }
+        // K_j, V_j stream through SRAM once per row block.
+        hbm.load(2 * bc * d);
+        let kj = &k[c0 * d..c1 * d];
+        let vj = &v[c0 * d..c1 * d];
+
+        // S = tau Q_i K_jᵀ, register-blocked, into the reused buffer.
+        let s = &mut s_buf[..br * bc];
+        matmul_bt_scaled_into(q_rows, kj, d, tau, s);
+        // Causal fast path: fully-live tiles skip the mask pass.
+        if !tile_fully_unmasked(cfg.causal, r0, cfg.kv_offset + c1, kv_limit) {
+            for rr in 0..br {
+                for cc in 0..bc {
+                    let x = s[rr * bc + cc];
+                    s[rr * bc + cc] = masked_score(x, r0 + rr, g0 + cc, cfg.causal, kv_limit);
+                }
+            }
+        }
+
+        // Online softmax with deferred normalisation: rescale the
+        // accumulators only when the running max actually moves.
+        for rr in 0..br {
+            let row = r0 + rr;
+            let srow = &mut s[rr * bc..(rr + 1) * bc];
+            let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
+            // Fully-masked row slice: contributes no probability mass.
+            // Folding it in would poison m_run with the NEG_INF sentinel
+            // and make exp(s - m_new) = 1 for masked entries, so rows
+            // with *no* live key anywhere would attend uniformly to
+            // masked keys; skipping keeps them at (acc, l, m) =
+            // (0, 0, -inf) and the epilogue gives them a zero output.
+            if m_tile <= NEG_INF {
+                continue;
+            }
+            let m_new = m_run[rr].max(m_tile);
+            let alpha = (m_run[rr] - m_new).exp(); // exp(-inf)=0 first tile
+            let arow = &mut acc[rr * d..(rr + 1) * d];
+            if alpha != 1.0 {
+                l_run[rr] *= alpha;
+                for x in arow.iter_mut() {
+                    *x *= alpha;
+                }
+            }
+            m_run[rr] = m_new;
+            let mut l_tile = 0.0f32;
+            for pw in srow.iter_mut() {
+                *pw = (*pw - m_new).exp();
+                l_tile += *pw;
+            }
+            // As in flash/standard: the normaliser excludes dropout.
+            l_run[rr] += l_tile;
+            if cfg.dropout_p > 0.0 {
+                for (cc, pw) in srow.iter_mut().enumerate() {
+                    *pw *= dropout_scale(
+                        cfg.bh_index,
+                        row,
+                        g0 + cc,
+                        n,
+                        cfg.dropout_seed,
+                        cfg.dropout_p,
+                    );
+                }
+            }
+            pv_accum(srow, vj, d, arow);
+        }
+    }
+}
+
+/// Normalise a row block's streamed state into its output windows: one
+/// division per row, one HBM store per row block (O rows + a single
+/// logsumexp stat each). `o_out` is the block's [br, d] window; `lse_out`
+/// its [br] window.
+pub(crate) fn write_epilogue(
+    state: &RowBlockState,
+    br: usize,
+    d: usize,
+    o_out: &mut [f32],
+    lse_out: &mut [f32],
+    hbm: &mut Hbm,
+) {
+    for rr in 0..br {
+        let orow = &mut o_out[rr * d..(rr + 1) * d];
+        if state.l_run[rr] == 0.0 {
+            // Every key masked for this row: zero output, lse = -inf
+            // (log of zero mass) — defined, NaN/Inf-free semantics that
+            // `merge_partials` and the backward both understand.
+            orow.fill(0.0);
+            lse_out[rr] = f32::NEG_INFINITY;
+            continue;
+        }
+        let inv = 1.0 / state.l_run[rr];
+        let arow = &state.acc[rr * d..(rr + 1) * d];
+        for c in 0..d {
+            orow[c] = arow[c] * inv;
+        }
+        lse_out[rr] = state.m_run[rr] + state.l_run[rr].ln();
+    }
+    hbm.store(br * d + br);
+}
+
 /// Sequential sweep over row blocks [rb_lo, rb_hi): the whole K/V stream
 /// per block with on-chip accumulators, one epilogue store per block.
 /// Operates on flat row-major slices (q: [n, d]; k, v: [n_k, d]) so the
 /// batched scheduler (`attn::batched`) can dispatch single-block work
 /// items through exactly this code path — per-block arithmetic is
 /// self-contained, which is what makes every caller's output bitwise
-/// independent of how blocks are distributed over workers.
+/// independent of how blocks are distributed over workers. `kv_limit`
+/// is the global padding limit (`cfg.kv_limit(n_k)`).
 pub(crate) fn row_block_sweep(
     q: &[f32],
     k: &[f32],
@@ -166,131 +337,38 @@ pub(crate) fn row_block_sweep(
     cfg: &AttnConfig,
     blocks: Blocks,
     tau: f32,
-    kv_len: usize,
+    kv_limit: usize,
     rb_lo: usize,
     rb_hi: usize,
     o_out: &mut [f32],
     lse_out: &mut [f32],
 ) -> Hbm {
-    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
-    let t_c = n_k.div_ceil(b_c);
-    let row_base = rb_lo * b_r;
+    let b_r = blocks.b_r;
     let mut hbm = Hbm::new();
-
     // Worker-local scratch, allocated once (nothing allocates in the loop).
-    let mut s_buf = vec![0.0f32; b_r * b_c];
-    let mut acc = vec![0.0f32; b_r * d]; // unnormalised O~
-    let mut m_run = vec![f32::NEG_INFINITY; b_r];
-    let mut l_run = vec![0.0f32; b_r];
+    let mut state = RowBlockState::new(blocks, d);
 
     for i in rb_lo..rb_hi {
         let r0 = i * b_r;
         let r1 = ((i + 1) * b_r).min(n);
         let br = r1 - r0;
         // Q_i is loaded once per row block; O/l/m never round-trip to HBM —
-        // they live in `acc`/`m_run`/`l_run` until the epilogue.
+        // they live in the on-chip state until the epilogue.
         hbm.load(br * d);
-        let q_rows = &q[r0 * d..r1 * d];
-        acc[..br * d].fill(0.0);
-        m_run[..br].fill(f32::NEG_INFINITY);
-        l_run[..br].fill(0.0);
-
-        for j in 0..t_c {
-            let c0 = j * b_c;
-            let c1 = ((j + 1) * b_c).min(n_k);
-            let bc = c1 - c0;
-            // Above-diagonal tiles contribute nothing (same skip as flash).
-            if cfg.causal && c0 > r1 - 1 {
-                continue;
-            }
-            // K_j, V_j stream through SRAM once per row block.
-            hbm.load(2 * bc * d);
-            let kj = &k[c0 * d..c1 * d];
-            let vj = &v[c0 * d..c1 * d];
-
-            // S = tau Q_i K_jᵀ, register-blocked, into the reused buffer.
-            let s = &mut s_buf[..br * bc];
-            matmul_bt_scaled_into(q_rows, kj, d, tau, s);
-            // Causal fast path: fully-live tiles skip the mask pass.
-            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
-                for rr in 0..br {
-                    for cc in 0..bc {
-                        let x = s[rr * bc + cc];
-                        s[rr * bc + cc] =
-                            masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
-                    }
-                }
-            }
-
-            // Online softmax with deferred normalisation: rescale the
-            // accumulators only when the running max actually moves.
-            for rr in 0..br {
-                let row = r0 + rr;
-                let srow = &mut s[rr * bc..(rr + 1) * bc];
-                let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
-                // Fully-masked row slice: contributes no probability mass.
-                // Folding it in would poison m_run with the NEG_INF sentinel
-                // and make exp(s - m_new) = 1 for masked entries, so rows
-                // with *no* live key anywhere would attend uniformly to
-                // masked keys; skipping keeps them at (acc, l, m) =
-                // (0, 0, -inf) and the epilogue gives them a zero output.
-                if m_tile <= NEG_INF {
-                    continue;
-                }
-                let m_new = m_run[rr].max(m_tile);
-                let alpha = (m_run[rr] - m_new).exp(); // exp(-inf)=0 first tile
-                let arow = &mut acc[rr * d..(rr + 1) * d];
-                if alpha != 1.0 {
-                    l_run[rr] *= alpha;
-                    for x in arow.iter_mut() {
-                        *x *= alpha;
-                    }
-                }
-                m_run[rr] = m_new;
-                let mut l_tile = 0.0f32;
-                for pw in srow.iter_mut() {
-                    *pw = (*pw - m_new).exp();
-                    l_tile += *pw;
-                }
-                // As in flash/standard: the normaliser excludes dropout.
-                l_run[rr] += l_tile;
-                if cfg.dropout_p > 0.0 {
-                    for (cc, pw) in srow.iter_mut().enumerate() {
-                        *pw *= dropout_scale(
-                            cfg.bh_index,
-                            row,
-                            c0 + cc,
-                            n,
-                            cfg.dropout_seed,
-                            cfg.dropout_p,
-                        );
-                    }
-                }
-                pv_accum(srow, vj, d, arow);
-            }
-        }
-
-        // Epilogue: one division per row, one HBM store per row block
-        // (O rows + a single logsumexp stat each).
-        for rr in 0..br {
-            let out_off = (r0 - row_base + rr) * d;
-            let orow = &mut o_out[out_off..out_off + d];
-            if l_run[rr] == 0.0 {
-                // Every key masked for this row: zero output, lse = -inf
-                // (log of zero mass) — defined, NaN/Inf-free semantics that
-                // `merge_partials` and the backward both understand.
-                orow.fill(0.0);
-                lse_out[r0 - row_base + rr] = f32::NEG_INFINITY;
-                continue;
-            }
-            let inv = 1.0 / l_run[rr];
-            let arow = &acc[rr * d..(rr + 1) * d];
-            for c in 0..d {
-                orow[c] = arow[c] * inv;
-            }
-            lse_out[r0 - row_base + rr] = m_run[rr] + l_run[rr].ln();
-        }
-        hbm.store(br * d + br);
+        state.reset(br, d);
+        stream_kv(
+            &mut state, &q[r0 * d..r1 * d], k, v, n_k, n, d, r0, r1, cfg, blocks, tau,
+            kv_limit, &mut hbm,
+        );
+        let off = (i - rb_lo) * b_r;
+        write_epilogue(
+            &state,
+            br,
+            d,
+            &mut o_out[off * d..off * d + br * d],
+            &mut lse_out[off..off + br],
+            &mut hbm,
+        );
     }
 
     hbm
@@ -344,7 +422,7 @@ pub fn flash2_backward(
     assert_eq!((dout.rows(), dout.cols()), (n, d), "flash2_backward: dO shape mismatch");
     assert_eq!(stats.len(), n, "flash2_backward: stats length mismatch");
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n_k).min(n_k);
+    let kv_limit = cfg.kv_limit(n_k);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = n.div_ceil(b_r);
     let t_c = n_k.div_ceil(b_c);
@@ -379,7 +457,7 @@ pub fn flash2_backward(
             let (lse, d_vec) = (&lse, &d_vec);
             handles.push(scope.spawn(move || {
                 dq_row_sweep(
-                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, cfg, blocks, tau, kv_len, rb_lo,
+                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, cfg, blocks, tau, kv_limit, rb_lo,
                     rb_hi, dq_mine,
                 )
             }));
@@ -404,7 +482,7 @@ pub fn flash2_backward(
             let (lse, d_vec) = (&lse, &d_vec);
             handles.push(scope.spawn(move || {
                 dkv_col_sweep(
-                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, cfg, blocks, tau, kv_len, cb_lo,
+                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, cfg, blocks, tau, kv_limit, cb_lo,
                     cb_hi, dk_mine, dv_mine,
                 )
             }));
@@ -418,9 +496,104 @@ pub fn flash2_backward(
     AttnGrads { dq, dk, dv }
 }
 
+/// Stream one K/V slice through the phase-1 dQ accumulation of query
+/// rows [r0, r1). The dQ accumulator `dq_acc` ([br, d]) stays on chip;
+/// like [`stream_kv`] this is resumable over consecutive tile-aligned
+/// key slices in global order — the accumulation order per output
+/// element is the global column order either way, so the sharded ring
+/// schedule reproduces [`dq_row_sweep`] bit for bit. All mask/dropout
+/// decisions use global key coordinates.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_kv_dq(
+    dq_acc: &mut [f32],
+    q_rows: &[f32],
+    do_rows: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_k: usize,
+    n: usize,
+    d: usize,
+    r0: usize,
+    r1: usize,
+    lse: &[f32],
+    d_vec: &[f32],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_limit: usize,
+    s_buf: &mut [f32],
+    dp_buf: &mut [f32],
+    hbm: &mut Hbm,
+) {
+    let b_c = blocks.b_c;
+    let t_c = n_k.div_ceil(b_c);
+    let br = r1 - r0;
+
+    for j in 0..t_c {
+        let c0 = j * b_c;
+        let c1 = ((j + 1) * b_c).min(n_k);
+        let bc = c1 - c0;
+        let g0 = cfg.kv_offset + c0;
+        // Above-diagonal tiles contribute nothing (same skip as fwd).
+        if cfg.causal && g0 > r1 - 1 {
+            continue;
+        }
+        // K_j, V_j stream through SRAM once per row block.
+        hbm.load(2 * bc * d);
+        let kj = &k[c0 * d..c1 * d];
+        let vj = &v[c0 * d..c1 * d];
+
+        // S = tau Q_i K_jᵀ and dP^dropped = dO_i V_jᵀ, register-blocked.
+        let s = &mut s_buf[..br * bc];
+        matmul_bt_scaled_into(q_rows, kj, d, tau, s);
+        if !tile_fully_unmasked(cfg.causal, r0, cfg.kv_offset + c1, kv_limit) {
+            for rr in 0..br {
+                for cc in 0..bc {
+                    let x = s[rr * bc + cc];
+                    s[rr * bc + cc] = masked_score(x, r0 + rr, g0 + cc, cfg.causal, kv_limit);
+                }
+            }
+        }
+        let dp = &mut dp_buf[..br * bc];
+        matmul_bt_scaled_into(do_rows, vj, d, 1.0, dp);
+
+        for rr in 0..br {
+            let row = r0 + rr;
+            let l_row = lse[row];
+            // Fully-masked forward row: zero mass, zero gradient.
+            if l_row == f32::NEG_INFINITY {
+                continue;
+            }
+            let di = d_vec[row];
+            let srow = &mut s[rr * bc..(rr + 1) * bc];
+            let dprow = &dp[rr * bc..(rr + 1) * bc];
+            // dS~ = tau · P ∘ (dP − D_i), overwriting the score buffer;
+            // masked entries have P = exp(NEG_INF − L) = 0.
+            for cc in 0..bc {
+                let p = (srow[cc] - l_row).exp();
+                let mut dp_cc = dprow[cc];
+                if cfg.dropout_p > 0.0 {
+                    dp_cc *= dropout_scale(
+                        cfg.bh_index,
+                        row,
+                        g0 + cc,
+                        n,
+                        cfg.dropout_seed,
+                        cfg.dropout_p,
+                    );
+                }
+                srow[cc] = tau * p * (dp_cc - di);
+            }
+            // dQ_i(rr) += dS~ K_j — the P̃·V micro-kernel reused.
+            pv_accum(srow, kj, d, &mut dq_acc[rr * d..(rr + 1) * d]);
+        }
+    }
+}
+
 /// Phase-1 sweep over Q row blocks [rb_lo, rb_hi): the whole K/V stream per
 /// block with the dQ accumulator on chip, one dQ store per block. Flat
 /// row-major slices, single-block-dispatchable — see [`row_block_sweep`].
+/// `kv_limit` is the global padding limit (`cfg.kv_limit(n_k)`).
 pub(crate) fn dq_row_sweep(
     q: &[f32],
     k: &[f32],
@@ -434,13 +607,12 @@ pub(crate) fn dq_row_sweep(
     cfg: &AttnConfig,
     blocks: Blocks,
     tau: f32,
-    kv_len: usize,
+    kv_limit: usize,
     rb_lo: usize,
     rb_hi: usize,
     dq_out: &mut [f32],
 ) -> Hbm {
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
-    let t_c = n_k.div_ceil(b_c);
     let row_base = rb_lo * b_r;
     let mut hbm = Hbm::new();
 
@@ -456,68 +628,27 @@ pub(crate) fn dq_row_sweep(
         // the (zero-initialised, worker-owned) output window until the
         // single store below — it never round-trips to HBM mid-sweep.
         hbm.load(2 * br * d + 2 * br);
-        let q_rows = &q[r0 * d..r1 * d];
-        let do_rows = &dout[r0 * d..r1 * d];
-        let dq_acc = &mut dq_out[(r0 - row_base) * d..(r1 - row_base) * d];
-
-        for j in 0..t_c {
-            let c0 = j * b_c;
-            let c1 = ((j + 1) * b_c).min(n_k);
-            let bc = c1 - c0;
-            // Above-diagonal tiles contribute nothing (same skip as fwd).
-            if cfg.causal && c0 > r1 - 1 {
-                continue;
-            }
-            // K_j, V_j stream through SRAM once per row block.
-            hbm.load(2 * bc * d);
-            let kj = &k[c0 * d..c1 * d];
-            let vj = &v[c0 * d..c1 * d];
-
-            // S = tau Q_i K_jᵀ and dP^dropped = dO_i V_jᵀ, register-blocked.
-            let s = &mut s_buf[..br * bc];
-            matmul_bt_scaled_into(q_rows, kj, d, tau, s);
-            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
-                for rr in 0..br {
-                    for cc in 0..bc {
-                        let x = s[rr * bc + cc];
-                        s[rr * bc + cc] = masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
-                    }
-                }
-            }
-            let dp = &mut dp_buf[..br * bc];
-            matmul_bt_scaled_into(do_rows, vj, d, 1.0, dp);
-
-            for rr in 0..br {
-                let row = r0 + rr;
-                let l_row = lse[row];
-                // Fully-masked forward row: zero mass, zero gradient.
-                if l_row == f32::NEG_INFINITY {
-                    continue;
-                }
-                let di = d_vec[row];
-                let srow = &mut s[rr * bc..(rr + 1) * bc];
-                let dprow = &dp[rr * bc..(rr + 1) * bc];
-                // dS~ = tau · P ∘ (dP − D_i), overwriting the score buffer;
-                // masked entries have P = exp(NEG_INF − L) = 0.
-                for cc in 0..bc {
-                    let p = (srow[cc] - l_row).exp();
-                    let mut dp_cc = dprow[cc];
-                    if cfg.dropout_p > 0.0 {
-                        dp_cc *= dropout_scale(
-                            cfg.bh_index,
-                            row,
-                            c0 + cc,
-                            n,
-                            cfg.dropout_seed,
-                            cfg.dropout_p,
-                        );
-                    }
-                    srow[cc] = tau * p * (dp_cc - di);
-                }
-                // dQ_i(rr) += dS~ K_j — the P̃·V micro-kernel reused.
-                pv_accum(srow, kj, d, &mut dq_acc[rr * d..(rr + 1) * d]);
-            }
-        }
+        stream_kv_dq(
+            &mut dq_out[(r0 - row_base) * d..(r1 - row_base) * d],
+            &q[r0 * d..r1 * d],
+            &dout[r0 * d..r1 * d],
+            k,
+            v,
+            n_k,
+            n,
+            d,
+            r0,
+            r1,
+            lse,
+            d_vec,
+            cfg,
+            blocks,
+            tau,
+            kv_limit,
+            &mut s_buf,
+            &mut dp_buf,
+            &mut hbm,
+        );
         // Epilogue: dQ_i leaves chip exactly once.
         hbm.store(br * d);
     }
@@ -528,6 +659,12 @@ pub(crate) fn dq_row_sweep(
 /// Phase-2 sweep over K/V column blocks [cb_lo, cb_hi): the whole Q/dO
 /// stream per block with dK~/dV~ on chip, one dK/dV store per block. Flat
 /// row-major slices, single-block-dispatchable — see [`row_block_sweep`].
+/// Column blocks are local to the k/v slice; every mask/dropout decision
+/// is made at the global column `cfg.kv_offset + local_col`, so the
+/// sharded driver dispatches a shard's column blocks through exactly
+/// this path and gets the single-device kernel's dK/dV rows bit for
+/// bit (per-column-block arithmetic touches no cross-shard state).
+/// `kv_limit` is the global padding limit (`cfg.kv_limit(n_k)`).
 pub(crate) fn dkv_col_sweep(
     q: &[f32],
     k: &[f32],
@@ -541,7 +678,7 @@ pub(crate) fn dkv_col_sweep(
     cfg: &AttnConfig,
     blocks: Blocks,
     tau: f32,
-    kv_len: usize,
+    kv_limit: usize,
     cb_lo: usize,
     cb_hi: usize,
     dk_out: &mut [f32],
@@ -571,7 +708,8 @@ pub(crate) fn dkv_col_sweep(
             let r0 = i * b_r;
             let r1 = ((i + 1) * b_r).min(n);
             let br = r1 - r0;
-            if cfg.causal && c0 > r1 - 1 {
+            let g0 = cfg.kv_offset + c0;
+            if cfg.causal && g0 > r1 - 1 {
                 continue;
             }
             // Q_i, dO_i, D_i, L_i stream through SRAM once per column block.
@@ -581,11 +719,11 @@ pub(crate) fn dkv_col_sweep(
 
             let s = &mut s_buf[..br * bc];
             matmul_bt_scaled_into(q_rows, kj, d, tau, s);
-            if !tile_fully_unmasked(cfg.causal, r0, c1, kv_len) {
+            if !tile_fully_unmasked(cfg.causal, r0, cfg.kv_offset + c1, kv_limit) {
                 for rr in 0..br {
                     for cc in 0..bc {
                         let x = s[rr * bc + cc];
-                        s[rr * bc + cc] = masked_score(x, r0 + rr, c0 + cc, cfg.causal, kv_len);
+                        s[rr * bc + cc] = masked_score(x, r0 + rr, g0 + cc, cfg.causal, kv_limit);
                     }
                 }
             }
@@ -610,7 +748,7 @@ pub(crate) fn dkv_col_sweep(
                         dropout_scale(
                             cfg.bh_index,
                             row,
-                            c0 + cc,
+                            g0 + cc,
                             n,
                             cfg.dropout_seed,
                             cfg.dropout_p,
@@ -649,9 +787,12 @@ pub(crate) fn dkv_col_sweep(
 /// flash2's forward (O, logsumexp) **and** backward (dQ, dK, dV) from the
 /// paper-faithful reference kernels over the workload, plus the batched
 /// multi-head scheduler (`attn::batched` — the entry points every hot path
-/// actually calls) against the per-slice pair, where agreement must be
-/// bitwise. Used by the coordinator preflight before any training/serving
-/// runs.
+/// actually calls) against the per-slice pair, and the sharded
+/// sequence-parallel ring schedule (`attn::distributed`) against the
+/// single-device pair with causal + dropout + padding all active — both
+/// of those agreements must be bitwise (any nonzero deviation is a
+/// scheduling/coordinate bug, not float noise). Used by the coordinator
+/// preflight before any training/serving runs.
 pub fn self_check() -> f32 {
     use super::batched::{bh_slice, flash2_backward_batched, flash2_forward_batched};
     use super::{attention_backward, BackwardKernel};
@@ -702,6 +843,34 @@ pub fn self_check() -> f32 {
     );
     let max_abs =
         |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+
+    // Sharded ring-schedule probe: causal + dropout + padding through 3
+    // shards must be BITWISE identical to the single-device pair.
+    use super::distributed::{flash_backward_sharded, flash_forward_sharded};
+    let scfg = AttnConfig {
+        causal: true,
+        kv_len: Some(37),
+        dropout_p: 0.15,
+        dropout_seed: 11,
+        ..Default::default()
+    };
+    let sfwd = flash2_forward(&q, &k, &v, &scfg, blocks, 2, &mut Hbm::new());
+    let shard_fwd = flash_forward_sharded(&q, &k, &v, &scfg, blocks, 3, 2);
+    let sbwd = flash2_backward(
+        &q, &k, &v, &sfwd.o, &dout, sfwd.stats(), &scfg, blocks, 2, &mut Hbm::new(),
+    );
+    let shard_bwd = flash_backward_sharded(
+        &q, &k, &v, &sfwd.o, &dout, sfwd.stats(), &scfg, blocks, 3, 2,
+    );
+    if shard_fwd.o.data != sfwd.o.data
+        || shard_fwd.m != sfwd.lse
+        || shard_bwd.dq.data != sbwd.dq.data
+        || shard_bwd.dk.data != sbwd.dk.data
+        || shard_bwd.dv.data != sbwd.dv.data
+    {
+        diff = diff.max(1.0);
+    }
+
     for s in 0..bsz * heads {
         let cfg_s = AttnConfig { bh_index: s as u32, ..bcfg.clone() };
         let (qs, ks, vs) = (bh_slice(&q4, s), bh_slice(&k4, s), bh_slice(&v4, s));

@@ -7,6 +7,11 @@ use crate::util::rng::kernel_dropout_keep;
 pub const NEG_INF: f32 = -1e30;
 
 /// Apply the fused mask of Algorithm 2 line 11 to a scores entry.
+///
+/// `col` and `kv_len` are **global** key coordinates: a kernel working
+/// on a key shard passes `cfg.kv_offset + local_col` and the global
+/// padding limit (`AttnConfig::kv_limit`), so the decision is identical
+/// to the unsharded kernel's for the same attention entry.
 #[inline]
 pub fn masked_score(s: f32, row: usize, col: usize, causal: bool, kv_len: usize) -> f32 {
     if (causal && col > row) || col >= kv_len {
@@ -18,6 +23,14 @@ pub fn masked_score(s: f32, row: usize, col: usize, causal: bool, kv_len: usize)
 
 /// Dropout scale for attention entry (row, col): 0 if dropped, 1/(1-p) if
 /// kept — identical stream to the Pallas kernels (see util::rng).
+///
+/// The stream is a pure function of `(bh, row, col, n, seed)` where
+/// `col` is the **global** key column and `n` is the **query-row count
+/// of the whole (unsharded) problem** — the counter stride, NOT the
+/// local key count of whatever K/V slice the caller holds. Every call
+/// site passes `q.rows()` and `cfg.kv_offset + local_col` (audited:
+/// flash, flash2 fwd + both bwd phases, standard), which is what pins a
+/// shard's keep/drop pattern to the unsharded kernel's.
 #[inline]
 pub fn dropout_scale(
     bh: u32,
@@ -63,9 +76,14 @@ impl BlockMask {
 
     /// Fixed butterfly pattern (Pixelated Butterfly [17]) — diagonal plus
     /// power-of-two off-diagonals. Mirrors `butterfly_mask` in
-    /// python/compile/kernels/block_sparse.py.
+    /// python/compile/kernels/block_sparse.py. Degenerate grids (zero
+    /// rows or columns) return the empty mask — `t_c == 0` used to
+    /// underflow the `i.min(t_c - 1)` diagonal clamp.
     pub fn butterfly(t_r: usize, t_c: usize) -> BlockMask {
         let mut m = BlockMask::zeros(t_r, t_c);
+        if t_r == 0 || t_c == 0 {
+            return m;
+        }
         for i in 0..t_r {
             m.set(i, i.min(t_c - 1), true);
             let mut stride = 1usize;
@@ -171,5 +189,68 @@ mod tests {
     #[test]
     fn dropout_scale_zero_p_is_identity() {
         assert_eq!(dropout_scale(0, 1, 2, 16, 0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn butterfly_degenerate_shapes_do_not_panic() {
+        // t_c == 0 used to underflow `i.min(t_c - 1)` and index an empty
+        // bit vector; all four degenerate corners must just be empty.
+        for (t_r, t_c) in [(0usize, 0usize), (0, 4), (4, 0), (1, 1)] {
+            let m = BlockMask::butterfly(t_r, t_c);
+            assert_eq!((m.t_r, m.t_c), (t_r, t_c));
+            assert_eq!(m.bits.len(), t_r * t_c);
+        }
+        assert!(BlockMask::butterfly(1, 1).get(0, 0));
+        // local_global on the same corners stays well-defined too.
+        for (t_r, t_c) in [(0usize, 0usize), (0, 4), (4, 0)] {
+            let m = BlockMask::local_global(t_r, t_c, 1, 1);
+            assert_eq!(m.bits.len(), t_r * t_c);
+        }
+    }
+
+    #[test]
+    fn butterfly_tall_and_wide_grids_stay_in_bounds() {
+        // Tall grids clamp the diagonal to the last column (python
+        // mirror semantics); every row keeps at least one live block and
+        // no write lands out of bounds (get() would panic if one did).
+        let tall = BlockMask::butterfly(9, 3);
+        for i in 0..9 {
+            assert!(tall.get(i, i.min(2)), "row {i} lost its diagonal block");
+        }
+        let wide = BlockMask::butterfly(3, 9);
+        for i in 0..3 {
+            assert!(wide.get(i, i));
+        }
+        // The stride bands stay within [0, t_c) on both shapes.
+        assert_eq!(tall.bits.len(), 27);
+        assert_eq!(wide.bits.len(), 27);
+        assert!(tall.nonzero_blocks() > 0 && wide.nonzero_blocks() > 0);
+    }
+
+    #[test]
+    fn dropout_stream_is_global_and_pinned() {
+        // The stream is a pure function of (bh, row, GLOBAL col, n,
+        // seed): a shard at key offset `lo` passing `lo + local_col`
+        // reads exactly the unsharded kernel's columns [lo, hi).
+        let (n, seed, p) = (16usize, 9u32, 0.5f32);
+        let full: Vec<f32> = (0..n).map(|c| dropout_scale(3, 5, c, n, seed, p)).collect();
+        for lo in [0usize, 4, 7] {
+            for (cl, &expect) in full[lo..].iter().enumerate() {
+                assert_eq!(dropout_scale(3, 5, lo + cl, n, seed, p), expect);
+            }
+        }
+        // Regression pin: the exact keep/drop pattern of the unsharded
+        // kernel for two (bh, row, n, seed, p) tuples. Any change to the
+        // counter layout — e.g. using a local key count as the stride —
+        // fails these literals loudly.
+        let keeps: Vec<bool> =
+            (0..8).map(|c| dropout_scale(0, 0, c, 8, 9, 0.5) != 0.0).collect();
+        assert_eq!(keeps, [true, true, false, true, false, false, false, false]);
+        let keeps2: Vec<bool> =
+            (0..10).map(|c| dropout_scale(1, 3, c, 16, 7, 0.3) != 0.0).collect();
+        assert_eq!(
+            keeps2,
+            [true, true, true, true, false, true, true, true, true, true]
+        );
     }
 }

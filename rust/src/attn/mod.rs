@@ -66,6 +66,25 @@
 //! (`sim::cost::flash2_fwd_batched` = slices × per-slice, asserted
 //! exactly), so every IO claim carries over unchanged.
 //!
+//! **The sharded sequence-parallel path covers causal + dropout.** The
+//! multi-device driver ([`distributed`]) shards the key sequence, and
+//! every shard kernel runs in *global key coordinates* via
+//! [`AttnConfig::kv_offset`]: the causal test, the key-padding test and
+//! the counter-based dropout stream all see `kv_offset + local_col`, so
+//! mask and dropout decisions are identical to the single-device kernel
+//! no matter how K/V was sliced. Two schedules exist. The **ring
+//! schedule** ([`distributed::flash_forward_sharded`] /
+//! [`distributed::flash_backward_sharded`]) keeps each row block's
+//! on-chip state resident while the key shards visit in global order —
+//! the per-row arithmetic is the single-device kernel's op sequence, so
+//! output is **bitwise identical** to `flash2` for any shard count and
+//! worker count. The **tree schedule**
+//! ([`distributed::shard_partials`] + [`distributed::merge_partials`])
+//! computes one softmax partial per shard and merges associatively in
+//! any order — exact to fp rounding, the paper's §5 decomposition.
+//! Shards wholly above the causal diagonal or wholly beyond `kv_len`
+//! never become work items on either schedule.
+//!
 //! All kernels produce softmax statistics; [`AttnStats`] abstracts over
 //! the two representations so either backward accepts either forward's
 //! output. Fully-masked rows (e.g. `kv_len` = 0 shards) have defined
@@ -90,17 +109,37 @@ pub mod standard;
 use crate::tensor::Tensor;
 
 /// Shared configuration for the attention mirrors.
+///
+/// **Global key coordinates.** A kernel invocation may see only a slice
+/// of the key sequence (the sequence-parallel sharded path hands each
+/// shard a contiguous K/V range). `kv_offset` is the global column index
+/// of the slice's local column 0, and every masked/dropout decision is
+/// made in global coordinates `kv_offset + local_col`:
+///
+/// * the causal test is `kv_offset + col > row`,
+/// * the padding test compares `kv_offset + col` against `kv_len`
+///   (which is itself a *global* key count),
+/// * the dropout counter stream hashes the global column, so a shard
+///   reproduces exactly the keep/drop pattern the unsharded kernel
+///   draws for the same entries.
+///
+/// With `kv_offset = 0` (every non-sharded caller) all of this reduces
+/// to the local-coordinate behaviour.
 #[derive(Clone, Debug, Default)]
 pub struct AttnConfig {
     /// Softmax scaling tau; None => 1/sqrt(d).
     pub tau: Option<f32>,
     pub causal: bool,
-    /// Valid key length (padding mask); None => n.
+    /// Valid key length (padding mask) in GLOBAL key coordinates;
+    /// None => every key.
     pub kv_len: Option<usize>,
     pub dropout_p: f32,
     pub dropout_seed: u32,
     /// batch*head index — seeds the dropout counter stream.
     pub bh_index: u32,
+    /// Global key-column index of this slice's local key column 0.
+    /// Non-zero only on the sharded sequence-parallel path.
+    pub kv_offset: usize,
 }
 
 impl AttnConfig {
@@ -110,6 +149,26 @@ impl AttnConfig {
 
     pub fn tau_for(&self, d: usize) -> f32 {
         self.tau.unwrap_or(1.0 / (d as f32).sqrt())
+    }
+
+    /// Global end (exclusive) of the valid key range visible to a slice
+    /// holding `n_k` local keys: the padding limit clamped to the
+    /// slice's global span `[kv_offset, kv_offset + n_k)`. Kernels
+    /// compare global columns against this, so a key shard and the
+    /// unsharded kernel make identical mask decisions. With
+    /// `kv_offset = 0` this is the old local clamp `min(kv_len, n_k)`.
+    pub fn kv_limit(&self, n_k: usize) -> usize {
+        let end = self.kv_offset + n_k;
+        self.kv_len.unwrap_or(end).min(end)
+    }
+
+    /// Config for a key shard whose local column 0 sits `lo` columns
+    /// into this config's key range: same global decisions (causal,
+    /// padding, dropout stream), local storage. `kv_len` stays global —
+    /// the per-shard remap that used to live in the sharded driver is
+    /// exactly the coordinate bug this replaces.
+    pub fn for_shard(&self, lo: usize) -> AttnConfig {
+        AttnConfig { kv_offset: self.kv_offset + lo, ..self.clone() }
     }
 }
 
@@ -325,6 +384,22 @@ mod tests {
             assert!(grads[0].dk.max_abs_diff(&g.dk) < 1e-4);
             assert!(grads[0].dv.max_abs_diff(&g.dv) < 1e-4);
         }
+    }
+
+    #[test]
+    fn kv_limit_is_global_and_backwards_compatible() {
+        // kv_offset = 0: the old local clamp min(kv_len, n_k).
+        let cfg = AttnConfig { kv_len: Some(10), ..Default::default() };
+        assert_eq!(cfg.kv_limit(16), 10);
+        assert_eq!(cfg.kv_limit(6), 6);
+        assert_eq!(AttnConfig::default().kv_limit(8), 8);
+        // A shard at offset 12 holding 8 keys spans global [12, 20).
+        let sh = cfg.for_shard(12);
+        assert_eq!(sh.kv_offset, 12);
+        assert_eq!(sh.kv_limit(8), 10); // padding ends before the shard
+        assert_eq!(AttnConfig::default().for_shard(12).kv_limit(8), 20);
+        // Nested sharding composes offsets.
+        assert_eq!(sh.for_shard(4).kv_offset, 16);
     }
 
     #[test]

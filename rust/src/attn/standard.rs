@@ -18,15 +18,18 @@ pub fn standard_forward(
 ) -> AttnOutput {
     let (n, d) = (q.rows(), q.cols());
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n);
+    let kv_limit = cfg.kv_limit(n);
 
-    // Line 1: load Q, K; compute S; write S to HBM.
+    // Line 1: load Q, K; compute S; write S to HBM. Mask and dropout
+    // decisions use global key coordinates (kv_offset + col), matching
+    // the tiled kernels.
     hbm.load(n * d * 2);
     let mut s = q.matmul_bt(k).scale(tau);
     for row in 0..n {
         for col in 0..n {
             let x = s.data[row * n + col];
-            s.data[row * n + col] = masked_score(x, row, col, cfg.causal, kv_len);
+            s.data[row * n + col] =
+                masked_score(x, row, cfg.kv_offset + col, cfg.causal, kv_limit);
         }
     }
     hbm.store(n * n);
@@ -53,8 +56,14 @@ pub fn standard_forward(
     if cfg.dropout_p > 0.0 {
         for row in 0..n {
             for col in 0..n {
-                p.data[row * n + col] *=
-                    dropout_scale(cfg.bh_index, row, col, n, cfg.dropout_seed, cfg.dropout_p);
+                p.data[row * n + col] *= dropout_scale(
+                    cfg.bh_index,
+                    row,
+                    cfg.kv_offset + col,
+                    n,
+                    cfg.dropout_seed,
+                    cfg.dropout_p,
+                );
             }
         }
     }
@@ -81,7 +90,7 @@ pub fn standard_backward(
 ) -> AttnGrads {
     let (n, d) = (q.rows(), q.cols());
     let tau = cfg.tau_for(d);
-    let kv_len = cfg.kv_len.unwrap_or(n);
+    let kv_limit = cfg.kv_limit(n);
 
     // Recreate P (in the real Algorithm 3 it was stored by the forward;
     // accounting: read P from HBM).
@@ -89,7 +98,8 @@ pub fn standard_backward(
     for row in 0..n {
         for col in 0..n {
             let x = s.data[row * n + col];
-            s.data[row * n + col] = masked_score(x, row, col, cfg.causal, kv_len);
+            s.data[row * n + col] =
+                masked_score(x, row, cfg.kv_offset + col, cfg.causal, kv_limit);
         }
     }
     let mut p = s.softmax_rows();
@@ -97,8 +107,14 @@ pub fn standard_backward(
     if cfg.dropout_p > 0.0 {
         for row in 0..n {
             for col in 0..n {
-                p.data[row * n + col] *=
-                    dropout_scale(cfg.bh_index, row, col, n, cfg.dropout_seed, cfg.dropout_p);
+                p.data[row * n + col] *= dropout_scale(
+                    cfg.bh_index,
+                    row,
+                    cfg.kv_offset + col,
+                    n,
+                    cfg.dropout_seed,
+                    cfg.dropout_p,
+                );
             }
         }
     }
@@ -115,8 +131,14 @@ pub fn standard_backward(
     if cfg.dropout_p > 0.0 {
         for row in 0..n {
             for col in 0..n {
-                dp.data[row * n + col] *=
-                    dropout_scale(cfg.bh_index, row, col, n, cfg.dropout_seed, cfg.dropout_p);
+                dp.data[row * n + col] *= dropout_scale(
+                    cfg.bh_index,
+                    row,
+                    cfg.kv_offset + col,
+                    n,
+                    cfg.dropout_seed,
+                    cfg.dropout_p,
+                );
             }
         }
     }

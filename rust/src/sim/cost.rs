@@ -250,14 +250,39 @@ pub fn flash2_fwd_stores(n: u64, d: u64) -> u64 {
     n * d + n
 }
 
-/// Rectangular fast forward: per-device cost of the sequence-parallel
-/// multi-GPU extension (attn::distributed) with each device running
-/// flash2 over its key shard.
-pub fn flash2_fwd_rect(n_q: u64, n_k: u64, d: u64, blocks: Blocks) -> Cost {
+/// Per-shard fast forward in **global key coordinates**: `n_q` query
+/// rows attending the key shard [col_lo, col_hi) of the global key
+/// sequence, with the causal tile-skip judged on global columns — the
+/// accounting mirror of the `AttnConfig::kv_offset` plumbing. A shard
+/// high in the key sequence skips every tile above the diagonal for
+/// low query rows, which is the causal-skip traffic term
+/// `multi_gpu_cost` folds into its per-device bound. Matches the
+/// instrumented `attn::flash2::flash2_forward` on the shard slice
+/// access-for-access on divisible tilings (asserted in
+/// rust/tests/io_complexity.rs).
+pub fn flash2_fwd_shard(
+    n_q: u64,
+    d: u64,
+    blocks: Blocks,
+    col_lo: u64,
+    col_hi: u64,
+    causal: bool,
+) -> Cost {
     let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
     let t_r = n_q.div_ceil(b_r);
-    let t_c = n_k.div_ceil(b_c);
-    let live = t_r * t_c;
+    let t_c = (col_hi - col_lo).div_ceil(b_c);
+    let mut live = 0u64;
+    for i in 0..t_r {
+        let r1 = ((i + 1) * b_r).min(n_q);
+        for j in 0..t_c {
+            let g0 = col_lo + j * b_c; // global column of the tile start
+            if !causal || g0 <= r1 - 1 {
+                live += 1;
+            }
+        }
+    }
+    // Q loaded once per row block (even fully-skipped blocks), K/V per
+    // live pair, O + logsumexp stored exactly once.
     let hbm = n_q * d + live * (2 * b_c * d) + (n_q * d + n_q);
     let tile = b_r * b_c;
     Cost {
@@ -265,6 +290,13 @@ pub fn flash2_fwd_rect(n_q: u64, n_k: u64, d: u64, blocks: Blocks) -> Cost {
         flops: live * (4 * tile * d + SOFTMAX_OPS_PER_ELEM * tile + 2 * b_r) + n_q * (d + 2),
         kernels: 1,
     }
+}
+
+/// Rectangular fast forward: per-device cost of the sequence-parallel
+/// multi-GPU extension (attn::distributed) with each device running
+/// flash2 over its key shard — the non-causal shard form at offset 0.
+pub fn flash2_fwd_rect(n_q: u64, n_k: u64, d: u64, blocks: Blocks) -> Cost {
+    flash2_fwd_shard(n_q, d, blocks, 0, n_k, false)
 }
 
 /// Rectangular flash forward: n_q query rows attending n_k key rows —
@@ -503,6 +535,37 @@ mod tests {
         // B_c > 3d/2 — the gap this policy exists to close.
         let fwd_rule = Blocks::from_sram(48 * 1024, 64, 4096);
         assert!(3 * fwd_rule.b_r <= 2 * fwd_rule.b_c, "forward tiles are flat-wide");
+    }
+
+    #[test]
+    fn flash2_fwd_shard_causal_skip_in_global_coordinates() {
+        let (n, d) = (1024u64, 64u64);
+        let blocks = Blocks::explicit(64, 64);
+        // Causal skip bites on the dense shard and even harder on a
+        // shard high in the key sequence (its columns are above the
+        // diagonal for most query rows).
+        let full = flash2_fwd_shard(n, d, blocks, 0, n, false).hbm_elems;
+        let caus = flash2_fwd_shard(n, d, blocks, 0, n, true).hbm_elems;
+        assert!(caus < full);
+        let high_full = flash2_fwd_shard(n, d, blocks, 768, 1024, false).hbm_elems;
+        let high_caus = flash2_fwd_shard(n, d, blocks, 768, 1024, true).hbm_elems;
+        assert!(high_caus < high_full);
+        let frac = (high_caus - (2 * n * d + n)) as f64 / (high_full - (2 * n * d + n)) as f64;
+        assert!(frac < 0.5, "high shard keeps only the below-diagonal tail: {frac}");
+        // The shards' K/V streaming terms partition the unsharded causal
+        // kernel's exactly (strip the per-kernel Q + epilogue terms).
+        let kv = |c: Cost| c.hbm_elems - (2 * n * d + n);
+        let dense = kv(flash2_fwd(n, d, blocks, true, false));
+        let mut sharded = 0;
+        for lo in [0u64, 256, 512, 768] {
+            sharded += kv(flash2_fwd_shard(n, d, blocks, lo, lo + 256, true));
+        }
+        assert_eq!(sharded, dense);
+        // Offset-0 non-causal shard is exactly the rectangular form.
+        assert_eq!(
+            flash2_fwd_shard(512, d, blocks, 0, 256, false).hbm_elems,
+            flash2_fwd_rect(512, 256, d, blocks).hbm_elems
+        );
     }
 
     #[test]

@@ -257,6 +257,37 @@ fn flash2_bwd_measured_strictly_below_algorithm4() {
 }
 
 #[test]
+fn flash2_fwd_shard_analytic_matches_instrumented_offset_kernel() {
+    // The kv_offset plumbing's accounting mirror: an instrumented flash2
+    // run on a key shard (global column offset, causal tile-skip judged
+    // in global coordinates) must match the closed form
+    // access-for-access on divisible tilings. A high shard under a
+    // causal mask loads strictly fewer K/V tiles than a low one.
+    let (n, d) = (128usize, 8usize);
+    let (q, k, v) = qkv(n, d, 31);
+    let blocks = Blocks::explicit(16, 16);
+    let mut measured = Vec::new();
+    for (lo, hi) in [(0usize, 64usize), (64, 128), (32, 96)] {
+        for causal in [false, true] {
+            let cfg = AttnConfig { causal, kv_offset: lo, ..Default::default() };
+            let ks = k.slice_rows(lo, hi);
+            let vs = v.slice_rows(lo, hi);
+            let mut hbm = Hbm::new();
+            flash2_forward(&q, &ks, &vs, &cfg, blocks, 3, &mut hbm);
+            let pred =
+                cost::flash2_fwd_shard(n as u64, d as u64, blocks, lo as u64, hi as u64, causal);
+            assert_eq!(hbm.accesses(), pred.hbm_elems, "lo={lo} hi={hi} causal={causal}");
+            measured.push((lo, causal, hbm.accesses()));
+        }
+    }
+    let at = |lo: usize, causal: bool| {
+        measured.iter().find(|&&(l, c, _)| l == lo && c == causal).unwrap().2
+    };
+    assert!(at(64, true) < at(0, true), "high causal shard must skip more tiles");
+    assert_eq!(at(64, false), at(0, false), "non-causal shards of equal width match");
+}
+
+#[test]
 fn flash2_causal_analytic_matches_instrumented() {
     let (n, d, br, bc) = (128usize, 8usize, 16usize, 16usize);
     let (q, k, v) = qkv(n, d, 13);
