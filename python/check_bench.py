@@ -26,6 +26,16 @@ lost:
      legitimate cost is shard bookkeeping and the dynamic work queue —
      SHARDED_TOL bounds it.
 
+  4. block-sparse slower than dense flash2 on any (pass, n) cell whose
+     mask density is <= 50%. The sparse pair runs the dense pair's
+     per-tile arithmetic and *skips* zero blocks on the same tiling, so
+     at half density it does at most half the work — losing to dense
+     there is a scheduling/filter regression, not noise. Cells above
+     50% density are reported but not gated (the skip can't win by
+     construction); the bench always emits <=50%-density rows, and a
+     "sparse" section with no gateable cell fails the build like any
+     other missing section.
+
 Usage: python3 python/check_bench.py [BENCH_attn.json]
 """
 
@@ -50,6 +60,13 @@ SMOKE_BATCHED_TOL = 1.5
 # gate loosely enough that only a real regression (serialized shards,
 # duplicated work) trips; full runs keep the tight bound.
 SMOKE_SHARDED_TOL = 1.6
+# Block-sparse at <=50% density does at most half the dense work on the
+# same tiling, so it should win by ~2x+; 1.05x headroom (1.3x at smoke
+# sizes, where the tiles are tiny and timer noise proportionally large)
+# still catches any genuine loss.
+SPARSE_TOL = 1.05
+SMOKE_SPARSE_TOL = 1.3
+SPARSE_GATED_DENSITY = 0.5
 
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_attn.json"
@@ -60,14 +77,17 @@ def main() -> int:
     flash2_tol = SMOKE_FLASH2_TOL if smoke else FLASH2_TOL
     batched_tol = SMOKE_BATCHED_TOL if smoke else BATCHED_TOL
     sharded_tol = SMOKE_SHARDED_TOL if smoke else SHARDED_TOL
+    sparse_tol = SMOKE_SPARSE_TOL if smoke else SPARSE_TOL
     failures = []
     # Per-section cell counts: an empty/renamed array must not silently
-    # disable ITS gate while the others keep the build green.
-    section_cells = {"results": 0, "batched": 0, "sharded": 0}
+    # disable ITS gate while the others keep the build green. The
+    # "sparse" count only includes gateable (<=50% density) cells, so a
+    # bench that stopped emitting them fails here too.
+    section_cells = {"results": 0, "batched": 0, "sharded": 0, "sparse": 0}
 
     print(f"perf gate over {path} (smoke={smoke}, workers={workers}, "
           f"tolerances flash2 {flash2_tol}x / batched {batched_tol}x / "
-          f"sharded {sharded_tol}x)")
+          f"sharded {sharded_tol}x / sparse {sparse_tol}x)")
     for row in data.get("results", []):
         n = row["n"]
         for pass_name, ref_key, fast_keys in [
@@ -124,6 +144,34 @@ def main() -> int:
                     f"sharded {pass_name} slower than single-device at n={n}: "
                     f"{sharded_ns:.0f} ns vs {single_ns:.0f} ns (tol {sharded_tol}x)")
 
+    for row in data.get("sparse", []):
+        n = row["n"]
+        pattern = row.get("pattern", "?")
+        density = row["density"]
+        gated = density <= SPARSE_GATED_DENSITY
+        for pass_name, dense_key, sparse_key in [
+            ("fwd", "dense_fwd_ns", "sparse_fwd_ns"),
+            ("bwd", "dense_bwd_ns", "sparse_bwd_ns"),
+        ]:
+            dense_ns = row[dense_key]
+            sparse_ns = row[sparse_key]
+            ratio = sparse_ns / dense_ns if dense_ns else float("inf")
+            if not gated:
+                print(f"  sparse {pass_name:>3} n={n:>5} {pattern:<12} "
+                      f"(density {density:.2f} > {SPARSE_GATED_DENSITY}): "
+                      f"ratio {ratio:.3f}  not gated")
+                continue
+            section_cells["sparse"] += 1
+            verdict = "ok" if sparse_ns <= sparse_tol * dense_ns else "REGRESSION"
+            print(f"  sparse {pass_name:>3} n={n:>5} {pattern:<12} "
+                  f"(density {density:.2f}): dense {dense_ns:>12.0f} ns  "
+                  f"sparse {sparse_ns:>12.0f} ns  ratio {ratio:.3f}  {verdict}")
+            if sparse_ns > sparse_tol * dense_ns:
+                failures.append(
+                    f"block-sparse {pass_name} ({pattern}, density {density:.2f}) "
+                    f"slower than dense flash2 at n={n}: "
+                    f"{sparse_ns:.0f} ns vs {dense_ns:.0f} ns (tol {sparse_tol}x)")
+
     empty = [name for name, count in section_cells.items() if count == 0]
     if empty:
         print("PERF GATE ERROR: no (pass, n) cells found for section(s): "
@@ -136,8 +184,8 @@ def main() -> int:
         return 1
     cells = sum(section_cells.values())
     print(f"perf gate passed ({cells} cells): flash2 beats flash, "
-          "batched beats the per-slice loop, and sharding stays within "
-          "its overhead bound")
+          "batched beats the per-slice loop, sharding stays within its "
+          "overhead bound, and block-sparse beats dense at <=50% density")
     return 0
 
 if __name__ == "__main__":

@@ -16,6 +16,10 @@
 //!    (attn::distributed ring schedule, fwd AND bwd, bitwise-identical
 //!    arithmetic): rows land in BENCH_attn.json under "sharded" and the
 //!    gate bounds the scheduling overhead;
+//!  * block-sparse vs dense fast pair on the same tiling (butterfly +
+//!    local_global §3.3 patterns, fwd AND bwd): rows land under
+//!    "sparse" with their density, and the gate fails the build if
+//!    block-sparse at ≤50% density ever loses to dense flash2;
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
@@ -32,9 +36,11 @@ use std::path::Path;
 use std::time::Instant;
 
 use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
+use flashattn::attn::block_sparse::{block_sparse2_backward, block_sparse2_forward};
 use flashattn::attn::distributed::{flash_backward_sharded, flash_forward_sharded};
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
+use flashattn::attn::masks::BlockMask;
 use flashattn::attn::standard::standard_forward;
 use flashattn::attn::AttnConfig;
 use flashattn::bench::{mean_time, median_time};
@@ -351,17 +357,119 @@ fn sharded_head_to_head(smoke: bool) -> Vec<String> {
     json_rows
 }
 
-/// Assemble BENCH_attn.json (head-to-head + batched + sharded rows) at
-/// the repo root regardless of the cwd cargo bench picked.
-fn write_bench_json(smoke: bool, results: &[String], batched: &[String], sharded: &[String]) {
+/// Block-sparse vs dense fast pair on the SAME tile grid (a 32×32 mask
+/// grid at every size, so the §3.3 patterns stay well under 50%
+/// density: butterfly ≈ 0.34, local_global ≈ 0.15). The sparse kernels
+/// run the identical per-tile arithmetic and skip zero blocks, so at
+/// ≤50% density losing to dense is a scheduling regression, not noise —
+/// python/check_bench.py gates exactly those cells. Rows land in
+/// BENCH_attn.json under "sparse" with their measured density.
+fn sparse_head_to_head(smoke: bool) -> Vec<String> {
+    let (d, workers) = (D, WORKERS);
+    const TILES: usize = 32;
+    let mut t = Table::new(
+        "block-sparse vs dense flash2 (per [n,64] slice, same tiling, mean ns/iter)",
+        &[
+            "n",
+            "pattern",
+            "density",
+            "dense fwd (ms)",
+            "sparse fwd (ms)",
+            "dense bwd (ms)",
+            "sparse bwd (ms)",
+        ],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let sizes: &[usize] = if smoke { &[128, 256] } else { &[512, 1024, 4096] };
+    for &n in sizes {
+        let blocks = Blocks::explicit(n / TILES, n / TILES);
+        let mut rng = SplitMix64::new(4);
+        let q = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let cfg = AttnConfig::default();
+        let iters = if smoke { 5 } else if n >= 4096 { 2 } else { 5 };
+        let bwd_iters = if smoke { 5 } else if n >= 4096 { 1 } else { 3 };
+        // Dense side: the flash2 pair on the same tiling, measured once
+        // per size (both patterns compare against it).
+        let t_dense_fwd = mean_time(iters, || {
+            std::hint::black_box(flash2_forward(
+                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+            ));
+        });
+        let dense_fwd = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+        let t_dense_bwd = mean_time(bwd_iters, || {
+            std::hint::black_box(flash2_backward(
+                &q, &k, &v, &dense_fwd.o, &dout, dense_fwd.stats(), &cfg, blocks, workers,
+                &mut Hbm::new(),
+            ));
+        });
+        for pattern in ["butterfly", "local_global"] {
+            let mask = if pattern == "butterfly" {
+                BlockMask::butterfly(TILES, TILES)
+            } else {
+                BlockMask::local_global(TILES, TILES, 1, 1)
+            };
+            let density = mask.sparsity();
+            let t_sparse_fwd = mean_time(iters, || {
+                std::hint::black_box(block_sparse2_forward(
+                    &q, &k, &v, &mask, &cfg, blocks, workers, &mut Hbm::new(),
+                ));
+            });
+            let sparse_fwd =
+                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut Hbm::new());
+            let t_sparse_bwd = mean_time(bwd_iters, || {
+                std::hint::black_box(block_sparse2_backward(
+                    &q, &k, &v, &sparse_fwd.o, &dout, sparse_fwd.stats(), &mask, &cfg, blocks,
+                    workers, &mut Hbm::new(),
+                ));
+            });
+            t.row(vec![
+                n.to_string(),
+                pattern.to_string(),
+                format!("{density:.3}"),
+                format!("{:.2}", t_dense_fwd * 1e3),
+                format!("{:.2}", t_sparse_fwd * 1e3),
+                format!("{:.2}", t_dense_bwd * 1e3),
+                format!("{:.2}", t_sparse_bwd * 1e3),
+            ]);
+            json_rows.push(format!(
+                "    {{\"n\": {n}, \"pattern\": \"{pattern}\", \"density\": {density:.4}, \
+                 \"dense_fwd_ns\": {:.0}, \"sparse_fwd_ns\": {:.0}, \"fwd_speedup\": {:.3}, \
+                 \"dense_bwd_ns\": {:.0}, \"sparse_bwd_ns\": {:.0}, \"bwd_speedup\": {:.3}}}",
+                t_dense_fwd * 1e9,
+                t_sparse_fwd * 1e9,
+                t_dense_fwd / t_sparse_fwd,
+                t_dense_bwd * 1e9,
+                t_sparse_bwd * 1e9,
+                t_dense_bwd / t_sparse_bwd,
+            ));
+        }
+    }
+    t.print();
+    json_rows
+}
+
+/// Assemble BENCH_attn.json (head-to-head + batched + sharded + sparse
+/// rows) at the repo root regardless of the cwd cargo bench picked.
+fn write_bench_json(
+    smoke: bool,
+    results: &[String],
+    batched: &[String],
+    sharded: &[String],
+    sparse: &[String],
+) {
     let (d, workers) = (D, WORKERS);
     let json = format!(
         "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
          \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \
-         \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ],\n  \"sharded\": [\n{}\n  ]\n}}\n",
+         \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ],\n  \"sharded\": [\n{}\n  ],\n  \
+         \"sparse\": [\n{}\n  ]\n}}\n",
         results.join(",\n"),
         batched.join(",\n"),
-        sharded.join(",\n")
+        sharded.join(",\n"),
+        sparse.join(",\n")
     );
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_attn.json");
     match std::fs::write(&out, &json) {
@@ -444,6 +552,7 @@ fn main() {
     let results = fast_kernel_head_to_head(smoke);
     let batched = batched_head_to_head(smoke);
     let sharded = sharded_head_to_head(smoke);
-    write_bench_json(smoke, &results, &batched, &sharded);
+    let sparse = sparse_head_to_head(smoke);
+    write_bench_json(smoke, &results, &batched, &sharded, &sparse);
     artifacts();
 }

@@ -42,8 +42,14 @@
 
 use std::sync::Mutex;
 
+use super::block_sparse::{
+    check_mask_geometry, mask_tile_base, sparse_dq_row_sweep, sparse_row_block_sweep,
+};
 use super::flash::Blocks;
-use super::flash2::{dkv_col_sweep, dq_row_sweep, row_block_sweep, Flash2Output};
+use super::flash2::{
+    dkv_col_sweep, dkv_col_sweep_filtered, dq_row_sweep, row_block_sweep, Flash2Output,
+};
+use super::masks::BlockMask;
 use super::{AttnConfig, AttnGrads, AttnStats};
 use crate::sim::hbm::Hbm;
 use crate::tensor::{dot4, Tensor};
@@ -450,6 +456,281 @@ pub fn flash2_backward_batched(
     AttnGrads { dq: dq4, dk: dk4, dv: dv4 }
 }
 
+/// Resolve the mask for slice `s` of a [batch, heads, …] workload.
+/// Masks may be shared (one mask), per-head (`heads` masks, shared
+/// across the batch — the common multi-head-sparsity layout), or fully
+/// per-slice (`batch · heads` masks).
+fn mask_for<'m>(masks: &'m [BlockMask], heads: usize, slices: usize, s: usize) -> &'m BlockMask {
+    match masks.len() {
+        1 => &masks[0],
+        l if l == heads => &masks[s % heads],
+        l if l == slices => &masks[s],
+        l => panic!(
+            "block_sparse2 batched: {l} masks for {slices} slices ({heads} heads); \
+             pass 1, heads, or batch*heads masks"
+        ),
+    }
+}
+
+/// Batched multi-head fast **block-sparse** forward: the sparse
+/// counterpart of [`flash2_forward_batched`]. q: [batch, heads, n, d];
+/// k, v: [batch, heads, n_k, d]. Every batch·head·row-block work item
+/// runs through one dynamically-drained pool, dispatching the identical
+/// per-block sparse sweep (`attn::block_sparse::sparse_row_block_sweep`),
+/// so output is bitwise identical to the per-slice loop for any
+/// `workers`. Per-head masks are allowed (see [`mask_for`]); slice `s`
+/// runs with `bh_index = cfg.bh_index + s`.
+pub fn block_sparse2_forward_batched(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> BatchedFlash2Output {
+    let (b, h, n, d) = dims4(q, "block_sparse2_forward_batched Q");
+    let (bk, hk, n_k, dk) = dims4(k, "block_sparse2_forward_batched K");
+    assert_eq!(
+        (bk, hk, dk),
+        (b, h, d),
+        "block_sparse2_forward_batched: K batch/heads/feature mismatch"
+    );
+    assert_eq!(v.shape, k.shape, "block_sparse2_forward_batched: V shape mismatch");
+    let slices = b * h;
+    let mut o = Tensor::zeros(&[b, h, n, d]);
+    let mut lse = vec![0.0f32; slices * n];
+    if n == 0 || n_k == 0 {
+        // No keys: the per-slice kernel's defined all-masked semantics.
+        lse.fill(f32::NEG_INFINITY);
+        return BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } };
+    }
+    let tile_base = mask_tile_base(cfg.kv_offset, blocks.b_c);
+    let t_r = n.div_ceil(blocks.b_r);
+    let t_c = n_k.div_ceil(blocks.b_c);
+    for s in 0..slices {
+        check_mask_geometry(mask_for(masks, h, slices, s), t_r, tile_base, t_c);
+    }
+    let per_cfg: Vec<AttnConfig> = (0..slices)
+        .map(|s| AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() })
+        .collect();
+
+    struct FwdItem<'a> {
+        s: usize,
+        rb: usize,
+        o_win: &'a mut [f32],
+        lse_win: &'a mut [f32],
+    }
+
+    let o_wins = split_windows(
+        &mut o.data,
+        (0..slices).flat_map(|_| (0..t_r).map(|rb| block_rows(rb, blocks.b_r, n) * d)),
+    );
+    let lse_wins = split_windows(
+        &mut lse,
+        (0..slices).flat_map(|_| (0..t_r).map(|rb| block_rows(rb, blocks.b_r, n))),
+    );
+    let items: Vec<FwdItem<'_>> = o_wins
+        .into_iter()
+        .zip(lse_wins)
+        .enumerate()
+        .map(|(idx, (o_win, lse_win))| {
+            FwdItem { s: idx / t_r, rb: idx % t_r, o_win, lse_win }
+        })
+        .collect();
+
+    run_pool(items, workers, hbm, |it| {
+        let cfg_s = &per_cfg[it.s];
+        let mask = mask_for(masks, h, slices, it.s);
+        sparse_row_block_sweep(
+            &q.data[it.s * n * d..(it.s + 1) * n * d],
+            &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+            &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+            n,
+            n_k,
+            d,
+            mask,
+            tile_base,
+            cfg_s,
+            blocks,
+            cfg_s.tau_for(d),
+            cfg_s.kv_limit(n_k),
+            it.rb,
+            it.rb + 1,
+            it.o_win,
+            it.lse_win,
+        )
+    });
+
+    BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }
+}
+
+/// Batched multi-head fast block-sparse backward: the sparse
+/// counterpart of [`flash2_backward_batched`] — per-slice D epilogues,
+/// then every batch·head·row-block dQ item and batch·head·column-block
+/// dK/dV item through one pool per phase, each skipping its mask's zero
+/// blocks. Bitwise identical to the per-slice
+/// `attn::block_sparse::block_sparse2_backward` loop for any `workers`.
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_backward_batched(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> AttnGrads {
+    let (b, h, n, d) = dims4(q, "block_sparse2_backward_batched Q");
+    let (bk, hk, n_k, dk) = dims4(k, "block_sparse2_backward_batched K");
+    assert_eq!(
+        (bk, hk, dk),
+        (b, h, d),
+        "block_sparse2_backward_batched: K batch/heads/feature mismatch"
+    );
+    assert_eq!(v.shape, k.shape, "block_sparse2_backward_batched: V shape mismatch");
+    assert_eq!(o.shape, q.shape, "block_sparse2_backward_batched: O shape mismatch");
+    assert_eq!(dout.shape, q.shape, "block_sparse2_backward_batched: dO shape mismatch");
+    assert_eq!(stats.n, n, "block_sparse2_backward_batched: stats row-count mismatch");
+    assert_eq!(
+        stats.lse.len(),
+        b * h * n,
+        "block_sparse2_backward_batched: stats slice-count mismatch"
+    );
+    let slices = b * h;
+    let mut dq4 = Tensor::zeros(&[b, h, n, d]);
+    let mut dk4 = Tensor::zeros(&[b, h, n_k, d]);
+    let mut dv4 = Tensor::zeros(&[b, h, n_k, d]);
+    if n == 0 || n_k == 0 {
+        return AttnGrads { dq: dq4, dk: dk4, dv: dv4 };
+    }
+    let tile_base = mask_tile_base(cfg.kv_offset, blocks.b_c);
+    let t_r = n.div_ceil(blocks.b_r);
+    let t_c = n_k.div_ceil(blocks.b_c);
+    for s in 0..slices {
+        check_mask_geometry(mask_for(masks, h, slices, s), t_r, tile_base, t_c);
+    }
+    let per_cfg: Vec<AttnConfig> = (0..slices)
+        .map(|s| AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() })
+        .collect();
+
+    // Phase 0, per slice: D_i = rowsum(dO ∘ O), one epilogue pass each —
+    // identical accounting to the per-slice kernel.
+    let d_vecs: Vec<Vec<f32>> = (0..slices)
+        .map(|s| {
+            hbm.load(2 * n * d);
+            let base = s * n * d;
+            let dv: Vec<f32> = (0..n)
+                .map(|r| {
+                    dot4(
+                        &dout.data[base + r * d..base + (r + 1) * d],
+                        &o.data[base + r * d..base + (r + 1) * d],
+                    )
+                })
+                .collect();
+            hbm.store(n);
+            dv
+        })
+        .collect();
+
+    struct DqItem<'a> {
+        s: usize,
+        rb: usize,
+        dq_win: &'a mut [f32],
+    }
+    struct DkvItem<'a> {
+        s: usize,
+        cb: usize,
+        dk_win: &'a mut [f32],
+        dv_win: &'a mut [f32],
+    }
+
+    let dq_wins = split_windows(
+        &mut dq4.data,
+        (0..slices).flat_map(|_| (0..t_r).map(|rb| block_rows(rb, blocks.b_r, n) * d)),
+    );
+    let dq_items: Vec<DqItem<'_>> = dq_wins
+        .into_iter()
+        .enumerate()
+        .map(|(idx, dq_win)| DqItem { s: idx / t_r, rb: idx % t_r, dq_win })
+        .collect();
+    let dk_wins = split_windows(
+        &mut dk4.data,
+        (0..slices).flat_map(|_| (0..t_c).map(|cb| block_rows(cb, blocks.b_c, n_k) * d)),
+    );
+    let dv_wins = split_windows(
+        &mut dv4.data,
+        (0..slices).flat_map(|_| (0..t_c).map(|cb| block_rows(cb, blocks.b_c, n_k) * d)),
+    );
+    let dkv_items: Vec<DkvItem<'_>> = dk_wins
+        .into_iter()
+        .zip(dv_wins)
+        .enumerate()
+        .map(|(idx, (dk_win, dv_win))| {
+            DkvItem { s: idx / t_c, cb: idx % t_c, dk_win, dv_win }
+        })
+        .collect();
+
+    // Phase 1: all slices' dQ row blocks through one pool.
+    run_pool(dq_items, workers, hbm, |it| {
+        let cfg_s = &per_cfg[it.s];
+        let mask = mask_for(masks, h, slices, it.s);
+        sparse_dq_row_sweep(
+            &q.data[it.s * n * d..(it.s + 1) * n * d],
+            &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+            &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+            &dout.data[it.s * n * d..(it.s + 1) * n * d],
+            &stats.lse[it.s * n..(it.s + 1) * n],
+            &d_vecs[it.s],
+            n,
+            n_k,
+            d,
+            mask,
+            tile_base,
+            cfg_s,
+            blocks,
+            cfg_s.tau_for(d),
+            cfg_s.kv_limit(n_k),
+            it.rb,
+            it.rb + 1,
+            it.dq_win,
+        )
+    });
+
+    // Phase 2: all slices' dK/dV column blocks through one pool.
+    run_pool(dkv_items, workers, hbm, |it| {
+        let cfg_s = &per_cfg[it.s];
+        let mask = mask_for(masks, h, slices, it.s);
+        dkv_col_sweep_filtered(
+            &q.data[it.s * n * d..(it.s + 1) * n * d],
+            &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+            &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+            &dout.data[it.s * n * d..(it.s + 1) * n * d],
+            &stats.lse[it.s * n..(it.s + 1) * n],
+            &d_vecs[it.s],
+            n,
+            n_k,
+            d,
+            cfg_s,
+            blocks,
+            cfg_s.tau_for(d),
+            cfg_s.kv_limit(n_k),
+            it.cb,
+            it.cb + 1,
+            it.dk_win,
+            it.dv_win,
+            |i, j| mask.get(i, tile_base + j),
+        )
+    });
+
+    AttnGrads { dq: dq4, dk: dk4, dv: dv4 }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -780,5 +1061,124 @@ mod tests {
         );
         assert_eq!(hb_batched.loads, 4 * hb_slice.loads);
         assert_eq!(hb_batched.stores, 4 * hb_slice.stores);
+    }
+
+    #[test]
+    fn sparse_batched_bitwise_matches_per_slice_loop() {
+        // The sparse scheduler contract, per-head masks included: a
+        // [b, h, n, d] workload through block_sparse2_forward_batched /
+        // _backward_batched must be BITWISE equal to the per-slice
+        // block_sparse2 loop, for any worker count.
+        use crate::attn::block_sparse::{block_sparse2_backward, block_sparse2_forward};
+        for_each_case("sparse_batched_parity", 12, |rng| {
+            let b = usize_in(rng, 1, 2);
+            let h = usize_in(rng, 1, 3);
+            let n = 8 * usize_in(rng, 1, 4);
+            let n_k = 8 * usize_in(rng, 1, 5);
+            let d = *choose(rng, &[2usize, 4, 8]);
+            let blocks = Blocks::explicit(8, 8);
+            let (t_r, t_c) = (n / 8, n_k / 8);
+            let causal = rng.next_f32() < 0.5;
+            let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
+            let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
+            let workers = usize_in(rng, 1, 6);
+            // Per-head masks (shared across the batch): butterfly for
+            // even heads, local_global for odd.
+            let masks: Vec<BlockMask> = (0..h)
+                .map(|hh| {
+                    if hh % 2 == 0 {
+                        BlockMask::butterfly(t_r, t_c)
+                    } else {
+                        BlockMask::local_global(t_r, t_c, 1, 1)
+                    }
+                })
+                .collect();
+            let q = rand4(&[b, h, n, d], rng);
+            let k = rand4(&[b, h, n_k, d], rng);
+            let v = rand4(&[b, h, n_k, d], rng);
+            let dout = rand4(&[b, h, n, d], rng);
+            let cfg =
+                AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let ctx = format!(
+                "b={b} h={h} n={n} n_k={n_k} d={d} causal={causal} kv_len={kv_len:?} \
+                 p={dropout_p} w={workers}"
+            );
+            let bfwd = block_sparse2_forward_batched(
+                &q, &k, &v, &masks, &cfg, blocks, workers, &mut Hbm::new(),
+            );
+            let bg = block_sparse2_backward_batched(
+                &q, &k, &v, &bfwd.o, &dout, &bfwd.stats, &masks, &cfg, blocks, workers,
+                &mut Hbm::new(),
+            );
+            for s in 0..b * h {
+                let cfg_s = AttnConfig { bh_index: s as u32, ..cfg.clone() };
+                let mask = &masks[s % h];
+                let (qs, ks, vs) = (bh_slice(&q, s), bh_slice(&k, s), bh_slice(&v, s));
+                let f = block_sparse2_forward(
+                    &qs, &ks, &vs, mask, &cfg_s, blocks, 1, &mut Hbm::new(),
+                );
+                assert_eq!(
+                    &bfwd.o.data[s * n * d..(s + 1) * n * d],
+                    &f.o.data[..],
+                    "O slice {s}: {ctx}"
+                );
+                assert_eq!(&bfwd.stats.lse[s * n..(s + 1) * n], &f.lse[..], "lse {s}: {ctx}");
+                let g = block_sparse2_backward(
+                    &qs, &ks, &vs, &f.o, &bh_slice(&dout, s), f.stats(), mask, &cfg_s, blocks,
+                    1, &mut Hbm::new(),
+                );
+                assert_eq!(
+                    &bg.dq.data[s * n * d..(s + 1) * n * d],
+                    &g.dq.data[..],
+                    "dQ slice {s}: {ctx}"
+                );
+                assert_eq!(
+                    &bg.dk.data[s * n_k * d..(s + 1) * n_k * d],
+                    &g.dk.data[..],
+                    "dK slice {s}: {ctx}"
+                );
+                assert_eq!(
+                    &bg.dv.data[s * n_k * d..(s + 1) * n_k * d],
+                    &g.dv.data[..],
+                    "dV slice {s}: {ctx}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_batched_traffic_invariant_across_worker_counts() {
+        // Scheduling must change neither numerics nor modeled traffic —
+        // the sparse analogue of the dense invariance test above.
+        let mut rng = SplitMix64::new(43);
+        let (b, h, n, d) = (2usize, 2usize, 32usize, 8usize);
+        let q = rand4(&[b, h, n, d], &mut rng);
+        let k = rand4(&[b, h, n, d], &mut rng);
+        let v = rand4(&[b, h, n, d], &mut rng);
+        let dout = rand4(&[b, h, n, d], &mut rng);
+        let masks = vec![BlockMask::butterfly(4, 4)];
+        let cfg = AttnConfig::causal();
+        let blocks = Blocks::explicit(8, 8);
+        let mut h1 = Hbm::new();
+        let base = block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut h1);
+        let mut hb1 = Hbm::new();
+        let gbase = block_sparse2_backward_batched(
+            &q, &k, &v, &base.o, &dout, &base.stats, &masks, &cfg, blocks, 1, &mut hb1,
+        );
+        for workers in [2usize, 5, 16] {
+            let mut hw = Hbm::new();
+            let multi =
+                block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, workers, &mut hw);
+            assert_eq!(base.o.data, multi.o.data, "O at workers={workers}");
+            assert_eq!((h1.loads, h1.stores), (hw.loads, hw.stores), "fwd hbm at w={workers}");
+            let mut hbw = Hbm::new();
+            let g = block_sparse2_backward_batched(
+                &q, &k, &v, &base.o, &dout, &base.stats, &masks, &cfg, blocks, workers, &mut hbw,
+            );
+            assert_eq!(gbase.dq.data, g.dq.data, "dQ at workers={workers}");
+            assert_eq!(gbase.dk.data, g.dk.data, "dK at workers={workers}");
+            assert_eq!(gbase.dv.data, g.dv.data, "dV at workers={workers}");
+            assert_eq!((hb1.loads, hb1.stores), (hbw.loads, hbw.stores), "bwd hbm at w={workers}");
+        }
     }
 }

@@ -1,13 +1,80 @@
-//! Algorithm 5: block-sparse FlashAttention — the dense tiled loop with
-//! zero blocks skipped. IO complexity Θ(Nd + N²d²s/M) (Proposition 4).
+//! Block-sparse FlashAttention (§3.3) — both halves of the two-pair
+//! policy for the sparse workload:
+//!
+//! * [`block_sparse_forward`] — Algorithm 5, the *faithful instrumented
+//!   reference*: the dense tiled loop (K/V-outer, accumulators
+//!   round-tripped to HBM) with zero blocks skipped. IO complexity
+//!   Θ(Nd + N²d²s/M) (Proposition 4). Local key coordinates only
+//!   (`kv_offset == 0` asserted): this mirror stays line-for-line with
+//!   the paper's pseudo-code.
+//! * [`block_sparse2_forward`] / [`block_sparse2_backward`] — the *fast
+//!   production pair*: the FlashAttention-2-style Q-outer sweeps of
+//!   `attn::flash2` with one extra skip, the `BlockMask` zero-block
+//!   filter. The filter is the ONLY difference from the dense pair —
+//!   live tiles run the dense per-tile arithmetic bit for bit, so a
+//!   dense mask makes both kernels **bitwise identical** to
+//!   `flash2_forward`/`flash2_backward` for any worker count (asserted
+//!   below). Mask columns are interpreted in **global** key
+//!   coordinates: column tile `t` of the mask covers global keys
+//!   [t·B_c, (t+1)·B_c), and a key shard at `cfg.kv_offset` (which
+//!   must be tile-aligned, as the sharded driver's shards are) reads
+//!   tile `kv_offset/B_c + local_tile` — so the sequence-parallel path
+//!   can hand every shard the same global mask and each shard skips
+//!   exactly the blocks the unsharded kernel skips.
+//!
+//! The fast pair's HBM accounting mirrors the dense pair's: Q (and in
+//! the backward Q/dO/D/L) load once per row block, outputs store
+//! exactly once, and only *live* tiles stream K/V (forward + dQ phase)
+//! or Q/dO (dK/dV phase) — the closed forms in
+//! `sim::cost::block_sparse2_fwd`/`block_sparse2_bwd` are asserted
+//! access-for-access in `rust/tests/io_complexity.rs`, and traffic is
+//! strictly decreasing in the number of live blocks (Proposition 4).
 
 use super::flash::{tile_fully_unmasked, Blocks};
+use super::flash2::{
+    dkv_col_sweep_filtered, stream_kv_dq_filtered, stream_kv_filtered, write_epilogue,
+    Flash2Output, RowBlockState,
+};
 use super::masks::{masked_score, BlockMask, NEG_INF};
-use super::{AttnConfig, AttnOutput};
+use super::{AttnConfig, AttnGrads, AttnOutput, AttnStats};
 use crate::sim::hbm::Hbm;
-use crate::tensor::Tensor;
+use crate::tensor::{dot4, Tensor};
 
-/// Algorithm 5 forward. `mask` has shape [ceil(n/b_r), ceil(n/b_c)].
+/// Global column-tile index of a slice's local tile 0. The mask is
+/// indexed in global tiles, so a key shard must start on a column-tile
+/// boundary — the sharded driver's shards are tile-aligned by
+/// construction, and anything else would put the mask's blocks on the
+/// wrong global columns.
+pub(crate) fn mask_tile_base(kv_offset: usize, b_c: usize) -> usize {
+    assert_eq!(
+        kv_offset % b_c,
+        0,
+        "block_sparse2: kv_offset ({kv_offset}) must align to whole column tiles (b_c = {b_c})"
+    );
+    kv_offset / b_c
+}
+
+/// The mask must have exactly `t_r` row tiles and cover this slice's
+/// global column span. A key shard sees a *window* of the global mask,
+/// so the mask may extend past `tile_base + t_c` (later shards own
+/// those tiles); with `kv_offset = 0` and a mask built for this K/V
+/// this reduces to the exact-geometry check.
+pub(crate) fn check_mask_geometry(mask: &BlockMask, t_r: usize, tile_base: usize, t_c: usize) {
+    assert_eq!(
+        mask.t_r, t_r,
+        "mask geometry mismatch: {} row tiles for t_r = {t_r}",
+        mask.t_r
+    );
+    assert!(
+        mask.t_c >= tile_base + t_c,
+        "mask geometry mismatch: {} column tiles < tile base {tile_base} + t_c {t_c}",
+        mask.t_c
+    );
+}
+
+/// Algorithm 5 forward — the faithful instrumented reference. `mask`
+/// has shape [ceil(n/b_r), ceil(n_k/b_c)]; K/V may be rectangular
+/// (n_k ≠ n), e.g. cross-attention shapes.
 pub fn block_sparse_forward(
     q: &Tensor,
     k: &Tensor,
@@ -18,17 +85,16 @@ pub fn block_sparse_forward(
     hbm: &mut Hbm,
 ) -> AttnOutput {
     let (n, d) = (q.rows(), q.cols());
-    // The block-sparse mirror is single-device: K/V are square with Q and
-    // the sparsity pattern M is indexed in local tile coordinates, so a
-    // key shard cannot be expressed here. Reject the sharded config
-    // loudly instead of silently placing M's blocks on the wrong global
-    // columns; sequence-parallel callers shard the dense kernels.
-    assert_eq!(cfg.kv_offset, 0, "block_sparse_forward: key shards are not supported");
+    let n_k = k.rows();
+    // The reference mirror stays in local key coordinates, line for line
+    // with the paper's pseudo-code. Key shards go through the fast pair
+    // (`block_sparse2_forward`), whose mask columns are global.
+    assert_eq!(cfg.kv_offset, 0, "block_sparse_forward: key shards go through block_sparse2");
     let tau = cfg.tau_for(d);
-    let kv_limit = cfg.kv_limit(n);
+    let kv_limit = cfg.kv_limit(n_k);
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = n.div_ceil(b_r);
-    let t_c = n.div_ceil(b_c);
+    let t_c = n_k.div_ceil(b_c);
     assert_eq!((mask.t_r, mask.t_c), (t_r, t_c), "mask geometry mismatch");
 
     let mut o = Tensor::zeros(&[n, d]);
@@ -42,7 +108,7 @@ pub fn block_sparse_forward(
 
     for j in 0..t_c {
         let c0 = j * b_c;
-        let c1 = ((j + 1) * b_c).min(n);
+        let c1 = ((j + 1) * b_c).min(n_k);
         // Skip loading K_j/V_j entirely if column-block j is all-zero.
         if (0..t_r).all(|i| !mask.get(i, j)) {
             continue;
@@ -118,11 +184,337 @@ pub fn block_sparse_forward(
     AttnOutput { o, l, m }
 }
 
+/// Fast block-sparse forward: the Q-outer production kernel
+/// (`attn::flash2::flash2_forward`) with the `BlockMask` zero-block
+/// skip fused into the K/V stream. q: [n, d]; k, v: [n_k, d]
+/// (rectangular K/V and key shards both supported — `cfg.kv_offset`
+/// shifts the slice's mask window, see the module docs). Per row block,
+/// Q loads once and the accumulators live on chip for the whole sweep;
+/// only live column tiles load K/V; O and the logsumexp store exactly
+/// once. `workers` bounds the thread count; the result is bitwise
+/// independent of it, and with a dense mask bitwise identical to
+/// `flash2_forward`.
+pub fn block_sparse2_forward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> Flash2Output {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    let tau = cfg.tau_for(d);
+    let kv_limit = cfg.kv_limit(n_k);
+    let b_r = blocks.b_r;
+    let t_r = n.div_ceil(b_r);
+
+    let mut o = Tensor::zeros(&[n, d]);
+    let mut lse = vec![0.0f32; n];
+    if t_r == 0 || n_k == 0 {
+        // No keys at all: the defined all-masked semantics (zero rows,
+        // lse = -inf), exactly as the dense fast kernel.
+        lse.fill(f32::NEG_INFINITY);
+        return Flash2Output { o, lse };
+    }
+    let tile_base = mask_tile_base(cfg.kv_offset, blocks.b_c);
+    check_mask_geometry(mask, t_r, tile_base, n_k.div_ceil(blocks.b_c));
+
+    let w = workers.max(1).min(t_r);
+    let chunk = t_r.div_ceil(w);
+    let (qd, kd, vd) = (q.data.as_slice(), k.data.as_slice(), v.data.as_slice());
+
+    std::thread::scope(|scope| {
+        // Disjoint contiguous per-worker windows, exactly the dense
+        // kernel's partition (attn::flash2::flash2_forward).
+        let o_chunks = o.data.chunks_mut(chunk * b_r * d);
+        let lse_chunks = lse.chunks_mut(chunk * b_r);
+        let mut handles = Vec::new();
+        for (wi, (o_mine, lse_mine)) in o_chunks.zip(lse_chunks).enumerate() {
+            let rb_lo = wi * chunk;
+            let rb_hi = ((wi + 1) * chunk).min(t_r);
+            handles.push(scope.spawn(move || {
+                sparse_row_block_sweep(
+                    qd, kd, vd, n, n_k, d, mask, tile_base, cfg, blocks, tau, kv_limit, rb_lo,
+                    rb_hi, o_mine, lse_mine,
+                )
+            }));
+        }
+        for h in handles {
+            let local = h.join().expect("block_sparse2 worker panicked");
+            hbm.merge(&local);
+        }
+    });
+
+    Flash2Output { o, lse }
+}
+
+/// Sequential sparse sweep over row blocks [rb_lo, rb_hi): the dense
+/// [`super::flash2::row_block_sweep`] with the mask filter on the K/V
+/// stream. Flat row-major slices and self-contained per-block
+/// arithmetic, so the batched scheduler dispatches single-block work
+/// items through exactly this path (`attn::batched`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sparse_row_block_sweep(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    n_k: usize,
+    d: usize,
+    mask: &BlockMask,
+    tile_base: usize,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_limit: usize,
+    rb_lo: usize,
+    rb_hi: usize,
+    o_out: &mut [f32],
+    lse_out: &mut [f32],
+) -> Hbm {
+    let b_r = blocks.b_r;
+    let mut hbm = Hbm::new();
+    let mut state = RowBlockState::new(blocks, d);
+
+    for i in rb_lo..rb_hi {
+        let r0 = i * b_r;
+        let r1 = ((i + 1) * b_r).min(n);
+        let br = r1 - r0;
+        // Q_i once per row block (the dense kernel's accounting — a
+        // fully-dead row block still owns its zero/epilogue output);
+        // only live column tiles stream K/V.
+        hbm.load(br * d);
+        state.reset(br, d);
+        stream_kv_filtered(
+            &mut state,
+            &q[r0 * d..r1 * d],
+            k,
+            v,
+            n_k,
+            n,
+            d,
+            r0,
+            r1,
+            cfg,
+            blocks,
+            tau,
+            kv_limit,
+            &mut hbm,
+            |j| mask.get(i, tile_base + j),
+        );
+        let off = (i - rb_lo) * b_r;
+        write_epilogue(
+            &state,
+            br,
+            d,
+            &mut o_out[off * d..off * d + br * d],
+            &mut lse_out[off..off + br],
+            &mut hbm,
+        );
+    }
+
+    hbm
+}
+
+/// Fast block-sparse backward: the two-phase production gradient kernel
+/// (`attn::flash2::flash2_backward`) with the zero-block skip in both
+/// phases — phase 1 (Q-outer dQ) never loads a zero block's K/V, phase
+/// 2 (column-parallel dK/dV) never streams a zero block's Q/dO. `D =
+/// rowsum(dO ∘ O)` is precomputed in one epilogue pass; both phases
+/// recompute `P = exp(s − L)` from the forward's logsumexp and fan out
+/// over `std::thread::scope` workers with bitwise
+/// worker-count-independent output. With a dense mask this is
+/// `flash2_backward` bit for bit. Rows whose logsumexp is `-inf`
+/// (fully masked, including rows with no live block at all) contribute
+/// zero gradient everywhere.
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_backward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: AttnStats<'_>,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+) -> AttnGrads {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    assert_eq!(k.cols(), d, "block_sparse2_backward: K feature dim mismatch");
+    assert_eq!((v.rows(), v.cols()), (n_k, d), "block_sparse2_backward: V shape mismatch");
+    assert_eq!((o.rows(), o.cols()), (n, d), "block_sparse2_backward: O shape mismatch");
+    assert_eq!((dout.rows(), dout.cols()), (n, d), "block_sparse2_backward: dO shape mismatch");
+    assert_eq!(stats.len(), n, "block_sparse2_backward: stats length mismatch");
+    let tau = cfg.tau_for(d);
+    let kv_limit = cfg.kv_limit(n_k);
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let t_r = n.div_ceil(b_r);
+    let t_c = n_k.div_ceil(b_c);
+
+    let mut dq = Tensor::zeros(&[n, d]);
+    let mut dk = Tensor::zeros(&[n_k, d]);
+    let mut dv = Tensor::zeros(&[n_k, d]);
+    if t_r == 0 || t_c == 0 {
+        return AttnGrads { dq, dk, dv };
+    }
+    let tile_base = mask_tile_base(cfg.kv_offset, b_c);
+    check_mask_geometry(mask, t_r, tile_base, t_c);
+
+    // Phase 0 (epilogue pass): D_i = rowsum(dO ∘ O), once.
+    hbm.load(2 * n * d);
+    let d_vec: Vec<f32> = (0..n).map(|r| dot4(dout.row(r), o.row(r))).collect();
+    hbm.store(n);
+    let lse = stats.to_lse_vec();
+    let (qd, kd, vd, dod) =
+        (q.data.as_slice(), k.data.as_slice(), v.data.as_slice(), dout.data.as_slice());
+
+    // Phase 1: dQ with a Q-outer sweep over disjoint per-worker windows.
+    let w = workers.max(1).min(t_r);
+    let chunk = t_r.div_ceil(w);
+    std::thread::scope(|scope| {
+        let dq_chunks = dq.data.chunks_mut(chunk * b_r * d);
+        let mut handles = Vec::new();
+        for (wi, dq_mine) in dq_chunks.enumerate() {
+            let rb_lo = wi * chunk;
+            let rb_hi = ((wi + 1) * chunk).min(t_r);
+            let (lse, d_vec) = (&lse, &d_vec);
+            handles.push(scope.spawn(move || {
+                sparse_dq_row_sweep(
+                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, mask, tile_base, cfg, blocks, tau,
+                    kv_limit, rb_lo, rb_hi, dq_mine,
+                )
+            }));
+        }
+        for h in handles {
+            let local = h.join().expect("block_sparse2_backward dQ worker panicked");
+            hbm.merge(&local);
+        }
+    });
+
+    // Phase 2: dK/dV with the column-block-parallel sweep; the filter
+    // skips a zero block's whole Q/dO stream.
+    let w = workers.max(1).min(t_c);
+    let chunk = t_c.div_ceil(w);
+    std::thread::scope(|scope| {
+        let dk_chunks = dk.data.chunks_mut(chunk * b_c * d);
+        let dv_chunks = dv.data.chunks_mut(chunk * b_c * d);
+        let mut handles = Vec::new();
+        for (wi, (dk_mine, dv_mine)) in dk_chunks.zip(dv_chunks).enumerate() {
+            let cb_lo = wi * chunk;
+            let cb_hi = ((wi + 1) * chunk).min(t_c);
+            let (lse, d_vec) = (&lse, &d_vec);
+            handles.push(scope.spawn(move || {
+                dkv_col_sweep_filtered(
+                    qd,
+                    kd,
+                    vd,
+                    dod,
+                    lse,
+                    d_vec,
+                    n,
+                    n_k,
+                    d,
+                    cfg,
+                    blocks,
+                    tau,
+                    kv_limit,
+                    cb_lo,
+                    cb_hi,
+                    dk_mine,
+                    dv_mine,
+                    |i, j| mask.get(i, tile_base + j),
+                )
+            }));
+        }
+        for h in handles {
+            let local = h.join().expect("block_sparse2_backward dK/dV worker panicked");
+            hbm.merge(&local);
+        }
+    });
+
+    AttnGrads { dq, dk, dv }
+}
+
+/// Phase-1 sweep over Q row blocks [rb_lo, rb_hi): the dense
+/// [`super::flash2::dq_row_sweep`] with the mask filter on the K/V
+/// stream. Flat slices, single-block-dispatchable (see
+/// [`sparse_row_block_sweep`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sparse_dq_row_sweep(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
+    lse: &[f32],
+    d_vec: &[f32],
+    n: usize,
+    n_k: usize,
+    d: usize,
+    mask: &BlockMask,
+    tile_base: usize,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_limit: usize,
+    rb_lo: usize,
+    rb_hi: usize,
+    dq_out: &mut [f32],
+) -> Hbm {
+    let (b_r, b_c) = (blocks.b_r, blocks.b_c);
+    let row_base = rb_lo * b_r;
+    let mut hbm = Hbm::new();
+    let mut s_buf = vec![0.0f32; b_r * b_c];
+    let mut dp_buf = vec![0.0f32; b_r * b_c];
+
+    for i in rb_lo..rb_hi {
+        let r0 = i * b_r;
+        let r1 = ((i + 1) * b_r).min(n);
+        let br = r1 - r0;
+        // Q_i, dO_i, D_i, L_i once per row block; dQ_i accumulates in
+        // the worker-owned window and stores once below.
+        hbm.load(2 * br * d + 2 * br);
+        stream_kv_dq_filtered(
+            &mut dq_out[(r0 - row_base) * d..(r1 - row_base) * d],
+            &q[r0 * d..r1 * d],
+            &dout[r0 * d..r1 * d],
+            k,
+            v,
+            n_k,
+            n,
+            d,
+            r0,
+            r1,
+            lse,
+            d_vec,
+            cfg,
+            blocks,
+            tau,
+            kv_limit,
+            &mut s_buf,
+            &mut dp_buf,
+            &mut hbm,
+            |j| mask.get(i, tile_base + j),
+        );
+        hbm.store(br * d);
+    }
+
+    hbm
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attn::flash::flash_forward;
+    use crate::attn::flash2::{flash2_backward, flash2_forward};
+    use crate::attn::masks::dropout_scale;
     use crate::attn::standard::standard_forward;
+    use crate::util::prop::{choose, for_each_case, usize_in};
     use crate::util::rng::SplitMix64;
 
     fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
@@ -198,6 +590,25 @@ mod tests {
     }
 
     #[test]
+    fn rectangular_kv_tall_and_wide_geometry() {
+        // Satellite fix: t_c derives from the key count, not the query
+        // count — tall (n_k < n) and wide (n_k > n) grids both work for
+        // the reference kernel and match a dense oracle over the keys.
+        let mut rng = SplitMix64::new(4);
+        let q = Tensor::randn(&[24, 8], &mut rng, 1.0);
+        for n_k in [8usize, 40] {
+            let k = Tensor::randn(&[n_k, 8], &mut rng, 1.0);
+            let v = Tensor::randn(&[n_k, 8], &mut rng, 1.0);
+            let blocks = Blocks::explicit(8, 8);
+            let mask = BlockMask::dense(3, n_k / 8);
+            let cfg = AttnConfig::default();
+            let bs = block_sparse_forward(&q, &k, &v, &mask, &cfg, blocks, &mut Hbm::new());
+            let fl = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
+            assert!(bs.o.max_abs_diff(&fl.o) < 1e-5, "n_k={n_k}");
+        }
+    }
+
+    #[test]
     fn butterfly_closer_to_dense_than_antilocal() {
         // Quality claim behind Table 3: the butterfly pattern (diagonal +
         // power-of-two bands) approximates dense attention better than an
@@ -237,5 +648,352 @@ mod tests {
         let e_butter = err(&butter);
         let e_anti = err(&anti);
         assert!(e_butter < e_anti, "butterfly {e_butter} vs anti-local {e_anti}");
+    }
+
+    // ---- fast pair (block_sparse2) ----
+
+    /// Element-level sparse oracle, independent of every tiled kernel:
+    /// softmax over the keys whose block is live (and causal/padding
+    /// allowed, in global coordinates), dropout applied to P after
+    /// normalisation (the kernels' convention).
+    fn sparse_oracle_forward(
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        mask: &BlockMask,
+        cfg: &AttnConfig,
+        blocks: Blocks,
+    ) -> Tensor {
+        let (n, d) = (q.rows(), q.cols());
+        let n_k = k.rows();
+        let tau = cfg.tau_for(d);
+        let kv_limit = cfg.kv_limit(n_k);
+        let mut o = Tensor::zeros(&[n, d]);
+        for r in 0..n {
+            let i = r / blocks.b_r;
+            let allowed: Vec<usize> = (0..n_k)
+                .filter(|&c| {
+                    let g = cfg.kv_offset + c;
+                    mask.get(i, g / blocks.b_c) && !(cfg.causal && g > r) && g < kv_limit
+                })
+                .collect();
+            if allowed.is_empty() {
+                continue; // zero-mass row keeps O = 0
+            }
+            let scores: Vec<f32> =
+                allowed.iter().map(|&c| tau * dot4(q.row(r), k.row(c))).collect();
+            let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let e: Vec<f32> = scores.iter().map(|&s| (s - mx).exp()).collect();
+            let z: f32 = e.iter().sum();
+            for (&c, &ev) in allowed.iter().zip(&e) {
+                let p = ev / z
+                    * dropout_scale(
+                        cfg.bh_index,
+                        r,
+                        cfg.kv_offset + c,
+                        n,
+                        cfg.dropout_seed,
+                        cfg.dropout_p,
+                    );
+                let orow = o.row_mut(r);
+                for cd in 0..d {
+                    orow[cd] += p * v.row(c)[cd];
+                }
+            }
+        }
+        o
+    }
+
+    #[test]
+    fn dense_mask_forward_bitwise_equals_flash2_grid() {
+        // The ISSUE grid: causal × dropout × rectangular kv_len × worker
+        // count {1, 2, 5}. A dense mask leaves only the filter's
+        // always-true path, so output must be BITWISE equal to the dense
+        // fast kernel — any deviation is a scheduling/coordinate bug.
+        for_each_case("bs2_dense_parity", 20, |rng| {
+            let n = usize_in(rng, 2, 40);
+            let n_k = if rng.next_f32() < 0.5 { n } else { usize_in(rng, 1, 48) };
+            let d = *choose(rng, &[2usize, 4, 8]);
+            let b_r = usize_in(rng, 1, n);
+            let b_c = usize_in(rng, 1, n_k);
+            let causal = rng.next_f32() < 0.5;
+            let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
+            let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
+            let workers = *choose(rng, &[1usize, 2, 5]);
+            let q = Tensor::randn(&[n, d], rng, 1.0);
+            let k = Tensor::randn(&[n_k, d], rng, 1.0);
+            let v = Tensor::randn(&[n_k, d], rng, 1.0);
+            let cfg =
+                AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let blocks = Blocks::explicit(b_r, b_c);
+            let dense = BlockMask::dense(n.div_ceil(b_r), n_k.div_ceil(b_c));
+            let fast = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+            let sparse =
+                block_sparse2_forward(&q, &k, &v, &dense, &cfg, blocks, workers, &mut Hbm::new());
+            let ctx = format!(
+                "n={n} n_k={n_k} d={d} blocks=({b_r},{b_c}) causal={causal} \
+                 kv_len={kv_len:?} p={dropout_p} w={workers}"
+            );
+            assert_eq!(sparse.o.data, fast.o.data, "O not bitwise equal: {ctx}");
+            assert_eq!(sparse.lse, fast.lse, "lse not bitwise equal: {ctx}");
+        });
+    }
+
+    #[test]
+    fn dense_mask_backward_bitwise_equals_flash2_grid() {
+        for_each_case("bs2_dense_bwd_parity", 20, |rng| {
+            let n = usize_in(rng, 2, 36);
+            let n_k = if rng.next_f32() < 0.5 { n } else { usize_in(rng, 1, 44) };
+            let d = *choose(rng, &[2usize, 4, 8]);
+            let b_r = usize_in(rng, 1, n);
+            let b_c = usize_in(rng, 1, n_k);
+            let causal = rng.next_f32() < 0.5;
+            let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
+            let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
+            let workers = *choose(rng, &[1usize, 2, 5]);
+            let q = Tensor::randn(&[n, d], rng, 1.0);
+            let k = Tensor::randn(&[n_k, d], rng, 1.0);
+            let v = Tensor::randn(&[n_k, d], rng, 1.0);
+            let dout = Tensor::randn(&[n, d], rng, 1.0);
+            let cfg =
+                AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
+            let blocks = Blocks::explicit(b_r, b_c);
+            let dense = BlockMask::dense(n.div_ceil(b_r), n_k.div_ceil(b_c));
+            let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+            let fast = flash2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 1, &mut Hbm::new(),
+            );
+            let sparse = block_sparse2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &dense, &cfg, blocks, workers,
+                &mut Hbm::new(),
+            );
+            let ctx = format!(
+                "n={n} n_k={n_k} d={d} blocks=({b_r},{b_c}) causal={causal} \
+                 kv_len={kv_len:?} p={dropout_p} w={workers}"
+            );
+            assert_eq!(sparse.dq.data, fast.dq.data, "dQ not bitwise equal: {ctx}");
+            assert_eq!(sparse.dk.data, fast.dk.data, "dK not bitwise equal: {ctx}");
+            assert_eq!(sparse.dv.data, fast.dv.data, "dV not bitwise equal: {ctx}");
+        });
+    }
+
+    #[test]
+    fn sparse_patterns_match_element_oracle() {
+        // Butterfly and local_global against the element-level oracle,
+        // with causal / dropout / padding active.
+        for (pattern, causal, dropout_p, kv_len) in [
+            ("butterfly", false, 0.0f32, None),
+            ("butterfly", true, 0.0, None),
+            ("butterfly", true, 0.25, Some(29)),
+            ("local_global", false, 0.0, None),
+            ("local_global", false, 0.25, Some(21)),
+            ("local_global", true, 0.0, None),
+        ] {
+            let (q, k, v) = qkv(32, 8, 11);
+            let blocks = Blocks::explicit(4, 4);
+            let mask = if pattern == "butterfly" {
+                BlockMask::butterfly(8, 8)
+            } else {
+                BlockMask::local_global(8, 8, 1, 1)
+            };
+            let cfg = AttnConfig {
+                causal,
+                dropout_p,
+                dropout_seed: 5,
+                kv_len,
+                ..Default::default()
+            };
+            let fast =
+                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 3, &mut Hbm::new());
+            let oracle = sparse_oracle_forward(&q, &k, &v, &mask, &cfg, blocks);
+            let diff = fast.o.max_abs_diff(&oracle);
+            assert!(
+                diff < 1e-4,
+                "{pattern} causal={causal} p={dropout_p} kv_len={kv_len:?}: diff {diff}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_forward_agrees_with_algorithm5_reference() {
+        // The two-pair contract: fast and faithful sparse kernels agree
+        // on the same mask (to fp rounding; they tile identically but
+        // normalise differently).
+        let (q, k, v) = qkv(64, 8, 12);
+        let blocks = Blocks::explicit(8, 8);
+        for mask in [BlockMask::butterfly(8, 8), BlockMask::local_global(8, 8, 1, 1)] {
+            let cfg = AttnConfig::default();
+            let slow = block_sparse_forward(&q, &k, &v, &mask, &cfg, blocks, &mut Hbm::new());
+            let fast = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+            assert!(slow.o.max_abs_diff(&fast.o) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sparse_grads_match_finite_difference() {
+        // The ISSUE FD wall: dQ, dK, dV by central differences through
+        // the sparse forward itself, butterfly AND local_global, causal
+        // and dropout included (the dropout mask is a deterministic
+        // function of indices, so the loss stays differentiable).
+        let (n, d) = (12usize, 4usize);
+        let (q, k, v) = qkv(n, d, 13);
+        let blocks = Blocks::explicit(2, 2);
+        for (pattern, causal, dropout_p) in [
+            ("butterfly", false, 0.0f32),
+            ("butterfly", true, 0.25),
+            ("local_global", true, 0.0),
+            ("local_global", false, 0.25),
+        ] {
+            let mask = if pattern == "butterfly" {
+                BlockMask::butterfly(6, 6)
+            } else {
+                BlockMask::local_global(6, 6, 1, 1)
+            };
+            let cfg = AttnConfig { causal, dropout_p, dropout_seed: 3, ..Default::default() };
+            let fwd = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+            let dout = Tensor::full(&[n, d], 1.0);
+            let g = block_sparse2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, 2, &mut Hbm::new(),
+            );
+            let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
+                block_sparse2_forward(q_, k_, v_, &mask, &cfg, blocks, 1, &mut Hbm::new())
+                    .o
+                    .data
+                    .iter()
+                    .sum()
+            };
+            let eps = 1e-3f32;
+            for (which, (x, gx)) in [(0, (&q, &g.dq)), (1, (&k, &g.dk)), (2, (&v, &g.dv))] {
+                for idx in [0usize, 9, 17, 25, 33, 41] {
+                    let mut xp = x.clone();
+                    xp.data[idx] += eps;
+                    let mut xm = x.clone();
+                    xm.data[idx] -= eps;
+                    let (fp, fm) = match which {
+                        0 => (f(&xp, &k, &v), f(&xm, &k, &v)),
+                        1 => (f(&q, &xp, &v), f(&q, &xm, &v)),
+                        _ => (f(&q, &k, &xp), f(&q, &k, &xm)),
+                    };
+                    let fd = (fp - fm) / (2.0 * eps);
+                    let an = gx.data[idx];
+                    assert!(
+                        (fd - an).abs() < 3e-2 + 0.05 * an.abs(),
+                        "{pattern} causal={causal} p={dropout_p} which={which} idx={idx}: \
+                         fd={fd} analytic={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_deterministic_across_worker_counts() {
+        // Forward O/lse AND all three gradients bitwise identical for
+        // any worker count — per-block arithmetic is partition-
+        // independent exactly as in the dense pair.
+        let (q, k, v) = qkv(64, 8, 14);
+        let mask = BlockMask::butterfly(8, 8);
+        let cfg =
+            AttnConfig { causal: true, dropout_p: 0.1, dropout_seed: 2, ..Default::default() };
+        let blocks = Blocks::explicit(8, 8);
+        let mut rng = SplitMix64::new(15);
+        let dout = Tensor::randn(&[64, 8], &mut rng, 1.0);
+        let base = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 1, &mut Hbm::new());
+        let gbase = block_sparse2_backward(
+            &q, &k, &v, &base.o, &dout, base.stats(), &mask, &cfg, blocks, 1, &mut Hbm::new(),
+        );
+        for workers in [2usize, 3, 5, 8, 64] {
+            let multi =
+                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut Hbm::new());
+            assert_eq!(base.o.data, multi.o.data, "O at workers={workers}");
+            assert_eq!(base.lse, multi.lse, "lse at workers={workers}");
+            let g = block_sparse2_backward(
+                &q, &k, &v, &base.o, &dout, base.stats(), &mask, &cfg, blocks, workers,
+                &mut Hbm::new(),
+            );
+            assert_eq!(gbase.dq.data, g.dq.data, "dQ at workers={workers}");
+            assert_eq!(gbase.dk.data, g.dk.data, "dK at workers={workers}");
+            assert_eq!(gbase.dv.data, g.dv.data, "dV at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn zero_mask_rows_zero_output_zero_grads_no_nan() {
+        // A row block with no live column tile anywhere must produce the
+        // defined all-masked semantics (zero rows, lse = -inf) and zero,
+        // finite gradients for those rows.
+        let (q, k, v) = qkv(16, 4, 16);
+        let blocks = Blocks::explicit(8, 8);
+        let mut mask = BlockMask::zeros(2, 2);
+        mask.set(1, 0, true);
+        mask.set(1, 1, true);
+        let cfg = AttnConfig::default();
+        let fwd = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+        assert!(fwd.o.slice_rows(0, 8).data.iter().all(|&x| x == 0.0));
+        assert!(fwd.lse[..8].iter().all(|&x| x == f32::NEG_INFINITY));
+        assert!(fwd.o.data.iter().all(|x| x.is_finite()));
+        let dout = Tensor::full(&[16, 4], 1.0);
+        let g = block_sparse2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, 2, &mut Hbm::new(),
+        );
+        assert!(g.dq.slice_rows(0, 8).data.iter().all(|&x| x == 0.0), "dead rows get zero dQ");
+        assert!(g.dq.data.iter().chain(&g.dk.data).chain(&g.dv.data).all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sharded_mask_slices_merge_to_unsharded() {
+        // The global-coordinate mask contract: tile-aligned key shards
+        // each hold the SAME global mask, run with cfg.for_shard(lo),
+        // and their partials merge (§5 identity) to the unsharded sparse
+        // kernel's output — causal + dropout + padding all active.
+        use crate::attn::distributed::merge_partials;
+        let (n, d) = (32usize, 8usize);
+        let (q, k, v) = qkv(n, d, 17);
+        let blocks = Blocks::explicit(4, 4);
+        let mask = BlockMask::butterfly(8, 8);
+        let cfg = AttnConfig {
+            causal: true,
+            dropout_p: 0.2,
+            dropout_seed: 9,
+            kv_len: Some(27),
+            ..Default::default()
+        };
+        let single = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+        for bounds in [vec![0usize, 16, 32], vec![0, 4, 12, 32], vec![0, 8, 16, 24, 32]] {
+            let merged = bounds
+                .windows(2)
+                .map(|w| {
+                    let (lo, hi) = (w[0], w[1]);
+                    let ks = k.slice_rows(lo, hi);
+                    let vs = v.slice_rows(lo, hi);
+                    block_sparse2_forward(
+                        &q, &ks, &vs, &mask, &cfg.for_shard(lo), blocks, 2, &mut Hbm::new(),
+                    )
+                    .into_attn_output()
+                })
+                .reduce(|a, b| merge_partials(&a, &b))
+                .unwrap();
+            let diff = single.o.max_abs_diff(&merged.o);
+            assert!(diff < 1e-4, "bounds {bounds:?}: diff {diff}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must align to whole column tiles")]
+    fn unaligned_kv_offset_panics_loudly() {
+        let (q, k, v) = qkv(8, 4, 18);
+        let mask = BlockMask::dense(2, 4);
+        let cfg = AttnConfig { kv_offset: 3, ..Default::default() };
+        block_sparse2_forward(&q, &k, &v, &mask, &cfg, Blocks::explicit(4, 4), 1, &mut Hbm::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "mask geometry mismatch")]
+    fn short_mask_panics_loudly() {
+        let (q, k, v) = qkv(16, 4, 19);
+        let mask = BlockMask::dense(4, 2); // 16/4 = 4 column tiles needed
+        block_sparse2_forward(
+            &q, &k, &v, &mask, &AttnConfig::default(), Blocks::explicit(4, 4), 1, &mut Hbm::new(),
+        );
     }
 }

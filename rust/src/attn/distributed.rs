@@ -50,8 +50,10 @@
 //! laptop-scale stand-in for the devices.
 
 use super::batched::{block_rows, flash2_forward_many, run_pool, split_windows, AttnSlice};
+use super::block_sparse::{block_sparse2_forward, check_mask_geometry, mask_tile_base};
 use super::flash::Blocks;
 use super::flash2::{dkv_col_sweep, stream_kv, stream_kv_dq, write_epilogue, RowBlockState};
+use super::masks::BlockMask;
 use super::{AttnConfig, AttnGrads, AttnOutput, AttnStats};
 use crate::sim::hbm::Hbm;
 use crate::tensor::{dot4, Tensor};
@@ -475,6 +477,79 @@ pub fn flash_forward_sharded_tree(
         .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()))
 }
 
+/// Tree schedule over a **block-sparse** workload: one softmax partial
+/// per live shard, each running the fast sparse kernel
+/// (`attn::block_sparse::block_sparse2_forward`) over its tile-aligned
+/// key range with the SAME global mask — `kv_offset` shifts each
+/// shard's mask window, no mask surgery. On top of the dense dead-shard
+/// predicate, a shard whose mask window is **all-zero** is dead too:
+/// the sparsity pattern itself can kill a shard, and such shards never
+/// become work items (their saved traffic is the Proposition-4 term
+/// the cost model tracks).
+pub fn block_sparse_shard_partials(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+) -> Vec<AttnOutput> {
+    let n_k = k.rows();
+    let t_r = q.rows().div_ceil(blocks.b_r);
+    // Validate the FULL global tile grid up front: the dead-window scan
+    // below reads mask tiles for every shard, so an undersized mask must
+    // hit the loud geometry assert here — not alias `BlockMask::get`'s
+    // row-major indexing into the wrong row's bits (which could silently
+    // classify a live shard as dead).
+    check_mask_geometry(
+        mask,
+        t_r,
+        mask_tile_base(cfg.kv_offset, blocks.b_c),
+        n_k.div_ceil(blocks.b_c),
+    );
+    shard_ranges(n_k, blocks.b_c, shards)
+        .into_iter()
+        .filter(|&sh| !shard_is_dead(sh, q.rows(), cfg))
+        .filter(|&sh| {
+            // Sparse dead-shard test: any live mask block in the shard's
+            // global tile window [tb, te)?
+            let tb = (cfg.kv_offset + sh.lo) / blocks.b_c;
+            let te = (cfg.kv_offset + sh.hi).div_ceil(blocks.b_c);
+            (0..t_r).any(|i| (tb..te).any(|t| mask.get(i, t)))
+        })
+        .map(|sh| {
+            let ks = k.slice_rows(sh.lo, sh.hi);
+            let vs = v.slice_rows(sh.lo, sh.hi);
+            block_sparse2_forward(
+                q, &ks, &vs, mask, &cfg.for_shard(sh.lo), blocks, workers, &mut Hbm::new(),
+            )
+            .into_attn_output()
+        })
+        .collect()
+}
+
+/// Reduce [`block_sparse_shard_partials`] with the §5 associative merge
+/// — the sparse workload's sequence-parallel entry point. Exact to fp
+/// rounding against the unsharded sparse kernel (property-tested
+/// below); all-dead workloads return the defined all-masked result.
+pub fn block_sparse_forward_sharded_tree(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+) -> AttnOutput {
+    block_sparse_shard_partials(q, k, v, mask, cfg, blocks, shards, workers)
+        .into_iter()
+        .reduce(|a, b| merge_partials(&a, &b))
+        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()))
+}
+
 /// IO model for W-way sequence-parallel flash (Appendix D.1): per-device
 /// HBM traffic for a key shard plus the O(N·d·W) interconnect merge.
 #[derive(Clone, Copy, Debug)]
@@ -729,6 +804,85 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn block_sparse_tree_schedule_matches_unsharded_on_the_grid() {
+        // The sparse sequence-parallel path: tile-aligned shards all
+        // holding the SAME global mask, merged with the §5 identity,
+        // must match the unsharded fast sparse kernel — causal ×
+        // dropout × padding × shard counts, butterfly and local_global.
+        let (n, d) = (48usize, 8usize);
+        let (q, k, v) = qkv(n, d, 31);
+        let blocks = Blocks::explicit(8, 8);
+        for mask in [BlockMask::butterfly(6, 6), BlockMask::local_global(6, 6, 1, 1)] {
+            for causal in [false, true] {
+                for dropout_p in [0.0f32, 0.2] {
+                    for kv_len in [None, Some(29)] {
+                        let cfg = AttnConfig {
+                            causal,
+                            dropout_p,
+                            dropout_seed: 5,
+                            kv_len,
+                            ..Default::default()
+                        };
+                        let single = block_sparse2_forward(
+                            &q, &k, &v, &mask, &cfg, blocks, 1, &mut Hbm::new(),
+                        );
+                        for shards in [1usize, 2, 3, 6] {
+                            let tree = block_sparse_forward_sharded_tree(
+                                &q, &k, &v, &mask, &cfg, blocks, shards, 3,
+                            );
+                            let diff = single.o.max_abs_diff(&tree.o);
+                            assert!(
+                                diff < 1e-4,
+                                "causal={causal} p={dropout_p} kv_len={kv_len:?} \
+                                 shards={shards}: diff {diff}"
+                            );
+                            // lse agreement via the (l, m) encoding: a
+                            // live row's merged stats must recover the
+                            // single-device logsumexp.
+                            for r in 0..n {
+                                let merged = tree.stats().lse(r);
+                                let want = single.lse[r];
+                                assert!(
+                                    (merged - want).abs() < 1e-4
+                                        || (merged == f32::NEG_INFINITY
+                                            && want == f32::NEG_INFINITY),
+                                    "row {r}: lse {merged} vs {want}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_sparse_all_zero_shards_are_dead() {
+        // A mask whose live blocks all land in the first shard must
+        // leave exactly one partial; an all-zero mask leaves none and
+        // the tree returns the defined all-masked result.
+        let (q, k, v) = qkv(16, 4, 33);
+        let blocks = Blocks::explicit(4, 4);
+        let mut mask = BlockMask::zeros(4, 4);
+        for i in 0..4 {
+            mask.set(i, 0, true);
+            mask.set(i, 1, true);
+        }
+        let cfg = AttnConfig::default();
+        let parts = block_sparse_shard_partials(&q, &k, &v, &mask, &cfg, blocks, 2, 2);
+        assert_eq!(parts.len(), 1, "right shard's mask window is all-zero");
+        let none = block_sparse_shard_partials(
+            &q, &k, &v, &BlockMask::zeros(4, 4), &cfg, blocks, 2, 2,
+        );
+        assert!(none.is_empty());
+        let tree = block_sparse_forward_sharded_tree(
+            &q, &k, &v, &BlockMask::zeros(4, 4), &cfg, blocks, 2, 2,
+        );
+        assert!(tree.o.data.iter().all(|&x| x == 0.0));
+        assert!(tree.m.iter().all(|&x| x == f32::NEG_INFINITY));
     }
 
     #[test]

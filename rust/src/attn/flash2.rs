@@ -205,12 +205,46 @@ pub(crate) fn stream_kv(
     kv_limit: usize,
     hbm: &mut Hbm,
 ) {
+    stream_kv_filtered(
+        state, q_rows, k, v, n_k, n, d, r0, r1, cfg, blocks, tau, kv_limit, hbm, |_| true,
+    );
+}
+
+/// [`stream_kv`] with a per-column-tile liveness filter: tile `j` (local
+/// index) is processed only when `live(j)`. Skipped tiles are never
+/// loaded — this is the Algorithm 5 zero-block skip expressed on the
+/// fast pair's sweep, and it is the ONLY difference from the dense
+/// sweep: a filter that always returns true runs the dense arithmetic
+/// bit for bit, which is what makes `attn::block_sparse::block_sparse2_forward`
+/// with a dense mask bitwise identical to [`flash2_forward`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_kv_filtered<F: Fn(usize) -> bool>(
+    state: &mut RowBlockState,
+    q_rows: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_k: usize,
+    n: usize,
+    d: usize,
+    r0: usize,
+    r1: usize,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_limit: usize,
+    hbm: &mut Hbm,
+    live: F,
+) {
     let b_c = blocks.b_c;
     let t_c = n_k.div_ceil(b_c);
     let br = r1 - r0;
     let RowBlockState { acc, m_run, l_run, s_buf } = state;
 
     for j in 0..t_c {
+        // Zero block (Algorithm 5 line 8): skip before any load.
+        if !live(j) {
+            continue;
+        }
         let c0 = j * b_c;
         let c1 = ((j + 1) * b_c).min(n_k);
         let bc = c1 - c0;
@@ -525,11 +559,48 @@ pub(crate) fn stream_kv_dq(
     dp_buf: &mut [f32],
     hbm: &mut Hbm,
 ) {
+    stream_kv_dq_filtered(
+        dq_acc, q_rows, do_rows, k, v, n_k, n, d, r0, r1, lse, d_vec, cfg, blocks, tau,
+        kv_limit, s_buf, dp_buf, hbm, |_| true,
+    );
+}
+
+/// [`stream_kv_dq`] with a per-column-tile liveness filter — the phase-1
+/// counterpart of [`stream_kv_filtered`]: a zero block contributes no
+/// dQ, so it is skipped before any K/V load; an always-true filter is
+/// the dense sweep bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_kv_dq_filtered<F: Fn(usize) -> bool>(
+    dq_acc: &mut [f32],
+    q_rows: &[f32],
+    do_rows: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n_k: usize,
+    n: usize,
+    d: usize,
+    r0: usize,
+    r1: usize,
+    lse: &[f32],
+    d_vec: &[f32],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_limit: usize,
+    s_buf: &mut [f32],
+    dp_buf: &mut [f32],
+    hbm: &mut Hbm,
+    live: F,
+) {
     let b_c = blocks.b_c;
     let t_c = n_k.div_ceil(b_c);
     let br = r1 - r0;
 
     for j in 0..t_c {
+        // Zero block: no dQ contribution, skip before any load.
+        if !live(j) {
+            continue;
+        }
         let c0 = j * b_c;
         let c1 = ((j + 1) * b_c).min(n_k);
         let bc = c1 - c0;
@@ -684,6 +755,39 @@ pub(crate) fn dkv_col_sweep(
     dk_out: &mut [f32],
     dv_out: &mut [f32],
 ) -> Hbm {
+    dkv_col_sweep_filtered(
+        q, k, v, dout, lse, d_vec, n, n_k, d, cfg, blocks, tau, kv_limit, cb_lo, cb_hi,
+        dk_out, dv_out, |_, _| true,
+    )
+}
+
+/// [`dkv_col_sweep`] with a per-(row block, column block) liveness
+/// filter `live(i, j)` (`j` local to the k/v slice): a zero block's Q/dO
+/// stream is skipped before its load. K_j/V_j still load once and
+/// dK_j/dV_j still store once per column block — the output rows leave
+/// chip regardless of how sparse their column is — so an always-true
+/// filter is the dense sweep bit for bit, loads and stores included.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dkv_col_sweep_filtered<F: Fn(usize, usize) -> bool>(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
+    lse: &[f32],
+    d_vec: &[f32],
+    n: usize,
+    n_k: usize,
+    d: usize,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    tau: f32,
+    kv_limit: usize,
+    cb_lo: usize,
+    cb_hi: usize,
+    dk_out: &mut [f32],
+    dv_out: &mut [f32],
+    live: F,
+) -> Hbm {
     let (b_r, b_c) = (blocks.b_r, blocks.b_c);
     let t_r = n.div_ceil(b_r);
     let col_base = cb_lo * b_c;
@@ -709,6 +813,10 @@ pub(crate) fn dkv_col_sweep(
             let r1 = ((i + 1) * b_r).min(n);
             let br = r1 - r0;
             let g0 = cfg.kv_offset + c0;
+            // Zero block: skip before the Q/dO stream load.
+            if !live(i, j) {
+                continue;
+            }
             if cfg.causal && g0 > r1 - 1 {
                 continue;
             }

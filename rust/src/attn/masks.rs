@@ -50,7 +50,12 @@ pub fn dropout_scale(
 }
 
 /// Block-sparsity mask M in {0,1}^{t_r x t_c} (Section 3.3).
-#[derive(Clone, Debug)]
+///
+/// The grid is rectangular in general: `t_r` derives from the query
+/// count and `t_c` from the **key** count (`kv_len` of the workload),
+/// so cross-attention and sharded layouts index it directly. Kernels
+/// interpret columns as *global* key tiles — see `attn::block_sparse`.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BlockMask {
     pub t_r: usize,
     pub t_c: usize,
@@ -225,6 +230,28 @@ mod tests {
         assert_eq!(tall.bits.len(), 27);
         assert_eq!(wide.bits.len(), 27);
         assert!(tall.nonzero_blocks() > 0 && wide.nonzero_blocks() > 0);
+    }
+
+    #[test]
+    fn dense_and_local_global_rectangular_grids() {
+        // Rectangular K/V geometry: t_c derives from the key count, so
+        // tall (t_r > t_c) and wide (t_r < t_c) grids must index in
+        // bounds with sane patterns on every row.
+        let tall = BlockMask::local_global(9, 3, 1, 1);
+        assert_eq!(tall.bits.len(), 27);
+        for i in 0..9 {
+            assert!(tall.get(i, 0), "row {i} lost its global column");
+        }
+        assert!(tall.get(2, 1) && tall.get(2, 2)); // window clamped to t_c
+        let wide = BlockMask::local_global(3, 9, 1, 1);
+        assert_eq!(wide.bits.len(), 27);
+        assert!(wide.get(0, 8), "global row must span the wide grid");
+        assert!(wide.get(2, 1) && wide.get(2, 2) && wide.get(2, 3));
+        assert!(!wide.get(2, 5), "window must not leak past w+1");
+        // Dense covers any rectangle and reports full density.
+        let dense = BlockMask::dense(2, 7);
+        assert_eq!(dense.nonzero_blocks(), 14);
+        assert_eq!(dense.sparsity(), 1.0);
     }
 
     #[test]

@@ -47,6 +47,34 @@
 //!   traffic); the fused train step itself still executes as a PJRT
 //!   artifact.
 //!
+//! And to the **sparse pair** (§3.3 block-sparse FlashAttention, the
+//! Θ(Nd + N²d²s/M) claim of Proposition 4):
+//!
+//! * [`block_sparse::block_sparse_forward`] — faithful Algorithm 5: the
+//!   dense tiled loop with zero blocks skipped, K/V-outer with
+//!   accumulator round-trips, local key coordinates. This is the
+//!   instrumented reference for Proposition-4 IO claims and the oracle
+//!   the fast sparse kernel is tested against; it must stay
+//!   slow-but-faithful.
+//! * [`block_sparse::block_sparse2_forward`] /
+//!   [`block_sparse::block_sparse2_backward`] — the fast production
+//!   sparse pair: exactly the flash2 sweeps (Q-outer forward, two-phase
+//!   backward, `std::thread::scope` workers, bitwise
+//!   worker-count-independent) with the `BlockMask` zero-block filter
+//!   fused into each stream — the filter is the only difference, so a
+//!   dense mask reproduces the dense pair bit for bit. Mask columns are
+//!   **global key tiles**: a key shard at a tile-aligned
+//!   [`AttnConfig::kv_offset`] reads the same global mask window the
+//!   unsharded kernel reads, so the sequence-parallel driver slices
+//!   sparse workloads with no mask surgery
+//!   ([`distributed::block_sparse_shard_partials`]). Hot sparse paths —
+//!   the batched scheduler (`batched::block_sparse2_forward_batched` /
+//!   `_backward_batched`, per-head masks allowed), the
+//!   [`BackwardKernel::BlockSparse2`] role and the perf benches — route
+//!   through this pair; `sim::cost::block_sparse2_fwd`/`_bwd` mirror
+//!   its traffic access-for-access, strictly decreasing in the number
+//!   of live blocks.
+//!
 //! Every `AttnGrads` producer is reachable through the shared
 //! [`attention_backward`] entry point, selected by [`BackwardKernel`] —
 //! call sites pick a policy role, not a concrete function.
@@ -252,7 +280,7 @@ pub struct AttnGrads {
 /// Which gradient kernel an `AttnGrads` producer routes through — the
 /// backward half of the two-kernel policy (module docs above).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum BackwardKernel {
+pub enum BackwardKernel<'a> {
     /// Algorithm 3: the materialise-everything baseline (square shapes;
     /// ignores the saved statistics and recomputes P densely).
     Standard,
@@ -262,6 +290,12 @@ pub enum BackwardKernel {
     /// The fast two-phase production kernel (Q-outer dQ + column-parallel
     /// dK/dV) with `workers` row/column-block threads.
     Flash2 { workers: usize },
+    /// The fast block-sparse two-phase kernel
+    /// (`attn::block_sparse::block_sparse2_backward`): the Flash2 sweeps
+    /// with `mask`'s zero blocks skipped in both phases. Mask columns
+    /// are global key tiles (see the `block_sparse` module docs), so the
+    /// same role works on key shards.
+    BlockSparse2 { workers: usize, mask: &'a masks::BlockMask },
 }
 
 /// Shared per-slice entry point for every backward pass. Call sites
@@ -271,7 +305,7 @@ pub enum BackwardKernel {
 /// through [`attention_backward_batched`] instead; this per-slice form is
 /// for tests, reference comparisons and single-slice callers.
 pub fn attention_backward(
-    kernel: BackwardKernel,
+    kernel: BackwardKernel<'_>,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -290,6 +324,9 @@ pub fn attention_backward(
         BackwardKernel::Flash2 { workers } => {
             flash2::flash2_backward(q, k, v, o, dout, stats, cfg, blocks, workers, hbm)
         }
+        BackwardKernel::BlockSparse2 { workers, mask } => block_sparse::block_sparse2_backward(
+            q, k, v, o, dout, stats, mask, cfg, blocks, workers, hbm,
+        ),
     }
 }
 
@@ -303,7 +340,7 @@ pub fn attention_backward(
 /// the batched path) — callers swap policy roles without touching layout
 /// code.
 pub fn attention_backward_batched(
-    kernel: BackwardKernel,
+    kernel: BackwardKernel<'_>,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -317,6 +354,21 @@ pub fn attention_backward_batched(
     if let BackwardKernel::Flash2 { workers } = kernel {
         return batched::flash2_backward_batched(
             q, k, v, o, dout, stats, cfg, blocks, workers, hbm,
+        );
+    }
+    if let BackwardKernel::BlockSparse2 { workers, mask } = kernel {
+        return batched::block_sparse2_backward_batched(
+            q,
+            k,
+            v,
+            o,
+            dout,
+            stats,
+            std::slice::from_ref(mask),
+            cfg,
+            blocks,
+            workers,
+            hbm,
         );
     }
     assert_eq!(q.rank(), 4, "attention_backward_batched: Q must be [batch, heads, n, d]");
@@ -354,9 +406,10 @@ mod tests {
 
     #[test]
     fn entry_point_kernels_agree() {
-        // All three BackwardKernel roles produce the same gradients for
+        // All four BackwardKernel roles produce the same gradients for
         // the same workload (the dispatch itself is what's under test —
-        // numeric parity is property-tested per kernel).
+        // numeric parity is property-tested per kernel; BlockSparse2
+        // runs with a dense mask, where it must match the dense pair).
         let mut rng = SplitMix64::new(21);
         let n = 24usize;
         let d = 8usize;
@@ -366,11 +419,13 @@ mod tests {
         let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
         let cfg = AttnConfig::causal();
         let blocks = flash::Blocks::explicit(8, 8);
+        let dense = masks::BlockMask::dense(3, 3);
         let fwd = flash2::flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
         let grads: Vec<AttnGrads> = [
             BackwardKernel::Standard,
             BackwardKernel::Flash,
             BackwardKernel::Flash2 { workers: 3 },
+            BackwardKernel::BlockSparse2 { workers: 3, mask: &dense },
         ]
         .into_iter()
         .map(|kernel| {
@@ -384,6 +439,10 @@ mod tests {
             assert!(grads[0].dk.max_abs_diff(&g.dk) < 1e-4);
             assert!(grads[0].dv.max_abs_diff(&g.dv) < 1e-4);
         }
+        // Dense-mask BlockSparse2 == Flash2 exactly (bitwise).
+        assert_eq!(grads[3].dq.data, grads[2].dq.data);
+        assert_eq!(grads[3].dk.data, grads[2].dk.data);
+        assert_eq!(grads[3].dv.data, grads[2].dv.data);
     }
 
     #[test]

@@ -347,6 +347,150 @@ pub fn block_sparse_fwd(n: u64, d: u64, blocks: Blocks, mask: &BlockMask, causal
     Cost { hbm_elems: hbm, flops, kernels: 1 }
 }
 
+/// Fast block-sparse Q-outer forward
+/// (attn::block_sparse::block_sparse2_forward) on a tile-aligned key
+/// slice [col_lo, col_hi) of the global key range, `mask` indexed in
+/// global column tiles — the accounting mirror of the kernel's
+/// `kv_offset` mask window. Matches the instrumented kernel
+/// access-for-access on ANY tiling (ragged included): Q loads once per
+/// row block (N·d total), K/V stream only for live (mask ∧ causal)
+/// pairs, O + logsumexp store exactly once (N·d + N). With a dense
+/// mask this is exactly [`flash2_fwd`]'s count; every live block
+/// removed strictly decreases it — Proposition 4, access-for-access.
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_fwd_slice(
+    n: u64,
+    d: u64,
+    blocks: Blocks,
+    mask: &BlockMask,
+    causal: bool,
+    dropout: bool,
+    col_lo: u64,
+    col_hi: u64,
+) -> Cost {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    assert_eq!(col_lo % b_c, 0, "block_sparse2 cost: slice must be tile-aligned");
+    let n_k = col_hi - col_lo;
+    let t_r = n.div_ceil(b_r);
+    let t_c = n_k.div_ceil(b_c);
+    let tile_base = col_lo / b_c;
+    assert_eq!(mask.t_r as u64, t_r, "mask geometry mismatch");
+    assert!(mask.t_c as u64 >= tile_base + t_c, "mask geometry mismatch");
+    let mut hbm = n * d + (n * d + n); // Q per row block + single epilogue
+    let tile = b_r * b_c;
+    let mut per_pair_flops = 4 * tile * d + SOFTMAX_OPS_PER_ELEM * tile + 2 * b_r;
+    if dropout {
+        per_pair_flops += DROPOUT_OPS_PER_ELEM * tile;
+    }
+    let mut flops = n * (d + 2);
+    for i in 0..t_r {
+        let r1 = ((i + 1) * b_r).min(n);
+        for j in 0..t_c {
+            if !mask.get(i as usize, (tile_base + j) as usize) {
+                continue;
+            }
+            let c0 = j * b_c;
+            if causal && col_lo + c0 > r1 - 1 {
+                continue;
+            }
+            let c1 = ((j + 1) * b_c).min(n_k);
+            hbm += 2 * (c1 - c0) * d; // K_j/V_j per live pair
+            flops += per_pair_flops;
+        }
+    }
+    Cost { hbm_elems: hbm, flops, kernels: 1 }
+}
+
+/// Unsharded form of [`block_sparse2_fwd_slice`]: n query rows, n_k
+/// keys, mask covering the whole key range.
+pub fn block_sparse2_fwd(
+    n: u64,
+    n_k: u64,
+    d: u64,
+    blocks: Blocks,
+    mask: &BlockMask,
+    causal: bool,
+    dropout: bool,
+) -> Cost {
+    block_sparse2_fwd_slice(n, d, blocks, mask, causal, dropout, 0, n_k)
+}
+
+/// Fast block-sparse two-phase backward
+/// (attn::block_sparse::block_sparse2_backward) on a tile-aligned key
+/// slice — the sparse form of [`flash2_bwd`], exact on any tiling:
+///
+///   D pass:   dO, O loaded once (2Nd), D stored once (N);
+///   phase 1:  Q/dO/D/L once per row block (2Nd + 2N), K/V streamed per
+///             live pair, dQ stored once (Nd);
+///   phase 2:  K/V loaded and dK/dV stored once per column block
+///             (4·N_k·d — the output rows leave chip however sparse
+///             their column is), Q/dO/D/L streamed per live pair.
+///
+/// Dense mask ⇒ exactly [`flash2_bwd`]; fewer live blocks ⇒ strictly
+/// fewer accesses (both streaming terms shrink).
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_bwd_slice(
+    n: u64,
+    d: u64,
+    blocks: Blocks,
+    mask: &BlockMask,
+    causal: bool,
+    dropout: bool,
+    col_lo: u64,
+    col_hi: u64,
+) -> Cost {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    assert_eq!(col_lo % b_c, 0, "block_sparse2 cost: slice must be tile-aligned");
+    let n_k = col_hi - col_lo;
+    let t_r = n.div_ceil(b_r);
+    let t_c = n_k.div_ceil(b_c);
+    let tile_base = col_lo / b_c;
+    assert_eq!(mask.t_r as u64, t_r, "mask geometry mismatch");
+    assert!(mask.t_c as u64 >= tile_base + t_c, "mask geometry mismatch");
+    let mut hbm = (2 * n * d + n)    // D = rowsum(dO ∘ O) epilogue pass
+        + (2 * n * d + 2 * n)        // phase 1: Q_i, dO_i, D_i, L_i once
+        + n * d                      // phase 1: dQ stored once
+        + 4 * n_k * d;               // phase 2: K/V loaded + dK/dV stored once
+    let tile = b_r * b_c;
+    let mut per_pair_flops = 14 * tile * d + 7 * tile;
+    if dropout {
+        per_pair_flops += 2 * DROPOUT_OPS_PER_ELEM * tile;
+    }
+    let mut flops = 2 * n * d;
+    for i in 0..t_r {
+        let r0 = i * b_r;
+        let r1 = ((i + 1) * b_r).min(n);
+        let br = r1 - r0;
+        for j in 0..t_c {
+            if !mask.get(i as usize, (tile_base + j) as usize) {
+                continue;
+            }
+            let c0 = j * b_c;
+            if causal && col_lo + c0 > r1 - 1 {
+                continue;
+            }
+            let c1 = ((j + 1) * b_c).min(n_k);
+            // phase 1 streams K_j/V_j; phase 2 streams Q_i/dO_i/D_i/L_i.
+            hbm += 2 * (c1 - c0) * d + 2 * br * d + 2 * br;
+            flops += per_pair_flops;
+        }
+    }
+    Cost { hbm_elems: hbm, flops, kernels: 2 }
+}
+
+/// Unsharded form of [`block_sparse2_bwd_slice`].
+pub fn block_sparse2_bwd(
+    n: u64,
+    n_k: u64,
+    d: u64,
+    blocks: Blocks,
+    mask: &BlockMask,
+    causal: bool,
+    dropout: bool,
+) -> Cost {
+    block_sparse2_bwd_slice(n, d, blocks, mask, causal, dropout, 0, n_k)
+}
+
 /// Block-sparse backward: dense backward scaled by the live-block fraction
 /// plus the linear dK/dV/dQ init+store terms (Proposition 4 structure).
 pub fn block_sparse_bwd(n: u64, d: u64, blocks: Blocks, mask: &BlockMask, causal: bool) -> Cost {
@@ -440,6 +584,74 @@ mod tests {
             "ratio {ratio} s {}",
             butter.sparsity()
         );
+    }
+
+    #[test]
+    fn block_sparse2_dense_mask_equals_flash2_forms() {
+        // The two-pair anchor: with every block live, the sparse closed
+        // forms must collapse to the dense fast pair's counts exactly,
+        // causal and non-causal, fwd and bwd.
+        let (n, d) = (1024u64, 64u64);
+        let blocks = Blocks::explicit(64, 64);
+        let dense = BlockMask::dense(16, 16);
+        for causal in [false, true] {
+            let f2 = flash2_fwd(n, d, blocks, causal, false).hbm_elems;
+            let bs2 = block_sparse2_fwd(n, n, d, blocks, &dense, causal, false).hbm_elems;
+            assert_eq!(bs2, f2, "fwd causal={causal}");
+            let f2b = flash2_bwd(n, d, blocks, causal, false).hbm_elems;
+            let bs2b = block_sparse2_bwd(n, n, d, blocks, &dense, causal, false).hbm_elems;
+            assert_eq!(bs2b, f2b, "bwd causal={causal}");
+        }
+    }
+
+    #[test]
+    fn block_sparse2_traffic_strictly_decreasing_in_live_blocks() {
+        // Proposition 4, block for block: removing any causally-live
+        // block strictly decreases both passes' traffic.
+        let (n, d) = (512u64, 64u64);
+        let blocks = Blocks::explicit(64, 64);
+        let mut mask = BlockMask::dense(8, 8);
+        let mut prev_f = block_sparse2_fwd(n, n, d, blocks, &mask, false, false).hbm_elems;
+        let mut prev_b = block_sparse2_bwd(n, n, d, blocks, &mask, false, false).hbm_elems;
+        for (i, j) in [(0usize, 7usize), (3, 3), (7, 0), (5, 2)] {
+            mask.set(i, j, false);
+            let f = block_sparse2_fwd(n, n, d, blocks, &mask, false, false).hbm_elems;
+            let b = block_sparse2_bwd(n, n, d, blocks, &mask, false, false).hbm_elems;
+            assert!(f < prev_f, "fwd not strictly below after clearing ({i},{j})");
+            assert!(b < prev_b, "bwd not strictly below after clearing ({i},{j})");
+            prev_f = f;
+            prev_b = b;
+        }
+        // Ratio tracks sparsity for the quadratic term (Prop. 4 shape).
+        let butter = BlockMask::butterfly(8, 8);
+        let cs = block_sparse2_fwd(n, n, d, blocks, &butter, false, false).hbm_elems as f64;
+        let cd =
+            block_sparse2_fwd(n, n, d, blocks, &BlockMask::dense(8, 8), false, false).hbm_elems
+                as f64;
+        let ratio = cs / cd;
+        assert!((ratio - butter.sparsity()).abs() < 0.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn block_sparse2_slices_partition_the_streaming_terms() {
+        // Sharded-mask-slice accounting: the per-shard K/V streaming
+        // terms (strip each kernel launch's fixed Q + epilogue terms)
+        // must partition the unsharded kernel's exactly.
+        let (n, d) = (256u64, 32u64);
+        let blocks = Blocks::explicit(32, 32);
+        let mask = BlockMask::butterfly(8, 8);
+        for causal in [false, true] {
+            let fixed = 2 * n * d + n;
+            let kv = |c: Cost| c.hbm_elems - fixed;
+            let dense_kv = kv(block_sparse2_fwd(n, n, d, blocks, &mask, causal, false));
+            let mut sharded = 0;
+            for lo in [0u64, 64, 128, 192] {
+                sharded += kv(block_sparse2_fwd_slice(
+                    n, d, blocks, &mask, causal, false, lo, lo + 64,
+                ));
+            }
+            assert_eq!(sharded, dense_kv, "causal={causal}");
+        }
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! Propositions 3/4 must hold over parameter sweeps.
 
 use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
-use flashattn::attn::block_sparse::block_sparse_forward;
+use flashattn::attn::block_sparse::{
+    block_sparse2_backward, block_sparse2_forward, block_sparse_forward,
+};
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
 use flashattn::attn::masks::BlockMask;
@@ -348,6 +350,145 @@ fn block_sparse_analytic_matches_instrumented() {
     block_sparse_forward(&q, &k, &v, &mask, &AttnConfig::default(), blocks, &mut hbm);
     let pred = cost::block_sparse_fwd(n as u64, d as u64, blocks, &mask, false);
     assert_eq!(hbm.accesses(), pred.hbm_elems);
+}
+
+#[test]
+fn block_sparse2_fwd_analytic_matches_instrumented_exactly() {
+    // The sparse pair's IO wall: measured traffic of the fast sparse
+    // forward == the closed form, access for access — butterfly and
+    // local_global patterns, causal on/off, divisible AND ragged
+    // tilings, any worker count.
+    for (n, d, br, bc) in
+        [(128usize, 8usize, 16usize, 16usize), (256, 16, 32, 64), (100, 8, 16, 24)]
+    {
+        let (q, k, v) = qkv(n, d, 41);
+        let blocks = Blocks::explicit(br, bc);
+        let (t_r, t_c) = (n.div_ceil(br), n.div_ceil(bc));
+        for mask in [BlockMask::butterfly(t_r, t_c), BlockMask::local_global(t_r, t_c, 1, 1)] {
+            for causal in [false, true] {
+                let cfg = AttnConfig { causal, ..Default::default() };
+                for workers in [1usize, 3, 8] {
+                    let mut hbm = Hbm::new();
+                    block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut hbm);
+                    let pred = cost::block_sparse2_fwd(
+                        n as u64, n as u64, d as u64, blocks, &mask, causal, false,
+                    );
+                    assert_eq!(
+                        hbm.accesses(),
+                        pred.hbm_elems,
+                        "n={n} d={d} blocks=({br},{bc}) causal={causal} workers={workers}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_sparse2_bwd_analytic_matches_instrumented_exactly() {
+    for (n, d, br, bc) in [(128usize, 8usize, 16usize, 16usize), (96, 16, 32, 32), (100, 8, 16, 24)]
+    {
+        let (q, k, v) = qkv(n, d, 42);
+        let blocks = Blocks::explicit(br, bc);
+        let (t_r, t_c) = (n.div_ceil(br), n.div_ceil(bc));
+        let dout = Tensor::full(&[n, d], 1.0);
+        for mask in [BlockMask::butterfly(t_r, t_c), BlockMask::local_global(t_r, t_c, 1, 1)] {
+            for causal in [false, true] {
+                let cfg = AttnConfig { causal, ..Default::default() };
+                let fwd =
+                    block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+                for workers in [1usize, 3, 8] {
+                    let mut hbm = Hbm::new();
+                    block_sparse2_backward(
+                        &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, workers,
+                        &mut hbm,
+                    );
+                    let pred = cost::block_sparse2_bwd(
+                        n as u64, n as u64, d as u64, blocks, &mask, causal, false,
+                    );
+                    assert_eq!(
+                        hbm.accesses(),
+                        pred.hbm_elems,
+                        "n={n} d={d} blocks=({br},{bc}) causal={causal} workers={workers}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn proposition4_block_sparse2_traffic_strictly_decreasing_in_sparsity() {
+    // Prop. 4 on the production kernels, measured: clearing live blocks
+    // strictly decreases instrumented traffic in BOTH passes, and dense
+    // masks reproduce the dense pair's counts exactly.
+    let (n, d) = (128usize, 8usize);
+    let (q, k, v) = qkv(n, d, 43);
+    let blocks = Blocks::explicit(16, 16);
+    let dout = Tensor::full(&[n, d], 1.0);
+    let cfg = AttnConfig::default();
+    let measure = |mask: &BlockMask| -> (u64, u64) {
+        let mut hf = Hbm::new();
+        let fwd = block_sparse2_forward(&q, &k, &v, mask, &cfg, blocks, 2, &mut hf);
+        let mut hb = Hbm::new();
+        block_sparse2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), mask, &cfg, blocks, 2, &mut hb,
+        );
+        (hf.accesses(), hb.accesses())
+    };
+    let mut mask = BlockMask::dense(8, 8);
+    let (dense_f, dense_b) = measure(&mask);
+    // Dense mask: exactly the dense pair's instrumented traffic.
+    let mut hf2 = Hbm::new();
+    let fwd2 = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut hf2);
+    let mut hb2 = Hbm::new();
+    flash2_backward(&q, &k, &v, &fwd2.o, &dout, fwd2.stats(), &cfg, blocks, 2, &mut hb2);
+    assert_eq!(dense_f, hf2.accesses(), "dense-mask fwd != flash2 fwd traffic");
+    assert_eq!(dense_b, hb2.accesses(), "dense-mask bwd != flash2 bwd traffic");
+    // Strict decrease, block by block.
+    let (mut prev_f, mut prev_b) = (dense_f, dense_b);
+    for (i, j) in [(0usize, 5usize), (4, 4), (7, 1), (2, 6), (6, 0)] {
+        mask.set(i, j, false);
+        let (f, b) = measure(&mask);
+        assert!(f < prev_f, "fwd not strictly below after clearing ({i},{j})");
+        assert!(b < prev_b, "bwd not strictly below after clearing ({i},{j})");
+        (prev_f, prev_b) = (f, b);
+    }
+}
+
+#[test]
+fn block_sparse2_sharded_mask_slice_analytic_matches_instrumented() {
+    // The sharded-mask-slice case: an instrumented sparse kernel run on
+    // a tile-aligned key shard (global mask window via kv_offset) must
+    // match `block_sparse2_fwd_slice` access for access, and the
+    // shards' streaming terms partition the unsharded kernel's.
+    let (n, d) = (128usize, 8usize);
+    let (q, k, v) = qkv(n, d, 44);
+    let blocks = Blocks::explicit(16, 16);
+    let mask = BlockMask::butterfly(8, 8);
+    for causal in [false, true] {
+        let mut kv_terms = 0u64;
+        for (lo, hi) in [(0usize, 64usize), (64, 96), (96, 128)] {
+            let cfg = AttnConfig { causal, kv_offset: lo, ..Default::default() };
+            let ks = k.slice_rows(lo, hi);
+            let vs = v.slice_rows(lo, hi);
+            let mut hbm = Hbm::new();
+            block_sparse2_forward(&q, &ks, &vs, &mask, &cfg, blocks, 3, &mut hbm);
+            let pred = cost::block_sparse2_fwd_slice(
+                n as u64, d as u64, blocks, &mask, causal, false, lo as u64, hi as u64,
+            );
+            assert_eq!(hbm.accesses(), pred.hbm_elems, "lo={lo} hi={hi} causal={causal}");
+            kv_terms += hbm.accesses() - (2 * n * d + n) as u64;
+        }
+        let mut h_full = Hbm::new();
+        let cfg = AttnConfig { causal, ..Default::default() };
+        block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 3, &mut h_full);
+        assert_eq!(
+            kv_terms,
+            h_full.accesses() - (2 * n * d + n) as u64,
+            "shard K/V streaming terms must partition the unsharded kernel's (causal={causal})"
+        );
+    }
 }
 
 #[test]
