@@ -36,6 +36,18 @@ lost:
      "sparse" section with no gateable cell fails the build like any
      other missing section.
 
+  5. the checked (fault-containment + finiteness-guardrail) batched
+     entry points costing more than GUARDRAIL_TOL over the plain ones
+     with no fault plan, on any (pass, n) cell. A disabled FaultPlan is
+     one branch per item and the finiteness scan is O(output) against
+     O(n·n_k·d) kernel arithmetic, so the fault plane must stay within
+     a few percent fault-free — this gate is what keeps the robustness
+     layer from quietly taxing the hot path.
+
+A missing, truncated or malformed BENCH_attn.json is reported as a
+one-line diagnosis (the bench step that should have produced it is the
+thing to look at), not a Python traceback.
+
 Usage: python3 python/check_bench.py [BENCH_attn.json]
 """
 
@@ -67,27 +79,65 @@ SMOKE_SHARDED_TOL = 1.6
 SPARSE_TOL = 1.05
 SMOKE_SPARSE_TOL = 1.3
 SPARSE_GATED_DENSITY = 0.5
+# The checked entry points run the identical kernels plus a disabled
+# plan probe and an O(output) finiteness scan; 5% covers noise on full
+# runs. Smoke sizes are tiny (the scan is proportionally larger and
+# timer noise dominates), so the smoke bound only catches an egregious
+# regression (validation in the inner loop, serialized workers).
+GUARDRAIL_TOL = 1.05
+SMOKE_GUARDRAIL_TOL = 1.3
+
+
+def load_bench(path):
+    """Load BENCH_attn.json, or exit(1) with a one-line diagnosis."""
+    try:
+        with open(path) as f:
+            raw = f.read()
+    except OSError as e:
+        print(f"PERF GATE ERROR: cannot read {path}: {e.strerror or e} — "
+              "did the bench step (cargo bench hotpath_microbench) run?")
+        sys.exit(1)
+    if not raw.strip():
+        print(f"PERF GATE ERROR: {path} is empty — the bench step was "
+              "interrupted before write_bench_json ran")
+        sys.exit(1)
+    try:
+        data = json.loads(raw)
+    except json.JSONDecodeError as e:
+        print(f"PERF GATE ERROR: {path} is not valid JSON (line {e.lineno}, "
+              f"col {e.colno}: {e.msg}) — truncated write or partial bench "
+              "output; re-run the bench step")
+        sys.exit(1)
+    if not isinstance(data, dict) or "workers" not in data:
+        print(f"PERF GATE ERROR: {path} parses but is not a BENCH_attn.json "
+              "document (missing the 'workers' header field)")
+        sys.exit(1)
+    return data
+
 
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_attn.json"
-    with open(path) as f:
-        data = json.load(f)
+    data = load_bench(path)
     workers = data["workers"]
     smoke = bool(data.get("smoke"))
     flash2_tol = SMOKE_FLASH2_TOL if smoke else FLASH2_TOL
     batched_tol = SMOKE_BATCHED_TOL if smoke else BATCHED_TOL
     sharded_tol = SMOKE_SHARDED_TOL if smoke else SHARDED_TOL
     sparse_tol = SMOKE_SPARSE_TOL if smoke else SPARSE_TOL
+    guardrail_tol = SMOKE_GUARDRAIL_TOL if smoke else GUARDRAIL_TOL
     failures = []
     # Per-section cell counts: an empty/renamed array must not silently
     # disable ITS gate while the others keep the build green. The
     # "sparse" count only includes gateable (<=50% density) cells, so a
     # bench that stopped emitting them fails here too.
-    section_cells = {"results": 0, "batched": 0, "sharded": 0, "sparse": 0}
+    section_cells = {
+        "results": 0, "batched": 0, "sharded": 0, "sparse": 0, "guardrail": 0,
+    }
 
     print(f"perf gate over {path} (smoke={smoke}, workers={workers}, "
           f"tolerances flash2 {flash2_tol}x / batched {batched_tol}x / "
-          f"sharded {sharded_tol}x / sparse {sparse_tol}x)")
+          f"sharded {sharded_tol}x / sparse {sparse_tol}x / "
+          f"guardrail {guardrail_tol}x)")
     for row in data.get("results", []):
         n = row["n"]
         for pass_name, ref_key, fast_keys in [
@@ -172,6 +222,26 @@ def main() -> int:
                     f"slower than dense flash2 at n={n}: "
                     f"{sparse_ns:.0f} ns vs {dense_ns:.0f} ns (tol {sparse_tol}x)")
 
+    for row in data.get("guardrail", []):
+        n = row["n"]
+        for pass_name, plain_key, checked_key in [
+            ("fwd", "plain_fwd_ns", "checked_fwd_ns"),
+            ("bwd", "plain_bwd_ns", "checked_bwd_ns"),
+        ]:
+            section_cells["guardrail"] += 1
+            plain_ns = row[plain_key]
+            checked_ns = row[checked_key]
+            ratio = checked_ns / plain_ns if plain_ns else float("inf")
+            verdict = "ok" if checked_ns <= guardrail_tol * plain_ns else "REGRESSION"
+            print(f"  guardrail {pass_name:>3} n={n:>5}: "
+                  f"plain {plain_ns:>12.0f} ns  checked {checked_ns:>12.0f} ns  "
+                  f"ratio {ratio:.3f}  {verdict}")
+            if checked_ns > guardrail_tol * plain_ns:
+                failures.append(
+                    f"checked (fault-plane) {pass_name} costs more than "
+                    f"{guardrail_tol}x plain at n={n}: "
+                    f"{checked_ns:.0f} ns vs {plain_ns:.0f} ns fault-free")
+
     empty = [name for name, count in section_cells.items() if count == 0]
     if empty:
         print("PERF GATE ERROR: no (pass, n) cells found for section(s): "
@@ -185,7 +255,8 @@ def main() -> int:
     cells = sum(section_cells.values())
     print(f"perf gate passed ({cells} cells): flash2 beats flash, "
           "batched beats the per-slice loop, sharding stays within its "
-          "overhead bound, and block-sparse beats dense at <=50% density")
+          "overhead bound, block-sparse beats dense at <=50% density, "
+          "and the fault plane is free when faults are off")
     return 0
 
 if __name__ == "__main__":

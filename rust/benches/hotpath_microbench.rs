@@ -20,6 +20,10 @@
 //!    local_global §3.3 patterns, fwd AND bwd): rows land under
 //!    "sparse" with their density, and the gate fails the build if
 //!    block-sparse at ≤50% density ever loses to dense flash2;
+//!  * guardrail overhead: the checked (fault-containment + finiteness
+//!    validation) batched entry points vs the plain ones with
+//!    `FaultPlan::none()`, fwd AND bwd — rows land under "guardrail"
+//!    and the gate bounds the fault-free cost of the execution plane;
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
@@ -35,9 +39,13 @@
 use std::path::Path;
 use std::time::Instant;
 
-use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
+use flashattn::attn::batched::{
+    flash2_backward_batched, flash2_backward_batched_checked, flash2_forward_batched,
+    flash2_forward_batched_checked,
+};
 use flashattn::attn::block_sparse::{block_sparse2_backward, block_sparse2_forward};
 use flashattn::attn::distributed::{flash_backward_sharded, flash_forward_sharded};
+use flashattn::attn::faults::FaultPlan;
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
 use flashattn::attn::masks::BlockMask;
@@ -451,25 +459,107 @@ fn sparse_head_to_head(smoke: bool) -> Vec<String> {
     json_rows
 }
 
-/// Assemble BENCH_attn.json (head-to-head + batched + sharded + sparse
-/// rows) at the repo root regardless of the cwd cargo bench picked.
+/// Fault-free overhead of the checked (guardrail) batched entry points
+/// vs the plain ones on the identical workload: with `FaultPlan::none()`
+/// the only extra work is the disabled-plan probe plus the per-item
+/// finiteness scan, which is O(output) against the kernel's O(n·n_k·d)
+/// arithmetic. Rows land in BENCH_attn.json under "guardrail";
+/// python/check_bench.py fails the build if the checked path ever costs
+/// more than the allowed fault-free overhead on any (pass, n) cell.
+fn guardrail_head_to_head(smoke: bool) -> Vec<String> {
+    let (d, workers) = (D, WORKERS);
+    let (batch, heads) = (2usize, 4usize);
+    let mut t = Table::new(
+        "guardrail overhead: checked vs plain batched (2x4 slices of [n,64], mean ns/iter)",
+        &["n", "plain fwd (ms)", "checked fwd (ms)", "plain bwd (ms)", "checked bwd (ms)"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let plan = FaultPlan::none();
+    let sizes: &[usize] = if smoke { &[128, 256] } else { &[512, 1024, 4096] };
+    for &n in sizes {
+        let mut rng = SplitMix64::new(5);
+        let q = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let dout = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::from_sram(48 * 1024, d, n);
+        let bwd_blocks = Blocks::for_backward(48 * 1024, d);
+        let iters = if smoke { 5 } else if n >= 4096 { 1 } else { 2 };
+        let t_plain_fwd = mean_time(iters, || {
+            std::hint::black_box(flash2_forward_batched(
+                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+            ));
+        });
+        let t_checked_fwd = mean_time(iters, || {
+            std::hint::black_box(
+                flash2_forward_batched_checked(
+                    &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(), &plan,
+                )
+                .expect("fault-free"),
+            );
+        });
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let t_plain_bwd = mean_time(iters, || {
+            std::hint::black_box(flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, workers,
+                &mut Hbm::new(),
+            ));
+        });
+        let t_checked_bwd = mean_time(iters, || {
+            std::hint::black_box(
+                flash2_backward_batched_checked(
+                    &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, workers,
+                    &mut Hbm::new(), &plan,
+                )
+                .expect("fault-free"),
+            );
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", t_plain_fwd * 1e3),
+            format!("{:.2}", t_checked_fwd * 1e3),
+            format!("{:.2}", t_plain_bwd * 1e3),
+            format!("{:.2}", t_checked_bwd * 1e3),
+        ]);
+        json_rows.push(format!(
+            "    {{\"n\": {n}, \"plain_fwd_ns\": {:.0}, \"checked_fwd_ns\": {:.0}, \
+             \"fwd_overhead\": {:.3}, \"plain_bwd_ns\": {:.0}, \"checked_bwd_ns\": {:.0}, \
+             \"bwd_overhead\": {:.3}}}",
+            t_plain_fwd * 1e9,
+            t_checked_fwd * 1e9,
+            t_checked_fwd / t_plain_fwd,
+            t_plain_bwd * 1e9,
+            t_checked_bwd * 1e9,
+            t_checked_bwd / t_plain_bwd,
+        ));
+    }
+    t.print();
+    json_rows
+}
+
+/// Assemble BENCH_attn.json (head-to-head + batched + sharded + sparse +
+/// guardrail rows) at the repo root regardless of the cwd cargo bench
+/// picked.
 fn write_bench_json(
     smoke: bool,
     results: &[String],
     batched: &[String],
     sharded: &[String],
     sparse: &[String],
+    guardrail: &[String],
 ) {
     let (d, workers) = (D, WORKERS);
     let json = format!(
         "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
          \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \
          \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ],\n  \"sharded\": [\n{}\n  ],\n  \
-         \"sparse\": [\n{}\n  ]\n}}\n",
+         \"sparse\": [\n{}\n  ],\n  \"guardrail\": [\n{}\n  ]\n}}\n",
         results.join(",\n"),
         batched.join(",\n"),
         sharded.join(",\n"),
-        sparse.join(",\n")
+        sparse.join(",\n"),
+        guardrail.join(",\n")
     );
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_attn.json");
     match std::fs::write(&out, &json) {
@@ -553,6 +643,7 @@ fn main() {
     let batched = batched_head_to_head(smoke);
     let sharded = sharded_head_to_head(smoke);
     let sparse = sparse_head_to_head(smoke);
-    write_bench_json(smoke, &results, &batched, &sharded, &sparse);
+    let guardrail = guardrail_head_to_head(smoke);
+    write_bench_json(smoke, &results, &batched, &sharded, &sparse, &guardrail);
     artifacts();
 }

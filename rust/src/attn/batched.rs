@@ -40,10 +40,14 @@
 //! Dropout streams stay per-slice: slice `s` runs with
 //! `bh_index = cfg.bh_index + s`, exactly what the per-slice loop did.
 
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex, PoisonError};
 
 use super::block_sparse::{
     check_mask_geometry, mask_tile_base, sparse_dq_row_sweep, sparse_row_block_sweep,
+};
+use super::faults::{
+    panic_message, AttnError, FaultKind, FaultPlan, FaultReport, FaultSite, InjectedPanic,
+    PoolItem, MAX_ATTEMPTS,
 };
 use super::flash::Blocks;
 use super::flash2::{
@@ -117,40 +121,272 @@ pub struct BatchedFlash2Output {
 }
 
 /// Drain `items` through one `std::thread::scope` pool of (at most)
-/// `workers` threads. Items are claimed dynamically — a worker that
-/// finishes a cheap item immediately pulls the next, so small slices never
-/// strand threads — and each item's arithmetic is self-contained, making
-/// the result independent of the claim order and worker count. Per-item
-/// HBM counters merge associatively into `hbm`, so traffic totals are
-/// partition-independent too.
-pub(crate) fn run_pool<T, F>(items: Vec<T>, workers: usize, hbm: &mut Hbm, work: F)
+/// `workers` threads, panicking (with the typed error's message) only
+/// after a work item exhausts its retry budget. Items are claimed
+/// dynamically — a worker that finishes a cheap item immediately pulls
+/// the next, so small slices never strand threads — and each item's
+/// arithmetic is self-contained, making the result independent of the
+/// claim order and worker count. Per-item HBM counters merge
+/// associatively into `hbm`, so traffic totals are partition-independent
+/// too.
+pub(crate) fn run_pool<T, F>(items: Vec<T>, workers: usize, hbm: &mut Hbm, site: FaultSite, work: F)
 where
-    T: Send,
-    F: Fn(T) -> Hbm + Sync,
+    T: PoolItem,
+    F: Fn(&mut T) -> Hbm + Sync,
+{
+    if let Err(e) = run_pool_guarded(items, workers, hbm, site, &FaultPlan::none(), false, work) {
+        panic!("{e}");
+    }
+}
+
+/// An item in flight or queued: its original index and attempt counter.
+struct Tracked<T> {
+    idx: usize,
+    attempt: u32,
+    item: T,
+}
+
+/// Shared pool state behind one mutex: the (re)queue, the count of items
+/// being worked on (a faulted one may return to the queue, so "queue
+/// empty" alone does not mean "done"), the first fatal error, and the
+/// fault bookkeeping.
+struct PoolState<T> {
+    queue: Vec<Tracked<T>>,
+    in_flight: usize,
+    error: Option<AttnError>,
+    report: FaultReport,
+}
+
+/// How a finished attempt is disposed of (classified outside the lock —
+/// the finiteness scan is O(window) and must not serialize workers).
+enum Disposal {
+    Commit { delayed: bool },
+    Retry { kind: RetryKind, attempt_hbm: Option<Hbm>, message: String },
+}
+
+enum RetryKind {
+    Panicked,
+    Poisoned,
+    Dropped,
+    NonFinite,
+}
+
+/// The fault-tolerant work pool behind every batched and sharded
+/// schedule. Semantics (see `attn::faults` and the module docs in
+/// `attn::mod`):
+///
+/// * A worker panic is contained by `catch_unwind`; the item's windows
+///   are zeroed and it is requeued, up to [`MAX_ATTEMPTS`] total
+///   attempts. Workers race only for items, never output slots, so the
+///   re-run performs identical arithmetic into a fresh window and the
+///   recovered output is bitwise identical to the fault-free run.
+/// * With `validate` on, every item's output windows are scanned for
+///   non-finite values before commit; a trip requeues exactly like a
+///   panic and, on budget exhaustion, surfaces as
+///   [`AttnError::NonFinite`] with (slice, block) provenance.
+/// * `plan` injects faults at publish time — after the item's work has
+///   run — so every attempt performs and counts its full traffic. Each
+///   faulted attempt that ran to completion adds its per-item HBM count
+///   to `FaultReport::retry_hbm`; a genuine mid-item panic has
+///   unknowable partial traffic and is excluded from all counters.
+/// * Worker-local HBM counters merge into `hbm` at join even on error,
+///   so counters always reflect work actually performed.
+pub(crate) fn run_pool_guarded<T, F>(
+    items: Vec<T>,
+    workers: usize,
+    hbm: &mut Hbm,
+    site: FaultSite,
+    plan: &FaultPlan,
+    validate: bool,
+    work: F,
+) -> Result<FaultReport, AttnError>
+where
+    T: PoolItem,
+    F: Fn(&mut T) -> Hbm + Sync,
 {
     if items.is_empty() {
-        return;
+        return Ok(FaultReport::default());
     }
     let w = workers.max(1).min(items.len());
-    let queue = Mutex::new(items.into_iter());
-    // The guard lives only inside this call — claiming an item never
-    // blocks other workers while the item is being processed.
-    let claim = || queue.lock().expect("batched work queue poisoned").next();
+    let state = Mutex::new(PoolState {
+        queue: items
+            .into_iter()
+            .enumerate()
+            .map(|(idx, item)| Tracked { idx, attempt: 0, item })
+            .collect(),
+        in_flight: 0,
+        error: None,
+        report: FaultReport::default(),
+    });
+    let ready = Condvar::new();
+    // A contained panic can poison the mutex between lock() and the
+    // guard drop; the inner state is still consistent (the lock is held
+    // only for queue bookkeeping, never across item execution), so
+    // recover it instead of cascading.
+    let lock = || state.lock().unwrap_or_else(PoisonError::into_inner);
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for _ in 0..w {
             handles.push(scope.spawn(|| {
                 let mut local = Hbm::new();
-                while let Some(item) = claim() {
-                    local.merge(&work(item));
+                loop {
+                    let mut st = lock();
+                    let claimed = loop {
+                        if st.error.is_some() {
+                            break None;
+                        }
+                        if let Some(t) = st.queue.pop() {
+                            break Some(t);
+                        }
+                        if st.in_flight == 0 {
+                            break None;
+                        }
+                        // Queue empty but items in flight: one may yet
+                        // fail and requeue, so wait instead of exiting.
+                        st = ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+                    };
+                    let Some(mut t) = claimed else {
+                        break;
+                    };
+                    st.in_flight += 1;
+                    drop(st);
+
+                    let fault = plan.fault_for(site, t.idx, t.attempt);
+                    if fault == Some(FaultKind::DelayedShard) {
+                        // A straggler, not a failure: complete late,
+                        // commit normally, add no traffic.
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let h = work(&mut t.item);
+                        if fault == Some(FaultKind::WorkerPanic) {
+                            // resume_unwind skips the panic hook (no
+                            // stderr spam for planned chaos); the payload
+                            // carries the attempt's exact traffic so the
+                            // retry accounting stays access-for-access.
+                            std::panic::resume_unwind(Box::new(InjectedPanic(h)));
+                        }
+                        h
+                    }));
+                    let disposal = match outcome {
+                        Ok(h) => {
+                            local.merge(&h);
+                            if fault == Some(FaultKind::PoisonedPartial) {
+                                t.item.poison();
+                            }
+                            if fault == Some(FaultKind::DroppedMerge) {
+                                Disposal::Retry {
+                                    kind: RetryKind::Dropped,
+                                    attempt_hbm: Some(h),
+                                    message: "completion record dropped".into(),
+                                }
+                            } else if (validate || fault == Some(FaultKind::PoisonedPartial))
+                                && !t.item.check_finite()
+                            {
+                                let kind = if fault == Some(FaultKind::PoisonedPartial) {
+                                    RetryKind::Poisoned
+                                } else {
+                                    RetryKind::NonFinite
+                                };
+                                Disposal::Retry {
+                                    kind,
+                                    attempt_hbm: Some(h),
+                                    message: "non-finite output".into(),
+                                }
+                            } else {
+                                Disposal::Commit { delayed: fault == Some(FaultKind::DelayedShard) }
+                            }
+                        }
+                        Err(payload) => {
+                            let attempt_hbm =
+                                payload.downcast_ref::<InjectedPanic>().map(|inj| {
+                                    // Injected at publish time: the work
+                                    // ran to completion, its traffic is
+                                    // real and gets re-done by the retry.
+                                    local.merge(&inj.0);
+                                    inj.0.clone()
+                                });
+                            Disposal::Retry {
+                                kind: RetryKind::Panicked,
+                                attempt_hbm,
+                                message: panic_message(&*payload),
+                            }
+                        }
+                    };
+
+                    let mut st = lock();
+                    st.in_flight -= 1;
+                    match disposal {
+                        Disposal::Commit { delayed } => {
+                            if delayed {
+                                st.report.delayed += 1;
+                            }
+                        }
+                        Disposal::Retry { kind, attempt_hbm, message } => {
+                            match kind {
+                                RetryKind::Panicked => st.report.panics += 1,
+                                RetryKind::Poisoned => st.report.poisoned += 1,
+                                RetryKind::Dropped => st.report.dropped += 1,
+                                RetryKind::NonFinite => st.report.guardrail += 1,
+                            }
+                            if let Some(h) = &attempt_hbm {
+                                st.report.retry_hbm.merge(h);
+                            }
+                            if t.attempt + 1 < MAX_ATTEMPTS {
+                                st.report.retries += 1;
+                                // The backward sweeps accumulate into
+                                // their windows (and a poisoned forward
+                                // scribbled NaN over them): zero back to
+                                // the pre-run state so the re-run
+                                // reproduces a fresh run bit for bit.
+                                t.item.reset();
+                                st.queue.push(Tracked {
+                                    idx: t.idx,
+                                    attempt: t.attempt + 1,
+                                    item: t.item,
+                                });
+                            } else if st.error.is_none() {
+                                let (slice, block) = t.item.id();
+                                let attempts = t.attempt + 1;
+                                st.error = Some(match kind {
+                                    RetryKind::Poisoned | RetryKind::NonFinite => {
+                                        AttnError::NonFinite {
+                                            site,
+                                            slice,
+                                            batch: 0,
+                                            head: 0,
+                                            block,
+                                            attempts,
+                                        }
+                                    }
+                                    _ => AttnError::ItemFailed {
+                                        site,
+                                        slice,
+                                        block,
+                                        attempts,
+                                        message,
+                                    },
+                                });
+                            }
+                        }
+                    }
+                    drop(st);
+                    ready.notify_all();
                 }
                 local
             }));
         }
         for h in handles {
-            hbm.merge(&h.join().expect("batched attention worker panicked"));
+            if let Ok(local) = h.join() {
+                hbm.merge(&local);
+            }
         }
     });
+    let mut st = lock();
+    match st.error.take() {
+        Some(e) => Err(e),
+        None => Ok(std::mem::take(&mut st.report)),
+    }
 }
 
 /// Split `data` into disjoint mutable windows of the given `sizes`
@@ -173,6 +409,91 @@ pub(crate) fn block_rows(b: usize, bsz: usize, total: usize) -> usize {
     ((b + 1) * bsz).min(total) - b * bsz
 }
 
+/// A strictly-finite window scan (gradient and O windows).
+fn all_finite(xs: &[f32]) -> bool {
+    xs.iter().all(|x| x.is_finite())
+}
+
+/// A logsumexp window scan: finite or *exactly* −∞ (the defined
+/// all-masked value) — anything else (NaN, +∞) trips the guardrail.
+fn lse_defined(xs: &[f32]) -> bool {
+    xs.iter().all(|&x| x.is_finite() || x == f32::NEG_INFINITY)
+}
+
+/// One (slice, row block) forward work item: disjoint O and logsumexp
+/// windows. Shared by the dense/sparse batched schedulers and the ring
+/// schedule (which has a single logical slice, `s = 0`).
+pub(crate) struct FwdItem<'a> {
+    pub s: usize,
+    pub rb: usize,
+    pub o_win: &'a mut [f32],
+    pub lse_win: &'a mut [f32],
+}
+
+impl PoolItem for FwdItem<'_> {
+    fn id(&self) -> (usize, usize) {
+        (self.s, self.rb)
+    }
+    fn reset(&mut self) {
+        self.o_win.fill(0.0);
+        self.lse_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        all_finite(self.o_win) && lse_defined(self.lse_win)
+    }
+    fn poison(&mut self) {
+        self.o_win.fill(f32::NAN);
+        self.lse_win.fill(f32::NAN);
+    }
+}
+
+/// One (slice, row block) dQ work item.
+pub(crate) struct DqItem<'a> {
+    pub s: usize,
+    pub rb: usize,
+    pub dq_win: &'a mut [f32],
+}
+
+impl PoolItem for DqItem<'_> {
+    fn id(&self) -> (usize, usize) {
+        (self.s, self.rb)
+    }
+    fn reset(&mut self) {
+        self.dq_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        all_finite(self.dq_win)
+    }
+    fn poison(&mut self) {
+        self.dq_win.fill(f32::NAN);
+    }
+}
+
+/// One (slice, column block) dK/dV work item.
+pub(crate) struct DkvItem<'a> {
+    pub s: usize,
+    pub cb: usize,
+    pub dk_win: &'a mut [f32],
+    pub dv_win: &'a mut [f32],
+}
+
+impl PoolItem for DkvItem<'_> {
+    fn id(&self) -> (usize, usize) {
+        (self.s, self.cb)
+    }
+    fn reset(&mut self) {
+        self.dk_win.fill(0.0);
+        self.dv_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        all_finite(self.dk_win) && all_finite(self.dv_win)
+    }
+    fn poison(&mut self) {
+        self.dk_win.fill(f32::NAN);
+        self.dv_win.fill(f32::NAN);
+    }
+}
+
 /// Fast exact forward over many independent slices through ONE worker
 /// pool: every (slice, row block) pair becomes a work item. Outputs (and
 /// HBM totals) are bitwise identical to running [`super::flash2::flash2_forward`]
@@ -183,6 +504,39 @@ pub fn flash2_forward_many(
     workers: usize,
     hbm: &mut Hbm,
 ) -> Vec<Flash2Output> {
+    let plan = FaultPlan::none();
+    match forward_many_sited(slices, blocks, workers, hbm, &plan, false, FaultSite::BatchedFwd) {
+        Ok((outs, _)) => outs,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`flash2_forward_many`] with fault containment, retry, the finiteness
+/// guardrail, and (optionally) fault injection: returns the outputs plus
+/// a [`FaultReport`], or a typed [`AttnError`] with (slice, block)
+/// provenance. Output after any recovered fault schedule is bitwise
+/// identical to the fault-free run.
+pub fn flash2_forward_many_checked(
+    slices: &[AttnSlice<'_>],
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(Vec<Flash2Output>, FaultReport), AttnError> {
+    forward_many_sited(slices, blocks, workers, hbm, plan, true, FaultSite::BatchedFwd)
+}
+
+/// Site-parameterised core: the tree schedule routes its per-shard
+/// partials through here under [`FaultSite::TreePartial`].
+pub(crate) fn forward_many_sited(
+    slices: &[AttnSlice<'_>],
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+    validate: bool,
+    site: FaultSite,
+) -> Result<(Vec<Flash2Output>, FaultReport), AttnError> {
     for (s, sl) in slices.iter().enumerate() {
         assert_eq!(sl.q.len(), sl.n * sl.d, "slice {s}: Q shape mismatch");
         assert_eq!(sl.k.len(), sl.n_k * sl.d, "slice {s}: K shape mismatch");
@@ -201,13 +555,6 @@ pub fn flash2_forward_many(
         })
         .collect();
 
-    struct FwdItem<'a> {
-        s: usize,
-        rb: usize,
-        o_win: &'a mut [f32],
-        lse_win: &'a mut [f32],
-    }
-
     let mut items: Vec<FwdItem<'_>> = Vec::new();
     for (s, (sl, out)) in slices.iter().zip(outs.iter_mut()).enumerate() {
         if sl.n_k == 0 {
@@ -225,7 +572,7 @@ pub fn flash2_forward_many(
         }
     }
 
-    run_pool(items, workers, hbm, |it| {
+    let report = run_pool_guarded(items, workers, hbm, site, plan, validate, |it| {
         let sl = &slices[it.s];
         let tau = sl.cfg.tau_for(sl.d);
         let kv_limit = sl.cfg.kv_limit(sl.n_k);
@@ -233,9 +580,9 @@ pub fn flash2_forward_many(
             sl.q, sl.k, sl.v, sl.n, sl.n_k, sl.d, &sl.cfg, blocks, tau, kv_limit, it.rb,
             it.rb + 1, it.o_win, it.lse_win,
         )
-    });
+    })?;
 
-    outs
+    Ok((outs, report))
 }
 
 /// Fast exact backward over many independent slices through one worker
@@ -249,6 +596,33 @@ pub fn flash2_backward_many(
     workers: usize,
     hbm: &mut Hbm,
 ) -> Vec<AttnGrads> {
+    match backward_many_core(slices, blocks, workers, hbm, &FaultPlan::none(), false) {
+        Ok((grads, _)) => grads,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`flash2_backward_many`] with fault containment, retry, the finiteness
+/// guardrail, and (optionally) fault injection — the gradient counterpart
+/// of [`flash2_forward_many_checked`].
+pub fn flash2_backward_many_checked(
+    slices: &[AttnGradSlice<'_>],
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(Vec<AttnGrads>, FaultReport), AttnError> {
+    backward_many_core(slices, blocks, workers, hbm, plan, true)
+}
+
+fn backward_many_core(
+    slices: &[AttnGradSlice<'_>],
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(Vec<AttnGrads>, FaultReport), AttnError> {
     for (s, sl) in slices.iter().enumerate() {
         assert_eq!(sl.q.len(), sl.n * sl.d, "slice {s}: Q shape mismatch");
         assert_eq!(sl.k.len(), sl.n_k * sl.d, "slice {s}: K shape mismatch");
@@ -286,18 +660,6 @@ pub fn flash2_backward_many(
         })
         .collect();
 
-    struct DqItem<'a> {
-        s: usize,
-        rb: usize,
-        dq_win: &'a mut [f32],
-    }
-    struct DkvItem<'a> {
-        s: usize,
-        cb: usize,
-        dk_win: &'a mut [f32],
-        dv_win: &'a mut [f32],
-    }
-
     let mut dq_items: Vec<DqItem<'_>> = Vec::new();
     let mut dkv_items: Vec<DkvItem<'_>> = Vec::new();
     for (s, (sl, g)) in slices.iter().zip(grads.iter_mut()).enumerate() {
@@ -327,28 +689,31 @@ pub fn flash2_backward_many(
     }
 
     // Phase 1: all slices' dQ row blocks through one pool.
-    run_pool(dq_items, workers, hbm, |it| {
-        let sl = &slices[it.s];
-        let tau = sl.cfg.tau_for(sl.d);
-        let kv_limit = sl.cfg.kv_limit(sl.n_k);
-        dq_row_sweep(
-            sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
-            blocks, tau, kv_limit, it.rb, it.rb + 1, it.dq_win,
-        )
-    });
+    let mut report =
+        run_pool_guarded(dq_items, workers, hbm, FaultSite::BatchedDq, plan, validate, |it| {
+            let sl = &slices[it.s];
+            let tau = sl.cfg.tau_for(sl.d);
+            let kv_limit = sl.cfg.kv_limit(sl.n_k);
+            dq_row_sweep(
+                sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
+                blocks, tau, kv_limit, it.rb, it.rb + 1, it.dq_win,
+            )
+        })?;
 
     // Phase 2: all slices' dK/dV column blocks through one pool.
-    run_pool(dkv_items, workers, hbm, |it| {
-        let sl = &slices[it.s];
-        let tau = sl.cfg.tau_for(sl.d);
-        let kv_limit = sl.cfg.kv_limit(sl.n_k);
-        dkv_col_sweep(
-            sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
-            blocks, tau, kv_limit, it.cb, it.cb + 1, it.dk_win, it.dv_win,
-        )
-    });
+    let dkv_report =
+        run_pool_guarded(dkv_items, workers, hbm, FaultSite::BatchedDkv, plan, validate, |it| {
+            let sl = &slices[it.s];
+            let tau = sl.cfg.tau_for(sl.d);
+            let kv_limit = sl.cfg.kv_limit(sl.n_k);
+            dkv_col_sweep(
+                sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
+                blocks, tau, kv_limit, it.cb, it.cb + 1, it.dk_win, it.dv_win,
+            )
+        })?;
+    report.merge(&dkv_report);
 
-    grads
+    Ok((grads, report))
 }
 
 /// Check and decompose a [batch, heads, rows, d] tensor.
@@ -380,6 +745,42 @@ pub fn flash2_forward_batched(
     workers: usize,
     hbm: &mut Hbm,
 ) -> BatchedFlash2Output {
+    match forward_batched_core(q, k, v, cfg, blocks, workers, hbm, &FaultPlan::none(), false) {
+        Ok((out, _)) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`flash2_forward_batched`] with fault containment, retry, the
+/// finiteness guardrail and (optionally) fault injection: returns the
+/// output plus a [`FaultReport`], or a typed [`AttnError`] whose
+/// provenance names the (batch, head) slice and q row block.
+#[allow(clippy::too_many_arguments)]
+pub fn flash2_forward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
+    forward_batched_core(q, k, v, cfg, blocks, workers, hbm, plan, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_batched_core(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "flash2_forward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "flash2_forward_batched K");
     assert_eq!((bk, hk, dk), (b, h, d), "flash2_forward_batched: K batch/heads/feature mismatch");
@@ -395,14 +796,16 @@ pub fn flash2_forward_batched(
             cfg: AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() },
         })
         .collect();
-    let outs = flash2_forward_many(&slices, blocks, workers, hbm);
+    let (outs, report) =
+        forward_many_sited(&slices, blocks, workers, hbm, plan, validate, FaultSite::BatchedFwd)
+            .map_err(|e| e.located(h))?;
     let mut o = Tensor::zeros(&[b, h, n, d]);
     let mut lse = Vec::with_capacity(b * h * n);
     for (s, out) in outs.into_iter().enumerate() {
         o.data[s * n * d..(s + 1) * n * d].copy_from_slice(&out.o.data);
         lse.extend_from_slice(&out.lse);
     }
-    BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }
+    Ok((BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }, report))
 }
 
 /// Batched multi-head fast backward: the gradient counterpart of
@@ -422,6 +825,49 @@ pub fn flash2_backward_batched(
     workers: usize,
     hbm: &mut Hbm,
 ) -> AttnGrads {
+    let plan = FaultPlan::none();
+    match backward_batched_core(q, k, v, o, dout, stats, cfg, blocks, workers, hbm, &plan, false) {
+        Ok((grads, _)) => grads,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`flash2_backward_batched`] with fault containment, retry, the
+/// finiteness guardrail and (optionally) fault injection — provenance
+/// names the (batch, head) slice and the row (dQ) or column (dK/dV)
+/// block.
+#[allow(clippy::too_many_arguments)]
+pub fn flash2_backward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
+    backward_batched_core(q, k, v, o, dout, stats, cfg, blocks, workers, hbm, plan, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_batched_core(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "flash2_backward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "flash2_backward_batched K");
     assert_eq!((bk, hk, dk), (b, h, d), "flash2_backward_batched: K batch/heads/feature mismatch");
@@ -444,7 +890,8 @@ pub fn flash2_backward_batched(
             cfg: AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() },
         })
         .collect();
-    let per_slice = flash2_backward_many(&slices, blocks, workers, hbm);
+    let (per_slice, report) = backward_many_core(&slices, blocks, workers, hbm, plan, validate)
+        .map_err(|e| e.located(h))?;
     let mut dq4 = Tensor::zeros(&[b, h, n, d]);
     let mut dk4 = Tensor::zeros(&[b, h, n_k, d]);
     let mut dv4 = Tensor::zeros(&[b, h, n_k, d]);
@@ -453,7 +900,7 @@ pub fn flash2_backward_batched(
         dk4.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dk.data);
         dv4.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dv.data);
     }
-    AttnGrads { dq: dq4, dk: dk4, dv: dv4 }
+    Ok((AttnGrads { dq: dq4, dk: dk4, dv: dv4 }, report))
 }
 
 /// Resolve the mask for slice `s` of a [batch, heads, …] workload.
@@ -490,6 +937,43 @@ pub fn block_sparse2_forward_batched(
     workers: usize,
     hbm: &mut Hbm,
 ) -> BatchedFlash2Output {
+    let plan = FaultPlan::none();
+    match sparse_forward_batched_core(q, k, v, masks, cfg, blocks, workers, hbm, &plan, false) {
+        Ok((out, _)) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`block_sparse2_forward_batched`] with fault containment, retry, the
+/// finiteness guardrail and (optionally) fault injection.
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_forward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
+    sparse_forward_batched_core(q, k, v, masks, cfg, blocks, workers, hbm, plan, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sparse_forward_batched_core(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "block_sparse2_forward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "block_sparse2_forward_batched K");
     assert_eq!(
@@ -504,7 +988,8 @@ pub fn block_sparse2_forward_batched(
     if n == 0 || n_k == 0 {
         // No keys: the per-slice kernel's defined all-masked semantics.
         lse.fill(f32::NEG_INFINITY);
-        return BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } };
+        let out = BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } };
+        return Ok((out, FaultReport::default()));
     }
     let tile_base = mask_tile_base(cfg.kv_offset, blocks.b_c);
     let t_r = n.div_ceil(blocks.b_r);
@@ -515,13 +1000,6 @@ pub fn block_sparse2_forward_batched(
     let per_cfg: Vec<AttnConfig> = (0..slices)
         .map(|s| AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() })
         .collect();
-
-    struct FwdItem<'a> {
-        s: usize,
-        rb: usize,
-        o_win: &'a mut [f32],
-        lse_win: &'a mut [f32],
-    }
 
     let o_wins = split_windows(
         &mut o.data,
@@ -540,30 +1018,32 @@ pub fn block_sparse2_forward_batched(
         })
         .collect();
 
-    run_pool(items, workers, hbm, |it| {
-        let cfg_s = &per_cfg[it.s];
-        let mask = mask_for(masks, h, slices, it.s);
-        sparse_row_block_sweep(
-            &q.data[it.s * n * d..(it.s + 1) * n * d],
-            &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-            &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-            n,
-            n_k,
-            d,
-            mask,
-            tile_base,
-            cfg_s,
-            blocks,
-            cfg_s.tau_for(d),
-            cfg_s.kv_limit(n_k),
-            it.rb,
-            it.rb + 1,
-            it.o_win,
-            it.lse_win,
-        )
-    });
+    let report =
+        run_pool_guarded(items, workers, hbm, FaultSite::SparseFwd, plan, validate, |it| {
+            let cfg_s = &per_cfg[it.s];
+            let mask = mask_for(masks, h, slices, it.s);
+            sparse_row_block_sweep(
+                &q.data[it.s * n * d..(it.s + 1) * n * d],
+                &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+                &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+                n,
+                n_k,
+                d,
+                mask,
+                tile_base,
+                cfg_s,
+                blocks,
+                cfg_s.tau_for(d),
+                cfg_s.kv_limit(n_k),
+                it.rb,
+                it.rb + 1,
+                it.o_win,
+                it.lse_win,
+            )
+        })
+        .map_err(|e| e.located(h))?;
 
-    BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }
+    Ok((BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }, report))
 }
 
 /// Batched multi-head fast block-sparse backward: the sparse
@@ -586,6 +1066,53 @@ pub fn block_sparse2_backward_batched(
     workers: usize,
     hbm: &mut Hbm,
 ) -> AttnGrads {
+    let plan = FaultPlan::none();
+    match sparse_backward_batched_core(
+        q, k, v, o, dout, stats, masks, cfg, blocks, workers, hbm, &plan, false,
+    ) {
+        Ok((grads, _)) => grads,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`block_sparse2_backward_batched`] with fault containment, retry, the
+/// finiteness guardrail and (optionally) fault injection.
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_backward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
+    sparse_backward_batched_core(
+        q, k, v, o, dout, stats, masks, cfg, blocks, workers, hbm, plan, true,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sparse_backward_batched_core(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "block_sparse2_backward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "block_sparse2_backward_batched K");
     assert_eq!(
@@ -607,7 +1134,7 @@ pub fn block_sparse2_backward_batched(
     let mut dk4 = Tensor::zeros(&[b, h, n_k, d]);
     let mut dv4 = Tensor::zeros(&[b, h, n_k, d]);
     if n == 0 || n_k == 0 {
-        return AttnGrads { dq: dq4, dk: dk4, dv: dv4 };
+        return Ok((AttnGrads { dq: dq4, dk: dk4, dv: dv4 }, FaultReport::default()));
     }
     let tile_base = mask_tile_base(cfg.kv_offset, blocks.b_c);
     let t_r = n.div_ceil(blocks.b_r);
@@ -638,18 +1165,6 @@ pub fn block_sparse2_backward_batched(
         })
         .collect();
 
-    struct DqItem<'a> {
-        s: usize,
-        rb: usize,
-        dq_win: &'a mut [f32],
-    }
-    struct DkvItem<'a> {
-        s: usize,
-        cb: usize,
-        dk_win: &'a mut [f32],
-        dv_win: &'a mut [f32],
-    }
-
     let dq_wins = split_windows(
         &mut dq4.data,
         (0..slices).flat_map(|_| (0..t_r).map(|rb| block_rows(rb, blocks.b_r, n) * d)),
@@ -677,58 +1192,63 @@ pub fn block_sparse2_backward_batched(
         .collect();
 
     // Phase 1: all slices' dQ row blocks through one pool.
-    run_pool(dq_items, workers, hbm, |it| {
-        let cfg_s = &per_cfg[it.s];
-        let mask = mask_for(masks, h, slices, it.s);
-        sparse_dq_row_sweep(
-            &q.data[it.s * n * d..(it.s + 1) * n * d],
-            &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-            &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-            &dout.data[it.s * n * d..(it.s + 1) * n * d],
-            &stats.lse[it.s * n..(it.s + 1) * n],
-            &d_vecs[it.s],
-            n,
-            n_k,
-            d,
-            mask,
-            tile_base,
-            cfg_s,
-            blocks,
-            cfg_s.tau_for(d),
-            cfg_s.kv_limit(n_k),
-            it.rb,
-            it.rb + 1,
-            it.dq_win,
-        )
-    });
+    let mut report =
+        run_pool_guarded(dq_items, workers, hbm, FaultSite::SparseDq, plan, validate, |it| {
+            let cfg_s = &per_cfg[it.s];
+            let mask = mask_for(masks, h, slices, it.s);
+            sparse_dq_row_sweep(
+                &q.data[it.s * n * d..(it.s + 1) * n * d],
+                &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+                &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+                &dout.data[it.s * n * d..(it.s + 1) * n * d],
+                &stats.lse[it.s * n..(it.s + 1) * n],
+                &d_vecs[it.s],
+                n,
+                n_k,
+                d,
+                mask,
+                tile_base,
+                cfg_s,
+                blocks,
+                cfg_s.tau_for(d),
+                cfg_s.kv_limit(n_k),
+                it.rb,
+                it.rb + 1,
+                it.dq_win,
+            )
+        })
+        .map_err(|e| e.located(h))?;
 
     // Phase 2: all slices' dK/dV column blocks through one pool.
-    run_pool(dkv_items, workers, hbm, |it| {
-        let cfg_s = &per_cfg[it.s];
-        let mask = mask_for(masks, h, slices, it.s);
-        dkv_col_sweep_filtered(
-            &q.data[it.s * n * d..(it.s + 1) * n * d],
-            &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-            &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-            &dout.data[it.s * n * d..(it.s + 1) * n * d],
-            &stats.lse[it.s * n..(it.s + 1) * n],
-            &d_vecs[it.s],
-            n,
-            n_k,
-            d,
-            cfg_s,
-            blocks,
-            cfg_s.tau_for(d),
-            cfg_s.kv_limit(n_k),
-            it.cb,
-            it.cb + 1,
-            it.dk_win,
-            it.dv_win,
-            |i, j| mask.get(i, tile_base + j),
-        )
-    });
+    let dkv_report =
+        run_pool_guarded(dkv_items, workers, hbm, FaultSite::SparseDkv, plan, validate, |it| {
+            let cfg_s = &per_cfg[it.s];
+            let mask = mask_for(masks, h, slices, it.s);
+            dkv_col_sweep_filtered(
+                &q.data[it.s * n * d..(it.s + 1) * n * d],
+                &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+                &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
+                &dout.data[it.s * n * d..(it.s + 1) * n * d],
+                &stats.lse[it.s * n..(it.s + 1) * n],
+                &d_vecs[it.s],
+                n,
+                n_k,
+                d,
+                cfg_s,
+                blocks,
+                cfg_s.tau_for(d),
+                cfg_s.kv_limit(n_k),
+                it.cb,
+                it.cb + 1,
+                it.dk_win,
+                it.dv_win,
+                |i, j| mask.get(i, tile_base + j),
+            )
+        })
+        .map_err(|e| e.located(h))?;
+    report.merge(&dkv_report);
 
-    AttnGrads { dq: dq4, dk: dk4, dv: dv4 }
+    Ok((AttnGrads { dq: dq4, dk: dk4, dv: dv4 }, report))
 }
 
 #[cfg(test)]

@@ -49,8 +49,11 @@
 //! Threads (`std::thread::scope` via `attn::batched::run_pool`) are the
 //! laptop-scale stand-in for the devices.
 
-use super::batched::{block_rows, flash2_forward_many, run_pool, split_windows, AttnSlice};
+use super::batched::{
+    block_rows, forward_many_sited, run_pool_guarded, split_windows, AttnSlice, DqItem, FwdItem,
+};
 use super::block_sparse::{block_sparse2_forward, check_mask_geometry, mask_tile_base};
+use super::faults::{AttnError, FaultPlan, FaultReport, FaultSite, PoolItem};
 use super::flash::Blocks;
 use super::flash2::{dkv_col_sweep, stream_kv, stream_kv_dq, write_epilogue, RowBlockState};
 use super::masks::BlockMask;
@@ -92,8 +95,59 @@ pub fn shard_ranges(n_k: usize, b_c: usize, shards: usize) -> Vec<Shard> {
 /// row. Generalises the old beyond-`kv_len` skip — such shards never
 /// become work items on either schedule.
 pub fn shard_is_dead(sh: Shard, n_q: usize, cfg: &AttnConfig) -> bool {
+    shard_dead_reason(sh, n_q, cfg).is_some()
+}
+
+/// Why a shard is dead, for the checked entry points' classified
+/// reporting (`FaultReport::dead_shards`) — `None` means live.
+pub fn shard_dead_reason(sh: Shard, n_q: usize, cfg: &AttnConfig) -> Option<&'static str> {
     let glo = cfg.kv_offset + sh.lo;
-    cfg.kv_len.is_some_and(|kl| glo >= kl) || (cfg.causal && glo >= n_q)
+    if cfg.kv_len.is_some_and(|kl| glo >= kl) {
+        Some("wholly beyond the valid key prefix (kv_len)")
+    } else if cfg.causal && glo >= n_q {
+        Some("wholly above the causal diagonal")
+    } else {
+        None
+    }
+}
+
+/// Split a shard layout into live shards and classified dead shards, or
+/// a typed [`AttnError::ShardConfig`] naming a structurally malformed
+/// shard (empty range, or a start not aligned to whole `b_c` column
+/// tiles — misalignment would silently break the ring schedule's
+/// bitwise-parity guarantee). Layouts from [`shard_ranges`] always pass
+/// the structural check; this guards externally-constructed layouts.
+pub fn classify_shards(
+    ranges: &[Shard],
+    n_q: usize,
+    cfg: &AttnConfig,
+    b_c: usize,
+) -> Result<(Vec<Shard>, Vec<(usize, &'static str)>), AttnError> {
+    let mut live = Vec::new();
+    let mut dead = Vec::new();
+    for (i, &sh) in ranges.iter().enumerate() {
+        if sh.lo >= sh.hi {
+            return Err(AttnError::ShardConfig {
+                shard: i,
+                lo: sh.lo,
+                hi: sh.hi,
+                reason: "empty key range".into(),
+            });
+        }
+        if sh.lo % b_c != 0 {
+            return Err(AttnError::ShardConfig {
+                shard: i,
+                lo: sh.lo,
+                hi: sh.hi,
+                reason: format!("start not aligned to the {b_c}-column tile grid"),
+            });
+        }
+        match shard_dead_reason(sh, n_q, cfg) {
+            Some(reason) => dead.push((i, reason)),
+            None => live.push(sh),
+        }
+    }
+    Ok((live, dead))
 }
 
 /// The defined all-masked result: zero output, zero mass, m = -inf.
@@ -177,22 +231,57 @@ pub fn flash_forward_sharded(
     shards: usize,
     workers: usize,
 ) -> AttnOutput {
+    let plan = FaultPlan::none();
+    match forward_sharded_core(q, k, v, cfg, blocks, shards, workers, &plan, false) {
+        Ok((out, _)) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`flash_forward_sharded`] with fault containment, retry, the
+/// finiteness guardrail, fault injection, and classified dead-shard
+/// reporting. A failed row-block item is recomputed (re-streaming every
+/// shard), so recovered output stays bitwise identical to the fault-free
+/// run.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_forward_sharded_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+) -> Result<(AttnOutput, FaultReport), AttnError> {
+    forward_sharded_core(q, k, v, cfg, blocks, shards, workers, plan, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_sharded_core(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(AttnOutput, FaultReport), AttnError> {
     let (n_q, d) = (q.rows(), q.cols());
     let n_k = k.rows();
     assert_eq!(k.cols(), d, "flash_forward_sharded: K feature dim mismatch");
     assert_eq!((v.rows(), v.cols()), (n_k, d), "flash_forward_sharded: V shape mismatch");
     let kv_limit = cfg.kv_limit(n_k);
-    if n_k == 0 || kv_limit <= cfg.kv_offset {
-        // Every key masked (or none exist): the defined all-masked result
-        // without spawning any worker.
-        return all_masked_output(n_q, d);
-    }
-    let live: Vec<Shard> = shard_ranges(n_k, blocks.b_c, shards)
-        .into_iter()
-        .filter(|&sh| !shard_is_dead(sh, n_q, cfg))
-        .collect();
+    let ranges = shard_ranges(n_k, blocks.b_c, shards);
+    let (live, dead) = classify_shards(&ranges, n_q, cfg, blocks.b_c)?;
+    let mut report = FaultReport { dead_shards: dead, ..Default::default() };
     if live.is_empty() {
-        return all_masked_output(n_q, d);
+        // Every key masked (or none exist): the defined all-masked result
+        // without spawning any worker — each dropped shard is classified
+        // in the report instead of silently substituted.
+        return Ok((all_masked_output(n_q, d), report));
     }
     let tau = cfg.tau_for(d);
     let b_r = blocks.b_r;
@@ -200,62 +289,67 @@ pub fn flash_forward_sharded(
     let mut o = Tensor::zeros(&[n_q, d]);
     let mut lse = vec![0.0f32; n_q];
 
-    struct FwdItem<'a> {
-        rb: usize,
-        o_win: &'a mut [f32],
-        lse_win: &'a mut [f32],
-    }
     let o_wins = split_windows(&mut o.data, (0..t_r).map(|rb| block_rows(rb, b_r, n_q) * d));
     let lse_wins = split_windows(&mut lse, (0..t_r).map(|rb| block_rows(rb, b_r, n_q)));
     let items: Vec<FwdItem<'_>> = o_wins
         .into_iter()
         .zip(lse_wins)
         .enumerate()
-        .map(|(rb, (o_win, lse_win))| FwdItem { rb, o_win, lse_win })
+        .map(|(rb, (o_win, lse_win))| FwdItem { s: 0, rb, o_win, lse_win })
         .collect();
 
     let (qd, kd, vd) = (q.data.as_slice(), k.data.as_slice(), v.data.as_slice());
     // Each simulated device counts its own traffic in the analytic model
-    // (`multi_gpu_cost`); the merged counter here is discarded.
-    run_pool(items, workers, &mut Hbm::new(), |it| {
-        let mut hbm = Hbm::new();
-        let r0 = it.rb * b_r;
-        let r1 = ((it.rb + 1) * b_r).min(n_q);
-        let br = r1 - r0;
-        hbm.load(br * d); // Q_i loaded once, before the shards visit
-        let mut state = RowBlockState::new(blocks, d); // fresh = already reset
-        for sh in &live {
-            // Shards wholly above this row block's diagonal would have
-            // every tile skipped — don't visit them at all.
-            if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
-                continue;
+    // (`multi_gpu_cost`); the merged counter here is discarded — but the
+    // report's retry traffic is kept, access-for-access.
+    let pool_report = run_pool_guarded(
+        items,
+        workers,
+        &mut Hbm::new(),
+        FaultSite::RingFwd,
+        plan,
+        validate,
+        |it| {
+            let mut hbm = Hbm::new();
+            let r0 = it.rb * b_r;
+            let r1 = ((it.rb + 1) * b_r).min(n_q);
+            let br = r1 - r0;
+            hbm.load(br * d); // Q_i loaded once, before the shards visit
+            let mut state = RowBlockState::new(blocks, d); // fresh = already reset
+            for sh in &live {
+                // Shards wholly above this row block's diagonal would have
+                // every tile skipped — don't visit them at all.
+                if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
+                    continue;
+                }
+                let cfg_s = cfg.for_shard(sh.lo);
+                stream_kv(
+                    &mut state,
+                    &qd[r0 * d..r1 * d],
+                    &kd[sh.lo * d..sh.hi * d],
+                    &vd[sh.lo * d..sh.hi * d],
+                    sh.hi - sh.lo,
+                    n_q,
+                    d,
+                    r0,
+                    r1,
+                    &cfg_s,
+                    blocks,
+                    tau,
+                    kv_limit,
+                    &mut hbm,
+                );
             }
-            let cfg_s = cfg.for_shard(sh.lo);
-            stream_kv(
-                &mut state,
-                &qd[r0 * d..r1 * d],
-                &kd[sh.lo * d..sh.hi * d],
-                &vd[sh.lo * d..sh.hi * d],
-                sh.hi - sh.lo,
-                n_q,
-                d,
-                r0,
-                r1,
-                &cfg_s,
-                blocks,
-                tau,
-                kv_limit,
-                &mut hbm,
-            );
-        }
-        write_epilogue(&state, br, d, it.o_win, it.lse_win, &mut hbm);
-        hbm
-    });
+            write_epilogue(&state, br, d, it.o_win, it.lse_win, &mut hbm);
+            hbm
+        },
+    )?;
+    report.merge(&pool_report);
 
     // (l, m) = (1, L) is an exact decomposition (l·eᵐ = e^L); zero-mass
     // rows keep the explicit (0, -inf) convention.
     let l = lse.iter().map(|&x| if x == f32::NEG_INFINITY { 0.0 } else { 1.0 }).collect();
-    AttnOutput { o, l, m: lse }
+    Ok((AttnOutput { o, l, m: lse }, report))
 }
 
 /// Sequence-parallel fast backward, ring schedule — the gradient
@@ -281,6 +375,79 @@ pub fn flash_backward_sharded(
     shards: usize,
     workers: usize,
 ) -> AttnGrads {
+    let plan = FaultPlan::none();
+    match backward_sharded_core(q, k, v, o, dout, stats, cfg, blocks, shards, workers, &plan, false)
+    {
+        Ok((grads, _)) => grads,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`flash_backward_sharded`] with fault containment, retry, the
+/// finiteness guardrail, and fault injection. dQ items re-stream every
+/// live shard on retry from a zeroed accumulator window; dK/dV items
+/// re-run their single (shard, column-block) sweep — both bitwise
+/// identical to the fault-free computation.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_backward_sharded_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: AttnStats<'_>,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
+    backward_sharded_core(q, k, v, o, dout, stats, cfg, blocks, shards, workers, plan, true)
+}
+
+/// One (shard, column block) dK/dV work item in the ring backward pool.
+/// `si` is the shard's index in the ring — the provenance coordinate a
+/// guardrail failure reports.
+struct RingDkvItem<'a> {
+    si: usize,
+    shard: Shard,
+    cb: usize,
+    dk_win: &'a mut [f32],
+    dv_win: &'a mut [f32],
+}
+
+impl PoolItem for RingDkvItem<'_> {
+    fn id(&self) -> (usize, usize) {
+        (self.si, self.cb)
+    }
+    fn reset(&mut self) {
+        self.dk_win.fill(0.0);
+        self.dv_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        self.dk_win.iter().all(|x| x.is_finite()) && self.dv_win.iter().all(|x| x.is_finite())
+    }
+    fn poison(&mut self) {
+        self.dk_win.fill(f32::NAN);
+        self.dv_win.fill(f32::NAN);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_sharded_core(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: AttnStats<'_>,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
     let (n, d) = (q.rows(), q.cols());
     let n_k = k.rows();
     assert_eq!(k.cols(), d, "flash_backward_sharded: K feature dim mismatch");
@@ -296,15 +463,15 @@ pub fn flash_backward_sharded(
     let mut dk = Tensor::zeros(&[n_k, d]);
     let mut dv = Tensor::zeros(&[n_k, d]);
     if t_r == 0 || n_k == 0 {
-        return AttnGrads { dq, dk, dv };
+        return Ok((AttnGrads { dq, dk, dv }, FaultReport::default()));
     }
     // D and the logsumexp are global per-row quantities, computed once —
     // identical to the single-device kernel's phase 0.
     let d_vec: Vec<f32> = (0..n).map(|r| dot4(dout.row(r), o.row(r))).collect();
     let lse = stats.to_lse_vec();
     let ranges = shard_ranges(n_k, b_c, shards);
-    let live: Vec<Shard> =
-        ranges.iter().copied().filter(|&sh| !shard_is_dead(sh, n, cfg)).collect();
+    let (live, dead) = classify_shards(&ranges, n, cfg, b_c)?;
+    let mut report = FaultReport { dead_shards: dead, ..Default::default() };
 
     let (qd, kd, vd, dod) =
         (q.data.as_slice(), k.data.as_slice(), v.data.as_slice(), dout.data.as_slice());
@@ -312,109 +479,117 @@ pub fn flash_backward_sharded(
 
     // Phase 1: dQ — one work item per Q row block, shards visiting in
     // global order with the accumulator resident.
-    struct DqItem<'a> {
-        rb: usize,
-        dq_win: &'a mut [f32],
-    }
     let dq_items: Vec<DqItem<'_>> =
         split_windows(&mut dq.data, (0..t_r).map(|rb| block_rows(rb, b_r, n) * d))
             .into_iter()
             .enumerate()
-            .map(|(rb, dq_win)| DqItem { rb, dq_win })
+            .map(|(rb, dq_win)| DqItem { s: 0, rb, dq_win })
             .collect();
-    run_pool(dq_items, workers, &mut Hbm::new(), |it| {
-        let mut hbm = Hbm::new();
-        let r0 = it.rb * b_r;
-        let r1 = ((it.rb + 1) * b_r).min(n);
-        let br = r1 - r0;
-        hbm.load(2 * br * d + 2 * br); // Q_i, dO_i, D_i, L_i once
-        let mut s_buf = vec![0.0f32; b_r * b_c];
-        let mut dp_buf = vec![0.0f32; b_r * b_c];
-        for sh in &live {
-            if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
-                continue;
+    let dq_report = run_pool_guarded(
+        dq_items,
+        workers,
+        &mut Hbm::new(),
+        FaultSite::RingDq,
+        plan,
+        validate,
+        |it| {
+            let mut hbm = Hbm::new();
+            let r0 = it.rb * b_r;
+            let r1 = ((it.rb + 1) * b_r).min(n);
+            let br = r1 - r0;
+            hbm.load(2 * br * d + 2 * br); // Q_i, dO_i, D_i, L_i once
+            let mut s_buf = vec![0.0f32; b_r * b_c];
+            let mut dp_buf = vec![0.0f32; b_r * b_c];
+            for sh in &live {
+                if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
+                    continue;
+                }
+                let cfg_s = cfg.for_shard(sh.lo);
+                stream_kv_dq(
+                    it.dq_win,
+                    &qd[r0 * d..r1 * d],
+                    &dod[r0 * d..r1 * d],
+                    &kd[sh.lo * d..sh.hi * d],
+                    &vd[sh.lo * d..sh.hi * d],
+                    sh.hi - sh.lo,
+                    n,
+                    d,
+                    r0,
+                    r1,
+                    lse_ref,
+                    d_ref,
+                    &cfg_s,
+                    blocks,
+                    tau,
+                    kv_limit,
+                    &mut s_buf,
+                    &mut dp_buf,
+                    &mut hbm,
+                );
             }
-            let cfg_s = cfg.for_shard(sh.lo);
-            stream_kv_dq(
-                it.dq_win,
-                &qd[r0 * d..r1 * d],
-                &dod[r0 * d..r1 * d],
-                &kd[sh.lo * d..sh.hi * d],
-                &vd[sh.lo * d..sh.hi * d],
-                sh.hi - sh.lo,
-                n,
-                d,
-                r0,
-                r1,
-                lse_ref,
-                d_ref,
-                &cfg_s,
-                blocks,
-                tau,
-                kv_limit,
-                &mut s_buf,
-                &mut dp_buf,
-                &mut hbm,
-            );
-        }
-        hbm.store(br * d); // dQ_i leaves the device exactly once
-        hbm
-    });
+            hbm.store(br * d); // dQ_i leaves the device exactly once
+            hbm
+        },
+    )?;
+    report.merge(&dq_report);
 
     // Phase 2: dK/dV — every (live shard, column block) pair is an
     // independent work item; dead shards keep their zero windows, which
     // is exactly what the single-device kernel computes for them.
-    struct DkvItem<'a> {
-        shard: Shard,
-        cb: usize,
-        dk_win: &'a mut [f32],
-        dv_win: &'a mut [f32],
-    }
-    let mut sizes: Vec<(Shard, usize, usize)> = Vec::new(); // (shard, local cb, elems)
-    for &sh in &ranges {
+    let mut sizes: Vec<(usize, Shard, usize, usize)> = Vec::new(); // (si, shard, local cb, elems)
+    for (si, &sh) in ranges.iter().enumerate() {
         let t_c_sh = (sh.hi - sh.lo).div_ceil(b_c);
         for cb in 0..t_c_sh {
             let c0 = sh.lo + cb * b_c;
             let c1 = (sh.lo + (cb + 1) * b_c).min(sh.hi);
-            sizes.push((sh, cb, (c1 - c0) * d));
+            sizes.push((si, sh, cb, (c1 - c0) * d));
         }
     }
-    let dk_wins = split_windows(&mut dk.data, sizes.iter().map(|&(_, _, sz)| sz));
-    let dv_wins = split_windows(&mut dv.data, sizes.iter().map(|&(_, _, sz)| sz));
-    let mut dkv_items: Vec<DkvItem<'_>> = Vec::new();
-    for ((shard, cb, _), (dk_win, dv_win)) in
+    let dk_wins = split_windows(&mut dk.data, sizes.iter().map(|&(_, _, _, sz)| sz));
+    let dv_wins = split_windows(&mut dv.data, sizes.iter().map(|&(_, _, _, sz)| sz));
+    let mut dkv_items: Vec<RingDkvItem<'_>> = Vec::new();
+    for ((si, shard, cb, _), (dk_win, dv_win)) in
         sizes.iter().copied().zip(dk_wins.into_iter().zip(dv_wins))
     {
         if shard_is_dead(shard, n, cfg) {
             continue;
         }
-        dkv_items.push(DkvItem { shard, cb, dk_win, dv_win });
+        dkv_items.push(RingDkvItem { si, shard, cb, dk_win, dv_win });
     }
-    run_pool(dkv_items, workers, &mut Hbm::new(), |it| {
-        let sh = it.shard;
-        let cfg_s = cfg.for_shard(sh.lo);
-        dkv_col_sweep(
-            qd,
-            &kd[sh.lo * d..sh.hi * d],
-            &vd[sh.lo * d..sh.hi * d],
-            dod,
-            lse_ref,
-            d_ref,
-            n,
-            sh.hi - sh.lo,
-            d,
-            &cfg_s,
-            blocks,
-            tau,
-            kv_limit,
-            it.cb,
-            it.cb + 1,
-            it.dk_win,
-            it.dv_win,
-        )
-    });
+    let dkv_report = run_pool_guarded(
+        dkv_items,
+        workers,
+        &mut Hbm::new(),
+        FaultSite::RingDkv,
+        plan,
+        validate,
+        |it| {
+            let sh = it.shard;
+            let cfg_s = cfg.for_shard(sh.lo);
+            dkv_col_sweep(
+                qd,
+                &kd[sh.lo * d..sh.hi * d],
+                &vd[sh.lo * d..sh.hi * d],
+                dod,
+                lse_ref,
+                d_ref,
+                n,
+                sh.hi - sh.lo,
+                d,
+                &cfg_s,
+                blocks,
+                tau,
+                kv_limit,
+                it.cb,
+                it.cb + 1,
+                it.dk_win,
+                it.dv_win,
+            )
+        },
+    )?;
+    report.merge(&dkv_report);
 
-    AttnGrads { dq, dk, dv }
+    Ok((AttnGrads { dq, dk, dv }, report))
 }
 
 /// Tree schedule, step 1: one softmax partial per live shard, scheduled
@@ -433,12 +608,36 @@ pub fn shard_partials(
     shards: usize,
     workers: usize,
 ) -> Vec<AttnOutput> {
+    match shard_partials_checked(q, k, v, cfg, blocks, shards, workers, &FaultPlan::none(), false)
+    {
+        Ok((partials, _)) => partials,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`shard_partials`] with fault containment: a failed (shard,
+/// row-block) work item is recomputed and its partial re-enters the
+/// merge unchanged — the associativity of [`merge_partials`] is the
+/// recovery primitive. Dead shards are classified in the report rather
+/// than silently dropped; a malformed shard range is a typed
+/// [`AttnError::ShardConfig`].
+#[allow(clippy::too_many_arguments)]
+pub fn shard_partials_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(Vec<AttnOutput>, FaultReport), AttnError> {
     let n_k = k.rows();
     let d = k.cols();
-    let live: Vec<Shard> = shard_ranges(n_k, blocks.b_c, shards)
-        .into_iter()
-        .filter(|&sh| !shard_is_dead(sh, q.rows(), cfg))
-        .collect();
+    let ranges = shard_ranges(n_k, blocks.b_c, shards);
+    let (live, dead) = classify_shards(&ranges, q.rows(), cfg, blocks.b_c)?;
+    let mut report = FaultReport { dead_shards: dead, ..Default::default() };
     let slices: Vec<AttnSlice<'_>> = live
         .iter()
         .map(|sh| AttnSlice {
@@ -451,10 +650,17 @@ pub fn shard_partials(
             cfg: cfg.for_shard(sh.lo),
         })
         .collect();
-    flash2_forward_many(&slices, blocks, workers, &mut Hbm::new())
-        .into_iter()
-        .map(|p| p.into_attn_output())
-        .collect()
+    let (partials, pool_report) = forward_many_sited(
+        &slices,
+        blocks,
+        workers,
+        &mut Hbm::new(),
+        plan,
+        validate,
+        FaultSite::TreePartial,
+    )?;
+    report.merge(&pool_report);
+    Ok((partials.into_iter().map(|p| p.into_attn_output()).collect(), report))
 }
 
 /// Tree schedule, step 2: reduce the shard partials with
@@ -470,11 +676,36 @@ pub fn flash_forward_sharded_tree(
     shards: usize,
     workers: usize,
 ) -> AttnOutput {
-    let partials = shard_partials(q, k, v, cfg, blocks, shards, workers);
-    partials
+    let plan = FaultPlan::none();
+    match flash_forward_sharded_tree_checked(q, k, v, cfg, blocks, shards, workers, &plan) {
+        Ok((out, _)) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`flash_forward_sharded_tree`] with the typed-error flow: instead of
+/// an `unwrap_or_else` silently substituting the all-masked output, the
+/// report says exactly which shards were dead and why; only when every
+/// shard is classified dead does the defined all-masked result come
+/// back. Failed partials are recomputed and re-merged (tentpole part 2).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_forward_sharded_tree_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+) -> Result<(AttnOutput, FaultReport), AttnError> {
+    let (partials, report) =
+        shard_partials_checked(q, k, v, cfg, blocks, shards, workers, plan, true)?;
+    let out = partials
         .into_iter()
         .reduce(|a, b| merge_partials(&a, &b))
-        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()))
+        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()));
+    Ok((out, report))
 }
 
 /// Tree schedule over a **block-sparse** workload: one softmax partial
@@ -512,13 +743,7 @@ pub fn block_sparse_shard_partials(
     shard_ranges(n_k, blocks.b_c, shards)
         .into_iter()
         .filter(|&sh| !shard_is_dead(sh, q.rows(), cfg))
-        .filter(|&sh| {
-            // Sparse dead-shard test: any live mask block in the shard's
-            // global tile window [tb, te)?
-            let tb = (cfg.kv_offset + sh.lo) / blocks.b_c;
-            let te = (cfg.kv_offset + sh.hi).div_ceil(blocks.b_c);
-            (0..t_r).any(|i| (tb..te).any(|t| mask.get(i, t)))
-        })
+        .filter(|&sh| !sparse_window_is_dead(sh, mask, cfg, blocks, t_r))
         .map(|sh| {
             let ks = k.slice_rows(sh.lo, sh.hi);
             let vs = v.slice_rows(sh.lo, sh.hi);
@@ -528,6 +753,21 @@ pub fn block_sparse_shard_partials(
             .into_attn_output()
         })
         .collect()
+}
+
+/// Sparse dead-shard test: is there any live mask block in the shard's
+/// global tile window [tb, te)? A shard whose window is all zero never
+/// becomes a work item.
+fn sparse_window_is_dead(
+    sh: Shard,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    t_r: usize,
+) -> bool {
+    let tb = (cfg.kv_offset + sh.lo) / blocks.b_c;
+    let te = (cfg.kv_offset + sh.hi).div_ceil(blocks.b_c);
+    !(0..t_r).any(|i| (tb..te).any(|t| mask.get(i, t)))
 }
 
 /// Reduce [`block_sparse_shard_partials`] with the §5 associative merge
@@ -544,10 +784,101 @@ pub fn block_sparse_forward_sharded_tree(
     shards: usize,
     workers: usize,
 ) -> AttnOutput {
-    block_sparse_shard_partials(q, k, v, mask, cfg, blocks, shards, workers)
+    let plan = FaultPlan::none();
+    match block_sparse_forward_sharded_tree_checked(
+        q, k, v, mask, cfg, blocks, shards, workers, &plan,
+    ) {
+        Ok((out, _)) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`block_sparse_forward_sharded_tree`] with the typed-error flow: the
+/// report classifies every dead shard (masked by `kv_len`, above the
+/// causal diagonal, or killed by an all-zero mask window) instead of the
+/// old `unwrap_or_else` silently substituting; each live partial is
+/// finiteness-validated with shard provenance before it may enter the
+/// merge. The sparse kernel runs whole per shard (no per-item pool), so
+/// the fault plan here only poisons partials at shard granularity —
+/// a poisoned partial is recomputed before merging, bitwise identical.
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse_forward_sharded_tree_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+) -> Result<(AttnOutput, FaultReport), AttnError> {
+    let n_k = k.rows();
+    let t_r = q.rows().div_ceil(blocks.b_r);
+    check_mask_geometry(
+        mask,
+        t_r,
+        mask_tile_base(cfg.kv_offset, blocks.b_c),
+        n_k.div_ceil(blocks.b_c),
+    );
+    let ranges = shard_ranges(n_k, blocks.b_c, shards);
+    let (_, mut dead) = classify_shards(&ranges, q.rows(), cfg, blocks.b_c)?;
+    let dense_dead: Vec<usize> = dead.iter().map(|&(i, _)| i).collect();
+    let mut live: Vec<(usize, Shard)> = Vec::new();
+    for (si, &sh) in ranges.iter().enumerate() {
+        if dense_dead.contains(&si) {
+            continue;
+        }
+        if sparse_window_is_dead(sh, mask, cfg, blocks, t_r) {
+            dead.push((si, "mask window all zero within the shard's key range"));
+        } else {
+            live.push((si, sh));
+        }
+    }
+    let mut report = FaultReport { dead_shards: dead, ..Default::default() };
+    let mut partials: Vec<AttnOutput> = Vec::new();
+    for &(si, sh) in &live {
+        let ks = k.slice_rows(sh.lo, sh.hi);
+        let vs = v.slice_rows(sh.lo, sh.hi);
+        let cfg_s = cfg.for_shard(sh.lo);
+        let mut attempt: u32 = 0;
+        loop {
+            let mut p = block_sparse2_forward(
+                q, &ks, &vs, mask, &cfg_s, blocks, workers, &mut Hbm::new(),
+            )
+            .into_attn_output();
+            if plan.fault_for(FaultSite::TreePartial, si, attempt)
+                == Some(super::faults::FaultKind::PoisonedPartial)
+            {
+                p.o.data.fill(f32::NAN);
+                report.poisoned += 1;
+            }
+            let finite = p.o.data.iter().all(|x| x.is_finite())
+                && p.l.iter().all(|x| x.is_finite())
+                && p.m.iter().all(|&x| x.is_finite() || x == f32::NEG_INFINITY);
+            if finite {
+                partials.push(p);
+                break;
+            }
+            attempt += 1;
+            if attempt >= super::faults::MAX_ATTEMPTS {
+                return Err(AttnError::NonFinite {
+                    site: FaultSite::TreePartial,
+                    slice: si,
+                    batch: 0,
+                    head: 0,
+                    block: 0,
+                    attempts: attempt,
+                });
+            }
+            report.retries += 1;
+        }
+    }
+    let out = partials
         .into_iter()
         .reduce(|a, b| merge_partials(&a, &b))
-        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()))
+        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()));
+    Ok((out, report))
 }
 
 /// IO model for W-way sequence-parallel flash (Appendix D.1): per-device

@@ -1,0 +1,440 @@
+//! Deterministic fault injection + the typed error/report surface of the
+//! attention execution plane.
+//!
+//! The paper's §5 decomposition (per-block partials combined by an
+//! associative softmax merge) is a *recovery* primitive, not just a
+//! parallelism trick: any work item's contribution can be recomputed and
+//! re-merged without touching the rest. This module supplies the pieces
+//! the guarded pool (`attn::batched::run_pool_guarded`) threads through
+//! every batched and sharded schedule:
+//!
+//! * [`FaultPlan`] — deterministic fault injection at chosen
+//!   (site, item, attempt) coordinates, either targeted exactly or driven
+//!   by a SplitMix64 coordinate hash (the same counter-style construction
+//!   as the dropout stream, so decisions are independent of claim order
+//!   and worker count). Zero-cost when disabled: the hot path asks one
+//!   `is_enabled()` bool per item.
+//! * [`FaultKind`] — the four injected fault classes: worker panic,
+//!   poisoned (NaN) partial, delayed shard (a straggler, not a failure),
+//!   and dropped merge (the completion record is lost, the work re-runs).
+//! * [`FaultReport`] — what a checked entry point observed: retry counts
+//!   per class, the exact HBM traffic the retries re-did (asserted
+//!   access-for-access against `sim::cost` per-item forms in the chaos
+//!   wall), and classified dead shards.
+//! * [`AttnError`] — the typed error taxonomy replacing hot-path panics,
+//!   with (slice, batch, head, block) provenance on guardrail trips.
+//!
+//! Injection happens at *publish time*: a faulted attempt runs its work
+//! to completion first, so every attempt — faulted or not — performs and
+//! counts its full item traffic, which is what makes retry accounting
+//! exact. An injected panic unwinds with an [`InjectedPanic`] payload
+//! carrying the attempt's counter (via `resume_unwind`, skipping the
+//! panic hook); a genuine mid-item panic has unknowable partial traffic
+//! and is kept out of every counter.
+
+use crate::sim::hbm::Hbm;
+use crate::util::rng::SplitMix64;
+
+/// Retry budget per work item: the first run plus two retries. Three
+/// deterministic failures of the same item is a bug, not bad luck, and
+/// surfaces as a typed [`AttnError`].
+pub const MAX_ATTEMPTS: u32 = 3;
+
+/// The injected fault classes of the chaos wall.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The worker panics after computing the item (contained by
+    /// `catch_unwind`; the item is requeued).
+    WorkerPanic,
+    /// The item's output windows are scribbled with NaN after the work
+    /// completes — the numeric guardrail must catch it and requeue.
+    PoisonedPartial,
+    /// The item completes late (a straggler). No retry, no extra
+    /// traffic; output must still be bitwise identical.
+    DelayedShard,
+    /// The completion record is lost: the work ran (its traffic is
+    /// real) but the item re-runs from scratch.
+    DroppedMerge,
+}
+
+/// Which pool dispatch a fault (or guardrail trip) belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Batched dense forward row-block items.
+    BatchedFwd,
+    /// Batched dense backward dQ row-block items.
+    BatchedDq,
+    /// Batched dense backward dK/dV column-block items.
+    BatchedDkv,
+    /// Batched block-sparse forward row-block items.
+    SparseFwd,
+    /// Batched block-sparse backward dQ row-block items.
+    SparseDq,
+    /// Batched block-sparse backward dK/dV column-block items.
+    SparseDkv,
+    /// Ring-schedule forward row-block items (each streams all shards).
+    RingFwd,
+    /// Ring-schedule backward dQ row-block items.
+    RingDq,
+    /// Ring-schedule backward per-shard dK/dV column-block items.
+    RingDkv,
+    /// Tree-schedule per-shard partial items (via `flash2_forward_many`).
+    TreePartial,
+}
+
+impl FaultSite {
+    /// Stable coordinate code for the seeded decision hash.
+    fn code(self) -> u64 {
+        match self {
+            FaultSite::BatchedFwd => 1,
+            FaultSite::BatchedDq => 2,
+            FaultSite::BatchedDkv => 3,
+            FaultSite::SparseFwd => 4,
+            FaultSite::SparseDq => 5,
+            FaultSite::SparseDkv => 6,
+            FaultSite::RingFwd => 7,
+            FaultSite::RingDq => 8,
+            FaultSite::RingDkv => 9,
+            FaultSite::TreePartial => 10,
+        }
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultSite::BatchedFwd => "batched forward",
+            FaultSite::BatchedDq => "batched backward dQ",
+            FaultSite::BatchedDkv => "batched backward dK/dV",
+            FaultSite::SparseFwd => "block-sparse forward",
+            FaultSite::SparseDq => "block-sparse backward dQ",
+            FaultSite::SparseDkv => "block-sparse backward dK/dV",
+            FaultSite::RingFwd => "ring-sharded forward",
+            FaultSite::RingDq => "ring-sharded backward dQ",
+            FaultSite::RingDkv => "ring-sharded backward dK/dV",
+            FaultSite::TreePartial => "tree-sharded partial",
+        })
+    }
+}
+
+/// Seeded random-mode parameters: each (site, item) first attempt faults
+/// with probability `rate`, choosing uniformly among `kinds`.
+#[derive(Clone, Debug)]
+struct RandomFaults {
+    seed: u64,
+    rate: f32,
+    kinds: Vec<FaultKind>,
+}
+
+/// A deterministic fault schedule. Decisions are a pure function of
+/// (site, item index, attempt index) — never of claim order, worker
+/// count, or wall clock — so a faulted run's retry set (and therefore
+/// its extra HBM traffic) is exactly reproducible.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    targeted: Vec<(FaultSite, usize, u32, FaultKind)>,
+    random: Option<RandomFaults>,
+}
+
+impl FaultPlan {
+    /// The disabled plan: injects nothing, costs one bool per item.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add a targeted fault at exact (site, item, attempt) coordinates.
+    /// Targeting every attempt of an item exhausts its retry budget —
+    /// that is how the chaos wall pins the typed-error path.
+    pub fn with(mut self, site: FaultSite, item: usize, attempt: u32, kind: FaultKind) -> Self {
+        self.targeted.push((site, item, attempt, kind));
+        self
+    }
+
+    /// Seeded random mode: every (site, item) *first* attempt faults with
+    /// probability `rate` (kind chosen uniformly from `kinds`), via a
+    /// SplitMix64 hash of the coordinates — the dropout-stream
+    /// construction, so the schedule is claim-order independent. Only
+    /// first attempts fault, so recovery always succeeds within the
+    /// attempt budget.
+    pub fn seeded(seed: u64, rate: f32, kinds: &[FaultKind]) -> FaultPlan {
+        assert!(!kinds.is_empty(), "FaultPlan::seeded needs at least one fault kind");
+        FaultPlan {
+            targeted: Vec::new(),
+            random: Some(RandomFaults { seed, rate, kinds: kinds.to_vec() }),
+        }
+    }
+
+    /// Whether any injection is configured (the hot path's fast-out).
+    pub fn is_enabled(&self) -> bool {
+        !self.targeted.is_empty() || self.random.is_some()
+    }
+
+    /// The fault (if any) planned for attempt `attempt` of item `item`
+    /// at `site`.
+    pub fn fault_for(&self, site: FaultSite, item: usize, attempt: u32) -> Option<FaultKind> {
+        if !self.is_enabled() {
+            return None;
+        }
+        for &(s, i, a, kind) in &self.targeted {
+            if s == site && i == item && a == attempt {
+                return Some(kind);
+            }
+        }
+        let r = self.random.as_ref()?;
+        if attempt != 0 {
+            return None;
+        }
+        let mut h = SplitMix64::new(
+            r.seed ^ (site.code() << 48) ^ (item as u64).wrapping_mul(0x9E37_79B9),
+        );
+        if h.next_f32() >= r.rate {
+            return None;
+        }
+        Some(r.kinds[h.below(r.kinds.len() as u64) as usize])
+    }
+}
+
+/// What a guarded run observed: per-class fault counts, how many
+/// re-executions were scheduled, and the exact extra HBM traffic those
+/// re-executions re-did (the chaos wall asserts it against the
+/// per-item `sim::cost` forms access-for-access).
+#[derive(Clone, Debug, Default)]
+pub struct FaultReport {
+    /// Re-executions scheduled (any cause).
+    pub retries: u64,
+    /// Contained worker panics (injected or genuine).
+    pub panics: u64,
+    /// Injected poisoned partials caught by the guardrail.
+    pub poisoned: u64,
+    /// Dropped completion records (work re-ran).
+    pub dropped: u64,
+    /// Delayed (straggler) items — completed late, no retry.
+    pub delayed: u64,
+    /// Guardrail trips on genuinely non-finite output (not injected).
+    pub guardrail: u64,
+    /// HBM traffic of faulted attempts whose work fully ran — exactly
+    /// the traffic the retries re-do. Genuine mid-item panics have
+    /// unknowable partial traffic and are excluded.
+    pub retry_hbm: Hbm,
+    /// Dead shards the sharded schedules classified instead of silently
+    /// substituting: (shard index, reason).
+    pub dead_shards: Vec<(usize, &'static str)>,
+}
+
+impl FaultReport {
+    /// Fold another phase's report into this one.
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.retries += other.retries;
+        self.panics += other.panics;
+        self.poisoned += other.poisoned;
+        self.dropped += other.dropped;
+        self.delayed += other.delayed;
+        self.guardrail += other.guardrail;
+        self.retry_hbm.merge(&other.retry_hbm);
+        self.dead_shards.extend(other.dead_shards.iter().cloned());
+    }
+
+    /// Total faults observed (excluding benign delays).
+    pub fn faults(&self) -> u64 {
+        self.panics + self.poisoned + self.dropped + self.guardrail
+    }
+}
+
+/// Typed errors of the attention execution plane — the replacement for
+/// hot-path panics on the checked entry points.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttnError {
+    /// A work item's output failed the finiteness guardrail on every
+    /// attempt: NaN/Inf with (slice, batch, head, block) provenance.
+    /// `block` is the q row block for forward/dQ items and the key
+    /// column block for dK/dV items.
+    NonFinite {
+        site: FaultSite,
+        slice: usize,
+        batch: usize,
+        head: usize,
+        block: usize,
+        attempts: u32,
+    },
+    /// A work item kept failing (panic or dropped merge) past its
+    /// attempt budget.
+    ItemFailed { site: FaultSite, slice: usize, block: usize, attempts: u32, message: String },
+    /// A sharded schedule was handed a key range it cannot explain —
+    /// which shard, its global key window, and why.
+    ShardConfig { shard: usize, lo: usize, hi: usize, reason: String },
+    /// A self-check invariant broke: which one, and by how much.
+    Preflight { invariant: &'static str, detail: String },
+}
+
+impl AttnError {
+    /// Enrich pool provenance (flat slice index) with the batched
+    /// layout's (batch, head) coordinates.
+    pub(crate) fn located(self, heads: usize) -> AttnError {
+        match self {
+            AttnError::NonFinite { site, slice, block, attempts, .. } if heads > 0 => {
+                AttnError::NonFinite {
+                    site,
+                    slice,
+                    batch: slice / heads,
+                    head: slice % heads,
+                    block,
+                    attempts,
+                }
+            }
+            e => e,
+        }
+    }
+}
+
+impl std::fmt::Display for AttnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AttnError::NonFinite { site, slice, batch, head, block, attempts } => write!(
+                f,
+                "{site}: non-finite output in slice {slice} (batch {batch}, head {head}), \
+                 block {block} — still non-finite after {attempts} attempt(s)"
+            ),
+            AttnError::ItemFailed { site, slice, block, attempts, message } => write!(
+                f,
+                "{site}: work item (slice {slice}, block {block}) failed after {attempts} \
+                 attempt(s): {message}"
+            ),
+            AttnError::ShardConfig { shard, lo, hi, reason } => {
+                write!(f, "shard {shard} over global keys [{lo}, {hi}): {reason}")
+            }
+            AttnError::Preflight { invariant, detail } => {
+                write!(f, "preflight invariant '{invariant}' broke: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AttnError {}
+
+/// Behaviors the guarded pool needs from a work item: provenance, a
+/// reset to the pre-run (all-zero) window state so a retry reproduces a
+/// fresh run bit for bit (the backward sweeps *accumulate* into their
+/// windows), the finiteness guardrail, and NaN scribbling for injection.
+pub(crate) trait PoolItem: Send {
+    /// (slice, block) provenance for typed errors.
+    fn id(&self) -> (usize, usize);
+    /// Zero the output windows back to their pre-run state.
+    fn reset(&mut self);
+    /// Guardrail scan: true iff every output value is defined. A
+    /// logsumexp of -inf is the defined all-masked value and passes.
+    fn check_finite(&self) -> bool;
+    /// Scribble NaN over the output windows (fault injection only).
+    fn poison(&mut self);
+}
+
+/// Unwind payload of an injected [`FaultKind::WorkerPanic`]: carries the
+/// attempt's exact HBM counter so retry traffic stays accountable, and
+/// travels via `resume_unwind` so the global panic hook (and its stderr
+/// backtrace) is skipped for planned chaos.
+pub(crate) struct InjectedPanic(pub Hbm);
+
+/// Best-effort panic payload → message (for `AttnError::ItemFailed`).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if payload.is::<InjectedPanic>() {
+        "injected worker panic".to_string()
+    } else {
+        "worker panicked (non-string payload)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_injects_nothing() {
+        let plan = FaultPlan::none();
+        assert!(!plan.is_enabled());
+        for item in 0..64 {
+            for attempt in 0..MAX_ATTEMPTS {
+                assert_eq!(plan.fault_for(FaultSite::BatchedFwd, item, attempt), None);
+            }
+        }
+    }
+
+    #[test]
+    fn targeted_plan_hits_exact_coordinates_only() {
+        let plan = FaultPlan::none()
+            .with(FaultSite::BatchedFwd, 3, 0, FaultKind::WorkerPanic)
+            .with(FaultSite::BatchedFwd, 3, 1, FaultKind::PoisonedPartial);
+        assert_eq!(plan.fault_for(FaultSite::BatchedFwd, 3, 0), Some(FaultKind::WorkerPanic));
+        assert_eq!(plan.fault_for(FaultSite::BatchedFwd, 3, 1), Some(FaultKind::PoisonedPartial));
+        assert_eq!(plan.fault_for(FaultSite::BatchedFwd, 3, 2), None);
+        assert_eq!(plan.fault_for(FaultSite::BatchedFwd, 2, 0), None);
+        assert_eq!(plan.fault_for(FaultSite::BatchedDq, 3, 0), None);
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_first_attempt_only() {
+        let kinds = [FaultKind::WorkerPanic, FaultKind::DroppedMerge];
+        let a = FaultPlan::seeded(0xC0FFEE, 0.5, &kinds);
+        let b = FaultPlan::seeded(0xC0FFEE, 0.5, &kinds);
+        let mut hits = 0usize;
+        for item in 0..256 {
+            let fa = a.fault_for(FaultSite::TreePartial, item, 0);
+            assert_eq!(fa, b.fault_for(FaultSite::TreePartial, item, 0), "item {item}");
+            if let Some(k) = fa {
+                hits += 1;
+                assert!(kinds.contains(&k));
+            }
+            // Retries never re-fault in random mode.
+            assert_eq!(a.fault_for(FaultSite::TreePartial, item, 1), None);
+            assert_eq!(a.fault_for(FaultSite::TreePartial, item, 2), None);
+        }
+        assert!((64..192).contains(&hits), "rate 0.5 should hit roughly half: {hits}");
+        // Different sites draw different streams.
+        let same_site = (0..256)
+            .filter(|&i| {
+                a.fault_for(FaultSite::TreePartial, i, 0) == a.fault_for(FaultSite::RingFwd, i, 0)
+            })
+            .count();
+        assert!(same_site < 256, "site must enter the coordinate hash");
+    }
+
+    #[test]
+    fn error_display_carries_provenance() {
+        let e = AttnError::NonFinite {
+            site: FaultSite::BatchedFwd,
+            slice: 5,
+            batch: 1,
+            head: 2,
+            block: 3,
+            attempts: 3,
+        };
+        let msg = e.located(3).to_string();
+        assert!(msg.contains("batch 1"), "{msg}");
+        assert!(msg.contains("head 2"), "{msg}");
+        assert!(msg.contains("block 3"), "{msg}");
+        let s = AttnError::ShardConfig {
+            shard: 2,
+            lo: 64,
+            hi: 128,
+            reason: "every mask block in the shard's window is zero".into(),
+        };
+        assert!(s.to_string().contains("shard 2"), "{s}");
+    }
+
+    #[test]
+    fn report_merge_accumulates() {
+        let mut a = FaultReport { retries: 1, panics: 1, ..Default::default() };
+        a.retry_hbm.load(10);
+        let mut b = FaultReport { retries: 2, poisoned: 1, delayed: 3, ..Default::default() };
+        b.retry_hbm.store(5);
+        b.dead_shards.push((1, "beyond kv_len"));
+        a.merge(&b);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.faults(), 2);
+        assert_eq!(a.delayed, 3);
+        assert_eq!((a.retry_hbm.loads, a.retry_hbm.stores), (10, 5));
+        assert_eq!(a.dead_shards.len(), 1);
+    }
+}

@@ -890,18 +890,71 @@ pub(crate) fn dkv_col_sweep_filtered<F: Fn(usize, usize) -> bool>(
     hbm
 }
 
+/// One invariant probe in the fast-pair self check. `bitwise` probes
+/// must come back with `diff == 0.0` (any deviation is a scheduling or
+/// accounting bug, not float noise); tolerance probes compare against
+/// the caller's threshold.
+#[derive(Clone, Debug)]
+pub struct CheckProbe {
+    pub invariant: &'static str,
+    pub diff: f32,
+    pub bitwise: bool,
+}
+
+/// Per-invariant result of [`self_check_report`], so a preflight
+/// failure names *which* guarantee broke — kernel parity, scheduler
+/// determinism, or IO accounting — instead of one opaque scalar.
+#[derive(Clone, Debug)]
+pub struct SelfCheckReport {
+    pub probes: Vec<CheckProbe>,
+}
+
+impl SelfCheckReport {
+    /// Collapse to the legacy scalar: the max deviation, with any
+    /// failed bitwise probe forced to at least 1.0 (the historical
+    /// sentinel for "a determinism invariant broke").
+    pub fn max_diff(&self) -> f32 {
+        self.probes.iter().fold(0.0f32, |acc, p| {
+            if p.bitwise && p.diff != 0.0 {
+                acc.max(p.diff).max(1.0)
+            } else {
+                acc.max(p.diff)
+            }
+        })
+    }
+
+    /// The first broken invariant as a typed error, or Ok when every
+    /// probe passes. Bitwise probes must be exactly zero; tolerance
+    /// probes must be strictly below `tol` (NaN deviations fail).
+    pub fn verdict(&self, tol: f32) -> Result<(), super::faults::AttnError> {
+        for p in &self.probes {
+            let broke = if p.bitwise { p.diff != 0.0 } else { !(p.diff < tol) };
+            if broke {
+                let bound = if p.bitwise { "bitwise".to_string() } else { format!("< {tol}") };
+                return Err(super::faults::AttnError::Preflight {
+                    invariant: p.invariant,
+                    detail: format!("max deviation {} (required {bound})", p.diff),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Fixed cross-kernel agreement probe (causal + padding + rectangular-ish
 /// shape, multi-threaded) covering the full fast pair: max deviation of
 /// flash2's forward (O, logsumexp) **and** backward (dQ, dK, dV) from the
 /// paper-faithful reference kernels over the workload, plus the batched
 /// multi-head scheduler (`attn::batched` — the entry points every hot path
-/// actually calls) against the per-slice pair, and the sharded
+/// actually calls) against the per-slice pair, the sharded
 /// sequence-parallel ring schedule (`attn::distributed`) against the
 /// single-device pair with causal + dropout + padding all active — both
 /// of those agreements must be bitwise (any nonzero deviation is a
-/// scheduling/coordinate bug, not float noise). Used by the coordinator
-/// preflight before any training/serving runs.
-pub fn self_check() -> f32 {
+/// scheduling/coordinate bug, not float noise) — and the forward IO
+/// accounting (instrumented counter vs the `sim::cost` closed form,
+/// access-for-access). Used by the coordinator preflight before any
+/// training/serving runs; one [`CheckProbe`] per invariant.
+pub fn self_check_report() -> SelfCheckReport {
     use super::batched::{bh_slice, flash2_backward_batched, flash2_forward_batched};
     use super::{attention_backward, BackwardKernel};
     use crate::util::rng::SplitMix64;
@@ -914,9 +967,9 @@ pub fn self_check() -> f32 {
     let blocks = Blocks::explicit(8, 8);
     let reference = super::flash::flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
     let fast = flash2_forward(&q, &k, &v, &cfg, blocks, 3, &mut Hbm::new());
-    let mut diff = reference.o.max_abs_diff(&fast.o);
+    let mut fwd_diff = reference.o.max_abs_diff(&fast.o);
     for r in 0..n {
-        diff = diff.max((reference.stats().lse(r) - fast.lse[r]).abs());
+        fwd_diff = fwd_diff.max((reference.stats().lse(r) - fast.lse[r]).abs());
     }
     // The gradient half of the pair, through the shared entry point.
     let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
@@ -928,8 +981,9 @@ pub fn self_check() -> f32 {
         BackwardKernel::Flash2 { workers: 3 },
         &q, &k, &v, &fast.o, &dout, fast.stats(), &cfg, blocks, &mut Hbm::new(),
     );
-    diff = diff
-        .max(slow.dq.max_abs_diff(&fast_g.dq))
+    let bwd_diff = slow
+        .dq
+        .max_abs_diff(&fast_g.dq)
         .max(slow.dk.max_abs_diff(&fast_g.dk))
         .max(slow.dv.max_abs_diff(&fast_g.dv));
 
@@ -951,6 +1005,22 @@ pub fn self_check() -> f32 {
     );
     let max_abs =
         |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    let mut batched_diff = 0.0f32;
+    for s in 0..bsz * heads {
+        let cfg_s = AttnConfig { bh_index: s as u32, ..bcfg.clone() };
+        let (qs, ks, vs) = (bh_slice(&q4, s), bh_slice(&k4, s), bh_slice(&v4, s));
+        let dos = bh_slice(&dout4, s);
+        let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, 1, &mut Hbm::new());
+        let g = flash2_backward(
+            &qs, &ks, &vs, &f.o, &dos, f.stats(), &cfg_s, blocks, 1, &mut Hbm::new(),
+        );
+        batched_diff = batched_diff
+            .max(max_abs(&bfwd.o.data[s * len..(s + 1) * len], &f.o.data))
+            .max(max_abs(&bfwd.stats.lse[s * nb..(s + 1) * nb], &f.lse))
+            .max(max_abs(&bg.dq.data[s * len..(s + 1) * len], &g.dq.data))
+            .max(max_abs(&bg.dk.data[s * len..(s + 1) * len], &g.dk.data))
+            .max(max_abs(&bg.dv.data[s * len..(s + 1) * len], &g.dv.data));
+    }
 
     // Sharded ring-schedule probe: causal + dropout + padding through 3
     // shards must be BITWISE identical to the single-device pair.
@@ -970,31 +1040,53 @@ pub fn self_check() -> f32 {
     let shard_bwd = flash_backward_sharded(
         &q, &k, &v, &sfwd.o, &dout, sfwd.stats(), &scfg, blocks, 3, 2,
     );
-    if shard_fwd.o.data != sfwd.o.data
+    let sharded_broke = shard_fwd.o.data != sfwd.o.data
         || shard_fwd.m != sfwd.lse
         || shard_bwd.dq.data != sbwd.dq.data
         || shard_bwd.dk.data != sbwd.dk.data
-        || shard_bwd.dv.data != sbwd.dv.data
-    {
-        diff = diff.max(1.0);
-    }
+        || shard_bwd.dv.data != sbwd.dv.data;
 
-    for s in 0..bsz * heads {
-        let cfg_s = AttnConfig { bh_index: s as u32, ..bcfg.clone() };
-        let (qs, ks, vs) = (bh_slice(&q4, s), bh_slice(&k4, s), bh_slice(&v4, s));
-        let dos = bh_slice(&dout4, s);
-        let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, 1, &mut Hbm::new());
-        let g = flash2_backward(
-            &qs, &ks, &vs, &f.o, &dos, f.stats(), &cfg_s, blocks, 1, &mut Hbm::new(),
-        );
-        diff = diff
-            .max(max_abs(&bfwd.o.data[s * len..(s + 1) * len], &f.o.data))
-            .max(max_abs(&bfwd.stats.lse[s * nb..(s + 1) * nb], &f.lse))
-            .max(max_abs(&bg.dq.data[s * len..(s + 1) * len], &g.dq.data))
-            .max(max_abs(&bg.dk.data[s * len..(s + 1) * len], &g.dk.data))
-            .max(max_abs(&bg.dv.data[s * len..(s + 1) * len], &g.dv.data));
+    // IO-accounting probe: the instrumented forward counter against the
+    // analytic closed form on a clean divisible tiling — exact, every
+    // access accounted.
+    let io_cfg = AttnConfig { causal: true, ..Default::default() };
+    let mut io_hbm = Hbm::new();
+    let _ = flash2_forward(&q, &k, &v, &io_cfg, blocks, 3, &mut io_hbm);
+    let expected =
+        crate::sim::cost::flash2_fwd(n as u64, d as u64, blocks, true, false).hbm_elems;
+    let io_diff = crate::sim::cost::measured(&io_hbm).abs_diff(expected) as f32;
+
+    SelfCheckReport {
+        probes: vec![
+            CheckProbe {
+                invariant: "forward parity (flash2 vs flash)",
+                diff: fwd_diff,
+                bitwise: false,
+            },
+            CheckProbe {
+                invariant: "backward parity (flash2 vs flash)",
+                diff: bwd_diff,
+                bitwise: false,
+            },
+            CheckProbe {
+                invariant: "batched scheduler bitwise agreement",
+                diff: batched_diff,
+                bitwise: true,
+            },
+            CheckProbe {
+                invariant: "sharded ring bitwise agreement",
+                diff: if sharded_broke { 1.0 } else { 0.0 },
+                bitwise: true,
+            },
+            CheckProbe { invariant: "forward IO accounting", diff: io_diff, bitwise: true },
+        ],
     }
-    diff
+}
+
+/// Legacy scalar form of [`self_check_report`]: the max deviation, with
+/// failed bitwise probes forced to ≥ 1.0.
+pub fn self_check() -> f32 {
+    self_check_report().max_diff()
 }
 
 #[cfg(test)]
@@ -1166,6 +1258,25 @@ mod tests {
     #[test]
     fn self_check_is_tight() {
         assert!(self_check() < 1e-4, "self_check diff {}", self_check());
+    }
+
+    #[test]
+    fn self_check_report_names_every_invariant() {
+        let report = self_check_report();
+        assert_eq!(report.probes.len(), 5, "probe set changed without updating this test");
+        report.verdict(1e-4).expect("healthy build must pass every probe");
+        // A broken probe must surface as a typed Preflight error naming
+        // the invariant, and the legacy scalar must go to >= 1 for
+        // bitwise breaks.
+        let mut bad = report.clone();
+        bad.probes[2].diff = 3e-7; // bitwise probe: ANY deviation fails
+        let err = bad.verdict(1e-4).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("batched scheduler bitwise agreement"),
+            "error must name the broken invariant: {msg}"
+        );
+        assert!(bad.max_diff() >= 1.0, "bitwise break must trip the legacy scalar");
     }
 
     /// Dense softmax-attention gradients on (possibly rectangular) shapes —

@@ -113,6 +113,49 @@
 //! Shards wholly above the causal diagonal or wholly beyond `kv_len`
 //! never become work items on either schedule.
 //!
+//! # Failure semantics
+//!
+//! The execution plane (the [`batched`] worker pool and both sharded
+//! schedules in [`distributed`]) is fault-tolerant by construction:
+//! workers race only for *work items*, never for output slots, so any
+//! item can be recomputed into its disjoint window without touching the
+//! rest — the paper's §5 associative-merge decomposition used as a
+//! recovery primitive. Concretely ([`faults`] holds the types):
+//!
+//! * **What is retried.** A work item whose worker panics
+//!   (`catch_unwind`-contained), whose output fails the finiteness
+//!   guardrail, or whose completion record is lost is requeued with its
+//!   output windows zeroed, up to [`faults::MAX_ATTEMPTS`] total
+//!   attempts. Because the re-run performs the identical arithmetic
+//!   into a fresh window, recovered output is **bitwise identical** to
+//!   the fault-free run for every schedule and worker count. The tree
+//!   schedule recomputes a failed shard's partial and re-merges through
+//!   the associative `merge_partials`; the ring schedule recomputes the
+//!   failed row-block item (which re-streams every shard). Retries are
+//!   accounted access-for-access: each faulted attempt that ran to
+//!   completion adds exactly its per-item traffic
+//!   (`sim::cost::flash2_fwd_item` and friends) to the
+//!   [`faults::FaultReport`].
+//! * **What is reported.** The `_checked` entry points return
+//!   `Result<(output, FaultReport), AttnError>` instead of panicking: a
+//!   typed [`faults::AttnError`] names the site, slice (batch, head),
+//!   and block of an item that exhausted its attempt budget or stayed
+//!   non-finite, and a malformed shard layout names the shard and the
+//!   reason ([`faults::AttnError::ShardConfig`]) instead of silently
+//!   substituting an all-masked output. Dead shards (wholly beyond
+//!   `kv_len`, wholly above the causal diagonal, or all-zero in the
+//!   sparse mask) are classified in `FaultReport::dead_shards`. The
+//!   plain (unchecked) entry points keep their historical signatures;
+//!   their pool still contains panics and retries, and only after the
+//!   budget is exhausted do they panic — with the typed error's message.
+//! * **What degrades.** The coordinator treats a poisoned training step
+//!   (non-finite loss/grad-norm) as skip-and-report: parameters are not
+//!   committed, the step is counted, training continues. The server
+//!   validates logits before sampling and returns a typed error rather
+//!   than serving garbage. The trainer preflight runs under a
+//!   wall-clock budget and reports *which* invariant broke
+//!   (`flash2::self_check_report`).
+//!
 //! All kernels produce softmax statistics; [`AttnStats`] abstracts over
 //! the two representations so either backward accepts either forward's
 //! output. Fully-masked rows (e.g. `kv_len` = 0 shards) have defined
@@ -129,6 +172,7 @@
 pub mod batched;
 pub mod block_sparse;
 pub mod distributed;
+pub mod faults;
 pub mod flash;
 pub mod flash2;
 pub mod masks;

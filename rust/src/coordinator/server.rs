@@ -83,6 +83,11 @@ impl Server {
     }
 
     /// Sample the next byte from logits at `position` with temperature.
+    ///
+    /// The caller ([`Server::complete`]) validates logits finiteness
+    /// before sampling, so the fallthrough return below is only the
+    /// benign end-of-rounding case — it can no longer silently convert a
+    /// NaN weight vector into "always emit byte vocab-1".
     fn sample(&mut self, logits: &[f32], vocab: usize) -> i32 {
         if self.temperature <= 0.0 {
             return logits
@@ -111,6 +116,21 @@ impl Server {
         (vocab - 1) as i32
     }
 
+    /// Numeric guardrail on the serving path: a non-finite logit row is
+    /// a typed error naming the offending position and value, instead of
+    /// silently degenerating into constant output (the old behavior:
+    /// NaN weights fell through `sample`'s roulette loop to byte
+    /// `vocab-1` every step).
+    fn validate_logits(row: &[f32], pos: usize) -> Result<()> {
+        if let Some((i, bad)) = row.iter().enumerate().find(|(_, x)| !x.is_finite()) {
+            anyhow::bail!(
+                "non-finite logit {bad} at vocab index {i}, position {pos}: \
+                 refusing to sample from a poisoned distribution"
+            );
+        }
+        Ok(())
+    }
+
     /// Generate `max_new` bytes continuing `prompt` (sliding-window ctx).
     pub fn complete(
         &mut self,
@@ -131,6 +151,7 @@ impl Server {
             let data = logits.as_f32()?;
             let vocab = logits.shape()[2];
             let row = &data[pos * vocab..(pos + 1) * vocab];
+            Self::validate_logits(row, pos)?;
             let next = self.sample(row, vocab);
             tokens.push(next);
         }
@@ -159,5 +180,17 @@ mod tests {
         let s = ServeStats { requests: 4, tokens: 400, total_ms: 2000.0 };
         assert_eq!(s.tokens_per_second(), 200.0);
         assert_eq!(s.mean_latency_ms(), 500.0);
+    }
+
+    #[test]
+    fn poisoned_logits_are_a_typed_error_with_provenance() {
+        let mut row = vec![0.5f32; 8];
+        Server::validate_logits(&row, 3).expect("finite logits pass");
+        row[5] = f32::NAN;
+        let msg = Server::validate_logits(&row, 3).unwrap_err().to_string();
+        assert!(msg.contains("vocab index 5"), "{msg}");
+        assert!(msg.contains("position 3"), "{msg}");
+        row[5] = f32::INFINITY;
+        assert!(Server::validate_logits(&row, 0).is_err());
     }
 }

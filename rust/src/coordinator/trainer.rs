@@ -16,6 +16,12 @@ use crate::data::corpus::Corpus;
 use crate::runtime::{Runtime, Value};
 use crate::util::rng::SplitMix64;
 
+/// Wall-clock budget for the preflight self-check: the probe workload
+/// finishes in milliseconds on any healthy build, so a probe still
+/// running after this long is hung (e.g. a deadlocked pool) and must
+/// fail fast rather than wedge the trainer at startup.
+const PREFLIGHT_BUDGET: std::time::Duration = std::time::Duration::from_secs(30);
+
 /// One-time preflight on the training/serving path: the fast attention
 /// kernel *pair* (`attn::flash2` forward + backward, through the shared
 /// `attn::attention_backward` entry point) must agree with the
@@ -26,17 +32,46 @@ use crate::util::rng::SplitMix64;
 /// before any step runs. The fused train step itself executes as a PJRT
 /// artifact; this gate keeps the Rust mirrors honest before they are used
 /// for IO claims or serving math. Costs one tiny [48, 16] fwd+bwd workload
-/// plus a [2, 2, 24, 8] batched one, once per process.
+/// plus a [2, 2, 24, 8] batched one, once per process. A failure names
+/// the broken invariant (`flash2::self_check_report` probe) rather than
+/// reporting one opaque scalar, and the probe runs under
+/// [`PREFLIGHT_BUDGET`] so a hung check cannot wedge startup.
 fn preflight_fast_kernel() -> Result<()> {
-    static DIFF: OnceLock<f32> = OnceLock::new();
-    let diff = *DIFF.get_or_init(flash2::self_check);
-    ensure!(
-        diff < 1e-4,
-        "fast attention kernels (attn::flash2 fwd/bwd pair or the attn::batched multi-head \
-         scheduler) disagree with the reference mirrors: max diff {diff}"
-    );
-    Ok(())
+    static VERDICT: OnceLock<std::result::Result<(), String>> = OnceLock::new();
+    let verdict = VERDICT.get_or_init(|| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = tx.send(flash2::self_check_report());
+        });
+        match rx.recv_timeout(PREFLIGHT_BUDGET) {
+            Ok(report) => report.verdict(1e-4).map_err(|e| e.to_string()),
+            Err(_) => Err(format!(
+                "self-check probe did not finish within {PREFLIGHT_BUDGET:?} (hung preflight)"
+            )),
+        }
+    });
+    verdict
+        .clone()
+        .map_err(|msg| anyhow::anyhow!("fast attention kernel preflight failed: {msg}"))
 }
+
+/// A training step whose returned scalars came back non-finite: the
+/// parameter/optimizer state was NOT committed. `LmTrainer::train`
+/// degrades gracefully on this error (skip-and-report); anything else
+/// still aborts the run.
+#[derive(Debug)]
+pub struct PoisonedStep {
+    pub step: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for PoisonedStep {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "poisoned step {}: {} (state not committed)", self.step, self.detail)
+    }
+}
+
+impl std::error::Error for PoisonedStep {}
 
 /// Shared state-holding core for both trainers.
 struct ModelState {
@@ -72,13 +107,19 @@ impl ModelState {
     }
 
     /// Assemble (params ++ m ++ v ++ extras) and apply the returned state.
+    ///
+    /// Numeric guardrail: the returned training scalars (loss, accuracy)
+    /// are validated for finiteness BEFORE the new parameter/optimizer
+    /// state is committed — a NaN/Inf step returns [`PoisonedStep`] with
+    /// the model state (including the step counter) untouched, so the
+    /// caller can skip-and-report instead of training on from a poisoned
+    /// update.
     fn step_with(
         &mut self,
         rt: &mut Runtime,
         extras: Vec<Value>,
         n_scalar_outputs: usize,
     ) -> Result<Vec<f64>> {
-        self.step += 1;
         let mut inputs = Vec::with_capacity(3 * self.n_param_tensors + extras.len());
         inputs.extend(self.params.iter().cloned());
         inputs.extend(self.m.iter().cloned());
@@ -91,6 +132,14 @@ impl ModelState {
             .iter()
             .map(|v| v.scalar().map(|x| x as f64))
             .collect::<Result<_>>()?;
+        if let Some((i, bad)) = scalars.iter().enumerate().find(|(_, x)| !x.is_finite()) {
+            return Err(PoisonedStep {
+                step: self.step + 1,
+                detail: format!("training scalar #{i} is {bad}"),
+            }
+            .into());
+        }
+        self.step += 1;
         out.truncate(3 * n);
         let v = out.split_off(2 * n);
         let m = out.split_off(n);
@@ -206,13 +255,26 @@ impl LmTrainer {
     }
 
     /// Full training run over the corpus; returns (first, last) loss.
+    ///
+    /// Graceful degradation: a [`PoisonedStep`] (non-finite loss — the
+    /// state was not committed) is skipped and reported rather than
+    /// aborting the run; any other error still propagates.
     pub fn train(&mut self, rt: &mut Runtime, corpus: &Corpus) -> Result<(f64, f64)> {
         let mut first = f64::NAN;
         let mut last = f64::NAN;
+        let mut skipped = 0usize;
         for s in 0..self.cfg.steps {
             let batch = corpus.lm_batch(self.batch, self.n_ctx, &mut self.rng);
-            let loss = self.step(rt, &batch)?;
-            if s == 0 {
+            let loss = match self.step(rt, &batch) {
+                Ok(loss) => loss,
+                Err(e) if e.downcast_ref::<PoisonedStep>().is_some() => {
+                    skipped += 1;
+                    println!("[{}] step {:>4} SKIPPED: {e}", self.cfg.model, s + 1);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            if first.is_nan() {
                 first = loss;
             }
             last = loss;
@@ -226,6 +288,12 @@ impl LmTrainer {
                     self.metrics.steady_step_seconds() * 1e3
                 );
             }
+        }
+        if skipped > 0 {
+            println!(
+                "[{}] {skipped} poisoned step(s) skipped (state never committed for them)",
+                self.cfg.model
+            );
         }
         Ok((first, last))
     }
@@ -363,5 +431,17 @@ mod tests {
         preflight_fast_kernel().unwrap();
         // Cached: second call must not re-run the workload (OnceLock).
         preflight_fast_kernel().unwrap();
+    }
+
+    #[test]
+    fn poisoned_step_error_carries_provenance() {
+        let e = PoisonedStep { step: 7, detail: "training scalar #0 is NaN".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("step 7"), "{msg}");
+        assert!(msg.contains("not committed"), "{msg}");
+        // And it must round-trip through anyhow for the train loop's
+        // skip-and-report downcast.
+        let any: anyhow::Error = e.into();
+        assert!(any.downcast_ref::<PoisonedStep>().is_some());
     }
 }

@@ -299,6 +299,74 @@ pub fn flash2_fwd_rect(n_q: u64, n_k: u64, d: u64, blocks: Blocks) -> Cost {
     flash2_fwd_shard(n_q, d, blocks, 0, n_k, false)
 }
 
+/// HBM traffic of ONE batched-forward pool work item — row block `rb`
+/// of a square [n, n] slice (attn::batched forward items): Q_i loaded
+/// once, K_j/V_j per live column tile, O_i + L_i stored once. Exact on
+/// divisible tilings; the per-item form the fault plane charges for
+/// every retried attempt (`FaultReport::retry_hbm`), asserted
+/// access-for-access in the chaos wall. Summing over `rb` recovers
+/// [`flash2_fwd`]'s total (tested below).
+pub fn flash2_fwd_item(n: u64, d: u64, blocks: Blocks, rb: u64, causal: bool) -> u64 {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    let r1 = ((rb + 1) * b_r).min(n);
+    let br = r1 - rb * b_r;
+    let live = (0..n.div_ceil(b_c)).filter(|&j| !causal || j * b_c <= r1 - 1).count() as u64;
+    br * d + live * (2 * b_c * d) + (br * d + br)
+}
+
+/// HBM traffic of ONE backward phase-1 (dQ) pool work item — row block
+/// `rb` of a square slice: Q_i/dO_i/D_i/L_i loaded once, K_j/V_j per
+/// live column tile, dQ_i stored once. Exact on divisible tilings.
+pub fn flash2_bwd_dq_item(n: u64, d: u64, blocks: Blocks, rb: u64, causal: bool) -> u64 {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    let r1 = ((rb + 1) * b_r).min(n);
+    let br = r1 - rb * b_r;
+    let live = (0..n.div_ceil(b_c)).filter(|&j| !causal || j * b_c <= r1 - 1).count() as u64;
+    (2 * br * d + 2 * br) + live * (2 * b_c * d) + br * d
+}
+
+/// HBM traffic of ONE backward phase-2 (dK/dV) pool work item — the
+/// column tile starting at **global** key column `col0` (batched:
+/// `cb·B_c`; ring: `shard.lo + cb·B_c`): K_j/V_j loaded once,
+/// Q_i/dO_i/D_i/L_i per live row tile, dK_j/dV_j stored once. Exact on
+/// divisible tilings.
+pub fn flash2_bwd_dkv_item(n_q: u64, d: u64, blocks: Blocks, col0: u64, causal: bool) -> u64 {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    let mut inner = 0u64;
+    for i in 0..n_q.div_ceil(b_r) {
+        let r1 = ((i + 1) * b_r).min(n_q);
+        if !causal || col0 <= r1 - 1 {
+            let br = r1 - i * b_r;
+            inner += 2 * br * d + 2 * br;
+        }
+    }
+    2 * b_c * d + inner + 2 * b_c * d
+}
+
+/// K/V streaming traffic row block `rb` pulls from ONE key shard
+/// [col_lo, col_hi) in the ring schedule, causal skip judged on global
+/// columns. A ring forward item's total is
+/// `B_r·d + Σ_shards flash2_fwd_shard_item + (B_r·d + B_r)`; a ring dQ
+/// item swaps the load/store bookends for the dQ ones. Summed over all
+/// row blocks and a full tiling of the key range, recovers
+/// [`flash2_fwd`]'s streaming term (tested below).
+pub fn flash2_fwd_shard_item(
+    n_q: u64,
+    d: u64,
+    blocks: Blocks,
+    rb: u64,
+    col_lo: u64,
+    col_hi: u64,
+    causal: bool,
+) -> u64 {
+    let (b_r, b_c) = (blocks.b_r as u64, blocks.b_c as u64);
+    let r1 = ((rb + 1) * b_r).min(n_q);
+    let live = (0..(col_hi - col_lo).div_ceil(b_c))
+        .filter(|&j| !causal || col_lo + j * b_c <= r1 - 1)
+        .count() as u64;
+    live * (2 * b_c * d)
+}
+
 /// Rectangular flash forward: n_q query rows attending n_k key rows —
 /// the per-device cost of the sequence-parallel multi-GPU extension
 /// (attn::distributed), where each device holds a key shard.
@@ -559,6 +627,69 @@ mod tests {
         // Θ(N²d²/M): quadrupling M should shrink accesses ~4x.
         let ratio = f_small.hbm_elems as f64 / f_big.hbm_elems as f64;
         assert!((2.8..4.5).contains(&ratio), "M-scaling ratio {ratio}");
+    }
+
+    #[test]
+    fn fwd_items_sum_to_flash2_fwd_total() {
+        // The fault plane charges retries per work item; the per-item
+        // forms must tile the whole-kernel closed form exactly.
+        for &(n, d, br, bc, causal) in
+            &[(64u64, 16u64, 8u64, 8u64, false), (64, 16, 8, 16, true), (96, 8, 16, 8, true)]
+        {
+            let blocks = Blocks::explicit(br as usize, bc as usize);
+            let total: u64 =
+                (0..n.div_ceil(br)).map(|rb| flash2_fwd_item(n, d, blocks, rb, causal)).sum();
+            assert_eq!(total, flash2_fwd(n, d, blocks, causal, false).hbm_elems);
+        }
+    }
+
+    #[test]
+    fn bwd_items_plus_d_pass_sum_to_flash2_bwd_total() {
+        for &(n, d, br, bc, causal) in
+            &[(64u64, 16u64, 8u64, 8u64, false), (64, 16, 8, 16, true), (96, 8, 16, 8, true)]
+        {
+            let blocks = Blocks::explicit(br as usize, bc as usize);
+            let dq: u64 =
+                (0..n.div_ceil(br)).map(|rb| flash2_bwd_dq_item(n, d, blocks, rb, causal)).sum();
+            let dkv: u64 = (0..n.div_ceil(bc))
+                .map(|cb| flash2_bwd_dkv_item(n, d, blocks, cb * bc, causal))
+                .sum();
+            // Plus the phase-0 D = rowsum(dO ∘ O) pass: 2Nd loads + N stores.
+            assert_eq!(
+                dq + dkv + (2 * n * d + n),
+                flash2_bwd(n, d, blocks, causal, false).hbm_elems
+            );
+        }
+    }
+
+    #[test]
+    fn ring_items_sum_to_flash2_fwd_total() {
+        // A ring forward item = Q load + every shard's streaming term +
+        // epilogue; over all row blocks and a full shard tiling of the
+        // key range that must reproduce the single-device total.
+        for &(n, d, br, bc, causal, shard_cols) in
+            &[(64u64, 16u64, 8u64, 8u64, true, 24u64), (64, 16, 8, 8, false, 16)]
+        {
+            let blocks = Blocks::explicit(br as usize, bc as usize);
+            let mut bounds = Vec::new();
+            let mut lo = 0;
+            while lo < n {
+                bounds.push((lo, (lo + shard_cols).min(n)));
+                lo += shard_cols;
+            }
+            let total: u64 = (0..n.div_ceil(br))
+                .map(|rb| {
+                    let r1 = ((rb + 1) * br).min(n);
+                    let brr = r1 - rb * br;
+                    let stream: u64 = bounds
+                        .iter()
+                        .map(|&(lo, hi)| flash2_fwd_shard_item(n, d, blocks, rb, lo, hi, causal))
+                        .sum();
+                    brr * d + stream + (brr * d + brr)
+                })
+                .sum();
+            assert_eq!(total, flash2_fwd(n, d, blocks, causal, false).hbm_elems);
+        }
     }
 
     #[test]

@@ -1,0 +1,912 @@
+//! Chaos wall for the fault-tolerant execution plane (`attn::faults`):
+//! every injected fault class (worker panic, poisoned partial, delayed
+//! shard, dropped merge) across the batched, ring-sharded and
+//! tree-sharded schedules × worker counts {1, 2, 5} must
+//!
+//! * recover to output **bitwise identical** to the fault-free run
+//!   (workers race only for items, never output slots — a re-run
+//!   performs identical arithmetic into a window zeroed back to its
+//!   pre-run state);
+//! * account its retry HBM traffic **access-for-access** against the
+//!   extended per-item closed forms in `sim::cost`;
+//! * surface budget exhaustion and poisoned inputs as typed
+//!   [`AttnError`]s carrying (site, slice, batch, head, block)
+//!   provenance.
+
+use flashattn::attn::batched::{
+    block_sparse2_forward_batched, block_sparse2_forward_batched_checked, flash2_backward_batched,
+    flash2_backward_batched_checked, flash2_forward_batched, flash2_forward_batched_checked,
+    flash2_forward_many, flash2_forward_many_checked, AttnSlice,
+};
+use flashattn::attn::distributed::{
+    block_sparse_forward_sharded_tree, block_sparse_forward_sharded_tree_checked, classify_shards,
+    flash_backward_sharded, flash_backward_sharded_checked, flash_forward_sharded,
+    flash_forward_sharded_checked, flash_forward_sharded_tree, flash_forward_sharded_tree_checked,
+    shard_ranges, Shard,
+};
+use flashattn::attn::faults::{AttnError, FaultKind, FaultPlan, FaultSite};
+use flashattn::attn::flash::Blocks;
+use flashattn::attn::masks::BlockMask;
+use flashattn::attn::AttnConfig;
+use flashattn::sim::cost;
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+
+const ALL_KINDS: [FaultKind; 4] = [
+    FaultKind::WorkerPanic,
+    FaultKind::PoisonedPartial,
+    FaultKind::DroppedMerge,
+    FaultKind::DelayedShard,
+];
+
+fn rand(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = SplitMix64::new(seed);
+    Tensor::randn(shape, &mut rng, 1.0)
+}
+
+/// Analytic HBM traffic of one ring/tree forward work item: Q row block
+/// loaded once, the shard streams visited in order, O and the lse row
+/// stored once (see `forward_sharded_core` / `forward_many_sited`).
+fn ring_stream(n: u64, d: u64, blocks: Blocks, rb: u64, live: &[Shard], causal: bool) -> u64 {
+    live.iter()
+        .map(|sh| {
+            cost::flash2_fwd_shard_item(n, d, blocks, rb, sh.lo as u64, sh.hi as u64, causal)
+        })
+        .sum()
+}
+
+fn ring_fwd_item(n: usize, d: usize, blocks: Blocks, rb: usize, live: &[Shard], causal: bool) -> u64 {
+    let (nu, du) = (n as u64, d as u64);
+    let b_r = blocks.b_r as u64;
+    let r1 = ((rb as u64 + 1) * b_r).min(nu);
+    let br = r1 - rb as u64 * b_r;
+    let stream = ring_stream(nu, du, blocks, rb as u64, live, causal);
+    br * du + stream + (br * du + br)
+}
+
+/// Analytic HBM traffic of one ring backward dQ work item: Q/dO/D/L row
+/// block loaded once, the shard streams visited in order, dQ stored once.
+fn ring_dq_item(n: usize, d: usize, blocks: Blocks, rb: usize, live: &[Shard], causal: bool) -> u64 {
+    let (nu, du) = (n as u64, d as u64);
+    let b_r = blocks.b_r as u64;
+    let r1 = ((rb as u64 + 1) * b_r).min(nu);
+    let br = r1 - rb as u64 * b_r;
+    let stream = ring_stream(nu, du, blocks, rb as u64, live, causal);
+    (2 * br * du + 2 * br) + stream + br * du
+}
+
+/// Per-kind counter bookkeeping shared by the recovery tests.
+fn assert_fault_counters(report: &flashattn::attn::faults::FaultReport, kind: FaultKind, n: u64) {
+    match kind {
+        FaultKind::WorkerPanic => assert_eq!(report.panics, n, "panic counter"),
+        FaultKind::PoisonedPartial => assert_eq!(report.poisoned, n, "poison counter"),
+        FaultKind::DroppedMerge => assert_eq!(report.dropped, n, "dropped-merge counter"),
+        FaultKind::DelayedShard => unreachable!("delayed shards are not faults"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batched schedule: recovery is bitwise, retries are access-for-access.
+// ---------------------------------------------------------------------
+
+#[test]
+fn batched_forward_recovers_bitwise_with_exact_retry_traffic() {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0xC4A0_51);
+    let k = rand(&[b, h, n, d], 0xC4A0_52);
+    let v = rand(&[b, h, n, d], 0xC4A0_53);
+    let t_r = n.div_ceil(blocks.b_r);
+    // Flat pool coordinates (s * t_r + rb): (s=0, rb=3) and (s=1, rb=2).
+    let faulted = [3usize, 10];
+    for causal in [false, true] {
+        let cfg = AttnConfig { causal, ..Default::default() };
+        let mut clean_hbm = Hbm::new();
+        let baseline = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut clean_hbm);
+        for kind in ALL_KINDS {
+            let mut plan = FaultPlan::none();
+            for &it in &faulted {
+                plan = plan.with(FaultSite::BatchedFwd, it, 0, kind);
+            }
+            for workers in [1usize, 2, 5] {
+                let ctx = format!("causal={causal} kind={kind:?} w={workers}");
+                let mut hbm = Hbm::new();
+                let (out, report) =
+                    flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, workers, &mut hbm, &plan)
+                        .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+                assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
+                assert_eq!(out.stats.lse, baseline.stats.lse, "lse not bitwise [{ctx}]");
+                if kind == FaultKind::DelayedShard {
+                    assert_eq!(report.delayed, 2, "{ctx}");
+                    assert_eq!(report.retries, 0, "{ctx}");
+                    assert_eq!(report.retry_hbm.accesses(), 0, "{ctx}");
+                    assert_eq!(cost::measured(&hbm), cost::measured(&clean_hbm), "{ctx}");
+                } else {
+                    assert_eq!(report.retries, 2, "{ctx}");
+                    assert_eq!(report.faults(), 2, "{ctx}");
+                    assert_fault_counters(&report, kind, 2);
+                    // Each faulted attempt ran to completion: its traffic
+                    // is exactly one per-item closed form, re-done once.
+                    let expected: u64 = faulted
+                        .iter()
+                        .map(|&it| {
+                            cost::flash2_fwd_item(n as u64, d as u64, blocks, (it % t_r) as u64, causal)
+                        })
+                        .sum();
+                    assert_eq!(report.retry_hbm.accesses(), expected, "retry traffic [{ctx}]");
+                    assert_eq!(
+                        cost::measured(&hbm),
+                        cost::measured(&clean_hbm) + expected,
+                        "total = clean + retries [{ctx}]"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_backward_recovers_bitwise_with_exact_retry_traffic() {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0xBAC_1);
+    let k = rand(&[b, h, n, d], 0xBAC_2);
+    let v = rand(&[b, h, n, d], 0xBAC_3);
+    let dout = rand(&[b, h, n, d], 0xBAC_4);
+    // dQ pool item 5 = (s=0, rb=5); dK/dV pool item 12 = (s=1, cb=4).
+    let (dq_it, dkv_it) = (5usize, 12usize);
+    let t_c = n.div_ceil(blocks.b_c);
+    for causal in [false, true] {
+        let cfg = AttnConfig { causal, ..Default::default() };
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+        let mut clean_hbm = Hbm::new();
+        let baseline = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 1, &mut clean_hbm,
+        );
+        for kind in ALL_KINDS {
+            let plan = FaultPlan::none()
+                .with(FaultSite::BatchedDq, dq_it, 0, kind)
+                .with(FaultSite::BatchedDkv, dkv_it, 0, kind);
+            for workers in [1usize, 2, 5] {
+                let ctx = format!("causal={causal} kind={kind:?} w={workers}");
+                let mut hbm = Hbm::new();
+                let (grads, report) = flash2_backward_batched_checked(
+                    &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut hbm, &plan,
+                )
+                .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+                assert_eq!(grads.dq.data, baseline.dq.data, "dQ not bitwise [{ctx}]");
+                assert_eq!(grads.dk.data, baseline.dk.data, "dK not bitwise [{ctx}]");
+                assert_eq!(grads.dv.data, baseline.dv.data, "dV not bitwise [{ctx}]");
+                if kind == FaultKind::DelayedShard {
+                    assert_eq!(report.delayed, 2, "{ctx}");
+                    assert_eq!(report.retry_hbm.accesses(), 0, "{ctx}");
+                    assert_eq!(cost::measured(&hbm), cost::measured(&clean_hbm), "{ctx}");
+                } else {
+                    assert_eq!(report.retries, 2, "{ctx}");
+                    assert_fault_counters(&report, kind, 2);
+                    let expected = cost::flash2_bwd_dq_item(n as u64, d as u64, blocks, 5, causal)
+                        + cost::flash2_bwd_dkv_item(
+                            n as u64,
+                            d as u64,
+                            blocks,
+                            ((dkv_it % t_c) * blocks.b_c) as u64,
+                            causal,
+                        );
+                    assert_eq!(report.retry_hbm.accesses(), expected, "retry traffic [{ctx}]");
+                    assert_eq!(
+                        cost::measured(&hbm),
+                        cost::measured(&clean_hbm) + expected,
+                        "total = clean + retries [{ctx}]"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_batched_forward_recovers_bitwise() {
+    let (b, h, n, d) = (2usize, 1usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let (t_r, t_c) = (n / blocks.b_r, n / blocks.b_c);
+    let q = rand(&[b, h, n, d], 0x5BA_1);
+    let k = rand(&[b, h, n, d], 0x5BA_2);
+    let v = rand(&[b, h, n, d], 0x5BA_3);
+    let mut mask = BlockMask::dense(t_r, t_c);
+    mask.set(0, 2, false);
+    mask.set(3, 1, false);
+    let masks = [mask];
+    let cfg = AttnConfig::default();
+    let mut clean_hbm = Hbm::new();
+    let baseline =
+        block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut clean_hbm);
+    for kind in ALL_KINDS {
+        // Pool item 5 = (s=1, rb=1).
+        let plan = FaultPlan::none().with(FaultSite::SparseFwd, 5, 0, kind);
+        for workers in [1usize, 2, 5] {
+            let ctx = format!("kind={kind:?} w={workers}");
+            let mut hbm = Hbm::new();
+            let (out, report) = block_sparse2_forward_batched_checked(
+                &q, &k, &v, &masks, &cfg, blocks, workers, &mut hbm, &plan,
+            )
+            .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+            assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
+            assert_eq!(out.stats.lse, baseline.stats.lse, "lse not bitwise [{ctx}]");
+            if kind == FaultKind::DelayedShard {
+                assert_eq!(report.delayed, 1, "{ctx}");
+                assert_eq!(cost::measured(&hbm), cost::measured(&clean_hbm), "{ctx}");
+            } else {
+                assert_eq!(report.retries, 1, "{ctx}");
+                assert_fault_counters(&report, kind, 1);
+                // No dense closed form for a masked item: the retry pool
+                // traffic must still reconcile exactly with the total.
+                assert_eq!(
+                    cost::measured(&hbm),
+                    cost::measured(&clean_hbm) + report.retry_hbm.accesses(),
+                    "total = clean + retries [{ctx}]"
+                );
+                assert!(report.retry_hbm.accesses() > 0, "{ctx}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded schedules: ring (fwd + bwd) and tree.
+// ---------------------------------------------------------------------
+
+#[test]
+fn ring_forward_recovers_bitwise_with_exact_retry_traffic() {
+    let (n, d, shards) = (64usize, 16usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0x1111);
+    let k = rand(&[n, d], 0x2222);
+    let v = rand(&[n, d], 0x3333);
+    let faulted = [2usize, 7];
+    for causal in [false, true] {
+        let cfg = AttnConfig { causal, ..Default::default() };
+        let live = shard_ranges(n, blocks.b_c, shards);
+        let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+        for kind in ALL_KINDS {
+            let mut plan = FaultPlan::none();
+            for &rb in &faulted {
+                plan = plan.with(FaultSite::RingFwd, rb, 0, kind);
+            }
+            for workers in [1usize, 2, 5] {
+                let ctx = format!("causal={causal} kind={kind:?} w={workers}");
+                let (out, report) = flash_forward_sharded_checked(
+                    &q, &k, &v, &cfg, blocks, shards, workers, &plan,
+                )
+                .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+                assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
+                assert_eq!(out.m, baseline.m, "m not bitwise [{ctx}]");
+                assert_eq!(out.l, baseline.l, "l not bitwise [{ctx}]");
+                if kind == FaultKind::DelayedShard {
+                    assert_eq!(report.delayed, 2, "{ctx}");
+                    assert_eq!(report.retry_hbm.accesses(), 0, "{ctx}");
+                } else {
+                    assert_eq!(report.retries, 2, "{ctx}");
+                    assert_fault_counters(&report, kind, 2);
+                    let expected: u64 = faulted
+                        .iter()
+                        .map(|&rb| ring_fwd_item(n, d, blocks, rb, &live, causal))
+                        .sum();
+                    assert_eq!(report.retry_hbm.accesses(), expected, "retry traffic [{ctx}]");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_backward_recovers_bitwise_with_exact_retry_traffic() {
+    let (n, d, shards) = (64usize, 16usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0xD_1);
+    let k = rand(&[n, d], 0xD_2);
+    let v = rand(&[n, d], 0xD_3);
+    let dout = rand(&[n, d], 0xD_4);
+    // dQ item 1 = row block 1; dK/dV item 6 = (shard 1, local cb 2),
+    // i.e. global column 32 + 2·8 = 48.
+    let (dq_rb, dkv_col0) = (1usize, 48u64);
+    for causal in [false, true] {
+        let cfg = AttnConfig { causal, ..Default::default() };
+        let live = shard_ranges(n, blocks.b_c, shards);
+        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+        let baseline = flash_backward_sharded(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, 1,
+        );
+        for kind in ALL_KINDS {
+            let plan = FaultPlan::none()
+                .with(FaultSite::RingDq, dq_rb, 0, kind)
+                .with(FaultSite::RingDkv, 6, 0, kind);
+            for workers in [1usize, 2, 5] {
+                let ctx = format!("causal={causal} kind={kind:?} w={workers}");
+                let (grads, report) = flash_backward_sharded_checked(
+                    &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, workers, &plan,
+                )
+                .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+                assert_eq!(grads.dq.data, baseline.dq.data, "dQ not bitwise [{ctx}]");
+                assert_eq!(grads.dk.data, baseline.dk.data, "dK not bitwise [{ctx}]");
+                assert_eq!(grads.dv.data, baseline.dv.data, "dV not bitwise [{ctx}]");
+                if kind == FaultKind::DelayedShard {
+                    assert_eq!(report.delayed, 2, "{ctx}");
+                    assert_eq!(report.retry_hbm.accesses(), 0, "{ctx}");
+                } else {
+                    assert_eq!(report.retries, 2, "{ctx}");
+                    assert_fault_counters(&report, kind, 2);
+                    let expected = ring_dq_item(n, d, blocks, dq_rb, &live, causal)
+                        + cost::flash2_bwd_dkv_item(n as u64, d as u64, blocks, dkv_col0, causal);
+                    assert_eq!(report.retry_hbm.accesses(), expected, "retry traffic [{ctx}]");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tree_forward_recovers_bitwise_with_exact_retry_traffic() {
+    let (n, d, shards) = (64usize, 16usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let t_r = n / blocks.b_r;
+    let q = rand(&[n, d], 0x7EE_1);
+    let k = rand(&[n, d], 0x7EE_2);
+    let v = rand(&[n, d], 0x7EE_3);
+    // Flat (live shard slice, row block) coordinates: item 2 = (shard 0,
+    // rb 2), item 11 = (shard 1, rb 3).
+    let faulted = [2usize, 11];
+    for causal in [false, true] {
+        let cfg = AttnConfig { causal, ..Default::default() };
+        let live = shard_ranges(n, blocks.b_c, shards);
+        let baseline = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, 1);
+        for kind in ALL_KINDS {
+            let mut plan = FaultPlan::none();
+            for &it in &faulted {
+                plan = plan.with(FaultSite::TreePartial, it, 0, kind);
+            }
+            for workers in [1usize, 2, 5] {
+                let ctx = format!("causal={causal} kind={kind:?} w={workers}");
+                let (out, report) = flash_forward_sharded_tree_checked(
+                    &q, &k, &v, &cfg, blocks, shards, workers, &plan,
+                )
+                .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+                assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
+                assert_eq!(out.l, baseline.l, "l not bitwise [{ctx}]");
+                assert_eq!(out.m, baseline.m, "m not bitwise [{ctx}]");
+                if kind == FaultKind::DelayedShard {
+                    assert_eq!(report.delayed, 2, "{ctx}");
+                    assert_eq!(report.retry_hbm.accesses(), 0, "{ctx}");
+                } else {
+                    assert_eq!(report.retries, 2, "{ctx}");
+                    assert_fault_counters(&report, kind, 2);
+                    // A tree partial item streams exactly its own shard.
+                    let expected: u64 = faulted
+                        .iter()
+                        .map(|&it| {
+                            let sh = live[it / t_r];
+                            ring_fwd_item(n, d, blocks, it % t_r, &[sh], causal)
+                        })
+                        .sum();
+                    assert_eq!(report.retry_hbm.accesses(), expected, "retry traffic [{ctx}]");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_tree_partial_poison_is_recomputed_and_remerged() {
+    let (n, d, shards) = (32usize, 8usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0x57E_1);
+    let k = rand(&[n, d], 0x57E_2);
+    let v = rand(&[n, d], 0x57E_3);
+    let mask = BlockMask::dense(n / blocks.b_r, n / blocks.b_c);
+    let cfg = AttnConfig::default();
+    let baseline = block_sparse_forward_sharded_tree(&q, &k, &v, &mask, &cfg, blocks, shards, 1);
+    // One poisoned partial on shard 1: recomputed, re-merged, bitwise.
+    let plan = FaultPlan::none().with(FaultSite::TreePartial, 1, 0, FaultKind::PoisonedPartial);
+    let (out, report) = block_sparse_forward_sharded_tree_checked(
+        &q, &k, &v, &mask, &cfg, blocks, shards, 2, &plan,
+    )
+    .expect("must recover");
+    assert_eq!(out.o.data, baseline.o.data, "O not bitwise after re-merge");
+    assert_eq!(out.l, baseline.l);
+    assert_eq!(out.m, baseline.m);
+    assert_eq!(report.poisoned, 1);
+    assert_eq!(report.retries, 1);
+    // Poisoned on every attempt: typed budget-exhaustion error.
+    let plan = FaultPlan::none()
+        .with(FaultSite::TreePartial, 1, 0, FaultKind::PoisonedPartial)
+        .with(FaultSite::TreePartial, 1, 1, FaultKind::PoisonedPartial)
+        .with(FaultSite::TreePartial, 1, 2, FaultKind::PoisonedPartial);
+    let err = block_sparse_forward_sharded_tree_checked(
+        &q, &k, &v, &mask, &cfg, blocks, shards, 2, &plan,
+    )
+    .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::TreePartial,
+            slice: 1,
+            batch: 0,
+            head: 0,
+            block: 0,
+            attempts: 3,
+        }
+    );
+}
+
+// ---------------------------------------------------------------------
+// Budget exhaustion: a fault on every attempt is a typed error.
+// ---------------------------------------------------------------------
+
+#[test]
+fn exhausted_retry_budget_is_a_typed_error_with_provenance() {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0xE_1);
+    let k = rand(&[b, h, n, d], 0xE_2);
+    let v = rand(&[b, h, n, d], 0xE_3);
+    let cfg = AttnConfig::default();
+
+    // Panic on every attempt of item 7 = (batch 0, head 0, rb 7).
+    let plan = FaultPlan::none()
+        .with(FaultSite::BatchedFwd, 7, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::BatchedFwd, 7, 1, FaultKind::WorkerPanic)
+        .with(FaultSite::BatchedFwd, 7, 2, FaultKind::WorkerPanic);
+    let err =
+        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan)
+            .unwrap_err();
+    match err {
+        AttnError::ItemFailed { site, slice, block, attempts, .. } => {
+            assert_eq!(site, FaultSite::BatchedFwd);
+            assert_eq!((slice, block, attempts), (0, 7, 3));
+        }
+        e => panic!("expected ItemFailed, got {e:?}"),
+    }
+
+    // Poison on every attempt of item 13 = (slice 1 → batch 0 head 1,
+    // rb 5): NonFinite with full (batch, head, block) provenance.
+    let plan = FaultPlan::none()
+        .with(FaultSite::BatchedFwd, 13, 0, FaultKind::PoisonedPartial)
+        .with(FaultSite::BatchedFwd, 13, 1, FaultKind::PoisonedPartial)
+        .with(FaultSite::BatchedFwd, 13, 2, FaultKind::PoisonedPartial);
+    let err =
+        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan)
+            .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::BatchedFwd,
+            slice: 1,
+            batch: 0,
+            head: 1,
+            block: 5,
+            attempts: 3,
+        }
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("batched forward"), "{msg}");
+    assert!(msg.contains("batch 0, head 1"), "{msg}");
+
+    // Dropped merge on every attempt: ItemFailed naming the cause.
+    let plan = FaultPlan::none()
+        .with(FaultSite::BatchedFwd, 0, 0, FaultKind::DroppedMerge)
+        .with(FaultSite::BatchedFwd, 0, 1, FaultKind::DroppedMerge)
+        .with(FaultSite::BatchedFwd, 0, 2, FaultKind::DroppedMerge);
+    let err =
+        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan)
+            .unwrap_err();
+    match err {
+        AttnError::ItemFailed { message, attempts, .. } => {
+            assert!(message.contains("dropped"), "{message}");
+            assert_eq!(attempts, 3);
+        }
+        e => panic!("expected ItemFailed, got {e:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeded chaos: the same plan fires the same faults at every worker
+// count, and recovery stays bitwise.
+// ---------------------------------------------------------------------
+
+#[test]
+fn seeded_fault_schedule_is_deterministic_across_worker_counts() {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0x5EE_1);
+    let k = rand(&[b, h, n, d], 0x5EE_2);
+    let v = rand(&[b, h, n, d], 0x5EE_3);
+    let dout = rand(&[b, h, n, d], 0x5EE_4);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let plan = FaultPlan::seeded(0x5EED_CA05, 0.75, &ALL_KINDS);
+
+    let fwd_base = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+    let bwd_base = flash2_backward_batched(
+        &q, &k, &v, &fwd_base.o, &dout, &fwd_base.stats, &cfg, blocks, 1, &mut Hbm::new(),
+    );
+    let mut fingerprints = Vec::new();
+    for workers in [1usize, 2, 5] {
+        let (fwd, frep) =
+            flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(), &plan)
+                .expect("seeded faults fire on attempt 0 only — recovery must succeed");
+        let (bwd, brep) = flash2_backward_batched_checked(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut Hbm::new(), &plan,
+        )
+        .expect("seeded faults fire on attempt 0 only — recovery must succeed");
+        assert_eq!(fwd.o.data, fwd_base.o.data, "w={workers}");
+        assert_eq!(fwd.stats.lse, fwd_base.stats.lse, "w={workers}");
+        assert_eq!(bwd.dq.data, bwd_base.dq.data, "w={workers}");
+        assert_eq!(bwd.dk.data, bwd_base.dk.data, "w={workers}");
+        assert_eq!(bwd.dv.data, bwd_base.dv.data, "w={workers}");
+        fingerprints.push((
+            frep.retries,
+            frep.panics,
+            frep.poisoned,
+            frep.dropped,
+            frep.delayed,
+            frep.retry_hbm.loads,
+            frep.retry_hbm.stores,
+            brep.retries,
+            brep.faults(),
+            brep.retry_hbm.accesses(),
+        ));
+    }
+    assert_eq!(fingerprints[0], fingerprints[1], "fault schedule depends on worker count");
+    assert_eq!(fingerprints[0], fingerprints[2], "fault schedule depends on worker count");
+    let (retries, faults) = (fingerprints[0].0, fingerprints[0].1 + fingerprints[0].2
+        + fingerprints[0].3);
+    assert!(faults + fingerprints[0].4 > 0, "seeded plan at rate 0.75 over 32 items fired nothing");
+    assert_eq!(retries, faults, "every seeded fault retries exactly once");
+
+    // The same seeded plan on the ring schedule: still bitwise.
+    let (q2, k2, v2) = (rand(&[n, d], 0xA_1), rand(&[n, d], 0xA_2), rand(&[n, d], 0xA_3));
+    let ring_base = flash_forward_sharded(&q2, &k2, &v2, &cfg, blocks, 2, 1);
+    for workers in [1usize, 2, 5] {
+        let (out, _) =
+            flash_forward_sharded_checked(&q2, &k2, &v2, &cfg, blocks, 2, workers, &plan)
+                .expect("must recover");
+        assert_eq!(out.o.data, ring_base.o.data, "ring w={workers}");
+        assert_eq!(out.m, ring_base.m, "ring w={workers}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: NaN/Inf INPUTS propagate to typed NonFinite errors with
+// pinned provenance on every checked schedule; plain entry points keep
+// their unvalidated (garbage-in, garbage-out) semantics.
+// ---------------------------------------------------------------------
+
+#[test]
+fn nan_input_propagates_to_typed_error_in_forward_many() {
+    let (n, d) = (32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q0 = rand(&[n, d], 0xF_1);
+    let mut q1 = rand(&[n, d], 0xF_2);
+    let k = rand(&[n, d], 0xF_3);
+    let v = rand(&[n, d], 0xF_4);
+    q1.data[20 * d] = f32::NAN; // slice 1, row 20 → row block 2
+    let cfg = AttnConfig::default();
+    let slices = [
+        AttnSlice { q: &q0.data, k: &k.data, v: &v.data, n, n_k: n, d, cfg: cfg.clone() },
+        AttnSlice { q: &q1.data, k: &k.data, v: &v.data, n, n_k: n, d, cfg: cfg.clone() },
+    ];
+    for workers in [1usize, 2, 5] {
+        let err = flash2_forward_many_checked(&slices, blocks, workers, &mut Hbm::new(),
+            &FaultPlan::none())
+        .unwrap_err();
+        assert_eq!(
+            err,
+            AttnError::NonFinite {
+                site: FaultSite::BatchedFwd,
+                slice: 1,
+                batch: 0,
+                head: 0,
+                block: 2,
+                attempts: 3,
+            },
+            "w={workers}"
+        );
+    }
+}
+
+#[test]
+fn nan_and_inf_inputs_propagate_through_the_batched_schedules() {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let k = rand(&[b, h, n, d], 0x1F_2);
+    let v = rand(&[b, h, n, d], 0x1F_3);
+    let cfg = AttnConfig::default();
+
+    // NaN in Q of (batch 1, head 0), row 5 → slice 2, row block 0.
+    let mut q = rand(&[b, h, n, d], 0x1F_1);
+    q.data[2 * n * d + 5 * d + 3] = f32::NAN;
+    let err = flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(),
+        &FaultPlan::none())
+    .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::BatchedFwd,
+            slice: 2,
+            batch: 1,
+            head: 0,
+            block: 0,
+            attempts: 3,
+        }
+    );
+
+    // The plain (unchecked) entry point keeps its defined semantics:
+    // no panic, the poison lands in the output.
+    let out = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+    assert!(out.o.data.iter().any(|x| x.is_nan()), "plain path must pass the NaN through");
+
+    // Inf in Q of (batch 0, head 0), row 9 → slice 0, row block 1.
+    let mut q = rand(&[b, h, n, d], 0x1F_4);
+    q.data[9 * d] = f32::INFINITY;
+    let err = flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(),
+        &FaultPlan::none())
+    .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::BatchedFwd,
+            slice: 0,
+            batch: 0,
+            head: 0,
+            block: 1,
+            attempts: 3,
+        }
+    );
+
+    // NaN in dO row 10 of (batch 0, head 1) → backward dQ pool, slice 1,
+    // row block 1 (phase 0's D row is NaN, phase 1 trips the guardrail).
+    let q = rand(&[b, h, n, d], 0x1F_5);
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+    let mut dout = rand(&[b, h, n, d], 0x1F_6);
+    dout.data[n * d + 10 * d + 2] = f32::NAN;
+    let err = flash2_backward_batched_checked(
+        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 2, &mut Hbm::new(), &FaultPlan::none(),
+    )
+    .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::BatchedDq,
+            slice: 1,
+            batch: 0,
+            head: 1,
+            block: 1,
+            attempts: 3,
+        }
+    );
+}
+
+#[test]
+fn nan_inputs_propagate_through_sparse_and_sharded_schedules() {
+    let blocks = Blocks::explicit(8, 8);
+
+    // Sparse batched: NaN in Q row 5 of (batch 1, head 0) → slice 2.
+    let (b, h, n, d) = (2usize, 2usize, 32usize, 8usize);
+    let mut q = rand(&[b, h, n, d], 0x2F_1);
+    let k = rand(&[b, h, n, d], 0x2F_2);
+    let v = rand(&[b, h, n, d], 0x2F_3);
+    q.data[2 * n * d + 5 * d] = f32::NAN;
+    let masks = [BlockMask::dense(n / blocks.b_r, n / blocks.b_c)];
+    let cfg = AttnConfig::default();
+    let err = block_sparse2_forward_batched_checked(
+        &q, &k, &v, &masks, &cfg, blocks, 2, &mut Hbm::new(), &FaultPlan::none(),
+    )
+    .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::SparseFwd,
+            slice: 2,
+            batch: 1,
+            head: 0,
+            block: 0,
+            attempts: 3,
+        }
+    );
+
+    // A NaN the mask excludes never reaches the output: checked run
+    // succeeds and matches the plain run on the same poisoned input.
+    let mut masked = BlockMask::dense(n / blocks.b_r, n / blocks.b_c);
+    for i in 0..n / blocks.b_r {
+        masked.set(i, 3, false);
+    }
+    let masks = [masked];
+    let q_ok = rand(&[b, h, n, d], 0x2F_4);
+    let mut k_bad = rand(&[b, h, n, d], 0x2F_5);
+    k_bad.data[25 * d] = f32::NAN; // row 25 lives in masked-out tile 3
+    let baseline =
+        block_sparse2_forward_batched(&q_ok, &k_bad, &v, &masks, &cfg, blocks, 1, &mut Hbm::new());
+    let (out, report) = block_sparse2_forward_batched_checked(
+        &q_ok, &k_bad, &v, &masks, &cfg, blocks, 2, &mut Hbm::new(), &FaultPlan::none(),
+    )
+    .expect("masked-out NaN must not trip the guardrail");
+    assert_eq!(out.o.data, baseline.o.data);
+    assert_eq!(report.faults(), 0);
+
+    // Ring: NaN in Q row 12 → row block 1 (single logical slice).
+    let (n2, d2) = (64usize, 16usize);
+    let mut q2 = rand(&[n2, d2], 0x3F_1);
+    let k2 = rand(&[n2, d2], 0x3F_2);
+    let v2 = rand(&[n2, d2], 0x3F_3);
+    q2.data[12 * d2] = f32::NAN;
+    let err = flash_forward_sharded_checked(
+        &q2, &k2, &v2, &cfg, blocks, 2, 2, &FaultPlan::none(),
+    )
+    .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::RingFwd,
+            slice: 0,
+            batch: 0,
+            head: 0,
+            block: 1,
+            attempts: 3,
+        }
+    );
+
+    // Tree: NaN in K row 40 poisons only shard 1's partial.
+    let q3 = rand(&[n2, d2], 0x4F_1);
+    let mut k3 = rand(&[n2, d2], 0x4F_2);
+    let v3 = rand(&[n2, d2], 0x4F_3);
+    k3.data[40 * d2] = f32::NAN;
+    let err = flash_forward_sharded_tree_checked(
+        &q3, &k3, &v3, &cfg, blocks, 2, 1, &FaultPlan::none(),
+    )
+    .unwrap_err();
+    match err {
+        AttnError::NonFinite { site, slice, attempts, .. } => {
+            assert_eq!(site, FaultSite::TreePartial);
+            assert_eq!(slice, 1, "only the shard owning the NaN key may fail");
+            assert_eq!(attempts, 3);
+        }
+        e => panic!("expected NonFinite, got {e:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shard classification: malformed layouts are typed errors, dead shards
+// are classified with a reason instead of silently dropped.
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_shard_layouts_are_typed_config_errors() {
+    let cfg = AttnConfig::default();
+    let err = classify_shards(&[Shard { lo: 8, hi: 8 }], 16, &cfg, 8).unwrap_err();
+    match err {
+        AttnError::ShardConfig { shard, lo, hi, reason } => {
+            assert_eq!((shard, lo, hi), (0, 8, 8));
+            assert!(reason.contains("empty"), "{reason}");
+        }
+        e => panic!("expected ShardConfig, got {e:?}"),
+    }
+    let ok = Shard { lo: 0, hi: 8 };
+    let err = classify_shards(&[ok, Shard { lo: 3, hi: 16 }], 16, &cfg, 8).unwrap_err();
+    match err {
+        AttnError::ShardConfig { shard, reason, .. } => {
+            assert_eq!(shard, 1);
+            assert!(reason.contains("aligned"), "{reason}");
+        }
+        e => panic!("expected ShardConfig, got {e:?}"),
+    }
+}
+
+#[test]
+fn dead_shards_are_classified_with_reasons() {
+    let (n, d) = (64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0xDE_1);
+    let k = rand(&[n, d], 0xDE_2);
+    let v = rand(&[n, d], 0xDE_3);
+
+    // kv_len = 10 kills shards [16,32), [32,48), [48,64).
+    let cfg = AttnConfig { kv_len: Some(10), ..Default::default() };
+    let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 4, 1);
+    let (out, report) =
+        flash_forward_sharded_checked(&q, &k, &v, &cfg, blocks, 4, 2, &FaultPlan::none())
+            .expect("dead shards are not errors");
+    assert_eq!(out.o.data, baseline.o.data);
+    let idx: Vec<usize> = report.dead_shards.iter().map(|&(i, _)| i).collect();
+    assert_eq!(idx, vec![1, 2, 3]);
+    for (_, reason) in &report.dead_shards {
+        assert!(reason.contains("kv_len"), "{reason}");
+    }
+
+    // Causal with 16 query rows kills every shard past the diagonal.
+    let q_short = rand(&[16, d], 0xDE_4);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let (_, report) =
+        flash_forward_sharded_checked(&q_short, &k, &v, &cfg, blocks, 4, 2, &FaultPlan::none())
+            .expect("dead shards are not errors");
+    let idx: Vec<usize> = report.dead_shards.iter().map(|&(i, _)| i).collect();
+    assert_eq!(idx, vec![1, 2, 3]);
+    for (_, reason) in &report.dead_shards {
+        assert!(reason.contains("causal"), "{reason}");
+    }
+
+    // Sparse tree: a shard whose mask window is all zero is dead with
+    // the sparse-specific reason.
+    let (n2, d2) = (32usize, 8usize);
+    let q2 = rand(&[n2, d2], 0xDE_5);
+    let k2 = rand(&[n2, d2], 0xDE_6);
+    let v2 = rand(&[n2, d2], 0xDE_7);
+    let mut mask = BlockMask::dense(n2 / blocks.b_r, n2 / blocks.b_c);
+    for i in 0..n2 / blocks.b_r {
+        mask.set(i, 2, false);
+        mask.set(i, 3, false);
+    }
+    let cfg = AttnConfig::default();
+    let baseline = block_sparse_forward_sharded_tree(&q2, &k2, &v2, &mask, &cfg, blocks, 2, 1);
+    let (out, report) = block_sparse_forward_sharded_tree_checked(
+        &q2, &k2, &v2, &mask, &cfg, blocks, 2, 2, &FaultPlan::none(),
+    )
+    .expect("sparse-dead shards are not errors");
+    assert_eq!(out.o.data, baseline.o.data);
+    assert_eq!(report.dead_shards.len(), 1);
+    assert_eq!(report.dead_shards[0].0, 1);
+    assert!(report.dead_shards[0].1.contains("mask window"), "{}", report.dead_shards[0].1);
+}
+
+// ---------------------------------------------------------------------
+// The checked entry points with no plan are free: bitwise-identical
+// output, zeroed report, identical traffic.
+// ---------------------------------------------------------------------
+
+#[test]
+fn checked_paths_without_faults_are_bitwise_and_traffic_identical() {
+    let (b, h, n, d) = (2usize, 2usize, 48usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0x0FF_1);
+    let k = rand(&[b, h, n, d], 0x0FF_2);
+    let v = rand(&[b, h, n, d], 0x0FF_3);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let mut plain_hbm = Hbm::new();
+    let plain = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 3, &mut plain_hbm);
+    let mut checked_hbm = Hbm::new();
+    let (out, report) =
+        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 3, &mut checked_hbm,
+            &FaultPlan::none())
+        .expect("no faults, no error");
+    assert_eq!(out.o.data, plain.o.data);
+    assert_eq!(out.stats.lse, plain.stats.lse);
+    assert_eq!(report.retries, 0);
+    assert_eq!(report.faults(), 0);
+    assert_eq!(report.delayed, 0);
+    assert_eq!(report.retry_hbm.accesses(), 0);
+    assert!(report.dead_shards.is_empty());
+    assert_eq!(plain_hbm.loads, checked_hbm.loads, "validation must not add modeled traffic");
+    assert_eq!(plain_hbm.stores, checked_hbm.stores, "validation must not add modeled traffic");
+
+    // flash2_forward_many round-trips the same way.
+    let (n1, d1) = (32usize, 8usize);
+    let q1 = rand(&[n1, d1], 0x0FF_4);
+    let k1 = rand(&[n1, d1], 0x0FF_5);
+    let v1 = rand(&[n1, d1], 0x0FF_6);
+    let cfg1 = AttnConfig::default();
+    let slices = [AttnSlice {
+        q: &q1.data,
+        k: &k1.data,
+        v: &v1.data,
+        n: n1,
+        n_k: n1,
+        d: d1,
+        cfg: cfg1,
+    }];
+    let plain = flash2_forward_many(&slices, blocks, 2, &mut Hbm::new());
+    let (outs, report) =
+        flash2_forward_many_checked(&slices, blocks, 2, &mut Hbm::new(), &FaultPlan::none())
+            .expect("no faults, no error");
+    assert_eq!(outs.len(), plain.len());
+    assert_eq!(outs[0].o.data, plain[0].o.data);
+    assert_eq!(outs[0].lse, plain[0].lse);
+    assert_eq!(report.faults(), 0);
+}
