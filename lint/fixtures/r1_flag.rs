@@ -1,0 +1,8 @@
+// R1 must-flag: a raw thread scope outside attn::batched::run_pool.
+pub fn rogue_parallel_sweep(xs: &mut [f32]) {
+    std::thread::scope(|scope| {
+        for chunk in xs.chunks_mut(8) {
+            scope.spawn(move || chunk.fill(1.0));
+        }
+    });
+}

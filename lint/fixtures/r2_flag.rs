@@ -1,0 +1,15 @@
+// R2 must-flag: nondeterministic containers and wall-clock reads in a
+// kernel/scheduler module.
+use std::collections::HashMap;
+
+pub fn hazard_schedule(keys: &[u64]) -> u64 {
+    let mut seen: HashMap<u64, u64> = HashMap::new();
+    for &k in keys {
+        *seen.entry(k).or_insert(0) += 1;
+    }
+    let t0 = std::time::Instant::now();
+    let _epoch = std::time::SystemTime::now();
+    // Iteration order of `seen` is nondeterministic — exactly the bug
+    // class this rule exists to catch.
+    seen.values().sum::<u64>() + t0.elapsed().as_nanos() as u64
+}

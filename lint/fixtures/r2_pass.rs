@@ -1,0 +1,10 @@
+// R2 must-pass: deterministic containers and counter-based streams.
+use std::collections::BTreeMap;
+
+pub fn deterministic_schedule(keys: &[u64]) -> u64 {
+    let mut seen: BTreeMap<u64, u64> = BTreeMap::new();
+    for &k in keys {
+        *seen.entry(k).or_insert(0) += 1;
+    }
+    seen.values().sum()
+}

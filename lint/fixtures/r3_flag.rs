@@ -1,0 +1,4 @@
+// R3 must-flag: an unsafe block (even a "harmless" one).
+pub fn read_first(xs: &[f32]) -> f32 {
+    unsafe { *xs.get_unchecked(0) }
+}

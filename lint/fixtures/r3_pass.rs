@@ -1,0 +1,4 @@
+// R3 must-pass: the same operation in safe Rust.
+pub fn read_first(xs: &[f32]) -> f32 {
+    xs[0]
+}

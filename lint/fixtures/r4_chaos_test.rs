@@ -1,0 +1,6 @@
+// R4 chaos-test fixture: injects GadgetDq but never GadgetFwd.
+#[test]
+fn gadget_dq_recovers_bitwise() {
+    let plan = FaultPlan::none().with(FaultSite::GadgetDq, 0, 0, FaultKind::WorkerPanic);
+    let _ = plan;
+}

@@ -1,0 +1,7 @@
+// R4 must-flag faults fixture: two sites; only GadgetDq is injected in
+// the chaos fixture, so GadgetFwd must flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    GadgetFwd,
+    GadgetDq,
+}

@@ -1,0 +1,9 @@
+// R4 io-test fixture: names gadget_forward (so the pass module is
+// covered) but not widget_forward (so the flag module is not).
+#[test]
+fn gadget_fwd_analytic_matches_instrumented_exactly() {
+    let mut hbm = Hbm::new();
+    let out = gadget_forward(&q, &mut hbm);
+    assert_eq!(hbm.accesses(), cost::gadget_fwd(n, d).hbm_elems);
+    let _ = out;
+}

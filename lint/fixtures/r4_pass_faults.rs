@@ -1,0 +1,6 @@
+// R4 must-pass faults fixture: the only variant is injected by the
+// chaos fixture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    GadgetDq,
+}

@@ -1,0 +1,725 @@
+//! Invariant lint for the flashattn tree.
+//!
+//! `cargo run -p lint` walks `rust/src` with a small token-level Rust
+//! scanner (no syn — the crate must build with zero dependencies in the
+//! offline universe) and enforces the project's invariant catalog (see
+//! the "Invariant catalog" section of `rust/src/attn/mod.rs`) as four
+//! named rules:
+//!
+//! * **R1** — pool routing: no raw `std::thread::spawn`/`std::thread::scope`
+//!   outside `attn::batched::run_pool`/`run_pool_guarded`.
+//! * **R2** — determinism hazards in `attn/`, `sim/`, `runtime/`:
+//!   `HashMap`/`HashSet`, `Instant::now`/`SystemTime`,
+//!   `std::thread::current`/`ThreadId`. Built-in allowlist:
+//!   `runtime/exec.rs` (compile cache + compile-time metric, off the
+//!   numeric path).
+//! * **R3** — no `unsafe` anywhere in the tree (backs the crate-level
+//!   `#![forbid(unsafe_code)]`).
+//! * **R4** — coverage cross-reference: every `pub fn *_forward*` /
+//!   `*_backward*` in `attn::{flash2,batched,block_sparse,distributed}`
+//!   is named in the IO-exactness wall (`rust/tests/io_complexity.rs`),
+//!   batched/sharded entries have a `_checked` twin, and every
+//!   `FaultSite` variant is injected in `rust/tests/chaos.rs`.
+//!
+//! Escape hatch: a `// lint::allow(Rn, reason)` comment pragma on the
+//! offending line or the line directly above suppresses that rule there
+//! (the reason is mandatory; an unused pragma is itself a finding, so
+//! stale allows can't accumulate).
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+// ---------------------------------------------------------------------
+// Findings
+// ---------------------------------------------------------------------
+
+/// One rule violation: where, what, and how to fix it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+    pub hint: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {}:{}: {}\n    fix: {}",
+            self.rule, self.path, self.line, self.message, self.hint
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tokenizer
+// ---------------------------------------------------------------------
+
+/// A token with its 1-indexed source line. Comments, string/char
+/// literal *contents* and whitespace never become tokens, so doc
+/// comments mentioning `std::thread::scope` cannot trip a rule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+    pub is_ident: bool,
+}
+
+/// Token-level scan of Rust source: strips line comments, nested block
+/// comments, string literals (plain, escaped, raw `r"…"`/`r#"…"#`), and
+/// char literals (distinguished from lifetimes), then emits identifier
+/// and punctuation tokens with line numbers.
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == 'r'
+            && i + 1 < n
+            && (b[i + 1] == '"' || b[i + 1] == '#')
+            && raw_string_hashes(&b, i + 1).is_some()
+        {
+            // Raw string r"…" / r#"…"# / r##"…"## — no escapes inside.
+            let hashes = raw_string_hashes(&b, i + 1).unwrap();
+            i += 1 + hashes + 1; // r, #s, opening quote
+            loop {
+                if i >= n {
+                    break;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '"' && closes_raw(&b, i + 1, hashes) {
+                    i += 1 + hashes;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                } else if b[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == '\'' {
+            // Lifetime ('a not followed by a closing quote) vs char
+            // literal ('a', '\n', '::' never appears in either).
+            let is_lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                i += 1; // the identifier after it tokenizes harmlessly
+            } else {
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' {
+                        i += 2;
+                    } else if b[i] == '\'' {
+                        i += 1;
+                        break;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { text: b[start..i].iter().collect(), line, is_ident: true });
+        } else if c.is_ascii_digit() {
+            // Numbers (incl. 1e-6, 0xFF, 1_000f32): consumed so their
+            // suffixes never masquerade as identifiers.
+            while i < n
+                && (b[i].is_alphanumeric()
+                    || b[i] == '_'
+                    || b[i] == '.'
+                    || ((b[i] == '+' || b[i] == '-')
+                        && (b[i - 1] == 'e' || b[i - 1] == 'E')))
+            {
+                i += 1;
+            }
+        } else {
+            toks.push(Tok { text: c.to_string(), line, is_ident: false });
+            i += 1;
+        }
+    }
+    toks
+}
+
+/// At `b[at]` (just past the `r`), count `#`s; Some(count) iff a quote
+/// follows them (i.e. this really is a raw string opener).
+fn raw_string_hashes(b: &[char], at: usize) -> Option<usize> {
+    let mut k = at;
+    while k < b.len() && b[k] == '#' {
+        k += 1;
+    }
+    (k < b.len() && b[k] == '"').then_some(k - at)
+}
+
+fn closes_raw(b: &[char], at: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| at + k < b.len() && b[at + k] == '#')
+}
+
+/// True iff tokens at `i` spell the path `segs[0]::segs[1]::…` (each
+/// segment an identifier, separated by literal `::`).
+fn path_at(toks: &[Tok], i: usize, segs: &[&str]) -> bool {
+    let mut j = i;
+    for (si, seg) in segs.iter().enumerate() {
+        if si > 0 {
+            if !(j + 1 < toks.len() && toks[j].text == ":" && toks[j + 1].text == ":") {
+                return false;
+            }
+            j += 2;
+        }
+        if !(j < toks.len() && toks[j].is_ident && toks[j].text == *seg) {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+// ---------------------------------------------------------------------
+// Pragmas
+// ---------------------------------------------------------------------
+
+/// A `lint::allow(Rn, reason)` comment pragma.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pragma {
+    pub rule: String,
+    pub line: usize,
+    pub reason: String,
+}
+
+/// Extract pragmas from raw source lines (pragmas live in comments, so
+/// this runs on the unstripped text). A pragma without a reason is
+/// reported as a finding — the reason is the audit trail.
+pub fn parse_pragmas(path: &str, src: &str) -> (Vec<Pragma>, Vec<Finding>) {
+    let mut pragmas = Vec::new();
+    let mut findings = Vec::new();
+    for (ln, text) in src.lines().enumerate() {
+        let line = ln + 1;
+        let Some(at) = text.find("lint::allow(") else {
+            continue;
+        };
+        let rest = &text[at + "lint::allow(".len()..];
+        let Some(end) = rest.find(')') else {
+            findings.push(Finding {
+                rule: "pragma",
+                path: path.to_string(),
+                line,
+                message: "malformed lint::allow pragma (no closing parenthesis)".into(),
+                hint: "write `// lint::allow(Rn, reason)`".into(),
+            });
+            continue;
+        };
+        let body = &rest[..end];
+        let (rule, reason) = match body.split_once(',') {
+            Some((r, why)) => (r.trim().to_string(), why.trim().to_string()),
+            None => (body.trim().to_string(), String::new()),
+        };
+        if reason.is_empty() {
+            findings.push(Finding {
+                rule: "pragma",
+                path: path.to_string(),
+                line,
+                message: format!("lint::allow({rule}) has no reason"),
+                hint: "every allow pragma must carry a justification: \
+                       `// lint::allow(Rn, reason)`"
+                    .into(),
+            });
+            continue;
+        }
+        pragmas.push(Pragma { rule, line, reason });
+    }
+    (pragmas, findings)
+}
+
+/// Apply pragmas to findings: a pragma suppresses its rule on the
+/// pragma's own line and the line directly below. Unused pragmas become
+/// findings — stale allows are as load-bearing as violations.
+pub fn apply_pragmas(
+    path: &str,
+    findings: Vec<Finding>,
+    pragmas: &[Pragma],
+) -> Vec<Finding> {
+    let mut used = vec![false; pragmas.len()];
+    let mut out: Vec<Finding> = findings
+        .into_iter()
+        .filter(|f| {
+            for (pi, p) in pragmas.iter().enumerate() {
+                if p.rule == f.rule && (f.line == p.line || f.line == p.line + 1) {
+                    used[pi] = true;
+                    return false;
+                }
+            }
+            true
+        })
+        .collect();
+    for (pi, p) in pragmas.iter().enumerate() {
+        if !used[pi] {
+            out.push(Finding {
+                rule: "pragma",
+                path: path.to_string(),
+                line: p.line,
+                message: format!("unused lint::allow({}) pragma", p.rule),
+                hint: "remove it — nothing on this or the next line trips that rule".into(),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rules R1–R3 (per-file token scan)
+// ---------------------------------------------------------------------
+
+fn r2_in_scope(path: &str) -> bool {
+    (path.contains("src/attn/") || path.contains("src/sim/") || path.contains("src/runtime/"))
+        && !path.ends_with("runtime/exec.rs")
+}
+
+/// Scan one file for R1–R3. `path` is repo-relative (used for scoping
+/// and reporting). Pragmas are NOT applied here — callers compose with
+/// [`parse_pragmas`]/[`apply_pragmas`].
+pub fn scan_file(path: &str, src: &str) -> Vec<Finding> {
+    let toks = tokenize(src);
+    let mut findings = Vec::new();
+
+    // Enclosing-fn tracking for the R1 built-in exemption: the single
+    // legitimate scope lives inside attn::batched::run_pool_guarded.
+    let mut brace_fns: Vec<Option<String>> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let in_pool = |brace_fns: &[Option<String>]| {
+        brace_fns
+            .iter()
+            .rev()
+            .find_map(|e| e.as_deref())
+            .is_some_and(|f| f == "run_pool" || f == "run_pool_guarded")
+    };
+
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "fn" if t.is_ident => {
+                if let Some(next) = toks.get(i + 1) {
+                    if next.is_ident {
+                        pending_fn = Some(next.text.clone());
+                    }
+                }
+            }
+            "{" => brace_fns.push(pending_fn.take()),
+            "}" => {
+                brace_fns.pop();
+            }
+            _ => {}
+        }
+
+        // R1: raw thread spawn/scope outside the pool.
+        if t.is_ident
+            && t.text == "thread"
+            && (path_at(&toks, i, &["thread", "spawn"]) || path_at(&toks, i, &["thread", "scope"]))
+        {
+            let exempt = path.ends_with("attn/batched.rs") && in_pool(&brace_fns);
+            if !exempt {
+                let what = if path_at(&toks, i, &["thread", "spawn"]) { "spawn" } else { "scope" };
+                findings.push(Finding {
+                    rule: "R1",
+                    path: path.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "raw std::thread::{what} outside attn::batched::run_pool"
+                    ),
+                    hint: "route the work through attn::batched::run_pool / \
+                           run_pool_guarded (fault containment, retry accounting and \
+                           the audit hooks come for free)"
+                        .into(),
+                });
+            }
+        }
+
+        // R2: determinism hazards in kernel/scheduler/runtime modules.
+        if r2_in_scope(path) && t.is_ident {
+            let hazard = match t.text.as_str() {
+                "HashMap" | "HashSet" => Some("iteration order is nondeterministic"),
+                "SystemTime" => Some("wall clock reads are nondeterministic"),
+                "ThreadId" => Some("thread identity must not influence numerics"),
+                "Instant" if path_at(&toks, i, &["Instant", "now"]) => {
+                    Some("wall clock reads are nondeterministic")
+                }
+                "thread" if path_at(&toks, i, &["thread", "current"]) => {
+                    Some("thread identity must not influence numerics")
+                }
+                _ => None,
+            };
+            if let Some(why) = hazard {
+                findings.push(Finding {
+                    rule: "R2",
+                    path: path.to_string(),
+                    line: t.line,
+                    message: format!("determinism hazard `{}`: {why}", t.text),
+                    hint: "use a BTreeMap/sorted Vec or deterministic counters; if \
+                           provably off the numeric path, pragma it with a reason"
+                        .into(),
+                });
+            }
+        }
+
+        // R3: no unsafe anywhere.
+        if t.is_ident && t.text == "unsafe" {
+            findings.push(Finding {
+                rule: "R3",
+                path: path.to_string(),
+                line: t.line,
+                message: "`unsafe` block or function".into(),
+                hint: "the tree is #![forbid(unsafe_code)]; express this in safe Rust \
+                       (split_windows hands out disjoint &mut windows without unsafe)"
+                    .into(),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------
+// Rule R4 (cross-file coverage)
+// ---------------------------------------------------------------------
+
+/// Inputs for the R4 cross-reference: the four hot-path attn modules,
+/// the faults source (FaultSite enum), and the two test walls.
+pub struct R4Inputs<'a> {
+    /// (repo-relative path, source) of attn::{flash2,batched,block_sparse,distributed}.
+    pub modules: &'a [(&'a str, &'a str)],
+    /// (path, source) of rust/src/attn/faults.rs.
+    pub faults: (&'a str, &'a str),
+    /// Source of rust/tests/io_complexity.rs.
+    pub io_test: &'a str,
+    /// Source of rust/tests/chaos.rs.
+    pub chaos_test: &'a str,
+}
+
+/// `pub fn` names (with line numbers) declared in a module source.
+fn pub_fns(src: &str) -> Vec<(String, usize)> {
+    let toks = tokenize(src);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_ident && toks[i].text == "pub" {
+            let mut j = i + 1;
+            // Skip a `(crate)`-style visibility qualifier: restricted
+            // items are not API surface, R4 covers `pub` only.
+            let restricted = j < toks.len() && toks[j].text == "(";
+            if !restricted
+                && j < toks.len()
+                && toks[j].is_ident
+                && toks[j].text == "fn"
+                && j + 1 < toks.len()
+                && toks[j + 1].is_ident
+            {
+                j += 1;
+                out.push((toks[j].text.clone(), toks[j].line));
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Identifier set of a source file (membership queries only — ordering
+/// never leaves this function, so no iteration-order hazard).
+fn ident_set(src: &str) -> BTreeSet<String> {
+    tokenize(src).into_iter().filter(|t| t.is_ident).map(|t| t.text).collect()
+}
+
+/// Variants of `enum FaultSite` with their lines.
+fn fault_site_variants(src: &str) -> Vec<(String, usize)> {
+    let toks = tokenize(src);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if toks[i].is_ident && toks[i].text == "enum" && toks[i + 1].text == "FaultSite" {
+            // Collect depth-1 identifiers of the brace block (variants
+            // are bare idents; derives/attrs live outside the block).
+            let mut j = i + 2;
+            while j < toks.len() && toks[j].text != "{" {
+                j += 1;
+            }
+            let mut depth = 0;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {
+                        if depth == 1 && toks[j].is_ident {
+                            out.push((toks[j].text.clone(), toks[j].line));
+                        }
+                    }
+                }
+                j += 1;
+            }
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// R4: coverage cross-reference (see module docs).
+pub fn check_r4(inputs: &R4Inputs<'_>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let io_names = ident_set(inputs.io_test);
+    let chaos_names = ident_set(inputs.chaos_test);
+
+    for (path, src) in inputs.modules {
+        let fns = pub_fns(src);
+        let local: BTreeSet<&str> = fns.iter().map(|(n, _)| n.as_str()).collect();
+        let needs_twin = path.ends_with("batched.rs") || path.ends_with("distributed.rs");
+        for (name, line) in &fns {
+            if !(name.contains("forward") || name.contains("backward")) {
+                continue;
+            }
+            if name.ends_with("_checked") {
+                continue; // its base entry carries the requirements
+            }
+            if !io_names.contains(name) {
+                findings.push(Finding {
+                    rule: "R4",
+                    path: path.to_string(),
+                    line: *line,
+                    message: format!(
+                        "`pub fn {name}` is not exercised by name in \
+                         rust/tests/io_complexity.rs"
+                    ),
+                    hint: "add an IO-exactness test asserting its measured HBM traffic \
+                           against a sim::cost closed form"
+                        .into(),
+                });
+            }
+            if needs_twin && !local.contains(format!("{name}_checked").as_str()) {
+                findings.push(Finding {
+                    rule: "R4",
+                    path: path.to_string(),
+                    line: *line,
+                    message: format!(
+                        "batched/sharded entry `pub fn {name}` has no `{name}_checked` twin"
+                    ),
+                    hint: "add a _checked twin returning Result<(_, FaultReport), AttnError> \
+                           through run_pool_guarded"
+                        .into(),
+                });
+            }
+        }
+    }
+
+    let (faults_path, faults_src) = inputs.faults;
+    for (variant, line) in fault_site_variants(faults_src) {
+        if !chaos_names.contains(&variant) {
+            findings.push(Finding {
+                rule: "R4",
+                path: faults_path.to_string(),
+                line,
+                message: format!(
+                    "FaultSite::{variant} is never injected in rust/tests/chaos.rs"
+                ),
+                hint: "add a chaos test driving this site through a _checked entry with \
+                       FaultPlan::none().with(site, item, attempt, kind)"
+                    .into(),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------
+// Fixture-driven rule tests (satellite: rules can't silently rot)
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn r1_fires_on_flag_fixture_and_passes_on_pass_fixture() {
+        let flag = include_str!("../fixtures/r1_flag.rs");
+        let pass = include_str!("../fixtures/r1_pass.rs");
+        let f = scan_file("rust/src/attn/fixture.rs", flag);
+        assert!(rules_of(&f).contains(&"R1"), "must flag: {f:?}");
+        assert!(f.iter().all(|x| x.rule == "R1"), "{f:?}");
+        let p = scan_file("rust/src/attn/fixture.rs", pass);
+        assert!(p.is_empty(), "must pass: {p:?}");
+    }
+
+    #[test]
+    fn r1_exempts_the_pool_itself_but_only_there() {
+        let src = "pub fn run_pool_guarded() { std::thread::scope(|s| { s; }); }\n\
+                   pub fn other() { std::thread::scope(|s| { s; }); }\n";
+        let f = scan_file("rust/src/attn/batched.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        // The same source outside batched.rs is flagged twice.
+        let f = scan_file("rust/src/attn/other.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn r2_fires_on_flag_fixture_and_passes_on_pass_fixture() {
+        let flag = include_str!("../fixtures/r2_flag.rs");
+        let pass = include_str!("../fixtures/r2_pass.rs");
+        let f = scan_file("rust/src/sim/fixture.rs", flag);
+        let rules = rules_of(&f);
+        assert!(rules.contains(&"R2"), "must flag: {f:?}");
+        assert!(f.len() >= 3, "HashMap + Instant::now + SystemTime all flagged: {f:?}");
+        let p = scan_file("rust/src/sim/fixture.rs", pass);
+        assert!(p.is_empty(), "must pass: {p:?}");
+        // Out of scope (coordinator/) the same hazards are not R2's business.
+        assert!(scan_file("rust/src/coordinator/fixture.rs", flag).is_empty());
+        // The built-in allowlist file is exempt.
+        assert!(scan_file("rust/src/runtime/exec.rs", flag).is_empty());
+    }
+
+    #[test]
+    fn r3_fires_on_flag_fixture_and_passes_on_pass_fixture() {
+        let flag = include_str!("../fixtures/r3_flag.rs");
+        let pass = include_str!("../fixtures/r3_pass.rs");
+        let f = scan_file("rust/src/tensor/fixture.rs", flag);
+        assert!(rules_of(&f).contains(&"R3"), "must flag: {f:?}");
+        let p = scan_file("rust/src/tensor/fixture.rs", pass);
+        assert!(p.is_empty(), "must pass: {p:?}");
+    }
+
+    #[test]
+    fn r4_fires_on_flag_fixtures_and_passes_on_pass_fixtures() {
+        let module_flag = include_str!("../fixtures/r4_flag_module.rs");
+        let module_pass = include_str!("../fixtures/r4_pass_module.rs");
+        let io_test = include_str!("../fixtures/r4_io_test.rs");
+        let chaos_test = include_str!("../fixtures/r4_chaos_test.rs");
+        let faults_flag = include_str!("../fixtures/r4_flag_faults.rs");
+        let faults_pass = include_str!("../fixtures/r4_pass_faults.rs");
+
+        let flag = check_r4(&R4Inputs {
+            modules: &[("rust/src/attn/batched.rs", module_flag)],
+            faults: ("rust/src/attn/faults.rs", faults_flag),
+            io_test,
+            chaos_test,
+        });
+        let msgs: Vec<&str> = flag.iter().map(|f| f.message.as_str()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("widget_forward") && m.contains("io_complexity")),
+            "missing io coverage must flag: {msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("no `widget_forward_checked` twin")),
+            "missing _checked twin must flag: {msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("FaultSite::GadgetFwd")),
+            "uninjected FaultSite must flag: {msgs:?}"
+        );
+
+        let pass = check_r4(&R4Inputs {
+            modules: &[("rust/src/attn/batched.rs", module_pass)],
+            faults: ("rust/src/attn/faults.rs", faults_pass),
+            io_test,
+            chaos_test,
+        });
+        assert!(pass.is_empty(), "must pass: {pass:?}");
+    }
+
+    #[test]
+    fn pragma_suppresses_exactly_its_rule_on_adjacent_line() {
+        let src = "// lint::allow(R1, fixture reason)\n\
+                   pub fn f() { std::thread::scope(|s| { s; }); }\n";
+        let (pragmas, errs) = parse_pragmas("p.rs", src);
+        assert!(errs.is_empty(), "{errs:?}");
+        let findings = scan_file("rust/src/attn/p.rs", src);
+        assert_eq!(findings.len(), 1);
+        let after = apply_pragmas("p.rs", findings, &pragmas);
+        assert!(after.is_empty(), "{after:?}");
+        // A pragma for the wrong rule suppresses nothing and is
+        // reported as unused.
+        let src2 = "// lint::allow(R2, fixture reason)\n\
+                    pub fn f() { std::thread::scope(|s| { s; }); }\n";
+        let (pragmas2, _) = parse_pragmas("p.rs", src2);
+        let after2 = apply_pragmas("p.rs", scan_file("rust/src/attn/p.rs", src2), &pragmas2);
+        assert_eq!(after2.len(), 2, "{after2:?}");
+        assert!(after2.iter().any(|f| f.rule == "R1"));
+        assert!(after2.iter().any(|f| f.message.contains("unused lint::allow")));
+    }
+
+    #[test]
+    fn pragma_without_reason_is_a_finding() {
+        let (pragmas, errs) = parse_pragmas("p.rs", "// lint::allow(R1)\n");
+        assert!(pragmas.is_empty());
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].message.contains("no reason"), "{errs:?}");
+    }
+
+    #[test]
+    fn comments_strings_and_lifetimes_never_trip_rules() {
+        let src = r##"
+// std::thread::spawn in a comment
+/* nested /* std::thread::scope */ unsafe */
+pub fn f<'scope>(x: &'scope str) -> String {
+    let s = "std::thread::spawn unsafe HashMap";
+    let r = r#"SystemTime Instant::now"#;
+    let c = '"';
+    let lt: &'static str = "x";
+    format!("{s}{r}{c}{lt}")
+}
+"##;
+        let f = scan_file("rust/src/attn/clean.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

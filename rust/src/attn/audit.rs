@@ -1,0 +1,217 @@
+//! Deterministic race auditor for the work pool (`--features audit`).
+//!
+//! The execution plane's signature rule — *workers race for work items,
+//! never for output slots* — is what makes every schedule bitwise
+//! worker-count independent. This module turns that rule from a comment
+//! into a checked property. Under the `audit` feature,
+//! `attn::batched::run_pool`/`run_pool_guarded` call in here to enforce,
+//! for every pool run:
+//!
+//! * **(a) Slot disjointness** — each work item declares the output
+//!   windows it owns ([`PoolItem::claims`]); no two items of one run may
+//!   claim overlapping memory. Checked before any worker spawns; a
+//!   violation panics with both items' provenance.
+//! * **(b) Worker-count-invariant item→slot mapping** — each run can be
+//!   recorded as an address-free [`PoolRun`] fingerprint (item index,
+//!   `(slice, block)` id, and per-field window *lengths*). The mapping
+//!   from items to slots is pure partition geometry, so the fingerprint
+//!   must be identical no matter how many workers (or shards, for the
+//!   ring schedule's row-block items) execute the run. Tests replay a
+//!   workload across worker counts and assert recorded-run equality.
+//! * **(c) Exactly-once commits** — the pool counts `Disposal::Commit`s
+//!   per item; on a successful run every item must have committed exactly
+//!   once (faulted attempts are retries, not commits). Checked at pool
+//!   exit, panicking on violation.
+//!
+//! Everything here is compiled only under `--features audit`; the plain
+//! build pays zero cost (the guardrail bench section is unchanged).
+//!
+//! Lengths, not addresses, make the fingerprint: window base addresses
+//! differ between runs (fresh allocations), but a schedule that changed
+//! its partition geometry with the worker count — e.g. the per-worker
+//! `chunk = t_r.div_ceil(w)` windows the pool replaced — would change
+//! the per-item window lengths or the item list itself, and the
+//! fingerprints would diverge.
+
+use std::sync::Mutex;
+
+use super::faults::FaultSite;
+
+/// One output window a work item claims: a field tag (`"o"`, `"lse"`,
+/// `"dq"`, `"dk"`, `"dv"`), the window's base address, and its length in
+/// elements. The address witnesses within-run disjointness; the (tag,
+/// length) pair enters the cross-run fingerprint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SlotClaim {
+    pub field: &'static str,
+    pub addr: usize,
+    pub len: usize,
+}
+
+impl SlotClaim {
+    /// Claim over a window of `f32` output slots.
+    pub fn of(field: &'static str, win: &[f32]) -> SlotClaim {
+        SlotClaim { field, addr: win.as_ptr() as usize, len: win.len() }
+    }
+
+    fn end(&self) -> usize {
+        self.addr + self.len * std::mem::size_of::<f32>()
+    }
+}
+
+/// The claim manifest of one work item, as collected by the pool before
+/// any worker spawns.
+#[derive(Clone, Debug)]
+pub struct ItemClaims {
+    /// Queue index (the fault plan's item coordinate).
+    pub idx: usize,
+    /// `(slice, block)` provenance from [`PoolItem::id`].
+    pub id: (usize, usize),
+    pub claims: Vec<SlotClaim>,
+}
+
+/// Address-free fingerprint of one recorded pool run: the site plus, per
+/// item, its index, id, and `(field, len)` shape of every claimed
+/// window. Two runs of the same workload — any worker count, any shard
+/// count on the ring schedule — must record equal `PoolRun`s.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PoolRun {
+    /// Site of the pool invocation.
+    pub site: FaultSite,
+    pub items: Vec<(usize, (usize, usize), Vec<(&'static str, usize)>)>,
+}
+
+/// Check (a): no two items of one run claim overlapping slots. Returns
+/// the offending pair's provenance on violation. Pure function so the
+/// must-flag case is unit-testable without tripping the pool's panic.
+pub fn check_disjoint(items: &[ItemClaims]) -> Result<(), String> {
+    let mut spans: Vec<(usize, usize, usize, (usize, usize))> = Vec::new();
+    for it in items {
+        for c in &it.claims {
+            if c.len > 0 {
+                spans.push((c.addr, c.end(), it.idx, it.id));
+            }
+        }
+    }
+    spans.sort_unstable();
+    for w in spans.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        if b.0 < a.1 {
+            return Err(format!(
+                "items {} (slice {}, block {}) and {} (slice {}, block {}) claim \
+                 overlapping output slots",
+                a.2, a.3 .0, a.3 .1, b.2, b.3 .0, b.3 .1
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Global recording registry. Recording is off by default so long
+/// processes under `--features audit` (e.g. the full test binaries) do
+/// not accumulate fingerprints they never read; the disjointness and
+/// exactly-once checks always run regardless.
+static RUNS: Mutex<Vec<PoolRun>> = Mutex::new(Vec::new());
+static RECORDING: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+fn lock_runs() -> std::sync::MutexGuard<'static, Vec<PoolRun>> {
+    RUNS.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Start recording pool-run fingerprints (clears any prior recording).
+pub fn start_recording() {
+    lock_runs().clear();
+    RECORDING.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Stop recording and drain the fingerprints, in pool-invocation order.
+pub fn stop_recording() -> Vec<PoolRun> {
+    RECORDING.store(false, std::sync::atomic::Ordering::SeqCst);
+    std::mem::take(&mut *lock_runs())
+}
+
+/// Pool hook: enforce (a) and, if recording, append this run's
+/// fingerprint. Called by `run_pool_guarded` with the manifest built in
+/// queue order, before any worker spawns.
+pub(crate) fn check_and_record(site: FaultSite, items: &[ItemClaims]) {
+    if let Err(e) = check_disjoint(items) {
+        panic!("audit[{site}]: {e}");
+    }
+    if RECORDING.load(std::sync::atomic::Ordering::SeqCst) {
+        lock_runs().push(PoolRun {
+            site,
+            items: items
+                .iter()
+                .map(|it| {
+                    (it.idx, it.id, it.claims.iter().map(|c| (c.field, c.len)).collect())
+                })
+                .collect(),
+        });
+    }
+}
+
+/// Pool hook for check (c): on a successful run, every item committed
+/// exactly once.
+pub(crate) fn check_commits(site: FaultSite, commits: &[u32]) {
+    for (idx, &n) in commits.iter().enumerate() {
+        assert!(n == 1, "audit[{site}]: item {idx} committed {n} times (expected exactly once)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sentinel field tag no kernel ever claims: lets the recording test
+    // filter out pool runs from other tests sharing this binary.
+    const TEST_FIELD: &str = "audit-test";
+
+    fn item(idx: usize, addr: usize, len: usize) -> ItemClaims {
+        ItemClaims { idx, id: (idx, 0), claims: vec![SlotClaim { field: TEST_FIELD, addr, len }] }
+    }
+
+    #[test]
+    fn disjoint_claims_pass() {
+        // Adjacent windows (end == next start) are disjoint.
+        assert!(check_disjoint(&[item(0, 0, 4), item(1, 16, 4), item(2, 32, 0)]).is_ok());
+    }
+
+    #[test]
+    fn overlapping_claims_flagged_with_provenance() {
+        let err = check_disjoint(&[item(0, 0, 4), item(1, 12, 4)]).unwrap_err();
+        assert!(err.contains("items 0"), "{err}");
+        assert!(err.contains("and 1"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_claims_never_overlap() {
+        // Empty windows share addresses freely (split_windows on an
+        // empty tail yields zero-length slices at the same pointer).
+        assert!(check_disjoint(&[item(0, 8, 0), item(1, 8, 0), item(2, 8, 1)]).is_ok());
+    }
+
+    /// Keep only this test's own runs: other tests in the binary may
+    /// drive real pools while recording is on, appending fingerprints
+    /// with kernel field tags ("o", "lse", "dq", …) — never the sentinel.
+    fn own(runs: Vec<PoolRun>) -> Vec<PoolRun> {
+        runs.into_iter()
+            .filter(|r| r.items.iter().all(|(_, _, c)| c.iter().all(|&(f, _)| f == TEST_FIELD)))
+            .collect()
+    }
+
+    #[test]
+    fn recording_round_trips_in_invocation_order() {
+        start_recording();
+        check_and_record(FaultSite::BatchedFwd, &[item(0, 0, 4)]);
+        check_and_record(FaultSite::BatchedDq, &[item(0, 64, 2)]);
+        let runs = own(stop_recording());
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].site, FaultSite::BatchedFwd);
+        assert_eq!(runs[0].items, vec![(0usize, (0usize, 0usize), vec![(TEST_FIELD, 4usize)])]);
+        // Address-free: a second recording at different addresses is equal.
+        start_recording();
+        check_and_record(FaultSite::BatchedFwd, &[item(0, 4096, 4)]);
+        check_and_record(FaultSite::BatchedDq, &[item(0, 8192, 2)]);
+        assert_eq!(own(stop_recording()), runs);
+    }
+}

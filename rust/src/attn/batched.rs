@@ -155,6 +155,10 @@ struct PoolState<T> {
     in_flight: usize,
     error: Option<AttnError>,
     report: FaultReport,
+    /// Audit check (c): per-item commit counts — every item must commit
+    /// exactly once on a successful run (retries are not commits).
+    #[cfg(feature = "audit")]
+    commits: Vec<u32>,
 }
 
 /// How a finished attempt is disposed of (classified outside the lock —
@@ -207,6 +211,20 @@ where
     if items.is_empty() {
         return Ok(FaultReport::default());
     }
+    // Audit check (a): every item's claimed output windows are disjoint,
+    // verified (and optionally fingerprinted) before any worker spawns —
+    // workers race for items, never for output slots.
+    #[cfg(feature = "audit")]
+    let n_items = items.len();
+    #[cfg(feature = "audit")]
+    {
+        let manifest: Vec<super::audit::ItemClaims> = items
+            .iter()
+            .enumerate()
+            .map(|(idx, it)| super::audit::ItemClaims { idx, id: it.id(), claims: it.claims() })
+            .collect();
+        super::audit::check_and_record(site, &manifest);
+    }
     let w = workers.max(1).min(items.len());
     let state = Mutex::new(PoolState {
         queue: items
@@ -217,6 +235,8 @@ where
         in_flight: 0,
         error: None,
         report: FaultReport::default(),
+        #[cfg(feature = "audit")]
+        commits: vec![0; n_items],
     });
     let ready = Condvar::new();
     // A contained panic can poison the mutex between lock() and the
@@ -318,6 +338,10 @@ where
                     st.in_flight -= 1;
                     match disposal {
                         Disposal::Commit { delayed } => {
+                            #[cfg(feature = "audit")]
+                            {
+                                st.commits[t.idx] += 1;
+                            }
                             if delayed {
                                 st.report.delayed += 1;
                             }
@@ -385,7 +409,13 @@ where
     let mut st = lock();
     match st.error.take() {
         Some(e) => Err(e),
-        None => Ok(std::mem::take(&mut st.report)),
+        None => {
+            // Audit check (c): success means every output window was
+            // committed by exactly one attempt.
+            #[cfg(feature = "audit")]
+            super::audit::check_commits(site, &st.commits);
+            Ok(std::mem::take(&mut st.report))
+        }
     }
 }
 
@@ -445,6 +475,11 @@ impl PoolItem for FwdItem<'_> {
         self.o_win.fill(f32::NAN);
         self.lse_win.fill(f32::NAN);
     }
+    #[cfg(feature = "audit")]
+    fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
+        use crate::attn::audit::SlotClaim;
+        vec![SlotClaim::of("o", self.o_win), SlotClaim::of("lse", self.lse_win)]
+    }
 }
 
 /// One (slice, row block) dQ work item.
@@ -466,6 +501,10 @@ impl PoolItem for DqItem<'_> {
     }
     fn poison(&mut self) {
         self.dq_win.fill(f32::NAN);
+    }
+    #[cfg(feature = "audit")]
+    fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
+        vec![crate::attn::audit::SlotClaim::of("dq", self.dq_win)]
     }
 }
 
@@ -491,6 +530,11 @@ impl PoolItem for DkvItem<'_> {
     fn poison(&mut self) {
         self.dk_win.fill(f32::NAN);
         self.dv_win.fill(f32::NAN);
+    }
+    #[cfg(feature = "audit")]
+    fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
+        use crate::attn::audit::SlotClaim;
+        vec![SlotClaim::of("dk", self.dk_win), SlotClaim::of("dv", self.dv_win)]
     }
 }
 

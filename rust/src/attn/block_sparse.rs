@@ -30,6 +30,8 @@
 //! access-for-access in `rust/tests/io_complexity.rs`, and traffic is
 //! strictly decreasing in the number of live blocks (Proposition 4).
 
+use super::batched::{block_rows, run_pool, split_windows, DkvItem, DqItem, FwdItem};
+use super::faults::FaultSite;
 use super::flash::{tile_fully_unmasked, Blocks};
 use super::flash2::{
     dkv_col_sweep_filtered, stream_kv_dq_filtered, stream_kv_filtered, write_epilogue,
@@ -222,30 +224,40 @@ pub fn block_sparse2_forward(
     let tile_base = mask_tile_base(cfg.kv_offset, blocks.b_c);
     check_mask_geometry(mask, t_r, tile_base, n_k.div_ceil(blocks.b_c));
 
-    let w = workers.max(1).min(t_r);
-    let chunk = t_r.div_ceil(w);
     let (qd, kd, vd) = (q.data.as_slice(), k.data.as_slice(), v.data.as_slice());
 
-    std::thread::scope(|scope| {
-        // Disjoint contiguous per-worker windows, exactly the dense
-        // kernel's partition (attn::flash2::flash2_forward).
-        let o_chunks = o.data.chunks_mut(chunk * b_r * d);
-        let lse_chunks = lse.chunks_mut(chunk * b_r);
-        let mut handles = Vec::new();
-        for (wi, (o_mine, lse_mine)) in o_chunks.zip(lse_chunks).enumerate() {
-            let rb_lo = wi * chunk;
-            let rb_hi = ((wi + 1) * chunk).min(t_r);
-            handles.push(scope.spawn(move || {
-                sparse_row_block_sweep(
-                    qd, kd, vd, n, n_k, d, mask, tile_base, cfg, blocks, tau, kv_limit, rb_lo,
-                    rb_hi, o_mine, lse_mine,
-                )
-            }));
-        }
-        for h in handles {
-            let local = h.join().expect("block_sparse2 worker panicked");
-            hbm.merge(&local);
-        }
+    // One work item per Q row block through the shared fault-tolerant
+    // pool (invariant R1): disjoint O/lse windows, self-contained
+    // per-block arithmetic, so output and traffic are bitwise identical
+    // to the per-worker chunk partition this replaces — for any worker
+    // count — and the audit feature covers the partition.
+    let o_wins = split_windows(&mut o.data, (0..t_r).map(|rb| block_rows(rb, b_r, n) * d));
+    let lse_wins = split_windows(&mut lse, (0..t_r).map(|rb| block_rows(rb, b_r, n)));
+    let items: Vec<FwdItem<'_>> = o_wins
+        .into_iter()
+        .zip(lse_wins)
+        .enumerate()
+        .map(|(rb, (o_win, lse_win))| FwdItem { s: 0, rb, o_win, lse_win })
+        .collect();
+    run_pool(items, workers, hbm, FaultSite::SparseFwd, |it| {
+        sparse_row_block_sweep(
+            qd,
+            kd,
+            vd,
+            n,
+            n_k,
+            d,
+            mask,
+            tile_base,
+            cfg,
+            blocks,
+            tau,
+            kv_limit,
+            it.rb,
+            it.rb + 1,
+            it.o_win,
+            it.lse_win,
+        )
     });
 
     Flash2Output { o, lse }
@@ -374,68 +386,66 @@ pub fn block_sparse2_backward(
     let (qd, kd, vd, dod) =
         (q.data.as_slice(), k.data.as_slice(), v.data.as_slice(), dout.data.as_slice());
 
-    // Phase 1: dQ with a Q-outer sweep over disjoint per-worker windows.
-    let w = workers.max(1).min(t_r);
-    let chunk = t_r.div_ceil(w);
-    std::thread::scope(|scope| {
-        let dq_chunks = dq.data.chunks_mut(chunk * b_r * d);
-        let mut handles = Vec::new();
-        for (wi, dq_mine) in dq_chunks.enumerate() {
-            let rb_lo = wi * chunk;
-            let rb_hi = ((wi + 1) * chunk).min(t_r);
-            let (lse, d_vec) = (&lse, &d_vec);
-            handles.push(scope.spawn(move || {
-                sparse_dq_row_sweep(
-                    qd, kd, vd, dod, lse, d_vec, n, n_k, d, mask, tile_base, cfg, blocks, tau,
-                    kv_limit, rb_lo, rb_hi, dq_mine,
-                )
-            }));
-        }
-        for h in handles {
-            let local = h.join().expect("block_sparse2_backward dQ worker panicked");
-            hbm.merge(&local);
-        }
+    // Phase 1: dQ with a Q-outer sweep, one work item per row block
+    // through the shared fault-tolerant pool (invariant R1) — bitwise
+    // identical to the per-worker chunk partition it replaces.
+    let dq_wins = split_windows(&mut dq.data, (0..t_r).map(|rb| block_rows(rb, b_r, n) * d));
+    let dq_items: Vec<DqItem<'_>> =
+        dq_wins.into_iter().enumerate().map(|(rb, dq_win)| DqItem { s: 0, rb, dq_win }).collect();
+    run_pool(dq_items, workers, hbm, FaultSite::SparseDq, |it| {
+        sparse_dq_row_sweep(
+            qd,
+            kd,
+            vd,
+            dod,
+            &lse,
+            &d_vec,
+            n,
+            n_k,
+            d,
+            mask,
+            tile_base,
+            cfg,
+            blocks,
+            tau,
+            kv_limit,
+            it.rb,
+            it.rb + 1,
+            it.dq_win,
+        )
     });
 
-    // Phase 2: dK/dV with the column-block-parallel sweep; the filter
-    // skips a zero block's whole Q/dO stream.
-    let w = workers.max(1).min(t_c);
-    let chunk = t_c.div_ceil(w);
-    std::thread::scope(|scope| {
-        let dk_chunks = dk.data.chunks_mut(chunk * b_c * d);
-        let dv_chunks = dv.data.chunks_mut(chunk * b_c * d);
-        let mut handles = Vec::new();
-        for (wi, (dk_mine, dv_mine)) in dk_chunks.zip(dv_chunks).enumerate() {
-            let cb_lo = wi * chunk;
-            let cb_hi = ((wi + 1) * chunk).min(t_c);
-            let (lse, d_vec) = (&lse, &d_vec);
-            handles.push(scope.spawn(move || {
-                dkv_col_sweep_filtered(
-                    qd,
-                    kd,
-                    vd,
-                    dod,
-                    lse,
-                    d_vec,
-                    n,
-                    n_k,
-                    d,
-                    cfg,
-                    blocks,
-                    tau,
-                    kv_limit,
-                    cb_lo,
-                    cb_hi,
-                    dk_mine,
-                    dv_mine,
-                    |i, j| mask.get(i, tile_base + j),
-                )
-            }));
-        }
-        for h in handles {
-            let local = h.join().expect("block_sparse2_backward dK/dV worker panicked");
-            hbm.merge(&local);
-        }
+    // Phase 2: dK/dV with the column-block-parallel sweep, one item per
+    // column block; the filter skips a zero block's whole Q/dO stream.
+    let dk_wins = split_windows(&mut dk.data, (0..t_c).map(|cb| block_rows(cb, b_c, n_k) * d));
+    let dv_wins = split_windows(&mut dv.data, (0..t_c).map(|cb| block_rows(cb, b_c, n_k) * d));
+    let dkv_items: Vec<DkvItem<'_>> = dk_wins
+        .into_iter()
+        .zip(dv_wins)
+        .enumerate()
+        .map(|(cb, (dk_win, dv_win))| DkvItem { s: 0, cb, dk_win, dv_win })
+        .collect();
+    run_pool(dkv_items, workers, hbm, FaultSite::SparseDkv, |it| {
+        dkv_col_sweep_filtered(
+            qd,
+            kd,
+            vd,
+            dod,
+            &lse,
+            &d_vec,
+            n,
+            n_k,
+            d,
+            cfg,
+            blocks,
+            tau,
+            kv_limit,
+            it.cb,
+            it.cb + 1,
+            it.dk_win,
+            it.dv_win,
+            |i, j| mask.get(i, tile_base + j),
+        )
     });
 
     AttnGrads { dq, dk, dv }

@@ -431,6 +431,11 @@ impl PoolItem for RingDkvItem<'_> {
         self.dk_win.fill(f32::NAN);
         self.dv_win.fill(f32::NAN);
     }
+    #[cfg(feature = "audit")]
+    fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
+        use crate::attn::audit::SlotClaim;
+        vec![SlotClaim::of("dk", self.dk_win), SlotClaim::of("dv", self.dv_win)]
+    }
 }
 
 #[allow(clippy::too_many_arguments)]

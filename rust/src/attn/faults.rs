@@ -325,6 +325,12 @@ pub(crate) trait PoolItem: Send {
     fn check_finite(&self) -> bool;
     /// Scribble NaN over the output windows (fault injection only).
     fn poison(&mut self);
+    /// Audit-mode claim manifest: one [`SlotClaim`] per output window
+    /// this item owns. The pool checks within-run disjointness against
+    /// the claims' addresses and fingerprints their (field, length)
+    /// shape across runs — see `attn::audit`.
+    #[cfg(feature = "audit")]
+    fn claims(&self) -> Vec<crate::attn::audit::SlotClaim>;
 }
 
 /// Unwind payload of an injected [`FaultKind::WorkerPanic`]: carries the

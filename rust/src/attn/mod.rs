@@ -166,9 +166,52 @@
 //! keeps Algorithm 1's literal arithmetic and is not given special
 //! masked-row handling.
 //!
+//! # Invariant catalog (machine-checked)
+//!
+//! The determinism and IO guarantees above are enforced by `cargo run -p
+//! lint` (a token-level scanner over `rust/src`, blocking in CI) as four
+//! named rules, plus a runtime auditor. A violation is an error listing
+//! file:line and a fix hint; the only escape hatch is an explicit
+//! `// lint::allow(Rn, reason)` comment pragma on (or directly above)
+//! the offending line.
+//!
+//! * **R1 — pool routing.** No raw `std::thread::spawn` /
+//!   `std::thread::scope` outside [`batched`]'s `run_pool` /
+//!   `run_pool_guarded`. Every parallel schedule goes through the pool,
+//!   so fault containment, retry accounting and the audit hooks cover it
+//!   by construction. (The per-slice `flash2` reference kernels keep
+//!   their historical scopes under pragmas — they are the oracle the
+//!   pool is bitwise-tested against.)
+//! * **R2 — determinism hazards.** Inside `attn/`, `sim/` and
+//!   `runtime/`: no `HashMap`/`HashSet` (iteration order), no
+//!   `Instant::now`/`SystemTime` (wall clock), no
+//!   `std::thread::current`/`ThreadId` (thread-identity-dependent
+//!   branching). Built-in allowlist: `runtime/exec.rs`'s compile cache
+//!   and compile-time metric, which never touch kernel numerics.
+//! * **R3 — no unsafe.** `unsafe` is banned tree-wide, backing the
+//!   crate-level `#![forbid(unsafe_code)]`.
+//! * **R4 — coverage cross-reference.** Every `pub fn *_forward*` /
+//!   `*_backward*` in [`flash2`], [`batched`], [`block_sparse`] and
+//!   [`distributed`] must be exercised by name in the IO-exactness wall
+//!   (`rust/tests/io_complexity.rs`, against a `sim::cost` form);
+//!   batched/sharded entries must have a `_checked` twin; and every
+//!   [`faults::FaultSite`] variant must be injected somewhere in
+//!   `rust/tests/chaos.rs`. New hot paths cannot silently skip the
+//!   test walls.
+//!
+//! **Audit contract** (`--features audit`, see `attn::audit`): every
+//! pool run checks that work items claim pairwise-disjoint output
+//! windows before any worker spawns, that the address-free item→slot
+//! fingerprint is identical across worker and shard counts, and that
+//! every item commits exactly once on success — "workers race for
+//! items, never for output" as a checked property, compiled out of the
+//! plain build entirely.
+//!
 //! All functions operate on one batch*head slice `[n, d]`; callers fold the
 //! leading dims.
 
+#[cfg(feature = "audit")]
+pub mod audit;
 pub mod batched;
 pub mod block_sparse;
 pub mod distributed;

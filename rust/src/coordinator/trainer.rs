@@ -40,6 +40,7 @@ fn preflight_fast_kernel() -> Result<()> {
     static VERDICT: OnceLock<std::result::Result<(), String>> = OnceLock::new();
     let verdict = VERDICT.get_or_init(|| {
         let (tx, rx) = std::sync::mpsc::channel();
+        // lint::allow(R1, preflight watchdog: a timeout thread off the numeric path, no output slots)
         std::thread::spawn(move || {
             let _ = tx.send(flash2::self_check_report());
         });

@@ -23,6 +23,10 @@
 // tile geometry (shapes, block ranges, scratch windows) as explicit
 // arguments rather than bundling them into ad-hoc structs.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// Invariant R3 (see the catalog in `attn`): the whole tree is safe Rust.
+// The `lint` workspace member additionally scans for `unsafe` tokens so a
+// future `#[allow]` can't quietly reopen the door.
+#![forbid(unsafe_code)]
 
 pub mod attn;
 pub mod bench;

@@ -1,0 +1,261 @@
+//! Race-auditor wall (`cargo test -q -p flashattn --features audit`):
+//! machine-checks the execution plane's signature rule — *workers race
+//! for work items, never for output slots* — for every pooled schedule.
+//!
+//! For each schedule the same workload is replayed across worker counts
+//! (and, for the ring forward, shard counts) with fingerprint recording
+//! on; the recorded [`PoolRun`]s must be **equal**, proving the
+//! item→slot mapping is pure partition geometry. Slot disjointness and
+//! exactly-once commits are asserted inside the pool on every one of
+//! these runs (a violation panics), so a green wall certifies all three
+//! audit properties for the batched, block-sparse, ring and tree pools.
+
+#![cfg(feature = "audit")]
+
+use std::sync::Mutex;
+
+use flashattn::attn::audit::{self, ItemClaims, PoolRun, SlotClaim};
+use flashattn::attn::batched::{
+    block_sparse2_backward_batched, block_sparse2_forward_batched, flash2_backward_batched,
+    flash2_forward_batched,
+};
+use flashattn::attn::block_sparse::{block_sparse2_backward, block_sparse2_forward};
+use flashattn::attn::distributed::{
+    flash_backward_sharded, flash_forward_sharded, flash_forward_sharded_tree,
+};
+use flashattn::attn::flash::Blocks;
+use flashattn::attn::masks::BlockMask;
+use flashattn::attn::AttnConfig;
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+
+/// Recording drains one global registry; tests that record must not
+/// interleave with each other.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn rand(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = SplitMix64::new(seed);
+    Tensor::randn(shape, &mut rng, 1.0)
+}
+
+/// Run `f` with fingerprint recording on and drain what it recorded.
+fn record(f: impl FnOnce()) -> Vec<PoolRun> {
+    audit::start_recording();
+    f();
+    audit::stop_recording()
+}
+
+#[test]
+fn batched_mapping_is_worker_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0xA0D_1);
+    let k = rand(&[b, h, n, d], 0xA0D_2);
+    let v = rand(&[b, h, n, d], 0xA0D_3);
+    let dout = rand(&[b, h, n, d], 0xA0D_4);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+
+    let mut baseline: Option<Vec<PoolRun>> = None;
+    for workers in [1usize, 2, 5] {
+        let runs = record(|| {
+            let mut hbm = Hbm::new();
+            let _ = flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut hbm);
+            let _ = flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut hbm,
+            );
+        });
+        // One forward pool plus the two backward phases.
+        assert_eq!(runs.len(), 3, "w={workers}");
+        match &baseline {
+            None => {
+                // The fingerprint has the expected partition geometry:
+                // one forward item per (slice, row block), each claiming
+                // its O window and its lse window.
+                let t_r = n / blocks.b_r;
+                assert_eq!(runs[0].items.len(), b * h * t_r);
+                for (i, (idx, id, claims)) in runs[0].items.iter().enumerate() {
+                    assert_eq!(*idx, i);
+                    assert_eq!(*id, (i / t_r, i % t_r));
+                    assert_eq!(claims, &vec![("o", blocks.b_r * d), ("lse", blocks.b_r)]);
+                }
+                baseline = Some(runs);
+            }
+            Some(base) => assert_eq!(&runs, base, "item→slot mapping drifted at w={workers}"),
+        }
+    }
+}
+
+#[test]
+fn sparse_batched_mapping_is_worker_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (b, h, n, d) = (2usize, 1usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let (t_r, t_c) = (n / blocks.b_r, n / blocks.b_c);
+    let q = rand(&[b, h, n, d], 0x5A_1);
+    let k = rand(&[b, h, n, d], 0x5A_2);
+    let v = rand(&[b, h, n, d], 0x5A_3);
+    let dout = rand(&[b, h, n, d], 0x5A_4);
+    let mut mask = BlockMask::dense(t_r, t_c);
+    mask.set(0, 2, false);
+    mask.set(3, 1, false);
+    let masks = [mask];
+    let cfg = AttnConfig::default();
+    let fwd = block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut Hbm::new());
+
+    let mut baseline: Option<Vec<PoolRun>> = None;
+    for workers in [1usize, 2, 5] {
+        let runs = record(|| {
+            let mut hbm = Hbm::new();
+            let _ =
+                block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, workers, &mut hbm);
+            let _ = block_sparse2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, workers, &mut hbm,
+            );
+        });
+        assert_eq!(runs.len(), 3, "w={workers}");
+        match &baseline {
+            None => baseline = Some(runs),
+            Some(base) => assert_eq!(&runs, base, "item→slot mapping drifted at w={workers}"),
+        }
+    }
+}
+
+#[test]
+fn single_slice_sparse_mapping_is_worker_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (n, d) = (32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let (t_r, t_c) = (n / blocks.b_r, n / blocks.b_c);
+    let q = rand(&[n, d], 0x1B_1);
+    let k = rand(&[n, d], 0x1B_2);
+    let v = rand(&[n, d], 0x1B_3);
+    let dout = rand(&[n, d], 0x1B_4);
+    let mut mask = BlockMask::dense(t_r, t_c);
+    mask.set(1, 3, false);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let fwd = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 1, &mut Hbm::new());
+
+    let mut baseline: Option<Vec<PoolRun>> = None;
+    for workers in [1usize, 2, 5] {
+        let runs = record(|| {
+            let mut hbm = Hbm::new();
+            let _ = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut hbm);
+            let _ = block_sparse2_backward(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, workers, &mut hbm,
+            );
+        });
+        // SparseFwd, then the SparseDq and SparseDkv backward phases —
+        // the row/column-block pools that replaced the raw scopes.
+        assert_eq!(runs.len(), 3, "w={workers}");
+        match &baseline {
+            None => baseline = Some(runs),
+            Some(base) => assert_eq!(&runs, base, "item→slot mapping drifted at w={workers}"),
+        }
+    }
+}
+
+#[test]
+fn ring_forward_mapping_is_worker_and_shard_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (n, d) = (64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0x21_1);
+    let k = rand(&[n, d], 0x21_2);
+    let v = rand(&[n, d], 0x21_3);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+
+    // Ring forward items are Q row blocks streaming every live shard:
+    // the fingerprint must be invariant across worker counts *and*
+    // shard counts.
+    let mut baseline: Option<Vec<PoolRun>> = None;
+    for shards in [1usize, 2, 4] {
+        for workers in [1usize, 2, 5] {
+            let runs = record(|| {
+                let _ = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers);
+            });
+            assert_eq!(runs.len(), 1, "shards={shards} w={workers}");
+            match &baseline {
+                None => baseline = Some(runs),
+                Some(base) => {
+                    assert_eq!(&runs, base, "mapping drifted at shards={shards} w={workers}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_backward_mapping_is_worker_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (n, d, shards) = (64usize, 16usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0x3D_1);
+    let k = rand(&[n, d], 0x3D_2);
+    let v = rand(&[n, d], 0x3D_3);
+    let dout = rand(&[n, d], 0x3D_4);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+
+    let mut baseline: Option<Vec<PoolRun>> = None;
+    for workers in [1usize, 2, 5] {
+        let runs = record(|| {
+            let _ = flash_backward_sharded(
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, workers,
+            );
+        });
+        // RingDq, then RingDkv (one item per live (shard, column block)).
+        assert_eq!(runs.len(), 2, "w={workers}");
+        match &baseline {
+            None => baseline = Some(runs),
+            Some(base) => assert_eq!(&runs, base, "item→slot mapping drifted at w={workers}"),
+        }
+    }
+}
+
+#[test]
+fn tree_mapping_is_worker_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (n, d, shards) = (64usize, 16usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0x7E_1);
+    let k = rand(&[n, d], 0x7E_2);
+    let v = rand(&[n, d], 0x7E_3);
+    let cfg = AttnConfig::default();
+
+    let mut baseline: Option<Vec<PoolRun>> = None;
+    for workers in [1usize, 2, 5] {
+        let runs = record(|| {
+            let _ = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, workers);
+        });
+        // One TreePartial pool computes every (shard, row block) partial;
+        // the merge tree itself is serial arithmetic, not a pool.
+        assert_eq!(runs.len(), 1, "w={workers}");
+        match &baseline {
+            None => baseline = Some(runs),
+            Some(base) => assert_eq!(&runs, base, "item→slot mapping drifted at w={workers}"),
+        }
+    }
+}
+
+#[test]
+fn overlapping_claims_are_rejected_with_provenance() {
+    // The must-flag side of check (a), through the public pure checker:
+    // two items claiming intersecting windows is exactly the class of
+    // bug — a worker writing another item's slots — the auditor exists
+    // to catch.
+    let buf = vec![0.0f32; 8];
+    let a = ItemClaims { idx: 0, id: (0, 0), claims: vec![SlotClaim::of("o", &buf[0..6])] };
+    let b = ItemClaims { idx: 1, id: (0, 1), claims: vec![SlotClaim::of("o", &buf[4..8])] };
+    let err = audit::check_disjoint(&[a, b]).unwrap_err();
+    assert!(err.contains("items 0"), "{err}");
+    assert!(err.contains("overlapping"), "{err}");
+
+    // And the must-pass side: splitting the same buffer disjointly.
+    let (lo, hi) = buf.split_at(4);
+    let a = ItemClaims { idx: 0, id: (0, 0), claims: vec![SlotClaim::of("o", lo)] };
+    let b = ItemClaims { idx: 1, id: (0, 1), claims: vec![SlotClaim::of("o", hi)] };
+    assert!(audit::check_disjoint(&[a, b]).is_ok());
+}

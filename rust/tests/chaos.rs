@@ -14,6 +14,7 @@
 //!   provenance.
 
 use flashattn::attn::batched::{
+    block_sparse2_backward_batched, block_sparse2_backward_batched_checked,
     block_sparse2_forward_batched, block_sparse2_forward_batched_checked, flash2_backward_batched,
     flash2_backward_batched_checked, flash2_forward_batched, flash2_forward_batched_checked,
     flash2_forward_many, flash2_forward_many_checked, AttnSlice,
@@ -240,6 +241,60 @@ fn sparse_batched_forward_recovers_bitwise() {
                 assert_eq!(report.retries, 1, "{ctx}");
                 assert_fault_counters(&report, kind, 1);
                 // No dense closed form for a masked item: the retry pool
+                // traffic must still reconcile exactly with the total.
+                assert_eq!(
+                    cost::measured(&hbm),
+                    cost::measured(&clean_hbm) + report.retry_hbm.accesses(),
+                    "total = clean + retries [{ctx}]"
+                );
+                assert!(report.retry_hbm.accesses() > 0, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_batched_backward_recovers_bitwise() {
+    let (b, h, n, d) = (2usize, 1usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let (t_r, t_c) = (n / blocks.b_r, n / blocks.b_c);
+    let q = rand(&[b, h, n, d], 0x5BB_1);
+    let k = rand(&[b, h, n, d], 0x5BB_2);
+    let v = rand(&[b, h, n, d], 0x5BB_3);
+    let dout = rand(&[b, h, n, d], 0x5BB_4);
+    let mut mask = BlockMask::dense(t_r, t_c);
+    mask.set(0, 2, false);
+    mask.set(3, 1, false);
+    let masks = [mask];
+    let cfg = AttnConfig::default();
+    let fwd = block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut Hbm::new());
+    let mut clean_hbm = Hbm::new();
+    let baseline = block_sparse2_backward_batched(
+        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, 1, &mut clean_hbm,
+    );
+    for kind in ALL_KINDS {
+        // dQ pool item 5 = (s=1, rb=1); dK/dV pool item 2 = (s=0, cb=2).
+        let plan = FaultPlan::none()
+            .with(FaultSite::SparseDq, 5, 0, kind)
+            .with(FaultSite::SparseDkv, 2, 0, kind);
+        for workers in [1usize, 2, 5] {
+            let ctx = format!("kind={kind:?} w={workers}");
+            let mut hbm = Hbm::new();
+            let (grads, report) = block_sparse2_backward_batched_checked(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, workers, &mut hbm,
+                &plan,
+            )
+            .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+            assert_eq!(grads.dq.data, baseline.dq.data, "dQ not bitwise [{ctx}]");
+            assert_eq!(grads.dk.data, baseline.dk.data, "dK not bitwise [{ctx}]");
+            assert_eq!(grads.dv.data, baseline.dv.data, "dV not bitwise [{ctx}]");
+            if kind == FaultKind::DelayedShard {
+                assert_eq!(report.delayed, 2, "{ctx}");
+                assert_eq!(cost::measured(&hbm), cost::measured(&clean_hbm), "{ctx}");
+            } else {
+                assert_eq!(report.retries, 2, "{ctx}");
+                assert_fault_counters(&report, kind, 2);
+                // Masked items have no dense closed form; the retry pool
                 // traffic must still reconcile exactly with the total.
                 assert_eq!(
                     cost::measured(&hbm),
