@@ -9,6 +9,7 @@
 use std::path::Path;
 
 use anyhow::Result;
+use flashattn::attn::Exec;
 use flashattn::coordinator::tasks::run_task;
 use flashattn::data::longdoc::{expected_evidence_fraction, LongDoc};
 use flashattn::runtime::Runtime;
@@ -17,6 +18,8 @@ use flashattn::util::table::Table;
 fn main() -> Result<()> {
     let steps: usize = std::env::var("STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(120);
     let mut rt = Runtime::cpu(Path::new("artifacts"))?;
+    // One persistent pool reused across all four context lengths.
+    let exec = Exec::new(4);
     let ds = LongDoc { doc_len: 512, n_evidence: 8 };
 
     let mut t = Table::new(
@@ -26,7 +29,7 @@ fn main() -> Result<()> {
     let mut accs = Vec::new();
     for (tag, ctx) in [("longdoc_ctx64", 64usize), ("longdoc_ctx128", 128),
                         ("longdoc_ctx256", 256), ("longdoc_ctx512", 512)] {
-        let res = run_task(&mut rt, tag, &ds, steps, 99)?;
+        let res = run_task(&mut rt, tag, &ds, steps, 99, &exec)?;
         accs.push(res.accuracy);
         t.row(vec![
             ctx.to_string(),

@@ -8,6 +8,7 @@
 use std::path::Path;
 
 use anyhow::Result;
+use flashattn::attn::Exec;
 use flashattn::coordinator::tasks::{chance_accuracy, run_task};
 use flashattn::data::batch::ClsDataset;
 use flashattn::data::pathfinder::Pathfinder;
@@ -51,7 +52,8 @@ fn main() -> Result<()> {
     );
 
     let mut rt = Runtime::cpu(Path::new("artifacts"))?;
-    let res = run_task(&mut rt, tag, &ds, steps, 17)?;
+    let exec = Exec::new(4);
+    let res = run_task(&mut rt, tag, &ds, steps, 17, &exec)?;
     println!(
         "pathfinder seq={} ({}x{} grid): accuracy {:.3} vs chance {:.3} after {} steps \
          ({:.0} ms/step)",

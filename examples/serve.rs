@@ -8,6 +8,7 @@
 use std::path::Path;
 
 use anyhow::Result;
+use flashattn::attn::Exec;
 use flashattn::coordinator::server::Server;
 use flashattn::coordinator::{LmTrainer, TrainConfig};
 use flashattn::data::corpus::Corpus;
@@ -26,7 +27,8 @@ fn main() -> Result<()> {
         eval_every: warm.max(1),
         ..Default::default()
     };
-    let mut tr = LmTrainer::new(&mut rt, cfg)?;
+    let exec = Exec::new(4);
+    let mut tr = LmTrainer::new(&mut rt, cfg, &exec)?;
     println!("warming the model: {warm} training steps ...");
     tr.train(&mut rt, &corpus)?;
 

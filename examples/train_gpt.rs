@@ -12,6 +12,7 @@
 use std::path::Path;
 
 use anyhow::Result;
+use flashattn::attn::Exec;
 use flashattn::coordinator::{LmTrainer, TrainConfig};
 use flashattn::data::corpus::Corpus;
 use flashattn::runtime::Runtime;
@@ -34,7 +35,8 @@ fn main() -> Result<()> {
         eval_every: (steps / 10).max(1),
         seed: 7,
     };
-    let mut tr = LmTrainer::new(&mut rt, cfg)?;
+    let exec = Exec::new(4);
+    let mut tr = LmTrainer::new(&mut rt, cfg, &exec)?;
     println!("parameters: {}", tr.n_params());
 
     let (first, last) = tr.train(&mut rt, &corpus)?;
@@ -65,7 +67,7 @@ fn main() -> Result<()> {
             seed: 7,
             ..Default::default()
         };
-        let mut t2 = LmTrainer::new(&mut rt, cfg)?;
+        let mut t2 = LmTrainer::new(&mut rt, cfg, &exec)?;
         t2.train(&mut rt, &corpus)?;
         curves.push(t2.metrics.points.iter().map(|p| p.loss).collect::<Vec<_>>());
     }

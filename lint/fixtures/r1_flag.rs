@@ -1,4 +1,4 @@
-// R1 must-flag: a raw thread scope outside attn::batched::run_pool.
+// R1 must-flag: a raw thread scope outside the attn::exec runtime.
 pub fn rogue_parallel_sweep(xs: &mut [f32]) {
     std::thread::scope(|scope| {
         for chunk in xs.chunks_mut(8) {

@@ -1,7 +1,10 @@
-// R1 must-pass: parallel work routed through the shared pool; mentions
+// R1 must-pass: parallel work routed through an Exec handle; mentions
 // of std::thread::scope in comments or strings never count.
-pub fn pooled_sweep(items: Vec<FwdItem<'_>>, workers: usize, hbm: &mut Hbm) {
-    let why = "the pool replaced std::thread::scope here";
+pub fn pooled_sweep(items: Vec<FwdItem>, exec: &Exec, hbm: &mut Hbm) -> Vec<FwdItem> {
+    let why = "the Exec runtime replaced std::thread::scope here";
     let _ = why;
-    run_pool(items, workers, hbm, FaultSite::BatchedFwd, |it| sweep_one(it.rb, it.o_win));
+    let (done, _report) = exec
+        .run(items, FaultSite::BatchedFwd, hbm, |it| sweep_one(it))
+        .expect("fault-free");
+    done
 }

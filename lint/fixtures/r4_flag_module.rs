@@ -1,6 +1,12 @@
 // R4 must-flag module (treated as attn/batched.rs): a public forward
-// entry with no IO-exactness coverage and no _checked twin.
-pub fn widget_forward(q: &Tensor, hbm: &mut Hbm) -> Tensor {
+// entry with no IO-exactness coverage that takes a bare worker count
+// instead of an Exec handle, and a covered entry missing the handle.
+pub fn widget_forward(q: &Tensor, workers: usize, hbm: &mut Hbm) -> Tensor {
+    let _ = (workers, hbm);
+    q.clone()
+}
+
+pub fn gadget_forward(q: &Tensor, hbm: &mut Hbm) -> Tensor {
     let _ = hbm;
     q.clone()
 }

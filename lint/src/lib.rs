@@ -7,7 +7,9 @@
 //! named rules:
 //!
 //! * **R1** — pool routing: no raw `std::thread::spawn`/`std::thread::scope`
-//!   outside `attn::batched::run_pool`/`run_pool_guarded`.
+//!   outside the persistent runtime's two sanctioned sites,
+//!   `attn::exec::spawn_worker` (parked pool workers) and
+//!   `attn::exec::run_scoped` (the per-call scoped oracle).
 //! * **R2** — determinism hazards in `attn/`, `sim/`, `runtime/`:
 //!   `HashMap`/`HashSet`, `Instant::now`/`SystemTime`,
 //!   `std::thread::current`/`ThreadId`. Built-in allowlist:
@@ -18,8 +20,10 @@
 //! * **R4** — coverage cross-reference: every `pub fn *_forward*` /
 //!   `*_backward*` in `attn::{flash2,batched,block_sparse,distributed}`
 //!   is named in the IO-exactness wall (`rust/tests/io_complexity.rs`),
-//!   batched/sharded entries have a `_checked` twin, and every
-//!   `FaultSite` variant is injected in `rust/tests/chaos.rs`.
+//!   batched/sharded entries take an `Exec` execution handle rather
+//!   than a bare `workers: usize` (deprecated `_checked` shims are the
+//!   one sanctioned exception), and every `FaultSite` variant is
+//!   injected in `rust/tests/chaos.rs`.
 //!
 //! Escape hatch: a `// lint::allow(Rn, reason)` comment pragma on the
 //! offending line or the line directly above suppresses that rule there
@@ -329,16 +333,17 @@ pub fn scan_file(path: &str, src: &str) -> Vec<Finding> {
     let toks = tokenize(src);
     let mut findings = Vec::new();
 
-    // Enclosing-fn tracking for the R1 built-in exemption: the single
-    // legitimate scope lives inside attn::batched::run_pool_guarded.
+    // Enclosing-fn tracking for the R1 built-in exemption: the two
+    // legitimate sites live in attn::exec — spawn_worker (parked pool
+    // workers) and run_scoped (the per-call scoped oracle).
     let mut brace_fns: Vec<Option<String>> = Vec::new();
     let mut pending_fn: Option<String> = None;
-    let in_pool = |brace_fns: &[Option<String>]| {
+    let in_exec_runtime = |brace_fns: &[Option<String>]| {
         brace_fns
             .iter()
             .rev()
             .find_map(|e| e.as_deref())
-            .is_some_and(|f| f == "run_pool" || f == "run_pool_guarded")
+            .is_some_and(|f| f == "spawn_worker" || f == "run_scoped")
     };
 
     for i in 0..toks.len() {
@@ -363,7 +368,7 @@ pub fn scan_file(path: &str, src: &str) -> Vec<Finding> {
             && t.text == "thread"
             && (path_at(&toks, i, &["thread", "spawn"]) || path_at(&toks, i, &["thread", "scope"]))
         {
-            let exempt = path.ends_with("attn/batched.rs") && in_pool(&brace_fns);
+            let exempt = path.ends_with("attn/exec.rs") && in_exec_runtime(&brace_fns);
             if !exempt {
                 let what = if path_at(&toks, i, &["thread", "spawn"]) { "spawn" } else { "scope" };
                 findings.push(Finding {
@@ -371,11 +376,12 @@ pub fn scan_file(path: &str, src: &str) -> Vec<Finding> {
                     path: path.to_string(),
                     line: t.line,
                     message: format!(
-                        "raw std::thread::{what} outside attn::batched::run_pool"
+                        "raw std::thread::{what} outside the attn::exec runtime"
                     ),
-                    hint: "route the work through attn::batched::run_pool / \
-                           run_pool_guarded (fault containment, retry accounting and \
-                           the audit hooks come for free)"
+                    hint: "run the work on an attn::Exec handle (Exec::run drains it \
+                           through spawn_worker's parked pool or run_scoped's per-call \
+                           scope — fault containment, retry accounting and the audit \
+                           hooks come for free)"
                         .into(),
                 });
             }
@@ -441,8 +447,10 @@ pub struct R4Inputs<'a> {
     pub chaos_test: &'a str,
 }
 
-/// `pub fn` names (with line numbers) declared in a module source.
-fn pub_fns(src: &str) -> Vec<(String, usize)> {
+/// `pub fn` declarations of a module source: name, line, and the
+/// identifier tokens of the parameter list (for the R4 `Exec`-handle
+/// signature check).
+fn pub_fns(src: &str) -> Vec<(String, usize, BTreeSet<String>)> {
     let toks = tokenize(src);
     let mut out = Vec::new();
     let mut i = 0;
@@ -460,7 +468,34 @@ fn pub_fns(src: &str) -> Vec<(String, usize)> {
                 && toks[j + 1].is_ident
             {
                 j += 1;
-                out.push((toks[j].text.clone(), toks[j].line));
+                let (name, line) = (toks[j].text.clone(), toks[j].line);
+                // Collect the identifiers between the signature's outer
+                // parens (generics may precede them; bodies follow the
+                // matching close, so depth tracking stops there).
+                let mut params = BTreeSet::new();
+                let mut k = j + 1;
+                while k < toks.len() && toks[k].text != "(" && toks[k].text != "{" {
+                    k += 1;
+                }
+                let mut depth = 0;
+                while k < toks.len() {
+                    match toks[k].text.as_str() {
+                        "(" => depth += 1,
+                        ")" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {
+                            if toks[k].is_ident {
+                                params.insert(toks[k].text.clone());
+                            }
+                        }
+                    }
+                    k += 1;
+                }
+                out.push((name, line, params));
             }
         }
         i += 1;
@@ -519,15 +554,13 @@ pub fn check_r4(inputs: &R4Inputs<'_>) -> Vec<Finding> {
     let chaos_names = ident_set(inputs.chaos_test);
 
     for (path, src) in inputs.modules {
-        let fns = pub_fns(src);
-        let local: BTreeSet<&str> = fns.iter().map(|(n, _)| n.as_str()).collect();
-        let needs_twin = path.ends_with("batched.rs") || path.ends_with("distributed.rs");
-        for (name, line) in &fns {
+        let needs_exec = path.ends_with("batched.rs") || path.ends_with("distributed.rs");
+        for (name, line, params) in &pub_fns(src) {
             if !(name.contains("forward") || name.contains("backward")) {
                 continue;
             }
             if name.ends_with("_checked") {
-                continue; // its base entry carries the requirements
+                continue; // deprecated pre-Exec shim: exempt by design
             }
             if !io_names.contains(name) {
                 findings.push(Finding {
@@ -543,16 +576,27 @@ pub fn check_r4(inputs: &R4Inputs<'_>) -> Vec<Finding> {
                         .into(),
                 });
             }
-            if needs_twin && !local.contains(format!("{name}_checked").as_str()) {
+            // Signature rule: every batched/sharded entry runs on an
+            // Exec handle; a bare `workers` count reopens the loose
+            // pre-Exec surface (no fault plan, no validation flag, no
+            // persistent pool).
+            if needs_exec && !params.contains("Exec") {
+                let bare = if params.contains("workers") {
+                    "takes a bare `workers` count instead of"
+                } else {
+                    "does not take"
+                };
                 findings.push(Finding {
                     rule: "R4",
                     path: path.to_string(),
                     line: *line,
                     message: format!(
-                        "batched/sharded entry `pub fn {name}` has no `{name}_checked` twin"
+                        "batched/sharded entry `pub fn {name}` {bare} an `Exec` \
+                         execution handle"
                     ),
-                    hint: "add a _checked twin returning Result<(_, FaultReport), AttnError> \
-                           through run_pool_guarded"
+                    hint: "thread `exec: &Exec` through it — the handle carries \
+                           workers, the fault plan and the validation flag, and is \
+                           the only sanctioned way onto the persistent pool"
                         .into(),
                 });
             }
@@ -569,8 +613,8 @@ pub fn check_r4(inputs: &R4Inputs<'_>) -> Vec<Finding> {
                 message: format!(
                     "FaultSite::{variant} is never injected in rust/tests/chaos.rs"
                 ),
-                hint: "add a chaos test driving this site through a _checked entry with \
-                       FaultPlan::none().with(site, item, attempt, kind)"
+                hint: "add a chaos test driving this site on a plan-carrying Exec \
+                       handle with FaultPlan::none().with(site, item, attempt, kind)"
                     .into(),
             });
         }
@@ -602,15 +646,16 @@ mod tests {
     }
 
     #[test]
-    fn r1_exempts_the_pool_itself_but_only_there() {
-        let src = "pub fn run_pool_guarded() { std::thread::scope(|s| { s; }); }\n\
+    fn r1_exempts_the_exec_runtime_but_only_there() {
+        let src = "fn spawn_worker() { std::thread::spawn(|| {}); }\n\
+                   fn run_scoped() { std::thread::scope(|s| { s; }); }\n\
                    pub fn other() { std::thread::scope(|s| { s; }); }\n";
-        let f = scan_file("rust/src/attn/batched.rs", src);
+        let f = scan_file("rust/src/attn/exec.rs", src);
         assert_eq!(f.len(), 1, "{f:?}");
-        assert_eq!(f[0].line, 2);
-        // The same source outside batched.rs is flagged twice.
+        assert_eq!(f[0].line, 3);
+        // The same source outside exec.rs is flagged three times.
         let f = scan_file("rust/src/attn/other.rs", src);
-        assert_eq!(f.len(), 2, "{f:?}");
+        assert_eq!(f.len(), 3, "{f:?}");
     }
 
     #[test]
@@ -660,8 +705,14 @@ mod tests {
             "missing io coverage must flag: {msgs:?}"
         );
         assert!(
-            msgs.iter().any(|m| m.contains("no `widget_forward_checked` twin")),
-            "missing _checked twin must flag: {msgs:?}"
+            msgs.iter().any(|m| m.contains("widget_forward")
+                && m.contains("bare `workers` count instead of an `Exec`")),
+            "bare workers count must flag: {msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("gadget_forward")
+                && m.contains("does not take an `Exec`")),
+            "missing Exec handle must flag: {msgs:?}"
         );
         assert!(
             msgs.iter().any(|m| m.contains("FaultSite::GadgetFwd")),

@@ -44,6 +44,14 @@ lost:
      a few percent fault-free — this gate is what keeps the robustness
      layer from quietly taxing the hot path.
 
+  6. the persistent parked-worker pool (Exec::new) losing to the
+     per-call scoped runtime (Exec::scoped) on any batched (pass, n)
+     cell. Both handles run the identical deterministic schedule; the
+     pool exists to delete the per-call thread-spawn tax, so it may
+     never cost more than noise over scoped — and at the smallest
+     (spawn-dominated) n of a full run the forward row must actually
+     win, which is the tentpole's headline number.
+
 A missing, truncated or malformed BENCH_attn.json is reported as a
 one-line diagnosis (the bench step that should have produced it is the
 thing to look at), not a Python traceback.
@@ -86,6 +94,13 @@ SPARSE_GATED_DENSITY = 0.5
 # regression (validation in the inner loop, serialized workers).
 GUARDRAIL_TOL = 1.05
 SMOKE_GUARDRAIL_TOL = 1.3
+# The persistent pool runs the same work as the scoped runtime minus
+# thread spawns, so it may only ever cost timer noise over scoped; at
+# small n it should win outright (spawns dominate). Smoke runs get the
+# usual proportionally-larger noise headroom, and the strict must-win
+# check at the smallest n applies to full runs only.
+POOL_TOL = 1.05
+SMOKE_POOL_TOL = 1.3
 
 
 def load_bench(path):
@@ -125,6 +140,7 @@ def main() -> int:
     sharded_tol = SMOKE_SHARDED_TOL if smoke else SHARDED_TOL
     sparse_tol = SMOKE_SPARSE_TOL if smoke else SPARSE_TOL
     guardrail_tol = SMOKE_GUARDRAIL_TOL if smoke else GUARDRAIL_TOL
+    pool_tol = SMOKE_POOL_TOL if smoke else POOL_TOL
     failures = []
     # Per-section cell counts: an empty/renamed array must not silently
     # disable ITS gate while the others keep the build green. The
@@ -132,12 +148,13 @@ def main() -> int:
     # bench that stopped emitting them fails here too.
     section_cells = {
         "results": 0, "batched": 0, "sharded": 0, "sparse": 0, "guardrail": 0,
+        "pool": 0,
     }
 
     print(f"perf gate over {path} (smoke={smoke}, workers={workers}, "
           f"tolerances flash2 {flash2_tol}x / batched {batched_tol}x / "
           f"sharded {sharded_tol}x / sparse {sparse_tol}x / "
-          f"guardrail {guardrail_tol}x)")
+          f"guardrail {guardrail_tol}x / pool {pool_tol}x)")
     for row in data.get("results", []):
         n = row["n"]
         for pass_name, ref_key, fast_keys in [
@@ -242,6 +259,37 @@ def main() -> int:
                     f"{guardrail_tol}x plain at n={n}: "
                     f"{checked_ns:.0f} ns vs {plain_ns:.0f} ns fault-free")
 
+    pool_rows = data.get("pool", [])
+    smallest_n = min((row["n"] for row in pool_rows), default=None)
+    for row in pool_rows:
+        n = row["n"]
+        for pass_name, scoped_key, pool_key in [
+            ("fwd", "scoped_fwd_ns", "pool_fwd_ns"),
+            ("bwd", "scoped_bwd_ns", "pool_bwd_ns"),
+        ]:
+            section_cells["pool"] += 1
+            scoped_ns = row[scoped_key]
+            pool_ns = row[pool_key]
+            ratio = pool_ns / scoped_ns if scoped_ns else float("inf")
+            # The pool must never lose beyond noise; on a full run the
+            # smallest (spawn-dominated) forward row must win outright.
+            must_win = not smoke and n == smallest_n and pass_name == "fwd"
+            ok = pool_ns <= pool_tol * scoped_ns and (not must_win or ratio < 1.0)
+            verdict = "ok" if ok else "REGRESSION"
+            print(f"  pool {pass_name:>3} n={n:>5}: "
+                  f"scoped {scoped_ns:>12.0f} ns  pool {pool_ns:>12.0f} ns  "
+                  f"ratio {ratio:.3f}  {verdict}")
+            if pool_ns > pool_tol * scoped_ns:
+                failures.append(
+                    f"persistent pool {pass_name} slower than per-call scoped "
+                    f"runtime at n={n}: {pool_ns:.0f} ns vs {scoped_ns:.0f} ns "
+                    f"(tol {pool_tol}x)")
+            elif must_win and ratio >= 1.0:
+                failures.append(
+                    f"persistent pool fwd does not beat the scoped runtime at "
+                    f"the spawn-dominated n={n}: {pool_ns:.0f} ns vs "
+                    f"{scoped_ns:.0f} ns (must win on full runs)")
+
     empty = [name for name, count in section_cells.items() if count == 0]
     if empty:
         print("PERF GATE ERROR: no (pass, n) cells found for section(s): "
@@ -256,7 +304,8 @@ def main() -> int:
     print(f"perf gate passed ({cells} cells): flash2 beats flash, "
           "batched beats the per-slice loop, sharding stays within its "
           "overhead bound, block-sparse beats dense at <=50% density, "
-          "and the fault plane is free when faults are off")
+          "the fault plane is free when faults are off, and the "
+          "persistent pool never loses to the per-call scoped runtime")
     return 0
 
 if __name__ == "__main__":

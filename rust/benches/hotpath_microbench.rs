@@ -20,10 +20,15 @@
 //!    local_global §3.3 patterns, fwd AND bwd): rows land under
 //!    "sparse" with their density, and the gate fails the build if
 //!    block-sparse at ≤50% density ever loses to dense flash2;
-//!  * guardrail overhead: the checked (fault-containment + finiteness
-//!    validation) batched entry points vs the plain ones with
-//!    `FaultPlan::none()`, fwd AND bwd — rows land under "guardrail"
-//!    and the gate bounds the fault-free cost of the execution plane;
+//!  * guardrail overhead: a guarded execution handle
+//!    (`Exec::new(w).with_plan(&none).validated()`) vs the plain one on
+//!    the batched entry points, fwd AND bwd — rows land under
+//!    "guardrail" and the gate bounds the fault-free cost of the
+//!    execution plane;
+//!  * persistent pool vs per-call scope: the same batched workload on
+//!    `Exec::new(w)` (workers parked between calls) vs `Exec::scoped(w)`
+//!    (spawn + join per call) at small n, fwd AND bwd — rows land under
+//!    "pool" and the gate fails if the persistent pool ever loses;
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
@@ -39,10 +44,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use flashattn::attn::batched::{
-    flash2_backward_batched, flash2_backward_batched_checked, flash2_forward_batched,
-    flash2_forward_batched_checked,
-};
+use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
 use flashattn::attn::block_sparse::{block_sparse2_backward, block_sparse2_forward};
 use flashattn::attn::distributed::{flash_backward_sharded, flash_forward_sharded};
 use flashattn::attn::faults::FaultPlan;
@@ -50,7 +52,7 @@ use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
 use flashattn::attn::masks::BlockMask;
 use flashattn::attn::standard::standard_forward;
-use flashattn::attn::AttnConfig;
+use flashattn::attn::{AttnConfig, Exec};
 use flashattn::bench::{mean_time, median_time};
 use flashattn::runtime::{Runtime, Value};
 use flashattn::sim::hbm::Hbm;
@@ -126,19 +128,20 @@ fn fast_kernel_head_to_head(smoke: bool) -> Vec<String> {
         let blocks = Blocks::from_sram(48 * 1024, d, n);
         let bwd_blocks = Blocks::for_backward(48 * 1024, d);
         let iters = if smoke { 5 } else if n >= 4096 { 2 } else { 5 };
+        let (ex1, exw) = (Exec::scoped(1), Exec::scoped(workers));
         let t_flash = mean_time(iters, || {
             std::hint::black_box(flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new()));
         });
         let t_f2_w1 = mean_time(iters, || {
-            std::hint::black_box(flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new()));
+            std::hint::black_box(flash2_forward(&q, &k, &v, &cfg, blocks, &ex1, &mut Hbm::new()));
         });
         let t_f2_w4 = mean_time(iters, || {
             std::hint::black_box(flash2_forward(
-                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &cfg, blocks, &exw, &mut Hbm::new(),
             ));
         });
         // Backward: both kernels consume the same forward outputs.
-        let fwd = flash2_forward(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, bwd_blocks, &exw, &mut Hbm::new());
         let bwd_iters = if smoke { 5 } else if n >= 4096 { 1 } else { 3 };
         let t_bwd_flash = mean_time(bwd_iters, || {
             std::hint::black_box(flash_backward(
@@ -147,12 +150,12 @@ fn fast_kernel_head_to_head(smoke: bool) -> Vec<String> {
         });
         let t_bwd_f2_w1 = mean_time(bwd_iters, || {
             std::hint::black_box(flash2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, 1, &mut Hbm::new(),
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, &ex1, &mut Hbm::new(),
             ));
         });
         let t_bwd_f2_w4 = mean_time(bwd_iters, || {
             std::hint::black_box(flash2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, &exw, &mut Hbm::new(),
             ));
         });
         t.row(vec![
@@ -231,32 +234,38 @@ fn batched_head_to_head(smoke: bool) -> Vec<String> {
         let per_cfg: Vec<AttnConfig> =
             (0..slices).map(|s| AttnConfig { bh_index: s as u32, ..cfg.clone() }).collect();
         let iters = if smoke { 5 } else if n >= 4096 { 1 } else { 2 };
+        // The per-slice loop spins threads up per call (the scoped
+        // oracle); the batched side schedules onto the persistent pool.
+        let scoped = Exec::scoped(workers);
+        let pool = Exec::new(workers);
         let t_loop_fwd = mean_time(iters, || {
             for s in 0..slices {
                 std::hint::black_box(flash2_forward(
-                    &qs[s], &ks[s], &vs[s], &per_cfg[s], blocks, workers, &mut Hbm::new(),
+                    &qs[s], &ks[s], &vs[s], &per_cfg[s], blocks, &scoped, &mut Hbm::new(),
                 ));
             }
         });
         let t_batched_fwd = mean_time(iters, || {
             std::hint::black_box(flash2_forward_batched(
-                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &cfg, blocks, &pool, &mut Hbm::new(),
             ));
         });
         // Backward: both sides consume the same (batched) forward outputs.
-        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, bwd_blocks, &pool, &mut Hbm::new())
+            .expect("fault-free")
+            .0;
         let fwd_o_slices = cut(&fwd.o);
         let t_loop_bwd = mean_time(iters, || {
             for s in 0..slices {
                 std::hint::black_box(flash2_backward(
                     &qs[s], &ks[s], &vs[s], &fwd_o_slices[s], &dos[s], fwd.stats.slice(s),
-                    &per_cfg[s], bwd_blocks, workers, &mut Hbm::new(),
+                    &per_cfg[s], bwd_blocks, &scoped, &mut Hbm::new(),
                 ));
             }
         });
         let t_batched_bwd = mean_time(iters, || {
             std::hint::black_box(flash2_backward_batched(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, workers,
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, &pool,
                 &mut Hbm::new(),
             ));
         });
@@ -314,16 +323,18 @@ fn sharded_head_to_head(smoke: bool) -> Vec<String> {
         } else {
             5
         };
+        let scoped = Exec::scoped(workers);
+        let pool = Exec::new(workers);
         let t_single_fwd = mean_time(iters, || {
             std::hint::black_box(flash2_forward(
-                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &cfg, blocks, &scoped, &mut Hbm::new(),
             ));
         });
         let t_sharded_fwd = mean_time(iters, || {
-            std::hint::black_box(flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers));
+            std::hint::black_box(flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &pool));
         });
         // Backward: both sides consume the same forward outputs.
-        let fwd = flash2_forward(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, bwd_blocks, &scoped, &mut Hbm::new());
         let bwd_iters = if smoke {
             5
         } else if n >= 4096 {
@@ -333,13 +344,13 @@ fn sharded_head_to_head(smoke: bool) -> Vec<String> {
         };
         let t_single_bwd = mean_time(bwd_iters, || {
             std::hint::black_box(flash2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, workers,
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, &scoped,
                 &mut Hbm::new(),
             ));
         });
         let t_sharded_bwd = mean_time(bwd_iters, || {
             std::hint::black_box(flash_backward_sharded(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, shards, workers,
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, bwd_blocks, shards, &pool,
             ));
         });
         t.row(vec![
@@ -399,17 +410,19 @@ fn sparse_head_to_head(smoke: bool) -> Vec<String> {
         let cfg = AttnConfig::default();
         let iters = if smoke { 5 } else if n >= 4096 { 2 } else { 5 };
         let bwd_iters = if smoke { 5 } else if n >= 4096 { 1 } else { 3 };
+        let scoped = Exec::scoped(workers);
+        let pool = Exec::new(workers);
         // Dense side: the flash2 pair on the same tiling, measured once
         // per size (both patterns compare against it).
         let t_dense_fwd = mean_time(iters, || {
             std::hint::black_box(flash2_forward(
-                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &cfg, blocks, &scoped, &mut Hbm::new(),
             ));
         });
-        let dense_fwd = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+        let dense_fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &scoped, &mut Hbm::new());
         let t_dense_bwd = mean_time(bwd_iters, || {
             std::hint::black_box(flash2_backward(
-                &q, &k, &v, &dense_fwd.o, &dout, dense_fwd.stats(), &cfg, blocks, workers,
+                &q, &k, &v, &dense_fwd.o, &dout, dense_fwd.stats(), &cfg, blocks, &scoped,
                 &mut Hbm::new(),
             ));
         });
@@ -422,15 +435,15 @@ fn sparse_head_to_head(smoke: bool) -> Vec<String> {
             let density = mask.sparsity();
             let t_sparse_fwd = mean_time(iters, || {
                 std::hint::black_box(block_sparse2_forward(
-                    &q, &k, &v, &mask, &cfg, blocks, workers, &mut Hbm::new(),
+                    &q, &k, &v, &mask, &cfg, blocks, &pool, &mut Hbm::new(),
                 ));
             });
             let sparse_fwd =
-                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut Hbm::new());
+                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &pool, &mut Hbm::new());
             let t_sparse_bwd = mean_time(bwd_iters, || {
                 std::hint::black_box(block_sparse2_backward(
                     &q, &k, &v, &sparse_fwd.o, &dout, sparse_fwd.stats(), &mask, &cfg, blocks,
-                    workers, &mut Hbm::new(),
+                    &pool, &mut Hbm::new(),
                 ));
             });
             t.row(vec![
@@ -459,22 +472,25 @@ fn sparse_head_to_head(smoke: bool) -> Vec<String> {
     json_rows
 }
 
-/// Fault-free overhead of the checked (guardrail) batched entry points
-/// vs the plain ones on the identical workload: with `FaultPlan::none()`
-/// the only extra work is the disabled-plan probe plus the per-item
-/// finiteness scan, which is O(output) against the kernel's O(n·n_k·d)
-/// arithmetic. Rows land in BENCH_attn.json under "guardrail";
-/// python/check_bench.py fails the build if the checked path ever costs
-/// more than the allowed fault-free overhead on any (pass, n) cell.
+/// Fault-free overhead of the guardrailed execution handle vs the plain
+/// one on the identical workload: `Exec::new(w).with_plan(&none).validated()`
+/// adds only the disabled-plan probe plus the per-item finiteness scan,
+/// which is O(output) against the kernel's O(n·n_k·d) arithmetic. Rows
+/// land in BENCH_attn.json under "guardrail" (keys kept from the
+/// pre-`Exec` checked-twin era); python/check_bench.py fails the build
+/// if the guarded handle ever costs more than the allowed fault-free
+/// overhead on any (pass, n) cell.
 fn guardrail_head_to_head(smoke: bool) -> Vec<String> {
     let (d, workers) = (D, WORKERS);
     let (batch, heads) = (2usize, 4usize);
     let mut t = Table::new(
-        "guardrail overhead: checked vs plain batched (2x4 slices of [n,64], mean ns/iter)",
+        "guardrail overhead: guarded vs plain Exec, batched (2x4 slices of [n,64], mean ns/iter)",
         &["n", "plain fwd (ms)", "checked fwd (ms)", "plain bwd (ms)", "checked bwd (ms)"],
     );
     let mut json_rows: Vec<String> = Vec::new();
     let plan = FaultPlan::none();
+    let plain = Exec::new(workers);
+    let guarded = Exec::new(workers).with_plan(&plan).validated();
     let sizes: &[usize] = if smoke { &[128, 256] } else { &[512, 1024, 4096] };
     for &n in sizes {
         let mut rng = SplitMix64::new(5);
@@ -488,29 +504,29 @@ fn guardrail_head_to_head(smoke: bool) -> Vec<String> {
         let iters = if smoke { 5 } else if n >= 4096 { 1 } else { 2 };
         let t_plain_fwd = mean_time(iters, || {
             std::hint::black_box(flash2_forward_batched(
-                &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &cfg, blocks, &plain, &mut Hbm::new(),
             ));
         });
         let t_checked_fwd = mean_time(iters, || {
             std::hint::black_box(
-                flash2_forward_batched_checked(
-                    &q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(), &plan,
-                )
-                .expect("fault-free"),
+                flash2_forward_batched(&q, &k, &v, &cfg, blocks, &guarded, &mut Hbm::new())
+                    .expect("fault-free"),
             );
         });
-        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, bwd_blocks, workers, &mut Hbm::new());
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, bwd_blocks, &plain, &mut Hbm::new())
+            .expect("fault-free")
+            .0;
         let t_plain_bwd = mean_time(iters, || {
             std::hint::black_box(flash2_backward_batched(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, workers,
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, &plain,
                 &mut Hbm::new(),
             ));
         });
         let t_checked_bwd = mean_time(iters, || {
             std::hint::black_box(
-                flash2_backward_batched_checked(
-                    &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, workers,
-                    &mut Hbm::new(), &plan,
+                flash2_backward_batched(
+                    &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, &guarded,
+                    &mut Hbm::new(),
                 )
                 .expect("fault-free"),
             );
@@ -538,9 +554,95 @@ fn guardrail_head_to_head(smoke: bool) -> Vec<String> {
     json_rows
 }
 
+/// Persistent pool vs per-call thread scope on the SAME batched workload
+/// — the cost the `Exec` runtime exists to delete. Both sides run the
+/// identical canonical batched entries with the same worker budget; the
+/// only difference is the handle's mode: `Exec::scoped(w)` spawns and
+/// joins `w` threads every call (the pre-pool behaviour), `Exec::new(w)`
+/// schedules onto workers parked since the warm-up call. Deliberately
+/// small n — that's where per-call spawn/join is a visible fraction of
+/// the work. Rows land in BENCH_attn.json under "pool";
+/// python/check_bench.py fails the build if the persistent pool ever
+/// loses to per-call scoping on any (pass, n) cell.
+fn pool_head_to_head(smoke: bool) -> Vec<String> {
+    let (d, workers) = (D, WORKERS);
+    let (batch, heads) = (2usize, 4usize);
+    let mut t = Table::new(
+        "persistent pool vs per-call scope (2x4 slices of [n,64], mean ns/iter)",
+        &["n", "scoped fwd (ms)", "pool fwd (ms)", "scoped bwd (ms)", "pool bwd (ms)"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let scoped = Exec::scoped(workers);
+    let pool = Exec::new(workers);
+    let sizes: &[usize] = if smoke { &[128, 256] } else { &[128, 256, 512] };
+    for &n in sizes {
+        let mut rng = SplitMix64::new(6);
+        let q = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let dout = Tensor::randn(&[batch, heads, n, d], &mut rng, 1.0);
+        let cfg = AttnConfig::default();
+        let blocks = Blocks::from_sram(48 * 1024, d, n);
+        let bwd_blocks = Blocks::for_backward(48 * 1024, d);
+        let iters = if smoke { 5 } else { 10 };
+        // Warm both handles outside the timed region (first pool call
+        // spawns the workers; every later call reuses them).
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, bwd_blocks, &pool, &mut Hbm::new())
+            .expect("fault-free")
+            .0;
+        std::hint::black_box(
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &scoped, &mut Hbm::new())
+                .expect("fault-free"),
+        );
+        let t_scoped_fwd = mean_time(iters, || {
+            std::hint::black_box(flash2_forward_batched(
+                &q, &k, &v, &cfg, blocks, &scoped, &mut Hbm::new(),
+            ));
+        });
+        let t_pool_fwd = mean_time(iters, || {
+            std::hint::black_box(flash2_forward_batched(
+                &q, &k, &v, &cfg, blocks, &pool, &mut Hbm::new(),
+            ));
+        });
+        let t_scoped_bwd = mean_time(iters, || {
+            std::hint::black_box(flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, &scoped,
+                &mut Hbm::new(),
+            ));
+        });
+        let t_pool_bwd = mean_time(iters, || {
+            std::hint::black_box(flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, bwd_blocks, &pool,
+                &mut Hbm::new(),
+            ));
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", t_scoped_fwd * 1e3),
+            format!("{:.2}", t_pool_fwd * 1e3),
+            format!("{:.2}", t_scoped_bwd * 1e3),
+            format!("{:.2}", t_pool_bwd * 1e3),
+        ]);
+        json_rows.push(format!(
+            "    {{\"n\": {n}, \"scoped_fwd_ns\": {:.0}, \"pool_fwd_ns\": {:.0}, \
+             \"fwd_speedup\": {:.3}, \"scoped_bwd_ns\": {:.0}, \"pool_bwd_ns\": {:.0}, \
+             \"bwd_speedup\": {:.3}}}",
+            t_scoped_fwd * 1e9,
+            t_pool_fwd * 1e9,
+            t_scoped_fwd / t_pool_fwd,
+            t_scoped_bwd * 1e9,
+            t_pool_bwd * 1e9,
+            t_scoped_bwd / t_pool_bwd,
+        ));
+    }
+    t.print();
+    json_rows
+}
+
 /// Assemble BENCH_attn.json (head-to-head + batched + sharded + sparse +
-/// guardrail rows) at the repo root regardless of the cwd cargo bench
-/// picked.
+/// guardrail + pool rows) at the repo root regardless of the cwd cargo
+/// bench picked.
+#[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     smoke: bool,
     results: &[String],
@@ -548,18 +650,20 @@ fn write_bench_json(
     sharded: &[String],
     sparse: &[String],
     guardrail: &[String],
+    pool: &[String],
 ) {
     let (d, workers) = (D, WORKERS);
     let json = format!(
         "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
          \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \
          \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ],\n  \"sharded\": [\n{}\n  ],\n  \
-         \"sparse\": [\n{}\n  ],\n  \"guardrail\": [\n{}\n  ]\n}}\n",
+         \"sparse\": [\n{}\n  ],\n  \"guardrail\": [\n{}\n  ],\n  \"pool\": [\n{}\n  ]\n}}\n",
         results.join(",\n"),
         batched.join(",\n"),
         sharded.join(",\n"),
         sparse.join(",\n"),
-        guardrail.join(",\n")
+        guardrail.join(",\n"),
+        pool.join(",\n")
     );
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_attn.json");
     match std::fs::write(&out, &json) {
@@ -619,7 +723,7 @@ fn artifacts() {
             eval_every: 0,
             ..Default::default()
         };
-        let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+        let mut tr = LmTrainer::new(&mut rt, cfg, &Exec::new(WORKERS)).unwrap();
         let batch = corpus.lm_batch(tr.batch, tr.n_ctx, &mut SplitMix64::new(3));
         tr.step(&mut rt, &batch).unwrap(); // warmup: includes artifact compile
         let t0 = Instant::now();
@@ -644,6 +748,7 @@ fn main() {
     let sharded = sharded_head_to_head(smoke);
     let sparse = sparse_head_to_head(smoke);
     let guardrail = guardrail_head_to_head(smoke);
-    write_bench_json(smoke, &results, &batched, &sharded, &sparse, &guardrail);
+    let pool = pool_head_to_head(smoke);
+    write_bench_json(smoke, &results, &batched, &sharded, &sparse, &guardrail, &pool);
     artifacts();
 }

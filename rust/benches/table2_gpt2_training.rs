@@ -72,6 +72,7 @@ fn exactness_run() {
         }
     };
     let corpus = Corpus::builtin(100_000, 1);
+    let exec = flashattn::attn::Exec::new(4);
     let mut curves: Vec<(String, Vec<f64>, f64)> = Vec::new();
     for model in ["gpt_flash", "gpt_ref"] {
         let cfg = TrainConfig {
@@ -81,7 +82,7 @@ fn exactness_run() {
             seed: 7,
             ..Default::default()
         };
-        let mut tr = LmTrainer::new(&mut rt, cfg).expect("trainer");
+        let mut tr = LmTrainer::new(&mut rt, cfg, &exec).expect("trainer");
         let t0 = std::time::Instant::now();
         tr.train(&mut rt, &corpus).expect("train");
         let secs = t0.elapsed().as_secs_f64();

@@ -64,11 +64,12 @@ fn main() {
         &hrefs,
     );
 
+    let exec = flashattn::attn::Exec::new(4);
     for (tag, label, method) in models {
         let mut row = vec![label.to_string()];
         let mut accs = Vec::new();
         for ds in &datasets {
-            match run_task(&mut rt, tag, ds.as_ref(), steps, 3) {
+            match run_task(&mut rt, tag, ds.as_ref(), steps, 3, &exec) {
                 Ok(res) => {
                     accs.push(res.accuracy);
                     row.push(format!("{:.3}", res.accuracy));

@@ -73,10 +73,11 @@ fn quality_runs() {
         &["model", "context", "eval loss", "eval ppl"],
     );
     let mut losses = Vec::new();
+    let exec = flashattn::attn::Exec::new(4);
     for tag in ["gpt_flash_ctx64", "gpt_flash", "gpt_flash_ctx256"] {
         let cfg =
             TrainConfig { model: tag.into(), steps, eval_every: 0, seed: 5, ..Default::default() };
-        let mut tr = match LmTrainer::new(&mut rt, cfg) {
+        let mut tr = match LmTrainer::new(&mut rt, cfg, &exec) {
             Ok(tr) => tr,
             Err(e) => {
                 println!("({tag}: {e:#})");

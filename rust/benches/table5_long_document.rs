@@ -32,13 +32,14 @@ fn main() {
         &["context", "evidence visible", "accuracy", "chance"],
     );
     let mut accs = Vec::new();
+    let exec = flashattn::attn::Exec::new(4);
     for (tag, ctx) in [
         ("longdoc_ctx64", 64usize),
         ("longdoc_ctx128", 128),
         ("longdoc_ctx256", 256),
         ("longdoc_ctx512", 512),
     ] {
-        match run_task(&mut rt, tag, &ds, steps, 13) {
+        match run_task(&mut rt, tag, &ds, steps, 13, &exec) {
             Ok(res) => {
                 accs.push(res.accuracy);
                 t.row(vec![

@@ -77,11 +77,12 @@ fn quality() {
          63.1%)",
         &["sequence", "grid", "accuracy", "beats chance?"],
     );
+    let exec = flashattn::attn::Exec::new(4);
     for (tag, seq) in
         [("longdoc_ctx128", 128usize), ("longdoc_ctx256", 256), ("longdoc_ctx512", 512)]
     {
         let ds = Pathfinder::for_seq(seq);
-        match run_task(&mut rt, tag, &ds, steps, 21) {
+        match run_task(&mut rt, tag, &ds, steps, 21, &exec) {
             Ok(res) => {
                 t.row(vec![
                     seq.to_string(),

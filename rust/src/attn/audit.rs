@@ -3,9 +3,9 @@
 //! The execution plane's signature rule — *workers race for work items,
 //! never for output slots* — is what makes every schedule bitwise
 //! worker-count independent. This module turns that rule from a comment
-//! into a checked property. Under the `audit` feature,
-//! `attn::batched::run_pool`/`run_pool_guarded` call in here to enforce,
-//! for every pool run:
+//! into a checked property. Under the `audit` feature, the drain loop
+//! behind every [`crate::attn::Exec`] run (`attn::exec::Exec::run`)
+//! calls in here to enforce, for every pool run:
 //!
 //! * **(a) Slot disjointness** — each work item declares the output
 //!   windows it owns ([`PoolItem::claims`]); no two items of one run may
@@ -131,8 +131,8 @@ pub fn stop_recording() -> Vec<PoolRun> {
 }
 
 /// Pool hook: enforce (a) and, if recording, append this run's
-/// fingerprint. Called by `run_pool_guarded` with the manifest built in
-/// queue order, before any worker spawns.
+/// fingerprint. Called by `Exec::run` with the manifest built in queue
+/// order, before any drain starts (either pool mode, any worker count).
 pub(crate) fn check_and_record(site: FaultSite, items: &[ItemClaims]) {
     if let Err(e) = check_disjoint(items) {
         panic!("audit[{site}]: {e}");

@@ -5,11 +5,13 @@
 //! single slice is small.
 //!
 //! Until this module, every hot path invoked `attn::flash2` once per
-//! (batch, head) slice, paying a `std::thread::scope` pool spin-up per
-//! slice and idling workers whenever one slice had fewer row blocks than
-//! threads. The entry points here flatten **all** batch·head·row-block
-//! (and, in the backward, batch·head·column-block) work items into a
-//! single dynamically-drained pool:
+//! (batch, head) slice, paying a worker-pool spin-up per slice and
+//! idling workers whenever one slice had fewer row blocks than threads.
+//! The entry points here flatten **all** batch·head·row-block (and, in
+//! the backward, batch·head·column-block) work items into a single
+//! dynamically-drained pool — the [`Exec`](super::exec::Exec) handle's
+//! persistent worker pool in production, or a per-call scope under
+//! [`Exec::scoped`](super::exec::Exec::scoped):
 //!
 //! * [`flash2_forward_batched`] / [`flash2_backward_batched`] — the
 //!   `[batch, heads, n, d]` entry points; the trainer preflight, the serve
@@ -21,15 +23,24 @@
 //!   schedules the sequence-parallel tree schedule's per-shard partials
 //!   (`attn::distributed::shard_partials`).
 //!
+//! Every entry point takes the [`Exec`](super::exec::Exec) execution
+//! handle (workers + fault plan + guardrail flag) and returns the output
+//! together with the run's [`FaultReport`], or a typed [`AttnError`]
+//! after a work item exhausts its retry budget; the old
+//! `(workers, plan)`-taking `*_checked` twins survive as thin
+//! deprecated shims.
+//!
 //! Two guarantees, both asserted by the tests below:
 //!
-//! * **Bitwise parity with the per-slice loop, for any worker count.** A
-//!   work item is one (slice, row/column block) pair, dispatched through
-//!   exactly the per-slice kernels' block sweeps
-//!   (`flash2::row_block_sweep` and friends), and block arithmetic is
-//!   self-contained — so output is bitwise identical to calling the
-//!   per-slice kernel slice by slice, regardless of worker count or the
-//!   dynamic claim order.
+//! * **Bitwise parity with the per-slice loop, for any worker count and
+//!   either pool mode.** A work item is one (slice, row/column block)
+//!   pair owning its output windows outright, dispatched through exactly
+//!   the per-slice kernels' block sweeps (`flash2::row_block_sweep` and
+//!   friends), and block arithmetic is self-contained — so output is
+//!   bitwise identical to calling the per-slice kernel slice by slice,
+//!   regardless of worker count or the dynamic claim order. Committed
+//!   windows are stitched back in item-index order on the calling
+//!   thread; workers race for items, never for output slots.
 //! * **Unchanged per-slice HBM traffic.** Batching reorganises *when*
 //!   work runs, never what moves: per the paper's per-slice IO analysis
 //!   the instrumented counters must (and do) sum to exactly
@@ -40,15 +51,13 @@
 //! Dropout streams stay per-slice: slice `s` runs with
 //! `bh_index = cfg.bh_index + s`, exactly what the per-slice loop did.
 
-use std::sync::{Condvar, Mutex, PoisonError};
+use std::sync::Arc;
 
 use super::block_sparse::{
     check_mask_geometry, mask_tile_base, sparse_dq_row_sweep, sparse_row_block_sweep,
 };
-use super::faults::{
-    panic_message, AttnError, FaultKind, FaultPlan, FaultReport, FaultSite, InjectedPanic,
-    PoolItem, MAX_ATTEMPTS,
-};
+use super::exec::Exec;
+use super::faults::{AttnError, FaultPlan, FaultReport, FaultSite, PoolItem};
 use super::flash::Blocks;
 use super::flash2::{
     dkv_col_sweep, dkv_col_sweep_filtered, dq_row_sweep, row_block_sweep, Flash2Output,
@@ -120,320 +129,6 @@ pub struct BatchedFlash2Output {
     pub stats: BatchedAttnStats,
 }
 
-/// Drain `items` through one `std::thread::scope` pool of (at most)
-/// `workers` threads, panicking (with the typed error's message) only
-/// after a work item exhausts its retry budget. Items are claimed
-/// dynamically — a worker that finishes a cheap item immediately pulls
-/// the next, so small slices never strand threads — and each item's
-/// arithmetic is self-contained, making the result independent of the
-/// claim order and worker count. Per-item HBM counters merge
-/// associatively into `hbm`, so traffic totals are partition-independent
-/// too.
-pub(crate) fn run_pool<T, F>(items: Vec<T>, workers: usize, hbm: &mut Hbm, site: FaultSite, work: F)
-where
-    T: PoolItem,
-    F: Fn(&mut T) -> Hbm + Sync,
-{
-    if let Err(e) = run_pool_guarded(items, workers, hbm, site, &FaultPlan::none(), false, work) {
-        panic!("{e}");
-    }
-}
-
-/// An item in flight or queued: its original index and attempt counter.
-struct Tracked<T> {
-    idx: usize,
-    attempt: u32,
-    item: T,
-}
-
-/// Shared pool state behind one mutex: the (re)queue, the count of items
-/// being worked on (a faulted one may return to the queue, so "queue
-/// empty" alone does not mean "done"), the first fatal error, and the
-/// fault bookkeeping.
-struct PoolState<T> {
-    queue: Vec<Tracked<T>>,
-    in_flight: usize,
-    error: Option<AttnError>,
-    report: FaultReport,
-    /// Audit check (c): per-item commit counts — every item must commit
-    /// exactly once on a successful run (retries are not commits).
-    #[cfg(feature = "audit")]
-    commits: Vec<u32>,
-}
-
-/// How a finished attempt is disposed of (classified outside the lock —
-/// the finiteness scan is O(window) and must not serialize workers).
-enum Disposal {
-    Commit { delayed: bool },
-    Retry { kind: RetryKind, attempt_hbm: Option<Hbm>, message: String },
-}
-
-enum RetryKind {
-    Panicked,
-    Poisoned,
-    Dropped,
-    NonFinite,
-}
-
-/// The fault-tolerant work pool behind every batched and sharded
-/// schedule. Semantics (see `attn::faults` and the module docs in
-/// `attn::mod`):
-///
-/// * A worker panic is contained by `catch_unwind`; the item's windows
-///   are zeroed and it is requeued, up to [`MAX_ATTEMPTS`] total
-///   attempts. Workers race only for items, never output slots, so the
-///   re-run performs identical arithmetic into a fresh window and the
-///   recovered output is bitwise identical to the fault-free run.
-/// * With `validate` on, every item's output windows are scanned for
-///   non-finite values before commit; a trip requeues exactly like a
-///   panic and, on budget exhaustion, surfaces as
-///   [`AttnError::NonFinite`] with (slice, block) provenance.
-/// * `plan` injects faults at publish time — after the item's work has
-///   run — so every attempt performs and counts its full traffic. Each
-///   faulted attempt that ran to completion adds its per-item HBM count
-///   to `FaultReport::retry_hbm`; a genuine mid-item panic has
-///   unknowable partial traffic and is excluded from all counters.
-/// * Worker-local HBM counters merge into `hbm` at join even on error,
-///   so counters always reflect work actually performed.
-pub(crate) fn run_pool_guarded<T, F>(
-    items: Vec<T>,
-    workers: usize,
-    hbm: &mut Hbm,
-    site: FaultSite,
-    plan: &FaultPlan,
-    validate: bool,
-    work: F,
-) -> Result<FaultReport, AttnError>
-where
-    T: PoolItem,
-    F: Fn(&mut T) -> Hbm + Sync,
-{
-    if items.is_empty() {
-        return Ok(FaultReport::default());
-    }
-    // Audit check (a): every item's claimed output windows are disjoint,
-    // verified (and optionally fingerprinted) before any worker spawns —
-    // workers race for items, never for output slots.
-    #[cfg(feature = "audit")]
-    let n_items = items.len();
-    #[cfg(feature = "audit")]
-    {
-        let manifest: Vec<super::audit::ItemClaims> = items
-            .iter()
-            .enumerate()
-            .map(|(idx, it)| super::audit::ItemClaims { idx, id: it.id(), claims: it.claims() })
-            .collect();
-        super::audit::check_and_record(site, &manifest);
-    }
-    let w = workers.max(1).min(items.len());
-    let state = Mutex::new(PoolState {
-        queue: items
-            .into_iter()
-            .enumerate()
-            .map(|(idx, item)| Tracked { idx, attempt: 0, item })
-            .collect(),
-        in_flight: 0,
-        error: None,
-        report: FaultReport::default(),
-        #[cfg(feature = "audit")]
-        commits: vec![0; n_items],
-    });
-    let ready = Condvar::new();
-    // A contained panic can poison the mutex between lock() and the
-    // guard drop; the inner state is still consistent (the lock is held
-    // only for queue bookkeeping, never across item execution), so
-    // recover it instead of cascading.
-    let lock = || state.lock().unwrap_or_else(PoisonError::into_inner);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for _ in 0..w {
-            handles.push(scope.spawn(|| {
-                let mut local = Hbm::new();
-                loop {
-                    let mut st = lock();
-                    let claimed = loop {
-                        if st.error.is_some() {
-                            break None;
-                        }
-                        if let Some(t) = st.queue.pop() {
-                            break Some(t);
-                        }
-                        if st.in_flight == 0 {
-                            break None;
-                        }
-                        // Queue empty but items in flight: one may yet
-                        // fail and requeue, so wait instead of exiting.
-                        st = ready.wait(st).unwrap_or_else(PoisonError::into_inner);
-                    };
-                    let Some(mut t) = claimed else {
-                        break;
-                    };
-                    st.in_flight += 1;
-                    drop(st);
-
-                    let fault = plan.fault_for(site, t.idx, t.attempt);
-                    if fault == Some(FaultKind::DelayedShard) {
-                        // A straggler, not a failure: complete late,
-                        // commit normally, add no traffic.
-                        std::thread::sleep(std::time::Duration::from_millis(1));
-                    }
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        let h = work(&mut t.item);
-                        if fault == Some(FaultKind::WorkerPanic) {
-                            // resume_unwind skips the panic hook (no
-                            // stderr spam for planned chaos); the payload
-                            // carries the attempt's exact traffic so the
-                            // retry accounting stays access-for-access.
-                            std::panic::resume_unwind(Box::new(InjectedPanic(h)));
-                        }
-                        h
-                    }));
-                    let disposal = match outcome {
-                        Ok(h) => {
-                            local.merge(&h);
-                            if fault == Some(FaultKind::PoisonedPartial) {
-                                t.item.poison();
-                            }
-                            if fault == Some(FaultKind::DroppedMerge) {
-                                Disposal::Retry {
-                                    kind: RetryKind::Dropped,
-                                    attempt_hbm: Some(h),
-                                    message: "completion record dropped".into(),
-                                }
-                            } else if (validate || fault == Some(FaultKind::PoisonedPartial))
-                                && !t.item.check_finite()
-                            {
-                                let kind = if fault == Some(FaultKind::PoisonedPartial) {
-                                    RetryKind::Poisoned
-                                } else {
-                                    RetryKind::NonFinite
-                                };
-                                Disposal::Retry {
-                                    kind,
-                                    attempt_hbm: Some(h),
-                                    message: "non-finite output".into(),
-                                }
-                            } else {
-                                Disposal::Commit { delayed: fault == Some(FaultKind::DelayedShard) }
-                            }
-                        }
-                        Err(payload) => {
-                            let attempt_hbm =
-                                payload.downcast_ref::<InjectedPanic>().map(|inj| {
-                                    // Injected at publish time: the work
-                                    // ran to completion, its traffic is
-                                    // real and gets re-done by the retry.
-                                    local.merge(&inj.0);
-                                    inj.0.clone()
-                                });
-                            Disposal::Retry {
-                                kind: RetryKind::Panicked,
-                                attempt_hbm,
-                                message: panic_message(&*payload),
-                            }
-                        }
-                    };
-
-                    let mut st = lock();
-                    st.in_flight -= 1;
-                    match disposal {
-                        Disposal::Commit { delayed } => {
-                            #[cfg(feature = "audit")]
-                            {
-                                st.commits[t.idx] += 1;
-                            }
-                            if delayed {
-                                st.report.delayed += 1;
-                            }
-                        }
-                        Disposal::Retry { kind, attempt_hbm, message } => {
-                            match kind {
-                                RetryKind::Panicked => st.report.panics += 1,
-                                RetryKind::Poisoned => st.report.poisoned += 1,
-                                RetryKind::Dropped => st.report.dropped += 1,
-                                RetryKind::NonFinite => st.report.guardrail += 1,
-                            }
-                            if let Some(h) = &attempt_hbm {
-                                st.report.retry_hbm.merge(h);
-                            }
-                            if t.attempt + 1 < MAX_ATTEMPTS {
-                                st.report.retries += 1;
-                                // The backward sweeps accumulate into
-                                // their windows (and a poisoned forward
-                                // scribbled NaN over them): zero back to
-                                // the pre-run state so the re-run
-                                // reproduces a fresh run bit for bit.
-                                t.item.reset();
-                                st.queue.push(Tracked {
-                                    idx: t.idx,
-                                    attempt: t.attempt + 1,
-                                    item: t.item,
-                                });
-                            } else if st.error.is_none() {
-                                let (slice, block) = t.item.id();
-                                let attempts = t.attempt + 1;
-                                st.error = Some(match kind {
-                                    RetryKind::Poisoned | RetryKind::NonFinite => {
-                                        AttnError::NonFinite {
-                                            site,
-                                            slice,
-                                            batch: 0,
-                                            head: 0,
-                                            block,
-                                            attempts,
-                                        }
-                                    }
-                                    _ => AttnError::ItemFailed {
-                                        site,
-                                        slice,
-                                        block,
-                                        attempts,
-                                        message,
-                                    },
-                                });
-                            }
-                        }
-                    }
-                    drop(st);
-                    ready.notify_all();
-                }
-                local
-            }));
-        }
-        for h in handles {
-            if let Ok(local) = h.join() {
-                hbm.merge(&local);
-            }
-        }
-    });
-    let mut st = lock();
-    match st.error.take() {
-        Some(e) => Err(e),
-        None => {
-            // Audit check (c): success means every output window was
-            // committed by exactly one attempt.
-            #[cfg(feature = "audit")]
-            super::audit::check_commits(site, &st.commits);
-            Ok(std::mem::take(&mut st.report))
-        }
-    }
-}
-
-/// Split `data` into disjoint mutable windows of the given `sizes`
-/// (consumed front to back; any tail past the last size is dropped).
-pub(crate) fn split_windows<'a>(
-    mut data: &'a mut [f32],
-    sizes: impl Iterator<Item = usize>,
-) -> Vec<&'a mut [f32]> {
-    let mut out = Vec::new();
-    for sz in sizes {
-        let (head, tail) = data.split_at_mut(sz);
-        out.push(head);
-        data = tail;
-    }
-    out
-}
-
 /// Rows covered by row/column block `b` of size `bsz` over `total` rows.
 pub(crate) fn block_rows(b: usize, bsz: usize, total: usize) -> usize {
     ((b + 1) * bsz).min(total) - b * bsz
@@ -450,17 +145,20 @@ fn lse_defined(xs: &[f32]) -> bool {
     xs.iter().all(|&x| x.is_finite() || x == f32::NEG_INFINITY)
 }
 
-/// One (slice, row block) forward work item: disjoint O and logsumexp
-/// windows. Shared by the dense/sparse batched schedulers and the ring
-/// schedule (which has a single logical slice, `s = 0`).
-pub(crate) struct FwdItem<'a> {
+/// One (slice, row block) forward work item, owning its disjoint O and
+/// logsumexp windows outright (the deterministic item → output-slot
+/// mapping the persistent pool relies on: windows are stitched back in
+/// item order after the run, so claim order can never touch placement).
+/// Shared by the dense/sparse batched schedulers and the ring schedule
+/// (which has a single logical slice, `s = 0`).
+pub(crate) struct FwdItem {
     pub s: usize,
     pub rb: usize,
-    pub o_win: &'a mut [f32],
-    pub lse_win: &'a mut [f32],
+    pub o_win: Vec<f32>,
+    pub lse_win: Vec<f32>,
 }
 
-impl PoolItem for FwdItem<'_> {
+impl PoolItem for FwdItem {
     fn id(&self) -> (usize, usize) {
         (self.s, self.rb)
     }
@@ -469,7 +167,7 @@ impl PoolItem for FwdItem<'_> {
         self.lse_win.fill(0.0);
     }
     fn check_finite(&self) -> bool {
-        all_finite(self.o_win) && lse_defined(self.lse_win)
+        all_finite(&self.o_win) && lse_defined(&self.lse_win)
     }
     fn poison(&mut self) {
         self.o_win.fill(f32::NAN);
@@ -478,18 +176,18 @@ impl PoolItem for FwdItem<'_> {
     #[cfg(feature = "audit")]
     fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
         use crate::attn::audit::SlotClaim;
-        vec![SlotClaim::of("o", self.o_win), SlotClaim::of("lse", self.lse_win)]
+        vec![SlotClaim::of("o", &self.o_win), SlotClaim::of("lse", &self.lse_win)]
     }
 }
 
 /// One (slice, row block) dQ work item.
-pub(crate) struct DqItem<'a> {
+pub(crate) struct DqItem {
     pub s: usize,
     pub rb: usize,
-    pub dq_win: &'a mut [f32],
+    pub dq_win: Vec<f32>,
 }
 
-impl PoolItem for DqItem<'_> {
+impl PoolItem for DqItem {
     fn id(&self) -> (usize, usize) {
         (self.s, self.rb)
     }
@@ -497,26 +195,26 @@ impl PoolItem for DqItem<'_> {
         self.dq_win.fill(0.0);
     }
     fn check_finite(&self) -> bool {
-        all_finite(self.dq_win)
+        all_finite(&self.dq_win)
     }
     fn poison(&mut self) {
         self.dq_win.fill(f32::NAN);
     }
     #[cfg(feature = "audit")]
     fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
-        vec![crate::attn::audit::SlotClaim::of("dq", self.dq_win)]
+        vec![crate::attn::audit::SlotClaim::of("dq", &self.dq_win)]
     }
 }
 
 /// One (slice, column block) dK/dV work item.
-pub(crate) struct DkvItem<'a> {
+pub(crate) struct DkvItem {
     pub s: usize,
     pub cb: usize,
-    pub dk_win: &'a mut [f32],
-    pub dv_win: &'a mut [f32],
+    pub dk_win: Vec<f32>,
+    pub dv_win: Vec<f32>,
 }
 
-impl PoolItem for DkvItem<'_> {
+impl PoolItem for DkvItem {
     fn id(&self) -> (usize, usize) {
         (self.s, self.cb)
     }
@@ -525,7 +223,7 @@ impl PoolItem for DkvItem<'_> {
         self.dv_win.fill(0.0);
     }
     fn check_finite(&self) -> bool {
-        all_finite(self.dk_win) && all_finite(self.dv_win)
+        all_finite(&self.dk_win) && all_finite(&self.dv_win)
     }
     fn poison(&mut self) {
         self.dk_win.fill(f32::NAN);
@@ -534,32 +232,58 @@ impl PoolItem for DkvItem<'_> {
     #[cfg(feature = "audit")]
     fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
         use crate::attn::audit::SlotClaim;
-        vec![SlotClaim::of("dk", self.dk_win), SlotClaim::of("dv", self.dv_win)]
+        vec![SlotClaim::of("dk", &self.dk_win), SlotClaim::of("dv", &self.dv_win)]
     }
+}
+
+/// A slice's inputs, owned — the persistent pool's work closures must be
+/// `'static`, so each run snapshots the slice data once (an O(input)
+/// copy against O(n·n_k·d) block arithmetic; f32 copies are bit-exact,
+/// so parity and traffic accounting are untouched — HBM counts are
+/// analytic, not measured).
+struct OwnedSlice {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    n: usize,
+    n_k: usize,
+    d: usize,
+    cfg: AttnConfig,
+}
+
+/// A backward slice's inputs, owned, with the phase-0 D row folded in
+/// (dO and O themselves are only needed by phase 0, which runs on the
+/// calling thread).
+struct OwnedGradSlice {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    dout: Vec<f32>,
+    lse: Vec<f32>,
+    d_vec: Vec<f32>,
+    n: usize,
+    n_k: usize,
+    d: usize,
+    cfg: AttnConfig,
 }
 
 /// Fast exact forward over many independent slices through ONE worker
 /// pool: every (slice, row block) pair becomes a work item. Outputs (and
-/// HBM totals) are bitwise identical to running [`super::flash2::flash2_forward`]
-/// per slice, for any `workers`.
+/// HBM totals) are bitwise identical to running
+/// [`super::flash2::flash2_forward`] per slice, for any worker count and
+/// either pool mode of `exec`.
 pub fn flash2_forward_many(
     slices: &[AttnSlice<'_>],
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
-) -> Vec<Flash2Output> {
-    let plan = FaultPlan::none();
-    match forward_many_sited(slices, blocks, workers, hbm, &plan, false, FaultSite::BatchedFwd) {
-        Ok((outs, _)) => outs,
-        Err(e) => panic!("{e}"),
-    }
+) -> Result<(Vec<Flash2Output>, FaultReport), AttnError> {
+    forward_many_sited(slices, blocks, exec, hbm, FaultSite::BatchedFwd)
 }
 
-/// [`flash2_forward_many`] with fault containment, retry, the finiteness
-/// guardrail, and (optionally) fault injection: returns the outputs plus
-/// a [`FaultReport`], or a typed [`AttnError`] with (slice, block)
-/// provenance. Output after any recovered fault schedule is bitwise
-/// identical to the fault-free run.
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use flash2_forward_many with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
 pub fn flash2_forward_many_checked(
     slices: &[AttnSlice<'_>],
     blocks: Blocks,
@@ -567,7 +291,7 @@ pub fn flash2_forward_many_checked(
     hbm: &mut Hbm,
     plan: &FaultPlan,
 ) -> Result<(Vec<Flash2Output>, FaultReport), AttnError> {
-    forward_many_sited(slices, blocks, workers, hbm, plan, true, FaultSite::BatchedFwd)
+    flash2_forward_many(slices, blocks, &Exec::scoped(workers).with_plan(plan).validated(), hbm)
 }
 
 /// Site-parameterised core: the tree schedule routes its per-shard
@@ -575,10 +299,8 @@ pub fn flash2_forward_many_checked(
 pub(crate) fn forward_many_sited(
     slices: &[AttnSlice<'_>],
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
-    plan: &FaultPlan,
-    validate: bool,
     site: FaultSite,
 ) -> Result<(Vec<Flash2Output>, FaultReport), AttnError> {
     for (s, sl) in slices.iter().enumerate() {
@@ -599,32 +321,45 @@ pub(crate) fn forward_many_sited(
         })
         .collect();
 
-    let mut items: Vec<FwdItem<'_>> = Vec::new();
-    for (s, (sl, out)) in slices.iter().zip(outs.iter_mut()).enumerate() {
+    let mut items: Vec<FwdItem> = Vec::new();
+    for (s, sl) in slices.iter().enumerate() {
         if sl.n_k == 0 {
             continue;
         }
-        let t_r = sl.n.div_ceil(blocks.b_r);
-        let o_wins = split_windows(
-            &mut out.o.data,
-            (0..t_r).map(|rb| block_rows(rb, blocks.b_r, sl.n) * sl.d),
-        );
-        let lse_wins =
-            split_windows(&mut out.lse, (0..t_r).map(|rb| block_rows(rb, blocks.b_r, sl.n)));
-        for (rb, (o_win, lse_win)) in o_wins.into_iter().zip(lse_wins).enumerate() {
-            items.push(FwdItem { s, rb, o_win, lse_win });
+        for rb in 0..sl.n.div_ceil(blocks.b_r) {
+            let rows = block_rows(rb, blocks.b_r, sl.n);
+            items.push(FwdItem { s, rb, o_win: vec![0.0; rows * sl.d], lse_win: vec![0.0; rows] });
         }
     }
 
-    let report = run_pool_guarded(items, workers, hbm, site, plan, validate, |it| {
-        let sl = &slices[it.s];
+    let data: Vec<OwnedSlice> = slices
+        .iter()
+        .map(|sl| OwnedSlice {
+            q: sl.q.to_vec(),
+            k: sl.k.to_vec(),
+            v: sl.v.to_vec(),
+            n: sl.n,
+            n_k: sl.n_k,
+            d: sl.d,
+            cfg: sl.cfg.clone(),
+        })
+        .collect();
+    let (done, report) = exec.run(items, site, hbm, move |it: &mut FwdItem| {
+        let sl = &data[it.s];
         let tau = sl.cfg.tau_for(sl.d);
         let kv_limit = sl.cfg.kv_limit(sl.n_k);
         row_block_sweep(
-            sl.q, sl.k, sl.v, sl.n, sl.n_k, sl.d, &sl.cfg, blocks, tau, kv_limit, it.rb,
-            it.rb + 1, it.o_win, it.lse_win,
+            &sl.q, &sl.k, &sl.v, sl.n, sl.n_k, sl.d, &sl.cfg, blocks, tau, kv_limit, it.rb,
+            it.rb + 1, &mut it.o_win, &mut it.lse_win,
         )
     })?;
+    for it in done {
+        let d = slices[it.s].d;
+        let r0 = it.rb * blocks.b_r;
+        let out = &mut outs[it.s];
+        out.o.data[r0 * d..r0 * d + it.o_win.len()].copy_from_slice(&it.o_win);
+        out.lse[r0..r0 + it.lse_win.len()].copy_from_slice(&it.lse_win);
+    }
 
     Ok((outs, report))
 }
@@ -633,39 +368,13 @@ pub(crate) fn forward_many_sited(
 /// pool per phase: the per-slice D epilogue runs inline, then every
 /// (slice, row block) dQ item and every (slice, column block) dK/dV item
 /// is scheduled dynamically. Bitwise identical to running
-/// [`super::flash2::flash2_backward`] per slice, for any `workers`.
+/// [`super::flash2::flash2_backward`] per slice, for any worker count
+/// and either pool mode of `exec`.
 pub fn flash2_backward_many(
     slices: &[AttnGradSlice<'_>],
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
-) -> Vec<AttnGrads> {
-    match backward_many_core(slices, blocks, workers, hbm, &FaultPlan::none(), false) {
-        Ok((grads, _)) => grads,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`flash2_backward_many`] with fault containment, retry, the finiteness
-/// guardrail, and (optionally) fault injection — the gradient counterpart
-/// of [`flash2_forward_many_checked`].
-pub fn flash2_backward_many_checked(
-    slices: &[AttnGradSlice<'_>],
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(Vec<AttnGrads>, FaultReport), AttnError> {
-    backward_many_core(slices, blocks, workers, hbm, plan, true)
-}
-
-fn backward_many_core(
-    slices: &[AttnGradSlice<'_>],
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-    validate: bool,
 ) -> Result<(Vec<AttnGrads>, FaultReport), AttnError> {
     for (s, sl) in slices.iter().enumerate() {
         assert_eq!(sl.q.len(), sl.n * sl.d, "slice {s}: Q shape mismatch");
@@ -704,60 +413,99 @@ fn backward_many_core(
         })
         .collect();
 
-    let mut dq_items: Vec<DqItem<'_>> = Vec::new();
-    let mut dkv_items: Vec<DkvItem<'_>> = Vec::new();
-    for (s, (sl, g)) in slices.iter().zip(grads.iter_mut()).enumerate() {
+    let mut dq_items: Vec<DqItem> = Vec::new();
+    let mut dkv_items: Vec<DkvItem> = Vec::new();
+    for (s, sl) in slices.iter().enumerate() {
         if sl.n == 0 || sl.n_k == 0 {
             continue;
         }
-        let t_r = sl.n.div_ceil(blocks.b_r);
-        let t_c = sl.n_k.div_ceil(blocks.b_c);
-        let dq_wins = split_windows(
-            &mut g.dq.data,
-            (0..t_r).map(|rb| block_rows(rb, blocks.b_r, sl.n) * sl.d),
-        );
-        for (rb, dq_win) in dq_wins.into_iter().enumerate() {
-            dq_items.push(DqItem { s, rb, dq_win });
+        for rb in 0..sl.n.div_ceil(blocks.b_r) {
+            let rows = block_rows(rb, blocks.b_r, sl.n);
+            dq_items.push(DqItem { s, rb, dq_win: vec![0.0; rows * sl.d] });
         }
-        let dk_wins = split_windows(
-            &mut g.dk.data,
-            (0..t_c).map(|cb| block_rows(cb, blocks.b_c, sl.n_k) * sl.d),
-        );
-        let dv_wins = split_windows(
-            &mut g.dv.data,
-            (0..t_c).map(|cb| block_rows(cb, blocks.b_c, sl.n_k) * sl.d),
-        );
-        for (cb, (dk_win, dv_win)) in dk_wins.into_iter().zip(dv_wins).enumerate() {
-            dkv_items.push(DkvItem { s, cb, dk_win, dv_win });
+        for cb in 0..sl.n_k.div_ceil(blocks.b_c) {
+            let cols = block_rows(cb, blocks.b_c, sl.n_k);
+            dkv_items.push(DkvItem {
+                s,
+                cb,
+                dk_win: vec![0.0; cols * sl.d],
+                dv_win: vec![0.0; cols * sl.d],
+            });
         }
     }
 
+    // One owned snapshot shared by both phases' work closures.
+    let data: Arc<Vec<OwnedGradSlice>> = Arc::new(
+        slices
+            .iter()
+            .zip(d_vecs)
+            .map(|(sl, d_vec)| OwnedGradSlice {
+                q: sl.q.to_vec(),
+                k: sl.k.to_vec(),
+                v: sl.v.to_vec(),
+                dout: sl.dout.to_vec(),
+                lse: sl.lse.to_vec(),
+                d_vec,
+                n: sl.n,
+                n_k: sl.n_k,
+                d: sl.d,
+                cfg: sl.cfg.clone(),
+            })
+            .collect(),
+    );
+
     // Phase 1: all slices' dQ row blocks through one pool.
-    let mut report =
-        run_pool_guarded(dq_items, workers, hbm, FaultSite::BatchedDq, plan, validate, |it| {
-            let sl = &slices[it.s];
+    let dq_data = Arc::clone(&data);
+    let (dq_done, mut report) =
+        exec.run(dq_items, FaultSite::BatchedDq, hbm, move |it: &mut DqItem| {
+            let sl = &dq_data[it.s];
             let tau = sl.cfg.tau_for(sl.d);
             let kv_limit = sl.cfg.kv_limit(sl.n_k);
             dq_row_sweep(
-                sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
-                blocks, tau, kv_limit, it.rb, it.rb + 1, it.dq_win,
+                &sl.q, &sl.k, &sl.v, &sl.dout, &sl.lse, &sl.d_vec, sl.n, sl.n_k, sl.d, &sl.cfg,
+                blocks, tau, kv_limit, it.rb, it.rb + 1, &mut it.dq_win,
             )
         })?;
+    for it in dq_done {
+        let d = slices[it.s].d;
+        let r0 = it.rb * blocks.b_r;
+        grads[it.s].dq.data[r0 * d..r0 * d + it.dq_win.len()].copy_from_slice(&it.dq_win);
+    }
 
     // Phase 2: all slices' dK/dV column blocks through one pool.
-    let dkv_report =
-        run_pool_guarded(dkv_items, workers, hbm, FaultSite::BatchedDkv, plan, validate, |it| {
-            let sl = &slices[it.s];
+    let (dkv_done, dkv_report) =
+        exec.run(dkv_items, FaultSite::BatchedDkv, hbm, move |it: &mut DkvItem| {
+            let sl = &data[it.s];
             let tau = sl.cfg.tau_for(sl.d);
             let kv_limit = sl.cfg.kv_limit(sl.n_k);
             dkv_col_sweep(
-                sl.q, sl.k, sl.v, sl.dout, sl.lse, &d_vecs[it.s], sl.n, sl.n_k, sl.d, &sl.cfg,
-                blocks, tau, kv_limit, it.cb, it.cb + 1, it.dk_win, it.dv_win,
+                &sl.q, &sl.k, &sl.v, &sl.dout, &sl.lse, &sl.d_vec, sl.n, sl.n_k, sl.d, &sl.cfg,
+                blocks, tau, kv_limit, it.cb, it.cb + 1, &mut it.dk_win, &mut it.dv_win,
             )
         })?;
+    for it in dkv_done {
+        let d = slices[it.s].d;
+        let c0 = it.cb * blocks.b_c;
+        let g = &mut grads[it.s];
+        g.dk.data[c0 * d..c0 * d + it.dk_win.len()].copy_from_slice(&it.dk_win);
+        g.dv.data[c0 * d..c0 * d + it.dv_win.len()].copy_from_slice(&it.dv_win);
+    }
     report.merge(&dkv_report);
 
     Ok((grads, report))
+}
+
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use flash2_backward_many with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
+pub fn flash2_backward_many_checked(
+    slices: &[AttnGradSlice<'_>],
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(Vec<AttnGrads>, FaultReport), AttnError> {
+    flash2_backward_many(slices, blocks, &Exec::scoped(workers).with_plan(plan).validated(), hbm)
 }
 
 /// Check and decompose a [batch, heads, rows, d] tensor.
@@ -776,54 +524,20 @@ pub fn bh_slice(t: &Tensor, s: usize) -> Tensor {
 /// Batched multi-head fast forward. q: [batch, heads, n, d];
 /// k, v: [batch, heads, n_k, d] (rectangular K/V serves cross-attention
 /// and sharded layouts). All batch·head·row-block work items run in one
-/// `std::thread::scope` pool; the result is bitwise independent of
-/// `workers` and bitwise identical to the per-slice loop it replaces.
-/// Slice `s` runs with `bh_index = cfg.bh_index + s`, so dropout streams
-/// match the per-slice convention.
+/// pool on `exec`; the result is bitwise independent of the worker count
+/// and pool mode, and bitwise identical to the per-slice loop it
+/// replaces. Slice `s` runs with `bh_index = cfg.bh_index + s`, so
+/// dropout streams match the per-slice convention. A typed [`AttnError`]
+/// names the (batch, head) slice and q row block of an item that
+/// exhausted its retry budget.
 pub fn flash2_forward_batched(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
-) -> BatchedFlash2Output {
-    match forward_batched_core(q, k, v, cfg, blocks, workers, hbm, &FaultPlan::none(), false) {
-        Ok((out, _)) => out,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`flash2_forward_batched`] with fault containment, retry, the
-/// finiteness guardrail and (optionally) fault injection: returns the
-/// output plus a [`FaultReport`], or a typed [`AttnError`] whose
-/// provenance names the (batch, head) slice and q row block.
-#[allow(clippy::too_many_arguments)]
-pub fn flash2_forward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
-    forward_batched_core(q, k, v, cfg, blocks, workers, hbm, plan, true)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn forward_batched_core(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-    validate: bool,
 ) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "flash2_forward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "flash2_forward_batched K");
@@ -840,9 +554,8 @@ fn forward_batched_core(
             cfg: AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() },
         })
         .collect();
-    let (outs, report) =
-        forward_many_sited(&slices, blocks, workers, hbm, plan, validate, FaultSite::BatchedFwd)
-            .map_err(|e| e.located(h))?;
+    let (outs, report) = forward_many_sited(&slices, blocks, exec, hbm, FaultSite::BatchedFwd)
+        .map_err(|e| e.located(h))?;
     let mut o = Tensor::zeros(&[b, h, n, d]);
     let mut lse = Vec::with_capacity(b * h * n);
     for (s, out) in outs.into_iter().enumerate() {
@@ -852,11 +565,39 @@ fn forward_batched_core(
     Ok((BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }, report))
 }
 
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use flash2_forward_batched with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
+#[allow(clippy::too_many_arguments)]
+pub fn flash2_forward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
+    flash2_forward_batched(
+        q,
+        k,
+        v,
+        cfg,
+        blocks,
+        &Exec::scoped(workers).with_plan(plan).validated(),
+        hbm,
+    )
+}
+
 /// Batched multi-head fast backward: the gradient counterpart of
 /// [`flash2_forward_batched`], with every batch·head·block work item of
-/// each phase in one pool. `stats` holds one logsumexp row per slice
-/// (the batched forward's output). Returns [batch, heads, …, d] gradients;
-/// bitwise identical to the per-slice loop for any `workers`.
+/// each phase in one pool on `exec`. `stats` holds one logsumexp row per
+/// slice (the batched forward's output). Returns [batch, heads, …, d]
+/// gradients; bitwise identical to the per-slice loop for any worker
+/// count and pool mode. Typed-error provenance names the (batch, head)
+/// slice and the row (dQ) or column (dK/dV) block.
+#[allow(clippy::too_many_arguments)]
 pub fn flash2_backward_batched(
     q: &Tensor,
     k: &Tensor,
@@ -866,51 +607,8 @@ pub fn flash2_backward_batched(
     stats: &BatchedAttnStats,
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
-) -> AttnGrads {
-    let plan = FaultPlan::none();
-    match backward_batched_core(q, k, v, o, dout, stats, cfg, blocks, workers, hbm, &plan, false) {
-        Ok((grads, _)) => grads,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`flash2_backward_batched`] with fault containment, retry, the
-/// finiteness guardrail and (optionally) fault injection — provenance
-/// names the (batch, head) slice and the row (dQ) or column (dK/dV)
-/// block.
-#[allow(clippy::too_many_arguments)]
-pub fn flash2_backward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    dout: &Tensor,
-    stats: &BatchedAttnStats,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(AttnGrads, FaultReport), AttnError> {
-    backward_batched_core(q, k, v, o, dout, stats, cfg, blocks, workers, hbm, plan, true)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn backward_batched_core(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    dout: &Tensor,
-    stats: &BatchedAttnStats,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-    validate: bool,
 ) -> Result<(AttnGrads, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "flash2_backward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "flash2_backward_batched K");
@@ -934,8 +632,8 @@ fn backward_batched_core(
             cfg: AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() },
         })
         .collect();
-    let (per_slice, report) = backward_many_core(&slices, blocks, workers, hbm, plan, validate)
-        .map_err(|e| e.located(h))?;
+    let (per_slice, report) =
+        flash2_backward_many(&slices, blocks, exec, hbm).map_err(|e| e.located(h))?;
     let mut dq4 = Tensor::zeros(&[b, h, n, d]);
     let mut dk4 = Tensor::zeros(&[b, h, n_k, d]);
     let mut dv4 = Tensor::zeros(&[b, h, n_k, d]);
@@ -945,6 +643,37 @@ fn backward_batched_core(
         dv4.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dv.data);
     }
     Ok((AttnGrads { dq: dq4, dk: dk4, dv: dv4 }, report))
+}
+
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use flash2_backward_batched with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
+#[allow(clippy::too_many_arguments)]
+pub fn flash2_backward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
+    flash2_backward_batched(
+        q,
+        k,
+        v,
+        o,
+        dout,
+        stats,
+        cfg,
+        blocks,
+        &Exec::scoped(workers).with_plan(plan).validated(),
+        hbm,
+    )
 }
 
 /// Resolve the mask for slice `s` of a [batch, heads, …] workload.
@@ -963,14 +692,45 @@ fn mask_for<'m>(masks: &'m [BlockMask], heads: usize, slices: usize, s: usize) -
     }
 }
 
+/// The sparse schedulers' owned per-run snapshot, shared between phases.
+struct SparseBatch {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    masks: Vec<BlockMask>,
+    per_cfg: Vec<AttnConfig>,
+    n: usize,
+    n_k: usize,
+    d: usize,
+    h: usize,
+    slices: usize,
+    tile_base: usize,
+}
+
+impl SparseBatch {
+    fn qs(&self, s: usize) -> &[f32] {
+        &self.q[s * self.n * self.d..(s + 1) * self.n * self.d]
+    }
+    fn ks(&self, s: usize) -> &[f32] {
+        &self.k[s * self.n_k * self.d..(s + 1) * self.n_k * self.d]
+    }
+    fn vs(&self, s: usize) -> &[f32] {
+        &self.v[s * self.n_k * self.d..(s + 1) * self.n_k * self.d]
+    }
+    fn mask(&self, s: usize) -> &BlockMask {
+        mask_for(&self.masks, self.h, self.slices, s)
+    }
+}
+
 /// Batched multi-head fast **block-sparse** forward: the sparse
 /// counterpart of [`flash2_forward_batched`]. q: [batch, heads, n, d];
 /// k, v: [batch, heads, n_k, d]. Every batch·head·row-block work item
-/// runs through one dynamically-drained pool, dispatching the identical
-/// per-block sparse sweep (`attn::block_sparse::sparse_row_block_sweep`),
-/// so output is bitwise identical to the per-slice loop for any
-/// `workers`. Per-head masks are allowed (see [`mask_for`]); slice `s`
-/// runs with `bh_index = cfg.bh_index + s`.
+/// runs through one dynamically-drained pool on `exec`, dispatching the
+/// identical per-block sparse sweep
+/// (`attn::block_sparse::sparse_row_block_sweep`), so output is bitwise
+/// identical to the per-slice loop for any worker count and pool mode.
+/// Per-head masks are allowed (see [`mask_for`]); slice `s` runs with
+/// `bh_index = cfg.bh_index + s`.
 pub fn block_sparse2_forward_batched(
     q: &Tensor,
     k: &Tensor,
@@ -978,45 +738,8 @@ pub fn block_sparse2_forward_batched(
     masks: &[BlockMask],
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
-) -> BatchedFlash2Output {
-    let plan = FaultPlan::none();
-    match sparse_forward_batched_core(q, k, v, masks, cfg, blocks, workers, hbm, &plan, false) {
-        Ok((out, _)) => out,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`block_sparse2_forward_batched`] with fault containment, retry, the
-/// finiteness guardrail and (optionally) fault injection.
-#[allow(clippy::too_many_arguments)]
-pub fn block_sparse2_forward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    masks: &[BlockMask],
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
-    sparse_forward_batched_core(q, k, v, masks, cfg, blocks, workers, hbm, plan, true)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn sparse_forward_batched_core(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    masks: &[BlockMask],
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-    validate: bool,
 ) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "block_sparse2_forward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "block_sparse2_forward_batched K");
@@ -1045,57 +768,94 @@ fn sparse_forward_batched_core(
         .map(|s| AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() })
         .collect();
 
-    let o_wins = split_windows(
-        &mut o.data,
-        (0..slices).flat_map(|_| (0..t_r).map(|rb| block_rows(rb, blocks.b_r, n) * d)),
-    );
-    let lse_wins = split_windows(
-        &mut lse,
-        (0..slices).flat_map(|_| (0..t_r).map(|rb| block_rows(rb, blocks.b_r, n))),
-    );
-    let items: Vec<FwdItem<'_>> = o_wins
-        .into_iter()
-        .zip(lse_wins)
-        .enumerate()
-        .map(|(idx, (o_win, lse_win))| {
-            FwdItem { s: idx / t_r, rb: idx % t_r, o_win, lse_win }
+    let items: Vec<FwdItem> = (0..slices * t_r)
+        .map(|idx| {
+            let rb = idx % t_r;
+            let rows = block_rows(rb, blocks.b_r, n);
+            FwdItem { s: idx / t_r, rb, o_win: vec![0.0; rows * d], lse_win: vec![0.0; rows] }
         })
         .collect();
 
-    let report =
-        run_pool_guarded(items, workers, hbm, FaultSite::SparseFwd, plan, validate, |it| {
-            let cfg_s = &per_cfg[it.s];
-            let mask = mask_for(masks, h, slices, it.s);
+    let data = SparseBatch {
+        q: q.data.clone(),
+        k: k.data.clone(),
+        v: v.data.clone(),
+        masks: masks.to_vec(),
+        per_cfg,
+        n,
+        n_k,
+        d,
+        h,
+        slices,
+        tile_base,
+    };
+    let (done, report) = exec
+        .run(items, FaultSite::SparseFwd, hbm, move |it: &mut FwdItem| {
+            let cfg_s = &data.per_cfg[it.s];
             sparse_row_block_sweep(
-                &q.data[it.s * n * d..(it.s + 1) * n * d],
-                &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-                &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-                n,
-                n_k,
-                d,
-                mask,
-                tile_base,
+                data.qs(it.s),
+                data.ks(it.s),
+                data.vs(it.s),
+                data.n,
+                data.n_k,
+                data.d,
+                data.mask(it.s),
+                data.tile_base,
                 cfg_s,
                 blocks,
-                cfg_s.tau_for(d),
-                cfg_s.kv_limit(n_k),
+                cfg_s.tau_for(data.d),
+                cfg_s.kv_limit(data.n_k),
                 it.rb,
                 it.rb + 1,
-                it.o_win,
-                it.lse_win,
+                &mut it.o_win,
+                &mut it.lse_win,
             )
         })
         .map_err(|e| e.located(h))?;
+    for it in done {
+        let r0 = it.rb * blocks.b_r;
+        let base = it.s * n * d + r0 * d;
+        o.data[base..base + it.o_win.len()].copy_from_slice(&it.o_win);
+        lse[it.s * n + r0..it.s * n + r0 + it.lse_win.len()].copy_from_slice(&it.lse_win);
+    }
 
     Ok((BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }, report))
+}
+
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use block_sparse2_forward_batched with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_forward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
+    block_sparse2_forward_batched(
+        q,
+        k,
+        v,
+        masks,
+        cfg,
+        blocks,
+        &Exec::scoped(workers).with_plan(plan).validated(),
+        hbm,
+    )
 }
 
 /// Batched multi-head fast block-sparse backward: the sparse
 /// counterpart of [`flash2_backward_batched`] — per-slice D epilogues,
 /// then every batch·head·row-block dQ item and batch·head·column-block
-/// dK/dV item through one pool per phase, each skipping its mask's zero
-/// blocks. Bitwise identical to the per-slice
-/// `attn::block_sparse::block_sparse2_backward` loop for any `workers`.
+/// dK/dV item through one pool per phase on `exec`, each skipping its
+/// mask's zero blocks. Bitwise identical to the per-slice
+/// `attn::block_sparse::block_sparse2_backward` loop for any worker
+/// count and pool mode.
 #[allow(clippy::too_many_arguments)]
 pub fn block_sparse2_backward_batched(
     q: &Tensor,
@@ -1107,55 +867,8 @@ pub fn block_sparse2_backward_batched(
     masks: &[BlockMask],
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
-) -> AttnGrads {
-    let plan = FaultPlan::none();
-    match sparse_backward_batched_core(
-        q, k, v, o, dout, stats, masks, cfg, blocks, workers, hbm, &plan, false,
-    ) {
-        Ok((grads, _)) => grads,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`block_sparse2_backward_batched`] with fault containment, retry, the
-/// finiteness guardrail and (optionally) fault injection.
-#[allow(clippy::too_many_arguments)]
-pub fn block_sparse2_backward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    dout: &Tensor,
-    stats: &BatchedAttnStats,
-    masks: &[BlockMask],
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(AttnGrads, FaultReport), AttnError> {
-    sparse_backward_batched_core(
-        q, k, v, o, dout, stats, masks, cfg, blocks, workers, hbm, plan, true,
-    )
-}
-
-#[allow(clippy::too_many_arguments)]
-fn sparse_backward_batched_core(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    dout: &Tensor,
-    stats: &BatchedAttnStats,
-    masks: &[BlockMask],
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-    validate: bool,
 ) -> Result<(AttnGrads, FaultReport), AttnError> {
     let (b, h, n, d) = dims4(q, "block_sparse2_backward_batched Q");
     let (bk, hk, n_k, dk) = dims4(k, "block_sparse2_backward_batched K");
@@ -1209,90 +922,147 @@ fn sparse_backward_batched_core(
         })
         .collect();
 
-    let dq_wins = split_windows(
-        &mut dq4.data,
-        (0..slices).flat_map(|_| (0..t_r).map(|rb| block_rows(rb, blocks.b_r, n) * d)),
-    );
-    let dq_items: Vec<DqItem<'_>> = dq_wins
-        .into_iter()
-        .enumerate()
-        .map(|(idx, dq_win)| DqItem { s: idx / t_r, rb: idx % t_r, dq_win })
-        .collect();
-    let dk_wins = split_windows(
-        &mut dk4.data,
-        (0..slices).flat_map(|_| (0..t_c).map(|cb| block_rows(cb, blocks.b_c, n_k) * d)),
-    );
-    let dv_wins = split_windows(
-        &mut dv4.data,
-        (0..slices).flat_map(|_| (0..t_c).map(|cb| block_rows(cb, blocks.b_c, n_k) * d)),
-    );
-    let dkv_items: Vec<DkvItem<'_>> = dk_wins
-        .into_iter()
-        .zip(dv_wins)
-        .enumerate()
-        .map(|(idx, (dk_win, dv_win))| {
-            DkvItem { s: idx / t_c, cb: idx % t_c, dk_win, dv_win }
+    let dq_items: Vec<DqItem> = (0..slices * t_r)
+        .map(|idx| {
+            let rb = idx % t_r;
+            DqItem { s: idx / t_r, rb, dq_win: vec![0.0; block_rows(rb, blocks.b_r, n) * d] }
         })
         .collect();
+    let dkv_items: Vec<DkvItem> = (0..slices * t_c)
+        .map(|idx| {
+            let cb = idx % t_c;
+            let cols = block_rows(cb, blocks.b_c, n_k);
+            DkvItem { s: idx / t_c, cb, dk_win: vec![0.0; cols * d], dv_win: vec![0.0; cols * d] }
+        })
+        .collect();
+
+    struct SparseBwd {
+        batch: SparseBatch,
+        dout: Vec<f32>,
+        lse: Vec<f32>,
+        d_vecs: Vec<Vec<f32>>,
+    }
+    let data = Arc::new(SparseBwd {
+        batch: SparseBatch {
+            q: q.data.clone(),
+            k: k.data.clone(),
+            v: v.data.clone(),
+            masks: masks.to_vec(),
+            per_cfg,
+            n,
+            n_k,
+            d,
+            h,
+            slices,
+            tile_base,
+        },
+        dout: dout.data.clone(),
+        lse: stats.lse.clone(),
+        d_vecs,
+    });
 
     // Phase 1: all slices' dQ row blocks through one pool.
-    let mut report =
-        run_pool_guarded(dq_items, workers, hbm, FaultSite::SparseDq, plan, validate, |it| {
-            let cfg_s = &per_cfg[it.s];
-            let mask = mask_for(masks, h, slices, it.s);
+    let dq_data = Arc::clone(&data);
+    let (dq_done, mut report) = exec
+        .run(dq_items, FaultSite::SparseDq, hbm, move |it: &mut DqItem| {
+            let bt = &dq_data.batch;
+            let cfg_s = &bt.per_cfg[it.s];
             sparse_dq_row_sweep(
-                &q.data[it.s * n * d..(it.s + 1) * n * d],
-                &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-                &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-                &dout.data[it.s * n * d..(it.s + 1) * n * d],
-                &stats.lse[it.s * n..(it.s + 1) * n],
-                &d_vecs[it.s],
-                n,
-                n_k,
-                d,
-                mask,
-                tile_base,
+                bt.qs(it.s),
+                bt.ks(it.s),
+                bt.vs(it.s),
+                &dq_data.dout[it.s * bt.n * bt.d..(it.s + 1) * bt.n * bt.d],
+                &dq_data.lse[it.s * bt.n..(it.s + 1) * bt.n],
+                &dq_data.d_vecs[it.s],
+                bt.n,
+                bt.n_k,
+                bt.d,
+                bt.mask(it.s),
+                bt.tile_base,
                 cfg_s,
                 blocks,
-                cfg_s.tau_for(d),
-                cfg_s.kv_limit(n_k),
+                cfg_s.tau_for(bt.d),
+                cfg_s.kv_limit(bt.n_k),
                 it.rb,
                 it.rb + 1,
-                it.dq_win,
+                &mut it.dq_win,
             )
         })
         .map_err(|e| e.located(h))?;
+    for it in dq_done {
+        let base = it.s * n * d + it.rb * blocks.b_r * d;
+        dq4.data[base..base + it.dq_win.len()].copy_from_slice(&it.dq_win);
+    }
 
     // Phase 2: all slices' dK/dV column blocks through one pool.
-    let dkv_report =
-        run_pool_guarded(dkv_items, workers, hbm, FaultSite::SparseDkv, plan, validate, |it| {
-            let cfg_s = &per_cfg[it.s];
-            let mask = mask_for(masks, h, slices, it.s);
+    let (dkv_done, dkv_report) = exec
+        .run(dkv_items, FaultSite::SparseDkv, hbm, move |it: &mut DkvItem| {
+            let bt = &data.batch;
+            let cfg_s = &bt.per_cfg[it.s];
+            let mask = bt.mask(it.s);
             dkv_col_sweep_filtered(
-                &q.data[it.s * n * d..(it.s + 1) * n * d],
-                &k.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-                &v.data[it.s * n_k * d..(it.s + 1) * n_k * d],
-                &dout.data[it.s * n * d..(it.s + 1) * n * d],
-                &stats.lse[it.s * n..(it.s + 1) * n],
-                &d_vecs[it.s],
-                n,
-                n_k,
-                d,
+                bt.qs(it.s),
+                bt.ks(it.s),
+                bt.vs(it.s),
+                &data.dout[it.s * bt.n * bt.d..(it.s + 1) * bt.n * bt.d],
+                &data.lse[it.s * bt.n..(it.s + 1) * bt.n],
+                &data.d_vecs[it.s],
+                bt.n,
+                bt.n_k,
+                bt.d,
                 cfg_s,
                 blocks,
-                cfg_s.tau_for(d),
-                cfg_s.kv_limit(n_k),
+                cfg_s.tau_for(bt.d),
+                cfg_s.kv_limit(bt.n_k),
                 it.cb,
                 it.cb + 1,
-                it.dk_win,
-                it.dv_win,
-                |i, j| mask.get(i, tile_base + j),
+                &mut it.dk_win,
+                &mut it.dv_win,
+                |i, j| mask.get(i, bt.tile_base + j),
             )
         })
         .map_err(|e| e.located(h))?;
+    for it in dkv_done {
+        let base = it.s * n_k * d + it.cb * blocks.b_c * d;
+        dk4.data[base..base + it.dk_win.len()].copy_from_slice(&it.dk_win);
+        dv4.data[base..base + it.dv_win.len()].copy_from_slice(&it.dv_win);
+    }
     report.merge(&dkv_report);
 
     Ok((AttnGrads { dq: dq4, dk: dk4, dv: dv4 }, report))
+}
+
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use block_sparse2_backward_batched with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse2_backward_batched_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    o: &Tensor,
+    dout: &Tensor,
+    stats: &BatchedAttnStats,
+    masks: &[BlockMask],
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    workers: usize,
+    hbm: &mut Hbm,
+    plan: &FaultPlan,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
+    block_sparse2_backward_batched(
+        q,
+        k,
+        v,
+        o,
+        dout,
+        stats,
+        masks,
+        cfg,
+        blocks,
+        &Exec::scoped(workers).with_plan(plan).validated(),
+        hbm,
+    )
 }
 
 #[cfg(test)]
@@ -1314,7 +1084,7 @@ mod tests {
         v: &Tensor,
         cfg: &AttnConfig,
         blocks: Blocks,
-        workers: usize,
+        exec: &Exec,
         hbm: &mut Hbm,
     ) -> BatchedFlash2Output {
         let (b, h, n, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
@@ -1323,7 +1093,7 @@ mod tests {
         for s in 0..b * h {
             let cfg_s = AttnConfig { bh_index: cfg.bh_index + s as u32, ..cfg.clone() };
             let (qs, ks, vs) = (bh_slice(q, s), bh_slice(k, s), bh_slice(v, s));
-            let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, workers, hbm);
+            let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, exec, hbm);
             o.data[s * n * d..(s + 1) * n * d].copy_from_slice(&f.o.data);
             lse.extend_from_slice(&f.lse);
         }
@@ -1334,7 +1104,8 @@ mod tests {
     fn batched_forward_bitwise_matches_per_slice_loop() {
         // The ISSUE grid: batch × heads × (n, n_k) rectangular × causal ×
         // kv_len × dropout × blocks × workers. Parity must be bitwise —
-        // the scheduler reuses the identical per-block sweeps.
+        // the scheduler reuses the identical per-block sweeps — and must
+        // hold on both the persistent pool and per-call scopes.
         for_each_case("batched_fwd_parity", 20, |rng| {
             let b = usize_in(rng, 1, 3);
             let h = usize_in(rng, 1, 3);
@@ -1346,6 +1117,8 @@ mod tests {
             let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
             let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
             let workers = usize_in(rng, 1, 6);
+            let exec =
+                if rng.next_f32() < 0.5 { Exec::new(workers) } else { Exec::scoped(workers) };
             let q = rand4(&[b, h, n, d], rng);
             let k = rand4(&[b, h, n_k, d], rng);
             let v = rand4(&[b, h, n_k, d], rng);
@@ -1353,12 +1126,15 @@ mod tests {
                 AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let ctx = format!(
                 "b={b} h={h} n={n} n_k={n_k} d={d} blocks=({},{}) causal={causal} \
-                 kv_len={kv_len:?} p={dropout_p} w={workers}",
-                blocks.b_r, blocks.b_c
+                 kv_len={kv_len:?} p={dropout_p} w={workers} scoped={}",
+                blocks.b_r,
+                blocks.b_c,
+                exec.is_scoped()
             );
-            let loop_out = per_slice_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
-            let batched =
-                flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            let loop_out =
+                per_slice_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
+            let (batched, _) =
+                flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut Hbm::new()).unwrap();
             assert_eq!(batched.o.data, loop_out.o.data, "O not bitwise equal: {ctx}");
             assert_eq!(batched.stats.lse, loop_out.stats.lse, "lse not bitwise equal: {ctx}");
         });
@@ -1377,6 +1153,8 @@ mod tests {
             let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
             let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
             let workers = usize_in(rng, 1, 6);
+            let exec =
+                if rng.next_f32() < 0.5 { Exec::new(workers) } else { Exec::scoped(workers) };
             let q = rand4(&[b, h, n, d], rng);
             let k = rand4(&[b, h, n_k, d], rng);
             let v = rand4(&[b, h, n_k, d], rng);
@@ -1385,13 +1163,17 @@ mod tests {
                 AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let ctx = format!(
                 "b={b} h={h} n={n} n_k={n_k} d={d} blocks=({},{}) causal={causal} \
-                 kv_len={kv_len:?} p={dropout_p} w={workers}",
-                blocks.b_r, blocks.b_c
+                 kv_len={kv_len:?} p={dropout_p} w={workers} scoped={}",
+                blocks.b_r,
+                blocks.b_c,
+                exec.is_scoped()
             );
-            let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
-            let batched = flash2_backward_batched(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut Hbm::new(),
-            );
+            let (fwd, _) =
+                flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut Hbm::new()).unwrap();
+            let (batched, _) = flash2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &exec, &mut Hbm::new(),
+            )
+            .unwrap();
             // Per-slice loop on identical inputs.
             let (mut dq, mut dk, mut dv) = (
                 Tensor::zeros(&[b, h, n, d]),
@@ -1404,7 +1186,15 @@ mod tests {
                 let os = bh_slice(&fwd.o, s);
                 let dos = bh_slice(&dout, s);
                 let g = flash2_backward(
-                    &qs, &ks, &vs, &os, &dos, fwd.stats.slice(s), &cfg_s, blocks, 1,
+                    &qs,
+                    &ks,
+                    &vs,
+                    &os,
+                    &dos,
+                    fwd.stats.slice(s),
+                    &cfg_s,
+                    blocks,
+                    &Exec::scoped(1),
                     &mut Hbm::new(),
                 );
                 dq.data[s * n * d..(s + 1) * n * d].copy_from_slice(&g.dq.data);
@@ -1420,36 +1210,60 @@ mod tests {
     #[test]
     fn batched_deterministic_and_traffic_invariant_across_worker_counts() {
         // Output bitwise identical AND instrumented HBM totals identical
-        // for any worker count — scheduling must change neither numerics
-        // nor modeled traffic.
+        // for any worker count and either pool mode — scheduling must
+        // change neither numerics nor modeled traffic.
         let mut rng = SplitMix64::new(31);
         let (b, h, n, d) = (2usize, 3usize, 40usize, 8usize);
         let q = rand4(&[b, h, n, d], &mut rng);
         let k = rand4(&[b, h, n, d], &mut rng);
         let v = rand4(&[b, h, n, d], &mut rng);
         let dout = rand4(&[b, h, n, d], &mut rng);
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(8, 8);
         let mut h1 = Hbm::new();
-        let base = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut h1);
+        let (base, _) =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::scoped(1), &mut h1).unwrap();
         let mut hb1 = Hbm::new();
-        let gbase = flash2_backward_batched(
-            &q, &k, &v, &base.o, &dout, &base.stats, &cfg, blocks, 1, &mut hb1,
-        );
+        let (gbase, _) = flash2_backward_batched(
+            &q,
+            &k,
+            &v,
+            &base.o,
+            &dout,
+            &base.stats,
+            &cfg,
+            blocks,
+            &Exec::scoped(1),
+            &mut hb1,
+        )
+        .unwrap();
         for workers in [2usize, 3, 5, 8, 64] {
-            let mut hw = Hbm::new();
-            let multi = flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut hw);
-            assert_eq!(base.o.data, multi.o.data, "O at workers={workers}");
-            assert_eq!(base.stats.lse, multi.stats.lse, "lse at workers={workers}");
-            assert_eq!((h1.loads, h1.stores), (hw.loads, hw.stores), "fwd hbm at w={workers}");
-            let mut hbw = Hbm::new();
-            let g = flash2_backward_batched(
-                &q, &k, &v, &base.o, &dout, &base.stats, &cfg, blocks, workers, &mut hbw,
-            );
-            assert_eq!(gbase.dq.data, g.dq.data, "dQ at workers={workers}");
-            assert_eq!(gbase.dk.data, g.dk.data, "dK at workers={workers}");
-            assert_eq!(gbase.dv.data, g.dv.data, "dV at workers={workers}");
-            assert_eq!((hb1.loads, hb1.stores), (hbw.loads, hbw.stores), "bwd hbm at w={workers}");
+            for exec in [Exec::new(workers), Exec::scoped(workers)] {
+                let mode = if exec.is_scoped() { "scoped" } else { "persistent" };
+                let mut hw = Hbm::new();
+                let (multi, _) =
+                    flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut hw).unwrap();
+                assert_eq!(base.o.data, multi.o.data, "O at {mode} workers={workers}");
+                assert_eq!(base.stats.lse, multi.stats.lse, "lse at {mode} workers={workers}");
+                assert_eq!(
+                    (h1.loads, h1.stores),
+                    (hw.loads, hw.stores),
+                    "fwd hbm at {mode} w={workers}"
+                );
+                let mut hbw = Hbm::new();
+                let (g, _) = flash2_backward_batched(
+                    &q, &k, &v, &base.o, &dout, &base.stats, &cfg, blocks, &exec, &mut hbw,
+                )
+                .unwrap();
+                assert_eq!(gbase.dq.data, g.dq.data, "dQ at {mode} workers={workers}");
+                assert_eq!(gbase.dk.data, g.dk.data, "dK at {mode} workers={workers}");
+                assert_eq!(gbase.dv.data, g.dv.data, "dV at {mode} workers={workers}");
+                assert_eq!(
+                    (hb1.loads, hb1.stores),
+                    (hbw.loads, hbw.stores),
+                    "bwd hbm at {mode} w={workers}"
+                );
+            }
         }
     }
 
@@ -1462,15 +1276,20 @@ mod tests {
         let q = rand4(&[b, h, n, d], &mut rng);
         let k = rand4(&[b, h, n, d], &mut rng);
         let v = rand4(&[b, h, n, d], &mut rng);
-        let cfg = AttnConfig { causal: true, kv_len: Some(5), ..Default::default() };
+        let cfg = AttnConfig::new().causal().kv_len(5);
         let blocks = Blocks::explicit(2, 3);
-        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let exec = Exec::new(2);
+        let (fwd, _) =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut Hbm::new()).unwrap();
         let dout = Tensor::full(&[b, h, n, d], 1.0);
-        let g = flash2_backward_batched(
-            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 2, &mut Hbm::new(),
-        );
+        let (g, _) = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &exec, &mut Hbm::new(),
+        )
+        .unwrap();
         let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
-            flash2_forward_batched(q_, k_, v_, &cfg, blocks, 1, &mut Hbm::new())
+            flash2_forward_batched(q_, k_, v_, &cfg, blocks, &Exec::new(1), &mut Hbm::new())
+                .unwrap()
+                .0
                 .o
                 .data
                 .iter()
@@ -1510,13 +1329,15 @@ mod tests {
         let k = rand4(&[b, h, n, d], &mut rng);
         let v = rand4(&[b, h, n, d], &mut rng);
         let dout = rand4(&[b, h, n, d], &mut rng);
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(4, 4);
-        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let exec = Exec::new(3);
+        let (fwd, _) =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut Hbm::new()).unwrap();
         let grads: Vec<AttnGrads> = [
             BackwardKernel::Standard,
             BackwardKernel::Flash,
-            BackwardKernel::Flash2 { workers: 3 },
+            BackwardKernel::Flash2 { exec: &exec },
         ]
         .into_iter()
         .map(|kernel| {
@@ -1553,15 +1374,17 @@ mod tests {
                 n: 24,
                 n_k: hi - lo,
                 d: 8,
-                cfg: AttnConfig { kv_len: kv, ..Default::default() },
+                cfg: AttnConfig::new().kv_len(kv.unwrap()),
             })
             .collect();
-        let outs = flash2_forward_many(&slices, blocks, 3, &mut Hbm::new());
+        let (outs, _) = flash2_forward_many(&slices, blocks, &Exec::new(3), &mut Hbm::new())
+            .unwrap();
         for (i, (&(lo, hi, kv), out)) in ranges.iter().zip(&outs).enumerate() {
             let ks = k.slice_rows(lo, hi);
             let vs = v.slice_rows(lo, hi);
             let cfg = AttnConfig { kv_len: kv, ..Default::default() };
-            let reference = flash2_forward(&q, &ks, &vs, &cfg, blocks, 1, &mut Hbm::new());
+            let reference =
+                flash2_forward(&q, &ks, &vs, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
             assert_eq!(out.o.data, reference.o.data, "shard {i} O");
             assert_eq!(out.lse, reference.lse, "shard {i} lse");
         }
@@ -1577,15 +1400,26 @@ mod tests {
         let k = Tensor::zeros(&[b, h, 0, d]);
         let v = Tensor::zeros(&[b, h, 0, d]);
         let blocks = Blocks::explicit(4, 4);
-        let fwd =
-            flash2_forward_batched(&q, &k, &v, &AttnConfig::default(), blocks, 2, &mut Hbm::new());
+        let exec = Exec::new(2);
+        let cfg = AttnConfig::default();
+        let (fwd, _) =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut Hbm::new()).unwrap();
         assert!(fwd.o.data.iter().all(|&x| x == 0.0));
         assert!(fwd.stats.lse.iter().all(|&x| x == f32::NEG_INFINITY));
         let dout = Tensor::full(&[b, h, n, d], 1.0);
-        let g = flash2_backward_batched(
-            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &AttnConfig::default(), blocks, 2,
+        let (g, _) = flash2_backward_batched(
+            &q,
+            &k,
+            &v,
+            &fwd.o,
+            &dout,
+            &fwd.stats,
+            &cfg,
+            blocks,
+            &exec,
             &mut Hbm::new(),
-        );
+        )
+        .unwrap();
         assert!(g.dq.data.iter().all(|&x| x == 0.0));
         assert_eq!(g.dk.numel(), 0);
         assert_eq!(g.dv.numel(), 0);
@@ -1602,26 +1436,38 @@ mod tests {
         let v = rand4(&[b, h, n, d], &mut rng);
         let blocks = Blocks::explicit(8, 8);
         let cfg = AttnConfig::default();
+        let exec = Exec::new(3);
         let mut h_batched = Hbm::new();
-        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 3, &mut h_batched);
+        let (fwd, _) =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut h_batched).unwrap();
         let mut h_slice = Hbm::new();
         let qs = bh_slice(&q, 0);
         let ks = bh_slice(&k, 0);
         let vs = bh_slice(&v, 0);
-        flash2_forward(&qs, &ks, &vs, &cfg, blocks, 1, &mut h_slice);
+        flash2_forward(&qs, &ks, &vs, &cfg, blocks, &Exec::scoped(1), &mut h_slice);
         assert_eq!(h_batched.loads, 4 * h_slice.loads);
         assert_eq!(h_batched.stores, 4 * h_slice.stores);
         // Backward too.
         let dout = rand4(&[b, h, n, d], &mut rng);
         let mut hb_batched = Hbm::new();
         flash2_backward_batched(
-            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 3, &mut hb_batched,
-        );
-        let f = flash2_forward(&qs, &ks, &vs, &cfg, blocks, 1, &mut Hbm::new());
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &exec, &mut hb_batched,
+        )
+        .unwrap();
+        let f = flash2_forward(&qs, &ks, &vs, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
         let mut hb_slice = Hbm::new();
         let dos = bh_slice(&dout, 0);
         flash2_backward(
-            &qs, &ks, &vs, &f.o, &dos, f.stats(), &cfg, blocks, 1, &mut hb_slice,
+            &qs,
+            &ks,
+            &vs,
+            &f.o,
+            &dos,
+            f.stats(),
+            &cfg,
+            blocks,
+            &Exec::scoped(1),
+            &mut hb_slice,
         );
         assert_eq!(hb_batched.loads, 4 * hb_slice.loads);
         assert_eq!(hb_batched.stores, 4 * hb_slice.stores);
@@ -1632,7 +1478,7 @@ mod tests {
         // The sparse scheduler contract, per-head masks included: a
         // [b, h, n, d] workload through block_sparse2_forward_batched /
         // _backward_batched must be BITWISE equal to the per-slice
-        // block_sparse2 loop, for any worker count.
+        // block_sparse2 loop, for any worker count and pool mode.
         use crate::attn::block_sparse::{block_sparse2_backward, block_sparse2_forward};
         for_each_case("sparse_batched_parity", 12, |rng| {
             let b = usize_in(rng, 1, 2);
@@ -1646,6 +1492,8 @@ mod tests {
             let kv_len = if rng.next_f32() < 0.5 { Some(usize_in(rng, 1, n_k)) } else { None };
             let dropout_p = if rng.next_f32() < 0.3 { 0.2 } else { 0.0 };
             let workers = usize_in(rng, 1, 6);
+            let exec =
+                if rng.next_f32() < 0.5 { Exec::new(workers) } else { Exec::scoped(workers) };
             // Per-head masks (shared across the batch): butterfly for
             // even heads, local_global for odd.
             let masks: Vec<BlockMask> = (0..h)
@@ -1665,21 +1513,24 @@ mod tests {
                 AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let ctx = format!(
                 "b={b} h={h} n={n} n_k={n_k} d={d} causal={causal} kv_len={kv_len:?} \
-                 p={dropout_p} w={workers}"
+                 p={dropout_p} w={workers} scoped={}",
+                exec.is_scoped()
             );
-            let bfwd = block_sparse2_forward_batched(
-                &q, &k, &v, &masks, &cfg, blocks, workers, &mut Hbm::new(),
-            );
-            let bg = block_sparse2_backward_batched(
-                &q, &k, &v, &bfwd.o, &dout, &bfwd.stats, &masks, &cfg, blocks, workers,
+            let (bfwd, _) = block_sparse2_forward_batched(
+                &q, &k, &v, &masks, &cfg, blocks, &exec, &mut Hbm::new(),
+            )
+            .unwrap();
+            let (bg, _) = block_sparse2_backward_batched(
+                &q, &k, &v, &bfwd.o, &dout, &bfwd.stats, &masks, &cfg, blocks, &exec,
                 &mut Hbm::new(),
-            );
+            )
+            .unwrap();
             for s in 0..b * h {
                 let cfg_s = AttnConfig { bh_index: s as u32, ..cfg.clone() };
                 let mask = &masks[s % h];
                 let (qs, ks, vs) = (bh_slice(&q, s), bh_slice(&k, s), bh_slice(&v, s));
                 let f = block_sparse2_forward(
-                    &qs, &ks, &vs, mask, &cfg_s, blocks, 1, &mut Hbm::new(),
+                    &qs, &ks, &vs, mask, &cfg_s, blocks, &Exec::scoped(1), &mut Hbm::new(),
                 );
                 assert_eq!(
                     &bfwd.o.data[s * n * d..(s + 1) * n * d],
@@ -1688,8 +1539,17 @@ mod tests {
                 );
                 assert_eq!(&bfwd.stats.lse[s * n..(s + 1) * n], &f.lse[..], "lse {s}: {ctx}");
                 let g = block_sparse2_backward(
-                    &qs, &ks, &vs, &f.o, &bh_slice(&dout, s), f.stats(), mask, &cfg_s, blocks,
-                    1, &mut Hbm::new(),
+                    &qs,
+                    &ks,
+                    &vs,
+                    &f.o,
+                    &bh_slice(&dout, s),
+                    f.stats(),
+                    mask,
+                    &cfg_s,
+                    blocks,
+                    &Exec::scoped(1),
+                    &mut Hbm::new(),
                 );
                 assert_eq!(
                     &bg.dq.data[s * n * d..(s + 1) * n * d],
@@ -1721,28 +1581,109 @@ mod tests {
         let v = rand4(&[b, h, n, d], &mut rng);
         let dout = rand4(&[b, h, n, d], &mut rng);
         let masks = vec![BlockMask::butterfly(4, 4)];
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(8, 8);
         let mut h1 = Hbm::new();
-        let base = block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut h1);
+        let (base, _) = block_sparse2_forward_batched(
+            &q,
+            &k,
+            &v,
+            &masks,
+            &cfg,
+            blocks,
+            &Exec::scoped(1),
+            &mut h1,
+        )
+        .unwrap();
         let mut hb1 = Hbm::new();
-        let gbase = block_sparse2_backward_batched(
-            &q, &k, &v, &base.o, &dout, &base.stats, &masks, &cfg, blocks, 1, &mut hb1,
-        );
+        let (gbase, _) = block_sparse2_backward_batched(
+            &q,
+            &k,
+            &v,
+            &base.o,
+            &dout,
+            &base.stats,
+            &masks,
+            &cfg,
+            blocks,
+            &Exec::scoped(1),
+            &mut hb1,
+        )
+        .unwrap();
         for workers in [2usize, 5, 16] {
-            let mut hw = Hbm::new();
-            let multi =
-                block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, workers, &mut hw);
-            assert_eq!(base.o.data, multi.o.data, "O at workers={workers}");
-            assert_eq!((h1.loads, h1.stores), (hw.loads, hw.stores), "fwd hbm at w={workers}");
-            let mut hbw = Hbm::new();
-            let g = block_sparse2_backward_batched(
-                &q, &k, &v, &base.o, &dout, &base.stats, &masks, &cfg, blocks, workers, &mut hbw,
-            );
-            assert_eq!(gbase.dq.data, g.dq.data, "dQ at workers={workers}");
-            assert_eq!(gbase.dk.data, g.dk.data, "dK at workers={workers}");
-            assert_eq!(gbase.dv.data, g.dv.data, "dV at workers={workers}");
-            assert_eq!((hb1.loads, hb1.stores), (hbw.loads, hbw.stores), "bwd hbm at w={workers}");
+            for exec in [Exec::new(workers), Exec::scoped(workers)] {
+                let mode = if exec.is_scoped() { "scoped" } else { "persistent" };
+                let mut hw = Hbm::new();
+                let (multi, _) = block_sparse2_forward_batched(
+                    &q, &k, &v, &masks, &cfg, blocks, &exec, &mut hw,
+                )
+                .unwrap();
+                assert_eq!(base.o.data, multi.o.data, "O at {mode} workers={workers}");
+                assert_eq!(
+                    (h1.loads, h1.stores),
+                    (hw.loads, hw.stores),
+                    "fwd hbm at {mode} w={workers}"
+                );
+                let mut hbw = Hbm::new();
+                let (g, _) = block_sparse2_backward_batched(
+                    &q, &k, &v, &base.o, &dout, &base.stats, &masks, &cfg, blocks, &exec,
+                    &mut hbw,
+                )
+                .unwrap();
+                assert_eq!(gbase.dq.data, g.dq.data, "dQ at {mode} workers={workers}");
+                assert_eq!(gbase.dk.data, g.dk.data, "dK at {mode} workers={workers}");
+                assert_eq!(gbase.dv.data, g.dv.data, "dV at {mode} workers={workers}");
+                assert_eq!(
+                    (hb1.loads, hb1.stores),
+                    (hbw.loads, hbw.stores),
+                    "bwd hbm at {mode} w={workers}"
+                );
+            }
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_checked_shims_still_work() {
+        // Satellite contract: the six pre-Exec `_checked` twins survive
+        // as thin shims with identical behaviour (per-call scope + plan +
+        // guardrail), so out-of-tree callers migrate gradually.
+        let mut rng = SplitMix64::new(47);
+        let (b, h, n, d) = (1usize, 2usize, 16usize, 4usize);
+        let q = rand4(&[b, h, n, d], &mut rng);
+        let k = rand4(&[b, h, n, d], &mut rng);
+        let v = rand4(&[b, h, n, d], &mut rng);
+        let dout = rand4(&[b, h, n, d], &mut rng);
+        let cfg = AttnConfig::new().causal();
+        let blocks = Blocks::explicit(4, 4);
+        let plan = FaultPlan::none();
+        let exec = Exec::scoped(2);
+        let (fwd, _) = flash2_forward_batched_checked(
+            &q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan,
+        )
+        .unwrap();
+        let (canon, _) =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut Hbm::new()).unwrap();
+        assert_eq!(fwd.o.data, canon.o.data);
+        let (g, _) = flash2_backward_batched_checked(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 2, &mut Hbm::new(), &plan,
+        )
+        .unwrap();
+        let (gc, _) = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &exec, &mut Hbm::new(),
+        )
+        .unwrap();
+        assert_eq!(g.dq.data, gc.dq.data);
+        let masks = vec![BlockMask::butterfly(4, 4)];
+        let (sf, _) = block_sparse2_forward_batched_checked(
+            &q, &k, &v, &masks, &cfg, blocks, 2, &mut Hbm::new(), &plan,
+        )
+        .unwrap();
+        let (sg, _) = block_sparse2_backward_batched_checked(
+            &q, &k, &v, &sf.o, &dout, &sf.stats, &masks, &cfg, blocks, 2, &mut Hbm::new(), &plan,
+        )
+        .unwrap();
+        assert_eq!(sf.o.shape, vec![b, h, n, d]);
+        assert_eq!(sg.dq.shape, vec![b, h, n, d]);
     }
 }

@@ -30,7 +30,10 @@
 //! access-for-access in `rust/tests/io_complexity.rs`, and traffic is
 //! strictly decreasing in the number of live blocks (Proposition 4).
 
-use super::batched::{block_rows, run_pool, split_windows, DkvItem, DqItem, FwdItem};
+use std::sync::Arc;
+
+use super::batched::{block_rows, DkvItem, DqItem, FwdItem};
+use super::exec::Exec;
 use super::faults::FaultSite;
 use super::flash::{tile_fully_unmasked, Blocks};
 use super::flash2::{
@@ -193,9 +196,13 @@ pub fn block_sparse_forward(
 /// shifts the slice's mask window, see the module docs). Per row block,
 /// Q loads once and the accumulators live on chip for the whole sweep;
 /// only live column tiles load K/V; O and the logsumexp store exactly
-/// once. `workers` bounds the thread count; the result is bitwise
-/// independent of it, and with a dense mask bitwise identical to
-/// `flash2_forward`.
+/// once. Work runs on `exec` (persistent pool or per-call scope, with
+/// `exec`'s fault plan and guardrail honored); the result is bitwise
+/// independent of the worker count and pool mode, and with a dense mask
+/// bitwise identical to `flash2_forward`. Per the per-slice kernel
+/// contract a work item that exhausts its retry budget panics with the
+/// typed error — callers needing `Result` use the batched entry points.
+#[allow(clippy::too_many_arguments)]
 pub fn block_sparse2_forward(
     q: &Tensor,
     k: &Tensor,
@@ -203,7 +210,7 @@ pub fn block_sparse2_forward(
     mask: &BlockMask,
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
 ) -> Flash2Output {
     let (n, d) = (q.rows(), q.cols());
@@ -224,41 +231,33 @@ pub fn block_sparse2_forward(
     let tile_base = mask_tile_base(cfg.kv_offset, blocks.b_c);
     check_mask_geometry(mask, t_r, tile_base, n_k.div_ceil(blocks.b_c));
 
-    let (qd, kd, vd) = (q.data.as_slice(), k.data.as_slice(), v.data.as_slice());
-
-    // One work item per Q row block through the shared fault-tolerant
-    // pool (invariant R1): disjoint O/lse windows, self-contained
-    // per-block arithmetic, so output and traffic are bitwise identical
-    // to the per-worker chunk partition this replaces — for any worker
-    // count — and the audit feature covers the partition.
-    let o_wins = split_windows(&mut o.data, (0..t_r).map(|rb| block_rows(rb, b_r, n) * d));
-    let lse_wins = split_windows(&mut lse, (0..t_r).map(|rb| block_rows(rb, b_r, n)));
-    let items: Vec<FwdItem<'_>> = o_wins
-        .into_iter()
-        .zip(lse_wins)
-        .enumerate()
-        .map(|(rb, (o_win, lse_win))| FwdItem { s: 0, rb, o_win, lse_win })
+    // One work item per Q row block through the execution plane
+    // (invariant R1): each item owns its O/lse windows outright and the
+    // per-block arithmetic is self-contained, so output and traffic are
+    // bitwise identical to the per-worker chunk partition this replaces
+    // — for any worker count and pool mode — and the audit feature
+    // covers the partition.
+    let items: Vec<FwdItem> = (0..t_r)
+        .map(|rb| {
+            let rows = block_rows(rb, b_r, n);
+            FwdItem { s: 0, rb, o_win: vec![0.0; rows * d], lse_win: vec![0.0; rows] }
+        })
         .collect();
-    run_pool(items, workers, hbm, FaultSite::SparseFwd, |it| {
-        sparse_row_block_sweep(
-            qd,
-            kd,
-            vd,
-            n,
-            n_k,
-            d,
-            mask,
-            tile_base,
-            cfg,
-            blocks,
-            tau,
-            kv_limit,
-            it.rb,
-            it.rb + 1,
-            it.o_win,
-            it.lse_win,
-        )
-    });
+    let (qd, kd, vd) = (q.data.clone(), k.data.clone(), v.data.clone());
+    let (mask_o, cfg_o) = (mask.clone(), cfg.clone());
+    let (done, _report) = exec
+        .run(items, FaultSite::SparseFwd, hbm, move |it: &mut FwdItem| {
+            sparse_row_block_sweep(
+                &qd, &kd, &vd, n, n_k, d, &mask_o, tile_base, &cfg_o, blocks, tau, kv_limit,
+                it.rb, it.rb + 1, &mut it.o_win, &mut it.lse_win,
+            )
+        })
+        .unwrap_or_else(|e| panic!("block_sparse2_forward: retries exhausted: {e:?}"));
+    for it in done {
+        let r0 = it.rb * b_r;
+        o.data[r0 * d..r0 * d + it.o_win.len()].copy_from_slice(&it.o_win);
+        lse[r0..r0 + it.lse_win.len()].copy_from_slice(&it.lse_win);
+    }
 
     Flash2Output { o, lse }
 }
@@ -337,11 +336,12 @@ pub(crate) fn sparse_row_block_sweep(
 /// 2 (column-parallel dK/dV) never streams a zero block's Q/dO. `D =
 /// rowsum(dO ∘ O)` is precomputed in one epilogue pass; both phases
 /// recompute `P = exp(s − L)` from the forward's logsumexp and fan out
-/// over `std::thread::scope` workers with bitwise
-/// worker-count-independent output. With a dense mask this is
+/// as work items on `exec` with bitwise worker-count- and
+/// pool-mode-independent output. With a dense mask this is
 /// `flash2_backward` bit for bit. Rows whose logsumexp is `-inf`
 /// (fully masked, including rows with no live block at all) contribute
-/// zero gradient everywhere.
+/// zero gradient everywhere. Retry exhaustion panics with the typed
+/// error (per-slice kernel contract).
 #[allow(clippy::too_many_arguments)]
 pub fn block_sparse2_backward(
     q: &Tensor,
@@ -353,7 +353,7 @@ pub fn block_sparse2_backward(
     mask: &BlockMask,
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
 ) -> AttnGrads {
     let (n, d) = (q.rows(), q.cols());
@@ -382,71 +382,88 @@ pub fn block_sparse2_backward(
     hbm.load(2 * n * d);
     let d_vec: Vec<f32> = (0..n).map(|r| dot4(dout.row(r), o.row(r))).collect();
     hbm.store(n);
-    let lse = stats.to_lse_vec();
-    let (qd, kd, vd, dod) =
-        (q.data.as_slice(), k.data.as_slice(), v.data.as_slice(), dout.data.as_slice());
+
+    // One owned snapshot of the slice, shared by both phases' closures.
+    struct Shared {
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        dout: Vec<f32>,
+        lse: Vec<f32>,
+        d_vec: Vec<f32>,
+        mask: BlockMask,
+        cfg: AttnConfig,
+    }
+    let data = Arc::new(Shared {
+        q: q.data.clone(),
+        k: k.data.clone(),
+        v: v.data.clone(),
+        dout: dout.data.clone(),
+        lse: stats.to_lse_vec(),
+        d_vec,
+        mask: mask.clone(),
+        cfg: cfg.clone(),
+    });
 
     // Phase 1: dQ with a Q-outer sweep, one work item per row block
-    // through the shared fault-tolerant pool (invariant R1) — bitwise
-    // identical to the per-worker chunk partition it replaces.
-    let dq_wins = split_windows(&mut dq.data, (0..t_r).map(|rb| block_rows(rb, b_r, n) * d));
-    let dq_items: Vec<DqItem<'_>> =
-        dq_wins.into_iter().enumerate().map(|(rb, dq_win)| DqItem { s: 0, rb, dq_win }).collect();
-    run_pool(dq_items, workers, hbm, FaultSite::SparseDq, |it| {
-        sparse_dq_row_sweep(
-            qd,
-            kd,
-            vd,
-            dod,
-            &lse,
-            &d_vec,
-            n,
-            n_k,
-            d,
-            mask,
-            tile_base,
-            cfg,
-            blocks,
-            tau,
-            kv_limit,
-            it.rb,
-            it.rb + 1,
-            it.dq_win,
-        )
-    });
+    // through the execution plane (invariant R1) — bitwise identical to
+    // the per-worker chunk partition it replaces.
+    let dq_items: Vec<DqItem> = (0..t_r)
+        .map(|rb| DqItem { s: 0, rb, dq_win: vec![0.0; block_rows(rb, b_r, n) * d] })
+        .collect();
+    let dq_data = Arc::clone(&data);
+    let (dq_done, _) = exec
+        .run(dq_items, FaultSite::SparseDq, hbm, move |it: &mut DqItem| {
+            let sh = &dq_data;
+            sparse_dq_row_sweep(
+                &sh.q, &sh.k, &sh.v, &sh.dout, &sh.lse, &sh.d_vec, n, n_k, d, &sh.mask,
+                tile_base, &sh.cfg, blocks, tau, kv_limit, it.rb, it.rb + 1, &mut it.dq_win,
+            )
+        })
+        .unwrap_or_else(|e| panic!("block_sparse2_backward: retries exhausted: {e:?}"));
+    for it in dq_done {
+        let r0 = it.rb * b_r;
+        dq.data[r0 * d..r0 * d + it.dq_win.len()].copy_from_slice(&it.dq_win);
+    }
 
     // Phase 2: dK/dV with the column-block-parallel sweep, one item per
     // column block; the filter skips a zero block's whole Q/dO stream.
-    let dk_wins = split_windows(&mut dk.data, (0..t_c).map(|cb| block_rows(cb, b_c, n_k) * d));
-    let dv_wins = split_windows(&mut dv.data, (0..t_c).map(|cb| block_rows(cb, b_c, n_k) * d));
-    let dkv_items: Vec<DkvItem<'_>> = dk_wins
-        .into_iter()
-        .zip(dv_wins)
-        .enumerate()
-        .map(|(cb, (dk_win, dv_win))| DkvItem { s: 0, cb, dk_win, dv_win })
+    let dkv_items: Vec<DkvItem> = (0..t_c)
+        .map(|cb| {
+            let cols = block_rows(cb, b_c, n_k);
+            DkvItem { s: 0, cb, dk_win: vec![0.0; cols * d], dv_win: vec![0.0; cols * d] }
+        })
         .collect();
-    run_pool(dkv_items, workers, hbm, FaultSite::SparseDkv, |it| {
-        dkv_col_sweep_filtered(
-            qd,
-            kd,
-            vd,
-            dod,
-            &lse,
-            &d_vec,
-            n,
-            n_k,
-            d,
-            cfg,
-            blocks,
-            tau,
-            kv_limit,
-            it.cb,
-            it.cb + 1,
-            it.dk_win,
-            it.dv_win,
-            |i, j| mask.get(i, tile_base + j),
-        )
-    });
+    let (dkv_done, _) = exec
+        .run(dkv_items, FaultSite::SparseDkv, hbm, move |it: &mut DkvItem| {
+            let sh = &data;
+            dkv_col_sweep_filtered(
+                &sh.q,
+                &sh.k,
+                &sh.v,
+                &sh.dout,
+                &sh.lse,
+                &sh.d_vec,
+                n,
+                n_k,
+                d,
+                &sh.cfg,
+                blocks,
+                tau,
+                kv_limit,
+                it.cb,
+                it.cb + 1,
+                &mut it.dk_win,
+                &mut it.dv_win,
+                |i, j| sh.mask.get(i, tile_base + j),
+            )
+        })
+        .unwrap_or_else(|e| panic!("block_sparse2_backward: retries exhausted: {e:?}"));
+    for it in dkv_done {
+        let c0 = it.cb * b_c;
+        dk.data[c0 * d..c0 * d + it.dk_win.len()].copy_from_slice(&it.dk_win);
+        dv.data[c0 * d..c0 * d + it.dv_win.len()].copy_from_slice(&it.dv_win);
+    }
 
     AttnGrads { dq, dk, dv }
 }
@@ -737,9 +754,11 @@ mod tests {
                 AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let blocks = Blocks::explicit(b_r, b_c);
             let dense = BlockMask::dense(n.div_ceil(b_r), n_k.div_ceil(b_c));
-            let fast = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+            let exec =
+                if rng.next_f32() < 0.5 { Exec::new(workers) } else { Exec::scoped(workers) };
+            let fast = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
             let sparse =
-                block_sparse2_forward(&q, &k, &v, &dense, &cfg, blocks, workers, &mut Hbm::new());
+                block_sparse2_forward(&q, &k, &v, &dense, &cfg, blocks, &exec, &mut Hbm::new());
             let ctx = format!(
                 "n={n} n_k={n_k} d={d} blocks=({b_r},{b_c}) causal={causal} \
                  kv_len={kv_len:?} p={dropout_p} w={workers}"
@@ -769,12 +788,15 @@ mod tests {
                 AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let blocks = Blocks::explicit(b_r, b_c);
             let dense = BlockMask::dense(n.div_ceil(b_r), n_k.div_ceil(b_c));
-            let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+            let exec =
+                if rng.next_f32() < 0.5 { Exec::new(workers) } else { Exec::scoped(workers) };
+            let one = Exec::scoped(1);
+            let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &one, &mut Hbm::new());
             let fast = flash2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 1, &mut Hbm::new(),
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &one, &mut Hbm::new(),
             );
             let sparse = block_sparse2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &dense, &cfg, blocks, workers,
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &dense, &cfg, blocks, &exec,
                 &mut Hbm::new(),
             );
             let ctx = format!(
@@ -813,8 +835,9 @@ mod tests {
                 kv_len,
                 ..Default::default()
             };
-            let fast =
-                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 3, &mut Hbm::new());
+            let fast = block_sparse2_forward(
+                &q, &k, &v, &mask, &cfg, blocks, &Exec::new(3), &mut Hbm::new(),
+            );
             let oracle = sparse_oracle_forward(&q, &k, &v, &mask, &cfg, blocks);
             let diff = fast.o.max_abs_diff(&oracle);
             assert!(
@@ -834,7 +857,9 @@ mod tests {
         for mask in [BlockMask::butterfly(8, 8), BlockMask::local_global(8, 8, 1, 1)] {
             let cfg = AttnConfig::default();
             let slow = block_sparse_forward(&q, &k, &v, &mask, &cfg, blocks, &mut Hbm::new());
-            let fast = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+            let fast = block_sparse2_forward(
+                &q, &k, &v, &mask, &cfg, blocks, &Exec::new(2), &mut Hbm::new(),
+            );
             assert!(slow.o.max_abs_diff(&fast.o) < 1e-5);
         }
     }
@@ -860,13 +885,17 @@ mod tests {
                 BlockMask::local_global(6, 6, 1, 1)
             };
             let cfg = AttnConfig { causal, dropout_p, dropout_seed: 3, ..Default::default() };
-            let fwd = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+            let ex2 = Exec::new(2);
+            let fwd =
+                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &ex2, &mut Hbm::new());
             let dout = Tensor::full(&[n, d], 1.0);
             let g = block_sparse2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, 2, &mut Hbm::new(),
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, &ex2,
+                &mut Hbm::new(),
             );
+            let ex1 = Exec::new(1);
             let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
-                block_sparse2_forward(q_, k_, v_, &mask, &cfg, blocks, 1, &mut Hbm::new())
+                block_sparse2_forward(q_, k_, v_, &mask, &cfg, blocks, &ex1, &mut Hbm::new())
                     .o
                     .data
                     .iter()
@@ -908,22 +937,27 @@ mod tests {
         let blocks = Blocks::explicit(8, 8);
         let mut rng = SplitMix64::new(15);
         let dout = Tensor::randn(&[64, 8], &mut rng, 1.0);
-        let base = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 1, &mut Hbm::new());
+        let one = Exec::scoped(1);
+        let base = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &one, &mut Hbm::new());
         let gbase = block_sparse2_backward(
-            &q, &k, &v, &base.o, &dout, base.stats(), &mask, &cfg, blocks, 1, &mut Hbm::new(),
+            &q, &k, &v, &base.o, &dout, base.stats(), &mask, &cfg, blocks, &one, &mut Hbm::new(),
         );
         for workers in [2usize, 3, 5, 8, 64] {
-            let multi =
-                block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut Hbm::new());
-            assert_eq!(base.o.data, multi.o.data, "O at workers={workers}");
-            assert_eq!(base.lse, multi.lse, "lse at workers={workers}");
-            let g = block_sparse2_backward(
-                &q, &k, &v, &base.o, &dout, base.stats(), &mask, &cfg, blocks, workers,
-                &mut Hbm::new(),
-            );
-            assert_eq!(gbase.dq.data, g.dq.data, "dQ at workers={workers}");
-            assert_eq!(gbase.dk.data, g.dk.data, "dK at workers={workers}");
-            assert_eq!(gbase.dv.data, g.dv.data, "dV at workers={workers}");
+            for exec in [Exec::new(workers), Exec::scoped(workers)] {
+                let mode = if exec.is_scoped() { "scoped" } else { "persistent" };
+                let multi = block_sparse2_forward(
+                    &q, &k, &v, &mask, &cfg, blocks, &exec, &mut Hbm::new(),
+                );
+                assert_eq!(base.o.data, multi.o.data, "O at {mode} workers={workers}");
+                assert_eq!(base.lse, multi.lse, "lse at {mode} workers={workers}");
+                let g = block_sparse2_backward(
+                    &q, &k, &v, &base.o, &dout, base.stats(), &mask, &cfg, blocks, &exec,
+                    &mut Hbm::new(),
+                );
+                assert_eq!(gbase.dq.data, g.dq.data, "dQ at {mode} workers={workers}");
+                assert_eq!(gbase.dk.data, g.dk.data, "dK at {mode} workers={workers}");
+                assert_eq!(gbase.dv.data, g.dv.data, "dV at {mode} workers={workers}");
+            }
         }
     }
 
@@ -938,13 +972,14 @@ mod tests {
         mask.set(1, 0, true);
         mask.set(1, 1, true);
         let cfg = AttnConfig::default();
-        let fwd = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+        let ex2 = Exec::new(2);
+        let fwd = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &ex2, &mut Hbm::new());
         assert!(fwd.o.slice_rows(0, 8).data.iter().all(|&x| x == 0.0));
         assert!(fwd.lse[..8].iter().all(|&x| x == f32::NEG_INFINITY));
         assert!(fwd.o.data.iter().all(|x| x.is_finite()));
         let dout = Tensor::full(&[16, 4], 1.0);
         let g = block_sparse2_backward(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, 2, &mut Hbm::new(),
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, &ex2, &mut Hbm::new(),
         );
         assert!(g.dq.slice_rows(0, 8).data.iter().all(|&x| x == 0.0), "dead rows get zero dQ");
         assert!(g.dq.data.iter().chain(&g.dk.data).chain(&g.dv.data).all(|x| x.is_finite()));
@@ -968,7 +1003,8 @@ mod tests {
             kv_len: Some(27),
             ..Default::default()
         };
-        let single = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+        let ex2 = Exec::new(2);
+        let single = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &ex2, &mut Hbm::new());
         for bounds in [vec![0usize, 16, 32], vec![0, 4, 12, 32], vec![0, 8, 16, 24, 32]] {
             let merged = bounds
                 .windows(2)
@@ -977,7 +1013,7 @@ mod tests {
                     let ks = k.slice_rows(lo, hi);
                     let vs = v.slice_rows(lo, hi);
                     block_sparse2_forward(
-                        &q, &ks, &vs, &mask, &cfg.for_shard(lo), blocks, 2, &mut Hbm::new(),
+                        &q, &ks, &vs, &mask, &cfg.for_shard(lo), blocks, &ex2, &mut Hbm::new(),
                     )
                     .into_attn_output()
                 })
@@ -994,7 +1030,9 @@ mod tests {
         let (q, k, v) = qkv(8, 4, 18);
         let mask = BlockMask::dense(2, 4);
         let cfg = AttnConfig { kv_offset: 3, ..Default::default() };
-        block_sparse2_forward(&q, &k, &v, &mask, &cfg, Blocks::explicit(4, 4), 1, &mut Hbm::new());
+        block_sparse2_forward(
+            &q, &k, &v, &mask, &cfg, Blocks::explicit(4, 4), &Exec::new(1), &mut Hbm::new(),
+        );
     }
 
     #[test]
@@ -1003,7 +1041,14 @@ mod tests {
         let (q, k, v) = qkv(16, 4, 19);
         let mask = BlockMask::dense(4, 2); // 16/4 = 4 column tiles needed
         block_sparse2_forward(
-            &q, &k, &v, &mask, &AttnConfig::default(), Blocks::explicit(4, 4), 1, &mut Hbm::new(),
+            &q,
+            &k,
+            &v,
+            &mask,
+            &AttnConfig::default(),
+            Blocks::explicit(4, 4),
+            &Exec::new(1),
+            &mut Hbm::new(),
         );
     }
 }

@@ -46,12 +46,14 @@
 //! causal-skip term: per-device HBM counts only tiles at or below the
 //! diagonal in global coordinates, and dead shards ship no partial).
 //!
-//! Threads (`std::thread::scope` via `attn::batched::run_pool`) are the
-//! laptop-scale stand-in for the devices.
+//! Pool workers (the [`Exec`](super::exec::Exec) execution plane) are
+//! the laptop-scale stand-in for the devices; every entry point takes
+//! the `&Exec` handle, whose fault plan and guardrail govern the run.
 
-use super::batched::{
-    block_rows, forward_many_sited, run_pool_guarded, split_windows, AttnSlice, DqItem, FwdItem,
-};
+use std::sync::Arc;
+
+use super::batched::{block_rows, forward_many_sited, AttnSlice, DqItem, FwdItem};
+use super::exec::Exec;
 use super::block_sparse::{block_sparse2_forward, check_mask_geometry, mask_tile_base};
 use super::faults::{AttnError, FaultPlan, FaultReport, FaultSite, PoolItem};
 use super::flash::Blocks;
@@ -215,13 +217,17 @@ pub fn merge_partials(a: &AttnOutput, b: &AttnOutput) -> AttnOutput {
 /// Sequence-parallel fast forward, ring schedule: K/V is sharded into
 /// `shards` tile-aligned ranges; each Q row block's on-chip state stays
 /// resident while the live shards stream through it in global order
-/// (`std::thread::scope` workers drain the row-block work items). Every
-/// shard sweep runs with that shard's global `kv_offset`, so causal,
-/// padding and dropout decisions match the single-device kernel
+/// (`exec`'s pool workers drain the row-block work items). Every shard
+/// sweep runs with that shard's global `kv_offset`, so causal, padding
+/// and dropout decisions match the single-device kernel
 /// entry-for-entry — the output (O and logsumexp, returned in the
 /// `(l, m) = (1, L)` decomposition) is **bitwise identical** to
-/// [`super::flash2::flash2_forward`] for any shard count and worker
-/// count.
+/// [`super::flash2::flash2_forward`] for any shard count, worker count,
+/// and pool mode. Fault containment, retry, the finiteness guardrail
+/// and fault injection all come from `exec`; dead shards are classified
+/// in the report. A failed row-block item is recomputed (re-streaming
+/// every shard), so recovered output stays bitwise identical to the
+/// fault-free run.
 pub fn flash_forward_sharded(
     q: &Tensor,
     k: &Tensor,
@@ -229,45 +235,7 @@ pub fn flash_forward_sharded(
     cfg: &AttnConfig,
     blocks: Blocks,
     shards: usize,
-    workers: usize,
-) -> AttnOutput {
-    let plan = FaultPlan::none();
-    match forward_sharded_core(q, k, v, cfg, blocks, shards, workers, &plan, false) {
-        Ok((out, _)) => out,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`flash_forward_sharded`] with fault containment, retry, the
-/// finiteness guardrail, fault injection, and classified dead-shard
-/// reporting. A failed row-block item is recomputed (re-streaming every
-/// shard), so recovered output stays bitwise identical to the fault-free
-/// run.
-#[allow(clippy::too_many_arguments)]
-pub fn flash_forward_sharded_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-) -> Result<(AttnOutput, FaultReport), AttnError> {
-    forward_sharded_core(q, k, v, cfg, blocks, shards, workers, plan, true)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn forward_sharded_core(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-    validate: bool,
+    exec: &Exec,
 ) -> Result<(AttnOutput, FaultReport), AttnError> {
     let (n_q, d) = (q.rows(), q.cols());
     let n_k = k.rows();
@@ -289,40 +257,33 @@ fn forward_sharded_core(
     let mut o = Tensor::zeros(&[n_q, d]);
     let mut lse = vec![0.0f32; n_q];
 
-    let o_wins = split_windows(&mut o.data, (0..t_r).map(|rb| block_rows(rb, b_r, n_q) * d));
-    let lse_wins = split_windows(&mut lse, (0..t_r).map(|rb| block_rows(rb, b_r, n_q)));
-    let items: Vec<FwdItem<'_>> = o_wins
-        .into_iter()
-        .zip(lse_wins)
-        .enumerate()
-        .map(|(rb, (o_win, lse_win))| FwdItem { s: 0, rb, o_win, lse_win })
+    let items: Vec<FwdItem> = (0..t_r)
+        .map(|rb| {
+            let rows = block_rows(rb, b_r, n_q);
+            FwdItem { s: 0, rb, o_win: vec![0.0; rows * d], lse_win: vec![0.0; rows] }
+        })
         .collect();
 
-    let (qd, kd, vd) = (q.data.as_slice(), k.data.as_slice(), v.data.as_slice());
+    let (qd, kd, vd) = (q.data.clone(), k.data.clone(), v.data.clone());
+    let (cfg_o, live_o) = (cfg.clone(), live.clone());
     // Each simulated device counts its own traffic in the analytic model
     // (`multi_gpu_cost`); the merged counter here is discarded — but the
     // report's retry traffic is kept, access-for-access.
-    let pool_report = run_pool_guarded(
-        items,
-        workers,
-        &mut Hbm::new(),
-        FaultSite::RingFwd,
-        plan,
-        validate,
-        |it| {
+    let (done, pool_report) =
+        exec.run(items, FaultSite::RingFwd, &mut Hbm::new(), move |it: &mut FwdItem| {
             let mut hbm = Hbm::new();
             let r0 = it.rb * b_r;
             let r1 = ((it.rb + 1) * b_r).min(n_q);
             let br = r1 - r0;
             hbm.load(br * d); // Q_i loaded once, before the shards visit
             let mut state = RowBlockState::new(blocks, d); // fresh = already reset
-            for sh in &live {
+            for sh in &live_o {
                 // Shards wholly above this row block's diagonal would have
                 // every tile skipped — don't visit them at all.
-                if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
+                if cfg_o.causal && cfg_o.kv_offset + sh.lo > r1 - 1 {
                     continue;
                 }
-                let cfg_s = cfg.for_shard(sh.lo);
+                let cfg_s = cfg_o.for_shard(sh.lo);
                 stream_kv(
                     &mut state,
                     &qd[r0 * d..r1 * d],
@@ -340,10 +301,14 @@ fn forward_sharded_core(
                     &mut hbm,
                 );
             }
-            write_epilogue(&state, br, d, it.o_win, it.lse_win, &mut hbm);
+            write_epilogue(&state, br, d, &mut it.o_win, &mut it.lse_win, &mut hbm);
             hbm
-        },
-    )?;
+        })?;
+    for it in done {
+        let r0 = it.rb * b_r;
+        o.data[r0 * d..r0 * d + it.o_win.len()].copy_from_slice(&it.o_win);
+        lse[r0..r0 + it.lse_win.len()].copy_from_slice(&it.lse_win);
+    }
     report.merge(&pool_report);
 
     // (l, m) = (1, L) is an exact decomposition (l·eᵐ = e^L); zero-mass
@@ -352,9 +317,35 @@ fn forward_sharded_core(
     Ok((AttnOutput { o, l, m: lse }, report))
 }
 
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use flash_forward_sharded with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
+#[allow(clippy::too_many_arguments)]
+pub fn flash_forward_sharded_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+) -> Result<(AttnOutput, FaultReport), AttnError> {
+    flash_forward_sharded(
+        q,
+        k,
+        v,
+        cfg,
+        blocks,
+        shards,
+        &Exec::scoped(workers).with_plan(plan).validated(),
+    )
+}
+
 /// Sequence-parallel fast backward, ring schedule — the gradient
 /// counterpart of [`flash_forward_sharded`], bitwise identical to
-/// [`super::flash2::flash2_backward`] for any shard/worker count:
+/// [`super::flash2::flash2_backward`] for any shard count, worker
+/// count, and pool mode of `exec`:
 ///
 /// * **dQ** threads each row block's on-chip accumulator through the
 ///   live shards in global order (the accumulation order per element is
@@ -363,6 +354,12 @@ fn forward_sharded_core(
 ///   (shard, column block) pair is an independent work item writing its
 ///   own dK/dV window, with the full Q/dO stream and global-coordinate
 ///   masking.
+///
+/// Fault containment comes from `exec`: dQ items re-stream every live
+/// shard on retry from a zeroed accumulator window; dK/dV items re-run
+/// their single (shard, column-block) sweep — both bitwise identical to
+/// the fault-free computation.
+#[allow(clippy::too_many_arguments)]
 pub fn flash_backward_sharded(
     q: &Tensor,
     k: &Tensor,
@@ -373,21 +370,14 @@ pub fn flash_backward_sharded(
     cfg: &AttnConfig,
     blocks: Blocks,
     shards: usize,
-    workers: usize,
-) -> AttnGrads {
-    let plan = FaultPlan::none();
-    match backward_sharded_core(q, k, v, o, dout, stats, cfg, blocks, shards, workers, &plan, false)
-    {
-        Ok((grads, _)) => grads,
-        Err(e) => panic!("{e}"),
-    }
+    exec: &Exec,
+) -> Result<(AttnGrads, FaultReport), AttnError> {
+    backward_sharded_core(q, k, v, o, dout, stats, cfg, blocks, shards, exec)
 }
 
-/// [`flash_backward_sharded`] with fault containment, retry, the
-/// finiteness guardrail, and fault injection. dQ items re-stream every
-/// live shard on retry from a zeroed accumulator window; dK/dV items
-/// re-run their single (shard, column-block) sweep — both bitwise
-/// identical to the fault-free computation.
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use flash_backward_sharded with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
 #[allow(clippy::too_many_arguments)]
 pub fn flash_backward_sharded_checked(
     q: &Tensor,
@@ -402,21 +392,32 @@ pub fn flash_backward_sharded_checked(
     workers: usize,
     plan: &FaultPlan,
 ) -> Result<(AttnGrads, FaultReport), AttnError> {
-    backward_sharded_core(q, k, v, o, dout, stats, cfg, blocks, shards, workers, plan, true)
+    flash_backward_sharded(
+        q,
+        k,
+        v,
+        o,
+        dout,
+        stats,
+        cfg,
+        blocks,
+        shards,
+        &Exec::scoped(workers).with_plan(plan).validated(),
+    )
 }
 
 /// One (shard, column block) dK/dV work item in the ring backward pool.
 /// `si` is the shard's index in the ring — the provenance coordinate a
 /// guardrail failure reports.
-struct RingDkvItem<'a> {
+struct RingDkvItem {
     si: usize,
     shard: Shard,
     cb: usize,
-    dk_win: &'a mut [f32],
-    dv_win: &'a mut [f32],
+    dk_win: Vec<f32>,
+    dv_win: Vec<f32>,
 }
 
-impl PoolItem for RingDkvItem<'_> {
+impl PoolItem for RingDkvItem {
     fn id(&self) -> (usize, usize) {
         (self.si, self.cb)
     }
@@ -434,7 +435,7 @@ impl PoolItem for RingDkvItem<'_> {
     #[cfg(feature = "audit")]
     fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
         use crate::attn::audit::SlotClaim;
-        vec![SlotClaim::of("dk", self.dk_win), SlotClaim::of("dv", self.dv_win)]
+        vec![SlotClaim::of("dk", &self.dk_win), SlotClaim::of("dv", &self.dv_win)]
     }
 }
 
@@ -449,9 +450,7 @@ fn backward_sharded_core(
     cfg: &AttnConfig,
     blocks: Blocks,
     shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-    validate: bool,
+    exec: &Exec,
 ) -> Result<(AttnGrads, FaultReport), AttnError> {
     let (n, d) = (q.rows(), q.cols());
     let n_k = k.rows();
@@ -478,26 +477,37 @@ fn backward_sharded_core(
     let (live, dead) = classify_shards(&ranges, n, cfg, b_c)?;
     let mut report = FaultReport { dead_shards: dead, ..Default::default() };
 
-    let (qd, kd, vd, dod) =
-        (q.data.as_slice(), k.data.as_slice(), v.data.as_slice(), dout.data.as_slice());
-    let (lse_ref, d_ref) = (lse.as_slice(), d_vec.as_slice());
+    // One owned snapshot shared by both phases' work closures.
+    struct Shared {
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        dout: Vec<f32>,
+        lse: Vec<f32>,
+        d_vec: Vec<f32>,
+        cfg: AttnConfig,
+        live: Vec<Shard>,
+    }
+    let data = Arc::new(Shared {
+        q: q.data.clone(),
+        k: k.data.clone(),
+        v: v.data.clone(),
+        dout: dout.data.clone(),
+        lse,
+        d_vec,
+        cfg: cfg.clone(),
+        live: live.clone(),
+    });
 
     // Phase 1: dQ — one work item per Q row block, shards visiting in
     // global order with the accumulator resident.
-    let dq_items: Vec<DqItem<'_>> =
-        split_windows(&mut dq.data, (0..t_r).map(|rb| block_rows(rb, b_r, n) * d))
-            .into_iter()
-            .enumerate()
-            .map(|(rb, dq_win)| DqItem { s: 0, rb, dq_win })
-            .collect();
-    let dq_report = run_pool_guarded(
-        dq_items,
-        workers,
-        &mut Hbm::new(),
-        FaultSite::RingDq,
-        plan,
-        validate,
-        |it| {
+    let dq_items: Vec<DqItem> = (0..t_r)
+        .map(|rb| DqItem { s: 0, rb, dq_win: vec![0.0; block_rows(rb, b_r, n) * d] })
+        .collect();
+    let dq_data = Arc::clone(&data);
+    let (dq_done, dq_report) =
+        exec.run(dq_items, FaultSite::RingDq, &mut Hbm::new(), move |it: &mut DqItem| {
+            let sh_data = &dq_data;
             let mut hbm = Hbm::new();
             let r0 = it.rb * b_r;
             let r1 = ((it.rb + 1) * b_r).min(n);
@@ -505,24 +515,24 @@ fn backward_sharded_core(
             hbm.load(2 * br * d + 2 * br); // Q_i, dO_i, D_i, L_i once
             let mut s_buf = vec![0.0f32; b_r * b_c];
             let mut dp_buf = vec![0.0f32; b_r * b_c];
-            for sh in &live {
-                if cfg.causal && cfg.kv_offset + sh.lo > r1 - 1 {
+            for sh in &sh_data.live {
+                if sh_data.cfg.causal && sh_data.cfg.kv_offset + sh.lo > r1 - 1 {
                     continue;
                 }
-                let cfg_s = cfg.for_shard(sh.lo);
+                let cfg_s = sh_data.cfg.for_shard(sh.lo);
                 stream_kv_dq(
-                    it.dq_win,
-                    &qd[r0 * d..r1 * d],
-                    &dod[r0 * d..r1 * d],
-                    &kd[sh.lo * d..sh.hi * d],
-                    &vd[sh.lo * d..sh.hi * d],
+                    &mut it.dq_win,
+                    &sh_data.q[r0 * d..r1 * d],
+                    &sh_data.dout[r0 * d..r1 * d],
+                    &sh_data.k[sh.lo * d..sh.hi * d],
+                    &sh_data.v[sh.lo * d..sh.hi * d],
                     sh.hi - sh.lo,
                     n,
                     d,
                     r0,
                     r1,
-                    lse_ref,
-                    d_ref,
+                    &sh_data.lse,
+                    &sh_data.d_vec,
                     &cfg_s,
                     blocks,
                     tau,
@@ -534,50 +544,46 @@ fn backward_sharded_core(
             }
             hbm.store(br * d); // dQ_i leaves the device exactly once
             hbm
-        },
-    )?;
+        })?;
+    for it in dq_done {
+        let r0 = it.rb * b_r;
+        dq.data[r0 * d..r0 * d + it.dq_win.len()].copy_from_slice(&it.dq_win);
+    }
     report.merge(&dq_report);
 
     // Phase 2: dK/dV — every (live shard, column block) pair is an
     // independent work item; dead shards keep their zero windows, which
     // is exactly what the single-device kernel computes for them.
-    let mut sizes: Vec<(usize, Shard, usize, usize)> = Vec::new(); // (si, shard, local cb, elems)
+    let mut dkv_items: Vec<RingDkvItem> = Vec::new();
     for (si, &sh) in ranges.iter().enumerate() {
+        if shard_is_dead(sh, n, cfg) {
+            continue;
+        }
         let t_c_sh = (sh.hi - sh.lo).div_ceil(b_c);
         for cb in 0..t_c_sh {
             let c0 = sh.lo + cb * b_c;
             let c1 = (sh.lo + (cb + 1) * b_c).min(sh.hi);
-            sizes.push((si, sh, cb, (c1 - c0) * d));
+            dkv_items.push(RingDkvItem {
+                si,
+                shard: sh,
+                cb,
+                dk_win: vec![0.0; (c1 - c0) * d],
+                dv_win: vec![0.0; (c1 - c0) * d],
+            });
         }
     }
-    let dk_wins = split_windows(&mut dk.data, sizes.iter().map(|&(_, _, _, sz)| sz));
-    let dv_wins = split_windows(&mut dv.data, sizes.iter().map(|&(_, _, _, sz)| sz));
-    let mut dkv_items: Vec<RingDkvItem<'_>> = Vec::new();
-    for ((si, shard, cb, _), (dk_win, dv_win)) in
-        sizes.iter().copied().zip(dk_wins.into_iter().zip(dv_wins))
-    {
-        if shard_is_dead(shard, n, cfg) {
-            continue;
-        }
-        dkv_items.push(RingDkvItem { si, shard, cb, dk_win, dv_win });
-    }
-    let dkv_report = run_pool_guarded(
-        dkv_items,
-        workers,
-        &mut Hbm::new(),
-        FaultSite::RingDkv,
-        plan,
-        validate,
-        |it| {
+    let (dkv_done, dkv_report) =
+        exec.run(dkv_items, FaultSite::RingDkv, &mut Hbm::new(), move |it: &mut RingDkvItem| {
+            let sh_data = &data;
             let sh = it.shard;
-            let cfg_s = cfg.for_shard(sh.lo);
+            let cfg_s = sh_data.cfg.for_shard(sh.lo);
             dkv_col_sweep(
-                qd,
-                &kd[sh.lo * d..sh.hi * d],
-                &vd[sh.lo * d..sh.hi * d],
-                dod,
-                lse_ref,
-                d_ref,
+                &sh_data.q,
+                &sh_data.k[sh.lo * d..sh.hi * d],
+                &sh_data.v[sh.lo * d..sh.hi * d],
+                &sh_data.dout,
+                &sh_data.lse,
+                &sh_data.d_vec,
                 n,
                 sh.hi - sh.lo,
                 d,
@@ -587,11 +593,15 @@ fn backward_sharded_core(
                 kv_limit,
                 it.cb,
                 it.cb + 1,
-                it.dk_win,
-                it.dv_win,
+                &mut it.dk_win,
+                &mut it.dv_win,
             )
-        },
-    )?;
+        })?;
+    for it in dkv_done {
+        let c0 = it.shard.lo + it.cb * b_c;
+        dk.data[c0 * d..c0 * d + it.dk_win.len()].copy_from_slice(&it.dk_win);
+        dv.data[c0 * d..c0 * d + it.dv_win.len()].copy_from_slice(&it.dv_win);
+    }
     report.merge(&dkv_report);
 
     Ok((AttnGrads { dq, dk, dv }, report))
@@ -599,11 +609,16 @@ fn backward_sharded_core(
 
 /// Tree schedule, step 1: one softmax partial per live shard, scheduled
 /// through the batched many-slice entry point (all shard × row-block
-/// work items in one pool). Each slice carries `kv_offset = shard.lo`
-/// and the caller's *global* `kv_len` — the per-shard `kv_len` remap
-/// that used to live here was the local-coordinate bug. Dead shards are
-/// dropped up front; the result may therefore hold fewer than `shards`
-/// partials (possibly zero when every key is masked).
+/// work items in one pool on `exec`). Each slice carries
+/// `kv_offset = shard.lo` and the caller's *global* `kv_len` — the
+/// per-shard `kv_len` remap that used to live here was the
+/// local-coordinate bug. Dead shards are classified in the report, not
+/// silently dropped; the result may hold fewer than `shards` partials
+/// (possibly zero when every key is masked). Fault containment comes
+/// from `exec`: a failed (shard, row-block) work item is recomputed and
+/// its partial re-enters the merge unchanged — the associativity of
+/// [`merge_partials`] is the recovery primitive. A malformed shard
+/// range is a typed [`AttnError::ShardConfig`].
 pub fn shard_partials(
     q: &Tensor,
     k: &Tensor,
@@ -611,32 +626,7 @@ pub fn shard_partials(
     cfg: &AttnConfig,
     blocks: Blocks,
     shards: usize,
-    workers: usize,
-) -> Vec<AttnOutput> {
-    match shard_partials_checked(q, k, v, cfg, blocks, shards, workers, &FaultPlan::none(), false)
-    {
-        Ok((partials, _)) => partials,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`shard_partials`] with fault containment: a failed (shard,
-/// row-block) work item is recomputed and its partial re-enters the
-/// merge unchanged — the associativity of [`merge_partials`] is the
-/// recovery primitive. Dead shards are classified in the report rather
-/// than silently dropped; a malformed shard range is a typed
-/// [`AttnError::ShardConfig`].
-#[allow(clippy::too_many_arguments)]
-pub fn shard_partials_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-    validate: bool,
+    exec: &Exec,
 ) -> Result<(Vec<AttnOutput>, FaultReport), AttnError> {
     let n_k = k.rows();
     let d = k.cols();
@@ -655,24 +645,17 @@ pub fn shard_partials_checked(
             cfg: cfg.for_shard(sh.lo),
         })
         .collect();
-    let (partials, pool_report) = forward_many_sited(
-        &slices,
-        blocks,
-        workers,
-        &mut Hbm::new(),
-        plan,
-        validate,
-        FaultSite::TreePartial,
-    )?;
+    let (partials, pool_report) =
+        forward_many_sited(&slices, blocks, exec, &mut Hbm::new(), FaultSite::TreePartial)?;
     report.merge(&pool_report);
     Ok((partials.into_iter().map(|p| p.into_attn_output()).collect(), report))
 }
 
-/// Tree schedule, step 2: reduce the shard partials with
-/// [`merge_partials`] (here in shard order; any order is exact — the
-/// associativity property tests below). Exact to fp rounding against
-/// the single-device kernel; the ring schedule is the bitwise path.
-pub fn flash_forward_sharded_tree(
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use shard_partials with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan).validated())")]
+#[allow(clippy::too_many_arguments)]
+pub fn shard_partials_checked(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -680,19 +663,47 @@ pub fn flash_forward_sharded_tree(
     blocks: Blocks,
     shards: usize,
     workers: usize,
-) -> AttnOutput {
-    let plan = FaultPlan::none();
-    match flash_forward_sharded_tree_checked(q, k, v, cfg, blocks, shards, workers, &plan) {
-        Ok((out, _)) => out,
-        Err(e) => panic!("{e}"),
+    plan: &FaultPlan,
+    validate: bool,
+) -> Result<(Vec<AttnOutput>, FaultReport), AttnError> {
+    let mut exec = Exec::scoped(workers).with_plan(plan);
+    if validate {
+        exec = exec.validated();
     }
+    shard_partials(q, k, v, cfg, blocks, shards, &exec)
 }
 
-/// [`flash_forward_sharded_tree`] with the typed-error flow: instead of
-/// an `unwrap_or_else` silently substituting the all-masked output, the
-/// report says exactly which shards were dead and why; only when every
-/// shard is classified dead does the defined all-masked result come
-/// back. Failed partials are recomputed and re-merged (tentpole part 2).
+/// Tree schedule, step 2: reduce the shard partials with
+/// [`merge_partials`] (here in shard order; any order is exact — the
+/// associativity property tests below). Exact to fp rounding against
+/// the single-device kernel; the ring schedule is the bitwise path.
+/// The report says exactly which shards were dead and why; only when
+/// every shard is classified dead does the defined all-masked result
+/// come back. Failed partials are recomputed and re-merged.
+pub fn flash_forward_sharded_tree(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    exec: &Exec,
+) -> Result<(AttnOutput, FaultReport), AttnError> {
+    // Tree partials are always finiteness-validated before the merge,
+    // regardless of the handle's flag: a NaN partial poisons every
+    // downstream merge, so validation here is load-bearing, not optional.
+    let (partials, report) =
+        shard_partials(q, k, v, cfg, blocks, shards, &exec.clone().validated())?;
+    let out = partials
+        .into_iter()
+        .reduce(|a, b| merge_partials(&a, &b))
+        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()));
+    Ok((out, report))
+}
+
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use flash_forward_sharded_tree with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan))")]
 #[allow(clippy::too_many_arguments)]
 pub fn flash_forward_sharded_tree_checked(
     q: &Tensor,
@@ -704,13 +715,7 @@ pub fn flash_forward_sharded_tree_checked(
     workers: usize,
     plan: &FaultPlan,
 ) -> Result<(AttnOutput, FaultReport), AttnError> {
-    let (partials, report) =
-        shard_partials_checked(q, k, v, cfg, blocks, shards, workers, plan, true)?;
-    let out = partials
-        .into_iter()
-        .reduce(|a, b| merge_partials(&a, &b))
-        .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()));
-    Ok((out, report))
+    flash_forward_sharded_tree(q, k, v, cfg, blocks, shards, &Exec::scoped(workers).with_plan(plan))
 }
 
 /// Tree schedule over a **block-sparse** workload: one softmax partial
@@ -730,7 +735,7 @@ pub fn block_sparse_shard_partials(
     cfg: &AttnConfig,
     blocks: Blocks,
     shards: usize,
-    workers: usize,
+    exec: &Exec,
 ) -> Vec<AttnOutput> {
     let n_k = k.rows();
     let t_r = q.rows().div_ceil(blocks.b_r);
@@ -752,8 +757,18 @@ pub fn block_sparse_shard_partials(
         .map(|sh| {
             let ks = k.slice_rows(sh.lo, sh.hi);
             let vs = v.slice_rows(sh.lo, sh.hi);
+            // Injection happens at shard granularity in the tree driver's
+            // own retry loop — the per-item pool inside each shard runs
+            // fault-free so one planned fault is never applied twice.
             block_sparse2_forward(
-                q, &ks, &vs, mask, &cfg.for_shard(sh.lo), blocks, workers, &mut Hbm::new(),
+                q,
+                &ks,
+                &vs,
+                mask,
+                &cfg.for_shard(sh.lo),
+                blocks,
+                &exec.fault_free(),
+                &mut Hbm::new(),
             )
             .into_attn_output()
         })
@@ -778,7 +793,15 @@ fn sparse_window_is_dead(
 /// Reduce [`block_sparse_shard_partials`] with the §5 associative merge
 /// — the sparse workload's sequence-parallel entry point. Exact to fp
 /// rounding against the unsharded sparse kernel (property-tested
-/// below); all-dead workloads return the defined all-masked result.
+/// below); all-dead workloads return the defined all-masked result. The
+/// report classifies every dead shard (masked by `kv_len`, above the
+/// causal diagonal, or killed by an all-zero mask window); each live
+/// partial is finiteness-validated with shard provenance before it may
+/// enter the merge. The sparse kernel runs whole per shard, so `exec`'s
+/// fault plan here only poisons partials at shard granularity (the
+/// per-shard pool runs fault-free) — a poisoned partial is recomputed
+/// before merging, bitwise identical.
+#[allow(clippy::too_many_arguments)]
 pub fn block_sparse_forward_sharded_tree(
     q: &Tensor,
     k: &Tensor,
@@ -787,37 +810,9 @@ pub fn block_sparse_forward_sharded_tree(
     cfg: &AttnConfig,
     blocks: Blocks,
     shards: usize,
-    workers: usize,
-) -> AttnOutput {
-    let plan = FaultPlan::none();
-    match block_sparse_forward_sharded_tree_checked(
-        q, k, v, mask, cfg, blocks, shards, workers, &plan,
-    ) {
-        Ok((out, _)) => out,
-        Err(e) => panic!("{e}"),
-    }
-}
-
-/// [`block_sparse_forward_sharded_tree`] with the typed-error flow: the
-/// report classifies every dead shard (masked by `kv_len`, above the
-/// causal diagonal, or killed by an all-zero mask window) instead of the
-/// old `unwrap_or_else` silently substituting; each live partial is
-/// finiteness-validated with shard provenance before it may enter the
-/// merge. The sparse kernel runs whole per shard (no per-item pool), so
-/// the fault plan here only poisons partials at shard granularity —
-/// a poisoned partial is recomputed before merging, bitwise identical.
-#[allow(clippy::too_many_arguments)]
-pub fn block_sparse_forward_sharded_tree_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    mask: &BlockMask,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
+    exec: &Exec,
 ) -> Result<(AttnOutput, FaultReport), AttnError> {
+    let plan = exec.plan();
     let n_k = k.rows();
     let t_r = q.rows().div_ceil(blocks.b_r);
     check_mask_geometry(
@@ -849,7 +844,14 @@ pub fn block_sparse_forward_sharded_tree_checked(
         let mut attempt: u32 = 0;
         loop {
             let mut p = block_sparse2_forward(
-                q, &ks, &vs, mask, &cfg_s, blocks, workers, &mut Hbm::new(),
+                q,
+                &ks,
+                &vs,
+                mask,
+                &cfg_s,
+                blocks,
+                &exec.fault_free(),
+                &mut Hbm::new(),
             )
             .into_attn_output();
             if plan.fault_for(FaultSite::TreePartial, si, attempt)
@@ -884,6 +886,33 @@ pub fn block_sparse_forward_sharded_tree_checked(
         .reduce(|a, b| merge_partials(&a, &b))
         .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()));
     Ok((out, report))
+}
+
+/// Deprecated shim for the pre-`Exec` guarded form.
+#[deprecated(note = "use block_sparse_forward_sharded_tree with an Exec handle \
+                     (Exec::scoped(workers).with_plan(plan))")]
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse_forward_sharded_tree_checked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    shards: usize,
+    workers: usize,
+    plan: &FaultPlan,
+) -> Result<(AttnOutput, FaultReport), AttnError> {
+    block_sparse_forward_sharded_tree(
+        q,
+        k,
+        v,
+        mask,
+        cfg,
+        blocks,
+        shards,
+        &Exec::scoped(workers).with_plan(plan),
+    )
 }
 
 /// IO model for W-way sequence-parallel flash (Appendix D.1): per-device
@@ -966,7 +995,7 @@ mod tests {
 
     #[test]
     fn dead_shard_predicate_uses_global_coordinates() {
-        let causal = AttnConfig::causal();
+        let causal = AttnConfig::new().causal();
         // Shard starting at or past the last query row is wholly acausal.
         assert!(shard_is_dead(Shard { lo: 16, hi: 24 }, 16, &causal));
         assert!(!shard_is_dead(Shard { lo: 8, hi: 16 }, 16, &causal));
@@ -997,17 +1026,26 @@ mod tests {
                         kv_len,
                         ..Default::default()
                     };
-                    let single = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+                    let single =
+                        flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
                     for shards in [1usize, 2, 3, 7] {
                         for workers in [1usize, 3, 8] {
-                            let multi =
-                                flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers);
-                            let ctx = format!(
-                                "causal={causal} p={dropout_p} kv_len={kv_len:?} \
-                                 shards={shards} workers={workers}"
-                            );
-                            assert_eq!(multi.o.data, single.o.data, "O not bitwise: {ctx}");
-                            assert_eq!(multi.m, single.lse, "lse not bitwise: {ctx}");
+                            for persistent in [false, true] {
+                                let ex = if persistent {
+                                    Exec::new(workers)
+                                } else {
+                                    Exec::scoped(workers)
+                                };
+                                let (multi, _) =
+                                    flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &ex)
+                                        .unwrap();
+                                let ctx = format!(
+                                    "causal={causal} p={dropout_p} kv_len={kv_len:?} \
+                                     shards={shards} workers={workers} persistent={persistent}"
+                                );
+                                assert_eq!(multi.o.data, single.o.data, "O not bitwise: {ctx}");
+                                assert_eq!(multi.m, single.lse, "lse not bitwise: {ctx}");
+                            }
                         }
                     }
                 }
@@ -1035,23 +1073,49 @@ mod tests {
                         kv_len,
                         ..Default::default()
                     };
-                    let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+                    let fwd =
+                        flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(2), &mut Hbm::new());
                     let single = flash2_backward(
-                        &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 1, &mut Hbm::new(),
+                        &q,
+                        &k,
+                        &v,
+                        &fwd.o,
+                        &dout,
+                        fwd.stats(),
+                        &cfg,
+                        blocks,
+                        &Exec::scoped(1),
+                        &mut Hbm::new(),
                     );
                     for shards in [1usize, 2, 3, 7] {
                         for workers in [1usize, 4] {
-                            let multi = flash_backward_sharded(
-                                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards,
-                                workers,
-                            );
-                            let ctx = format!(
-                                "causal={causal} p={dropout_p} kv_len={kv_len:?} \
-                                 shards={shards} workers={workers}"
-                            );
-                            assert_eq!(multi.dq.data, single.dq.data, "dQ not bitwise: {ctx}");
-                            assert_eq!(multi.dk.data, single.dk.data, "dK not bitwise: {ctx}");
-                            assert_eq!(multi.dv.data, single.dv.data, "dV not bitwise: {ctx}");
+                            for persistent in [false, true] {
+                                let ex = if persistent {
+                                    Exec::new(workers)
+                                } else {
+                                    Exec::scoped(workers)
+                                };
+                                let (multi, _) = flash_backward_sharded(
+                                    &q,
+                                    &k,
+                                    &v,
+                                    &fwd.o,
+                                    &dout,
+                                    fwd.stats(),
+                                    &cfg,
+                                    blocks,
+                                    shards,
+                                    &ex,
+                                )
+                                .unwrap();
+                                let ctx = format!(
+                                    "causal={causal} p={dropout_p} kv_len={kv_len:?} \
+                                     shards={shards} workers={workers} persistent={persistent}"
+                                );
+                                assert_eq!(multi.dq.data, single.dq.data, "dQ not bitwise: {ctx}");
+                                assert_eq!(multi.dk.data, single.dk.data, "dK not bitwise: {ctx}");
+                                assert_eq!(multi.dv.data, single.dv.data, "dV not bitwise: {ctx}");
+                            }
                         }
                     }
                 }
@@ -1074,14 +1138,28 @@ mod tests {
             ..Default::default()
         };
         let blocks = Blocks::explicit(2, 2);
-        let (shards, workers) = (3usize, 2usize);
-        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers);
+        let shards = 3usize;
+        let ex = Exec::new(2);
+        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &ex).unwrap().0;
         let dout = Tensor::full(&[n, d], 1.0);
         let g = flash_backward_sharded(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, workers,
-        );
+            &q,
+            &k,
+            &v,
+            &fwd.o,
+            &dout,
+            fwd.stats(),
+            &cfg,
+            blocks,
+            shards,
+            &ex,
+        )
+        .unwrap()
+        .0;
         let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
-            flash_forward_sharded(q_, k_, v_, &cfg, blocks, shards, workers)
+            flash_forward_sharded(q_, k_, v_, &cfg, blocks, shards, &ex)
+                .unwrap()
+                .0
                 .o
                 .data
                 .iter()
@@ -1126,10 +1204,20 @@ mod tests {
                         kv_len,
                         ..Default::default()
                     };
-                    let single = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+                    let single =
+                        flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
                     for shards in [2usize, 3, 6] {
-                        let tree =
-                            flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, 4);
+                        let tree = flash_forward_sharded_tree(
+                            &q,
+                            &k,
+                            &v,
+                            &cfg,
+                            blocks,
+                            shards,
+                            &Exec::new(4),
+                        )
+                        .unwrap()
+                        .0;
                         let diff = single.o.max_abs_diff(&tree.o);
                         assert!(
                             diff < 1e-4,
@@ -1163,12 +1251,28 @@ mod tests {
                             ..Default::default()
                         };
                         let single = block_sparse2_forward(
-                            &q, &k, &v, &mask, &cfg, blocks, 1, &mut Hbm::new(),
+                            &q,
+                            &k,
+                            &v,
+                            &mask,
+                            &cfg,
+                            blocks,
+                            &Exec::scoped(1),
+                            &mut Hbm::new(),
                         );
                         for shards in [1usize, 2, 3, 6] {
                             let tree = block_sparse_forward_sharded_tree(
-                                &q, &k, &v, &mask, &cfg, blocks, shards, 3,
-                            );
+                                &q,
+                                &k,
+                                &v,
+                                &mask,
+                                &cfg,
+                                blocks,
+                                shards,
+                                &Exec::new(3),
+                            )
+                            .unwrap()
+                            .0;
                             let diff = single.o.max_abs_diff(&tree.o);
                             assert!(
                                 diff < 1e-4,
@@ -1208,15 +1312,18 @@ mod tests {
             mask.set(i, 1, true);
         }
         let cfg = AttnConfig::default();
-        let parts = block_sparse_shard_partials(&q, &k, &v, &mask, &cfg, blocks, 2, 2);
+        let ex = Exec::new(2);
+        let parts = block_sparse_shard_partials(&q, &k, &v, &mask, &cfg, blocks, 2, &ex);
         assert_eq!(parts.len(), 1, "right shard's mask window is all-zero");
         let none = block_sparse_shard_partials(
-            &q, &k, &v, &BlockMask::zeros(4, 4), &cfg, blocks, 2, 2,
+            &q, &k, &v, &BlockMask::zeros(4, 4), &cfg, blocks, 2, &ex,
         );
         assert!(none.is_empty());
         let tree = block_sparse_forward_sharded_tree(
-            &q, &k, &v, &BlockMask::zeros(4, 4), &cfg, blocks, 2, 2,
-        );
+            &q, &k, &v, &BlockMask::zeros(4, 4), &cfg, blocks, 2, &ex,
+        )
+        .unwrap()
+        .0;
         assert!(tree.o.data.iter().all(|&x| x == 0.0));
         assert!(tree.m.iter().all(|&x| x == f32::NEG_INFINITY));
     }
@@ -1228,7 +1335,9 @@ mod tests {
         let blocks = Blocks::explicit(16, 16);
         let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
         for shards in [1usize, 2, 3, 4, 8] {
-            let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, shards);
+            let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(shards))
+                .unwrap()
+                .0;
             assert!(
                 single.o.max_abs_diff(&multi.o) < 1e-4,
                 "shards={shards}: diff {}",
@@ -1263,7 +1372,8 @@ mod tests {
         let cfg = AttnConfig { kv_len: Some(29), ..Default::default() };
         let blocks = Blocks::explicit(8, 8);
         let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
-        let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 3, 3);
+        let multi =
+            flash_forward_sharded(&q, &k, &v, &cfg, blocks, 3, &Exec::new(3)).unwrap().0;
         assert!(single.o.max_abs_diff(&multi.o) < 1e-4);
     }
 
@@ -1279,7 +1389,9 @@ mod tests {
             let cfg = AttnConfig { kv_len: Some(kv_len), ..Default::default() };
             let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
             for shards in [6usize, 8, 48] {
-                let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 4);
+                let multi = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(4))
+                    .unwrap()
+                    .0;
                 assert!(
                     multi.o.data.iter().all(|x| x.is_finite()),
                     "kv_len={kv_len} shards={shards}: non-finite output"
@@ -1297,12 +1409,16 @@ mod tests {
     fn kv_len_zero_gives_zero_output_no_nan() {
         let (q, k, v) = qkv(16, 4, 9);
         let cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
-        let out = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3, 3);
+        let ex = Exec::new(3);
+        let out =
+            flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3, &ex).unwrap().0;
         assert!(out.o.data.iter().all(|&x| x == 0.0));
         assert!(out.l.iter().all(|&x| x == 0.0));
         assert!(out.m.iter().all(|&x| x == f32::NEG_INFINITY));
         // Tree schedule: every shard is dead, same defined result.
-        let tree = flash_forward_sharded_tree(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3, 3);
+        let tree = flash_forward_sharded_tree(&q, &k, &v, &cfg, Blocks::explicit(4, 4), 3, &ex)
+            .unwrap()
+            .0;
         assert!(tree.o.data.iter().all(|&x| x == 0.0));
         assert!(tree.m.iter().all(|&x| x == f32::NEG_INFINITY));
     }
@@ -1321,11 +1437,19 @@ mod tests {
             let v = Tensor::randn(&[n, d], rng, 1.0);
             let blocks = Blocks::explicit(4, 4);
             let dead_cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
-            let dead = flash2_forward(&q, &k, &v, &dead_cfg, blocks, 1, &mut Hbm::new())
-                .into_attn_output();
-            let live =
-                flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 1, &mut Hbm::new())
+            let dead =
+                flash2_forward(&q, &k, &v, &dead_cfg, blocks, &Exec::scoped(1), &mut Hbm::new())
                     .into_attn_output();
+            let live = flash2_forward(
+                &q,
+                &k,
+                &v,
+                &AttnConfig::default(),
+                blocks,
+                &Exec::scoped(1),
+                &mut Hbm::new(),
+            )
+            .into_attn_output();
 
             let both_dead = merge_partials(&dead, &dead);
             assert!(both_dead.o.data.iter().all(|&x| x == 0.0), "n={n} d={d}: dead+dead O");
@@ -1425,7 +1549,11 @@ mod tests {
             let v = Tensor::randn(&[n, d], rng, 1.0);
             let cfg = AttnConfig::default();
             let single = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
-            let multi = flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(8, 8), shards, w);
+            let ex = Exec::new(w);
+            let multi =
+                flash_forward_sharded(&q, &k, &v, &cfg, Blocks::explicit(8, 8), shards, &ex)
+                    .unwrap()
+                    .0;
             assert!(single.o.max_abs_diff(&multi.o) < 1e-4, "n={n} d={d} shards={shards} w={w}");
         });
     }

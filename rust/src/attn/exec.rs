@@ -1,0 +1,708 @@
+//! The execution plane: one long-lived work-stealing pool behind a small
+//! [`Exec`] handle that every attention schedule runs on.
+//!
+//! Until this module, every batched/sharded call paid a
+//! `std::thread::scope` spin-up: `w` fresh OS threads per entry-point
+//! call, torn down at the end of the call. At serve-time QPS and small
+//! decode batches that spin-up dominates the actual kernel work. Here
+//! the threads are spawned once, parked on a condvar between calls, and
+//! re-dispatched per call — the "pool" section of the hotpath bench
+//! measures the difference directly.
+//!
+//! ## The `Exec` handle
+//!
+//! [`Exec`] carries the whole execution policy: worker count, the
+//! [`FaultPlan`] under which items run, the finiteness-guardrail flag,
+//! and the pool mode:
+//!
+//! * [`Exec::new`] — **persistent** mode: work is drained by the
+//!   process-wide parked worker pool (plus the calling thread, which
+//!   always participates — see below).
+//! * [`Exec::scoped`] — **per-call scope** mode: the exact pre-pool
+//!   behaviour, one `std::thread::scope` per call. This is the fresh-pool
+//!   oracle the reuse tests compare against and the baseline the bench's
+//!   "pool" section measures; production callers want [`Exec::new`].
+//!
+//! Both modes run the *identical* drain loop over the identical work
+//! items, so outputs are bitwise identical between them by construction.
+//!
+//! ## Determinism
+//!
+//! The persistent pool preserves the project's two signature guarantees
+//! unchanged:
+//!
+//! * **Workers race for items, never for output slots.** Each work item
+//!   owns its output windows outright ([`PoolItem`]); the deterministic
+//!   item → window mapping is fixed before anything is scheduled, and
+//!   finished items are stitched back in item-index order on the calling
+//!   thread. Claim order and worker identity never touch the numerics.
+//! * **Access-for-access HBM accounting.** Per-attempt counters merge
+//!   into the run's counter under the run lock at disposal time; counter
+//!   addition is associative and commutative, so totals are independent
+//!   of worker count, claim order, and pool mode.
+//!
+//! ## Progress
+//!
+//! The calling thread always runs the drain loop itself and persistent
+//! mode only *adds* `workers - 1` helper tasks to the shared pool, so a
+//! call makes progress even if every pool thread is busy with other
+//! runs — there is no cross-run deadlock, and `workers = 1` never
+//! touches the shared pool at all. Helper tasks that wake up after their
+//! run already finished observe an empty queue and exit immediately.
+//!
+//! ## Fault semantics
+//!
+//! The drain loop is the fault-tolerant pool of `attn::faults`, moved
+//! here verbatim from `attn::batched` (PR 6): `catch_unwind` panic
+//! containment, publish-time fault injection, zero-and-requeue retry up
+//! to [`MAX_ATTEMPTS`], the finiteness guardrail, and per-attempt retry
+//! traffic accounted in the [`FaultReport`]. See the failure-semantics
+//! section of the `attn` module docs.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+
+use super::faults::{
+    panic_message, AttnError, FaultKind, FaultPlan, FaultReport, FaultSite, InjectedPanic,
+    PoolItem, MAX_ATTEMPTS,
+};
+use crate::sim::hbm::Hbm;
+
+// ---------------------------------------------------------------------
+// The process-wide parked worker pool
+// ---------------------------------------------------------------------
+
+/// Upper bound on pool threads ever spawned. Far above any sane
+/// `workers` setting; exists so a pathological caller cannot fork-bomb
+/// the process. Past the cap, submitted helpers queue until a parked
+/// thread frees up — the caller thread still guarantees progress.
+const MAX_POOL_THREADS: usize = 256;
+
+/// A queued helper task: the drain loop of one run, type-erased.
+type Task = Box<dyn FnOnce() + Send>;
+
+struct PoolQueue {
+    tasks: VecDeque<Task>,
+    /// Threads currently parked in `ready.wait` (spawn only when none
+    /// are free to take the new task).
+    idle: usize,
+    /// Threads ever spawned (monotone; pool threads never exit).
+    spawned: usize,
+}
+
+struct Pool {
+    queue: Mutex<PoolQueue>,
+    ready: Condvar,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        Pool {
+            queue: Mutex::new(PoolQueue { tasks: VecDeque::new(), idle: 0, spawned: 0 }),
+            ready: Condvar::new(),
+        }
+    })
+}
+
+/// Enqueue one helper task, growing the pool lazily: a new worker is
+/// spawned only when no parked thread is available and the cap allows.
+fn submit(task: Task) {
+    let p = pool();
+    let mut q = p.queue.lock().unwrap_or_else(PoisonError::into_inner);
+    q.tasks.push_back(task);
+    if q.idle == 0 && q.spawned < MAX_POOL_THREADS {
+        q.spawned += 1;
+        drop(q);
+        spawn_worker();
+    } else {
+        drop(q);
+    }
+    p.ready.notify_one();
+}
+
+/// Spawn one detached pool worker: park on the condvar when the task
+/// queue is empty, run tasks as they arrive, never exit. This is the
+/// tree's sole sanctioned `std::thread::spawn` site (lint R1); every
+/// other module routes its parallelism through [`Exec`].
+fn spawn_worker() {
+    std::thread::spawn(|| {
+        let p = pool();
+        loop {
+            let task = {
+                let mut q = p.queue.lock().unwrap_or_else(PoisonError::into_inner);
+                loop {
+                    if let Some(t) = q.tasks.pop_front() {
+                        break t;
+                    }
+                    q.idle += 1;
+                    q = p.ready.wait(q).unwrap_or_else(PoisonError::into_inner);
+                    q.idle -= 1;
+                }
+            };
+            // Drain tasks contain worker panics internally; a stray
+            // unwind must not take the parked thread (or, via a poisoned
+            // queue lock, the whole pool) down with it.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Per-run state (the guarded drain loop)
+// ---------------------------------------------------------------------
+
+/// An item in flight or queued: its original index and attempt counter.
+struct Tracked<T> {
+    idx: usize,
+    attempt: u32,
+    item: T,
+}
+
+/// Shared per-run state behind one mutex: the (re)queue, the count of
+/// items being worked on (a faulted one may return to the queue, so
+/// "queue empty" alone does not mean "done"), committed items parked in
+/// index order, the run's HBM counter, the first fatal error, and the
+/// fault bookkeeping.
+struct RunCore<T> {
+    queue: Vec<Tracked<T>>,
+    in_flight: usize,
+    error: Option<AttnError>,
+    report: FaultReport,
+    /// Committed items, slot `idx` filled exactly once on commit; the
+    /// caller stitches their windows back in index order.
+    finished: Vec<Option<T>>,
+    /// The run's merged HBM counter. Per-attempt counters land here
+    /// under the lock at disposal time — counter addition is associative
+    /// and commutative, so the total is identical to the per-call-scope
+    /// pool's join-time merge for any claim order.
+    hbm: Hbm,
+    /// Audit check (c): per-item commit counts — every item must commit
+    /// exactly once on a successful run (retries are not commits).
+    #[cfg(feature = "audit")]
+    commits: Vec<u32>,
+}
+
+/// How a finished attempt is disposed of (classified outside the lock —
+/// the finiteness scan is O(window) and must not serialize workers).
+enum Disposal {
+    Commit { delayed: bool },
+    Retry { kind: RetryKind, attempt_hbm: Option<Hbm>, message: String },
+}
+
+enum RetryKind {
+    Panicked,
+    Poisoned,
+    Dropped,
+    NonFinite,
+}
+
+/// One guarded run: the work closure, the fault policy it runs under,
+/// and the shared drain state. Helper tasks and the calling thread all
+/// drain the same job through an `Arc`.
+struct RunJob<T, F> {
+    state: Mutex<RunCore<T>>,
+    ready: Condvar,
+    work: F,
+    plan: FaultPlan,
+    site: FaultSite,
+    validate: bool,
+}
+
+impl<T, F> RunJob<T, F>
+where
+    T: PoolItem,
+    F: Fn(&mut T) -> Hbm + Send + Sync,
+{
+    /// A contained panic can poison the mutex between lock() and the
+    /// guard drop; the inner state is still consistent (the lock is held
+    /// only for queue bookkeeping, never across item execution), so
+    /// recover it instead of cascading.
+    fn lock(&self) -> MutexGuard<'_, RunCore<T>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The fault-tolerant drain loop behind every batched and sharded
+    /// schedule (semantics: see `attn::faults` and the module docs).
+    /// Claims items LIFO, runs them under `catch_unwind`, and commits or
+    /// zero-requeues under the lock. Runs identically on scope threads,
+    /// parked pool threads, and the calling thread.
+    fn drain(&self) {
+        loop {
+            let mut st = self.lock();
+            let claimed = loop {
+                if st.error.is_some() {
+                    break None;
+                }
+                if let Some(t) = st.queue.pop() {
+                    break Some(t);
+                }
+                if st.in_flight == 0 {
+                    break None;
+                }
+                // Queue empty but items in flight: one may yet fail and
+                // requeue, so wait instead of exiting.
+                st = self.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+            };
+            let Some(mut t) = claimed else {
+                break;
+            };
+            st.in_flight += 1;
+            drop(st);
+
+            let fault = self.plan.fault_for(self.site, t.idx, t.attempt);
+            if fault == Some(FaultKind::DelayedShard) {
+                // A straggler, not a failure: complete late, commit
+                // normally, add no traffic.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let h = (self.work)(&mut t.item);
+                if fault == Some(FaultKind::WorkerPanic) {
+                    // resume_unwind skips the panic hook (no stderr spam
+                    // for planned chaos); the payload carries the
+                    // attempt's exact traffic so the retry accounting
+                    // stays access-for-access.
+                    std::panic::resume_unwind(Box::new(InjectedPanic(h)));
+                }
+                h
+            }));
+            // The attempt's real traffic (None only for a genuine
+            // mid-item panic, whose partial traffic is unknowable).
+            let mut traffic: Option<Hbm> = None;
+            let disposal = match outcome {
+                Ok(h) => {
+                    traffic = Some(h.clone());
+                    if fault == Some(FaultKind::PoisonedPartial) {
+                        t.item.poison();
+                    }
+                    if fault == Some(FaultKind::DroppedMerge) {
+                        Disposal::Retry {
+                            kind: RetryKind::Dropped,
+                            attempt_hbm: Some(h),
+                            message: "completion record dropped".into(),
+                        }
+                    } else if (self.validate || fault == Some(FaultKind::PoisonedPartial))
+                        && !t.item.check_finite()
+                    {
+                        let kind = if fault == Some(FaultKind::PoisonedPartial) {
+                            RetryKind::Poisoned
+                        } else {
+                            RetryKind::NonFinite
+                        };
+                        Disposal::Retry {
+                            kind,
+                            attempt_hbm: Some(h),
+                            message: "non-finite output".into(),
+                        }
+                    } else {
+                        Disposal::Commit { delayed: fault == Some(FaultKind::DelayedShard) }
+                    }
+                }
+                Err(payload) => {
+                    let attempt_hbm = payload.downcast_ref::<InjectedPanic>().map(|inj| {
+                        // Injected at publish time: the work ran to
+                        // completion, its traffic is real and gets
+                        // re-done by the retry.
+                        traffic = Some(inj.0.clone());
+                        inj.0.clone()
+                    });
+                    Disposal::Retry {
+                        kind: RetryKind::Panicked,
+                        attempt_hbm,
+                        message: panic_message(&*payload),
+                    }
+                }
+            };
+
+            let mut st = self.lock();
+            st.in_flight -= 1;
+            if let Some(h) = &traffic {
+                st.hbm.merge(h);
+            }
+            match disposal {
+                Disposal::Commit { delayed } => {
+                    #[cfg(feature = "audit")]
+                    {
+                        st.commits[t.idx] += 1;
+                    }
+                    if delayed {
+                        st.report.delayed += 1;
+                    }
+                    st.finished[t.idx] = Some(t.item);
+                }
+                Disposal::Retry { kind, attempt_hbm, message } => {
+                    match kind {
+                        RetryKind::Panicked => st.report.panics += 1,
+                        RetryKind::Poisoned => st.report.poisoned += 1,
+                        RetryKind::Dropped => st.report.dropped += 1,
+                        RetryKind::NonFinite => st.report.guardrail += 1,
+                    }
+                    if let Some(h) = &attempt_hbm {
+                        st.report.retry_hbm.merge(h);
+                    }
+                    if t.attempt + 1 < MAX_ATTEMPTS {
+                        st.report.retries += 1;
+                        // The backward sweeps accumulate into their
+                        // windows (and a poisoned forward scribbled NaN
+                        // over them): zero back to the pre-run state so
+                        // the re-run reproduces a fresh run bit for bit.
+                        t.item.reset();
+                        st.queue.push(Tracked {
+                            idx: t.idx,
+                            attempt: t.attempt + 1,
+                            item: t.item,
+                        });
+                    } else if st.error.is_none() {
+                        let (slice, block) = t.item.id();
+                        let attempts = t.attempt + 1;
+                        st.error = Some(match kind {
+                            RetryKind::Poisoned | RetryKind::NonFinite => AttnError::NonFinite {
+                                site: self.site,
+                                slice,
+                                batch: 0,
+                                head: 0,
+                                block,
+                                attempts,
+                            },
+                            _ => AttnError::ItemFailed {
+                                site: self.site,
+                                slice,
+                                block,
+                                attempts,
+                                message,
+                            },
+                        });
+                    }
+                }
+            }
+            drop(st);
+            self.ready.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The Exec handle
+// ---------------------------------------------------------------------
+
+/// The execution policy every attention entry point runs under: worker
+/// count, fault plan, finiteness-guardrail flag, and pool mode. Cheap to
+/// clone; see the module docs for the mode semantics.
+#[derive(Clone, Debug)]
+pub struct Exec {
+    workers: usize,
+    plan: FaultPlan,
+    validate: bool,
+    scoped: bool,
+}
+
+impl Exec {
+    /// Persistent-pool execution with `workers` concurrent drains per
+    /// call (the calling thread plus `workers - 1` parked pool threads),
+    /// no fault injection, guardrail off. The production default.
+    pub fn new(workers: usize) -> Exec {
+        Exec { workers, plan: FaultPlan::none(), validate: false, scoped: false }
+    }
+
+    /// Per-call `std::thread::scope` execution: `workers` threads
+    /// spawned and joined per call — the pre-pool behaviour, kept as the
+    /// fresh-pool oracle and the bench baseline.
+    pub fn scoped(workers: usize) -> Exec {
+        Exec { scoped: true, ..Exec::new(workers) }
+    }
+
+    /// Run work under `plan` (deterministic fault injection; see
+    /// `attn::faults`). Injection is per [`FaultSite`], so a plan only
+    /// fires at the schedules it names.
+    pub fn with_plan(mut self, plan: &FaultPlan) -> Exec {
+        self.plan = plan.clone();
+        self
+    }
+
+    /// Enable the finiteness guardrail: every item's output windows are
+    /// scanned before commit, and a non-finite window is retried like a
+    /// contained panic.
+    pub fn validated(mut self) -> Exec {
+        self.validate = true;
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn validate(&self) -> bool {
+        self.validate
+    }
+
+    /// True for per-call-scope mode ([`Exec::scoped`]).
+    pub fn is_scoped(&self) -> bool {
+        self.scoped
+    }
+
+    /// Same workers and pool mode, no fault plan, guardrail off — for
+    /// inner schedules whose faults are handled by an outer retry loop
+    /// (the tree schedule's per-shard retries).
+    pub(crate) fn fault_free(&self) -> Exec {
+        Exec { plan: FaultPlan::none(), validate: false, ..self.clone() }
+    }
+
+    /// Drain `items` through this handle's pool: every item is claimed
+    /// dynamically (workers race for items, never for output slots),
+    /// run through `work` under the handle's fault plan, and returned —
+    /// committed, in item-index order — together with the run's
+    /// [`FaultReport`]. Per-attempt HBM counters merge into `hbm`;
+    /// totals are identical for any worker count, claim order, or pool
+    /// mode. On retry-budget exhaustion the first typed error is
+    /// returned and the already-running attempts are drained first, so
+    /// `hbm` still reflects all work actually performed.
+    pub(crate) fn run<T, F>(
+        &self,
+        items: Vec<T>,
+        site: FaultSite,
+        hbm: &mut Hbm,
+        work: F,
+    ) -> Result<(Vec<T>, FaultReport), AttnError>
+    where
+        T: PoolItem,
+        F: Fn(&mut T) -> Hbm + Send + Sync + 'static,
+    {
+        if items.is_empty() {
+            return Ok((Vec::new(), FaultReport::default()));
+        }
+        // Audit check (a): every item's claimed output windows are
+        // disjoint, verified (and optionally fingerprinted) before any
+        // drain starts — workers race for items, never for output slots.
+        #[cfg(feature = "audit")]
+        {
+            let manifest: Vec<super::audit::ItemClaims> = items
+                .iter()
+                .enumerate()
+                .map(|(idx, it)| super::audit::ItemClaims { idx, id: it.id(), claims: it.claims() })
+                .collect();
+            super::audit::check_and_record(site, &manifest);
+        }
+        let n_items = items.len();
+        let w = self.workers.max(1).min(n_items);
+        let job = Arc::new(RunJob {
+            state: Mutex::new(RunCore {
+                queue: items
+                    .into_iter()
+                    .enumerate()
+                    .map(|(idx, item)| Tracked { idx, attempt: 0, item })
+                    .collect(),
+                in_flight: 0,
+                error: None,
+                report: FaultReport::default(),
+                finished: (0..n_items).map(|_| None).collect(),
+                hbm: Hbm::new(),
+                #[cfg(feature = "audit")]
+                commits: vec![0; n_items],
+            }),
+            ready: Condvar::new(),
+            work,
+            plan: self.plan.clone(),
+            site,
+            validate: self.validate,
+        });
+        if self.scoped {
+            run_scoped(&job, w);
+        } else {
+            // Caller-assist: enqueue w-1 helpers, then drain on this
+            // thread too. The helpers may start late (or, past the pool
+            // cap, never) — the caller's own drain guarantees progress,
+            // and w = 1 does not touch the shared pool at all.
+            for _ in 1..w {
+                let j = Arc::clone(&job);
+                submit(Box::new(move || j.drain()));
+            }
+            job.drain();
+            // The caller's drain can exit (on error, or having claimed
+            // the last item's requeue slot race) while helpers still run
+            // their current attempt; wait for them so `hbm` reflects all
+            // work performed, exactly like the scoped join.
+            let mut st = job.lock();
+            while st.in_flight > 0 {
+                st = job.ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        }
+        let mut st = job.lock();
+        hbm.merge(&st.hbm);
+        match st.error.take() {
+            Some(e) => Err(e),
+            None => {
+                // Audit check (c): success means every output window was
+                // committed by exactly one attempt.
+                #[cfg(feature = "audit")]
+                super::audit::check_commits(site, &st.commits);
+                let outs = st
+                    .finished
+                    .iter_mut()
+                    .map(|slot| slot.take().expect("exec: committed item missing"))
+                    .collect();
+                Ok((outs, std::mem::take(&mut st.report)))
+            }
+        }
+    }
+}
+
+/// Per-call-scope execution: `w` threads spawned for this run and joined
+/// before returning — the pre-pool pool, bit-for-bit. The only sanctioned
+/// `std::thread::scope` outside the per-slice reference kernels.
+fn run_scoped<T, F>(job: &Arc<RunJob<T, F>>, w: usize)
+where
+    T: PoolItem,
+    F: Fn(&mut T) -> Hbm + Send + Sync,
+{
+    std::thread::scope(|scope| {
+        for _ in 0..w {
+            let j = &*job;
+            scope.spawn(move || j.drain());
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A trivial owned-window item for pool-mechanics tests.
+    struct SqItem {
+        idx: usize,
+        out: Vec<f32>,
+    }
+
+    impl PoolItem for SqItem {
+        fn id(&self) -> (usize, usize) {
+            (self.idx, 0)
+        }
+        fn reset(&mut self) {
+            self.out.fill(0.0);
+        }
+        fn check_finite(&self) -> bool {
+            self.out.iter().all(|x| x.is_finite())
+        }
+        fn poison(&mut self) {
+            self.out.fill(f32::NAN);
+        }
+        #[cfg(feature = "audit")]
+        fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
+            vec![crate::attn::audit::SlotClaim::of("out", &self.out)]
+        }
+    }
+
+    fn items(n: usize) -> Vec<SqItem> {
+        (0..n).map(|idx| SqItem { idx, out: vec![0.0; 4] }).collect()
+    }
+
+    fn square(it: &mut SqItem) -> Hbm {
+        let mut h = Hbm::new();
+        h.load(4);
+        for (j, o) in it.out.iter_mut().enumerate() {
+            *o = (it.idx * 4 + j) as f32 * 0.5;
+        }
+        h.store(4);
+        h
+    }
+
+    fn run_collect(exec: &Exec, n: usize) -> (Vec<f32>, u64) {
+        let mut hbm = Hbm::new();
+        let (done, report) = exec
+            .run(items(n), FaultSite::BatchedFwd, &mut hbm, square)
+            .expect("fault-free run");
+        assert_eq!(report.retries, 0);
+        let mut flat = Vec::new();
+        for it in &done {
+            assert_eq!(it.idx, flat.len() / 4, "items must return in index order");
+            flat.extend_from_slice(&it.out);
+        }
+        (flat, hbm.accesses())
+    }
+
+    #[test]
+    fn persistent_matches_scoped_bitwise_for_every_worker_count() {
+        let (base, base_acc) = run_collect(&Exec::scoped(1), 23);
+        for w in [1, 2, 5, 16] {
+            let (s, sa) = run_collect(&Exec::scoped(w), 23);
+            let (p, pa) = run_collect(&Exec::new(w), 23);
+            assert_eq!(s, base, "scoped w={w}");
+            assert_eq!(p, base, "persistent w={w}");
+            assert_eq!(sa, base_acc);
+            assert_eq!(pa, base_acc, "persistent HBM total w={w}");
+        }
+    }
+
+    #[test]
+    fn one_exec_reused_across_many_runs_is_stable() {
+        let exec = Exec::new(4);
+        let (first, acc) = run_collect(&exec, 9);
+        for _ in 0..50 {
+            let (again, acc2) = run_collect(&exec, 9);
+            assert_eq!(again, first);
+            assert_eq!(acc2, acc);
+        }
+    }
+
+    #[test]
+    fn empty_run_is_a_no_op() {
+        let mut hbm = Hbm::new();
+        let (done, report) = Exec::new(3)
+            .run(Vec::<SqItem>::new(), FaultSite::BatchedFwd, &mut hbm, square)
+            .unwrap();
+        assert!(done.is_empty());
+        assert_eq!(report.retries, 0);
+        assert_eq!(hbm.accesses(), 0);
+    }
+
+    #[test]
+    fn injected_panic_retries_and_recovers_on_the_persistent_pool() {
+        for exec in [Exec::new(3), Exec::scoped(3)] {
+            let plan =
+                FaultPlan::none().with(FaultSite::BatchedFwd, 2, 0, FaultKind::WorkerPanic);
+            let exec = exec.with_plan(&plan).validated();
+            let mut hbm = Hbm::new();
+            let (done, report) =
+                exec.run(items(7), FaultSite::BatchedFwd, &mut hbm, square).expect("recovers");
+            assert_eq!(report.panics, 1);
+            assert_eq!(report.retries, 1);
+            assert_eq!(report.retry_hbm.accesses(), 8, "one attempt's traffic re-done");
+            let (clean, clean_acc) = run_collect(&Exec::scoped(1), 7);
+            let flat: Vec<f32> = done.iter().flat_map(|it| it.out.iter().copied()).collect();
+            assert_eq!(flat, clean, "recovered output bitwise identical");
+            // The faulted run performed one extra attempt's traffic.
+            assert_eq!(hbm.accesses(), clean_acc + 8);
+        }
+    }
+
+    #[test]
+    fn exhausted_retries_surface_the_typed_error() {
+        let mut plan = FaultPlan::none();
+        for attempt in 0..MAX_ATTEMPTS {
+            plan = plan.with(FaultSite::BatchedDq, 1, attempt, FaultKind::WorkerPanic);
+        }
+        let exec = Exec::new(2).with_plan(&plan);
+        let mut hbm = Hbm::new();
+        let err = exec.run(items(3), FaultSite::BatchedDq, &mut hbm, square).unwrap_err();
+        match err {
+            AttnError::ItemFailed { site, slice, attempts, .. } => {
+                assert_eq!(site, FaultSite::BatchedDq);
+                assert_eq!(slice, 1);
+                assert_eq!(attempts, MAX_ATTEMPTS);
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn workers_beyond_items_and_pool_cap_are_clamped() {
+        let (flat, _) = run_collect(&Exec::new(10_000), 5);
+        let (base, _) = run_collect(&Exec::scoped(1), 5);
+        assert_eq!(flat, base);
+    }
+}

@@ -5,8 +5,8 @@
 //! associative softmax merge) is a *recovery* primitive, not just a
 //! parallelism trick: any work item's contribution can be recomputed and
 //! re-merged without touching the rest. This module supplies the pieces
-//! the guarded pool (`attn::batched::run_pool_guarded`) threads through
-//! every batched and sharded schedule:
+//! the persistent guarded runtime ([`crate::attn::Exec`], `attn::exec`)
+//! threads through every batched and sharded schedule:
 //!
 //! * [`FaultPlan`] — deterministic fault injection at chosen
 //!   (site, item, attempt) coordinates, either targeted exactly or driven
@@ -17,7 +17,7 @@
 //! * [`FaultKind`] — the four injected fault classes: worker panic,
 //!   poisoned (NaN) partial, delayed shard (a straggler, not a failure),
 //!   and dropped merge (the completion record is lost, the work re-runs).
-//! * [`FaultReport`] — what a checked entry point observed: retry counts
+//! * [`FaultReport`] — what a guarded run observed: retry counts
 //!   per class, the exact HBM traffic the retries re-did (asserted
 //!   access-for-access against `sim::cost` per-item forms in the chaos
 //!   wall), and classified dead shards.
@@ -241,7 +241,7 @@ impl FaultReport {
 }
 
 /// Typed errors of the attention execution plane — the replacement for
-/// hot-path panics on the checked entry points.
+/// hot-path panics on the fallible `Exec`-driven entry points.
 #[derive(Clone, Debug, PartialEq)]
 pub enum AttnError {
     /// A work item's output failed the finiteness guardrail on every
@@ -315,7 +315,7 @@ impl std::error::Error for AttnError {}
 /// reset to the pre-run (all-zero) window state so a retry reproduces a
 /// fresh run bit for bit (the backward sweeps *accumulate* into their
 /// windows), the finiteness guardrail, and NaN scribbling for injection.
-pub(crate) trait PoolItem: Send {
+pub(crate) trait PoolItem: Send + 'static {
     /// (slice, block) provenance for typed errors.
     fn id(&self) -> (usize, usize);
     /// Zero the output windows back to their pre-run state.

@@ -454,7 +454,7 @@ mod tests {
     #[test]
     fn backward_matches_standard() {
         let (q, k, v) = qkv(32, 8, 4);
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(8, 8);
         let fwd = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
         let mut rng = SplitMix64::new(9);

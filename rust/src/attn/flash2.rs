@@ -59,6 +59,7 @@
 //! (including causal, padding, dropout and rectangular K/V) is
 //! property-tested below.
 
+use super::exec::Exec;
 use super::flash::{tile_fully_unmasked, Blocks};
 use super::masks::{dropout_scale, masked_score, NEG_INF};
 use super::{AttnConfig, AttnGrads, AttnOutput, AttnStats};
@@ -90,17 +91,22 @@ impl Flash2Output {
 }
 
 /// Fast exact forward. q: [n, d]; k, v: [n_k, d] (rectangular shapes serve
-/// the sequence-parallel sharded path). `workers` bounds the thread count;
-/// the result is bitwise independent of it.
+/// the sequence-parallel sharded path). `exec.workers()` bounds the thread
+/// count; the result is bitwise independent of it. This per-slice
+/// reference kernel always runs per-call scoped threads — it is the
+/// oracle the pooled schedules are bitwise-tested against — so the
+/// handle's persistent/scoped mode and fault plan are intentionally
+/// ignored here.
 pub fn flash2_forward(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
 ) -> Flash2Output {
+    let workers = exec.workers();
     let (n, d) = (q.rows(), q.cols());
     let n_k = k.rows();
     let tau = cfg.tau_for(d);
@@ -437,6 +443,7 @@ pub(crate) fn row_block_sweep(
 /// padding mask, and the exactness tests assert measured == analytic
 /// traffic. Key ranges that are *entirely* dead are cheaper to drop one
 /// level up (as `flash_forward_sharded` now does with dead shards).
+#[allow(clippy::too_many_arguments)]
 pub fn flash2_backward(
     q: &Tensor,
     k: &Tensor,
@@ -446,9 +453,10 @@ pub fn flash2_backward(
     stats: AttnStats<'_>,
     cfg: &AttnConfig,
     blocks: Blocks,
-    workers: usize,
+    exec: &Exec,
     hbm: &mut Hbm,
 ) -> AttnGrads {
+    let workers = exec.workers();
     let (n, d) = (q.rows(), q.cols());
     let n_k = k.rows();
     assert_eq!(k.cols(), d, "flash2_backward: K feature dim mismatch");
@@ -958,6 +966,15 @@ impl SelfCheckReport {
 /// access-for-access). Used by the coordinator preflight before any
 /// training/serving runs; one [`CheckProbe`] per invariant.
 pub fn self_check_report() -> SelfCheckReport {
+    self_check_report_on(&Exec::new(3))
+}
+
+/// [`self_check_report`] on a caller-supplied execution handle: the
+/// batched, sharded and shared-entry-point probes all run on `exec`
+/// (stripped of any fault plan — the preflight must judge the healthy
+/// path), so a trainer preflighting on its own persistent pool
+/// exercises exactly the plane its hot paths will run on.
+pub fn self_check_report_on(exec: &Exec) -> SelfCheckReport {
     use super::batched::{bh_slice, flash2_backward_batched, flash2_forward_batched};
     use super::{attention_backward, BackwardKernel};
     use crate::util::rng::SplitMix64;
@@ -969,7 +986,11 @@ pub fn self_check_report() -> SelfCheckReport {
     let cfg = AttnConfig { causal: true, kv_len: Some(37), ..Default::default() };
     let blocks = Blocks::explicit(8, 8);
     let reference = super::flash::flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
-    let fast = flash2_forward(&q, &k, &v, &cfg, blocks, 3, &mut Hbm::new());
+    // The caller's handle, fault-free: the preflight exercises the
+    // execution plane the hot paths run on; per-slice oracles below use
+    // scoped handles.
+    let ex3 = exec.fault_free();
+    let fast = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(3), &mut Hbm::new());
     let mut fwd_diff = reference.o.max_abs_diff(&fast.o);
     for r in 0..n {
         fwd_diff = fwd_diff.max((reference.stats().lse(r) - fast.lse[r]).abs());
@@ -981,7 +1002,7 @@ pub fn self_check_report() -> SelfCheckReport {
         &q, &k, &v, &reference.o, &dout, reference.stats(), &cfg, blocks, &mut Hbm::new(),
     );
     let fast_g = attention_backward(
-        BackwardKernel::Flash2 { workers: 3 },
+        BackwardKernel::Flash2 { exec: &ex3 },
         &q, &k, &v, &fast.o, &dout, fast.stats(), &cfg, blocks, &mut Hbm::new(),
     );
     let bwd_diff = slow
@@ -1002,10 +1023,14 @@ pub fn self_check_report() -> SelfCheckReport {
     let v4 = Tensor::randn(&[bsz, heads, nb, db], &mut rng, 1.0);
     let dout4 = Tensor::randn(&[bsz, heads, nb, db], &mut rng, 1.0);
     let bcfg = AttnConfig { causal: true, kv_len: Some(19), ..Default::default() };
-    let bfwd = flash2_forward_batched(&q4, &k4, &v4, &bcfg, blocks, 3, &mut Hbm::new());
+    let bfwd = flash2_forward_batched(&q4, &k4, &v4, &bcfg, blocks, &ex3, &mut Hbm::new())
+        .expect("preflight batched forward")
+        .0;
     let bg = flash2_backward_batched(
-        &q4, &k4, &v4, &bfwd.o, &dout4, &bfwd.stats, &bcfg, blocks, 3, &mut Hbm::new(),
-    );
+        &q4, &k4, &v4, &bfwd.o, &dout4, &bfwd.stats, &bcfg, blocks, &ex3, &mut Hbm::new(),
+    )
+    .expect("preflight batched backward")
+    .0;
     let max_abs =
         |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
     let mut batched_diff = 0.0f32;
@@ -1013,9 +1038,9 @@ pub fn self_check_report() -> SelfCheckReport {
         let cfg_s = AttnConfig { bh_index: s as u32, ..bcfg.clone() };
         let (qs, ks, vs) = (bh_slice(&q4, s), bh_slice(&k4, s), bh_slice(&v4, s));
         let dos = bh_slice(&dout4, s);
-        let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, 1, &mut Hbm::new());
+        let f = flash2_forward(&qs, &ks, &vs, &cfg_s, blocks, &Exec::scoped(1), &mut Hbm::new());
         let g = flash2_backward(
-            &qs, &ks, &vs, &f.o, &dos, f.stats(), &cfg_s, blocks, 1, &mut Hbm::new(),
+            &qs, &ks, &vs, &f.o, &dos, f.stats(), &cfg_s, blocks, &Exec::scoped(1), &mut Hbm::new(),
         );
         batched_diff = batched_diff
             .max(max_abs(&bfwd.o.data[s * len..(s + 1) * len], &f.o.data))
@@ -1035,14 +1060,17 @@ pub fn self_check_report() -> SelfCheckReport {
         dropout_seed: 11,
         ..Default::default()
     };
-    let sfwd = flash2_forward(&q, &k, &v, &scfg, blocks, 2, &mut Hbm::new());
-    let shard_fwd = flash_forward_sharded(&q, &k, &v, &scfg, blocks, 3, 2);
+    let sfwd = flash2_forward(&q, &k, &v, &scfg, blocks, &Exec::scoped(2), &mut Hbm::new());
+    let shard_fwd =
+        flash_forward_sharded(&q, &k, &v, &scfg, blocks, 3, &ex3).expect("preflight sharded").0;
     let sbwd = flash2_backward(
-        &q, &k, &v, &sfwd.o, &dout, sfwd.stats(), &scfg, blocks, 2, &mut Hbm::new(),
+        &q, &k, &v, &sfwd.o, &dout, sfwd.stats(), &scfg, blocks, &Exec::scoped(2), &mut Hbm::new(),
     );
     let shard_bwd = flash_backward_sharded(
-        &q, &k, &v, &sfwd.o, &dout, sfwd.stats(), &scfg, blocks, 3, 2,
-    );
+        &q, &k, &v, &sfwd.o, &dout, sfwd.stats(), &scfg, blocks, 3, &ex3,
+    )
+    .expect("preflight sharded backward")
+    .0;
     let sharded_broke = shard_fwd.o.data != sfwd.o.data
         || shard_fwd.m != sfwd.lse
         || shard_bwd.dq.data != sbwd.dq.data
@@ -1054,7 +1082,7 @@ pub fn self_check_report() -> SelfCheckReport {
     // access accounted.
     let io_cfg = AttnConfig { causal: true, ..Default::default() };
     let mut io_hbm = Hbm::new();
-    let _ = flash2_forward(&q, &k, &v, &io_cfg, blocks, 3, &mut io_hbm);
+    let _ = flash2_forward(&q, &k, &v, &io_cfg, blocks, &Exec::scoped(3), &mut io_hbm);
     let expected =
         crate::sim::cost::flash2_fwd(n as u64, d as u64, blocks, true, false).hbm_elems;
     let io_diff = crate::sim::cost::measured(&io_hbm).abs_diff(expected) as f32;
@@ -1115,7 +1143,13 @@ mod tests {
         let (q, k, v) = qkv(48, 8, 0);
         let std = standard_forward(&q, &k, &v, &AttnConfig::default(), &mut Hbm::new());
         let fast = flash2_forward(
-            &q, &k, &v, &AttnConfig::default(), Blocks::explicit(8, 16), 2, &mut Hbm::new(),
+            &q,
+            &k,
+            &v,
+            &AttnConfig::default(),
+            Blocks::explicit(8, 16),
+            &Exec::scoped(2),
+            &mut Hbm::new(),
         );
         assert!(std.o.max_abs_diff(&fast.o) < 1e-5);
         for r in 0..48 {
@@ -1148,7 +1182,8 @@ mod tests {
             let blocks = Blocks::explicit(b_r, b_c);
             let std = standard_forward(&q, &k, &v, &cfg, &mut Hbm::new());
             let fla = flash_forward(&q, &k, &v, &cfg, blocks, &mut Hbm::new());
-            let fa2 = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            let ex = Exec::scoped(workers);
+            let fa2 = flash2_forward(&q, &k, &v, &cfg, blocks, &ex, &mut Hbm::new());
             let ctx = format!(
                 "n={n} d={d} blocks=({b_r},{b_c}) causal={causal} kv_len={kv_len:?} \
                  p={dropout_p} w={workers}"
@@ -1163,11 +1198,12 @@ mod tests {
         // Per-row-block arithmetic is partition-independent, so the
         // epilogue output must be bitwise identical for any worker count.
         let (q, k, v) = qkv(64, 16, 3);
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(8, 16);
-        let base = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+        let base = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
         for workers in [2usize, 3, 4, 8, 64] {
-            let multi = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            let ex = Exec::scoped(workers);
+            let multi = flash2_forward(&q, &k, &v, &cfg, blocks, &ex, &mut Hbm::new());
             assert_eq!(base.o.data, multi.o.data, "O not bitwise equal at workers={workers}");
             assert_eq!(base.lse, multi.lse, "lse not bitwise equal at workers={workers}");
         }
@@ -1178,9 +1214,9 @@ mod tests {
         let (q, k, v) = qkv(64, 8, 4);
         let blocks = Blocks::explicit(16, 16);
         let mut h1 = Hbm::new();
-        flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 1, &mut h1);
+        flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, &Exec::scoped(1), &mut h1);
         let mut h4 = Hbm::new();
-        flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 4, &mut h4);
+        flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, &Exec::scoped(4), &mut h4);
         assert_eq!(h1.loads, h4.loads);
         assert_eq!(h1.stores, h4.stores);
     }
@@ -1194,7 +1230,13 @@ mod tests {
             let (q, k, v) = qkv(n, d, 5);
             let mut hbm = Hbm::new();
             flash2_forward(
-                &q, &k, &v, &AttnConfig::default(), Blocks::explicit(br, bc), 2, &mut hbm,
+                &q,
+                &k,
+                &v,
+                &AttnConfig::default(),
+                Blocks::explicit(br, bc),
+                &Exec::scoped(2),
+                &mut hbm,
             );
             assert_eq!(hbm.stores, (n * d + n) as u64, "n={n} d={d} blocks=({br},{bc})");
         }
@@ -1204,9 +1246,9 @@ mod tests {
     fn backward_consumes_lse_stats() {
         // flash2 forward -> Algorithm 4 backward via AttnStats::Lse.
         let (q, k, v) = qkv(32, 8, 6);
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(8, 8);
-        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(2), &mut Hbm::new());
         let mut rng = SplitMix64::new(9);
         let dout = Tensor::randn(&[32, 8], &mut rng, 1.0);
         let fg =
@@ -1225,7 +1267,15 @@ mod tests {
         let k = Tensor::randn(&[40, 8], &mut rng, 1.0);
         let v = Tensor::randn(&[40, 8], &mut rng, 1.0);
         let cfg = AttnConfig { kv_len: Some(33), tau: Some(0.25), ..Default::default() };
-        let fast = flash2_forward(&q, &k, &v, &cfg, Blocks::explicit(8, 8), 3, &mut Hbm::new());
+        let fast = flash2_forward(
+            &q,
+            &k,
+            &v,
+            &cfg,
+            Blocks::explicit(8, 8),
+            &Exec::scoped(3),
+            &mut Hbm::new(),
+        );
         // Oracle: dense softmax over the first kv_len keys.
         let tau = 0.25f32;
         for r in 0..24 {
@@ -1249,7 +1299,13 @@ mod tests {
     fn into_attn_output_round_trips_stats() {
         let (q, k, v) = qkv(16, 4, 10);
         let fast = flash2_forward(
-            &q, &k, &v, &AttnConfig::default(), Blocks::explicit(4, 4), 1, &mut Hbm::new(),
+            &q,
+            &k,
+            &v,
+            &AttnConfig::default(),
+            Blocks::explicit(4, 4),
+            &Exec::scoped(1),
+            &mut Hbm::new(),
         );
         let lse_before = fast.lse.clone();
         let out = fast.into_attn_output();
@@ -1354,9 +1410,10 @@ mod tests {
             let cfg =
                 AttnConfig { causal, kv_len, dropout_p, dropout_seed: 7, ..Default::default() };
             let blocks = Blocks::explicit(b_r, b_c);
-            let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new());
+            let ex = Exec::scoped(workers);
+            let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &ex, &mut Hbm::new());
             let fast = flash2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &ex, &mut Hbm::new(),
             );
             let slow = flash_backward(
                 &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut Hbm::new(),
@@ -1383,13 +1440,14 @@ mod tests {
         let (q, k, v) = qkv(n, d, 11);
         let cfg = AttnConfig { causal: true, kv_len: Some(5), ..Default::default() };
         let blocks = Blocks::explicit(2, 3);
-        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(2), &mut Hbm::new());
         let dout = Tensor::full(&[n, d], 1.0);
         let g = flash2_backward(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 2, &mut Hbm::new(),
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::scoped(2), &mut Hbm::new(),
         );
+        let ex1 = Exec::scoped(1);
         let f = |q_: &Tensor, k_: &Tensor, v_: &Tensor| -> f32 {
-            flash2_forward(q_, k_, v_, &cfg, blocks, 1, &mut Hbm::new()).o.data.iter().sum()
+            flash2_forward(q_, k_, v_, &cfg, blocks, &ex1, &mut Hbm::new()).o.data.iter().sum()
         };
         let eps = 1e-3f32;
         for (which, (x, gx)) in [(0, (&q, &g.dq)), (1, (&k, &g.dk)), (2, (&v, &g.dv))] {
@@ -1419,17 +1477,18 @@ mod tests {
         // independent, so all three gradients must be bitwise identical
         // for any worker count.
         let (q, k, v) = qkv(64, 16, 13);
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(8, 16);
-        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(1), &mut Hbm::new());
         let mut rng = SplitMix64::new(14);
         let dout = Tensor::randn(&[64, 16], &mut rng, 1.0);
         let base = flash2_backward(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 1, &mut Hbm::new(),
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::scoped(1), &mut Hbm::new(),
         );
         for workers in [2usize, 3, 4, 8, 64] {
+            let ex = Exec::scoped(workers);
             let multi = flash2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, workers, &mut Hbm::new(),
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &ex, &mut Hbm::new(),
             );
             assert_eq!(base.dq.data, multi.dq.data, "dQ not bitwise equal at workers={workers}");
             assert_eq!(base.dk.data, multi.dk.data, "dK not bitwise equal at workers={workers}");
@@ -1449,10 +1508,10 @@ mod tests {
         let dout = Tensor::randn(&[24, 8], &mut rng, 1.0);
         let cfg = AttnConfig { kv_len: Some(33), tau: Some(0.25), ..Default::default() };
         let blocks = Blocks::explicit(8, 8);
-        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 3, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(3), &mut Hbm::new());
         let (dq_o, dk_o, dv_o) = dense_backward_oracle(&q, &k, &v, &dout, &cfg);
         let fast = flash2_backward(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 3, &mut Hbm::new(),
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::scoped(3), &mut Hbm::new(),
         );
         assert!(fast.dq.max_abs_diff(&dq_o) < 1e-4, "flash2 dq {}", fast.dq.max_abs_diff(&dq_o));
         assert!(fast.dk.max_abs_diff(&dk_o) < 1e-4, "flash2 dk {}", fast.dk.max_abs_diff(&dk_o));
@@ -1473,13 +1532,13 @@ mod tests {
         let (q, k, v) = qkv(16, 4, 16);
         let cfg = AttnConfig { kv_len: Some(0), ..Default::default() };
         let blocks = Blocks::explicit(4, 4);
-        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(2), &mut Hbm::new());
         assert!(fwd.o.data.iter().all(|&x| x == 0.0), "O must be zero for masked rows");
         assert!(fwd.lse.iter().all(|&x| x == f32::NEG_INFINITY), "lse must be -inf");
         let mut rng = SplitMix64::new(17);
         let dout = Tensor::randn(&[16, 4], &mut rng, 1.0);
         let g = flash2_backward(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 2, &mut Hbm::new(),
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::scoped(2), &mut Hbm::new(),
         );
         for (name, t) in [("dq", &g.dq), ("dk", &g.dk), ("dv", &g.dv)] {
             assert!(t.data.iter().all(|&x| x == 0.0), "{name} must be zero");
@@ -1487,10 +1546,10 @@ mod tests {
         // Partially-masked workload stays NaN-free with dead rows present:
         // causal + kv_len=1 leaves only column 0 live.
         let cfg = AttnConfig { causal: true, kv_len: Some(1), ..Default::default() };
-        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(2), &mut Hbm::new());
         assert!(fwd.o.data.iter().all(|x| x.is_finite()));
         let g = flash2_backward(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 2, &mut Hbm::new(),
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::scoped(2), &mut Hbm::new(),
         );
         assert!(g.dq.data.iter().chain(&g.dk.data).chain(&g.dv.data).all(|x| x.is_finite()));
     }

@@ -59,7 +59,7 @@
 //! * [`block_sparse::block_sparse2_forward`] /
 //!   [`block_sparse::block_sparse2_backward`] — the fast production
 //!   sparse pair: exactly the flash2 sweeps (Q-outer forward, two-phase
-//!   backward, `std::thread::scope` workers, bitwise
+//!   backward, pool workers via [`Exec`], bitwise
 //!   worker-count-independent) with the `BlockMask` zero-block filter
 //!   fused into each stream — the filter is the only difference, so a
 //!   dense mask reproduces the dense pair bit for bit. Mask columns are
@@ -79,20 +79,29 @@
 //! [`attention_backward`] entry point, selected by [`BackwardKernel`] —
 //! call sites pick a policy role, not a concrete function.
 //!
-//! **Batched entry points are the hot-path API.** Real workloads are
-//! [batch, heads, n, d]; scheduling them one slice at a time pays a
-//! thread-pool spin-up per slice and idles workers on short sequences —
-//! the occupancy gap FlashAttention-2 attributes most of its speedup to
-//! closing. [`batched`] therefore flattens every batch·head·row-block
-//! (and column-block) work item into a single worker pool:
-//! `flash2_forward_batched` / `flash2_backward_batched` (and, batched
-//! across shards, the sequence-parallel driver in [`distributed`]) are
-//! what the trainer preflight, the serve IO model and the perf benches
-//! call. Per-slice kernel calls remain for tests and reference use only:
-//! they are the oracle the batched scheduler is bitwise-tested against.
-//! Batching never changes per-slice HBM traffic
+//! **One execution handle, batched entry points.** Every parallel
+//! attention schedule runs on an [`Exec`] handle ([`exec`]), which
+//! bundles the worker count, the fault-injection plan and the validation
+//! flag, and selects between two execution modes: [`Exec::new`] — a
+//! **persistent work-stealing pool**, spawned once per process and
+//! parked between calls, so repeated small calls stop paying a
+//! thread-spawn tax — and [`Exec::scoped`] — per-call
+//! `std::thread::scope` workers, the fresh-pool oracle the persistent
+//! mode is bitwise-tested against. Real workloads are
+//! [batch, heads, n, d]; scheduling them one slice at a time idles
+//! workers on short sequences — the occupancy gap FlashAttention-2
+//! attributes most of its speedup to closing. [`batched`] therefore
+//! flattens every batch·head·row-block (and column-block) work item
+//! into a single `Exec` run: `flash2_forward_batched` /
+//! `flash2_backward_batched` (and, batched across shards, the
+//! sequence-parallel driver in [`distributed`]) are what the trainer
+//! preflight, the serve IO model and the perf benches call. Per-slice
+//! kernel calls remain for tests and reference use only: they are the
+//! oracle the batched scheduler is bitwise-tested against. Batching
+//! never changes per-slice HBM traffic
 //! (`sim::cost::flash2_fwd_batched` = slices × per-slice, asserted
-//! exactly), so every IO claim carries over unchanged.
+//! exactly), and the merged totals are identical on either execution
+//! mode, so every IO claim carries over unchanged.
 //!
 //! **The sharded sequence-parallel path covers causal + dropout.** The
 //! multi-device driver ([`distributed`]) shards the key sequence, and
@@ -115,12 +124,13 @@
 //!
 //! # Failure semantics
 //!
-//! The execution plane (the [`batched`] worker pool and both sharded
-//! schedules in [`distributed`]) is fault-tolerant by construction:
-//! workers race only for *work items*, never for output slots, so any
-//! item can be recomputed into its disjoint window without touching the
-//! rest — the paper's §5 associative-merge decomposition used as a
-//! recovery primitive. Concretely ([`faults`] holds the types):
+//! The execution plane ([`exec::Exec`], which the [`batched`] scheduler
+//! and both sharded schedules in [`distributed`] run on) is
+//! fault-tolerant by construction: workers race only for *work items*,
+//! never for output slots, so any item can be recomputed into its
+//! disjoint window without touching the rest — the paper's §5
+//! associative-merge decomposition used as a recovery primitive.
+//! Concretely ([`faults`] holds the types):
 //!
 //! * **What is retried.** A work item whose worker panics
 //!   (`catch_unwind`-contained), whose output fails the finiteness
@@ -136,18 +146,21 @@
 //!   completion adds exactly its per-item traffic
 //!   (`sim::cost::flash2_fwd_item` and friends) to the
 //!   [`faults::FaultReport`].
-//! * **What is reported.** The `_checked` entry points return
-//!   `Result<(output, FaultReport), AttnError>` instead of panicking: a
-//!   typed [`faults::AttnError`] names the site, slice (batch, head),
-//!   and block of an item that exhausted its attempt budget or stayed
+//! * **What is reported.** The batched and sharded entry points take an
+//!   [`Exec`] handle (carrying the fault plan and validation flag) and
+//!   return `Result<(output, FaultReport), AttnError>`: a typed
+//!   [`faults::AttnError`] names the site, slice (batch, head), and
+//!   block of an item that exhausted its attempt budget or stayed
 //!   non-finite, and a malformed shard layout names the shard and the
 //!   reason ([`faults::AttnError::ShardConfig`]) instead of silently
 //!   substituting an all-masked output. Dead shards (wholly beyond
 //!   `kv_len`, wholly above the causal diagonal, or all-zero in the
-//!   sparse mask) are classified in `FaultReport::dead_shards`. The
-//!   plain (unchecked) entry points keep their historical signatures;
-//!   their pool still contains panics and retries, and only after the
-//!   budget is exhausted do they panic — with the typed error's message.
+//!   sparse mask) are classified in `FaultReport::dead_shards`. The old
+//!   `_checked` twins survive only as `#[deprecated]` shims delegating
+//!   to the canonical names via `Exec::scoped`. The per-slice fast
+//!   sparse pair keeps its infallible signature: its pool still
+//!   contains panics and retries, and only after the budget is
+//!   exhausted does it panic — with the typed error's message.
 //! * **What degrades.** The coordinator treats a poisoned training step
 //!   (non-finite loss/grad-norm) as skip-and-report: parameters are not
 //!   committed, the step is counted, training continues. The server
@@ -176,12 +189,13 @@
 //! the offending line.
 //!
 //! * **R1 — pool routing.** No raw `std::thread::spawn` /
-//!   `std::thread::scope` outside [`batched`]'s `run_pool` /
-//!   `run_pool_guarded`. Every parallel schedule goes through the pool,
-//!   so fault containment, retry accounting and the audit hooks cover it
-//!   by construction. (The per-slice `flash2` reference kernels keep
-//!   their historical scopes under pragmas — they are the oracle the
-//!   pool is bitwise-tested against.)
+//!   `std::thread::scope` outside [`exec`]'s `spawn_worker` /
+//!   `run_scoped` — the persistent pool's sole spawn site and the scoped
+//!   oracle. Every parallel schedule goes through [`Exec`], so fault
+//!   containment, retry accounting and the audit hooks cover it by
+//!   construction. (The per-slice `flash2` reference kernels keep their
+//!   historical scopes under pragmas — they are the oracle the pool is
+//!   bitwise-tested against.)
 //! * **R2 — determinism hazards.** Inside `attn/`, `sim/` and
 //!   `runtime/`: no `HashMap`/`HashSet` (iteration order), no
 //!   `Instant::now`/`SystemTime` (wall clock), no
@@ -194,9 +208,10 @@
 //!   `*_backward*` in [`flash2`], [`batched`], [`block_sparse`] and
 //!   [`distributed`] must be exercised by name in the IO-exactness wall
 //!   (`rust/tests/io_complexity.rs`, against a `sim::cost` form);
-//!   batched/sharded entries must have a `_checked` twin; and every
-//!   [`faults::FaultSite`] variant must be injected somewhere in
-//!   `rust/tests/chaos.rs`. New hot paths cannot silently skip the
+//!   batched/sharded entries must take an `Exec` handle — a bare
+//!   `workers: usize` parameter on a public fwd/bwd entry is a finding;
+//!   and every [`faults::FaultSite`] variant must be injected somewhere
+//!   in `rust/tests/chaos.rs`. New hot paths cannot silently skip the
 //!   test walls.
 //!
 //! **Audit contract** (`--features audit`, see `attn::audit`): every
@@ -215,11 +230,14 @@ pub mod audit;
 pub mod batched;
 pub mod block_sparse;
 pub mod distributed;
+pub mod exec;
 pub mod faults;
 pub mod flash;
 pub mod flash2;
 pub mod masks;
 pub mod standard;
+
+pub use exec::Exec;
 
 use crate::tensor::Tensor;
 
@@ -258,8 +276,45 @@ pub struct AttnConfig {
 }
 
 impl AttnConfig {
-    pub fn causal() -> Self {
-        AttnConfig { causal: true, ..Default::default() }
+    /// Start a builder chain from the defaults:
+    /// `AttnConfig::new().causal().dropout(0.1, 7).kv_window(4, 33)`.
+    pub fn new() -> Self {
+        AttnConfig::default()
+    }
+
+    /// Enable the causal mask (judged in global key coordinates).
+    pub fn causal(mut self) -> Self {
+        self.causal = true;
+        self
+    }
+
+    /// Enable dropout with keep-probability `1 - p` and the given
+    /// counter-stream seed.
+    pub fn dropout(mut self, p: f32, seed: u32) -> Self {
+        self.dropout_p = p;
+        self.dropout_seed = seed;
+        self
+    }
+
+    /// Restrict the valid key range: global key column 0 of this slice
+    /// sits at `lo` ([`AttnConfig::kv_offset`]) and padding ends at the
+    /// global key count `hi` ([`AttnConfig::kv_len`]).
+    pub fn kv_window(mut self, lo: usize, hi: usize) -> Self {
+        self.kv_offset = lo;
+        self.kv_len = Some(hi);
+        self
+    }
+
+    /// Set the padding limit alone (global key count; `kv_offset` 0).
+    pub fn kv_len(mut self, n: usize) -> Self {
+        self.kv_len = Some(n);
+        self
+    }
+
+    /// Override the softmax scale (default: 1/sqrt(d)).
+    pub fn tau(mut self, t: f32) -> Self {
+        self.tau = Some(t);
+        self
     }
 
     pub fn tau_for(&self, d: usize) -> f32 {
@@ -366,7 +421,7 @@ pub struct AttnGrads {
 
 /// Which gradient kernel an `AttnGrads` producer routes through — the
 /// backward half of the two-kernel policy (module docs above).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug)]
 pub enum BackwardKernel<'a> {
     /// Algorithm 3: the materialise-everything baseline (square shapes;
     /// ignores the saved statistics and recomputes P densely).
@@ -375,14 +430,14 @@ pub enum BackwardKernel<'a> {
     /// IO-theorem oracle.
     Flash,
     /// The fast two-phase production kernel (Q-outer dQ + column-parallel
-    /// dK/dV) with `workers` row/column-block threads.
-    Flash2 { workers: usize },
+    /// dK/dV) on the given execution handle.
+    Flash2 { exec: &'a Exec },
     /// The fast block-sparse two-phase kernel
     /// (`attn::block_sparse::block_sparse2_backward`): the Flash2 sweeps
     /// with `mask`'s zero blocks skipped in both phases. Mask columns
     /// are global key tiles (see the `block_sparse` module docs), so the
     /// same role works on key shards.
-    BlockSparse2 { workers: usize, mask: &'a masks::BlockMask },
+    BlockSparse2 { exec: &'a Exec, mask: &'a masks::BlockMask },
 }
 
 /// Shared per-slice entry point for every backward pass. Call sites
@@ -408,11 +463,11 @@ pub fn attention_backward(
         BackwardKernel::Flash => {
             flash::flash_backward(q, k, v, o, dout, stats, cfg, blocks, hbm)
         }
-        BackwardKernel::Flash2 { workers } => {
-            flash2::flash2_backward(q, k, v, o, dout, stats, cfg, blocks, workers, hbm)
+        BackwardKernel::Flash2 { exec } => {
+            flash2::flash2_backward(q, k, v, o, dout, stats, cfg, blocks, exec, hbm)
         }
-        BackwardKernel::BlockSparse2 { workers, mask } => block_sparse::block_sparse2_backward(
-            q, k, v, o, dout, stats, mask, cfg, blocks, workers, hbm,
+        BackwardKernel::BlockSparse2 { exec, mask } => block_sparse::block_sparse2_backward(
+            q, k, v, o, dout, stats, mask, cfg, blocks, exec, hbm,
         ),
     }
 }
@@ -438,12 +493,12 @@ pub fn attention_backward_batched(
     blocks: flash::Blocks,
     hbm: &mut crate::sim::hbm::Hbm,
 ) -> AttnGrads {
-    if let BackwardKernel::Flash2 { workers } = kernel {
-        return batched::flash2_backward_batched(
-            q, k, v, o, dout, stats, cfg, blocks, workers, hbm,
-        );
+    if let BackwardKernel::Flash2 { exec } = kernel {
+        return batched::flash2_backward_batched(q, k, v, o, dout, stats, cfg, blocks, exec, hbm)
+            .unwrap_or_else(|e| panic!("attention_backward_batched: retries exhausted: {e}"))
+            .0;
     }
-    if let BackwardKernel::BlockSparse2 { workers, mask } = kernel {
+    if let BackwardKernel::BlockSparse2 { exec, mask } = kernel {
         return batched::block_sparse2_backward_batched(
             q,
             k,
@@ -454,9 +509,11 @@ pub fn attention_backward_batched(
             std::slice::from_ref(mask),
             cfg,
             blocks,
-            workers,
+            exec,
             hbm,
-        );
+        )
+        .unwrap_or_else(|e| panic!("attention_backward_batched: retries exhausted: {e}"))
+        .0;
     }
     assert_eq!(q.rank(), 4, "attention_backward_batched: Q must be [batch, heads, n, d]");
     let (b, h, n, d) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
@@ -504,15 +561,17 @@ mod tests {
         let k = Tensor::randn(&[n, d], &mut rng, 1.0);
         let v = Tensor::randn(&[n, d], &mut rng, 1.0);
         let dout = Tensor::randn(&[n, d], &mut rng, 1.0);
-        let cfg = AttnConfig::causal();
+        let cfg = AttnConfig::new().causal();
         let blocks = flash::Blocks::explicit(8, 8);
         let dense = masks::BlockMask::dense(3, 3);
-        let fwd = flash2::flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let ex = Exec::new(3);
+        let fwd =
+            flash2::flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::scoped(2), &mut Hbm::new());
         let grads: Vec<AttnGrads> = [
             BackwardKernel::Standard,
             BackwardKernel::Flash,
-            BackwardKernel::Flash2 { workers: 3 },
-            BackwardKernel::BlockSparse2 { workers: 3, mask: &dense },
+            BackwardKernel::Flash2 { exec: &ex },
+            BackwardKernel::BlockSparse2 { exec: &ex, mask: &dense },
         ]
         .into_iter()
         .map(|kernel| {
@@ -530,6 +589,20 @@ mod tests {
         assert_eq!(grads[3].dq.data, grads[2].dq.data);
         assert_eq!(grads[3].dk.data, grads[2].dk.data);
         assert_eq!(grads[3].dv.data, grads[2].dv.data);
+    }
+
+    #[test]
+    fn config_builder_matches_struct_literal_forms() {
+        let cfg = AttnConfig::new().causal().dropout(0.2, 7).kv_window(8, 33).tau(0.25);
+        assert!(cfg.causal);
+        assert_eq!(cfg.dropout_p, 0.2);
+        assert_eq!(cfg.dropout_seed, 7);
+        assert_eq!(cfg.kv_offset, 8);
+        assert_eq!(cfg.kv_len, Some(33));
+        assert_eq!(cfg.tau, Some(0.25));
+        assert_eq!(AttnConfig::new().kv_len(5).kv_len, Some(5));
+        // The chain composes with the shard remap exactly like literals.
+        assert_eq!(cfg.for_shard(4).kv_offset, 12);
     }
 
     #[test]

@@ -204,7 +204,7 @@ mod tests {
     #[test]
     fn causal_first_row_is_v0() {
         let (q, k, v) = qkv(8, 4, 1);
-        let out = standard_forward(&q, &k, &v, &AttnConfig::causal(), &mut Hbm::new());
+        let out = standard_forward(&q, &k, &v, &AttnConfig::new().causal(), &mut Hbm::new());
         assert_allclose(out.o.row(0), v.row(0), 1e-6, 0.0, "first row");
     }
 

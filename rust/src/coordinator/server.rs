@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use super::trainer::LmTrainer;
 use crate::attn::flash::Blocks;
+use crate::attn::Exec;
 use crate::runtime::Runtime;
 use crate::sim::cost;
 use crate::util::rng::SplitMix64;
@@ -61,6 +62,13 @@ impl Server {
             stats: ServeStats::default(),
             rng: SplitMix64::new(0x5EED),
         }
+    }
+
+    /// The execution handle the serve path's mirror-side attention work
+    /// runs on — the trainer's. Serving shares the trainer's persistent
+    /// pool rather than carrying a separate worker-count knob.
+    pub fn exec(&self) -> &Exec {
+        &self.trainer.exec
     }
 
     /// Modeled attention accumulator *write* traffic for one full serving

@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use super::config::TrainConfig;
 use super::trainer::ClsTrainer;
+use crate::attn::Exec;
 use crate::data::batch::ClsDataset;
 use crate::data::image::ImageCls;
 use crate::data::listops::ListOps;
@@ -31,6 +32,7 @@ pub fn run_task(
     ds: &dyn ClsDataset,
     steps: usize,
     seed: u64,
+    exec: &Exec,
 ) -> Result<TaskResult> {
     let cfg = TrainConfig {
         model: model.to_string(),
@@ -41,7 +43,7 @@ pub fn run_task(
         eval_every: (steps / 4).max(1),
         seed,
     };
-    let mut tr = ClsTrainer::new(rt, cfg)?;
+    let mut tr = ClsTrainer::new(rt, cfg, exec)?;
     let t0 = std::time::Instant::now();
     tr.train(rt, ds)?;
     let seconds = t0.elapsed().as_secs_f64();

@@ -10,7 +10,7 @@ use anyhow::{ensure, Context, Result};
 
 use super::config::TrainConfig;
 use super::metrics::Metrics;
-use crate::attn::flash2;
+use crate::attn::{flash2, Exec};
 use crate::data::batch::{Batch, ClsDataset};
 use crate::data::corpus::Corpus;
 use crate::runtime::{Runtime, Value};
@@ -36,13 +36,14 @@ const PREFLIGHT_BUDGET: std::time::Duration = std::time::Duration::from_secs(30)
 /// the broken invariant (`flash2::self_check_report` probe) rather than
 /// reporting one opaque scalar, and the probe runs under
 /// [`PREFLIGHT_BUDGET`] so a hung check cannot wedge startup.
-fn preflight_fast_kernel() -> Result<()> {
+fn preflight_fast_kernel(exec: &Exec) -> Result<()> {
     static VERDICT: OnceLock<std::result::Result<(), String>> = OnceLock::new();
     let verdict = VERDICT.get_or_init(|| {
         let (tx, rx) = std::sync::mpsc::channel();
+        let probe_exec = exec.clone();
         // lint::allow(R1, preflight watchdog: a timeout thread off the numeric path, no output slots)
         std::thread::spawn(move || {
-            let _ = tx.send(flash2::self_check_report());
+            let _ = tx.send(flash2::self_check_report_on(&probe_exec));
         });
         match rx.recv_timeout(PREFLIGHT_BUDGET) {
             Ok(report) => report.verdict(1e-4).map_err(|e| e.to_string()),
@@ -85,8 +86,8 @@ struct ModelState {
 }
 
 impl ModelState {
-    fn init(rt: &mut Runtime, tag: &str, seed: i32) -> Result<ModelState> {
-        preflight_fast_kernel()?;
+    fn init(rt: &mut Runtime, tag: &str, seed: i32, exec: &Exec) -> Result<ModelState> {
+        preflight_fast_kernel(exec)?;
         let info = rt.manifest.model(tag)?.clone();
         let n = info.param_names.len();
         let params = rt
@@ -214,22 +215,28 @@ pub struct LmTrainer {
     /// batched IO model multiplies over (1 if the manifest predates the
     /// n_head config key).
     pub n_head: usize,
+    /// Execution handle for every mirror-side attention run this trainer
+    /// owns (the preflight probes ran on it; serve-path cross-checks
+    /// reuse it). One persistent pool per process: callers clone a
+    /// shared handle in rather than passing loose worker counts.
+    pub exec: Exec,
     rng: SplitMix64,
 }
 
 impl LmTrainer {
-    pub fn new(rt: &mut Runtime, cfg: TrainConfig) -> Result<LmTrainer> {
+    pub fn new(rt: &mut Runtime, cfg: TrainConfig, exec: &Exec) -> Result<LmTrainer> {
         let info = rt.manifest.model(&cfg.model)?;
         let batch = info.cfg_usize("batch").context("model batch")?;
         let n_ctx = info.cfg_usize("n_ctx").context("model n_ctx")?;
         let n_head = info.cfg_usize("n_head").unwrap_or(1);
-        let state = ModelState::init(rt, &cfg.model.clone(), cfg.seed as i32)?;
+        let state = ModelState::init(rt, &cfg.model.clone(), cfg.seed as i32, exec)?;
         Ok(LmTrainer {
             state,
             metrics: Metrics::new(&cfg.model),
             batch,
             n_ctx,
             n_head,
+            exec: exec.clone(),
             rng: SplitMix64::new(cfg.seed ^ 0xBEEF),
             cfg,
         })
@@ -332,20 +339,23 @@ pub struct ClsTrainer {
     pub metrics: Metrics,
     pub batch: usize,
     pub n_ctx: usize,
+    /// Same role as [`LmTrainer::exec`].
+    pub exec: Exec,
     rng: SplitMix64,
 }
 
 impl ClsTrainer {
-    pub fn new(rt: &mut Runtime, cfg: TrainConfig) -> Result<ClsTrainer> {
+    pub fn new(rt: &mut Runtime, cfg: TrainConfig, exec: &Exec) -> Result<ClsTrainer> {
         let info = rt.manifest.model(&cfg.model)?;
         let batch = info.cfg_usize("batch").context("model batch")?;
         let n_ctx = info.cfg_usize("n_ctx").context("model n_ctx")?;
-        let state = ModelState::init(rt, &cfg.model.clone(), cfg.seed as i32)?;
+        let state = ModelState::init(rt, &cfg.model.clone(), cfg.seed as i32, exec)?;
         Ok(ClsTrainer {
             state,
             metrics: Metrics::new(&cfg.model),
             batch,
             n_ctx,
+            exec: exec.clone(),
             rng: SplitMix64::new(cfg.seed ^ 0xC1A55),
             cfg,
         })
@@ -429,9 +439,10 @@ mod tests {
 
     #[test]
     fn preflight_accepts_the_fast_kernel() {
-        preflight_fast_kernel().unwrap();
-        // Cached: second call must not re-run the workload (OnceLock).
-        preflight_fast_kernel().unwrap();
+        preflight_fast_kernel(&Exec::new(3)).unwrap();
+        // Cached: second call must not re-run the workload (OnceLock),
+        // including on a different handle.
+        preflight_fast_kernel(&Exec::scoped(2)).unwrap();
     }
 
     #[test]

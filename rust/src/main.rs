@@ -13,6 +13,7 @@
 use std::path::Path;
 
 use anyhow::{bail, Result};
+use flashattn::attn::Exec;
 use flashattn::coordinator::server::Server;
 use flashattn::coordinator::{tasks, LmTrainer, TrainConfig};
 use flashattn::data::corpus::Corpus;
@@ -86,7 +87,8 @@ fn train(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 0) as u64,
     };
     let corpus = Corpus::builtin(args.get_usize("corpus-bytes", 200_000), 1);
-    let mut tr = LmTrainer::new(&mut rt, cfg)?;
+    let exec = Exec::new(args.get_usize("workers", 4));
+    let mut tr = LmTrainer::new(&mut rt, cfg, &exec)?;
     println!("model {} — {} parameters", tr.cfg.model, tr.n_params());
     let (first, last) = tr.train(&mut rt, &corpus)?;
     let eval = tr.eval_loss(&mut rt, &corpus.eval_batch(tr.batch, tr.n_ctx))?;
@@ -122,8 +124,15 @@ fn train_cls(args: &Args) -> Result<()> {
     let n_ctx = rt.manifest.model(&model)?.cfg_usize("n_ctx").unwrap_or(128);
     let ds = dataset_by_name(args.get_or("task", "listops"), n_ctx)?;
     let steps = args.get_usize("steps", 150);
-    let res =
-        tasks::run_task(&mut rt, &model, ds.as_ref(), steps, args.get_usize("seed", 0) as u64)?;
+    let exec = Exec::new(args.get_usize("workers", 4));
+    let res = tasks::run_task(
+        &mut rt,
+        &model,
+        ds.as_ref(),
+        steps,
+        args.get_usize("seed", 0) as u64,
+        &exec,
+    )?;
     println!(
         "{} on {}: accuracy {:.3} (chance {:.3}), eval loss {:.4}, {:.0} ms/step, {:.1}s total",
         res.model,
@@ -145,7 +154,8 @@ fn serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let corpus = Corpus::builtin(100_000, 1);
-    let mut tr = LmTrainer::new(&mut rt, cfg)?;
+    let exec = Exec::new(args.get_usize("workers", 4));
+    let mut tr = LmTrainer::new(&mut rt, cfg, &exec)?;
     if let Some(ckpt) = args.get("ckpt") {
         tr.load(Path::new(ckpt))?;
         println!("loaded checkpoint {ckpt}");

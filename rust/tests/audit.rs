@@ -25,7 +25,7 @@ use flashattn::attn::distributed::{
 };
 use flashattn::attn::flash::Blocks;
 use flashattn::attn::masks::BlockMask;
-use flashattn::attn::AttnConfig;
+use flashattn::attn::{AttnConfig, Exec};
 use flashattn::sim::hbm::Hbm;
 use flashattn::tensor::Tensor;
 use flashattn::util::rng::SplitMix64;
@@ -56,15 +56,18 @@ fn batched_mapping_is_worker_count_invariant() {
     let v = rand(&[b, h, n, d], 0xA0D_3);
     let dout = rand(&[b, h, n, d], 0xA0D_4);
     let cfg = AttnConfig { causal: true, ..Default::default() };
-    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new())
+        .expect("fault-free")
+        .0;
 
     let mut baseline: Option<Vec<PoolRun>> = None;
     for workers in [1usize, 2, 5] {
+        let exec = Exec::new(workers);
         let runs = record(|| {
             let mut hbm = Hbm::new();
-            let _ = flash2_forward_batched(&q, &k, &v, &cfg, blocks, workers, &mut hbm);
+            let _ = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut hbm);
             let _ = flash2_backward_batched(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut hbm,
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &exec, &mut hbm,
             );
         });
         // One forward pool plus the two backward phases.
@@ -103,16 +106,21 @@ fn sparse_batched_mapping_is_worker_count_invariant() {
     mask.set(3, 1, false);
     let masks = [mask];
     let cfg = AttnConfig::default();
-    let fwd = block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut Hbm::new());
+    let fwd = block_sparse2_forward_batched(
+        &q, &k, &v, &masks, &cfg, blocks, &Exec::new(1), &mut Hbm::new(),
+    )
+    .expect("fault-free")
+    .0;
 
     let mut baseline: Option<Vec<PoolRun>> = None;
     for workers in [1usize, 2, 5] {
+        let exec = Exec::new(workers);
         let runs = record(|| {
             let mut hbm = Hbm::new();
             let _ =
-                block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, workers, &mut hbm);
+                block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, &exec, &mut hbm);
             let _ = block_sparse2_backward_batched(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, workers, &mut hbm,
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, &exec, &mut hbm,
             );
         });
         assert_eq!(runs.len(), 3, "w={workers}");
@@ -136,15 +144,17 @@ fn single_slice_sparse_mapping_is_worker_count_invariant() {
     let mut mask = BlockMask::dense(t_r, t_c);
     mask.set(1, 3, false);
     let cfg = AttnConfig { causal: true, ..Default::default() };
-    let fwd = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 1, &mut Hbm::new());
+    let fwd =
+        block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &Exec::new(1), &mut Hbm::new());
 
     let mut baseline: Option<Vec<PoolRun>> = None;
     for workers in [1usize, 2, 5] {
+        let exec = Exec::new(workers);
         let runs = record(|| {
             let mut hbm = Hbm::new();
-            let _ = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut hbm);
+            let _ = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &exec, &mut hbm);
             let _ = block_sparse2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, workers, &mut hbm,
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, &exec, &mut hbm,
             );
         });
         // SparseFwd, then the SparseDq and SparseDkv backward phases —
@@ -173,8 +183,9 @@ fn ring_forward_mapping_is_worker_and_shard_count_invariant() {
     let mut baseline: Option<Vec<PoolRun>> = None;
     for shards in [1usize, 2, 4] {
         for workers in [1usize, 2, 5] {
+            let exec = Exec::new(workers);
             let runs = record(|| {
-                let _ = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, workers);
+                let _ = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &exec);
             });
             assert_eq!(runs.len(), 1, "shards={shards} w={workers}");
             match &baseline {
@@ -197,13 +208,16 @@ fn ring_backward_mapping_is_worker_count_invariant() {
     let v = rand(&[n, d], 0x3D_3);
     let dout = rand(&[n, d], 0x3D_4);
     let cfg = AttnConfig { causal: true, ..Default::default() };
-    let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+    let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+        .expect("fault-free")
+        .0;
 
     let mut baseline: Option<Vec<PoolRun>> = None;
     for workers in [1usize, 2, 5] {
+        let exec = Exec::new(workers);
         let runs = record(|| {
             let _ = flash_backward_sharded(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, workers,
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, &exec,
             );
         });
         // RingDq, then RingDkv (one item per live (shard, column block)).
@@ -227,8 +241,9 @@ fn tree_mapping_is_worker_count_invariant() {
 
     let mut baseline: Option<Vec<PoolRun>> = None;
     for workers in [1usize, 2, 5] {
+        let exec = Exec::new(workers);
         let runs = record(|| {
-            let _ = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, workers);
+            let _ = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, &exec);
         });
         // One TreePartial pool computes every (shard, row block) partial;
         // the merge tree itself is serial arithmetic, not a pool.
@@ -238,6 +253,40 @@ fn tree_mapping_is_worker_count_invariant() {
             Some(base) => assert_eq!(&runs, base, "item→slot mapping drifted at w={workers}"),
         }
     }
+}
+
+#[test]
+fn fingerprints_survive_pool_reuse_and_match_scoped_oracle() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // The persistent-runtime leg of the audit wall: ONE long-lived
+    // handle driving batched, ring and tree schedules back to back must
+    // record exactly the fingerprints that fresh per-call handles (and
+    // the scoped oracle) record — parked workers carry no state between
+    // calls that could perturb the item→slot mapping.
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 16usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q4 = rand(&[b, h, n, d], 0xF1_1);
+    let k4 = rand(&[b, h, n, d], 0xF1_2);
+    let v4 = rand(&[b, h, n, d], 0xF1_3);
+    let q = rand(&[n, d], 0xF1_4);
+    let k = rand(&[n, d], 0xF1_5);
+    let v = rand(&[n, d], 0xF1_6);
+    let cfg = AttnConfig::new().causal();
+    let run_all = |exec: &Exec| {
+        record(|| {
+            let mut hbm = Hbm::new();
+            let _ = flash2_forward_batched(&q4, &k4, &v4, &cfg, blocks, exec, &mut hbm);
+            let _ = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 2, exec);
+            let _ = flash_forward_sharded_tree(&q, &k, &v, &AttnConfig::new(), blocks, 2, exec);
+        })
+    };
+    let reused = Exec::new(3);
+    let first = run_all(&reused);
+    assert_eq!(first.len(), 3, "batched + ring + tree pools");
+    let again = run_all(&reused);
+    assert_eq!(again, first, "fingerprints drifted across pool reuse");
+    assert_eq!(run_all(&Exec::new(3)), first, "fresh pool handle disagrees with reused one");
+    assert_eq!(run_all(&Exec::scoped(3)), first, "scoped oracle disagrees with persistent pool");
 }
 
 #[test]

@@ -12,27 +12,35 @@
 //! * surface budget exhaustion and poisoned inputs as typed
 //!   [`AttnError`]s carrying (site, slice, batch, head, block)
 //!   provenance.
+//!
+//! Every grid runs on guarded `Exec::new(w)` handles — the persistent
+//! parked-worker pool production uses — so the wall also proves the
+//! pool's claim/retry machinery preserves the invariants the per-call
+//! scoped runtime established.
 
 use flashattn::attn::batched::{
-    block_sparse2_backward_batched, block_sparse2_backward_batched_checked,
-    block_sparse2_forward_batched, block_sparse2_forward_batched_checked, flash2_backward_batched,
-    flash2_backward_batched_checked, flash2_forward_batched, flash2_forward_batched_checked,
-    flash2_forward_many, flash2_forward_many_checked, AttnSlice,
+    block_sparse2_backward_batched, block_sparse2_forward_batched, flash2_backward_batched,
+    flash2_forward_batched, flash2_forward_many, AttnSlice,
 };
 use flashattn::attn::distributed::{
-    block_sparse_forward_sharded_tree, block_sparse_forward_sharded_tree_checked, classify_shards,
-    flash_backward_sharded, flash_backward_sharded_checked, flash_forward_sharded,
-    flash_forward_sharded_checked, flash_forward_sharded_tree, flash_forward_sharded_tree_checked,
-    shard_ranges, Shard,
+    block_sparse_forward_sharded_tree, classify_shards, flash_backward_sharded,
+    flash_forward_sharded, flash_forward_sharded_tree, shard_ranges, Shard,
 };
 use flashattn::attn::faults::{AttnError, FaultKind, FaultPlan, FaultSite};
 use flashattn::attn::flash::Blocks;
 use flashattn::attn::masks::BlockMask;
-use flashattn::attn::AttnConfig;
+use flashattn::attn::{AttnConfig, Exec};
 use flashattn::sim::cost;
 use flashattn::sim::hbm::Hbm;
 use flashattn::tensor::Tensor;
 use flashattn::util::rng::SplitMix64;
+
+/// A guarded handle over the persistent pool: fault plan armed and the
+/// finiteness guardrail on — the replacement for the old `_checked`
+/// entry points.
+fn guarded(workers: usize, plan: &FaultPlan) -> Exec {
+    Exec::new(workers).with_plan(plan).validated()
+}
 
 const ALL_KINDS: [FaultKind; 4] = [
     FaultKind::WorkerPanic,
@@ -104,7 +112,10 @@ fn batched_forward_recovers_bitwise_with_exact_retry_traffic() {
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
         let mut clean_hbm = Hbm::new();
-        let baseline = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut clean_hbm);
+        let baseline =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut clean_hbm)
+                .expect("fault-free")
+                .0;
         for kind in ALL_KINDS {
             let mut plan = FaultPlan::none();
             for &it in &faulted {
@@ -113,8 +124,9 @@ fn batched_forward_recovers_bitwise_with_exact_retry_traffic() {
             for workers in [1usize, 2, 5] {
                 let ctx = format!("causal={causal} kind={kind:?} w={workers}");
                 let mut hbm = Hbm::new();
+                let gx = guarded(workers, &plan);
                 let (out, report) =
-                    flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, workers, &mut hbm, &plan)
+                    flash2_forward_batched(&q, &k, &v, &cfg, blocks, &gx, &mut hbm)
                         .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
                 assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
                 assert_eq!(out.stats.lse, baseline.stats.lse, "lse not bitwise [{ctx}]");
@@ -132,7 +144,8 @@ fn batched_forward_recovers_bitwise_with_exact_retry_traffic() {
                     let expected: u64 = faulted
                         .iter()
                         .map(|&it| {
-                            cost::flash2_fwd_item(n as u64, d as u64, blocks, (it % t_r) as u64, causal)
+                            let rb = (it % t_r) as u64;
+                            cost::flash2_fwd_item(n as u64, d as u64, blocks, rb, causal)
                         })
                         .sum();
                     assert_eq!(report.retry_hbm.accesses(), expected, "retry traffic [{ctx}]");
@@ -160,11 +173,15 @@ fn batched_backward_recovers_bitwise_with_exact_retry_traffic() {
     let t_c = n.div_ceil(blocks.b_c);
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
-        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new())
+            .expect("fault-free")
+            .0;
         let mut clean_hbm = Hbm::new();
         let baseline = flash2_backward_batched(
-            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 1, &mut clean_hbm,
-        );
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &Exec::new(1), &mut clean_hbm,
+        )
+        .expect("fault-free")
+        .0;
         for kind in ALL_KINDS {
             let plan = FaultPlan::none()
                 .with(FaultSite::BatchedDq, dq_it, 0, kind)
@@ -172,8 +189,9 @@ fn batched_backward_recovers_bitwise_with_exact_retry_traffic() {
             for workers in [1usize, 2, 5] {
                 let ctx = format!("causal={causal} kind={kind:?} w={workers}");
                 let mut hbm = Hbm::new();
-                let (grads, report) = flash2_backward_batched_checked(
-                    &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut hbm, &plan,
+                let (grads, report) = flash2_backward_batched(
+                    &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks,
+                    &guarded(workers, &plan), &mut hbm,
                 )
                 .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
                 assert_eq!(grads.dq.data, baseline.dq.data, "dQ not bitwise [{ctx}]");
@@ -220,16 +238,19 @@ fn sparse_batched_forward_recovers_bitwise() {
     let masks = [mask];
     let cfg = AttnConfig::default();
     let mut clean_hbm = Hbm::new();
+    let ex1 = Exec::new(1);
     let baseline =
-        block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut clean_hbm);
+        block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, &ex1, &mut clean_hbm)
+            .expect("fault-free")
+            .0;
     for kind in ALL_KINDS {
         // Pool item 5 = (s=1, rb=1).
         let plan = FaultPlan::none().with(FaultSite::SparseFwd, 5, 0, kind);
         for workers in [1usize, 2, 5] {
             let ctx = format!("kind={kind:?} w={workers}");
             let mut hbm = Hbm::new();
-            let (out, report) = block_sparse2_forward_batched_checked(
-                &q, &k, &v, &masks, &cfg, blocks, workers, &mut hbm, &plan,
+            let (out, report) = block_sparse2_forward_batched(
+                &q, &k, &v, &masks, &cfg, blocks, &guarded(workers, &plan), &mut hbm,
             )
             .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
             assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
@@ -267,11 +288,17 @@ fn sparse_batched_backward_recovers_bitwise() {
     mask.set(3, 1, false);
     let masks = [mask];
     let cfg = AttnConfig::default();
-    let fwd = block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 1, &mut Hbm::new());
+    let ex1 = Exec::new(1);
+    let fwd =
+        block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, &ex1, &mut Hbm::new())
+            .expect("fault-free")
+            .0;
     let mut clean_hbm = Hbm::new();
     let baseline = block_sparse2_backward_batched(
-        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, 1, &mut clean_hbm,
-    );
+        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, &ex1, &mut clean_hbm,
+    )
+    .expect("fault-free")
+    .0;
     for kind in ALL_KINDS {
         // dQ pool item 5 = (s=1, rb=1); dK/dV pool item 2 = (s=0, cb=2).
         let plan = FaultPlan::none()
@@ -280,9 +307,9 @@ fn sparse_batched_backward_recovers_bitwise() {
         for workers in [1usize, 2, 5] {
             let ctx = format!("kind={kind:?} w={workers}");
             let mut hbm = Hbm::new();
-            let (grads, report) = block_sparse2_backward_batched_checked(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, workers, &mut hbm,
-                &plan,
+            let (grads, report) = block_sparse2_backward_batched(
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks,
+                &guarded(workers, &plan), &mut hbm,
             )
             .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
             assert_eq!(grads.dq.data, baseline.dq.data, "dQ not bitwise [{ctx}]");
@@ -322,7 +349,9 @@ fn ring_forward_recovers_bitwise_with_exact_retry_traffic() {
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
         let live = shard_ranges(n, blocks.b_c, shards);
-        let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+        let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+            .expect("fault-free")
+            .0;
         for kind in ALL_KINDS {
             let mut plan = FaultPlan::none();
             for &rb in &faulted {
@@ -330,8 +359,8 @@ fn ring_forward_recovers_bitwise_with_exact_retry_traffic() {
             }
             for workers in [1usize, 2, 5] {
                 let ctx = format!("causal={causal} kind={kind:?} w={workers}");
-                let (out, report) = flash_forward_sharded_checked(
-                    &q, &k, &v, &cfg, blocks, shards, workers, &plan,
+                let (out, report) = flash_forward_sharded(
+                    &q, &k, &v, &cfg, blocks, shards, &guarded(workers, &plan),
                 )
                 .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
                 assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
@@ -368,18 +397,23 @@ fn ring_backward_recovers_bitwise_with_exact_retry_traffic() {
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
         let live = shard_ranges(n, blocks.b_c, shards);
-        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+            .expect("fault-free")
+            .0;
         let baseline = flash_backward_sharded(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, 1,
-        );
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, &Exec::new(1),
+        )
+        .expect("fault-free")
+        .0;
         for kind in ALL_KINDS {
             let plan = FaultPlan::none()
                 .with(FaultSite::RingDq, dq_rb, 0, kind)
                 .with(FaultSite::RingDkv, 6, 0, kind);
             for workers in [1usize, 2, 5] {
                 let ctx = format!("causal={causal} kind={kind:?} w={workers}");
-                let (grads, report) = flash_backward_sharded_checked(
-                    &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, workers, &plan,
+                let (grads, report) = flash_backward_sharded(
+                    &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards,
+                    &guarded(workers, &plan),
                 )
                 .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
                 assert_eq!(grads.dq.data, baseline.dq.data, "dQ not bitwise [{ctx}]");
@@ -414,7 +448,9 @@ fn tree_forward_recovers_bitwise_with_exact_retry_traffic() {
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
         let live = shard_ranges(n, blocks.b_c, shards);
-        let baseline = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, 1);
+        let baseline = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+            .expect("fault-free")
+            .0;
         for kind in ALL_KINDS {
             let mut plan = FaultPlan::none();
             for &it in &faulted {
@@ -422,8 +458,8 @@ fn tree_forward_recovers_bitwise_with_exact_retry_traffic() {
             }
             for workers in [1usize, 2, 5] {
                 let ctx = format!("causal={causal} kind={kind:?} w={workers}");
-                let (out, report) = flash_forward_sharded_tree_checked(
-                    &q, &k, &v, &cfg, blocks, shards, workers, &plan,
+                let (out, report) = flash_forward_sharded_tree(
+                    &q, &k, &v, &cfg, blocks, shards, &guarded(workers, &plan),
                 )
                 .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
                 assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
@@ -459,11 +495,14 @@ fn sparse_tree_partial_poison_is_recomputed_and_remerged() {
     let v = rand(&[n, d], 0x57E_3);
     let mask = BlockMask::dense(n / blocks.b_r, n / blocks.b_c);
     let cfg = AttnConfig::default();
-    let baseline = block_sparse_forward_sharded_tree(&q, &k, &v, &mask, &cfg, blocks, shards, 1);
+    let baseline =
+        block_sparse_forward_sharded_tree(&q, &k, &v, &mask, &cfg, blocks, shards, &Exec::new(1))
+            .expect("fault-free")
+            .0;
     // One poisoned partial on shard 1: recomputed, re-merged, bitwise.
     let plan = FaultPlan::none().with(FaultSite::TreePartial, 1, 0, FaultKind::PoisonedPartial);
-    let (out, report) = block_sparse_forward_sharded_tree_checked(
-        &q, &k, &v, &mask, &cfg, blocks, shards, 2, &plan,
+    let (out, report) = block_sparse_forward_sharded_tree(
+        &q, &k, &v, &mask, &cfg, blocks, shards, &guarded(2, &plan),
     )
     .expect("must recover");
     assert_eq!(out.o.data, baseline.o.data, "O not bitwise after re-merge");
@@ -476,8 +515,8 @@ fn sparse_tree_partial_poison_is_recomputed_and_remerged() {
         .with(FaultSite::TreePartial, 1, 0, FaultKind::PoisonedPartial)
         .with(FaultSite::TreePartial, 1, 1, FaultKind::PoisonedPartial)
         .with(FaultSite::TreePartial, 1, 2, FaultKind::PoisonedPartial);
-    let err = block_sparse_forward_sharded_tree_checked(
-        &q, &k, &v, &mask, &cfg, blocks, shards, 2, &plan,
+    let err = block_sparse_forward_sharded_tree(
+        &q, &k, &v, &mask, &cfg, blocks, shards, &guarded(2, &plan),
     )
     .unwrap_err();
     assert_eq!(
@@ -512,7 +551,7 @@ fn exhausted_retry_budget_is_a_typed_error_with_provenance() {
         .with(FaultSite::BatchedFwd, 7, 1, FaultKind::WorkerPanic)
         .with(FaultSite::BatchedFwd, 7, 2, FaultKind::WorkerPanic);
     let err =
-        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan)
+        flash2_forward_batched(&q, &k, &v, &cfg, blocks, &guarded(2, &plan), &mut Hbm::new())
             .unwrap_err();
     match err {
         AttnError::ItemFailed { site, slice, block, attempts, .. } => {
@@ -529,7 +568,7 @@ fn exhausted_retry_budget_is_a_typed_error_with_provenance() {
         .with(FaultSite::BatchedFwd, 13, 1, FaultKind::PoisonedPartial)
         .with(FaultSite::BatchedFwd, 13, 2, FaultKind::PoisonedPartial);
     let err =
-        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan)
+        flash2_forward_batched(&q, &k, &v, &cfg, blocks, &guarded(2, &plan), &mut Hbm::new())
             .unwrap_err();
     assert_eq!(
         err,
@@ -552,7 +591,7 @@ fn exhausted_retry_budget_is_a_typed_error_with_provenance() {
         .with(FaultSite::BatchedFwd, 0, 1, FaultKind::DroppedMerge)
         .with(FaultSite::BatchedFwd, 0, 2, FaultKind::DroppedMerge);
     let err =
-        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan)
+        flash2_forward_batched(&q, &k, &v, &cfg, blocks, &guarded(2, &plan), &mut Hbm::new())
             .unwrap_err();
     match err {
         AttnError::ItemFailed { message, attempts, .. } => {
@@ -579,17 +618,23 @@ fn seeded_fault_schedule_is_deterministic_across_worker_counts() {
     let cfg = AttnConfig { causal: true, ..Default::default() };
     let plan = FaultPlan::seeded(0x5EED_CA05, 0.75, &ALL_KINDS);
 
-    let fwd_base = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+    let fwd_base = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new())
+        .expect("fault-free")
+        .0;
     let bwd_base = flash2_backward_batched(
-        &q, &k, &v, &fwd_base.o, &dout, &fwd_base.stats, &cfg, blocks, 1, &mut Hbm::new(),
-    );
+        &q, &k, &v, &fwd_base.o, &dout, &fwd_base.stats, &cfg, blocks, &Exec::new(1),
+        &mut Hbm::new(),
+    )
+    .expect("fault-free")
+    .0;
     let mut fingerprints = Vec::new();
     for workers in [1usize, 2, 5] {
+        let gx = guarded(workers, &plan);
         let (fwd, frep) =
-            flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, workers, &mut Hbm::new(), &plan)
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &gx, &mut Hbm::new())
                 .expect("seeded faults fire on attempt 0 only — recovery must succeed");
-        let (bwd, brep) = flash2_backward_batched_checked(
-            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut Hbm::new(), &plan,
+        let (bwd, brep) = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &gx, &mut Hbm::new(),
         )
         .expect("seeded faults fire on attempt 0 only — recovery must succeed");
         assert_eq!(fwd.o.data, fwd_base.o.data, "w={workers}");
@@ -619,10 +664,12 @@ fn seeded_fault_schedule_is_deterministic_across_worker_counts() {
 
     // The same seeded plan on the ring schedule: still bitwise.
     let (q2, k2, v2) = (rand(&[n, d], 0xA_1), rand(&[n, d], 0xA_2), rand(&[n, d], 0xA_3));
-    let ring_base = flash_forward_sharded(&q2, &k2, &v2, &cfg, blocks, 2, 1);
+    let ring_base = flash_forward_sharded(&q2, &k2, &v2, &cfg, blocks, 2, &Exec::new(1))
+        .expect("fault-free")
+        .0;
     for workers in [1usize, 2, 5] {
         let (out, _) =
-            flash_forward_sharded_checked(&q2, &k2, &v2, &cfg, blocks, 2, workers, &plan)
+            flash_forward_sharded(&q2, &k2, &v2, &cfg, blocks, 2, &guarded(workers, &plan))
                 .expect("must recover");
         assert_eq!(out.o.data, ring_base.o.data, "ring w={workers}");
         assert_eq!(out.m, ring_base.m, "ring w={workers}");
@@ -650,8 +697,8 @@ fn nan_input_propagates_to_typed_error_in_forward_many() {
         AttnSlice { q: &q1.data, k: &k.data, v: &v.data, n, n_k: n, d, cfg: cfg.clone() },
     ];
     for workers in [1usize, 2, 5] {
-        let err = flash2_forward_many_checked(&slices, blocks, workers, &mut Hbm::new(),
-            &FaultPlan::none())
+        let err = flash2_forward_many(&slices, blocks, &guarded(workers, &FaultPlan::none()),
+            &mut Hbm::new())
         .unwrap_err();
         assert_eq!(
             err,
@@ -679,8 +726,8 @@ fn nan_and_inf_inputs_propagate_through_the_batched_schedules() {
     // NaN in Q of (batch 1, head 0), row 5 → slice 2, row block 0.
     let mut q = rand(&[b, h, n, d], 0x1F_1);
     q.data[2 * n * d + 5 * d + 3] = f32::NAN;
-    let err = flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(),
-        &FaultPlan::none())
+    let err = flash2_forward_batched(&q, &k, &v, &cfg, blocks,
+        &guarded(2, &FaultPlan::none()), &mut Hbm::new())
     .unwrap_err();
     assert_eq!(
         err,
@@ -694,16 +741,18 @@ fn nan_and_inf_inputs_propagate_through_the_batched_schedules() {
         }
     );
 
-    // The plain (unchecked) entry point keeps its defined semantics:
-    // no panic, the poison lands in the output.
-    let out = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+    // An unguarded handle keeps the defined garbage-in, garbage-out
+    // semantics: no panic, the poison lands in the output.
+    let out = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(2), &mut Hbm::new())
+        .expect("no guardrail, no error")
+        .0;
     assert!(out.o.data.iter().any(|x| x.is_nan()), "plain path must pass the NaN through");
 
     // Inf in Q of (batch 0, head 0), row 9 → slice 0, row block 1.
     let mut q = rand(&[b, h, n, d], 0x1F_4);
     q.data[9 * d] = f32::INFINITY;
-    let err = flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(),
-        &FaultPlan::none())
+    let err = flash2_forward_batched(&q, &k, &v, &cfg, blocks,
+        &guarded(2, &FaultPlan::none()), &mut Hbm::new())
     .unwrap_err();
     assert_eq!(
         err,
@@ -720,11 +769,14 @@ fn nan_and_inf_inputs_propagate_through_the_batched_schedules() {
     // NaN in dO row 10 of (batch 0, head 1) → backward dQ pool, slice 1,
     // row block 1 (phase 0's D row is NaN, phase 1 trips the guardrail).
     let q = rand(&[b, h, n, d], 0x1F_5);
-    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 1, &mut Hbm::new());
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new())
+        .expect("fault-free")
+        .0;
     let mut dout = rand(&[b, h, n, d], 0x1F_6);
     dout.data[n * d + 10 * d + 2] = f32::NAN;
-    let err = flash2_backward_batched_checked(
-        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 2, &mut Hbm::new(), &FaultPlan::none(),
+    let err = flash2_backward_batched(
+        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &guarded(2, &FaultPlan::none()),
+        &mut Hbm::new(),
     )
     .unwrap_err();
     assert_eq!(
@@ -752,8 +804,8 @@ fn nan_inputs_propagate_through_sparse_and_sharded_schedules() {
     q.data[2 * n * d + 5 * d] = f32::NAN;
     let masks = [BlockMask::dense(n / blocks.b_r, n / blocks.b_c)];
     let cfg = AttnConfig::default();
-    let err = block_sparse2_forward_batched_checked(
-        &q, &k, &v, &masks, &cfg, blocks, 2, &mut Hbm::new(), &FaultPlan::none(),
+    let err = block_sparse2_forward_batched(
+        &q, &k, &v, &masks, &cfg, blocks, &guarded(2, &FaultPlan::none()), &mut Hbm::new(),
     )
     .unwrap_err();
     assert_eq!(
@@ -778,10 +830,13 @@ fn nan_inputs_propagate_through_sparse_and_sharded_schedules() {
     let q_ok = rand(&[b, h, n, d], 0x2F_4);
     let mut k_bad = rand(&[b, h, n, d], 0x2F_5);
     k_bad.data[25 * d] = f32::NAN; // row 25 lives in masked-out tile 3
-    let baseline =
-        block_sparse2_forward_batched(&q_ok, &k_bad, &v, &masks, &cfg, blocks, 1, &mut Hbm::new());
-    let (out, report) = block_sparse2_forward_batched_checked(
-        &q_ok, &k_bad, &v, &masks, &cfg, blocks, 2, &mut Hbm::new(), &FaultPlan::none(),
+    let baseline = block_sparse2_forward_batched(
+        &q_ok, &k_bad, &v, &masks, &cfg, blocks, &Exec::new(1), &mut Hbm::new(),
+    )
+    .expect("no guardrail, no error")
+    .0;
+    let (out, report) = block_sparse2_forward_batched(
+        &q_ok, &k_bad, &v, &masks, &cfg, blocks, &guarded(2, &FaultPlan::none()), &mut Hbm::new(),
     )
     .expect("masked-out NaN must not trip the guardrail");
     assert_eq!(out.o.data, baseline.o.data);
@@ -793,8 +848,8 @@ fn nan_inputs_propagate_through_sparse_and_sharded_schedules() {
     let k2 = rand(&[n2, d2], 0x3F_2);
     let v2 = rand(&[n2, d2], 0x3F_3);
     q2.data[12 * d2] = f32::NAN;
-    let err = flash_forward_sharded_checked(
-        &q2, &k2, &v2, &cfg, blocks, 2, 2, &FaultPlan::none(),
+    let err = flash_forward_sharded(
+        &q2, &k2, &v2, &cfg, blocks, 2, &guarded(2, &FaultPlan::none()),
     )
     .unwrap_err();
     assert_eq!(
@@ -814,8 +869,8 @@ fn nan_inputs_propagate_through_sparse_and_sharded_schedules() {
     let mut k3 = rand(&[n2, d2], 0x4F_2);
     let v3 = rand(&[n2, d2], 0x4F_3);
     k3.data[40 * d2] = f32::NAN;
-    let err = flash_forward_sharded_tree_checked(
-        &q3, &k3, &v3, &cfg, blocks, 2, 1, &FaultPlan::none(),
+    let err = flash_forward_sharded_tree(
+        &q3, &k3, &v3, &cfg, blocks, 2, &guarded(1, &FaultPlan::none()),
     )
     .unwrap_err();
     match err {
@@ -865,9 +920,11 @@ fn dead_shards_are_classified_with_reasons() {
 
     // kv_len = 10 kills shards [16,32), [32,48), [48,64).
     let cfg = AttnConfig { kv_len: Some(10), ..Default::default() };
-    let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 4, 1);
+    let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 4, &Exec::new(1))
+        .expect("fault-free")
+        .0;
     let (out, report) =
-        flash_forward_sharded_checked(&q, &k, &v, &cfg, blocks, 4, 2, &FaultPlan::none())
+        flash_forward_sharded(&q, &k, &v, &cfg, blocks, 4, &guarded(2, &FaultPlan::none()))
             .expect("dead shards are not errors");
     assert_eq!(out.o.data, baseline.o.data);
     let idx: Vec<usize> = report.dead_shards.iter().map(|&(i, _)| i).collect();
@@ -880,7 +937,7 @@ fn dead_shards_are_classified_with_reasons() {
     let q_short = rand(&[16, d], 0xDE_4);
     let cfg = AttnConfig { causal: true, ..Default::default() };
     let (_, report) =
-        flash_forward_sharded_checked(&q_short, &k, &v, &cfg, blocks, 4, 2, &FaultPlan::none())
+        flash_forward_sharded(&q_short, &k, &v, &cfg, blocks, 4, &guarded(2, &FaultPlan::none()))
             .expect("dead shards are not errors");
     let idx: Vec<usize> = report.dead_shards.iter().map(|&(i, _)| i).collect();
     assert_eq!(idx, vec![1, 2, 3]);
@@ -900,9 +957,12 @@ fn dead_shards_are_classified_with_reasons() {
         mask.set(i, 3, false);
     }
     let cfg = AttnConfig::default();
-    let baseline = block_sparse_forward_sharded_tree(&q2, &k2, &v2, &mask, &cfg, blocks, 2, 1);
-    let (out, report) = block_sparse_forward_sharded_tree_checked(
-        &q2, &k2, &v2, &mask, &cfg, blocks, 2, 2, &FaultPlan::none(),
+    let baseline =
+        block_sparse_forward_sharded_tree(&q2, &k2, &v2, &mask, &cfg, blocks, 2, &Exec::new(1))
+            .expect("fault-free")
+            .0;
+    let (out, report) = block_sparse_forward_sharded_tree(
+        &q2, &k2, &v2, &mask, &cfg, blocks, 2, &guarded(2, &FaultPlan::none()),
     )
     .expect("sparse-dead shards are not errors");
     assert_eq!(out.o.data, baseline.o.data);
@@ -925,11 +985,13 @@ fn checked_paths_without_faults_are_bitwise_and_traffic_identical() {
     let v = rand(&[b, h, n, d], 0x0FF_3);
     let cfg = AttnConfig { causal: true, ..Default::default() };
     let mut plain_hbm = Hbm::new();
-    let plain = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 3, &mut plain_hbm);
+    let plain = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(3), &mut plain_hbm)
+        .expect("fault-free")
+        .0;
     let mut checked_hbm = Hbm::new();
     let (out, report) =
-        flash2_forward_batched_checked(&q, &k, &v, &cfg, blocks, 3, &mut checked_hbm,
-            &FaultPlan::none())
+        flash2_forward_batched(&q, &k, &v, &cfg, blocks, &guarded(3, &FaultPlan::none()),
+            &mut checked_hbm)
         .expect("no faults, no error");
     assert_eq!(out.o.data, plain.o.data);
     assert_eq!(out.stats.lse, plain.stats.lse);
@@ -956,9 +1018,11 @@ fn checked_paths_without_faults_are_bitwise_and_traffic_identical() {
         d: d1,
         cfg: cfg1,
     }];
-    let plain = flash2_forward_many(&slices, blocks, 2, &mut Hbm::new());
+    let plain = flash2_forward_many(&slices, blocks, &Exec::new(2), &mut Hbm::new())
+        .expect("fault-free")
+        .0;
     let (outs, report) =
-        flash2_forward_many_checked(&slices, blocks, 2, &mut Hbm::new(), &FaultPlan::none())
+        flash2_forward_many(&slices, blocks, &guarded(2, &FaultPlan::none()), &mut Hbm::new())
             .expect("no faults, no error");
     assert_eq!(outs.len(), plain.len());
     assert_eq!(outs[0].o.data, plain[0].o.data);

@@ -11,16 +11,15 @@ use flashattn::attn::block_sparse::{
     block_sparse2_backward, block_sparse2_forward, block_sparse_forward,
 };
 use flashattn::attn::distributed::{
-    block_sparse_forward_sharded_tree, flash_backward_sharded, flash_backward_sharded_checked,
-    flash_forward_sharded, flash_forward_sharded_checked, flash_forward_sharded_tree,
-    flash_forward_sharded_tree_checked, merge_partials, shard_ranges,
+    block_sparse_forward_sharded_tree, flash_backward_sharded, flash_forward_sharded,
+    flash_forward_sharded_tree, merge_partials, shard_ranges,
 };
 use flashattn::attn::faults::{FaultKind, FaultPlan, FaultSite};
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
 use flashattn::attn::flash2::{flash2_backward, flash2_forward};
 use flashattn::attn::masks::BlockMask;
 use flashattn::attn::standard::{standard_backward, standard_forward};
-use flashattn::attn::AttnConfig;
+use flashattn::attn::{AttnConfig, Exec};
 use flashattn::sim::cost;
 use flashattn::sim::hbm::Hbm;
 use flashattn::tensor::Tensor;
@@ -91,9 +90,10 @@ fn flash2_fwd_analytic_matches_instrumented_exactly() {
     for (n, d, br, bc) in [(128usize, 16usize, 16usize, 32usize), (256, 8, 32, 64), (64, 4, 8, 8)] {
         let (q, k, v) = qkv(n, d, 12);
         let blocks = Blocks::explicit(br, bc);
+        let cfg = AttnConfig::default();
         for workers in [1usize, 3, 8] {
             let mut hbm = Hbm::new();
-            flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, workers, &mut hbm);
+            flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(workers), &mut hbm);
             let pred = cost::flash2_fwd(n as u64, d as u64, blocks, false, false);
             assert_eq!(
                 hbm.accesses(),
@@ -111,12 +111,13 @@ fn flash2_bwd_analytic_matches_instrumented_exactly() {
         let (q, k, v) = qkv(n, d, 15);
         let blocks = Blocks::explicit(br, bc);
         let cfg = AttnConfig::default();
-        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(2), &mut Hbm::new());
         let dout = Tensor::full(&[n, d], 1.0);
         for workers in [1usize, 3, 8] {
             let mut hbm = Hbm::new();
             flash2_backward(
-                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, workers, &mut hbm,
+                &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::new(workers),
+                &mut hbm,
             );
             let pred = cost::flash2_bwd(n as u64, d as u64, blocks, false, false);
             assert_eq!(
@@ -152,7 +153,10 @@ fn flash2_fwd_batched_analytic_matches_instrumented_exactly() {
         let blocks = Blocks::explicit(br, bc);
         for workers in [1usize, 3, 8] {
             let mut hbm = Hbm::new();
-            flash2_forward_batched(&q, &k, &v, &AttnConfig::default(), blocks, workers, &mut hbm);
+            flash2_forward_batched(
+                &q, &k, &v, &AttnConfig::default(), blocks, &Exec::new(workers), &mut hbm,
+            )
+            .expect("fault-free");
             let pred =
                 cost::flash2_fwd_batched((b * h) as u64, n as u64, d as u64, blocks, false, false);
             assert_eq!(
@@ -177,13 +181,16 @@ fn flash2_bwd_batched_analytic_matches_instrumented_exactly() {
         let (q, k, v) = qkv4(b, h, n, d, 22);
         let blocks = Blocks::explicit(br, bc);
         let cfg = AttnConfig::default();
-        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 2, &mut Hbm::new());
+        let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(2), &mut Hbm::new())
+            .expect("fault-free")
+            .0;
         let dout = Tensor::full(&[b, h, n, d], 1.0);
         for workers in [1usize, 3, 8] {
             let mut hbm = Hbm::new();
             flash2_backward_batched(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, workers, &mut hbm,
-            );
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &Exec::new(workers), &mut hbm,
+            )
+            .expect("fault-free");
             let pred =
                 cost::flash2_bwd_batched((b * h) as u64, n as u64, d as u64, blocks, false, false);
             assert_eq!(
@@ -201,16 +208,21 @@ fn flash2_batched_causal_analytic_matches_instrumented() {
     let (b, h, n, d) = (2usize, 2usize, 128usize, 8usize);
     let (q, k, v) = qkv4(b, h, n, d, 23);
     let blocks = Blocks::explicit(16, 16);
-    let cfg = AttnConfig::causal();
+    let cfg = AttnConfig::new().causal();
     let mut h_fwd = Hbm::new();
-    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, 4, &mut h_fwd);
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(4), &mut h_fwd)
+        .expect("fault-free")
+        .0;
     assert_eq!(
         h_fwd.accesses(),
         cost::flash2_fwd_batched(4, n as u64, d as u64, blocks, true, false).hbm_elems
     );
     let dout = Tensor::full(&[b, h, n, d], 1.0);
     let mut h_bwd = Hbm::new();
-    flash2_backward_batched(&q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 4, &mut h_bwd);
+    flash2_backward_batched(
+        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &Exec::new(4), &mut h_bwd,
+    )
+    .expect("fault-free");
     assert_eq!(
         h_bwd.accesses(),
         cost::flash2_bwd_batched(4, n as u64, d as u64, blocks, true, false).hbm_elems
@@ -222,11 +234,11 @@ fn flash2_bwd_causal_analytic_matches_instrumented() {
     let (n, d, br, bc) = (128usize, 8usize, 16usize, 16usize);
     let (q, k, v) = qkv(n, d, 16);
     let blocks = Blocks::explicit(br, bc);
-    let cfg = AttnConfig::causal();
-    let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 4, &mut Hbm::new());
+    let cfg = AttnConfig::new().causal();
+    let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(4), &mut Hbm::new());
     let dout = Tensor::full(&[n, d], 1.0);
     let mut hbm = Hbm::new();
-    flash2_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 4, &mut hbm);
+    flash2_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::new(4), &mut hbm);
     let pred = cost::flash2_bwd(n as u64, d as u64, blocks, true, false);
     assert_eq!(hbm.accesses(), pred.hbm_elems);
 }
@@ -241,11 +253,13 @@ fn flash2_bwd_measured_strictly_below_algorithm4() {
     let (q, k, v) = qkv(n, d, 17);
     let blocks = Blocks::explicit(32, 32); // T_r = T_c = 8, divisible
     let cfg = AttnConfig::default();
-    let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, 4, &mut Hbm::new());
+    let fwd = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(4), &mut Hbm::new());
     let dout = Tensor::full(&[n, d], 1.0);
 
     let mut h_fast = Hbm::new();
-    flash2_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, 4, &mut h_fast);
+    flash2_backward(
+        &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &Exec::new(4), &mut h_fast,
+    );
     let mut h_slow = Hbm::new();
     flash_backward(&q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, &mut h_slow);
 
@@ -284,7 +298,7 @@ fn flash2_fwd_shard_analytic_matches_instrumented_offset_kernel() {
             let ks = k.slice_rows(lo, hi);
             let vs = v.slice_rows(lo, hi);
             let mut hbm = Hbm::new();
-            flash2_forward(&q, &ks, &vs, &cfg, blocks, 3, &mut hbm);
+            flash2_forward(&q, &ks, &vs, &cfg, blocks, &Exec::new(3), &mut hbm);
             let pred =
                 cost::flash2_fwd_shard(n as u64, d as u64, blocks, lo as u64, hi as u64, causal);
             assert_eq!(hbm.accesses(), pred.hbm_elems, "lo={lo} hi={hi} causal={causal}");
@@ -304,7 +318,7 @@ fn flash2_causal_analytic_matches_instrumented() {
     let (q, k, v) = qkv(n, d, 13);
     let blocks = Blocks::explicit(br, bc);
     let mut hbm = Hbm::new();
-    flash2_forward(&q, &k, &v, &AttnConfig::causal(), blocks, 4, &mut hbm);
+    flash2_forward(&q, &k, &v, &AttnConfig::new().causal(), blocks, &Exec::new(4), &mut hbm);
     let pred = cost::flash2_fwd(n as u64, d as u64, blocks, true, false);
     assert_eq!(hbm.accesses(), pred.hbm_elems);
 }
@@ -323,7 +337,7 @@ fn flash2_writes_o_and_stats_exactly_once_vs_flash_per_iteration() {
     let mut h_flash = Hbm::new();
     flash_forward(&q, &k, &v, &AttnConfig::default(), blocks, &mut h_flash);
     let mut h_flash2 = Hbm::new();
-    flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, 4, &mut h_flash2);
+    flash2_forward(&q, &k, &v, &AttnConfig::default(), blocks, &Exec::new(4), &mut h_flash2);
 
     let nd = (n * d) as u64;
     assert_eq!(h_flash2.stores, nd + n as u64, "flash2 single epilogue write");
@@ -342,7 +356,7 @@ fn flash_fwd_causal_analytic_matches_instrumented() {
     let (n, d, br, bc) = (128usize, 8usize, 16usize, 16usize);
     let (q, k, v) = qkv(n, d, 4);
     let blocks = Blocks::explicit(br, bc);
-    let cfg = AttnConfig::causal();
+    let cfg = AttnConfig::new().causal();
     let mut hbm = Hbm::new();
     flash_forward(&q, &k, &v, &cfg, blocks, &mut hbm);
     let pred = cost::flash_fwd(n as u64, d as u64, blocks, true, false);
@@ -378,7 +392,9 @@ fn block_sparse2_fwd_analytic_matches_instrumented_exactly() {
                 let cfg = AttnConfig { causal, ..Default::default() };
                 for workers in [1usize, 3, 8] {
                     let mut hbm = Hbm::new();
-                    block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, workers, &mut hbm);
+                    block_sparse2_forward(
+                        &q, &k, &v, &mask, &cfg, blocks, &Exec::new(workers), &mut hbm,
+                    );
                     let pred = cost::block_sparse2_fwd(
                         n as u64, n as u64, d as u64, blocks, &mask, causal, false,
                     );
@@ -404,13 +420,14 @@ fn block_sparse2_bwd_analytic_matches_instrumented_exactly() {
         for mask in [BlockMask::butterfly(t_r, t_c), BlockMask::local_global(t_r, t_c, 1, 1)] {
             for causal in [false, true] {
                 let cfg = AttnConfig { causal, ..Default::default() };
-                let fwd =
-                    block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 2, &mut Hbm::new());
+                let fwd = block_sparse2_forward(
+                    &q, &k, &v, &mask, &cfg, blocks, &Exec::new(2), &mut Hbm::new(),
+                );
                 for workers in [1usize, 3, 8] {
                     let mut hbm = Hbm::new();
                     block_sparse2_backward(
-                        &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, workers,
-                        &mut hbm,
+                        &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks,
+                        &Exec::new(workers), &mut hbm,
                     );
                     let pred = cost::block_sparse2_bwd(
                         n as u64, n as u64, d as u64, blocks, &mask, causal, false,
@@ -438,10 +455,10 @@ fn proposition4_block_sparse2_traffic_strictly_decreasing_in_sparsity() {
     let cfg = AttnConfig::default();
     let measure = |mask: &BlockMask| -> (u64, u64) {
         let mut hf = Hbm::new();
-        let fwd = block_sparse2_forward(&q, &k, &v, mask, &cfg, blocks, 2, &mut hf);
+        let fwd = block_sparse2_forward(&q, &k, &v, mask, &cfg, blocks, &Exec::new(2), &mut hf);
         let mut hb = Hbm::new();
         block_sparse2_backward(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), mask, &cfg, blocks, 2, &mut hb,
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), mask, &cfg, blocks, &Exec::new(2), &mut hb,
         );
         (hf.accesses(), hb.accesses())
     };
@@ -449,9 +466,11 @@ fn proposition4_block_sparse2_traffic_strictly_decreasing_in_sparsity() {
     let (dense_f, dense_b) = measure(&mask);
     // Dense mask: exactly the dense pair's instrumented traffic.
     let mut hf2 = Hbm::new();
-    let fwd2 = flash2_forward(&q, &k, &v, &cfg, blocks, 2, &mut hf2);
+    let fwd2 = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(2), &mut hf2);
     let mut hb2 = Hbm::new();
-    flash2_backward(&q, &k, &v, &fwd2.o, &dout, fwd2.stats(), &cfg, blocks, 2, &mut hb2);
+    flash2_backward(
+        &q, &k, &v, &fwd2.o, &dout, fwd2.stats(), &cfg, blocks, &Exec::new(2), &mut hb2,
+    );
     assert_eq!(dense_f, hf2.accesses(), "dense-mask fwd != flash2 fwd traffic");
     assert_eq!(dense_b, hb2.accesses(), "dense-mask bwd != flash2 bwd traffic");
     // Strict decrease, block by block.
@@ -482,7 +501,7 @@ fn block_sparse2_sharded_mask_slice_analytic_matches_instrumented() {
             let ks = k.slice_rows(lo, hi);
             let vs = v.slice_rows(lo, hi);
             let mut hbm = Hbm::new();
-            block_sparse2_forward(&q, &ks, &vs, &mask, &cfg, blocks, 3, &mut hbm);
+            block_sparse2_forward(&q, &ks, &vs, &mask, &cfg, blocks, &Exec::new(3), &mut hbm);
             let pred = cost::block_sparse2_fwd_slice(
                 n as u64, d as u64, blocks, &mask, causal, false, lo as u64, hi as u64,
             );
@@ -491,7 +510,7 @@ fn block_sparse2_sharded_mask_slice_analytic_matches_instrumented() {
         }
         let mut h_full = Hbm::new();
         let cfg = AttnConfig { causal, ..Default::default() };
-        block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, 3, &mut h_full);
+        block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &Exec::new(3), &mut h_full);
         assert_eq!(
             kv_terms,
             h_full.accesses() - (2 * n * d + n) as u64,
@@ -611,7 +630,9 @@ fn flash2_fwd_many_ragged_slices_analytic_matches_instrumented_exactly() {
         .sum();
     for workers in [1usize, 2, 5] {
         let mut hbm = Hbm::new();
-        let outs = flash2_forward_many(&slices, blocks, workers, &mut hbm);
+        let ex = Exec::new(workers);
+        let (outs, _) =
+            flash2_forward_many(&slices, blocks, &ex, &mut hbm).expect("fault-free");
         assert_eq!(outs.len(), shapes.len());
         assert_eq!(hbm.accesses(), pred, "workers={workers}");
     }
@@ -637,7 +658,8 @@ fn flash2_bwd_many_ragged_slices_analytic_matches_instrumented_exactly() {
             cfg: AttnConfig { causal, ..Default::default() },
         })
         .collect();
-    let outs = flash2_forward_many(&fwd_slices, blocks, 2, &mut Hbm::new());
+    let (outs, _) = flash2_forward_many(&fwd_slices, blocks, &Exec::new(2), &mut Hbm::new())
+        .expect("fault-free");
     let douts: Vec<Tensor> = shapes.iter().map(|&(n, _)| Tensor::full(&[n, d], 1.0)).collect();
     let grad_slices: Vec<AttnGradSlice<'_>> = data
         .iter()
@@ -662,7 +684,8 @@ fn flash2_bwd_many_ragged_slices_analytic_matches_instrumented_exactly() {
         .sum();
     for workers in [1usize, 2, 5] {
         let mut hbm = Hbm::new();
-        let grads = flash2_backward_many(&grad_slices, blocks, workers, &mut hbm);
+        let (grads, _) = flash2_backward_many(&grad_slices, blocks, &Exec::new(workers), &mut hbm)
+            .expect("fault-free");
         assert_eq!(grads.len(), shapes.len());
         assert_eq!(hbm.accesses(), pred, "workers={workers}");
     }
@@ -689,7 +712,10 @@ fn block_sparse2_fwd_batched_per_head_masks_analytic_matches_instrumented() {
         let pred = b as u64 * per_batch;
         for workers in [1usize, 3, 8] {
             let mut hbm = Hbm::new();
-            block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, workers, &mut hbm);
+            block_sparse2_forward_batched(
+                &q, &k, &v, &masks, &cfg, blocks, &Exec::new(workers), &mut hbm,
+            )
+            .expect("fault-free");
             assert_eq!(hbm.accesses(), pred, "causal={causal} workers={workers}");
         }
     }
@@ -705,8 +731,11 @@ fn block_sparse2_bwd_batched_per_head_masks_analytic_matches_instrumented() {
     let dout = Tensor::full(&[b, h, n, d], 1.0);
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
-        let fwd =
-            block_sparse2_forward_batched(&q, &k, &v, &masks, &cfg, blocks, 2, &mut Hbm::new());
+        let fwd = block_sparse2_forward_batched(
+            &q, &k, &v, &masks, &cfg, blocks, &Exec::new(2), &mut Hbm::new(),
+        )
+        .expect("fault-free")
+        .0;
         let per_batch: u64 = masks
             .iter()
             .map(|m| {
@@ -718,8 +747,10 @@ fn block_sparse2_bwd_batched_per_head_masks_analytic_matches_instrumented() {
         for workers in [1usize, 3, 8] {
             let mut hbm = Hbm::new();
             block_sparse2_backward_batched(
-                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, workers, &mut hbm,
-            );
+                &q, &k, &v, &fwd.o, &dout, &fwd.stats, &masks, &cfg, blocks, &Exec::new(workers),
+                &mut hbm,
+            )
+            .expect("fault-free");
             assert_eq!(hbm.accesses(), pred, "causal={causal} workers={workers}");
         }
     }
@@ -739,11 +770,13 @@ fn flash_fwd_sharded_retry_item_matches_closed_form_access_for_access() {
     let (nu, du, rbu) = (n as u64, d as u64, 3u64);
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
-        let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+        let baseline = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+            .expect("fault-free")
+            .0;
         let plan = FaultPlan::none().with(FaultSite::RingFwd, rb, 0, FaultKind::WorkerPanic);
-        let (out, report) =
-            flash_forward_sharded_checked(&q, &k, &v, &cfg, blocks, shards, 2, &plan)
-                .expect("must recover");
+        let guarded = Exec::new(2).with_plan(&plan).validated();
+        let (out, report) = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &guarded)
+            .expect("must recover");
         assert_eq!(out.o.data, baseline.o.data, "causal={causal}");
         let stream: u64 = shard_ranges(n, blocks.b_c, shards)
             .iter()
@@ -769,13 +802,18 @@ fn flash_bwd_sharded_retry_item_matches_closed_form_access_for_access() {
     let (nu, du, rbu) = (n as u64, d as u64, 2u64);
     for causal in [false, true] {
         let cfg = AttnConfig { causal, ..Default::default() };
-        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, 1);
+        let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+            .expect("fault-free")
+            .0;
         let baseline = flash_backward_sharded(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, 1,
-        );
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, &Exec::new(1),
+        )
+        .expect("fault-free")
+        .0;
         let plan = FaultPlan::none().with(FaultSite::RingDq, rb, 0, FaultKind::WorkerPanic);
-        let (grads, report) = flash_backward_sharded_checked(
-            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, 2, &plan,
+        let guarded = Exec::new(2).with_plan(&plan).validated();
+        let (grads, report) = flash_backward_sharded(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, &guarded,
         )
         .expect("must recover");
         assert_eq!(grads.dq.data, baseline.dq.data, "causal={causal}");
@@ -803,12 +841,15 @@ fn flash_fwd_sharded_tree_partial_retry_matches_closed_form() {
     let t_r = n / blocks.b_r;
     let (q, k, v) = qkv(n, d, 75);
     let cfg = AttnConfig::default();
-    let baseline = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, 1);
+    let baseline = flash_forward_sharded_tree(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+        .expect("fault-free")
+        .0;
     let item = t_r + 2; // flat (live shard, row block) = (1, 2)
     let plan = FaultPlan::none().with(FaultSite::TreePartial, item, 0, FaultKind::WorkerPanic);
-    let (out, report) =
-        flash_forward_sharded_tree_checked(&q, &k, &v, &cfg, blocks, shards, 2, &plan)
-            .expect("must recover");
+    let (out, report) = flash_forward_sharded_tree(
+        &q, &k, &v, &cfg, blocks, shards, &Exec::new(2).with_plan(&plan),
+    )
+    .expect("must recover");
     assert_eq!(out.o.data, baseline.o.data);
     assert_eq!(out.m, baseline.m);
     assert_eq!(out.l, baseline.l);
@@ -834,14 +875,18 @@ fn block_sparse_fwd_sharded_tree_matches_per_shard_closed_forms() {
     let mask = BlockMask::local_global(t_r, t_c, 1, 1);
     let (q, k, v) = qkv(n, d, 76);
     let cfg = AttnConfig::default();
-    let driver = block_sparse_forward_sharded_tree(&q, &k, &v, &mask, &cfg, blocks, shards, 2);
+    let driver =
+        block_sparse_forward_sharded_tree(&q, &k, &v, &mask, &cfg, blocks, shards, &Exec::new(2))
+            .expect("fault-free")
+            .0;
     let mut partials = Vec::new();
     for sh in shard_ranges(n, blocks.b_c, shards) {
         let ks = k.slice_rows(sh.lo, sh.hi);
         let vs = v.slice_rows(sh.lo, sh.hi);
         let shard_cfg = cfg.for_shard(sh.lo);
         let mut hbm = Hbm::new();
-        let p = block_sparse2_forward(&q, &ks, &vs, &mask, &shard_cfg, blocks, 2, &mut hbm);
+        let p =
+            block_sparse2_forward(&q, &ks, &vs, &mask, &shard_cfg, blocks, &Exec::new(2), &mut hbm);
         let pred = cost::block_sparse2_fwd_slice(
             n as u64, d as u64, blocks, &mask, false, false, sh.lo as u64, sh.hi as u64,
         );

@@ -1,0 +1,187 @@
+//! Pool-reuse wall: the persistent runtime's core guarantee, asserted
+//! on real kernels. A single long-lived [`Exec`] handle reused across
+//! an interleaved stream of batched, sparse, ring and tree calls must
+//! produce bitwise-identical outputs — and identical modeled traffic —
+//! to a fresh pool handle and to the per-call scoped oracle, at every
+//! worker count; and it must keep doing so after a guarded call on the
+//! same pool recovered from an injected worker panic.
+
+use flashattn::attn::batched::{
+    block_sparse2_forward_batched, flash2_backward_batched, flash2_forward_batched,
+    flash2_forward_many, AttnSlice,
+};
+use flashattn::attn::distributed::{
+    block_sparse_forward_sharded_tree, flash_backward_sharded, flash_forward_sharded,
+    flash_forward_sharded_tree,
+};
+use flashattn::attn::faults::{FaultKind, FaultPlan, FaultSite};
+use flashattn::attn::flash::Blocks;
+use flashattn::attn::masks::BlockMask;
+use flashattn::attn::{AttnConfig, Exec};
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+
+fn rand(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = SplitMix64::new(seed);
+    Tensor::randn(shape, &mut rng, 1.0)
+}
+
+/// Everything one interleaved pass produces, plus its aggregate modeled
+/// traffic: equality of two traces is the bitwise-reuse guarantee.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    outputs: Vec<Vec<f32>>,
+    accesses: u64,
+}
+
+/// One interleaved workload — batched fwd/bwd, per-head sparse batched,
+/// ring fwd/bwd, tree, sparse tree, ragged `_many` — all through the
+/// same handle, deliberately mixing schedules between calls so parked
+/// workers see heterogeneous work back to back.
+fn interleaved_pass(exec: &Exec) -> Trace {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let (t_r, t_c) = (n / blocks.b_r, n / blocks.b_c);
+    let mut outputs = Vec::new();
+    let mut hbm = Hbm::new();
+
+    // Batched forward.
+    let q4 = rand(&[b, h, n, d], 1);
+    let k4 = rand(&[b, h, n, d], 2);
+    let v4 = rand(&[b, h, n, d], 3);
+    let cfg = AttnConfig::new().causal();
+    let fwd = flash2_forward_batched(&q4, &k4, &v4, &cfg, blocks, exec, &mut hbm)
+        .expect("fault-free")
+        .0;
+    outputs.push(fwd.o.data.clone());
+    outputs.push(fwd.stats.lse.clone());
+
+    // Ring forward, interleaved before the batched backward.
+    let q = rand(&[n, d], 4);
+    let k = rand(&[n, d], 5);
+    let v = rand(&[n, d], 6);
+    let ring = flash_forward_sharded(&q, &k, &v, &cfg, blocks, 2, exec).expect("fault-free").0;
+    outputs.push(ring.o.data.clone());
+
+    // Batched backward on the forward from two calls ago.
+    let dout4 = rand(&[b, h, n, d], 7);
+    let grads = flash2_backward_batched(
+        &q4, &k4, &v4, &fwd.o, &dout4, &fwd.stats, &cfg, blocks, exec, &mut hbm,
+    )
+    .expect("fault-free")
+    .0;
+    outputs.push(grads.dq.data.clone());
+    outputs.push(grads.dk.data.clone());
+    outputs.push(grads.dv.data.clone());
+
+    // Per-head sparse batched forward.
+    let masks = [BlockMask::butterfly(t_r, t_c), BlockMask::local_global(t_r, t_c, 1, 1)];
+    let sparse = block_sparse2_forward_batched(
+        &q4, &k4, &v4, &masks, &AttnConfig::new(), blocks, exec, &mut hbm,
+    )
+    .expect("fault-free")
+    .0;
+    outputs.push(sparse.o.data.clone());
+
+    // Ring backward.
+    let dout = rand(&[n, d], 8);
+    let rg = flash_backward_sharded(
+        &q, &k, &v, &ring.o, &dout, ring.stats(), &cfg, blocks, 2, exec,
+    )
+    .expect("fault-free")
+    .0;
+    outputs.push(rg.dq.data.clone());
+    outputs.push(rg.dk.data.clone());
+    outputs.push(rg.dv.data.clone());
+
+    // Tree merge and its sparse sibling.
+    let tree = flash_forward_sharded_tree(&q, &k, &v, &AttnConfig::new(), blocks, 2, exec)
+        .expect("fault-free")
+        .0;
+    outputs.push(tree.o.data.clone());
+    outputs.push(tree.m.clone());
+    outputs.push(tree.l.clone());
+    let mask = BlockMask::local_global(t_r, t_c, 1, 1);
+    let st = block_sparse_forward_sharded_tree(
+        &q, &k, &v, &mask, &AttnConfig::new(), blocks, 2, exec,
+    )
+    .expect("fault-free")
+    .0;
+    outputs.push(st.o.data.clone());
+
+    // Ragged heterogeneous slices through the same pool.
+    let (qa, ka, va) = (rand(&[48, d], 9), rand(&[48, d], 10), rand(&[48, d], 11));
+    let (qb, kb, vb) = (rand(&[32, d], 12), rand(&[32, d], 13), rand(&[32, d], 14));
+    let slices = [
+        AttnSlice {
+            q: &qa.data,
+            k: &ka.data,
+            v: &va.data,
+            n: 48,
+            n_k: 48,
+            d,
+            cfg: AttnConfig::new(),
+        },
+        AttnSlice {
+            q: &qb.data,
+            k: &kb.data,
+            v: &vb.data,
+            n: 32,
+            n_k: 32,
+            d,
+            cfg: AttnConfig::new().causal(),
+        },
+    ];
+    let (many, _) = flash2_forward_many(&slices, blocks, exec, &mut hbm).expect("fault-free");
+    for out in &many {
+        outputs.push(out.o.data.clone());
+        outputs.push(out.lse.clone());
+    }
+
+    Trace { outputs, accesses: hbm.accesses() }
+}
+
+#[test]
+fn reused_pool_is_bitwise_identical_to_fresh_and_scoped_runs() {
+    for workers in [1usize, 2, 5] {
+        let reused = Exec::new(workers);
+        let first = interleaved_pass(&reused);
+        let second = interleaved_pass(&reused);
+        assert_eq!(second, first, "reuse drifted (w={workers})");
+        let fresh = interleaved_pass(&Exec::new(workers));
+        assert_eq!(fresh, first, "fresh handle disagrees with reused pool (w={workers})");
+        let scoped = interleaved_pass(&Exec::scoped(workers));
+        assert_eq!(scoped, first, "scoped oracle disagrees with persistent pool (w={workers})");
+    }
+}
+
+#[test]
+fn pool_stays_bitwise_after_guarded_recovery() {
+    let workers = 3usize;
+    let baseline = interleaved_pass(&Exec::new(workers));
+
+    // A guarded call on the same global pool takes an injected worker
+    // panic mid-run and retries its way back to the exact answer...
+    let reused = Exec::new(workers);
+    let (b, h, n, d) = (1usize, 2usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 50);
+    let k = rand(&[b, h, n, d], 51);
+    let v = rand(&[b, h, n, d], 52);
+    let cfg = AttnConfig::new().causal();
+    let plain = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &reused, &mut Hbm::new())
+        .expect("fault-free")
+        .0;
+    let plan = FaultPlan::none().with(FaultSite::BatchedFwd, 1, 0, FaultKind::WorkerPanic);
+    let guarded = reused.clone().with_plan(&plan).validated();
+    let (out, report) = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &guarded, &mut Hbm::new())
+        .expect("must recover");
+    assert_eq!(report.panics, 1, "the injected panic must have fired");
+    assert!(report.retries >= 1, "recovery must have retried the faulted item");
+    assert_eq!(out.o.data, plain.o.data, "recovered output must be bitwise");
+
+    // ...and the pool that contained that panic then runs the full
+    // interleaved workload bitwise-clean.
+    assert_eq!(interleaved_pass(&reused), baseline, "pool poisoned by contained panic");
+}

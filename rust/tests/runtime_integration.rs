@@ -6,7 +6,7 @@ use std::path::Path;
 
 use flashattn::attn::flash::{flash_forward, Blocks};
 use flashattn::attn::flash2::flash2_forward;
-use flashattn::attn::AttnConfig;
+use flashattn::attn::{AttnConfig, Exec};
 use flashattn::coordinator::{LmTrainer, TrainConfig};
 use flashattn::coordinator::trainer::ClsTrainer;
 use flashattn::data::corpus::Corpus;
@@ -63,12 +63,13 @@ fn flash_artifact_matches_rust_mirror() {
         };
         let out = flash_forward(
             &slice(&inputs[0]), &slice(&inputs[1]), &slice(&inputs[2]),
-            &AttnConfig::causal(), Blocks::explicit(16, 16), &mut Hbm::new());
+            &AttnConfig::new().causal(), Blocks::explicit(16, 16), &mut Hbm::new());
         assert!(out.o.max_abs_diff(&slice(&flash)) < 1e-4, "bh slice {b}");
         // The fast production kernel must agree with the artifact too.
         let fast = flash2_forward(
             &slice(&inputs[0]), &slice(&inputs[1]), &slice(&inputs[2]),
-            &AttnConfig::causal(), Blocks::explicit(16, 16), 2, &mut Hbm::new());
+            &AttnConfig::new().causal(), Blocks::explicit(16, 16), &Exec::scoped(2),
+            &mut Hbm::new());
         assert!(fast.o.max_abs_diff(&slice(&flash)) < 1e-4, "flash2 bh slice {b}");
     }
 }
@@ -128,7 +129,7 @@ fn lm_training_reduces_loss() {
     let corpus = Corpus::builtin(50_000, 3);
     let cfg =
         TrainConfig { model: "gpt_flash".into(), steps: 8, eval_every: 0, ..Default::default() };
-    let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+    let mut tr = LmTrainer::new(&mut rt, cfg, &Exec::new(2)).unwrap();
     let (first, last) = tr.train(&mut rt, &corpus).unwrap();
     assert!(last < first, "loss did not fall: {first} -> {last}");
     assert!(
@@ -151,7 +152,7 @@ fn flash_and_reference_models_train_identically() {
             seed: 11,
             ..Default::default()
         };
-        let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+        let mut tr = LmTrainer::new(&mut rt, cfg, &Exec::new(2)).unwrap();
         tr.train(&mut rt, &corpus).unwrap();
         curves.push(tr.metrics.points.iter().map(|p| p.loss).collect::<Vec<_>>());
     }
@@ -166,7 +167,7 @@ fn cls_training_step_runs_and_is_finite() {
     let ds = ListOps::default();
     let cfg =
         TrainConfig { model: "cls_flash".into(), steps: 2, eval_every: 0, ..Default::default() };
-    let mut tr = ClsTrainer::new(&mut rt, cfg).unwrap();
+    let mut tr = ClsTrainer::new(&mut rt, cfg, &Exec::new(2)).unwrap();
     let mut rng = SplitMix64::new(5);
     let batch = ds.batch(tr.batch, tr.n_ctx, &mut rng);
     let (loss, acc) = tr.step(&mut rt, &batch).unwrap();
@@ -180,7 +181,7 @@ fn checkpoint_roundtrip() {
     let corpus = Corpus::builtin(50_000, 6);
     let cfg =
         TrainConfig { model: "gpt_flash".into(), steps: 3, eval_every: 0, ..Default::default() };
-    let mut tr = LmTrainer::new(&mut rt, cfg).unwrap();
+    let mut tr = LmTrainer::new(&mut rt, cfg, &Exec::new(2)).unwrap();
     tr.train(&mut rt, &corpus).unwrap();
     let eval_batch = corpus.eval_batch(tr.batch, tr.n_ctx);
     let loss_before = tr.eval_loss(&mut rt, &eval_batch).unwrap();
@@ -194,7 +195,7 @@ fn checkpoint_roundtrip() {
         seed: 99,
         ..Default::default()
     };
-    let mut tr2 = LmTrainer::new(&mut rt, cfg2).unwrap();
+    let mut tr2 = LmTrainer::new(&mut rt, cfg2, &Exec::new(2)).unwrap();
     tr2.load(&path).unwrap();
     let loss_after = tr2.eval_loss(&mut rt, &eval_batch).unwrap();
     assert!((loss_before - loss_after).abs() < 1e-5, "{loss_before} vs {loss_after}");
