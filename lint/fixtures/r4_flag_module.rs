@@ -1,6 +1,6 @@
 // R4 must-flag module (treated as attn/batched.rs): a public forward
-// entry with no IO-exactness coverage that takes a bare worker count
-// instead of an Exec handle, and a covered entry missing the handle.
+// entry with no IO-exactness coverage. (Signature/routing discipline
+// moved to R6 — see the r6_* fixtures.)
 pub fn widget_forward(q: &Tensor, workers: usize, hbm: &mut Hbm) -> Tensor {
     let _ = (workers, hbm);
     q.clone()

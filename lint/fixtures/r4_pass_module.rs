@@ -1,18 +1,6 @@
-// R4 must-pass module (treated as attn/batched.rs): the covered entry
-// (named in the io test fixture) runs on an Exec handle; its deprecated
-// pre-Exec shim keeps the bare worker count but is exempt by name.
+// R4 must-pass module (treated as attn/batched.rs): the only public
+// forward entry is named in the io test fixture.
 pub fn gadget_forward(q: &Tensor, exec: &Exec, hbm: &mut Hbm) -> Tensor {
     let _ = (exec, hbm);
     q.clone()
-}
-
-#[deprecated(note = "use gadget_forward with an Exec handle")]
-pub fn gadget_forward_checked(
-    q: &Tensor,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(Tensor, FaultReport), AttnError> {
-    let _ = (workers, hbm, plan);
-    Ok((q.clone(), FaultReport::default()))
 }

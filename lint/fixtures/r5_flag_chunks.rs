@@ -1,0 +1,9 @@
+// R5 must-flag (treated as attn/block_sparse.rs): carving role windows
+// with chunks_mut outside the sanctioned accessor set — the carve hands
+// out HBM-resident rows with no paired load/store counts.
+pub fn gadget_backward(dq: &mut Vec<f32>, hbm: &mut Hbm) {
+    hbm.store(dq.len() as u64);
+    for w in dq.chunks_mut(8) {
+        w.fill(0.0);
+    }
+}

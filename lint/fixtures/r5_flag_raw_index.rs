@@ -1,0 +1,9 @@
+// R5 must-flag (treated as attn/flash2.rs): an Hbm-audited kernel body
+// writing a role-named output buffer by raw index — every element touch
+// bypasses the counted accessors and the IO ledger.
+pub fn gadget_forward(q: &[f32], o: &mut [f32], hbm: &mut Hbm) {
+    hbm.load(q.len() as u64);
+    for i in 0..q.len() {
+        o[i] = q[i] * 2.0;
+    }
+}

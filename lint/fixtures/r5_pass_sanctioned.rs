@@ -1,0 +1,10 @@
+// R5 must-pass: identical access patterns are legal inside a sanctioned
+// counted accessor — that is where the raw touches pair with the
+// Hbm::load/store counts.
+pub(crate) fn row_block_sweep(q: &[f32], o: &mut [f32], hbm: &mut Hbm) {
+    hbm.load(q.len() as u64);
+    for i in 0..q.len() {
+        o[i] = q[i];
+    }
+    hbm.store(o.len() as u64);
+}

@@ -1,0 +1,11 @@
+// R5 must-pass: schedulers may stitch owned item windows back with
+// copy_from_slice (the deterministic item -> slot commit), and helpers
+// that never handle the Hbm meter are out of scope entirely.
+pub fn gadget_forward(o: &mut [f32], win: &[f32], hbm: &mut Hbm) {
+    hbm.store(win.len() as u64);
+    o[0..win.len()].copy_from_slice(win);
+}
+
+fn softmax_row(o_acc: &mut [f32]) {
+    o_acc[0] = 1.0;
+}

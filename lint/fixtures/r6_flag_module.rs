@@ -1,0 +1,12 @@
+// R6 must-flag (treated as attn/batched.rs): a batched entry that keeps
+// a bare worker count off the Exec plane, and an Exec-carrying entry
+// whose handle never reaches the pool sink.
+pub fn widget_forward(q: &Tensor, workers: usize, hbm: &mut Hbm) -> Tensor {
+    let _ = (workers, hbm);
+    q.clone()
+}
+
+pub fn orphan_backward(q: &Tensor, exec: &Exec, hbm: &mut Hbm) -> Tensor {
+    let _ = (exec.workers(), hbm);
+    q.clone()
+}

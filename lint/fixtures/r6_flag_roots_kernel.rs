@@ -1,0 +1,8 @@
+// R6 must-flag half (treated as attn/flash2.rs): a pub kernel entry
+// with no Exec handle. Legal on its own (oracle kernels exist) — but a
+// finding as soon as the serving/training roots can reach it, because
+// the serving path then has no way to route the work onto the pool.
+pub fn gizmo_forward(q: &Tensor, hbm: &mut Hbm) -> Tensor {
+    let _ = hbm;
+    q.clone()
+}

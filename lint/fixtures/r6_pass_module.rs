@@ -1,0 +1,26 @@
+// R6 must-pass (treated as attn/batched.rs): one entry drives the pool
+// sink directly, the other routes its handle through an Exec-carrying
+// helper.
+pub fn widget_forward(
+    items: Vec<FwdItem>,
+    exec: &Exec,
+    hbm: &mut Hbm,
+) -> Result<(), AttnError> {
+    let (done, report) = exec.run(items, FaultSite::BatchedFwd, hbm, work)?;
+    let _ = (done, report);
+    Ok(())
+}
+
+pub fn gadget_backward(
+    items: Vec<FwdItem>,
+    exec: &Exec,
+    hbm: &mut Hbm,
+) -> Result<(), AttnError> {
+    helper_sweep(items, exec, hbm)
+}
+
+fn helper_sweep(items: Vec<FwdItem>, exec: &Exec, hbm: &mut Hbm) -> Result<(), AttnError> {
+    let (done, report) = exec.clone().validated().run(items, FaultSite::BatchedDq, hbm, work)?;
+    let _ = (done, report);
+    Ok(())
+}

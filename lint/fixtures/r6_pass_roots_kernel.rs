@@ -1,0 +1,11 @@
+// R6 must-pass half (treated as attn/flash2.rs): the root-reachable
+// entry carries an Exec handle straight to the pool sink.
+pub fn gizmo_forward(
+    items: Vec<FwdItem>,
+    exec: &Exec,
+    hbm: &mut Hbm,
+) -> Result<(), AttnError> {
+    let (done, report) = exec.run(items, FaultSite::BatchedFwd, hbm, work)?;
+    let _ = (done, report);
+    Ok(())
+}

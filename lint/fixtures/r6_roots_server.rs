@@ -1,0 +1,7 @@
+// R6 roots fixture (treated as coordinator/server.rs): Server::complete
+// drives the kernel entry, making it reachable from the serving surface.
+impl Server {
+    pub fn complete(&self, q: &Tensor) -> Tensor {
+        gizmo_forward(q, &mut self.hbm.borrow_mut())
+    }
+}

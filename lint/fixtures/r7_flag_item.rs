@@ -1,0 +1,20 @@
+// R7 must-flag: the item's reset()/poison()/finite-scan forget the lse
+// window that claims() manifests — a retry would re-merge stale values
+// and the guardrail would never see them.
+impl PoolItem for GadgetItem {
+    fn id(&self) -> (usize, usize) {
+        (self.s, self.rb)
+    }
+    fn reset(&mut self) {
+        self.o_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        self.o_win.iter().all(|x| x.is_finite())
+    }
+    fn poison(&mut self) {
+        self.o_win.fill(f32::NAN);
+    }
+    fn claims(&self) -> Vec<SlotClaim> {
+        vec![SlotClaim::of("o", &self.o_win), SlotClaim::of("lse", &self.lse_win)]
+    }
+}

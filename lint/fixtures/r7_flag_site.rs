@@ -1,0 +1,36 @@
+// R7 must-flag: the scheduler stitches one claimed window twice and
+// never commits the other — the claim/commit shape is broken on both
+// ends while the item impl itself is disciplined.
+impl PoolItem for WidgetItem {
+    fn id(&self) -> (usize, usize) {
+        (self.s, self.rb)
+    }
+    fn reset(&mut self) {
+        self.o_win.fill(0.0);
+        self.lse_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        all_finite(&self.o_win) && lse_defined(&self.lse_win)
+    }
+    fn poison(&mut self) {
+        self.o_win.fill(f32::NAN);
+        self.lse_win.fill(f32::NAN);
+    }
+    fn claims(&self) -> Vec<SlotClaim> {
+        vec![SlotClaim::of("o", &self.o_win), SlotClaim::of("lse", &self.lse_win)]
+    }
+}
+
+pub fn widget_forward(items: Vec<WidgetItem>, exec: &Exec, hbm: &mut Hbm) -> Vec<f32> {
+    let mut out = vec![0.0; 64];
+    let (done, _report) = exec
+        .run(items, FaultSite::BatchedFwd, hbm, move |it: &mut WidgetItem| {
+            it.o_win.fill(1.0);
+        })
+        .expect("fixture");
+    for it in &done {
+        out[it.rb * 8..it.rb * 8 + 8].copy_from_slice(&it.o_win);
+        out[it.rb * 8..it.rb * 8 + 8].copy_from_slice(&it.o_win);
+    }
+    out
+}

@@ -1,0 +1,21 @@
+// R7 must-pass: claims/reset/poison/check_finite all cover exactly the
+// two owned output windows.
+impl PoolItem for GadgetItem {
+    fn id(&self) -> (usize, usize) {
+        (self.s, self.rb)
+    }
+    fn reset(&mut self) {
+        self.o_win.fill(0.0);
+        self.lse_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        all_finite(&self.o_win) && lse_defined(&self.lse_win)
+    }
+    fn poison(&mut self) {
+        self.o_win.fill(f32::NAN);
+        self.lse_win.fill(f32::NAN);
+    }
+    fn claims(&self) -> Vec<SlotClaim> {
+        vec![SlotClaim::of("o", &self.o_win), SlotClaim::of("lse", &self.lse_win)]
+    }
+}

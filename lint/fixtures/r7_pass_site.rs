@@ -1,0 +1,36 @@
+// R7 must-pass: every claimed window of the item type is stitched back
+// into its output slot exactly once after the run.
+impl PoolItem for WidgetItem {
+    fn id(&self) -> (usize, usize) {
+        (self.s, self.rb)
+    }
+    fn reset(&mut self) {
+        self.o_win.fill(0.0);
+        self.lse_win.fill(0.0);
+    }
+    fn check_finite(&self) -> bool {
+        all_finite(&self.o_win) && lse_defined(&self.lse_win)
+    }
+    fn poison(&mut self) {
+        self.o_win.fill(f32::NAN);
+        self.lse_win.fill(f32::NAN);
+    }
+    fn claims(&self) -> Vec<SlotClaim> {
+        vec![SlotClaim::of("o", &self.o_win), SlotClaim::of("lse", &self.lse_win)]
+    }
+}
+
+pub fn widget_forward(items: Vec<WidgetItem>, exec: &Exec, hbm: &mut Hbm) -> Vec<f32> {
+    let mut out = vec![0.0; 64];
+    let mut stats = vec![0.0; 8];
+    let (done, _report) = exec
+        .run(items, FaultSite::BatchedFwd, hbm, move |it: &mut WidgetItem| {
+            it.o_win.fill(1.0);
+        })
+        .expect("fixture");
+    for it in &done {
+        out[it.rb * 8..it.rb * 8 + 8].copy_from_slice(&it.o_win);
+        stats[it.rb..it.rb + 1].copy_from_slice(&it.lse_win);
+    }
+    out
+}

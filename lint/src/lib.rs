@@ -1,16 +1,17 @@
 //! Invariant lint for the flashattn tree.
 //!
-//! `cargo run -p lint` walks `rust/src` with a small token-level Rust
-//! scanner (no syn — the crate must build with zero dependencies in the
-//! offline universe) and enforces the project's invariant catalog (see
-//! the "Invariant catalog" section of `rust/src/attn/mod.rs`) as four
-//! named rules:
+//! `cargo run -p lint` walks `rust/src`, `rust/tests` and `examples/`
+//! with a small token-level Rust scanner (no syn — the crate must build
+//! with zero dependencies in the offline universe) and enforces the
+//! project's invariant catalog (see the "Invariant catalog" section of
+//! `rust/src/attn/mod.rs`) as seven named rules:
 //!
 //! * **R1** — pool routing: no raw `std::thread::spawn`/`std::thread::scope`
 //!   outside the persistent runtime's two sanctioned sites,
 //!   `attn::exec::spawn_worker` (parked pool workers) and
 //!   `attn::exec::run_scoped` (the per-call scoped oracle).
-//! * **R2** — determinism hazards in `attn/`, `sim/`, `runtime/`:
+//! * **R2** — determinism hazards in `attn/`, `sim/`, `runtime/`, and
+//!   everywhere in `rust/tests/` and `examples/`:
 //!   `HashMap`/`HashSet`, `Instant::now`/`SystemTime`,
 //!   `std::thread::current`/`ThreadId`. Built-in allowlist:
 //!   `runtime/exec.rs` (compile cache + compile-time metric, off the
@@ -20,15 +21,32 @@
 //! * **R4** — coverage cross-reference: every `pub fn *_forward*` /
 //!   `*_backward*` in `attn::{flash2,batched,block_sparse,distributed}`
 //!   is named in the IO-exactness wall (`rust/tests/io_complexity.rs`),
-//!   batched/sharded entries take an `Exec` execution handle rather
-//!   than a bare `workers: usize` (deprecated `_checked` shims are the
-//!   one sanctioned exception), and every `FaultSite` variant is
-//!   injected in `rust/tests/chaos.rs`.
+//!   and every `FaultSite` variant is injected in `rust/tests/chaos.rs`.
+//! * **R5** — counted-access discipline ([`semantic::check_r5`]):
+//!   inside the kernel files, functions that handle HBM touch the
+//!   role-named buffers (q/k/v/o/dout/lse/dq/dk/dv windows) only
+//!   through the sanctioned counted accessors — raw `buf[i]` indexing
+//!   and `chunks_mut` carves are findings.
+//! * **R6** — reachability routing ([`semantic::check_r6`]): a
+//!   call-graph check that batched/sharded entries take an `Exec`
+//!   handle, that Exec-carrying `pub` forward/backward entries in the
+//!   hot modules reach the pool sink (`Exec::run`) through
+//!   Exec-carrying chains, and that root-reachable entries
+//!   (Server/LmTrainer/ClsTrainer/run_task) are routed.
+//! * **R7** — exactly-once-commit shape ([`semantic::check_r7`]):
+//!   every `PoolItem` impl's `reset`/`poison`/`check_finite` touch
+//!   exactly the windows its `claims()` manifests, and every pool run
+//!   site stitches each claimed window back exactly once.
+//!
+//! R1–R4 live here; the R5–R7 semantic pass (per-function models, the
+//! call graph, and the name-resolution rules) lives in [`semantic`].
 //!
 //! Escape hatch: a `// lint::allow(Rn, reason)` comment pragma on the
 //! offending line or the line directly above suppresses that rule there
 //! (the reason is mandatory; an unused pragma is itself a finding, so
 //! stale allows can't accumulate).
+
+pub mod semantic;
 
 use std::collections::BTreeSet;
 use std::fmt;
@@ -322,7 +340,11 @@ pub fn apply_pragmas(
 // ---------------------------------------------------------------------
 
 fn r2_in_scope(path: &str) -> bool {
-    (path.contains("src/attn/") || path.contains("src/sim/") || path.contains("src/runtime/"))
+    (path.contains("src/attn/")
+        || path.contains("src/sim/")
+        || path.contains("src/runtime/")
+        || path.contains("rust/tests/")
+        || path.contains("examples/"))
         && !path.ends_with("runtime/exec.rs")
 }
 
@@ -448,8 +470,7 @@ pub struct R4Inputs<'a> {
 }
 
 /// `pub fn` declarations of a module source: name, line, and the
-/// identifier tokens of the parameter list (for the R4 `Exec`-handle
-/// signature check).
+/// identifier tokens of the parameter list.
 fn pub_fns(src: &str) -> Vec<(String, usize, BTreeSet<String>)> {
     let toks = tokenize(src);
     let mut out = Vec::new();
@@ -554,13 +575,9 @@ pub fn check_r4(inputs: &R4Inputs<'_>) -> Vec<Finding> {
     let chaos_names = ident_set(inputs.chaos_test);
 
     for (path, src) in inputs.modules {
-        let needs_exec = path.ends_with("batched.rs") || path.ends_with("distributed.rs");
-        for (name, line, params) in &pub_fns(src) {
+        for (name, line, _params) in &pub_fns(src) {
             if !(name.contains("forward") || name.contains("backward")) {
                 continue;
-            }
-            if name.ends_with("_checked") {
-                continue; // deprecated pre-Exec shim: exempt by design
             }
             if !io_names.contains(name) {
                 findings.push(Finding {
@@ -576,30 +593,9 @@ pub fn check_r4(inputs: &R4Inputs<'_>) -> Vec<Finding> {
                         .into(),
                 });
             }
-            // Signature rule: every batched/sharded entry runs on an
-            // Exec handle; a bare `workers` count reopens the loose
-            // pre-Exec surface (no fault plan, no validation flag, no
-            // persistent pool).
-            if needs_exec && !params.contains("Exec") {
-                let bare = if params.contains("workers") {
-                    "takes a bare `workers` count instead of"
-                } else {
-                    "does not take"
-                };
-                findings.push(Finding {
-                    rule: "R4",
-                    path: path.to_string(),
-                    line: *line,
-                    message: format!(
-                        "batched/sharded entry `pub fn {name}` {bare} an `Exec` \
-                         execution handle"
-                    ),
-                    hint: "thread `exec: &Exec` through it — the handle carries \
-                           workers, the fault plan and the validation flag, and is \
-                           the only sanctioned way onto the persistent pool"
-                        .into(),
-                });
-            }
+            // The Exec-handle signature rule that used to live here
+            // moved to R6 (semantic::check_r6), which checks the whole
+            // call graph instead of just the parameter list.
         }
     }
 
@@ -672,6 +668,13 @@ mod tests {
         assert!(scan_file("rust/src/coordinator/fixture.rs", flag).is_empty());
         // The built-in allowlist file is exempt.
         assert!(scan_file("rust/src/runtime/exec.rs", flag).is_empty());
+        // Integration tests and examples are in scope: a nondeterministic
+        // harness can mask (or fabricate) a determinism regression.
+        let t = scan_file("rust/tests/fixture.rs", flag);
+        assert!(rules_of(&t).contains(&"R2"), "tests in scope: {t:?}");
+        let e = scan_file("examples/fixture.rs", flag);
+        assert!(rules_of(&e).contains(&"R2"), "examples in scope: {e:?}");
+        assert!(scan_file("rust/tests/fixture.rs", pass).is_empty());
     }
 
     #[test]
@@ -703,16 +706,6 @@ mod tests {
         assert!(
             msgs.iter().any(|m| m.contains("widget_forward") && m.contains("io_complexity")),
             "missing io coverage must flag: {msgs:?}"
-        );
-        assert!(
-            msgs.iter().any(|m| m.contains("widget_forward")
-                && m.contains("bare `workers` count instead of an `Exec`")),
-            "bare workers count must flag: {msgs:?}"
-        );
-        assert!(
-            msgs.iter().any(|m| m.contains("gadget_forward")
-                && m.contains("does not take an `Exec`")),
-            "missing Exec handle must flag: {msgs:?}"
         );
         assert!(
             msgs.iter().any(|m| m.contains("FaultSite::GadgetFwd")),

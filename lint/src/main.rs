@@ -1,10 +1,18 @@
-//! `cargo run -p lint` — walk `rust/src`, enforce the invariant catalog
-//! (R1–R4, see `rust/src/attn/mod.rs`), print findings with fix hints,
-//! exit nonzero on any finding.
+//! `cargo run -p lint` — walk `rust/src`, `rust/tests` and `examples/`,
+//! enforce the invariant catalog (R1–R7, see `rust/src/attn/mod.rs`),
+//! print findings with fix hints, exit nonzero on any finding.
+//!
+//! Every file is read and tokenized once; the per-file rules (R1–R3)
+//! and the cross-file rules (R4 coverage, R5–R7 semantic pass over the
+//! `rust/src` function models) pool their findings per file before a
+//! single pragma pass, so `// lint::allow(Rn, reason)` suppression and
+//! unused-pragma accounting see the complete picture.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
+use lint::semantic::{check_r5, check_r6, check_r7, parse_fns, FnModel};
 use lint::{apply_pragmas, check_r4, parse_pragmas, scan_file, Finding, R4Inputs};
 
 /// Recursively collect `.rs` files under `dir`, sorted for
@@ -30,74 +38,103 @@ fn rel(root: &Path, p: &Path) -> String {
     p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
 }
 
-fn read(path: &Path) -> String {
-    std::fs::read_to_string(path)
-        .unwrap_or_else(|e| panic!("lint: cannot read {}: {e}", path.display()))
-}
-
 fn main() -> ExitCode {
     // The lint crate lives at <repo>/lint; the tree under audit at
-    // <repo>/rust. CI and local runs both execute from the checkout
-    // that compiled this binary, so the compile-time manifest dir is
-    // the right anchor.
+    // <repo>/rust and <repo>/examples. CI and local runs both execute
+    // from the checkout that compiled this binary, so the compile-time
+    // manifest dir is the right anchor.
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("workspace root").to_owned();
-    let src_root = root.join("rust/src");
 
-    let files = match rs_files(&src_root) {
-        Ok(f) => f,
-        Err(e) => {
-            eprintln!("lint: cannot walk {}: {e}", src_root.display());
-            return ExitCode::FAILURE;
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["rust/src", "rust/tests", "examples"] {
+        match rs_files(&root.join(sub)) {
+            Ok(f) => files.extend(f),
+            Err(e) => {
+                eprintln!("lint: cannot walk {}: {e}", root.join(sub).display());
+                return ExitCode::FAILURE;
+            }
         }
-    };
+    }
 
+    // Read everything once: path → source.
+    let sources: BTreeMap<String, String> = files
+        .iter()
+        .map(|p| {
+            let src = std::fs::read_to_string(p)
+                .unwrap_or_else(|e| panic!("lint: cannot read {}: {e}", p.display()));
+            (rel(&root, p), src)
+        })
+        .collect();
+    let n_files = sources.len();
+
+    // Per-file rules R1–R3 over the whole walked set.
     let mut findings: Vec<Finding> = Vec::new();
-    let mut n_files = 0usize;
-    for path in &files {
-        let rp = rel(&root, path);
-        let src = read(path);
-        n_files += 1;
-        let (pragmas, pragma_errs) = parse_pragmas(&rp, &src);
-        findings.extend(pragma_errs);
-        findings.extend(apply_pragmas(&rp, scan_file(&rp, &src), &pragmas));
+    for (rp, src) in &sources {
+        findings.extend(scan_file(rp, src));
     }
 
     // R4: cross-file coverage of the four hot-path modules, the fault
-    // sites, and the two test walls.
-    let module_paths =
-        ["rust/src/attn/flash2.rs", "rust/src/attn/batched.rs", "rust/src/attn/block_sparse.rs", "rust/src/attn/distributed.rs"];
-    let module_srcs: Vec<String> = module_paths.iter().map(|p| read(&root.join(p))).collect();
-    let modules: Vec<(&str, &str)> =
-        module_paths.iter().zip(&module_srcs).map(|(p, s)| (*p, s.as_str())).collect();
-    let faults_src = read(&root.join("rust/src/attn/faults.rs"));
-    let io_test = read(&root.join("rust/tests/io_complexity.rs"));
-    let chaos_test = read(&root.join("rust/tests/chaos.rs"));
-    let r4 = check_r4(&R4Inputs {
+    // sites, and the two test walls — all already in `sources`.
+    let module_paths = [
+        "rust/src/attn/flash2.rs",
+        "rust/src/attn/batched.rs",
+        "rust/src/attn/block_sparse.rs",
+        "rust/src/attn/distributed.rs",
+    ];
+    let get = |p: &str| -> &str {
+        sources.get(p).unwrap_or_else(|| panic!("lint: expected {p} in the tree")).as_str()
+    };
+    let modules: Vec<(&str, &str)> = module_paths.iter().map(|p| (*p, get(p))).collect();
+    findings.extend(check_r4(&R4Inputs {
         modules: &modules,
-        faults: ("rust/src/attn/faults.rs", &faults_src),
-        io_test: &io_test,
-        chaos_test: &chaos_test,
-    });
-    // R4 findings honor the same pragma escape hatch as R1–R3.
-    for (p, s) in modules.iter().chain([&("rust/src/attn/faults.rs", faults_src.as_str())]) {
-        let (pragmas, _) = parse_pragmas(p, s);
-        let here: Vec<Finding> = r4.iter().filter(|f| f.path == *p).cloned().collect();
-        // Unused-pragma reporting for these files already happened in
-        // the per-file pass above; only suppression applies here.
-        findings.extend(
-            apply_pragmas(p, here, &pragmas).into_iter().filter(|f| f.rule != "pragma"),
-        );
-    }
+        faults: ("rust/src/attn/faults.rs", get("rust/src/attn/faults.rs")),
+        io_test: get("rust/tests/io_complexity.rs"),
+        chaos_test: get("rust/tests/chaos.rs"),
+    }));
 
-    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
-    if findings.is_empty() {
-        println!("lint: OK — {n_files} files clean under R1–R4 (invariant catalog: rust/src/attn/mod.rs)");
+    // R5–R7: the semantic pass models every function in rust/src (tests
+    // and examples exercise the API, they don't define the kernels).
+    let models: Vec<FnModel> = sources
+        .iter()
+        .filter(|(rp, _)| rp.starts_with("rust/src/"))
+        .flat_map(|(rp, src)| parse_fns(rp, src))
+        .collect();
+    findings.extend(check_r5(&models));
+    findings.extend(check_r6(&models));
+    findings.extend(check_r7(&models));
+
+    // Single pragma pass per file over the pooled findings, so a
+    // pragma used only by a cross-file rule still counts as used.
+    let mut by_path: BTreeMap<String, Vec<Finding>> = BTreeMap::new();
+    for f in findings {
+        by_path.entry(f.path.clone()).or_default().push(f);
+    }
+    let mut surviving: Vec<Finding> = Vec::new();
+    for (rp, src) in &sources {
+        let (pragmas, pragma_errs) = parse_pragmas(rp, src);
+        surviving.extend(pragma_errs);
+        let here = by_path.remove(rp).unwrap_or_default();
+        surviving.extend(apply_pragmas(rp, here, &pragmas));
+    }
+    // Findings whose path is outside the walked set (shouldn't happen;
+    // belt and braces) survive unsuppressed.
+    surviving.extend(by_path.into_values().flatten());
+
+    surviving.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    if surviving.is_empty() {
+        println!(
+            "lint: OK — {n_files} files clean under R1–R7 \
+             (invariant catalog: rust/src/attn/mod.rs)"
+        );
         ExitCode::SUCCESS
     } else {
-        for f in &findings {
+        for f in &surviving {
             println!("{f}");
         }
-        println!("lint: {} finding(s). Escape hatch: `// lint::allow(Rn, reason)` on or above the line.", findings.len());
+        println!(
+            "lint: {} finding(s). Escape hatch: `// lint::allow(Rn, reason)` on or above the line.",
+            surviving.len()
+        );
         ExitCode::FAILURE
     }
 }

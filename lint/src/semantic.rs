@@ -1,0 +1,1143 @@
+//! Semantic pass over `rust/src`: lightweight per-function models built
+//! on the token scanner — impl-block context, parameter types, qualified
+//! call sites, and raw body tokens — powering the call-graph rules:
+//!
+//! * **R5** — counted-access discipline: inside the kernel modules
+//!   (`flash.rs`, `flash2.rs`, `standard.rs`, `block_sparse.rs`), any
+//!   function that handles the `Hbm` traffic meter may only touch the
+//!   role-named HBM buffers (Q/K/V/O/dO/lse/dQ/dK/dV windows) through a
+//!   sanctioned counted accessor. Raw `buf[i]` indexing or `chunks_mut`
+//!   carves anywhere else silently bypass the IO ledger the paper's
+//!   analysis is checked against. Stitching an owned item window back
+//!   with `copy_from_slice`/`extend_from_slice` stays legal — that is
+//!   the deterministic item → slot commit, not a counted access.
+//! * **R6** — reachability routing: every `pub` forward/backward entry
+//!   in the four hot modules must put its work on the execution plane.
+//!   Batched/sharded entries must take an `Exec` handle at all; handle
+//!   carriers must reach the pool sink (`Exec::run`) through a chain of
+//!   `Exec`-carrying functions; and any entry reachable from the
+//!   serving/training roots (`Server`/`LmTrainer`/`ClsTrainer` methods,
+//!   `run_task`) without a handle is flagged — the serving path cannot
+//!   route it onto the pool. This replaces R4's old name-heuristic
+//!   signature check with a real call-graph argument.
+//! * **R7** — exactly-once-commit shape: each `impl PoolItem` must
+//!   claim, reset, poison, and finiteness-scan the *same* set of output
+//!   windows (a reset that forgets a window re-merges stale values on
+//!   retry), and each `Exec::run` site must commit every claimed window
+//!   of its item type exactly once in the enclosing function — the
+//!   static cross-reference of the runtime `claims()` manifest.
+//!
+//! The models are deliberately name-resolved, not type-resolved: calls
+//! are matched as `helper(..)` → free functions, `Type::f(..)` → that
+//! impl's associated functions, `recv.f(..)` → any impl method. That is
+//! precise enough to keep the oracle kernels (which legitimately never
+//! touch the pool) from borrowing a sink through an unrelated `new`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::{tokenize, Finding, Tok};
+
+// ---------------------------------------------------------------------
+// Function models
+// ---------------------------------------------------------------------
+
+/// How a call site names its target: `helper(..)` (free), `Type::f(..)`
+/// (associated, resolved against that impl type), `recv.f(..)` (method,
+/// resolved against any impl).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CallKind {
+    Free,
+    Assoc(String),
+    Method,
+}
+
+/// One call site in a function body.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Call {
+    pub kind: CallKind,
+    pub name: String,
+}
+
+/// Per-function model extracted by [`parse_fns`].
+#[derive(Clone, Debug)]
+pub struct FnModel {
+    pub path: String,
+    pub name: String,
+    pub line: usize,
+    /// Unrestricted `pub` only — `pub(crate)` is not API surface.
+    pub is_pub: bool,
+    /// Self type of the enclosing `impl` block, if any.
+    pub impl_type: Option<String>,
+    /// Trait of the enclosing `impl Trait for Type` block, if any.
+    pub impl_trait: Option<String>,
+    /// (pattern name, identifier tokens of the declared type).
+    pub params: Vec<(String, BTreeSet<String>)>,
+    /// Identifier tokens after the parameter list (return type and any
+    /// where clause).
+    pub ret_idents: BTreeSet<String>,
+    /// Body tokens including the outer braces (empty for trait method
+    /// declarations).
+    pub body: Vec<Tok>,
+    /// Qualified call sites in the body.
+    pub calls: BTreeSet<Call>,
+}
+
+impl FnModel {
+    /// Names of parameters whose declared type mentions `Exec`.
+    pub fn exec_params(&self) -> Vec<&str> {
+        self.params
+            .iter()
+            .filter(|(_, t)| t.contains("Exec"))
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    /// True iff some parameter type mentions the `Hbm` traffic meter.
+    pub fn takes_hbm(&self) -> bool {
+        self.params.iter().any(|(_, t)| t.contains("Hbm"))
+    }
+
+    /// True iff the return type mentions the `Hbm` traffic meter.
+    pub fn returns_hbm(&self) -> bool {
+        self.ret_idents.contains("Hbm")
+    }
+}
+
+/// `toks[j] == "<"`: step past the matching `>` (token-level balance;
+/// stray `>` from an arrow inside bounds just ends the skip early,
+/// which at worst drops one signature from the model — never a false
+/// finding). Returns the index just past the closing `>`.
+fn skip_angles(toks: &[Tok], j: usize) -> usize {
+    let mut d = 0i64;
+    let mut k = j;
+    while k < toks.len() {
+        if toks[k].text == "<" {
+            d += 1;
+        } else if toks[k].text == ">" {
+            d -= 1;
+            if d <= 0 {
+                return k + 1;
+            }
+        }
+        k += 1;
+    }
+    k
+}
+
+/// Keywords and prelude constructors never treated as call targets.
+fn is_call_kw(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "else"
+            | "match"
+            | "while"
+            | "for"
+            | "loop"
+            | "let"
+            | "fn"
+            | "return"
+            | "in"
+            | "as"
+            | "use"
+            | "pub"
+            | "mut"
+            | "ref"
+            | "move"
+            | "impl"
+            | "struct"
+            | "enum"
+            | "trait"
+            | "where"
+            | "self"
+            | "Self"
+            | "super"
+            | "crate"
+            | "dyn"
+            | "break"
+            | "continue"
+            | "true"
+            | "false"
+            | "unsafe"
+            | "async"
+            | "await"
+            | "static"
+            | "const"
+            | "type"
+            | "mod"
+            | "extern"
+            | "Some"
+            | "None"
+            | "Ok"
+            | "Err"
+            | "Box"
+            | "Vec"
+            | "String"
+    )
+}
+
+/// Qualified call sites of a body: an identifier directly followed by
+/// `(`, classified by what precedes it. Macros (`name!(..)`) never
+/// reach here — the `!` sits between the name and the paren.
+fn body_calls(b: &[Tok]) -> BTreeSet<Call> {
+    let mut out = BTreeSet::new();
+    for i in 0..b.len().saturating_sub(1) {
+        let t = &b[i];
+        if !t.is_ident || is_call_kw(&t.text) || b[i + 1].text != "(" {
+            continue;
+        }
+        if i >= 2 && b[i - 1].text == ":" && b[i - 2].text == ":" {
+            // Path call `A::B::name(` — walk the segments back to the
+            // head, which names the impl type (or module; a module head
+            // simply resolves to nothing, i.e. no edge).
+            let mut k = i as i64 - 3;
+            let mut head = None;
+            while k >= 0 && b[k as usize].is_ident {
+                head = Some(b[k as usize].text.clone());
+                if k >= 2 && b[k as usize - 1].text == ":" && b[k as usize - 2].text == ":" {
+                    k -= 3;
+                } else {
+                    break;
+                }
+            }
+            if let Some(h) = head {
+                out.insert(Call { kind: CallKind::Assoc(h), name: t.text.clone() });
+            }
+        } else if i >= 1 && b[i - 1].text == "." {
+            out.insert(Call { kind: CallKind::Method, name: t.text.clone() });
+        } else {
+            out.insert(Call { kind: CallKind::Free, name: t.text.clone() });
+        }
+    }
+    out
+}
+
+/// Build per-function models for one file. Nested `fn` items stay part
+/// of their enclosing function's body (they are implementation detail,
+/// not graph nodes).
+pub fn parse_fns(path: &str, src: &str) -> Vec<FnModel> {
+    let toks = tokenize(src);
+    let n = toks.len();
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    let mut depth = 0i64;
+    // (brace depth of the block, self type, trait) per open impl.
+    let mut impl_stack: Vec<(i64, Option<String>, Option<String>)> = Vec::new();
+
+    while i < n {
+        let t = &toks[i];
+        if t.text == "{" {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t.text == "}" {
+            depth -= 1;
+            while impl_stack.last().is_some_and(|(d, _, _)| *d > depth) {
+                impl_stack.pop();
+            }
+            i += 1;
+            continue;
+        }
+        if t.is_ident && t.text == "impl" {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|x| x.text == "<") {
+                j = skip_angles(&toks, j);
+            }
+            let mut seg1: Vec<String> = Vec::new();
+            while j < n && toks[j].text != "{" && toks[j].text != ";" && toks[j].text != "for" {
+                if toks[j].is_ident {
+                    seg1.push(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            let (ity, itr);
+            if j < n && toks[j].text == "for" {
+                itr = seg1.first().cloned();
+                j += 1;
+                let mut seg2: Vec<String> = Vec::new();
+                while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                    if toks[j].is_ident {
+                        seg2.push(toks[j].text.clone());
+                    }
+                    j += 1;
+                }
+                ity = seg2.first().cloned();
+            } else {
+                itr = None;
+                ity = seg1.first().cloned();
+            }
+            if j < n && toks[j].text == "{" {
+                depth += 1;
+                impl_stack.push((depth, ity, itr));
+                i = j + 1;
+            } else {
+                i = j;
+            }
+            continue;
+        }
+        if t.is_ident && t.text == "fn" && toks.get(i + 1).is_some_and(|x| x.is_ident) {
+            let mut f = FnModel {
+                path: path.to_string(),
+                name: toks[i + 1].text.clone(),
+                line: toks[i + 1].line,
+                is_pub: false,
+                impl_type: None,
+                impl_trait: None,
+                params: Vec::new(),
+                ret_idents: BTreeSet::new(),
+                body: Vec::new(),
+                calls: BTreeSet::new(),
+            };
+            // Visibility: look left past `const`/`async`/`extern` for a
+            // bare `pub`. A restricted `pub(crate)` leaves `)` here and
+            // correctly stays non-pub.
+            let mut k = i as i64 - 1;
+            while k >= 0
+                && matches!(toks[k as usize].text.as_str(), "const" | "async" | "extern")
+            {
+                k -= 1;
+            }
+            if k >= 0 && toks[k as usize].text == "pub" {
+                f.is_pub = true;
+            }
+            if let Some((_, ity, itr)) = impl_stack.last() {
+                f.impl_type = ity.clone();
+                f.impl_trait = itr.clone();
+            }
+            // Parameters: split the outer paren group by top-level commas.
+            let mut j = i + 2;
+            if toks.get(j).is_some_and(|x| x.text == "<") {
+                j = skip_angles(&toks, j);
+            }
+            while j < n && toks[j].text != "(" && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < n && toks[j].text == "(" {
+                let mut d = 0i64;
+                let mut cur: Vec<&Tok> = Vec::new();
+                let mut groups: Vec<Vec<&Tok>> = Vec::new();
+                while j < n {
+                    match toks[j].text.as_str() {
+                        "(" => {
+                            d += 1;
+                            if d == 1 {
+                                j += 1;
+                                continue;
+                            }
+                        }
+                        ")" => {
+                            d -= 1;
+                            if d == 0 {
+                                if !cur.is_empty() {
+                                    groups.push(std::mem::take(&mut cur));
+                                }
+                                j += 1;
+                                break;
+                            }
+                        }
+                        "," if d == 1 => {
+                            if !cur.is_empty() {
+                                groups.push(std::mem::take(&mut cur));
+                            }
+                            j += 1;
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    cur.push(&toks[j]);
+                    j += 1;
+                }
+                for g in groups {
+                    let colon = g.iter().position(|x| x.text == ":");
+                    match colon {
+                        None => {
+                            if g.iter().any(|x| x.text == "self") {
+                                f.params.push(("self".to_string(), BTreeSet::new()));
+                            }
+                        }
+                        Some(ci) => {
+                            let name = g[..ci]
+                                .iter()
+                                .rev()
+                                .find(|x| x.is_ident && x.text != "mut")
+                                .map(|x| x.text.clone())
+                                .unwrap_or_else(|| "_".to_string());
+                            let tys: BTreeSet<String> = g[ci + 1..]
+                                .iter()
+                                .filter(|x| x.is_ident)
+                                .map(|x| x.text.clone())
+                                .collect();
+                            f.params.push((name, tys));
+                        }
+                    }
+                }
+            }
+            // Return type / where clause, then the body.
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                if toks[j].is_ident {
+                    f.ret_idents.insert(toks[j].text.clone());
+                }
+                j += 1;
+            }
+            if j < n && toks[j].text == "{" {
+                let start = j;
+                let mut d = 0i64;
+                while j < n {
+                    if toks[j].text == "{" {
+                        d += 1;
+                    } else if toks[j].text == "}" {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                let end = (j + 1).min(n);
+                f.body = toks[start..end].to_vec();
+            }
+            f.calls = body_calls(&f.body);
+            fns.push(f);
+            i = (j + 1).min(n);
+            continue;
+        }
+        i += 1;
+    }
+    fns
+}
+
+// ---------------------------------------------------------------------
+// Shared chain walkers
+// ---------------------------------------------------------------------
+
+/// Dotted receiver chain feeding the token at `bi` (exclusive), right
+/// to left: for `grads[it.s].dq.data[` with `bi` at the final `[`,
+/// returns `["data", "dq", "grads"]`. Stops at anything that is not an
+/// identifier, a `.`, or an index group.
+fn receiver_chain(b: &[Tok], bi: usize) -> Vec<String> {
+    let mut chain = Vec::new();
+    let mut k = bi as i64 - 1;
+    let mut guard = 0;
+    while k >= 0 && guard < 40 {
+        guard += 1;
+        let t = &b[k as usize];
+        if t.is_ident {
+            chain.push(t.text.clone());
+            k -= 1;
+            if k >= 0 && b[k as usize].text == "." {
+                k -= 1;
+            } else {
+                break;
+            }
+        } else if t.text == "]" {
+            let mut d = 0i64;
+            while k >= 0 {
+                let tt = b[k as usize].text.as_str();
+                if tt == "]" {
+                    d += 1;
+                } else if tt == "[" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+            k -= 1;
+            if k >= 0 && b[k as usize].text == "." {
+                k -= 1;
+            }
+        } else {
+            break;
+        }
+    }
+    chain
+}
+
+/// The head identifier of the call-receiver chain ending at the `.`
+/// token at `dot`: `exec.clone().validated().run(..)` → `exec`.
+fn call_chain_head(b: &[Tok], dot: usize) -> Option<String> {
+    let mut k = dot as i64 - 1;
+    let mut head = None;
+    let mut guard = 0;
+    while k >= 0 && guard < 200 {
+        guard += 1;
+        let t = &b[k as usize];
+        if t.text == ")" || t.text == "]" {
+            let (open, close) = if t.text == ")" { ("(", ")") } else { ("[", "]") };
+            let mut d = 0i64;
+            while k >= 0 {
+                let tt = b[k as usize].text.as_str();
+                if tt == close {
+                    d += 1;
+                } else if tt == open {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+            k -= 1;
+        } else if t.is_ident {
+            head = Some(t.text.clone());
+            k -= 1;
+            if k >= 0 && b[k as usize].text == "." {
+                k -= 1;
+            } else {
+                break;
+            }
+        } else if t.text == "." {
+            k -= 1;
+        } else {
+            break;
+        }
+    }
+    head
+}
+
+// ---------------------------------------------------------------------
+// R5 — counted-access discipline in the kernel modules
+// ---------------------------------------------------------------------
+
+/// Kernel files under R5's counted-access discipline. The scheduler
+/// modules (`batched.rs`, `distributed.rs`) are deliberately out of
+/// scope: they own disjoint item windows and are policed by R7 plus the
+/// runtime audit, not by accessor discipline.
+const R5_KERNEL_FILES: &[&str] = &[
+    "src/attn/flash.rs",
+    "src/attn/flash2.rs",
+    "src/attn/standard.rs",
+    "src/attn/block_sparse.rs",
+];
+
+/// Sanctioned counted accessors: the only functions allowed to index
+/// HBM-resident role buffers raw, because each pairs every touch with
+/// an `Hbm::load`/`store` count.
+const R5_SANCTIONED: &[&str] = &[
+    "stream_kv",
+    "stream_kv_filtered",
+    "stream_kv_dq",
+    "stream_kv_dq_filtered",
+    "row_block_sweep",
+    "dq_row_sweep",
+    "dkv_col_sweep",
+    "dkv_col_sweep_filtered",
+    "write_epilogue",
+    "sparse_row_block_sweep",
+    "sparse_dq_row_sweep",
+    "flash_forward",
+    "flash_backward",
+    "standard_forward",
+    "standard_backward",
+    "block_sparse_forward",
+];
+
+/// True iff `ident` names an HBM role buffer: the bare tensor roles, or
+/// a `<role>_…_<window>` compound like `o_win`, `dq_mine`, `lse_out`.
+fn r5_role(ident: &str) -> bool {
+    if matches!(
+        ident,
+        "q" | "k" | "v" | "o" | "dout" | "lse" | "dq" | "dk" | "dv" | "d_vec" | "l" | "m"
+    ) {
+        return true;
+    }
+    let segs: Vec<&str> = ident.split('_').collect();
+    segs.len() >= 2
+        && matches!(segs[0], "q" | "k" | "v" | "o" | "do" | "dout" | "lse" | "dq" | "dk" | "dv")
+        && matches!(
+            *segs.last().unwrap(),
+            "win" | "out" | "acc" | "rows" | "mine" | "chunks"
+        )
+}
+
+/// Index of the `]` matching the `[` at `bi` (or `b.len()` if none).
+fn index_close(b: &[Tok], bi: usize) -> usize {
+    let mut d = 0i64;
+    let mut k = bi;
+    while k < b.len() {
+        if b[k].text == "[" {
+            d += 1;
+        } else if b[k].text == "]" {
+            d -= 1;
+            if d == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    b.len()
+}
+
+/// R5 over the models of the scanned tree (non-kernel paths pass
+/// through untouched).
+pub fn check_r5(models: &[FnModel]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in models {
+        if !R5_KERNEL_FILES.iter().any(|s| f.path.ends_with(s)) {
+            continue;
+        }
+        if R5_SANCTIONED.contains(&f.name.as_str()) {
+            continue;
+        }
+        if !(f.takes_hbm() || f.returns_hbm()) {
+            continue;
+        }
+        let b = &f.body;
+        for bi in 0..b.len() {
+            let t = &b[bi];
+            if t.text == "[" {
+                let chain = receiver_chain(b, bi);
+                if chain.is_empty() || !chain.iter().any(|c| r5_role(c)) {
+                    continue;
+                }
+                // Stitch exemption: `target[..].copy_from_slice(&win)`
+                // is the deterministic item → slot commit.
+                let close = index_close(b, bi);
+                if b.get(close + 1).is_some_and(|x| x.text == ".")
+                    && b.get(close + 2).is_some_and(|x| {
+                        x.text == "copy_from_slice" || x.text == "extend_from_slice"
+                    })
+                {
+                    continue;
+                }
+                let expr: Vec<String> = chain.iter().rev().cloned().collect();
+                findings.push(Finding {
+                    rule: "R5",
+                    path: f.path.clone(),
+                    line: t.line,
+                    message: format!(
+                        "raw index into HBM role buffer `{}[..]` in `{}` — the touch \
+                         bypasses the counted accessors",
+                        expr.join("."),
+                        f.name
+                    ),
+                    hint: "route the access through a sanctioned counted accessor \
+                           (stream_kv*, *_sweep, write_epilogue) so every element \
+                           touch lands in the Hbm ledger, or stitch owned windows \
+                           with copy_from_slice; if the access is provably counted, \
+                           pragma it with a reason"
+                        .into(),
+                });
+            }
+            if t.is_ident
+                && (t.text == "chunks_mut" || t.text == "chunks")
+                && b.get(bi + 1).is_some_and(|x| x.text == "(")
+                && bi >= 1
+                && b[bi - 1].text == "."
+            {
+                let chain = receiver_chain(b, bi - 1);
+                if chain.iter().any(|c| r5_role(c)) {
+                    let expr: Vec<String> = chain.iter().rev().cloned().collect();
+                    findings.push(Finding {
+                        rule: "R5",
+                        path: f.path.clone(),
+                        line: t.line,
+                        message: format!(
+                            "`{}.{}(..)` carves an HBM role buffer outside the \
+                             sanctioned accessors in `{}`",
+                            expr.join("."),
+                            t.text,
+                            f.name
+                        ),
+                        hint: "carving belongs to the sanctioned accessors (or the \
+                               pool's owned item windows); if this carve feeds them \
+                               directly and traffic is counted inside, pragma it \
+                               with a reason"
+                            .into(),
+                    });
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------
+// R6 — reachability routing onto the execution plane
+// ---------------------------------------------------------------------
+
+/// The four hot attention modules R6 governs.
+const R6_HOT: &[&str] = &[
+    "src/attn/flash2.rs",
+    "src/attn/batched.rs",
+    "src/attn/block_sparse.rs",
+    "src/attn/distributed.rs",
+];
+
+fn r6_is_hot(path: &str) -> bool {
+    R6_HOT.iter().any(|s| path.ends_with(s))
+}
+
+/// Batched/sharded scheduler modules: entries here must take an `Exec`
+/// handle unconditionally (the former R4 signature rule, now backed by
+/// the call graph instead of a name heuristic).
+fn r6_needs_exec(path: &str) -> bool {
+    path.ends_with("batched.rs") || path.ends_with("distributed.rs")
+}
+
+/// True iff the function drives the pool directly: it takes an `Exec`
+/// parameter and calls `.run(..)` on it (builder chains like
+/// `exec.clone().validated().run(..)` included).
+pub fn is_pool_sink(f: &FnModel) -> bool {
+    let eps: BTreeSet<&str> = f.exec_params().into_iter().collect();
+    if eps.is_empty() {
+        return false;
+    }
+    let b = &f.body;
+    for i in 0..b.len().saturating_sub(2) {
+        if b[i].text == "." && b[i + 1].text == "run" && b[i + 2].text == "(" {
+            if let Some(h) = call_chain_head(b, i) {
+                if eps.contains(h.as_str()) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Resolve a call site against the model set.
+fn resolve<'m>(c: &Call, by_name: &BTreeMap<&str, Vec<&'m FnModel>>) -> Vec<&'m FnModel> {
+    let Some(cands) = by_name.get(c.name.as_str()) else {
+        return Vec::new();
+    };
+    cands
+        .iter()
+        .copied()
+        .filter(|f| match &c.kind {
+            CallKind::Free => f.impl_type.is_none(),
+            CallKind::Assoc(t) => f.impl_type.as_deref() == Some(t.as_str()),
+            CallKind::Method => f.impl_type.is_some(),
+        })
+        .collect()
+}
+
+/// Does `name` reach a pool sink through `Exec`-carrying functions only?
+fn reaches_sink(
+    name: &str,
+    by_name: &BTreeMap<&str, Vec<&FnModel>>,
+    sinks: &BTreeSet<&str>,
+    seen: &mut BTreeSet<String>,
+) -> bool {
+    if !seen.insert(name.to_string()) {
+        return false;
+    }
+    if sinks.contains(name) {
+        return true;
+    }
+    for f in by_name.get(name).into_iter().flatten() {
+        if f.exec_params().is_empty() {
+            continue;
+        }
+        for c in &f.calls {
+            for g in resolve(c, by_name) {
+                if !g.exec_params().is_empty() && reaches_sink(&g.name, by_name, sinks, seen) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// R6 over the whole tree's models (call graph, sinks, and the
+/// serving/training roots).
+pub fn check_r6(models: &[FnModel]) -> Vec<Finding> {
+    let mut by_name: BTreeMap<&str, Vec<&FnModel>> = BTreeMap::new();
+    for f in models {
+        by_name.entry(f.name.as_str()).or_default().push(f);
+    }
+    let sinks: BTreeSet<&str> =
+        models.iter().filter(|f| is_pool_sink(f)).map(|f| f.name.as_str()).collect();
+
+    // Everything reachable from the serving/training surface.
+    let mut queue: Vec<&str> = models
+        .iter()
+        .filter(|f| {
+            matches!(f.impl_type.as_deref(), Some("Server" | "LmTrainer" | "ClsTrainer"))
+                || f.name == "run_task"
+        })
+        .map(|f| f.name.as_str())
+        .collect();
+    let mut root_reach: BTreeSet<&str> = BTreeSet::new();
+    while let Some(nm) = queue.pop() {
+        if !root_reach.insert(nm) {
+            continue;
+        }
+        for f in by_name.get(nm).into_iter().flatten() {
+            for c in &f.calls {
+                for g in resolve(c, &by_name) {
+                    queue.push(g.name.as_str());
+                }
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    for f in models {
+        if !r6_is_hot(&f.path) || !f.is_pub {
+            continue;
+        }
+        if !(f.name.contains("forward") || f.name.contains("backward")) {
+            continue;
+        }
+        let routed = !f.exec_params().is_empty();
+        if !routed && r6_needs_exec(&f.path) {
+            let bare = if f.params.iter().any(|(n, _)| n == "workers") {
+                "takes a bare `workers` count instead of"
+            } else {
+                "does not take"
+            };
+            findings.push(Finding {
+                rule: "R6",
+                path: f.path.clone(),
+                line: f.line,
+                message: format!(
+                    "batched/sharded entry `pub fn {}` {bare} an `Exec` execution handle",
+                    f.name
+                ),
+                hint: "thread `exec: &Exec` through it — the handle carries workers, \
+                       the fault plan and the validation flag, and is the only \
+                       sanctioned way onto the persistent pool"
+                    .into(),
+            });
+            continue;
+        }
+        if !routed && root_reach.contains(f.name.as_str()) {
+            findings.push(Finding {
+                rule: "R6",
+                path: f.path.clone(),
+                line: f.line,
+                message: format!(
+                    "`pub fn {}` is reachable from the serving/training roots \
+                     (Server/LmTrainer/ClsTrainer/run_task) but takes no `Exec` handle",
+                    f.name
+                ),
+                hint: "the serving path cannot route this entry onto the pool; \
+                       thread `exec: &Exec` through the call chain"
+                    .into(),
+            });
+            continue;
+        }
+        if routed {
+            let mut seen = BTreeSet::new();
+            if !reaches_sink(f.name.as_str(), &by_name, &sinks, &mut seen) {
+                findings.push(Finding {
+                    rule: "R6",
+                    path: f.path.clone(),
+                    line: f.line,
+                    message: format!(
+                        "`pub fn {}` takes an `Exec` handle but no call path carries \
+                         it to the pool sink (`Exec::run`)",
+                        f.name
+                    ),
+                    hint: "drive the work through exec.run(..) — directly or via an \
+                           Exec-carrying helper; a deliberately off-pool oracle \
+                           kernel takes a pragma with its reason"
+                        .into(),
+                });
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------
+// R7 — exactly-once-commit shape for pool items
+// ---------------------------------------------------------------------
+
+/// Fields the body touches through `self.<field>`.
+fn self_fields(b: &[Tok]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for i in 0..b.len().saturating_sub(2) {
+        if b[i].text == "self" && b[i + 1].text == "." && b[i + 2].is_ident {
+            out.insert(b[i + 2].text.clone());
+        }
+    }
+    out
+}
+
+/// Item type of the `|it: &mut T|` work closure inside the run call
+/// whose opening paren sits at `open`.
+fn closure_item_type(b: &[Tok], open: usize) -> Option<String> {
+    let mut d = 0i64;
+    let mut k = open;
+    while k < b.len() {
+        match b[k].text.as_str() {
+            "(" => d += 1,
+            ")" => {
+                d -= 1;
+                if d == 0 {
+                    return None;
+                }
+            }
+            "|" => {
+                if b.get(k + 1).is_some_and(|x| x.is_ident)
+                    && b.get(k + 2).is_some_and(|x| x.text == ":")
+                    && b.get(k + 3).is_some_and(|x| x.text == "&")
+                    && b.get(k + 4).is_some_and(|x| x.text == "mut")
+                    && b.get(k + 5).is_some_and(|x| x.is_ident)
+                    && b.get(k + 6).is_some_and(|x| x.text == "|")
+                {
+                    return Some(b[k + 5].text.clone());
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Number of `copy_from_slice(&x.<field> ..)` / `extend_from_slice(..)`
+/// commits of `field` in the body.
+fn commit_count(b: &[Tok], field: &str) -> usize {
+    let mut cnt = 0;
+    for i in 0..b.len().saturating_sub(5) {
+        if (b[i].text == "copy_from_slice" || b[i].text == "extend_from_slice")
+            && b[i + 1].text == "("
+            && b[i + 2].text == "&"
+            && b[i + 3].is_ident
+            && b[i + 4].text == "."
+            && b[i + 5].text == field
+        {
+            cnt += 1;
+        }
+    }
+    cnt
+}
+
+fn sorted(s: &BTreeSet<String>) -> Vec<&str> {
+    s.iter().map(|x| x.as_str()).collect()
+}
+
+/// R7 over the whole tree's models: window-set agreement per
+/// `impl PoolItem` (R7a) and exactly-once commits per run site (R7b).
+pub fn check_r7(models: &[FnModel]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // R7a: claims/reset/poison/check_finite must agree on the windows.
+    let mut impls: BTreeMap<(String, String), BTreeMap<String, &FnModel>> = BTreeMap::new();
+    for f in models {
+        if f.impl_trait.as_deref() == Some("PoolItem") {
+            if let Some(ty) = &f.impl_type {
+                impls
+                    .entry((f.path.clone(), ty.clone()))
+                    .or_default()
+                    .insert(f.name.clone(), f);
+            }
+        }
+    }
+    let mut claim_fields: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for ((path, ty), methods) in &impls {
+        let Some(claims) = methods.get("claims") else {
+            let line = methods.values().map(|mm| mm.line).min().unwrap_or(1);
+            findings.push(Finding {
+                rule: "R7",
+                path: path.clone(),
+                line,
+                message: format!("`impl PoolItem for {ty}` declares no claims() manifest"),
+                hint: "list one SlotClaim per owned output window — the audit plane \
+                       and this rule both cross-reference it"
+                    .into(),
+            });
+            continue;
+        };
+        let base = self_fields(&claims.body);
+        claim_fields.insert(ty.clone(), base.clone());
+        for mname in ["reset", "poison", "check_finite"] {
+            let Some(mm) = methods.get(mname) else { continue };
+            let got = self_fields(&mm.body);
+            if got != base {
+                findings.push(Finding {
+                    rule: "R7",
+                    path: path.clone(),
+                    line: mm.line,
+                    message: format!(
+                        "`{ty}::{mname}` touches fields {:?} but claims() manifests {:?}",
+                        sorted(&got),
+                        sorted(&base)
+                    ),
+                    hint: "reset/poison/check_finite must cover exactly the claimed \
+                           windows — a forgotten window re-merges stale values after \
+                           a retry and dodges the guardrail scan"
+                        .into(),
+                });
+            }
+        }
+    }
+
+    // R7b: each run site commits every claimed window exactly once in
+    // the enclosing function. Sites whose work argument is not a typed
+    // `|it: &mut T|` closure (e.g. fn-pointer test harnesses) and item
+    // types without a model are skipped, not guessed at.
+    for f in models {
+        let b = &f.body;
+        for bi in 0..b.len().saturating_sub(2) {
+            if !(b[bi].text == "." && b[bi + 1].text == "run" && b[bi + 2].text == "(") {
+                continue;
+            }
+            let Some(ty) = closure_item_type(b, bi + 2) else { continue };
+            let Some(fields) = claim_fields.get(&ty) else { continue };
+            for fld in fields {
+                let cnt = commit_count(b, fld);
+                if cnt != 1 {
+                    findings.push(Finding {
+                        rule: "R7",
+                        path: f.path.clone(),
+                        line: b[bi + 1].line,
+                        message: format!(
+                            "pool site in `{}` commits claimed window `{ty}.{fld}` \
+                             {cnt} times (exactly-once required)",
+                            f.name
+                        ),
+                        hint: "stitch each claimed window back into its output slot \
+                               exactly once after the run — zero commits drop the \
+                               item's work, double commits mask claim overlap"
+                            .into(),
+                    });
+                }
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------
+// Fixture-driven rule tests (rules can't silently rot)
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_models_capture_params_impl_context_calls_and_sinks() {
+        let src = "impl Server { pub fn complete(&self, exec: &Exec) { helper(exec); } }\n\
+                   fn helper(exec: &Exec) -> usize {\n\
+                       exec.clone().validated().run(items, site, hbm, work)\n\
+                   }\n\
+                   pub(crate) fn restricted(hbm: &mut Hbm) { hbm.load(1); }\n";
+        let fns = parse_fns("rust/src/coordinator/server.rs", src);
+        assert_eq!(fns.len(), 3, "{fns:#?}");
+        let complete = &fns[0];
+        assert_eq!(complete.name, "complete");
+        assert!(complete.is_pub);
+        assert_eq!(complete.impl_type.as_deref(), Some("Server"));
+        assert_eq!(complete.exec_params(), vec!["exec"]);
+        assert!(complete.calls.contains(&Call { kind: CallKind::Free, name: "helper".into() }));
+        assert!(!is_pool_sink(complete), "helper() call is not a direct sink");
+        let helper = &fns[1];
+        assert!(!helper.is_pub);
+        assert!(helper.impl_type.is_none());
+        assert!(is_pool_sink(helper), "builder-chained exec.run is a sink");
+        let restricted = &fns[2];
+        assert!(!restricted.is_pub, "pub(crate) is not API surface");
+        assert!(restricted.takes_hbm());
+    }
+
+    #[test]
+    fn r5_flags_raw_indexing_and_chunk_carves_in_kernel_files() {
+        let flag_idx = include_str!("../fixtures/r5_flag_raw_index.rs");
+        let flag_chunks = include_str!("../fixtures/r5_flag_chunks.rs");
+        let f = check_r5(&parse_fns("rust/src/attn/flash2.rs", flag_idx));
+        assert!(f.len() >= 2, "raw q/o indexing must flag: {f:?}");
+        assert!(f.iter().all(|x| x.rule == "R5"), "{f:?}");
+        let f2 = check_r5(&parse_fns("rust/src/attn/block_sparse.rs", flag_chunks));
+        assert!(!f2.is_empty(), "chunks_mut carve must flag: {f2:?}");
+        // The same source is out of R5's reach in a scheduler module.
+        assert!(check_r5(&parse_fns("rust/src/attn/batched.rs", flag_idx)).is_empty());
+    }
+
+    #[test]
+    fn r5_passes_sanctioned_accessors_stitches_and_unaudited_helpers() {
+        let pass1 = include_str!("../fixtures/r5_pass_sanctioned.rs");
+        let pass2 = include_str!("../fixtures/r5_pass_stitch.rs");
+        let p1 = check_r5(&parse_fns("rust/src/attn/flash2.rs", pass1));
+        assert!(p1.is_empty(), "must pass: {p1:?}");
+        let p2 = check_r5(&parse_fns("rust/src/attn/flash2.rs", pass2));
+        assert!(p2.is_empty(), "must pass: {p2:?}");
+    }
+
+    #[test]
+    fn r6_flags_bare_workers_and_sinkless_handles() {
+        let src = include_str!("../fixtures/r6_flag_module.rs");
+        let f = check_r6(&parse_fns("rust/src/attn/batched.rs", src));
+        let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+        assert!(
+            msgs.iter().any(|m| m.contains("widget_forward")
+                && m.contains("bare `workers` count instead of an `Exec`")),
+            "bare workers count must flag: {msgs:?}"
+        );
+        assert!(
+            msgs.iter()
+                .any(|m| m.contains("orphan_backward") && m.contains("pool sink")),
+            "sinkless Exec carrier must flag: {msgs:?}"
+        );
+        assert!(f.iter().all(|x| x.rule == "R6"), "{f:?}");
+    }
+
+    #[test]
+    fn r6_passes_direct_and_helper_routed_entries() {
+        let src = include_str!("../fixtures/r6_pass_module.rs");
+        let f = check_r6(&parse_fns("rust/src/attn/batched.rs", src));
+        assert!(f.is_empty(), "must pass: {f:?}");
+    }
+
+    #[test]
+    fn r6_roots_make_unrouted_kernel_entries_a_finding() {
+        let server = include_str!("../fixtures/r6_roots_server.rs");
+        let flag = include_str!("../fixtures/r6_flag_roots_kernel.rs");
+        let pass = include_str!("../fixtures/r6_pass_roots_kernel.rs");
+        let mut ms = parse_fns("rust/src/coordinator/server.rs", server);
+        ms.extend(parse_fns("rust/src/attn/flash2.rs", flag));
+        let f = check_r6(&ms);
+        assert!(
+            f.iter().any(|x| x.rule == "R6"
+                && x.message.contains("gizmo_forward")
+                && x.message.contains("serving/training roots")),
+            "root-reachable unrouted entry must flag: {f:?}"
+        );
+        // Without the root, an Exec-free flash2 entry is the oracle's
+        // prerogative — no finding.
+        let f2 = check_r6(&parse_fns("rust/src/attn/flash2.rs", flag));
+        assert!(f2.is_empty(), "must pass without the root: {f2:?}");
+        // A routed entry stays clean even when the root drives it.
+        let mut ms3 = parse_fns("rust/src/coordinator/server.rs", server);
+        ms3.extend(parse_fns("rust/src/attn/flash2.rs", pass));
+        let f3 = check_r6(&ms3);
+        assert!(f3.is_empty(), "routed entry must pass: {f3:?}");
+    }
+
+    #[test]
+    fn r7_flags_window_set_mismatch_and_commit_shape() {
+        let item = include_str!("../fixtures/r7_flag_item.rs");
+        let f = check_r7(&parse_fns("rust/src/attn/batched.rs", item));
+        assert!(
+            f.iter().any(|x| x.message.contains("GadgetItem::reset")),
+            "forgotten reset window must flag: {f:?}"
+        );
+        assert!(f.iter().all(|x| x.rule == "R7"), "{f:?}");
+        let site = include_str!("../fixtures/r7_flag_site.rs");
+        let f2 = check_r7(&parse_fns("rust/src/attn/batched.rs", site));
+        assert!(
+            f2.iter().any(|x| x.message.contains("o_win") && x.message.contains("2 times")),
+            "double commit must flag: {f2:?}"
+        );
+        assert!(
+            f2.iter().any(|x| x.message.contains("lse_win") && x.message.contains("0 times")),
+            "dropped commit must flag: {f2:?}"
+        );
+    }
+
+    #[test]
+    fn r7_passes_disciplined_items_and_sites() {
+        let item = include_str!("../fixtures/r7_pass_item.rs");
+        let p1 = check_r7(&parse_fns("rust/src/attn/batched.rs", item));
+        assert!(p1.is_empty(), "must pass: {p1:?}");
+        let site = include_str!("../fixtures/r7_pass_site.rs");
+        let p2 = check_r7(&parse_fns("rust/src/attn/batched.rs", site));
+        assert!(p2.is_empty(), "must pass: {p2:?}");
+    }
+}

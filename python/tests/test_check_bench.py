@@ -1,0 +1,295 @@
+#!/usr/bin/env python3
+"""Unit tests for the CI perf-regression gate (python/check_bench.py).
+
+The gate is itself a test, so it gets tests: a gate that silently stops
+failing (wrong tolerance picked, a section's cells no longer counted, a
+diagnosis turned into a traceback) is a perf regression waiting to land.
+Everything here drives the real module through temp files — no bench
+run needed.
+
+Usage: python3 python/tests/test_check_bench.py
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import check_bench  # noqa: E402
+
+
+WORKERS = 5
+
+
+def make_doc(smoke=False):
+    """A minimal BENCH_attn.json document that passes every gate.
+
+    Every fast/checked/pool number is well under its reference so each
+    test perturbs exactly one cell to trip exactly one rule.
+    """
+    return {
+        "workers": WORKERS,
+        "smoke": smoke,
+        "results": [
+            {
+                "n": 256,
+                "flash_ns": 1000.0,
+                "flash2_w1_ns": 900.0,
+                f"flash2_w{WORKERS}_ns": 500.0,
+                "flash_bwd_ns": 2000.0,
+                "flash2_bwd_w1_ns": 1800.0,
+                f"flash2_bwd_w{WORKERS}_ns": 1000.0,
+            }
+        ],
+        "batched": [
+            {
+                "n": 256,
+                "per_slice_fwd_ns": 1000.0,
+                "batched_fwd_ns": 800.0,
+                "per_slice_bwd_ns": 2000.0,
+                "batched_bwd_ns": 1600.0,
+            }
+        ],
+        "sharded": [
+            {
+                "n": 256,
+                "shards": 4,
+                "single_fwd_ns": 1000.0,
+                "sharded_fwd_ns": 1100.0,
+                "single_bwd_ns": 2000.0,
+                "sharded_bwd_ns": 2200.0,
+            }
+        ],
+        "sparse": [
+            {
+                "n": 256,
+                "pattern": "banded",
+                "density": 0.25,
+                "dense_fwd_ns": 1000.0,
+                "sparse_fwd_ns": 400.0,
+                "dense_bwd_ns": 2000.0,
+                "sparse_bwd_ns": 800.0,
+            },
+            {
+                # Above the gated density: reported, never counted.
+                "n": 256,
+                "pattern": "causal",
+                "density": 0.75,
+                "dense_fwd_ns": 1000.0,
+                "sparse_fwd_ns": 5000.0,
+                "dense_bwd_ns": 2000.0,
+                "sparse_bwd_ns": 9000.0,
+            },
+        ],
+        "guardrail": [
+            {
+                "n": 256,
+                "plain_fwd_ns": 1000.0,
+                "checked_fwd_ns": 1020.0,
+                "plain_bwd_ns": 2000.0,
+                "checked_bwd_ns": 2040.0,
+            }
+        ],
+        "pool": [
+            {
+                # The smallest n: pool fwd must win outright on full runs.
+                "n": 64,
+                "scoped_fwd_ns": 1000.0,
+                "pool_fwd_ns": 700.0,
+                "scoped_bwd_ns": 2000.0,
+                "pool_bwd_ns": 1900.0,
+            },
+            {
+                "n": 1024,
+                "scoped_fwd_ns": 10000.0,
+                "pool_fwd_ns": 9800.0,
+                "scoped_bwd_ns": 20000.0,
+                "pool_bwd_ns": 19600.0,
+            },
+        ],
+    }
+
+
+class GateHarness(unittest.TestCase):
+    """Run check_bench.main() against a temp JSON doc, capture verdicts."""
+
+    def run_gate(self, doc):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False
+        ) as f:
+            json.dump(doc, f)
+            path = f.name
+        try:
+            return self.run_gate_on_path(path)
+        finally:
+            os.unlink(path)
+
+    def run_gate_on_path(self, path):
+        argv, out = sys.argv, io.StringIO()
+        sys.argv = ["check_bench.py", path]
+        try:
+            with contextlib.redirect_stdout(out):
+                code = check_bench.main()
+        finally:
+            sys.argv = argv
+        return code, out.getvalue()
+
+    def run_load(self, path):
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            with self.assertRaises(SystemExit) as ctx:
+                check_bench.load_bench(path)
+        self.assertEqual(ctx.exception.code, 1)
+        return out.getvalue()
+
+
+class TestDiagnoses(GateHarness):
+    """load_bench turns every malformed input into a one-line diagnosis."""
+
+    def test_missing_file_names_the_bench_step(self):
+        out = self.run_load("/nonexistent/BENCH_attn.json")
+        self.assertIn("PERF GATE ERROR", out)
+        self.assertIn("cargo bench hotpath_microbench", out)
+
+    def test_empty_file_points_at_interrupted_write(self):
+        with tempfile.NamedTemporaryFile("w", delete=False) as f:
+            path = f.name
+        try:
+            out = self.run_load(path)
+        finally:
+            os.unlink(path)
+        self.assertIn("PERF GATE ERROR", out)
+        self.assertIn("empty", out)
+
+    def test_invalid_json_reports_line_and_column(self):
+        with tempfile.NamedTemporaryFile("w", delete=False) as f:
+            f.write('{"workers": 5, "results": [')
+            path = f.name
+        try:
+            out = self.run_load(path)
+        finally:
+            os.unlink(path)
+        self.assertIn("PERF GATE ERROR", out)
+        self.assertIn("not valid JSON", out)
+        self.assertIn("line 1", out)
+
+    def test_json_without_workers_header_is_not_a_bench_doc(self):
+        with tempfile.NamedTemporaryFile("w", delete=False) as f:
+            json.dump({"results": []}, f)
+            path = f.name
+        try:
+            out = self.run_load(path)
+        finally:
+            os.unlink(path)
+        self.assertIn("PERF GATE ERROR", out)
+        self.assertIn("workers", out)
+
+
+class TestThresholds(GateHarness):
+    """Full-run and smoke tolerances gate exactly where documented."""
+
+    def test_clean_doc_passes_full_and_smoke(self):
+        for smoke in (False, True):
+            code, out = self.run_gate(make_doc(smoke=smoke))
+            self.assertEqual(code, 0, out)
+            self.assertIn("perf gate passed", out)
+
+    def test_flash2_between_full_and_smoke_tol_gates_only_full_runs(self):
+        # ratio 1.10: over FLASH2_TOL (1.05), under SMOKE_FLASH2_TOL (1.15).
+        for smoke, want in ((False, 1), (True, 0)):
+            doc = make_doc(smoke=smoke)
+            doc["results"][0]["flash2_w1_ns"] = 1100.0
+            doc["results"][0][f"flash2_w{WORKERS}_ns"] = 1100.0
+            code, out = self.run_gate(doc)
+            self.assertEqual(code, want, out)
+            if want:
+                self.assertIn("flash2 fwd slower than flash", out)
+
+    def test_flash2_gate_uses_the_best_worker_count(self):
+        # w1 regresses but w5 stays fast: callers use the min, gate holds.
+        doc = make_doc()
+        doc["results"][0]["flash2_w1_ns"] = 5000.0
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 0, out)
+
+    def test_batched_smoke_tol_admits_thin_margins(self):
+        # ratio 1.3: over BATCHED_TOL (1.10), under SMOKE_BATCHED_TOL (1.5).
+        for smoke, want in ((False, 1), (True, 0)):
+            doc = make_doc(smoke=smoke)
+            doc["batched"][0]["batched_fwd_ns"] = 1300.0
+            code, out = self.run_gate(doc)
+            self.assertEqual(code, want, out)
+
+    def test_guardrail_tax_gates_at_five_percent_on_full_runs(self):
+        # ratio 1.10: over GUARDRAIL_TOL (1.05), under smoke's 1.3.
+        for smoke, want in ((False, 1), (True, 0)):
+            doc = make_doc(smoke=smoke)
+            doc["guardrail"][0]["checked_fwd_ns"] = 1100.0
+            code, out = self.run_gate(doc)
+            self.assertEqual(code, want, out)
+            if want:
+                self.assertIn("fault-plane", out)
+
+    def test_high_density_sparse_cells_are_reported_not_gated(self):
+        # The 0.75-density row in make_doc loses by 5x and never gates.
+        code, out = self.run_gate(make_doc())
+        self.assertEqual(code, 0, out)
+        self.assertIn("not gated", out)
+
+
+class TestPoolRule(GateHarness):
+    """The pool may never lose beyond noise, and must win at smallest n."""
+
+    def test_pool_must_beat_scoped_at_the_spawn_dominated_n(self):
+        # ratio 1.0 at the smallest n: inside POOL_TOL, but the
+        # must-win clause still fails full runs — and only full runs.
+        for smoke, want in ((False, 1), (True, 0)):
+            doc = make_doc(smoke=smoke)
+            doc["pool"][0]["pool_fwd_ns"] = 1000.0
+            code, out = self.run_gate(doc)
+            self.assertEqual(code, want, out)
+            if want:
+                self.assertIn("must win", out)
+
+    def test_must_win_applies_only_to_the_smallest_n(self):
+        # A tie at the large n is within tolerance and not must-win.
+        doc = make_doc()
+        doc["pool"][1]["pool_fwd_ns"] = 10000.0
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 0, out)
+
+    def test_pool_losing_beyond_noise_fails_any_n(self):
+        doc = make_doc()
+        doc["pool"][1]["pool_bwd_ns"] = 22000.0  # ratio 1.1 > 1.05
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 1, out)
+        self.assertIn("persistent pool", out)
+
+
+class TestSectionCells(GateHarness):
+    """An empty or renamed section must fail its own gate, not pass it."""
+
+    def test_missing_section_is_an_error_naming_the_section(self):
+        doc = make_doc()
+        del doc["sharded"]
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 1, out)
+        self.assertIn("PERF GATE ERROR", out)
+        self.assertIn("sharded", out)
+
+    def test_sparse_section_with_only_ungated_cells_is_empty(self):
+        # All rows above the gated density: the section parses but
+        # contributes zero gateable cells → same failure as missing.
+        doc = make_doc()
+        doc["sparse"] = [doc["sparse"][1]]
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 1, out)
+        self.assertIn("sparse", out)
+
+
+if __name__ == "__main__":
+    unittest.main()

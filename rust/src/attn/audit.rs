@@ -35,7 +35,9 @@
 
 use std::sync::Mutex;
 
+use super::exec::Exec;
 use super::faults::FaultSite;
+use crate::util::rng::SplitMix64;
 
 /// One output window a work item claims: a field tag (`"o"`, `"lse"`,
 /// `"dq"`, `"dk"`, `"dv"`), the window's base address, and its length in
@@ -158,6 +160,101 @@ pub(crate) fn check_commits(site: FaultSite, commits: &[u32]) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Schedule-space explorer
+// ---------------------------------------------------------------------
+//
+// The production pool always claims LIFO; a commit path that happens to
+// be correct only *because* of that fixed order would pass every replay
+// test above. The explorer closes that gap: it re-runs a pooled
+// workload under many distinct claim orders (`Exec::with_drain_order`)
+// and worker counts and asserts the outputs are bitwise identical and
+// the recorded fingerprints equal, fault-free and under `FaultPlan`
+// injection (a retried item re-enters the claim competition, so retry
+// requeue interleavings are explored too). Worker park/wake boundaries
+// are covered by driving the same orders through the persistent pool
+// (parked helpers) and the per-call scope mode.
+
+/// All `n!` rank tables over `n` items, in lexicographic order. Callers
+/// keep `n` small: `4! = 24` is the standard per-site budget.
+pub fn permutations(n: usize) -> Vec<Vec<usize>> {
+    fn rec(prefix: &mut Vec<usize>, rest: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if rest.is_empty() {
+            out.push(prefix.clone());
+            return;
+        }
+        for i in 0..rest.len() {
+            let x = rest.remove(i);
+            prefix.push(x);
+            rec(prefix, rest, out);
+            prefix.pop();
+            rest.insert(i, x);
+        }
+    }
+    let mut out = Vec::new();
+    let mut rest: Vec<usize> = (0..n).collect();
+    rec(&mut Vec::new(), &mut rest, &mut out);
+    out
+}
+
+/// `count` seeded adversarial rank tables over `n` items: deterministic
+/// Fisher–Yates shuffles. Pools too large to permute exhaustively get a
+/// reproducible sample of the schedule space instead.
+pub fn adversarial_orders(n: usize, count: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut ranks: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut ranks);
+            ranks
+        })
+        .collect()
+}
+
+/// Explore one pooled workload's schedule space. `work` runs the
+/// workload under the handle it is given and returns its output in a
+/// bitwise-comparable form; `base` carries everything but worker count
+/// and claim order (pool mode, fault plan, guardrail). The baseline is
+/// `base` at one worker under the production LIFO claim; every
+/// `orders × workers` candidate must reproduce its output bit for bit
+/// and record equal [`PoolRun`] fingerprints.
+///
+/// A rank table steers every pool the workload drives (ranks index by
+/// item idx; items past the table rank as themselves), so one call
+/// explores all of a workload's sites at once. Recording drains the
+/// process-global registry — callers hold their recording gate.
+pub fn explore_schedules<O, F>(
+    label: &str,
+    base: &Exec,
+    orders: &[Vec<usize>],
+    workers: &[usize],
+    work: F,
+) where
+    O: PartialEq + std::fmt::Debug,
+    F: Fn(&Exec) -> O,
+{
+    start_recording();
+    let base_out = work(&base.clone().with_workers(1));
+    let base_runs = stop_recording();
+    assert!(!base_runs.is_empty(), "explore[{label}]: workload drove no pool run");
+    for (oi, ranks) in orders.iter().enumerate() {
+        for &w in workers {
+            let exec = base.clone().with_workers(w).with_drain_order(ranks.clone());
+            start_recording();
+            let out = work(&exec);
+            let runs = stop_recording();
+            assert_eq!(
+                out, base_out,
+                "explore[{label}]: output diverged under order #{oi} {ranks:?}, w={w}"
+            );
+            assert_eq!(
+                runs, base_runs,
+                "explore[{label}]: fingerprints diverged under order #{oi} {ranks:?}, w={w}"
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,5 +310,32 @@ mod tests {
         check_and_record(FaultSite::BatchedFwd, &[item(0, 4096, 4)]);
         check_and_record(FaultSite::BatchedDq, &[item(0, 8192, 2)]);
         assert_eq!(own(stop_recording()), runs);
+    }
+
+    #[test]
+    fn permutations_enumerate_the_full_factorial() {
+        let p = permutations(4);
+        assert_eq!(p.len(), 24);
+        let unique: std::collections::BTreeSet<_> = p.iter().cloned().collect();
+        assert_eq!(unique.len(), 24, "all 4! orders distinct");
+        for ranks in &p {
+            let mut sorted = ranks.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "each order is a permutation");
+        }
+        assert_eq!(permutations(0), vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn adversarial_orders_are_seed_deterministic_permutations() {
+        let a = adversarial_orders(9, 8, 0xC0FFEE);
+        assert_eq!(a, adversarial_orders(9, 8, 0xC0FFEE), "same seed, same orders");
+        assert_eq!(a.len(), 8);
+        for ranks in &a {
+            let mut s = ranks.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..9).collect::<Vec<_>>(), "each order is a permutation");
+        }
+        assert_ne!(a, adversarial_orders(9, 8, 0xBEEF), "seed steers the sample");
     }
 }

@@ -26,9 +26,10 @@
 //! Every entry point takes the [`Exec`](super::exec::Exec) execution
 //! handle (workers + fault plan + guardrail flag) and returns the output
 //! together with the run's [`FaultReport`], or a typed [`AttnError`]
-//! after a work item exhausts its retry budget; the old
-//! `(workers, plan)`-taking `*_checked` twins survive as thin
-//! deprecated shims.
+//! after a work item exhausts its retry budget. The pre-`Exec`
+//! `(workers, plan)`-taking `*_checked` twins were removed after one
+//! deprecation cycle; build the same behaviour with
+//! `Exec::scoped(workers).with_plan(plan).validated()`.
 //!
 //! Two guarantees, both asserted by the tests below:
 //!
@@ -281,19 +282,6 @@ pub fn flash2_forward_many(
     forward_many_sited(slices, blocks, exec, hbm, FaultSite::BatchedFwd)
 }
 
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use flash2_forward_many with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-pub fn flash2_forward_many_checked(
-    slices: &[AttnSlice<'_>],
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(Vec<Flash2Output>, FaultReport), AttnError> {
-    flash2_forward_many(slices, blocks, &Exec::scoped(workers).with_plan(plan).validated(), hbm)
-}
-
 /// Site-parameterised core: the tree schedule routes its per-shard
 /// partials through here under [`FaultSite::TreePartial`].
 pub(crate) fn forward_many_sited(
@@ -495,19 +483,6 @@ pub fn flash2_backward_many(
     Ok((grads, report))
 }
 
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use flash2_backward_many with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-pub fn flash2_backward_many_checked(
-    slices: &[AttnGradSlice<'_>],
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(Vec<AttnGrads>, FaultReport), AttnError> {
-    flash2_backward_many(slices, blocks, &Exec::scoped(workers).with_plan(plan).validated(), hbm)
-}
-
 /// Check and decompose a [batch, heads, rows, d] tensor.
 fn dims4(t: &Tensor, what: &str) -> (usize, usize, usize, usize) {
     assert_eq!(t.rank(), 4, "{what} must be [batch, heads, rows, d]");
@@ -565,31 +540,6 @@ pub fn flash2_forward_batched(
     Ok((BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }, report))
 }
 
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use flash2_forward_batched with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-#[allow(clippy::too_many_arguments)]
-pub fn flash2_forward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
-    flash2_forward_batched(
-        q,
-        k,
-        v,
-        cfg,
-        blocks,
-        &Exec::scoped(workers).with_plan(plan).validated(),
-        hbm,
-    )
-}
-
 /// Batched multi-head fast backward: the gradient counterpart of
 /// [`flash2_forward_batched`], with every batch·head·block work item of
 /// each phase in one pool on `exec`. `stats` holds one logsumexp row per
@@ -643,37 +593,6 @@ pub fn flash2_backward_batched(
         dv4.data[s * n_k * d..(s + 1) * n_k * d].copy_from_slice(&g.dv.data);
     }
     Ok((AttnGrads { dq: dq4, dk: dk4, dv: dv4 }, report))
-}
-
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use flash2_backward_batched with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-#[allow(clippy::too_many_arguments)]
-pub fn flash2_backward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    dout: &Tensor,
-    stats: &BatchedAttnStats,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(AttnGrads, FaultReport), AttnError> {
-    flash2_backward_batched(
-        q,
-        k,
-        v,
-        o,
-        dout,
-        stats,
-        cfg,
-        blocks,
-        &Exec::scoped(workers).with_plan(plan).validated(),
-        hbm,
-    )
 }
 
 /// Resolve the mask for slice `s` of a [batch, heads, …] workload.
@@ -820,33 +739,6 @@ pub fn block_sparse2_forward_batched(
     }
 
     Ok((BatchedFlash2Output { o, stats: BatchedAttnStats { n, lse } }, report))
-}
-
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use block_sparse2_forward_batched with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-#[allow(clippy::too_many_arguments)]
-pub fn block_sparse2_forward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    masks: &[BlockMask],
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(BatchedFlash2Output, FaultReport), AttnError> {
-    block_sparse2_forward_batched(
-        q,
-        k,
-        v,
-        masks,
-        cfg,
-        blocks,
-        &Exec::scoped(workers).with_plan(plan).validated(),
-        hbm,
-    )
 }
 
 /// Batched multi-head fast block-sparse backward: the sparse
@@ -1030,39 +922,6 @@ pub fn block_sparse2_backward_batched(
     report.merge(&dkv_report);
 
     Ok((AttnGrads { dq: dq4, dk: dk4, dv: dv4 }, report))
-}
-
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use block_sparse2_backward_batched with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-#[allow(clippy::too_many_arguments)]
-pub fn block_sparse2_backward_batched_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    dout: &Tensor,
-    stats: &BatchedAttnStats,
-    masks: &[BlockMask],
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    workers: usize,
-    hbm: &mut Hbm,
-    plan: &FaultPlan,
-) -> Result<(AttnGrads, FaultReport), AttnError> {
-    block_sparse2_backward_batched(
-        q,
-        k,
-        v,
-        o,
-        dout,
-        stats,
-        masks,
-        cfg,
-        blocks,
-        &Exec::scoped(workers).with_plan(plan).validated(),
-        hbm,
-    )
 }
 
 #[cfg(test)]
@@ -1643,11 +1502,11 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_checked_shims_still_work() {
-        // Satellite contract: the six pre-Exec `_checked` twins survive
-        // as thin shims with identical behaviour (per-call scope + plan +
-        // guardrail), so out-of-tree callers migrate gradually.
+    fn scoped_guarded_entries_match_persistent_pool() {
+        // Migration contract for the removed pre-Exec `_checked` shims:
+        // the canonical entries under a per-call scoped, guarded handle
+        // (`Exec::scoped(w).with_plan(plan).validated()`) are bitwise
+        // identical to the persistent-pool handle on the same inputs.
         let mut rng = SplitMix64::new(47);
         let (b, h, n, d) = (1usize, 2usize, 16usize, 4usize);
         let q = rand4(&[b, h, n, d], &mut rng);
@@ -1657,30 +1516,29 @@ mod tests {
         let cfg = AttnConfig::new().causal();
         let blocks = Blocks::explicit(4, 4);
         let plan = FaultPlan::none();
-        let exec = Exec::scoped(2);
-        let (fwd, _) = flash2_forward_batched_checked(
-            &q, &k, &v, &cfg, blocks, 2, &mut Hbm::new(), &plan,
-        )
-        .unwrap();
+        let guarded = Exec::scoped(2).with_plan(&plan).validated();
+        let pool = Exec::new(2);
+        let (fwd, _) =
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &guarded, &mut Hbm::new()).unwrap();
         let (canon, _) =
-            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut Hbm::new()).unwrap();
+            flash2_forward_batched(&q, &k, &v, &cfg, blocks, &pool, &mut Hbm::new()).unwrap();
         assert_eq!(fwd.o.data, canon.o.data);
-        let (g, _) = flash2_backward_batched_checked(
-            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, 2, &mut Hbm::new(), &plan,
+        let (g, _) = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &guarded, &mut Hbm::new(),
         )
         .unwrap();
         let (gc, _) = flash2_backward_batched(
-            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &exec, &mut Hbm::new(),
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, &pool, &mut Hbm::new(),
         )
         .unwrap();
         assert_eq!(g.dq.data, gc.dq.data);
         let masks = vec![BlockMask::butterfly(4, 4)];
-        let (sf, _) = block_sparse2_forward_batched_checked(
-            &q, &k, &v, &masks, &cfg, blocks, 2, &mut Hbm::new(), &plan,
+        let (sf, _) = block_sparse2_forward_batched(
+            &q, &k, &v, &masks, &cfg, blocks, &guarded, &mut Hbm::new(),
         )
         .unwrap();
-        let (sg, _) = block_sparse2_backward_batched_checked(
-            &q, &k, &v, &sf.o, &dout, &sf.stats, &masks, &cfg, blocks, 2, &mut Hbm::new(), &plan,
+        let (sg, _) = block_sparse2_backward_batched(
+            &q, &k, &v, &sf.o, &dout, &sf.stats, &masks, &cfg, blocks, &guarded, &mut Hbm::new(),
         )
         .unwrap();
         assert_eq!(sf.o.shape, vec![b, h, n, d]);

@@ -317,31 +317,6 @@ pub fn flash_forward_sharded(
     Ok((AttnOutput { o, l, m: lse }, report))
 }
 
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use flash_forward_sharded with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-#[allow(clippy::too_many_arguments)]
-pub fn flash_forward_sharded_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-) -> Result<(AttnOutput, FaultReport), AttnError> {
-    flash_forward_sharded(
-        q,
-        k,
-        v,
-        cfg,
-        blocks,
-        shards,
-        &Exec::scoped(workers).with_plan(plan).validated(),
-    )
-}
-
 /// Sequence-parallel fast backward, ring schedule — the gradient
 /// counterpart of [`flash_forward_sharded`], bitwise identical to
 /// [`super::flash2::flash2_backward`] for any shard count, worker
@@ -373,37 +348,6 @@ pub fn flash_backward_sharded(
     exec: &Exec,
 ) -> Result<(AttnGrads, FaultReport), AttnError> {
     backward_sharded_core(q, k, v, o, dout, stats, cfg, blocks, shards, exec)
-}
-
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use flash_backward_sharded with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-#[allow(clippy::too_many_arguments)]
-pub fn flash_backward_sharded_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    o: &Tensor,
-    dout: &Tensor,
-    stats: AttnStats<'_>,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-) -> Result<(AttnGrads, FaultReport), AttnError> {
-    flash_backward_sharded(
-        q,
-        k,
-        v,
-        o,
-        dout,
-        stats,
-        cfg,
-        blocks,
-        shards,
-        &Exec::scoped(workers).with_plan(plan).validated(),
-    )
 }
 
 /// One (shard, column block) dK/dV work item in the ring backward pool.
@@ -651,28 +595,6 @@ pub fn shard_partials(
     Ok((partials.into_iter().map(|p| p.into_attn_output()).collect(), report))
 }
 
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use shard_partials with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan).validated())")]
-#[allow(clippy::too_many_arguments)]
-pub fn shard_partials_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-    validate: bool,
-) -> Result<(Vec<AttnOutput>, FaultReport), AttnError> {
-    let mut exec = Exec::scoped(workers).with_plan(plan);
-    if validate {
-        exec = exec.validated();
-    }
-    shard_partials(q, k, v, cfg, blocks, shards, &exec)
-}
-
 /// Tree schedule, step 2: reduce the shard partials with
 /// [`merge_partials`] (here in shard order; any order is exact — the
 /// associativity property tests below). Exact to fp rounding against
@@ -699,23 +621,6 @@ pub fn flash_forward_sharded_tree(
         .reduce(|a, b| merge_partials(&a, &b))
         .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()));
     Ok((out, report))
-}
-
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use flash_forward_sharded_tree with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan))")]
-#[allow(clippy::too_many_arguments)]
-pub fn flash_forward_sharded_tree_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-) -> Result<(AttnOutput, FaultReport), AttnError> {
-    flash_forward_sharded_tree(q, k, v, cfg, blocks, shards, &Exec::scoped(workers).with_plan(plan))
 }
 
 /// Tree schedule over a **block-sparse** workload: one softmax partial
@@ -886,33 +791,6 @@ pub fn block_sparse_forward_sharded_tree(
         .reduce(|a, b| merge_partials(&a, &b))
         .unwrap_or_else(|| all_masked_output(q.rows(), q.cols()));
     Ok((out, report))
-}
-
-/// Deprecated shim for the pre-`Exec` guarded form.
-#[deprecated(note = "use block_sparse_forward_sharded_tree with an Exec handle \
-                     (Exec::scoped(workers).with_plan(plan))")]
-#[allow(clippy::too_many_arguments)]
-pub fn block_sparse_forward_sharded_tree_checked(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    mask: &BlockMask,
-    cfg: &AttnConfig,
-    blocks: Blocks,
-    shards: usize,
-    workers: usize,
-    plan: &FaultPlan,
-) -> Result<(AttnOutput, FaultReport), AttnError> {
-    block_sparse_forward_sharded_tree(
-        q,
-        k,
-        v,
-        mask,
-        cfg,
-        blocks,
-        shards,
-        &Exec::scoped(workers).with_plan(plan),
-    )
 }
 
 /// IO model for W-way sequence-parallel flash (Appendix D.1): per-device

@@ -208,6 +208,8 @@ struct RunJob<T, F> {
     plan: FaultPlan,
     site: FaultSite,
     validate: bool,
+    #[cfg(feature = "audit")]
+    order: DrainOrder,
 }
 
 impl<T, F> RunJob<T, F>
@@ -223,6 +225,39 @@ where
         self.state.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
+    /// Claim the next queued item under the run lock. Plain builds pop
+    /// LIFO, unconditionally — this is the production claim policy and
+    /// the only one that ships. The audit feature can override it with a
+    /// rank table so the schedule explorer steers the claim sequence
+    /// through arbitrary permutations (claims serialize under the run
+    /// lock, so the rank order fully determines the claim order among
+    /// the items queued at each instant; a retried item re-enters the
+    /// competition under its original rank).
+    #[cfg(not(feature = "audit"))]
+    fn claim(&self, st: &mut RunCore<T>) -> Option<Tracked<T>> {
+        st.queue.pop()
+    }
+
+    #[cfg(feature = "audit")]
+    fn claim(&self, st: &mut RunCore<T>) -> Option<Tracked<T>> {
+        match &self.order {
+            DrainOrder::Lifo => st.queue.pop(),
+            DrainOrder::Ranked(ranks) => {
+                // O(queue) scan — audit-only, never on the shipping
+                // path. The (rank, idx) key is unique per queued item
+                // (an item is queued at most once), so the choice is
+                // total and tie-free.
+                let pos = st
+                    .queue
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, t)| (ranks.get(t.idx).copied().unwrap_or(t.idx), t.idx))
+                    .map(|(i, _)| i)?;
+                Some(st.queue.remove(pos))
+            }
+        }
+    }
+
     /// The fault-tolerant drain loop behind every batched and sharded
     /// schedule (semantics: see `attn::faults` and the module docs).
     /// Claims items LIFO, runs them under `catch_unwind`, and commits or
@@ -235,7 +270,7 @@ where
                 if st.error.is_some() {
                     break None;
                 }
-                if let Some(t) = st.queue.pop() {
+                if let Some(t) = self.claim(&mut st) {
                     break Some(t);
                 }
                 if st.in_flight == 0 {
@@ -387,6 +422,27 @@ where
 // The Exec handle
 // ---------------------------------------------------------------------
 
+/// Audit-only claim-order override for the schedule-space explorer.
+///
+/// The production pool claims items LIFO; that fixed order could hide a
+/// commit path that is only correct *because* of the order. Under the
+/// `audit` feature the explorer re-runs a pool site under many distinct
+/// rank tables (exhaustive permutations for small item counts, seeded
+/// adversarial shuffles for large ones) and asserts bitwise-identical
+/// outputs and identical item→slot fingerprints for every one of them.
+/// Zero cost when the feature is off: the field and the ranked claim
+/// scan are compiled out.
+#[cfg(feature = "audit")]
+#[derive(Clone, Debug, Default)]
+pub enum DrainOrder {
+    /// The production policy: claim the most recently queued item.
+    #[default]
+    Lifo,
+    /// Claim the queued item with the smallest rank (`ranks[item_idx]`);
+    /// items beyond the table rank as their own index.
+    Ranked(Arc<Vec<usize>>),
+}
+
 /// The execution policy every attention entry point runs under: worker
 /// count, fault plan, finiteness-guardrail flag, and pool mode. Cheap to
 /// clone; see the module docs for the mode semantics.
@@ -396,6 +452,8 @@ pub struct Exec {
     plan: FaultPlan,
     validate: bool,
     scoped: bool,
+    #[cfg(feature = "audit")]
+    order: DrainOrder,
 }
 
 impl Exec {
@@ -403,7 +461,14 @@ impl Exec {
     /// call (the calling thread plus `workers - 1` parked pool threads),
     /// no fault injection, guardrail off. The production default.
     pub fn new(workers: usize) -> Exec {
-        Exec { workers, plan: FaultPlan::none(), validate: false, scoped: false }
+        Exec {
+            workers,
+            plan: FaultPlan::none(),
+            validate: false,
+            scoped: false,
+            #[cfg(feature = "audit")]
+            order: DrainOrder::Lifo,
+        }
     }
 
     /// Per-call `std::thread::scope` execution: `workers` threads
@@ -426,6 +491,21 @@ impl Exec {
     /// contained panic.
     pub fn validated(mut self) -> Exec {
         self.validate = true;
+        self
+    }
+
+    /// Same policy, different worker count — the pool-growth grids sweep
+    /// worker counts over one configured handle with this.
+    pub fn with_workers(mut self, workers: usize) -> Exec {
+        self.workers = workers;
+        self
+    }
+
+    /// Audit-only: steer the claim sequence through `ranks` (see
+    /// [`DrainOrder`]). The schedule explorer is the sole caller.
+    #[cfg(feature = "audit")]
+    pub fn with_drain_order(mut self, ranks: Vec<usize>) -> Exec {
+        self.order = DrainOrder::Ranked(Arc::new(ranks));
         self
     }
 
@@ -510,6 +590,8 @@ impl Exec {
             plan: self.plan.clone(),
             site,
             validate: self.validate,
+            #[cfg(feature = "audit")]
+            order: self.order.clone(),
         });
         if self.scoped {
             run_scoped(&job, w);

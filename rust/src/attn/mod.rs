@@ -155,9 +155,10 @@
 //!   reason ([`faults::AttnError::ShardConfig`]) instead of silently
 //!   substituting an all-masked output. Dead shards (wholly beyond
 //!   `kv_len`, wholly above the causal diagonal, or all-zero in the
-//!   sparse mask) are classified in `FaultReport::dead_shards`. The old
-//!   `_checked` twins survive only as `#[deprecated]` shims delegating
-//!   to the canonical names via `Exec::scoped`. The per-slice fast
+//!   sparse mask) are classified in `FaultReport::dead_shards`. The
+//!   pre-`Exec` `_checked` twins are gone; per-call guarded execution
+//!   is spelled `Exec::scoped(w).with_plan(plan).validated()`. The
+//!   per-slice fast
 //!   sparse pair keeps its infallible signature: its pool still
 //!   contains panics and retries, and only after the budget is
 //!   exhausted does it panic — with the typed error's message.
@@ -182,7 +183,8 @@
 //! # Invariant catalog (machine-checked)
 //!
 //! The determinism and IO guarantees above are enforced by `cargo run -p
-//! lint` (a token-level scanner over `rust/src`, blocking in CI) as four
+//! lint` (a token-level scanner plus a semantic call-graph pass over
+//! `rust/src`, `rust/tests` and `examples/`, blocking in CI) as seven
 //! named rules, plus a runtime auditor. A violation is an error listing
 //! file:line and a fix hint; the only escape hatch is an explicit
 //! `// lint::allow(Rn, reason)` comment pragma on (or directly above)
@@ -196,9 +198,10 @@
 //!   construction. (The per-slice `flash2` reference kernels keep their
 //!   historical scopes under pragmas — they are the oracle the pool is
 //!   bitwise-tested against.)
-//! * **R2 — determinism hazards.** Inside `attn/`, `sim/` and
-//!   `runtime/`: no `HashMap`/`HashSet` (iteration order), no
-//!   `Instant::now`/`SystemTime` (wall clock), no
+//! * **R2 — determinism hazards.** Inside `attn/`, `sim/`, `runtime/`,
+//!   and everywhere in `rust/tests/` and `examples/` (a nondeterministic
+//!   harness can mask a determinism regression): no `HashMap`/`HashSet`
+//!   (iteration order), no `Instant::now`/`SystemTime` (wall clock), no
 //!   `std::thread::current`/`ThreadId` (thread-identity-dependent
 //!   branching). Built-in allowlist: `runtime/exec.rs`'s compile cache
 //!   and compile-time metric, which never touch kernel numerics.
@@ -207,12 +210,58 @@
 //! * **R4 — coverage cross-reference.** Every `pub fn *_forward*` /
 //!   `*_backward*` in [`flash2`], [`batched`], [`block_sparse`] and
 //!   [`distributed`] must be exercised by name in the IO-exactness wall
-//!   (`rust/tests/io_complexity.rs`, against a `sim::cost` form);
-//!   batched/sharded entries must take an `Exec` handle — a bare
-//!   `workers: usize` parameter on a public fwd/bwd entry is a finding;
-//!   and every [`faults::FaultSite`] variant must be injected somewhere
-//!   in `rust/tests/chaos.rs`. New hot paths cannot silently skip the
-//!   test walls.
+//!   (`rust/tests/io_complexity.rs`, against a `sim::cost` form), and
+//!   every [`faults::FaultSite`] variant must be injected somewhere in
+//!   `rust/tests/chaos.rs`. New hot paths cannot silently skip the test
+//!   walls.
+//! * **R5 — counted-access discipline.** Inside the kernel files
+//!   ([`flash`], [`flash2`], [`standard`], [`block_sparse`]), any
+//!   function that handles the `sim::Hbm` meter may touch the role-named
+//!   HBM buffers (q/k/v/o/dout/lse/dq/dk/dv and their `*_win`-style
+//!   windows) only through the sanctioned counted accessors (the
+//!   `stream_kv*` loaders, the `*_sweep` drivers, `write_epilogue` and
+//!   the top-level entries). Raw `buf[i]` indexing and
+//!   `chunks`/`chunks_mut` carves of a role buffer are findings —
+//!   untouched bytes the cost model never saw. Post-run stitches that
+//!   immediately `copy_from_slice`/`extend_from_slice` are exempt (the
+//!   traffic was counted when the window was produced).
+//! * **R6 — reachability routing.** A call-graph check (replacing R4's
+//!   old parameter-list heuristic): batched/sharded `pub` fwd/bwd
+//!   entries must take an [`Exec`] handle; every Exec-carrying `pub`
+//!   fwd/bwd entry in the hot modules must reach the pool sink
+//!   (`Exec::run`) through a chain of Exec-carrying calls; and any
+//!   fwd/bwd entry reachable from the serving/training roots
+//!   (`Server`/`LmTrainer`/`ClsTrainer`/`run_task`) without an `Exec`
+//!   is a finding. (The per-slice `flash2` oracles carry R6 pragmas:
+//!   they take the handle for its worker count but run their own
+//!   scoped threads by design.)
+//! * **R7 — exactly-once-commit shape.** For every
+//!   `faults::PoolItem` impl, `reset`, `poison` and `check_finite`
+//!   must touch exactly the window fields its `claims()` manifests —
+//!   a forgotten window survives retries stale and dodges the
+//!   guardrail scan. And at every pool run site whose closure names an
+//!   item type, each claimed window must be stitched back into its
+//!   output exactly once (`copy_from_slice` cross-reference): zero
+//!   commits lose the work, two clobber it.
+//!
+//! R1–R4 are token-level (`lint/src/lib.rs`); R5–R7 ride the
+//! per-function models and call graph in `lint/src/semantic.rs`. Every
+//! rule ships must-flag and must-pass fixtures (`lint/fixtures/`) so
+//! the rules themselves cannot silently rot.
+//!
+//! **Adding a new kernel or pool site** (the recipe the rules encode):
+//! take `exec: &Exec` on the public entry and hand it down to
+//! `Exec::run` (R6); touch HBM role buffers only through a counted
+//! accessor — if the kernel needs a new access pattern, write a
+//! counting helper next to the `*_sweep`s and add it to the sanctioned
+//! list in `lint/src/semantic.rs` with a test (R5); give the work item
+//! a `claims()` manifest agreeing with `reset`/`poison`/`check_finite`
+//! and stitch each claimed window exactly once after the run (R7);
+//! name the entry in `rust/tests/io_complexity.rs` and inject its
+//! `FaultSite` in `rust/tests/chaos.rs` (R4). A pragma is the escape
+//! hatch of last resort: it must name the rule and carry a reason, an
+//! unused pragma is itself a finding, and the reviewer bar is "the
+//! rule is wrong here", not "the rule is inconvenient here".
 //!
 //! **Audit contract** (`--features audit`, see `attn::audit`): every
 //! pool run checks that work items claim pairwise-disjoint output
@@ -220,7 +269,14 @@
 //! fingerprint is identical across worker and shard counts, and that
 //! every item commits exactly once on success — "workers race for
 //! items, never for output" as a checked property, compiled out of the
-//! plain build entirely.
+//! plain build entirely. On top of that sits the schedule-space race
+//! explorer (`audit::explore_schedules`): it re-runs a pool site under
+//! many distinct drain orders — exhaustively over all permutations for
+//! small item counts, seeded-adversarial (reversals, interleavings,
+//! worst-case rank shuffles) for large — across worker counts and
+//! under fault injection, asserting bitwise-identical outputs and
+//! identical commit fingerprints for every schedule. R5–R7 prove the
+//! shape statically; the explorer runs the schedules the shape admits.
 //!
 //! All functions operate on one batch*head slice `[n, d]`; callers fold the
 //! leading dims.

@@ -14,7 +14,9 @@
 
 use std::sync::Mutex;
 
-use flashattn::attn::audit::{self, ItemClaims, PoolRun, SlotClaim};
+use flashattn::attn::audit::{
+    self, adversarial_orders, explore_schedules, permutations, ItemClaims, PoolRun, SlotClaim,
+};
 use flashattn::attn::batched::{
     block_sparse2_backward_batched, block_sparse2_forward_batched, flash2_backward_batched,
     flash2_forward_batched,
@@ -23,6 +25,7 @@ use flashattn::attn::block_sparse::{block_sparse2_backward, block_sparse2_forwar
 use flashattn::attn::distributed::{
     flash_backward_sharded, flash_forward_sharded, flash_forward_sharded_tree,
 };
+use flashattn::attn::faults::{FaultKind, FaultPlan, FaultSite};
 use flashattn::attn::flash::Blocks;
 use flashattn::attn::masks::BlockMask;
 use flashattn::attn::{AttnConfig, Exec};
@@ -307,4 +310,208 @@ fn overlapping_claims_are_rejected_with_provenance() {
     let a = ItemClaims { idx: 0, id: (0, 0), claims: vec![SlotClaim::of("o", lo)] };
     let b = ItemClaims { idx: 1, id: (0, 1), claims: vec![SlotClaim::of("o", hi)] };
     assert!(audit::check_disjoint(&[a, b]).is_ok());
+}
+
+// ---------------------------------------------------------------------
+// Schedule-space explorer: the fixed LIFO drain can no longer hide
+// order-dependent nondeterminism. Each wall below replays one pooled
+// workload across >= 24 distinct claim orders x workers {1, 2, 5},
+// fault-free and under FaultPlan injection, asserting bitwise-identical
+// outputs and identical fingerprints every time (audit::explore_schedules
+// panics on the first divergence).
+// ---------------------------------------------------------------------
+
+#[test]
+fn explorer_batched_schedules_are_claim_order_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // One slice, four row blocks and four column blocks: every batched
+    // pool (BatchedFwd, BatchedDq, BatchedDkv) has exactly 4 items, so
+    // permutations(4) explores each site's claim space exhaustively.
+    let (b, h, n, d) = (1usize, 1usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0xE0_1);
+    let k = rand(&[b, h, n, d], 0xE0_2);
+    let v = rand(&[b, h, n, d], 0xE0_3);
+    let dout = rand(&[b, h, n, d], 0xE0_4);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new())
+        .expect("fault-free")
+        .0;
+    let work = |exec: &Exec| {
+        let mut hbm = Hbm::new();
+        let f = flash2_forward_batched(&q, &k, &v, &cfg, blocks, exec, &mut hbm)
+            .expect("recovers")
+            .0;
+        let g = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, exec, &mut hbm,
+        )
+        .expect("recovers")
+        .0;
+        (f.o.data, f.stats.lse, g.dq.data, g.dk.data, g.dv.data, hbm.accesses())
+    };
+    let orders = permutations(4);
+    assert!(orders.len() >= 24);
+    let workers = [1usize, 2, 5];
+
+    explore_schedules("batched/fault-free", &Exec::new(1), &orders, &workers, work);
+    // Same orders through the per-call scope mode: spawn/join boundaries
+    // instead of park/wake boundaries.
+    explore_schedules("batched/scoped", &Exec::scoped(1), &orders, &workers, work);
+    // Retry requeues re-enter the claim competition: panic, dropped
+    // merge, and poison-then-guardrail retries at fixed (item, attempt)
+    // coordinates must not open an order-dependent window.
+    let plan = FaultPlan::none()
+        .with(FaultSite::BatchedFwd, 1, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::BatchedFwd, 2, 0, FaultKind::DroppedMerge)
+        .with(FaultSite::BatchedDq, 0, 0, FaultKind::PoisonedPartial)
+        .with(FaultSite::BatchedDkv, 3, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::BatchedDkv, 3, 1, FaultKind::PoisonedPartial);
+    let faulted = Exec::new(1).with_plan(&plan).validated();
+    explore_schedules("batched/faulted", &faulted, &orders, &workers, work);
+}
+
+#[test]
+fn explorer_sparse_schedules_are_claim_order_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (n, d) = (32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let (t_r, t_c) = (n / blocks.b_r, n / blocks.b_c);
+    let q = rand(&[n, d], 0xE1_1);
+    let k = rand(&[n, d], 0xE1_2);
+    let v = rand(&[n, d], 0xE1_3);
+    let dout = rand(&[n, d], 0xE1_4);
+    let mut mask = BlockMask::dense(t_r, t_c);
+    mask.set(0, 2, false);
+    mask.set(3, 1, false);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let fwd =
+        block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, &Exec::new(1), &mut Hbm::new());
+    let work = |exec: &Exec| {
+        let mut hbm = Hbm::new();
+        let f = block_sparse2_forward(&q, &k, &v, &mask, &cfg, blocks, exec, &mut hbm);
+        let g = block_sparse2_backward(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &mask, &cfg, blocks, exec, &mut hbm,
+        );
+        (f.o.data, f.lse, g.dq.data, g.dk.data, g.dv.data, hbm.accesses())
+    };
+    let orders = permutations(4);
+    let workers = [1usize, 2, 5];
+
+    explore_schedules("sparse/fault-free", &Exec::new(1), &orders, &workers, work);
+    let plan = FaultPlan::none()
+        .with(FaultSite::SparseFwd, 2, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::SparseDq, 1, 0, FaultKind::PoisonedPartial)
+        .with(FaultSite::SparseDkv, 0, 0, FaultKind::DroppedMerge);
+    let faulted = Exec::new(1).with_plan(&plan).validated();
+    explore_schedules("sparse/faulted", &faulted, &orders, &workers, work);
+}
+
+#[test]
+fn explorer_ring_and_tree_schedules_are_claim_order_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let (n, d, shards) = (32usize, 8usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0xE2_1);
+    let k = rand(&[n, d], 0xE2_2);
+    let v = rand(&[n, d], 0xE2_3);
+    let dout = rand(&[n, d], 0xE2_4);
+    let cfg = AttnConfig { causal: true, ..Default::default() };
+    let tree_cfg = AttnConfig::default();
+    let fwd = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, &Exec::new(1))
+        .expect("fault-free")
+        .0;
+    let work = |exec: &Exec| {
+        let (f, _) = flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, exec)
+            .expect("recovers");
+        let (g, _) = flash_backward_sharded(
+            &q, &k, &v, &fwd.o, &dout, fwd.stats(), &cfg, blocks, shards, exec,
+        )
+        .expect("recovers");
+        let (t, _) = flash_forward_sharded_tree(&q, &k, &v, &tree_cfg, blocks, shards, exec)
+            .expect("recovers");
+        (f.o.data, g.dq.data, g.dk.data, g.dv.data, t.o.data)
+    };
+    let orders = permutations(4);
+    let workers = [1usize, 2, 5];
+
+    explore_schedules("ring+tree/fault-free", &Exec::new(1), &orders, &workers, work);
+    let plan = FaultPlan::none()
+        .with(FaultSite::RingFwd, 0, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::RingDq, 2, 0, FaultKind::PoisonedPartial)
+        .with(FaultSite::RingDkv, 1, 0, FaultKind::DroppedMerge)
+        .with(FaultSite::TreePartial, 1, 0, FaultKind::WorkerPanic);
+    let faulted = Exec::new(1).with_plan(&plan).validated();
+    explore_schedules("ring+tree/faulted", &faulted, &orders, &workers, work);
+}
+
+#[test]
+fn explorer_adversarial_orders_on_a_large_pool() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // 2*2 slices x 4 row blocks = 16 forward items: far past exhaustive
+    // range, so sample the schedule space with seeded shuffles instead.
+    // The smoke budget is bounded; the release audit-explore CI job
+    // raises it through EXPLORE_ADVERSARIAL.
+    let budget: usize = std::env::var("EXPLORE_ADVERSARIAL")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let (b, h, n, d) = (2usize, 2usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0xE3_1);
+    let k = rand(&[b, h, n, d], 0xE3_2);
+    let v = rand(&[b, h, n, d], 0xE3_3);
+    let dout = rand(&[b, h, n, d], 0xE3_4);
+    let cfg = AttnConfig::default();
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new())
+        .expect("fault-free")
+        .0;
+    let work = |exec: &Exec| {
+        let mut hbm = Hbm::new();
+        let f = flash2_forward_batched(&q, &k, &v, &cfg, blocks, exec, &mut hbm)
+            .expect("recovers")
+            .0;
+        let g = flash2_backward_batched(
+            &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, exec, &mut hbm,
+        )
+        .expect("recovers")
+        .0;
+        (f.o.data, g.dq.data, g.dk.data, g.dv.data, hbm.accesses())
+    };
+    let orders = adversarial_orders(16, budget, 0x5EED_06D);
+    let workers = [1usize, 2, 5];
+    explore_schedules("batched/adversarial", &Exec::new(1), &orders, &workers, work);
+    let plan =
+        FaultPlan::seeded(0xC4A05, 0.2, &[FaultKind::WorkerPanic, FaultKind::PoisonedPartial]);
+    let faulted = Exec::new(1).with_plan(&plan).validated();
+    explore_schedules("batched/adversarial+seeded-faults", &faulted, &orders, &workers, work);
+}
+
+#[test]
+fn growth_grid_fingerprints_are_worker_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // The audit half of the pool-growth grid (rust/tests/pool_growth.rs
+    // proves outputs): demanding ever-larger worker counts from one
+    // handle grows the shared pool lazily, and the recorded item->slot
+    // fingerprints must never move while it grows - or shrink back when
+    // a later call asks for fewer workers.
+    let (b, h, n, d) = (2usize, 2usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0xE4_1);
+    let k = rand(&[b, h, n, d], 0xE4_2);
+    let v = rand(&[b, h, n, d], 0xE4_3);
+    let cfg = AttnConfig::default();
+    let handle = Exec::new(1);
+    let mut baseline: Option<Vec<PoolRun>> = None;
+    for &w in &[1usize, 2, 5, 9, 16, 5, 1] {
+        let exec = handle.clone().with_workers(w);
+        let runs = record(|| {
+            let mut hbm = Hbm::new();
+            let _ = flash2_forward_batched(&q, &k, &v, &cfg, blocks, &exec, &mut hbm);
+        });
+        assert_eq!(runs.len(), 1, "w={w}");
+        match &baseline {
+            None => baseline = Some(runs),
+            Some(base) => assert_eq!(&runs, base, "fingerprints drifted while growing to w={w}"),
+        }
+    }
 }

@@ -1,0 +1,116 @@
+//! Pool-growth wall: the shared worker pool grows lazily — a thread is
+//! spawned only when a run asks for more concurrency than there are
+//! parked workers (up to the 256-thread cap), and the pool never
+//! shrinks. These grids prove the growth path is invisible to the
+//! numerics: sweeping one handle's worker count up, down, and back up
+//! again (so calls land on a cold pool, a growing pool, and an
+//! over-provisioned pool) always reproduces the single-worker output
+//! and modeled traffic bit for bit. The caller-assist `w = 1` path —
+//! which never touches the shared pool at all — is pinned against the
+//! per-call scoped oracle separately. The audit half of this grid
+//! (item→slot fingerprints across the same growth sweep) lives in
+//! `rust/tests/audit.rs::growth_grid_fingerprints_are_worker_count_invariant`.
+
+use flashattn::attn::batched::{flash2_backward_batched, flash2_forward_batched};
+use flashattn::attn::distributed::flash_forward_sharded;
+use flashattn::attn::flash::Blocks;
+use flashattn::attn::{AttnConfig, Exec};
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+
+fn rand(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = SplitMix64::new(seed);
+    Tensor::randn(shape, &mut rng, 1.0)
+}
+
+/// One batched forward + backward pass: outputs and aggregate traffic.
+fn batched_pass(exec: &Exec) -> (Vec<Vec<f32>>, u64) {
+    let (b, h, n, d) = (2usize, 2usize, 64usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[b, h, n, d], 0x60_1);
+    let k = rand(&[b, h, n, d], 0x60_2);
+    let v = rand(&[b, h, n, d], 0x60_3);
+    let dout = rand(&[b, h, n, d], 0x60_4);
+    let cfg = AttnConfig::new().causal();
+    let mut hbm = Hbm::new();
+    let fwd = flash2_forward_batched(&q, &k, &v, &cfg, blocks, exec, &mut hbm)
+        .expect("fault-free")
+        .0;
+    let g = flash2_backward_batched(
+        &q, &k, &v, &fwd.o, &dout, &fwd.stats, &cfg, blocks, exec, &mut hbm,
+    )
+    .expect("fault-free")
+    .0;
+    (
+        vec![fwd.o.data, fwd.stats.lse, g.dq.data, g.dk.data, g.dv.data],
+        hbm.accesses(),
+    )
+}
+
+#[test]
+fn growth_sweep_never_changes_outputs_or_traffic() {
+    // 2·2 slices × 8 row blocks = 32 items, so worker counts up to 32
+    // all get real concurrency. The sweep deliberately rises, falls,
+    // and rises again: the pool only ever grows, so later small-w calls
+    // run on an over-provisioned pool and later large-w calls force
+    // fresh spawns mid-stream. None of it may show in the results.
+    let base = batched_pass(&Exec::new(1));
+    for &w in &[1usize, 2, 3, 5, 8, 13, 21, 32, 16, 4, 1, 32] {
+        assert_eq!(batched_pass(&Exec::new(w)), base, "fresh handle w={w}");
+    }
+    // The same sweep through one long-lived handle (with_workers), so
+    // parked workers from earlier calls serve later ones.
+    let handle = Exec::new(1);
+    for &w in &[1usize, 5, 32, 2, 21, 1] {
+        assert_eq!(batched_pass(&handle.clone().with_workers(w)), base, "reused handle w={w}");
+    }
+}
+
+#[test]
+fn caller_assist_w1_matches_the_scoped_oracle() {
+    // workers = 1 never touches the shared pool: the calling thread
+    // drains everything itself. That path must be bitwise identical to
+    // the per-call scoped oracle at w = 1 — and stay that way after the
+    // shared pool has been grown by unrelated larger runs.
+    let scoped = batched_pass(&Exec::scoped(1));
+    assert_eq!(batched_pass(&Exec::new(1)), scoped, "cold caller-assist path");
+    let _ = batched_pass(&Exec::new(16));
+    assert_eq!(batched_pass(&Exec::new(1)), scoped, "caller-assist after pool growth");
+}
+
+#[test]
+fn oversubscribed_workers_are_clamped_to_items() {
+    // Asking for far more workers than items (and more than the pool
+    // cap) must neither deadlock nor perturb results: w clamps to the
+    // item count, and helpers past the cap queue behind parked threads.
+    let base = batched_pass(&Exec::new(1));
+    for &w in &[33usize, 64, 257, 10_000] {
+        assert_eq!(batched_pass(&Exec::new(w)), base, "oversubscribed w={w}");
+    }
+}
+
+#[test]
+fn growth_is_schedule_agnostic() {
+    // Interleave a second schedule (ring-sharded forward) with the
+    // batched growth sweep: workers parked by one schedule serve the
+    // other, at every pool size along the way.
+    let (n, d, shards) = (64usize, 8usize, 2usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0x61_1);
+    let k = rand(&[n, d], 0x61_2);
+    let v = rand(&[n, d], 0x61_3);
+    let cfg = AttnConfig::new().causal();
+    let ring = |exec: &Exec| {
+        let (out, _) =
+            flash_forward_sharded(&q, &k, &v, &cfg, blocks, shards, exec).expect("fault-free");
+        (out.o.data, out.l, out.m)
+    };
+    let batched_base = batched_pass(&Exec::new(1));
+    let ring_base = ring(&Exec::new(1));
+    for &w in &[2usize, 7, 24, 3, 32] {
+        let exec = Exec::new(w);
+        assert_eq!(ring(&exec), ring_base, "ring w={w}");
+        assert_eq!(batched_pass(&exec), batched_base, "batched w={w}");
+    }
+}
