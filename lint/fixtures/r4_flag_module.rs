@@ -1,5 +1,5 @@
 // R4 must-flag module (treated as attn/batched.rs): a public forward
-// entry with no IO-exactness coverage. (Signature/routing discipline
+// entry (and a decode entry) with no IO-exactness coverage. (Signature/routing discipline
 // moved to R6 — see the r6_* fixtures.)
 pub fn widget_forward(q: &Tensor, workers: usize, hbm: &mut Hbm) -> Tensor {
     let _ = (workers, hbm);
@@ -8,5 +8,10 @@ pub fn widget_forward(q: &Tensor, workers: usize, hbm: &mut Hbm) -> Tensor {
 
 pub fn gadget_forward(q: &Tensor, hbm: &mut Hbm) -> Tensor {
     let _ = hbm;
+    q.clone()
+}
+
+pub fn widget_decode(q: &Tensor, exec: &Exec, hbm: &mut Hbm) -> Tensor {
+    let _ = (exec, hbm);
     q.clone()
 }

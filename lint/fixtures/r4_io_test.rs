@@ -1,9 +1,18 @@
 // R4 io-test fixture: names gadget_forward (so the pass module is
-// covered) but not widget_forward (so the flag module is not).
+// covered) but neither widget_forward nor widget_decode (so the flag
+// module is not).
 #[test]
 fn gadget_fwd_analytic_matches_instrumented_exactly() {
     let mut hbm = Hbm::new();
     let out = gadget_forward(&q, &mut hbm);
     assert_eq!(hbm.accesses(), cost::gadget_fwd(n, d).hbm_elems);
+    let _ = out;
+}
+
+#[test]
+fn gadget_decode_analytic_matches_instrumented_exactly() {
+    let mut hbm = Hbm::new();
+    let out = gadget_decode(&q, &exec, &mut hbm);
+    assert_eq!(hbm.accesses(), cost::gadget_decode(n, n_k, d).hbm_elems);
     let _ = out;
 }

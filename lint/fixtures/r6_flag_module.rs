@@ -1,12 +1,17 @@
 // R6 must-flag (treated as attn/batched.rs): a batched entry that keeps
 // a bare worker count off the Exec plane, and an Exec-carrying entry
-// whose handle never reaches the pool sink.
+// whose handle never reaches the pool sink (forward and decode alike).
 pub fn widget_forward(q: &Tensor, workers: usize, hbm: &mut Hbm) -> Tensor {
     let _ = (workers, hbm);
     q.clone()
 }
 
 pub fn orphan_backward(q: &Tensor, exec: &Exec, hbm: &mut Hbm) -> Tensor {
+    let _ = (exec.workers(), hbm);
+    q.clone()
+}
+
+pub fn orphan_decode(q: &Tensor, exec: &Exec, hbm: &mut Hbm) -> Tensor {
     let _ = (exec.workers(), hbm);
     q.clone()
 }

@@ -24,3 +24,13 @@ fn helper_sweep(items: Vec<FwdItem>, exec: &Exec, hbm: &mut Hbm) -> Result<(), A
     let _ = (done, report);
     Ok(())
 }
+
+pub fn widget_decode(
+    items: Vec<FwdItem>,
+    exec: &Exec,
+    hbm: &mut Hbm,
+) -> Result<(), AttnError> {
+    let (done, report) = exec.run(items, FaultSite::DecodeSpan, hbm, work)?;
+    let _ = (done, report);
+    Ok(())
+}

@@ -576,7 +576,8 @@ pub fn check_r4(inputs: &R4Inputs<'_>) -> Vec<Finding> {
 
     for (path, src) in inputs.modules {
         for (name, line, _params) in &pub_fns(src) {
-            if !(name.contains("forward") || name.contains("backward")) {
+            if !(name.contains("forward") || name.contains("backward") || name.contains("decode"))
+            {
                 continue;
             }
             if !io_names.contains(name) {
@@ -706,6 +707,10 @@ mod tests {
         assert!(
             msgs.iter().any(|m| m.contains("widget_forward") && m.contains("io_complexity")),
             "missing io coverage must flag: {msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("widget_decode") && m.contains("io_complexity")),
+            "decode kernels are under the same io-coverage rule: {msgs:?}"
         );
         assert!(
             msgs.iter().any(|m| m.contains("FaultSite::GadgetFwd")),

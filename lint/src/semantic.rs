@@ -509,6 +509,7 @@ const R5_KERNEL_FILES: &[&str] = &[
     "src/attn/flash2.rs",
     "src/attn/standard.rs",
     "src/attn/block_sparse.rs",
+    "src/attn/kv_cache.rs",
 ];
 
 /// Sanctioned counted accessors: the only functions allowed to index
@@ -531,6 +532,11 @@ const R5_SANCTIONED: &[&str] = &[
     "standard_forward",
     "standard_backward",
     "block_sparse_forward",
+    "score_span_tiles",
+    "absorb_scored_tiles",
+    "append_kv",
+    "k_tile",
+    "v_tile",
 ];
 
 /// True iff `ident` names an HBM role buffer: the bare tensor roles, or
@@ -779,7 +785,10 @@ pub fn check_r6(models: &[FnModel]) -> Vec<Finding> {
         if !r6_is_hot(&f.path) || !f.is_pub {
             continue;
         }
-        if !(f.name.contains("forward") || f.name.contains("backward")) {
+        if !(f.name.contains("forward")
+            || f.name.contains("backward")
+            || f.name.contains("decode"))
+        {
             continue;
         }
         let routed = !f.exec_params().is_empty();
@@ -1074,6 +1083,10 @@ mod tests {
             msgs.iter()
                 .any(|m| m.contains("orphan_backward") && m.contains("pool sink")),
             "sinkless Exec carrier must flag: {msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("orphan_decode") && m.contains("pool sink")),
+            "decode entries are under the same routing rule: {msgs:?}"
         );
         assert!(f.iter().all(|x| x.rule == "R6"), "{f:?}");
     }

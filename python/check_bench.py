@@ -52,6 +52,16 @@ lost:
      (spawn-dominated) n of a full run the forward row must actually
      win, which is the tentpole's headline number.
 
+  7. serving throughput (the continuous-batching loop draining a mixed
+     prefill+decode wave through the paged KV cache and the split-KV
+     decode kernel) dropping below an absolute tokens/sec floor on any
+     (n_ctx, requests) cell. Unlike the relative gates above there is
+     no same-machine reference kernel to ratio against, so the floor is
+     set an order of magnitude under healthy throughput: it stays quiet
+     under machine-to-machine variance but trips on an asymptotic
+     regression (quadratic cache re-reads, a serialized admission loop,
+     per-step pool spin-ups).
+
 A missing, truncated or malformed BENCH_attn.json is reported as a
 one-line diagnosis (the bench step that should have produced it is the
 thing to look at), not a Python traceback.
@@ -101,6 +111,13 @@ SMOKE_GUARDRAIL_TOL = 1.3
 # check at the smallest n applies to full runs only.
 POOL_TOL = 1.05
 SMOKE_POOL_TOL = 1.3
+# Serving throughput is gated against an absolute floor, not a
+# reference kernel: healthy runs serve thousands of tokens/sec, so a
+# floor an order of magnitude lower only trips on an asymptotic
+# regression, never on a slow CI runner. Smoke runs use tiny contexts
+# and 2 iterations, so their floor is another order lower still.
+SERVING_FLOOR = 100.0  # tokens/sec, full runs
+SMOKE_SERVING_FLOOR = 10.0  # tokens/sec, smoke runs
 
 
 def load_bench(path):
@@ -141,6 +158,7 @@ def main() -> int:
     sparse_tol = SMOKE_SPARSE_TOL if smoke else SPARSE_TOL
     guardrail_tol = SMOKE_GUARDRAIL_TOL if smoke else GUARDRAIL_TOL
     pool_tol = SMOKE_POOL_TOL if smoke else POOL_TOL
+    serving_floor = SMOKE_SERVING_FLOOR if smoke else SERVING_FLOOR
     failures = []
     # Per-section cell counts: an empty/renamed array must not silently
     # disable ITS gate while the others keep the build green. The
@@ -148,13 +166,14 @@ def main() -> int:
     # bench that stopped emitting them fails here too.
     section_cells = {
         "results": 0, "batched": 0, "sharded": 0, "sparse": 0, "guardrail": 0,
-        "pool": 0,
+        "pool": 0, "serving": 0,
     }
 
     print(f"perf gate over {path} (smoke={smoke}, workers={workers}, "
           f"tolerances flash2 {flash2_tol}x / batched {batched_tol}x / "
           f"sharded {sharded_tol}x / sparse {sparse_tol}x / "
-          f"guardrail {guardrail_tol}x / pool {pool_tol}x)")
+          f"guardrail {guardrail_tol}x / pool {pool_tol}x / "
+          f"serving floor {serving_floor:.0f} tok/s)")
     for row in data.get("results", []):
         n = row["n"]
         for pass_name, ref_key, fast_keys in [
@@ -290,6 +309,22 @@ def main() -> int:
                     f"the spawn-dominated n={n}: {pool_ns:.0f} ns vs "
                     f"{scoped_ns:.0f} ns (must win on full runs)")
 
+    for row in data.get("serving", []):
+        section_cells["serving"] += 1
+        n_ctx = row["n_ctx"]
+        requests = row["requests"]
+        tokens = row["tokens"]
+        tps = row["tokens_per_sec"]
+        verdict = "ok" if tps >= serving_floor else "REGRESSION"
+        print(f"  serving n_ctx={n_ctx:>5} x{requests:>2}: "
+              f"{tokens:>5} tokens  {tps:>10.1f} tok/s  "
+              f"(floor {serving_floor:.0f})  {verdict}")
+        if tps < serving_floor:
+            failures.append(
+                f"serving throughput below floor at n_ctx={n_ctx} "
+                f"({requests} requests): {tps:.1f} tok/s < "
+                f"{serving_floor:.0f} tok/s")
+
     empty = [name for name, count in section_cells.items() if count == 0]
     if empty:
         print("PERF GATE ERROR: no (pass, n) cells found for section(s): "
@@ -304,8 +339,9 @@ def main() -> int:
     print(f"perf gate passed ({cells} cells): flash2 beats flash, "
           "batched beats the per-slice loop, sharding stays within its "
           "overhead bound, block-sparse beats dense at <=50% density, "
-          "the fault plane is free when faults are off, and the "
-          "persistent pool never loses to the per-call scoped runtime")
+          "the fault plane is free when faults are off, the persistent "
+          "pool never loses to the per-call scoped runtime, and serving "
+          "throughput clears its tokens/sec floor")
     return 0
 
 if __name__ == "__main__":

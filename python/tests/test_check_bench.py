@@ -111,6 +111,22 @@ def make_doc(smoke=False):
                 "pool_bwd_ns": 19600.0,
             },
         ],
+        "serving": [
+            {
+                "n_ctx": 64,
+                "requests": 8,
+                "tokens": 64,
+                "serve_ns": 4.0e7,
+                "tokens_per_sec": 1600.0,
+            },
+            {
+                "n_ctx": 256,
+                "requests": 8,
+                "tokens": 64,
+                "serve_ns": 8.0e7,
+                "tokens_per_sec": 800.0,
+            },
+        ],
     }
 
 
@@ -268,6 +284,46 @@ class TestPoolRule(GateHarness):
         code, out = self.run_gate(doc)
         self.assertEqual(code, 1, out)
         self.assertIn("persistent pool", out)
+
+
+class TestServingRule(GateHarness):
+    """Serving throughput gates against an absolute tokens/sec floor."""
+
+    def test_throughput_between_smoke_and_full_floor_gates_only_full(self):
+        # 50 tok/s: under SERVING_FLOOR (100), over SMOKE_SERVING_FLOOR
+        # (10) — trips full runs, passes smoke.
+        for smoke, want in ((False, 1), (True, 0)):
+            doc = make_doc(smoke=smoke)
+            doc["serving"][1]["tokens_per_sec"] = 50.0
+            code, out = self.run_gate(doc)
+            self.assertEqual(code, want, out)
+            if want:
+                self.assertIn("serving throughput below floor", out)
+                self.assertIn("n_ctx=256", out)
+
+    def test_any_single_cell_below_floor_fails_the_gate(self):
+        # The healthy n_ctx=64 cell must not mask a collapsed large one.
+        doc = make_doc()
+        doc["serving"][1]["tokens_per_sec"] = 3.0
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 1, out)
+        self.assertIn("3.0 tok/s", out)
+
+    def test_missing_serving_section_is_an_error(self):
+        doc = make_doc()
+        del doc["serving"]
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 1, out)
+        self.assertIn("PERF GATE ERROR", out)
+        self.assertIn("serving", out)
+
+    def test_empty_serving_section_is_an_error(self):
+        doc = make_doc()
+        doc["serving"] = []
+        code, out = self.run_gate(doc)
+        self.assertEqual(code, 1, out)
+        self.assertIn("PERF GATE ERROR", out)
+        self.assertIn("serving", out)
 
 
 class TestSectionCells(GateHarness):

@@ -29,6 +29,9 @@
 //!    `Exec::new(w)` (workers parked between calls) vs `Exec::scoped(w)`
 //!    (spawn + join per call) at small n, fwd AND bwd — rows land under
 //!    "pool" and the gate fails if the persistent pool ever loses;
+//!  * serving tier: a ContinuousBatcher drains a mixed prefill+decode
+//!    wave (paged KV cache, split-KV `flash2_decode`) — rows land under
+//!    "serving" as tokens/sec and the gate enforces a throughput floor;
 //!  * PJRT artifact execution: flash vs reference attention artifacts, and
 //!    the fused train step (the L3 request path);
 //!  * Value<->Literal conversion overhead (the coordinator's serialization
@@ -639,9 +642,76 @@ fn pool_head_to_head(smoke: bool) -> Vec<String> {
     json_rows
 }
 
+/// The serving tier under a prefill+decode mix: a ContinuousBatcher fed
+/// a wave of mixed-length requests (short chat turns joining and
+/// leaving around long documents — the TGI admission pattern), driven
+/// to completion on the persistent pool. The figure of merit is
+/// **tokens/sec under load** — generated tokens over serve wall-clock,
+/// prefill joins, split-KV decode steps, cache filtering and all. Rows
+/// land in BENCH_attn.json under "serving"; python/check_bench.py fails
+/// the build if throughput ever falls below the section floor.
+fn serving_head_to_head(smoke: bool) -> Vec<String> {
+    let workers = WORKERS;
+    let mut t = Table::new(
+        "continuous batching serve (prefill+decode mix, split-KV decode)",
+        &["n_ctx", "requests", "tokens", "ms", "tokens/sec"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let exec = Exec::new(workers);
+    // (base prompt length, request count, new tokens per request)
+    let grid: &[(usize, usize, usize)] =
+        if smoke { &[(32, 4, 4)] } else { &[(64, 8, 8), (256, 8, 8)] };
+    for &(n_ctx, requests, new_tokens) in grid {
+        let cfg = flashattn::coordinator::server::BatcherConfig {
+            d: D,
+            b_c: 32,
+            span_tiles: 2,
+            // Roughly half the wave fits at once: later requests join
+            // as earlier ones finish — the continuous-batching regime.
+            token_budget: (n_ctx + new_tokens) * requests.div_ceil(2),
+        };
+        let submit_all = |b: &mut flashattn::coordinator::server::ContinuousBatcher| {
+            for r in 0..requests {
+                // Mixed lengths: every 4th request is a long document.
+                let prompt_len = if r % 4 == 3 { n_ctx * 2 } else { n_ctx / 2 + r };
+                b.submit(flashattn::coordinator::server::DecodeRequest {
+                    id: r as u64,
+                    prompt_len,
+                    max_new_tokens: new_tokens,
+                    seed: 0xBE7 + r as u64,
+                });
+            }
+        };
+        let iters = if smoke { 2 } else { 5 };
+        let mut tokens = 0usize;
+        let elapsed = mean_time(iters, || {
+            let mut b = flashattn::coordinator::server::ContinuousBatcher::new(cfg.clone());
+            submit_all(&mut b);
+            let report = b.run(&exec, &mut Hbm::new());
+            assert!(report.evicted.is_empty(), "fault-free serve must not evict");
+            tokens = report.generated_tokens;
+        });
+        let tps = tokens as f64 / elapsed;
+        t.row(vec![
+            n_ctx.to_string(),
+            requests.to_string(),
+            tokens.to_string(),
+            format!("{:.2}", elapsed * 1e3),
+            format!("{tps:.0}"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"n_ctx\": {n_ctx}, \"requests\": {requests}, \"tokens\": {tokens}, \
+             \"serve_ns\": {:.0}, \"tokens_per_sec\": {tps:.1}}}",
+            elapsed * 1e9,
+        ));
+    }
+    t.print();
+    json_rows
+}
+
 /// Assemble BENCH_attn.json (head-to-head + batched + sharded + sparse +
-/// guardrail + pool rows) at the repo root regardless of the cwd cargo
-/// bench picked.
+/// guardrail + pool + serving rows) at the repo root regardless of the
+/// cwd cargo bench picked.
 #[allow(clippy::too_many_arguments)]
 fn write_bench_json(
     smoke: bool,
@@ -651,19 +721,22 @@ fn write_bench_json(
     sparse: &[String],
     guardrail: &[String],
     pool: &[String],
+    serving: &[String],
 ) {
     let (d, workers) = (D, WORKERS);
     let json = format!(
         "{{\n  \"bench\": \"attn_mirror_hotpath\",\n  \"unit\": \"ns_per_iter\",\n  \
          \"d\": {d},\n  \"workers\": {workers},\n  \"smoke\": {smoke},\n  \
          \"results\": [\n{}\n  ],\n  \"batched\": [\n{}\n  ],\n  \"sharded\": [\n{}\n  ],\n  \
-         \"sparse\": [\n{}\n  ],\n  \"guardrail\": [\n{}\n  ],\n  \"pool\": [\n{}\n  ]\n}}\n",
+         \"sparse\": [\n{}\n  ],\n  \"guardrail\": [\n{}\n  ],\n  \"pool\": [\n{}\n  ],\n  \
+         \"serving\": [\n{}\n  ]\n}}\n",
         results.join(",\n"),
         batched.join(",\n"),
         sharded.join(",\n"),
         sparse.join(",\n"),
         guardrail.join(",\n"),
-        pool.join(",\n")
+        pool.join(",\n"),
+        serving.join(",\n")
     );
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_attn.json");
     match std::fs::write(&out, &json) {
@@ -749,6 +822,7 @@ fn main() {
     let sparse = sparse_head_to_head(smoke);
     let guardrail = guardrail_head_to_head(smoke);
     let pool = pool_head_to_head(smoke);
-    write_bench_json(smoke, &results, &batched, &sharded, &sparse, &guardrail, &pool);
+    let serving = serving_head_to_head(smoke);
+    write_bench_json(smoke, &results, &batched, &sharded, &sparse, &guardrail, &pool, &serving);
     artifacts();
 }

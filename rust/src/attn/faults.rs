@@ -80,6 +80,8 @@ pub enum FaultSite {
     RingDkv,
     /// Tree-schedule per-shard partial items (via `flash2_forward_many`).
     TreePartial,
+    /// Split-KV decode span items (via `flash2_decode`).
+    DecodeSpan,
 }
 
 impl FaultSite {
@@ -96,6 +98,7 @@ impl FaultSite {
             FaultSite::RingDq => 8,
             FaultSite::RingDkv => 9,
             FaultSite::TreePartial => 10,
+            FaultSite::DecodeSpan => 11,
         }
     }
 }
@@ -113,6 +116,7 @@ impl std::fmt::Display for FaultSite {
             FaultSite::RingDq => "ring-sharded backward dQ",
             FaultSite::RingDkv => "ring-sharded backward dK/dV",
             FaultSite::TreePartial => "tree-sharded partial",
+            FaultSite::DecodeSpan => "split-KV decode span",
         })
     }
 }

@@ -60,6 +60,7 @@
 //! property-tested below.
 
 use super::exec::Exec;
+use super::faults::{AttnError, FaultReport, FaultSite, PoolItem};
 use super::flash::{tile_fully_unmasked, Blocks};
 use super::masks::{dropout_scale, masked_score, NEG_INF};
 use super::{AttnConfig, AttnGrads, AttnOutput, AttnStats};
@@ -282,52 +283,82 @@ pub(crate) fn stream_kv_filtered<F: Fn(usize) -> bool>(
             }
         }
 
-        // Online softmax with deferred normalisation: rescale the
-        // accumulators only when the running max actually moves.
-        for rr in 0..br {
-            let row = r0 + rr;
-            let srow = &mut s[rr * bc..(rr + 1) * bc];
-            let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
-            // Fully-masked row slice: contributes no probability mass.
-            // Folding it in would poison m_run with the NEG_INF sentinel
-            // and make exp(s - m_new) = 1 for masked entries, so rows
-            // with *no* live key anywhere would attend uniformly to
-            // masked keys; skipping keeps them at (acc, l, m) =
-            // (0, 0, -inf) and the epilogue gives them a zero output.
-            if m_tile <= NEG_INF {
-                continue;
-            }
-            let m_new = m_run[rr].max(m_tile);
-            let alpha = (m_run[rr] - m_new).exp(); // exp(-inf)=0 first tile
-            let arow = &mut acc[rr * d..(rr + 1) * d];
-            if alpha != 1.0 {
-                l_run[rr] *= alpha;
-                for x in arow.iter_mut() {
-                    *x *= alpha;
-                }
-            }
-            m_run[rr] = m_new;
-            let mut l_tile = 0.0f32;
-            for pw in srow.iter_mut() {
-                *pw = (*pw - m_new).exp();
-                l_tile += *pw;
-            }
-            // As in flash/standard: the normaliser excludes dropout.
-            l_run[rr] += l_tile;
-            if cfg.dropout_p > 0.0 {
-                for (cc, pw) in srow.iter_mut().enumerate() {
-                    *pw *= dropout_scale(
-                        cfg.bh_index,
-                        row,
-                        g0 + cc,
-                        n,
-                        cfg.dropout_seed,
-                        cfg.dropout_p,
-                    );
-                }
-            }
-            pv_accum(srow, vj, d, arow);
+        absorb_score_tile(acc, m_run, l_run, s, vj, br, bc, d, r0, g0, n, cfg);
+    }
+}
+
+/// Absorb one masked score tile S (already τ-scaled and mask-applied)
+/// into a row block's online-softmax state, in place: online softmax
+/// with deferred normalisation — rescale the accumulators only when the
+/// running max actually moves. `s` is consumed (overwritten with the P̃
+/// weights).
+///
+/// This is the ONE body shared by the fused sweep
+/// ([`stream_kv_filtered`], which computes S on chip and absorbs it
+/// immediately) and the split-KV decode merge ([`absorb_scored_tiles`],
+/// which replays spilled S tiles in global tile order) — sharing the
+/// body is what makes [`flash2_decode`] bitwise identical to
+/// [`flash2_forward`] by construction, not by tolerance. Takes no
+/// [`Hbm`]: callers count the tile's traffic (K/V stream or S
+/// spill/reload) before calling.
+#[allow(clippy::too_many_arguments)]
+fn absorb_score_tile(
+    acc: &mut [f32],
+    m_run: &mut [f32],
+    l_run: &mut [f32],
+    s: &mut [f32],
+    vj: &[f32],
+    br: usize,
+    bc: usize,
+    d: usize,
+    r0: usize,
+    g0: usize,
+    n: usize,
+    cfg: &AttnConfig,
+) {
+    for rr in 0..br {
+        let row = r0 + rr;
+        let srow = &mut s[rr * bc..(rr + 1) * bc];
+        let m_tile = srow.iter().cloned().fold(NEG_INF, f32::max);
+        // Fully-masked row slice: contributes no probability mass.
+        // Folding it in would poison m_run with the NEG_INF sentinel
+        // and make exp(s - m_new) = 1 for masked entries, so rows
+        // with *no* live key anywhere would attend uniformly to
+        // masked keys; skipping keeps them at (acc, l, m) =
+        // (0, 0, -inf) and the epilogue gives them a zero output.
+        if m_tile <= NEG_INF {
+            continue;
         }
+        let m_new = m_run[rr].max(m_tile);
+        let alpha = (m_run[rr] - m_new).exp(); // exp(-inf)=0 first tile
+        let arow = &mut acc[rr * d..(rr + 1) * d];
+        if alpha != 1.0 {
+            l_run[rr] *= alpha;
+            for x in arow.iter_mut() {
+                *x *= alpha;
+            }
+        }
+        m_run[rr] = m_new;
+        let mut l_tile = 0.0f32;
+        for pw in srow.iter_mut() {
+            *pw = (*pw - m_new).exp();
+            l_tile += *pw;
+        }
+        // As in flash/standard: the normaliser excludes dropout.
+        l_run[rr] += l_tile;
+        if cfg.dropout_p > 0.0 {
+            for (cc, pw) in srow.iter_mut().enumerate() {
+                *pw *= dropout_scale(
+                    cfg.bh_index,
+                    row,
+                    g0 + cc,
+                    n,
+                    cfg.dropout_seed,
+                    cfg.dropout_p,
+                );
+            }
+        }
+        pv_accum(srow, vj, d, arow);
     }
 }
 
@@ -416,6 +447,276 @@ pub(crate) fn row_block_sweep(
     }
 
     hbm
+}
+
+/// Column-tile range `[lo, hi)` of decode span `sp` when the KV axis's
+/// `t_c` column tiles are split into spans of `span_tiles` tiles each
+/// (the last span ragged).
+fn span_tile_range(sp: usize, span_tiles: usize, t_c: usize) -> (usize, usize) {
+    let lo = sp * span_tiles;
+    let hi = ((sp + 1) * span_tiles).min(t_c);
+    (lo, hi)
+}
+
+/// One split-KV decode work item: a span of KV column tiles scored
+/// against the (short) Q block. The item owns the span's masked score
+/// tiles — the "map" half of the decode kernel; the order-sensitive
+/// online-softmax absorb happens at the merge site, in global tile
+/// order, so the result is bitwise independent of how spans land on
+/// workers.
+pub(crate) struct DecodeItem {
+    /// Span index along the KV axis.
+    sp: usize,
+    /// Column-tile range [tile_lo, tile_hi) this span covers.
+    tile_lo: usize,
+    tile_hi: usize,
+    /// Masked score tiles, concatenated in tile order: one [n, bc]
+    /// block per causally-live tile of the span. Masked entries hold
+    /// the finite `NEG_INF` sentinel, so a NaN can only mean poison.
+    s_win: Vec<f32>,
+}
+
+impl PoolItem for DecodeItem {
+    fn id(&self) -> (usize, usize) {
+        (0, self.sp)
+    }
+
+    fn reset(&mut self) {
+        self.s_win.fill(0.0);
+    }
+
+    fn check_finite(&self) -> bool {
+        self.s_win.iter().all(|x| x.is_finite())
+    }
+
+    fn poison(&mut self) {
+        self.s_win.fill(f32::NAN);
+    }
+
+    #[cfg(feature = "audit")]
+    fn claims(&self) -> Vec<crate::attn::audit::SlotClaim> {
+        vec![crate::attn::audit::SlotClaim::of("s", &self.s_win)]
+    }
+}
+
+/// Decode item-side scoring accessor — the counted "map" half of the
+/// split-KV decode. For each causally-live column tile of the span:
+/// stream K_j once (bc·d loads), compute the τ-scaled masked score tile
+/// exactly as [`stream_kv_filtered`] does (same `matmul_bt_scaled_into`
+/// + `masked_score` pass, row block r0 = 0, r1 = n), and spill it to
+/// HBM (n·bc stores). Q is loaded once per span (n·d) — the split-KV
+/// replication cost the closed form charges per span.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn score_span_tiles(
+    q_rows: &[f32],
+    k: &[f32],
+    n_k: usize,
+    n: usize,
+    d: usize,
+    cfg: &AttnConfig,
+    b_c: usize,
+    tau: f32,
+    kv_limit: usize,
+    tile_lo: usize,
+    tile_hi: usize,
+    s_win: &mut [f32],
+) -> Hbm {
+    let mut hbm = Hbm::new();
+    // Q is short (1-to-few rows) but every span re-reads it.
+    hbm.load(n * d);
+    let mut off = 0usize;
+    for j in tile_lo..tile_hi {
+        let c0 = j * b_c;
+        let c1 = ((j + 1) * b_c).min(n_k);
+        let bc = c1 - c0;
+        let g0 = cfg.kv_offset + c0;
+        // Above-diagonal tiles contribute nothing — the same skip as the
+        // fused sweep with the whole Q block as one row block (r1 = n).
+        if cfg.causal && g0 > n - 1 {
+            continue;
+        }
+        // K_j streams through SRAM once per span.
+        hbm.load(bc * d);
+        let kj = &k[c0 * d..c1 * d];
+        let s = &mut s_win[off..off + n * bc];
+        matmul_bt_scaled_into(q_rows, kj, d, tau, s);
+        // Same mask pass as the fused sweep; masked_score is the
+        // identity on live entries, so values are bitwise identical.
+        if !tile_fully_unmasked(cfg.causal, 0, cfg.kv_offset + c1, kv_limit) {
+            for rr in 0..n {
+                for cc in 0..bc {
+                    let x = s[rr * bc + cc];
+                    s[rr * bc + cc] = masked_score(x, rr, g0 + cc, cfg.causal, kv_limit);
+                }
+            }
+        }
+        // The span's masked score tile spills to HBM for the merge.
+        hbm.store(n * bc);
+        off += n * bc;
+    }
+    hbm
+}
+
+/// Decode merge-side absorb accessor — replays the spilled score tiles
+/// in **global tile order** through [`absorb_score_tile`], the exact
+/// body the fused sweep uses. Counts, per causally-live tile: the
+/// spilled scores reloaded (n·bc) plus V_j streamed once (bc·d).
+/// Because the absorb order and arithmetic are those of a single fused
+/// sweep over the concatenated tiles, the state this produces is
+/// bitwise identical to [`stream_kv`]'s for the same inputs —
+/// independent of span size and of which worker scored which span.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn absorb_scored_tiles(
+    state: &mut RowBlockState,
+    s_all: &mut [f32],
+    v: &[f32],
+    n_k: usize,
+    n: usize,
+    d: usize,
+    cfg: &AttnConfig,
+    b_c: usize,
+    hbm: &mut Hbm,
+) {
+    let t_c = n_k.div_ceil(b_c);
+    let RowBlockState { acc, m_run, l_run, .. } = state;
+    let mut off = 0usize;
+    for j in 0..t_c {
+        let c0 = j * b_c;
+        let c1 = ((j + 1) * b_c).min(n_k);
+        let bc = c1 - c0;
+        let g0 = cfg.kv_offset + c0;
+        // Recomputed identically to the item side: the spill layout is a
+        // pure function of (causal, kv_offset, b_c, n, n_k).
+        if cfg.causal && g0 > n - 1 {
+            continue;
+        }
+        // Spilled scores reload + V_j streams once, per live tile.
+        hbm.load(n * bc + bc * d);
+        let vj = &v[c0 * d..c1 * d];
+        let s = &mut s_all[off..off + n * bc];
+        absorb_score_tile(acc, m_run, l_run, s, vj, n, bc, d, 0, g0, n, cfg);
+        off += n * bc;
+    }
+}
+
+/// Split-KV decode forward: the inference-serving kernel for a short Q
+/// (one to a few rows) against a long KV history. The KV axis is split
+/// into spans of `span_tiles` column tiles; each span is one pool work
+/// item ([`DecodeItem`]) that *scores* its tiles (τ·Q·K_jᵀ + mask) and
+/// spills them — order-free work that parallelises over the KV axis,
+/// the FlashAttention-2 partitioning for the decode regime. The
+/// order-sensitive half (online-softmax absorb + P̃·V) replays the
+/// spilled tiles sequentially in global tile order at the merge site
+/// through the exact loop body of the fused sweep, then runs the same
+/// [`write_epilogue`]. This is the associative-merge recurrence of
+/// `attn::distributed::merge_partials` applied in fixed span order — the
+/// decode instance of the ring schedule's resumability argument — and it
+/// makes the output **bitwise identical to [`flash2_forward`]** with the
+/// same config and `blocks` for any worker count and any span size.
+///
+/// Traffic is counted access-for-access against
+/// `sim::cost::flash2_decode`: per span one Q load (n·d); per
+/// causally-live tile K and V each stream once (2·bc·d) plus the score
+/// tile's spill + reload (2·n·bc); one epilogue store (n·d + n).
+///
+/// Runs on the plan-carrying `exec` handle: injected faults
+/// (`FaultSite::DecodeSpan`) are retried per item, and an exhausted
+/// retry budget surfaces as a typed [`AttnError`] — the serving loop
+/// evicts that request and keeps the batch.
+#[allow(clippy::too_many_arguments)]
+pub fn flash2_decode(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    blocks: Blocks,
+    span_tiles: usize,
+    exec: &Exec,
+    hbm: &mut Hbm,
+) -> Result<(Flash2Output, FaultReport), AttnError> {
+    let (n, d) = (q.rows(), q.cols());
+    let n_k = k.rows();
+    assert_eq!(k.cols(), d, "flash2_decode: K feature dim mismatch");
+    assert_eq!((v.rows(), v.cols()), (n_k, d), "flash2_decode: V shape mismatch");
+    assert!(span_tiles >= 1, "flash2_decode: span_tiles must be >= 1");
+    let tau = cfg.tau_for(d);
+    let kv_limit = cfg.kv_limit(n_k);
+    let b_c = blocks.b_c;
+    let t_c = n_k.div_ceil(b_c);
+
+    let mut o = Tensor::zeros(&[n, d]);
+    let mut lse = vec![0.0f32; n];
+    if n == 0 || t_c == 0 {
+        // No queries or no keys: same defined semantics as the fused
+        // kernel's early return (zero rows, lse = -inf, zero traffic).
+        lse.fill(f32::NEG_INFINITY);
+        return Ok((Flash2Output { o, lse }, FaultReport::default()));
+    }
+
+    // One item per KV span; a span's spill window is sized by its
+    // causally-live tiles so the item layout equals the merge layout.
+    let spans = t_c.div_ceil(span_tiles);
+    let mut items = Vec::with_capacity(spans);
+    for sp in 0..spans {
+        let (tile_lo, tile_hi) = span_tile_range(sp, span_tiles, t_c);
+        let mut len = 0usize;
+        for j in tile_lo..tile_hi {
+            let c0 = j * b_c;
+            let c1 = ((j + 1) * b_c).min(n_k);
+            if cfg.causal && cfg.kv_offset + c0 > n - 1 {
+                continue;
+            }
+            len += n * (c1 - c0);
+        }
+        items.push(DecodeItem { sp, tile_lo, tile_hi, s_win: vec![0.0; len] });
+    }
+
+    // Owned snapshots for the pool's 'static closure — bit-exact f32
+    // copies, same marshalling as `attn::batched`; HBM counts stay
+    // analytic inside the accessors.
+    let qd = q.data.clone();
+    let kd = k.data.clone();
+    let cfg_item = cfg.clone();
+    let (done, report) =
+        exec.run(items, FaultSite::DecodeSpan, hbm, move |it: &mut DecodeItem| {
+            score_span_tiles(
+                &qd,
+                &kd,
+                n_k,
+                n,
+                d,
+                &cfg_item,
+                b_c,
+                tau,
+                kv_limit,
+                it.tile_lo,
+                it.tile_hi,
+                &mut it.s_win,
+            )
+        })?;
+
+    // Stitch the spans' spill windows into one flat buffer in span
+    // order (= global tile order): the exactly-once commit per item.
+    let total: usize = done.iter().map(|it| it.s_win.len()).sum();
+    let mut s_all = vec![0.0f32; total];
+    let mut base = 0usize;
+    for it in &done {
+        s_all[base..base + it.s_win.len()].copy_from_slice(&it.s_win);
+        base += it.s_win.len();
+    }
+
+    // Merge: replay the tiles through the fused sweep's absorb body in
+    // global order, then the shared epilogue.
+    let mut state = RowBlockState {
+        acc: vec![0.0; n * d],
+        m_run: vec![f32::NEG_INFINITY; n],
+        l_run: vec![0.0; n],
+        s_buf: Vec::new(),
+    };
+    absorb_scored_tiles(&mut state, &mut s_all, &v.data, n_k, n, d, cfg, b_c, hbm);
+    write_epilogue(&state, n, d, &mut o.data, &mut lse, hbm);
+
+    Ok((Flash2Output { o, lse }, report))
 }
 
 /// Fast exact backward: the gradient half of the production kernel pair.

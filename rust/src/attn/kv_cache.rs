@@ -1,0 +1,250 @@
+//! Paged KV cache for the serving tier: K/V history stored in
+//! fixed-geometry tiles, with the TGI-style ragged-batch lifecycle.
+//!
+//! A decode step reads one (or a few) query rows against a long KV
+//! history; the history grows by one row per generated token and
+//! requests join/leave the batch continuously. Storing K/V contiguously
+//! per request would force a full reallocation+copy per appended token,
+//! so — as in TGI's `flash_causal_lm.py` ragged batches and vLLM-style
+//! paged attention — the cache stores rows in **pages of `b_c` rows**,
+//! where `b_c` is the kernel's column-tile height (the `BlockMask` tile
+//! geometry): page `p` of a request holds its key rows
+//! `[p·b_c, (p+1)·b_c)`, so a page *is* a column tile and
+//! `attn::flash2::flash2_decode` spans map 1:1 onto page ranges.
+//!
+//! The batch lifecycle mirrors TGI's `filter`/`concatenate`: requests
+//! are appended per decode step, dropped (with their pages) when they
+//! finish via [`KvBatch::filter`], and two batches join via
+//! [`KvBatch::concatenate`] — all three preserve exact tile contents
+//! (property-tested in `rust/tests/kv_cache.rs`).
+//!
+//! HBM accounting: writing rows into the cache and reading tiles back
+//! out go through **counted accessors** ([`RequestCache::append_kv`],
+//! [`RequestCache::k_tile`], [`RequestCache::v_tile`]) — lint R5
+//! applies to this file, so raw indexing of the K/V buffers outside the
+//! sanctioned accessors is a finding. `filter`/`concatenate` are
+//! metadata moves (page ownership transfers, no element traffic), which
+//! is exactly why the paged layout wins: finishing requests cost zero
+//! HBM. The decode kernel itself counts its K/V streaming analytically
+//! (`sim::cost::flash2_decode`); the uncounted [`RequestCache::snapshot_k`]
+//! / [`RequestCache::snapshot_v`] marshals exist only to hand the pool's
+//! `'static` closures an owned bit-exact copy, the same convention as
+//! `attn::batched`'s `OwnedSlice`.
+
+use crate::sim::hbm::Hbm;
+
+/// One fixed-geometry page: up to `b_c` K rows and V rows, allocated at
+/// full capacity so appends never reallocate mid-page.
+#[derive(Clone, Debug, PartialEq)]
+struct KvPage {
+    k: Vec<f32>, // [b_c, d], rows [0, rows) valid
+    v: Vec<f32>, // [b_c, d], rows [0, rows) valid
+    rows: usize,
+}
+
+/// The paged K/V history of ONE request. Pages are the kernel's column
+/// tiles: every page except possibly the last holds exactly `b_c` rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestCache {
+    b_c: usize,
+    d: usize,
+    pages: Vec<KvPage>,
+    len: usize,
+}
+
+impl RequestCache {
+    pub fn new(b_c: usize, d: usize) -> RequestCache {
+        assert!(b_c >= 1 && d >= 1, "RequestCache: degenerate tile geometry");
+        RequestCache { b_c, d, pages: Vec::new(), len: 0 }
+    }
+
+    /// Total K/V rows (tokens) cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Page/tile count: `len.div_ceil(b_c)`.
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Valid rows of page `p` (only the last page may be partial).
+    pub fn page_rows(&self, p: usize) -> usize {
+        self.pages[p].rows
+    }
+
+    /// Tile height — the kernel's `Blocks::b_c`.
+    pub fn b_c(&self) -> usize {
+        self.b_c
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Append `rows` K/V rows (`k_rows`/`v_rows`: [rows, d], row-major)
+    /// to the history, filling the last partial page first, then
+    /// allocating fresh pages. Counted: every appended element is
+    /// written to HBM exactly once (2·rows·d stores), and nothing
+    /// already cached moves — the paged layout's append is O(new rows),
+    /// never O(history).
+    pub fn append_kv(&mut self, k_rows: &[f32], v_rows: &[f32], rows: usize, hbm: &mut Hbm) {
+        let d = self.d;
+        assert_eq!(k_rows.len(), rows * d, "append_kv: K row slice shape mismatch");
+        assert_eq!(v_rows.len(), rows * d, "append_kv: V row slice shape mismatch");
+        let mut done = 0usize;
+        while done < rows {
+            if self.len % self.b_c == 0 {
+                // Last page full (or cache empty): open a fresh page at
+                // full capacity so later in-page appends never move rows.
+                self.pages.push(KvPage {
+                    k: vec![0.0; self.b_c * d],
+                    v: vec![0.0; self.b_c * d],
+                    rows: 0,
+                });
+            }
+            let page = self.pages.last_mut().expect("append_kv: page just ensured");
+            let take = (self.b_c - page.rows).min(rows - done);
+            let dst = page.rows * d;
+            page.k[dst..dst + take * d].copy_from_slice(&k_rows[done * d..(done + take) * d]);
+            page.v[dst..dst + take * d].copy_from_slice(&v_rows[done * d..(done + take) * d]);
+            page.rows += take;
+            self.len += take;
+            done += take;
+            hbm.store(2 * take * d);
+        }
+    }
+
+    /// Counted read of K tile/page `t`: the page's valid rows stream
+    /// through SRAM once (`page_rows(t)·d` loads). Returns the
+    /// contiguous [rows, d] slice — pages ARE column tiles, so this is
+    /// the decode kernel's K_j.
+    pub fn k_tile(&self, t: usize, hbm: &mut Hbm) -> &[f32] {
+        let page = &self.pages[t];
+        hbm.load(page.rows * self.d);
+        &page.k[..page.rows * self.d]
+    }
+
+    /// Counted read of V tile/page `t` — see [`RequestCache::k_tile`].
+    pub fn v_tile(&self, t: usize, hbm: &mut Hbm) -> &[f32] {
+        let page = &self.pages[t];
+        hbm.load(page.rows * self.d);
+        &page.v[..page.rows * self.d]
+    }
+
+    /// Uncounted flat copy of the valid K rows ([len, d]) — the owned
+    /// marshal for the pool's `'static` closures. Bit-exact; the decode
+    /// kernel's analytic per-tile counts are the HBM model for reading
+    /// these rows, so copying here must NOT count (it would double-bill
+    /// every tile).
+    pub fn snapshot_k(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len * self.d);
+        for page in &self.pages {
+            out.extend_from_slice(&page.k[..page.rows * self.d]);
+        }
+        out
+    }
+
+    /// Uncounted flat copy of the valid V rows — see
+    /// [`RequestCache::snapshot_k`].
+    pub fn snapshot_v(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len * self.d);
+        for page in &self.pages {
+            out.extend_from_slice(&page.v[..page.rows * self.d]);
+        }
+        out
+    }
+}
+
+/// A ragged batch of per-request caches — the TGI
+/// `filter`/`concatenate` lifecycle. Entry order is insertion order and
+/// every operation is a deterministic function of it (plain `Vec`
+/// scans, no hashing), so the serving loop's schedule is reproducible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvBatch {
+    b_c: usize,
+    d: usize,
+    entries: Vec<(u64, RequestCache)>,
+}
+
+impl KvBatch {
+    pub fn new(b_c: usize, d: usize) -> KvBatch {
+        KvBatch { b_c, d, entries: Vec::new() }
+    }
+
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Request ids in batch order.
+    pub fn ids(&self) -> Vec<u64> {
+        self.entries.iter().map(|(id, _)| *id).collect()
+    }
+
+    /// Total cached tokens across all requests — the quantity the
+    /// admission loop budgets.
+    pub fn total_tokens(&self) -> usize {
+        self.entries.iter().map(|(_, c)| c.len()).sum()
+    }
+
+    /// Join a new request with an empty cache. Ids must be unique.
+    pub fn admit(&mut self, id: u64) {
+        assert!(
+            self.entries.iter().all(|(e, _)| *e != id),
+            "KvBatch::admit: duplicate request id {id}"
+        );
+        self.entries.push((id, RequestCache::new(self.b_c, self.d)));
+    }
+
+    pub fn get(&self, id: u64) -> Option<&RequestCache> {
+        self.entries.iter().find(|(e, _)| *e == id).map(|(_, c)| c)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut RequestCache> {
+        self.entries.iter_mut().find(|(e, _)| *e == id).map(|(_, c)| c)
+    }
+
+    /// Counted append to one request's history — see
+    /// [`RequestCache::append_kv`].
+    pub fn append_kv(&mut self, id: u64, k_rows: &[f32], v_rows: &[f32], rows: usize, hbm: &mut Hbm) {
+        self.get_mut(id)
+            .unwrap_or_else(|| panic!("KvBatch::append_kv: unknown request id {id}"))
+            .append_kv(k_rows, v_rows, rows, hbm);
+    }
+
+    /// TGI `filter`: the batch after dropping every request not in
+    /// `keep`, preserving batch order. A metadata move — page ownership
+    /// transfers, no element is read or written, so finishing requests
+    /// cost zero HBM traffic (asserted by the never-read property test).
+    pub fn filter(mut self, keep: &[u64]) -> KvBatch {
+        self.entries.retain(|(id, _)| keep.contains(id));
+        self
+    }
+
+    /// TGI `concatenate`: join two batches (e.g. the running batch and
+    /// a freshly prefilled one), preserving order: all of `a`, then all
+    /// of `b`. Metadata-only, like [`KvBatch::filter`]; geometries must
+    /// match and ids stay unique.
+    pub fn concatenate(a: KvBatch, b: KvBatch) -> KvBatch {
+        assert_eq!((a.b_c, a.d), (b.b_c, b.d), "KvBatch::concatenate: geometry mismatch");
+        let mut out = a;
+        for (id, cache) in b.entries {
+            assert!(
+                out.entries.iter().all(|(e, _)| *e != id),
+                "KvBatch::concatenate: duplicate request id {id}"
+            );
+            out.entries.push((id, cache));
+        }
+        out
+    }
+}

@@ -208,14 +208,16 @@
 //! * **R3 — no unsafe.** `unsafe` is banned tree-wide, backing the
 //!   crate-level `#![forbid(unsafe_code)]`.
 //! * **R4 — coverage cross-reference.** Every `pub fn *_forward*` /
-//!   `*_backward*` in [`flash2`], [`batched`], [`block_sparse`] and
+//!   `*_backward*` / `*_decode*` in [`flash2`], [`batched`],
+//!   [`block_sparse`] and
 //!   [`distributed`] must be exercised by name in the IO-exactness wall
 //!   (`rust/tests/io_complexity.rs`, against a `sim::cost` form), and
 //!   every [`faults::FaultSite`] variant must be injected somewhere in
 //!   `rust/tests/chaos.rs`. New hot paths cannot silently skip the test
 //!   walls.
 //! * **R5 — counted-access discipline.** Inside the kernel files
-//!   ([`flash`], [`flash2`], [`standard`], [`block_sparse`]), any
+//!   ([`flash`], [`flash2`], [`standard`], [`block_sparse`],
+//!   [`kv_cache`]), any
 //!   function that handles the `sim::Hbm` meter may touch the role-named
 //!   HBM buffers (q/k/v/o/dout/lse/dq/dk/dv and their `*_win`-style
 //!   windows) only through the sanctioned counted accessors (the
@@ -228,9 +230,9 @@
 //! * **R6 — reachability routing.** A call-graph check (replacing R4's
 //!   old parameter-list heuristic): batched/sharded `pub` fwd/bwd
 //!   entries must take an [`Exec`] handle; every Exec-carrying `pub`
-//!   fwd/bwd entry in the hot modules must reach the pool sink
+//!   fwd/bwd/decode entry in the hot modules must reach the pool sink
 //!   (`Exec::run`) through a chain of Exec-carrying calls; and any
-//!   fwd/bwd entry reachable from the serving/training roots
+//!   fwd/bwd/decode entry reachable from the serving/training roots
 //!   (`Server`/`LmTrainer`/`ClsTrainer`/`run_task`) without an `Exec`
 //!   is a finding. (The per-slice `flash2` oracles carry R6 pragmas:
 //!   they take the handle for its worker count but run their own
@@ -263,6 +265,28 @@
 //! unused pragma is itself a finding, and the reviewer bar is "the
 //! rule is wrong here", not "the rule is inconvenient here".
 //!
+//! **Worked example — the split-KV decode kernel** (PR 10, the serving
+//! tier's pool site, built exactly by the recipe above):
+//! [`flash2::flash2_decode`] takes `exec: &Exec` and dispatches one
+//! `DecodeItem` per KV span straight into `Exec::run`
+//! (`FaultSite::DecodeSpan`) (R6). Spans only *score* their tiles —
+//! order-free work — through the sanctioned counted accessor
+//! `score_span_tiles`; the order-sensitive online-softmax absorb
+//! replays the spilled score tiles at the merge site, in global tile
+//! order, through `absorb_scored_tiles` — the literal loop body of the
+//! fused sweep — so the output is bitwise identical to
+//! [`flash2::flash2_forward`] for any worker count and span size *by
+//! construction*, and the paged-cache accessors in [`kv_cache`]
+//! (`append_kv`/`k_tile`/`v_tile`) joined the sanctioned list the same
+//! way (R5). `DecodeItem` claims its `s_win` spill window, which
+//! `reset`/`poison`/`check_finite` agree on and the merge stitches
+//! exactly once (R7). The kernel is named in the IO wall against
+//! `sim::cost::flash2_decode` (access-for-access, ragged spans
+//! included) and `DecodeSpan` faults are injected in the chaos wall —
+//! both per-kernel and through the continuous-batching serving loop
+//! (`coordinator::server`), where an exhausted retry budget surfaces as
+//! a typed error and the loop evicts that one request (R4).
+//!
 //! **Audit contract** (`--features audit`, see `attn::audit`): every
 //! pool run checks that work items claim pairwise-disjoint output
 //! windows before any worker spawns, that the address-free item→slot
@@ -290,6 +314,7 @@ pub mod exec;
 pub mod faults;
 pub mod flash;
 pub mod flash2;
+pub mod kv_cache;
 pub mod masks;
 pub mod standard;
 

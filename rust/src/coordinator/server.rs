@@ -1,18 +1,411 @@
-//! Minimal batched-inference server demo over the logits artifact: a
-//! request queue, greedy/temperature sampling, and latency/throughput
-//! accounting. Demonstrates the "Python never on the request path"
-//! property of the stack: serving is a loop of PJRT executions.
+//! The serving tier: a continuous-batching engine over the split-KV
+//! decode kernel and the paged KV cache, plus the original
+//! batched-inference demo over the logits artifact.
+//!
+//! [`ContinuousBatcher`] is the TGI-style admission loop the ROADMAP
+//! names (`router/src/infer.rs`): a waiting queue with **token-budget
+//! admission** (a request is admitted while the running batch's peak
+//! token footprint — prompt + max new tokens per request — fits the
+//! budget), a **prefill** step that joins newly admitted requests into
+//! the batch through one pooled `flash2_forward_many` dispatch, and a
+//! **decode** step that advances every running request one token via
+//! `attn::flash2::flash2_decode` over its paged cache
+//! (`attn::kv_cache`), filtering finished requests' pages out with the
+//! zero-traffic `KvBatch::filter` — the ragged-batch lifecycle.
+//!
+//! Fault semantics are per-request skip-and-report, like
+//! `LmTrainer::train`: everything runs on the caller's plan-carrying
+//! [`Exec`] handle, injected faults are retried inside the pool, and a
+//! request that exhausts its budget surfaces as a typed `AttnError` —
+//! the loop **evicts that one request** (recording the reason) and the
+//! rest of the batch continues bitwise as if the victim never faulted
+//! (chaos-tested in `rust/tests/chaos.rs`). Request content is
+//! synthesized deterministically from each request's seed
+//! ([`token_row`]), so the whole serve trace is a pure function of
+//! (requests, config, fault plan) — no wall clock on the request path.
+//!
+//! [`Server`] remains the batched-inference demo over the logits
+//! artifact ("Python never on the request path": serving is a loop of
+//! PJRT executions).
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::trainer::LmTrainer;
+use crate::attn::batched::{flash2_forward_many, AttnSlice};
+use crate::attn::faults::{AttnError, FaultReport};
 use crate::attn::flash::Blocks;
-use crate::attn::Exec;
+use crate::attn::flash2::flash2_decode;
+use crate::attn::kv_cache::KvBatch;
+use crate::attn::{AttnConfig, Exec};
 use crate::runtime::Runtime;
 use crate::sim::cost;
+use crate::sim::hbm::Hbm;
+use crate::tensor::Tensor;
 use crate::util::rng::SplitMix64;
+
+/// Role tags for [`token_row`]'s deterministic row streams.
+pub const ROLE_Q: u64 = 1;
+pub const ROLE_K: u64 = 2;
+pub const ROLE_V: u64 = 3;
+
+/// The deterministic [d] feature row of a request's token at `pos` for
+/// one of the Q/K/V roles: a pure function of (seed, role, pos), so a
+/// request's rows are identical no matter when it was admitted, which
+/// batch it shares, or whether another request faulted — the property
+/// the chaos wall asserts bitwise.
+pub fn token_row(seed: u64, role: u64, pos: usize, d: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(
+        seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ role.wrapping_mul(0xD1B5_4A32_D192_ED03)
+            ^ (pos as u64).wrapping_mul(0xA076_1D64_78BD_642F),
+    );
+    rng.normal_vec(d, 0.5)
+}
+
+/// One decode request: `prompt_len` prompt tokens, then generation
+/// until `max_new_tokens` output rows exist (the prefill's last row
+/// counts as the first, as in TGI). Content is synthesized from `seed`
+/// via [`token_row`].
+#[derive(Clone, Debug)]
+pub struct DecodeRequest {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+/// Per-request outcome: the produced attention-output rows, in order,
+/// and the eviction reason if the fault plane removed it early.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    /// One [d] row per produced token: the prefill's last output row,
+    /// then one row per decode step.
+    pub steps: Vec<Vec<f32>>,
+    /// `Some(reason)` iff the request was evicted before finishing.
+    pub evicted: Option<String>,
+}
+
+/// Engine geometry and admission policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Feature dimension of every request.
+    pub d: usize,
+    /// KV page rows = the kernel's column-tile height (`Blocks::b_c`).
+    pub b_c: usize,
+    /// Split-KV span size handed to `flash2_decode` (in column tiles).
+    pub span_tiles: usize,
+    /// Admission budget on the running batch's peak token footprint:
+    /// Σ (prompt_len + max_new_tokens) over running requests. A request
+    /// that alone exceeds the budget is still admitted into an empty
+    /// batch (no livelock), mirroring TGI's single-request floor.
+    pub token_budget: usize,
+}
+
+/// Aggregate serve-trace report: per-request outcomes plus the merged
+/// fault-plane accounting across every pooled dispatch.
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    /// Requests that produced all `max_new_tokens` rows, in completion
+    /// order.
+    pub completed: Vec<RequestOutcome>,
+    /// Requests the fault plane evicted, with their partial output.
+    pub evicted: Vec<RequestOutcome>,
+    /// Prompt tokens prefilled (successfully joined requests only).
+    pub prefill_tokens: usize,
+    /// Output rows produced (prefill-first rows + decode rows).
+    pub generated_tokens: usize,
+    /// Per-request decode-kernel invocations.
+    pub decode_steps: usize,
+    /// Merged pool reports: retries, contained faults, retry traffic.
+    pub faults: FaultReport,
+}
+
+/// One running request: its definition, produced rows, and progress.
+#[derive(Clone, Debug)]
+struct Active {
+    req: DecodeRequest,
+    generated: usize,
+    steps: Vec<Vec<f32>>,
+}
+
+/// The continuous-batching serving engine — see the module docs.
+pub struct ContinuousBatcher {
+    cfg: BatcherConfig,
+    waiting: VecDeque<DecodeRequest>,
+    running: Vec<Active>,
+    kv: KvBatch,
+}
+
+impl ContinuousBatcher {
+    pub fn new(cfg: BatcherConfig) -> ContinuousBatcher {
+        assert!(cfg.d >= 1 && cfg.b_c >= 1 && cfg.span_tiles >= 1, "BatcherConfig: degenerate");
+        assert!(cfg.token_budget >= 1, "BatcherConfig: zero token budget");
+        let kv = KvBatch::new(cfg.b_c, cfg.d);
+        ContinuousBatcher { cfg, waiting: VecDeque::new(), running: Vec::new(), kv }
+    }
+
+    /// Enqueue a request into the waiting queue.
+    pub fn submit(&mut self, req: DecodeRequest) {
+        assert!(req.prompt_len >= 1, "DecodeRequest: empty prompt");
+        assert!(req.max_new_tokens >= 1, "DecodeRequest: zero tokens requested");
+        self.waiting.push_back(req);
+    }
+
+    /// Waiting-queue depth.
+    pub fn waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Running-batch size.
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Cached tokens across the running batch (the paged cache's view).
+    pub fn cached_tokens(&self) -> usize {
+        self.kv.total_tokens()
+    }
+
+    fn blocks(&self) -> Blocks {
+        Blocks::explicit(self.cfg.b_c, self.cfg.b_c)
+    }
+
+    /// Peak token footprint of the running batch — the admitted quantity.
+    fn budget_used(&self) -> usize {
+        self.running.iter().map(|a| a.req.prompt_len + a.req.max_new_tokens).sum()
+    }
+
+    /// Token-budget admission: drain the waiting queue head while the
+    /// peak footprint fits (always at least one request into an empty
+    /// batch).
+    fn admit(&mut self) -> Vec<DecodeRequest> {
+        let mut admitted = Vec::new();
+        let mut used = self.budget_used();
+        while let Some(front) = self.waiting.front() {
+            let cost = front.prompt_len + front.max_new_tokens;
+            let batch_empty = self.running.is_empty() && admitted.is_empty();
+            if !batch_empty && used + cost > self.cfg.token_budget {
+                break;
+            }
+            used += cost;
+            admitted.push(self.waiting.pop_front().expect("admit: front just peeked"));
+        }
+        admitted
+    }
+
+    /// Rebuild the page table to exactly `keep` — the TGI `filter` on
+    /// request exit. Zero HBM traffic: page ownership moves, no element
+    /// is read or written.
+    fn filter_kv(&mut self, keep: &[u64]) {
+        let kv = std::mem::replace(&mut self.kv, KvBatch::new(self.cfg.b_c, self.cfg.d));
+        self.kv = kv.filter(keep);
+    }
+
+    /// Which admitted slice a batch-level prefill error names, if any.
+    fn error_slice(e: &AttnError) -> Option<usize> {
+        match e {
+            AttnError::NonFinite { slice, .. } | AttnError::ItemFailed { slice, .. } => {
+                Some(*slice)
+            }
+            _ => None,
+        }
+    }
+
+    /// Prefill newly admitted requests through ONE pooled
+    /// `flash2_forward_many` dispatch (causal over their own prompts) and
+    /// join them into the running batch. A typed error names the faulted
+    /// slice: that request is evicted (pages filtered out, reason
+    /// recorded) and the prefill retries with the survivors — skip and
+    /// report, never kill the batch.
+    fn prefill(
+        &mut self,
+        mut admitted: Vec<DecodeRequest>,
+        exec: &Exec,
+        hbm: &mut Hbm,
+        report: &mut ServeReport,
+    ) {
+        let d = self.cfg.d;
+        for req in &admitted {
+            self.kv.admit(req.id);
+            let mut k_rows = Vec::with_capacity(req.prompt_len * d);
+            let mut v_rows = Vec::with_capacity(req.prompt_len * d);
+            for pos in 0..req.prompt_len {
+                k_rows.extend(token_row(req.seed, ROLE_K, pos, d));
+                v_rows.extend(token_row(req.seed, ROLE_V, pos, d));
+            }
+            self.kv.append_kv(req.id, &k_rows, &v_rows, req.prompt_len, hbm);
+        }
+        while !admitted.is_empty() {
+            let snaps: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, usize)> = admitted
+                .iter()
+                .map(|req| {
+                    let cache = self.kv.get(req.id).expect("prefill: cache admitted above");
+                    let mut q_rows = Vec::with_capacity(req.prompt_len * d);
+                    for pos in 0..req.prompt_len {
+                        q_rows.extend(token_row(req.seed, ROLE_Q, pos, d));
+                    }
+                    (q_rows, cache.snapshot_k(), cache.snapshot_v(), cache.len())
+                })
+                .collect();
+            let slices: Vec<AttnSlice<'_>> = admitted
+                .iter()
+                .zip(&snaps)
+                .map(|(req, (q, k, v, len))| AttnSlice {
+                    q,
+                    k,
+                    v,
+                    n: req.prompt_len,
+                    n_k: *len,
+                    d,
+                    cfg: AttnConfig::new().causal(),
+                })
+                .collect();
+            match flash2_forward_many(&slices, self.blocks(), exec, hbm) {
+                Ok((outs, rep)) => {
+                    report.faults.merge(&rep);
+                    for (req, out) in admitted.into_iter().zip(outs) {
+                        let last = out.o.data[(req.prompt_len - 1) * d..].to_vec();
+                        report.prefill_tokens += req.prompt_len;
+                        report.generated_tokens += 1;
+                        self.running.push(Active { req, generated: 1, steps: vec![last] });
+                    }
+                    return;
+                }
+                Err(e) => {
+                    // Evict the named slice and retry with the survivors;
+                    // a non-attributable error (shard/preflight) evicts
+                    // the whole admitted set — it is a config fault, not
+                    // a per-request one.
+                    let victims: Vec<DecodeRequest> = match Self::error_slice(&e) {
+                        Some(idx) => vec![admitted.remove(idx)],
+                        None => admitted.drain(..).collect(),
+                    };
+                    for req in victims {
+                        println!("[serve] request {} evicted at prefill: {e}", req.id);
+                        report.evicted.push(RequestOutcome {
+                            id: req.id,
+                            steps: Vec::new(),
+                            evicted: Some(e.to_string()),
+                        });
+                    }
+                    let keep: Vec<u64> = self
+                        .running
+                        .iter()
+                        .map(|a| a.req.id)
+                        .chain(admitted.iter().map(|r| r.id))
+                        .collect();
+                    self.filter_kv(&keep);
+                }
+            }
+        }
+    }
+
+    /// Advance every running request one token: append the step's K/V
+    /// row to its paged cache (counted), then run the split-KV decode
+    /// kernel over the full history. A typed error evicts exactly that
+    /// request; every other request's rows are bitwise those of the
+    /// fault-free trace (per-request content is a pure function of its
+    /// seed, and each request is its own pooled dispatch).
+    fn decode_step(&mut self, exec: &Exec, hbm: &mut Hbm, report: &mut ServeReport) {
+        let d = self.cfg.d;
+        let blocks = Blocks::explicit(1, self.cfg.b_c);
+        let mut any_evicted = false;
+        let mut idx = 0;
+        while idx < self.running.len() {
+            let (id, seed) = {
+                let a = &self.running[idx];
+                (a.req.id, a.req.seed)
+            };
+            let pos = self.kv.get(id).expect("decode: running request has a cache").len();
+            let k_row = token_row(seed, ROLE_K, pos, d);
+            let v_row = token_row(seed, ROLE_V, pos, d);
+            self.kv.append_kv(id, &k_row, &v_row, 1, hbm);
+            let cache = self.kv.get(id).expect("decode: cache still present");
+            let n_k = cache.len();
+            let q = Tensor::from_vec(&[1, d], token_row(seed, ROLE_Q, pos, d));
+            let k = Tensor::from_vec(&[n_k, d], cache.snapshot_k());
+            let v = Tensor::from_vec(&[n_k, d], cache.snapshot_v());
+            let cfg = AttnConfig::new();
+            match flash2_decode(&q, &k, &v, &cfg, blocks, self.cfg.span_tiles, exec, hbm) {
+                Ok((out, rep)) => {
+                    report.faults.merge(&rep);
+                    let active = &mut self.running[idx];
+                    active.steps.push(out.o.data);
+                    active.generated += 1;
+                    report.generated_tokens += 1;
+                    report.decode_steps += 1;
+                    idx += 1;
+                }
+                Err(e) => {
+                    let active = self.running.remove(idx);
+                    println!("[serve] request {} evicted at decode: {e}", active.req.id);
+                    report.evicted.push(RequestOutcome {
+                        id: active.req.id,
+                        steps: active.steps,
+                        evicted: Some(e.to_string()),
+                    });
+                    any_evicted = true;
+                }
+            }
+        }
+        if any_evicted {
+            let keep: Vec<u64> = self.running.iter().map(|a| a.req.id).collect();
+            self.filter_kv(&keep);
+        }
+    }
+
+    /// Move finished requests out of the batch and drop their pages
+    /// (the zero-traffic filter).
+    fn retire_finished(&mut self, report: &mut ServeReport) {
+        let mut any_finished = false;
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].generated >= self.running[i].req.max_new_tokens {
+                let a = self.running.remove(i);
+                report.completed.push(RequestOutcome {
+                    id: a.req.id,
+                    steps: a.steps,
+                    evicted: None,
+                });
+                any_finished = true;
+            } else {
+                i += 1;
+            }
+        }
+        if any_finished {
+            let keep: Vec<u64> = self.running.iter().map(|a| a.req.id).collect();
+            self.filter_kv(&keep);
+        }
+    }
+
+    /// One scheduler tick: admit → prefill the joiners → decode every
+    /// running request one token → retire the finished. Public so tests
+    /// and the bench can interleave submissions with ticks.
+    pub fn step(&mut self, exec: &Exec, hbm: &mut Hbm, report: &mut ServeReport) {
+        let admitted = self.admit();
+        if !admitted.is_empty() {
+            self.prefill(admitted, exec, hbm, report);
+        }
+        // A max_new_tokens == 1 request is done after prefill.
+        self.retire_finished(report);
+        self.decode_step(exec, hbm, report);
+        self.retire_finished(report);
+    }
+
+    /// Drive the engine until every submitted request completed or was
+    /// evicted; returns the full serve trace.
+    pub fn run(&mut self, exec: &Exec, hbm: &mut Hbm) -> ServeReport {
+        let mut report = ServeReport::default();
+        while !self.waiting.is_empty() || !self.running.is_empty() {
+            self.step(exec, hbm, &mut report);
+        }
+        report
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Completion {
@@ -200,5 +593,87 @@ mod tests {
         assert!(msg.contains("position 3"), "{msg}");
         row[5] = f32::INFINITY;
         assert!(Server::validate_logits(&row, 0).is_err());
+    }
+
+    fn batcher(token_budget: usize) -> ContinuousBatcher {
+        ContinuousBatcher::new(BatcherConfig { d: 8, b_c: 4, span_tiles: 2, token_budget })
+    }
+
+    #[test]
+    fn token_rows_are_pure_functions_of_seed_role_pos() {
+        assert_eq!(token_row(7, ROLE_Q, 3, 16), token_row(7, ROLE_Q, 3, 16));
+        assert_ne!(token_row(7, ROLE_Q, 3, 16), token_row(7, ROLE_K, 3, 16));
+        assert_ne!(token_row(7, ROLE_Q, 3, 16), token_row(7, ROLE_Q, 4, 16));
+        assert_ne!(token_row(7, ROLE_Q, 3, 16), token_row(8, ROLE_Q, 3, 16));
+    }
+
+    #[test]
+    fn admission_respects_token_budget_but_never_starves_an_empty_batch() {
+        let mut b = batcher(10);
+        // Footprints 6, 6, 20: first fills past half the budget, second
+        // must wait, third alone exceeds the budget entirely.
+        b.submit(DecodeRequest { id: 0, prompt_len: 2, max_new_tokens: 4, seed: 1 });
+        b.submit(DecodeRequest { id: 1, prompt_len: 2, max_new_tokens: 4, seed: 2 });
+        b.submit(DecodeRequest { id: 2, prompt_len: 10, max_new_tokens: 10, seed: 3 });
+        let first = b.admit();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(b.waiting(), 2);
+        // With id 0 running the batch is non-empty, so nothing else fits.
+        b.running.push(Active { req: first.into_iter().next().unwrap(), generated: 1, steps: vec![] });
+        assert!(b.admit().is_empty());
+        // Empty batch admits the over-budget head rather than livelocking.
+        b.running.clear();
+        let next = b.admit();
+        assert_eq!(next.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        b.waiting.clear();
+        b.submit(DecodeRequest { id: 2, prompt_len: 10, max_new_tokens: 10, seed: 3 });
+        assert_eq!(b.admit().len(), 1);
+    }
+
+    #[test]
+    fn serve_trace_completes_every_request_with_the_promised_token_counts() {
+        let mut b = batcher(64);
+        b.submit(DecodeRequest { id: 10, prompt_len: 5, max_new_tokens: 3, seed: 11 });
+        b.submit(DecodeRequest { id: 11, prompt_len: 2, max_new_tokens: 1, seed: 12 });
+        b.submit(DecodeRequest { id: 12, prompt_len: 7, max_new_tokens: 4, seed: 13 });
+        let exec = Exec::new(2);
+        let mut hbm = Hbm::default();
+        let report = b.run(&exec, &mut hbm);
+        assert_eq!(b.waiting(), 0);
+        assert_eq!(b.running(), 0);
+        assert_eq!(b.cached_tokens(), 0, "finished requests' pages filtered out");
+        assert!(report.evicted.is_empty());
+        assert_eq!(report.prefill_tokens, 5 + 2 + 7);
+        assert_eq!(report.generated_tokens, 3 + 1 + 4);
+        assert_eq!(report.decode_steps, 2 + 0 + 3);
+        assert_eq!(report.faults.faults(), 0);
+        let mut by_id: Vec<(u64, usize)> =
+            report.completed.iter().map(|o| (o.id, o.steps.len())).collect();
+        by_id.sort_unstable();
+        assert_eq!(by_id, vec![(10, 3), (11, 1), (12, 4)]);
+        for out in &report.completed {
+            assert!(out.evicted.is_none());
+            assert!(out.steps.iter().all(|s| s.len() == 8 && s.iter().all(|x| x.is_finite())));
+        }
+    }
+
+    #[test]
+    fn request_rows_are_bitwise_independent_of_batch_composition() {
+        let solo_req = DecodeRequest { id: 42, prompt_len: 6, max_new_tokens: 4, seed: 99 };
+        let exec = Exec::new(3);
+        let mut solo = batcher(64);
+        solo.submit(solo_req.clone());
+        let mut hbm = Hbm::default();
+        let solo_steps = solo.run(&exec, &mut hbm).completed.remove(0).steps;
+
+        let mut mixed = batcher(64);
+        mixed.submit(DecodeRequest { id: 1, prompt_len: 3, max_new_tokens: 6, seed: 5 });
+        mixed.submit(solo_req);
+        mixed.submit(DecodeRequest { id: 2, prompt_len: 9, max_new_tokens: 2, seed: 6 });
+        let mut hbm = Hbm::default();
+        let report = mixed.run(&exec, &mut hbm);
+        let mixed_steps =
+            &report.completed.iter().find(|o| o.id == 42).expect("request 42 completed").steps;
+        assert_eq!(&solo_steps, mixed_steps, "shared-batch rows must match the solo trace bitwise");
     }
 }

@@ -367,6 +367,92 @@ pub fn flash2_fwd_shard_item(
     live * (2 * b_c * d)
 }
 
+/// Split-KV decode forward (attn::flash2::flash2_decode): a short Q
+/// ([n, d], one to a few rows) against a long KV history ([n_k, d]),
+/// the KV axis split into spans of `span_tiles` column tiles — one pool
+/// item per span. Matches the instrumented kernel access-for-access on
+/// ANY tiling (ragged tiles and ragged last span included):
+///
+///   item side:  Q loaded once per span (spans·n·d — the split-KV
+///               replication cost), K_j streamed once per causally-live
+///               tile (bc·d), the masked score tile spilled (n·bc);
+///   merge side: each spilled tile reloaded (n·bc) + V_j streamed once
+///               (bc·d), in global tile order;
+///   epilogue:   O + logsumexp stored exactly once (n·d + n).
+///
+/// vs [`flash2_fwd`] with the same tiling the decode pays
+/// (spans−1)·n·d + 2·Σ n·bc extra — vanishing for small n, the regime
+/// the kernel exists for. Causal skip judged at offset 0 (the serving
+/// path decodes with `kv_len` limits, not causal).
+pub fn flash2_decode(
+    n: u64,
+    n_k: u64,
+    d: u64,
+    blocks: Blocks,
+    span_tiles: u64,
+    causal: bool,
+    dropout: bool,
+) -> Cost {
+    let b_c = blocks.b_c as u64;
+    let t_c = n_k.div_ceil(b_c);
+    if n == 0 || t_c == 0 {
+        return Cost { hbm_elems: 0, flops: 0, kernels: 0 };
+    }
+    assert!(span_tiles >= 1, "flash2_decode: span_tiles must be >= 1");
+    let spans = t_c.div_ceil(span_tiles);
+    let mut hbm = spans * n * d; // Q once per span
+    let mut flops = 0u64;
+    for j in 0..t_c {
+        let c0 = j * b_c;
+        if causal && c0 > n - 1 {
+            continue;
+        }
+        let bc = ((j + 1) * b_c).min(n_k) - c0;
+        // K stream + S spill (item side), S reload + V stream (merge).
+        hbm += 2 * bc * d + 2 * n * bc;
+        let tile = n * bc;
+        let mut tile_flops = 4 * tile * d + SOFTMAX_OPS_PER_ELEM * tile + 2 * n;
+        if dropout {
+            tile_flops += DROPOUT_OPS_PER_ELEM * tile;
+        }
+        flops += tile_flops;
+    }
+    hbm += n * d + n; // epilogue: O + logsumexp, once
+    Cost { hbm_elems: hbm, flops: flops + n * (d + 2), kernels: 2 }
+}
+
+/// HBM traffic of ONE split-KV decode pool work item — span `sp` of the
+/// KV axis: Q loaded once, K_j + the score-tile spill per causally-live
+/// tile of the span. Exact on any tiling; the per-item form the fault
+/// plane charges for every retried attempt (`FaultReport::retry_hbm`),
+/// asserted access-for-access in the chaos wall. Summing over `sp` plus
+/// the merge-side reload (n·bc + bc·d per live tile) and the epilogue
+/// (n·d + n) recovers [`flash2_decode`]'s total (tested below).
+pub fn flash2_decode_item(
+    n: u64,
+    n_k: u64,
+    d: u64,
+    blocks: Blocks,
+    span_tiles: u64,
+    sp: u64,
+    causal: bool,
+) -> u64 {
+    let b_c = blocks.b_c as u64;
+    let t_c = n_k.div_ceil(b_c);
+    let lo = sp * span_tiles;
+    let hi = ((sp + 1) * span_tiles).min(t_c);
+    let mut hbm = n * d; // Q once per span, even fully-skipped spans
+    for j in lo..hi {
+        let c0 = j * b_c;
+        if causal && c0 > n - 1 {
+            continue;
+        }
+        let bc = ((j + 1) * b_c).min(n_k) - c0;
+        hbm += bc * d + n * bc;
+    }
+    hbm
+}
+
 /// Rectangular flash forward: n_q query rows attending n_k key rows —
 /// the per-device cost of the sequence-parallel multi-GPU extension
 /// (attn::distributed), where each device holds a key shard.
@@ -689,6 +775,37 @@ mod tests {
                 })
                 .sum();
             assert_eq!(total, flash2_fwd(n, d, blocks, causal, false).hbm_elems);
+        }
+    }
+
+    #[test]
+    fn decode_items_plus_merge_sum_to_flash2_decode_total() {
+        // Item forms (what retries are charged) + the merge-side reload
+        // + the epilogue must tile the decode closed form exactly —
+        // ragged tiles and a ragged last span included.
+        for &(n, n_k, d, bc, span_tiles, causal) in &[
+            (1u64, 96u64, 16u64, 8u64, 2u64, false),
+            (4, 100, 8, 8, 3, false),
+            (2, 64, 16, 16, 1, true),
+            (3, 72, 8, 8, 100, false), // 1 span covers everything
+        ] {
+            let blocks = Blocks::explicit(bc as usize, bc as usize);
+            let t_c = n_k.div_ceil(bc);
+            let items: u64 = (0..t_c.div_ceil(span_tiles))
+                .map(|sp| flash2_decode_item(n, n_k, d, blocks, span_tiles, sp, causal))
+                .sum();
+            let merge: u64 = (0..t_c)
+                .filter(|&j| !causal || j * bc <= n - 1)
+                .map(|j| {
+                    let w = ((j + 1) * bc).min(n_k) - j * bc;
+                    n * w + w * d
+                })
+                .sum();
+            assert_eq!(
+                items + merge + (n * d + n),
+                flash2_decode(n, n_k, d, blocks, span_tiles, causal, false).hbm_elems,
+                "n={n} n_k={n_k} span_tiles={span_tiles} causal={causal}"
+            );
         }
     }
 

@@ -27,6 +27,7 @@ use flashattn::attn::distributed::{
 };
 use flashattn::attn::faults::{FaultKind, FaultPlan, FaultSite};
 use flashattn::attn::flash::Blocks;
+use flashattn::attn::flash2::flash2_decode;
 use flashattn::attn::masks::BlockMask;
 use flashattn::attn::{AttnConfig, Exec};
 use flashattn::sim::hbm::Hbm;
@@ -514,4 +515,86 @@ fn growth_grid_fingerprints_are_worker_count_invariant() {
             Some(base) => assert_eq!(&runs, base, "fingerprints drifted while growing to w={w}"),
         }
     }
+}
+
+#[test]
+fn decode_mapping_is_worker_count_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // 40 keys / b_c 8 / one tile per span = 5 spans, the last tile full;
+    // a second config with span_tiles 2 exercises the ragged last span.
+    let (n, n_k, d) = (2usize, 40usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0xDEC_A1);
+    let k = rand(&[n_k, d], 0xDEC_A2);
+    let v = rand(&[n_k, d], 0xDEC_A3);
+    let cfg = AttnConfig::default();
+    for span_tiles in [1usize, 2] {
+        let mut baseline: Option<Vec<PoolRun>> = None;
+        for workers in [1usize, 2, 5] {
+            let exec = Exec::new(workers);
+            let runs = record(|| {
+                let mut hbm = Hbm::new();
+                let _ = flash2_decode(&q, &k, &v, &cfg, blocks, span_tiles, &exec, &mut hbm);
+            });
+            assert_eq!(runs.len(), 1, "span_tiles={span_tiles} w={workers}");
+            match &baseline {
+                None => {
+                    // One item per span, claiming exactly its spill
+                    // window of concatenated [n, b_c] score tiles.
+                    let t_c = n_k.div_ceil(blocks.b_c);
+                    let spans = t_c.div_ceil(span_tiles);
+                    assert_eq!(runs[0].items.len(), spans);
+                    for (i, (idx, id, claims)) in runs[0].items.iter().enumerate() {
+                        assert_eq!(*idx, i);
+                        assert_eq!(*id, (0, i));
+                        let tiles = ((i + 1) * span_tiles).min(t_c) - i * span_tiles;
+                        assert_eq!(claims, &vec![("s", tiles * n * blocks.b_c)]);
+                    }
+                    baseline = Some(runs);
+                }
+                Some(base) => assert_eq!(
+                    &runs, base,
+                    "item→slot mapping drifted at span_tiles={span_tiles} w={workers}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn explorer_decode_schedules_are_claim_order_invariant() {
+    let _g = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    // 32 keys / b_c 8 / one tile per span = exactly 4 DecodeSpan items,
+    // so permutations(4) (>= 24 drain orders) explores the decode claim
+    // space exhaustively, across workers {1, 2, 5}, fault-free and
+    // under fixed-coordinate faults.
+    let (n, n_k, d) = (1usize, 32usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0xE5_1);
+    let k = rand(&[n_k, d], 0xE5_2);
+    let v = rand(&[n_k, d], 0xE5_3);
+    let cfg = AttnConfig::default();
+    let work = |exec: &Exec| {
+        let mut hbm = Hbm::new();
+        let out = flash2_decode(&q, &k, &v, &cfg, blocks, 1, exec, &mut hbm)
+            .expect("recovers")
+            .0;
+        (out.o.data, out.lse, hbm.accesses())
+    };
+    let orders = permutations(4);
+    assert!(orders.len() >= 24);
+    let workers = [1usize, 2, 5];
+
+    explore_schedules("decode/fault-free", &Exec::new(1), &orders, &workers, work);
+    explore_schedules("decode/scoped", &Exec::scoped(1), &orders, &workers, work);
+    // Retry requeues re-enter the claim competition at every drain
+    // order: panic, poison-then-guardrail, and dropped-merge retries at
+    // fixed (item, attempt) coordinates.
+    let plan = FaultPlan::none()
+        .with(FaultSite::DecodeSpan, 1, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::DecodeSpan, 2, 0, FaultKind::PoisonedPartial)
+        .with(FaultSite::DecodeSpan, 3, 0, FaultKind::DroppedMerge)
+        .with(FaultSite::DecodeSpan, 3, 1, FaultKind::WorkerPanic);
+    let faulted = Exec::new(1).with_plan(&plan).validated();
+    explore_schedules("decode/faulted", &faulted, &orders, &workers, work);
 }

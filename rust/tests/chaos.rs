@@ -28,6 +28,7 @@ use flashattn::attn::distributed::{
 };
 use flashattn::attn::faults::{AttnError, FaultKind, FaultPlan, FaultSite};
 use flashattn::attn::flash::Blocks;
+use flashattn::attn::flash2::flash2_decode;
 use flashattn::attn::masks::BlockMask;
 use flashattn::attn::{AttnConfig, Exec};
 use flashattn::sim::cost;
@@ -1028,4 +1029,225 @@ fn checked_paths_without_faults_are_bitwise_and_traffic_identical() {
     assert_eq!(outs[0].o.data, plain[0].o.data);
     assert_eq!(outs[0].lse, plain[0].lse);
     assert_eq!(report.faults(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Split-KV decode: span items recover bitwise, retries are exact, and
+// the serving loop evicts per request — never the batch.
+// ---------------------------------------------------------------------
+
+#[test]
+fn decode_span_recovers_bitwise_with_exact_retry_traffic() {
+    let (n, n_k, d, b_c, span_tiles) = (2usize, 100usize, 8usize, 8usize, 2usize);
+    let blocks = Blocks::explicit(b_c, b_c);
+    let q = rand(&[n, d], 0xDEC_1);
+    let k = rand(&[n_k, d], 0xDEC_2);
+    let v = rand(&[n_k, d], 0xDEC_3);
+    let spans = n_k.div_ceil(b_c).div_ceil(span_tiles);
+    // Non-causal: fault the first span and the ragged last span. Causal
+    // with n = 2 local rows leaves only span 0 causally live — a
+    // poisoned *empty* spill window is (correctly) undetectable, so the
+    // causal grid faults the one live span.
+    for (causal, faulted) in
+        [(false, vec![0usize, spans - 1]), (true, vec![0usize])]
+    {
+        let nf = faulted.len() as u64;
+        let cfg = AttnConfig { causal, ..Default::default() };
+        let mut clean_hbm = Hbm::new();
+        let baseline = flash2_decode(
+            &q, &k, &v, &cfg, blocks, span_tiles, &Exec::new(1), &mut clean_hbm,
+        )
+        .expect("fault-free")
+        .0;
+        for kind in ALL_KINDS {
+            let mut plan = FaultPlan::none();
+            for &it in &faulted {
+                plan = plan.with(FaultSite::DecodeSpan, it, 0, kind);
+            }
+            for workers in [1usize, 2, 5] {
+                let ctx = format!("causal={causal} kind={kind:?} w={workers}");
+                let mut hbm = Hbm::new();
+                let gx = guarded(workers, &plan);
+                let (out, report) =
+                    flash2_decode(&q, &k, &v, &cfg, blocks, span_tiles, &gx, &mut hbm)
+                        .unwrap_or_else(|e| panic!("must recover: {e} [{ctx}]"));
+                assert_eq!(out.o.data, baseline.o.data, "O not bitwise [{ctx}]");
+                assert_eq!(out.lse, baseline.lse, "lse not bitwise [{ctx}]");
+                if kind == FaultKind::DelayedShard {
+                    assert_eq!(report.delayed, nf, "{ctx}");
+                    assert_eq!(report.retries, 0, "{ctx}");
+                    assert_eq!(report.retry_hbm.accesses(), 0, "{ctx}");
+                    assert_eq!(cost::measured(&hbm), cost::measured(&clean_hbm), "{ctx}");
+                } else {
+                    assert_eq!(report.retries, nf, "{ctx}");
+                    assert_eq!(report.faults(), nf, "{ctx}");
+                    assert_fault_counters(&report, kind, nf);
+                    // Each faulted attempt ran its span to completion:
+                    // exactly one per-span closed form, re-done once.
+                    let expected: u64 = faulted
+                        .iter()
+                        .map(|&sp| {
+                            cost::flash2_decode_item(
+                                n as u64,
+                                n_k as u64,
+                                d as u64,
+                                blocks,
+                                span_tiles as u64,
+                                sp as u64,
+                                causal,
+                            )
+                        })
+                        .sum();
+                    assert_eq!(report.retry_hbm.accesses(), expected, "retry traffic [{ctx}]");
+                    assert_eq!(
+                        cost::measured(&hbm),
+                        cost::measured(&clean_hbm) + expected,
+                        "total = clean + retries [{ctx}]"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_exhausted_retry_budget_is_a_typed_error_with_span_provenance() {
+    let (n, n_k, d) = (1usize, 64usize, 8usize);
+    let blocks = Blocks::explicit(8, 8);
+    let q = rand(&[n, d], 0xDEC_4);
+    let k = rand(&[n_k, d], 0xDEC_5);
+    let v = rand(&[n_k, d], 0xDEC_6);
+    let cfg = AttnConfig::default();
+
+    // Panic on every attempt of span 3: ItemFailed names the span.
+    let plan = FaultPlan::none()
+        .with(FaultSite::DecodeSpan, 3, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::DecodeSpan, 3, 1, FaultKind::WorkerPanic)
+        .with(FaultSite::DecodeSpan, 3, 2, FaultKind::WorkerPanic);
+    let err = flash2_decode(&q, &k, &v, &cfg, blocks, 2, &guarded(2, &plan), &mut Hbm::new())
+        .unwrap_err();
+    match err {
+        AttnError::ItemFailed { site, slice, block, attempts, .. } => {
+            assert_eq!(site, FaultSite::DecodeSpan);
+            assert_eq!((slice, block, attempts), (0, 3, 3));
+        }
+        e => panic!("expected ItemFailed, got {e:?}"),
+    }
+
+    // Poison on every attempt: the guardrail catches the NaN window
+    // (masked entries are the *finite* NEG_INF sentinel, so a NaN can
+    // only mean a poisoned partial) and surfaces NonFinite provenance.
+    let plan = FaultPlan::none()
+        .with(FaultSite::DecodeSpan, 1, 0, FaultKind::PoisonedPartial)
+        .with(FaultSite::DecodeSpan, 1, 1, FaultKind::PoisonedPartial)
+        .with(FaultSite::DecodeSpan, 1, 2, FaultKind::PoisonedPartial);
+    let err = flash2_decode(&q, &k, &v, &cfg, blocks, 2, &guarded(2, &plan), &mut Hbm::new())
+        .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::NonFinite {
+            site: FaultSite::DecodeSpan,
+            slice: 0,
+            batch: 0,
+            head: 0,
+            block: 1,
+            attempts: 3,
+        }
+    );
+    assert!(err.to_string().contains("split-KV decode span"), "{err}");
+}
+
+/// The serving-loop containment property: a request whose decode span
+/// faults past the retry budget is evicted **alone** — every other
+/// request's rows are bitwise those of the fault-free serve trace. The
+/// faulted span index is one only the long request's KV history ever
+/// reaches, so the plan provably cannot touch the short requests.
+#[test]
+fn serving_loop_evicts_only_the_faulted_request_and_keeps_the_rest_bitwise() {
+    use flashattn::coordinator::server::{BatcherConfig, ContinuousBatcher, DecodeRequest};
+
+    let cfg = BatcherConfig { d: 8, b_c: 4, span_tiles: 1, token_budget: 256 };
+    let requests = [
+        DecodeRequest { id: 1, prompt_len: 6, max_new_tokens: 3, seed: 0xA1 },
+        // The long request: first decode step sees n_k = 22 → 6 column
+        // tiles → span item 5 exists. The short requests peak at
+        // n_k ≤ 12 → never more than 3 spans.
+        DecodeRequest { id: 2, prompt_len: 21, max_new_tokens: 4, seed: 0xA2 },
+        DecodeRequest { id: 3, prompt_len: 4, max_new_tokens: 8, seed: 0xA3 },
+    ];
+
+    let serve = |exec: &Exec| {
+        let mut b = ContinuousBatcher::new(cfg.clone());
+        for r in &requests {
+            b.submit(r.clone());
+        }
+        b.run(exec, &mut Hbm::new())
+    };
+
+    let baseline = serve(&Exec::new(2));
+    assert_eq!(baseline.completed.len(), 3);
+    assert!(baseline.evicted.is_empty());
+
+    // Exhaust span 5's budget: only request 2 ever builds one.
+    let plan = FaultPlan::none()
+        .with(FaultSite::DecodeSpan, 5, 0, FaultKind::WorkerPanic)
+        .with(FaultSite::DecodeSpan, 5, 1, FaultKind::PoisonedPartial)
+        .with(FaultSite::DecodeSpan, 5, 2, FaultKind::WorkerPanic);
+    for workers in [1usize, 2, 5] {
+        let report = serve(&guarded(workers, &plan));
+        assert_eq!(report.evicted.len(), 1, "w={workers}");
+        assert_eq!(report.evicted[0].id, 2, "w={workers}");
+        let reason = report.evicted[0].evicted.as_deref().unwrap();
+        assert!(reason.contains("split-KV decode span"), "w={workers}: {reason}");
+        // The victim kept its pre-fault rows (prefill row only: the
+        // fault fires on its first decode step).
+        assert_eq!(report.evicted[0].steps.len(), 1, "w={workers}");
+        // Survivors: completed, and bitwise the fault-free trace.
+        let mut ids: Vec<u64> = report.completed.iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 3], "w={workers}");
+        for out in &report.completed {
+            let clean = baseline.completed.iter().find(|o| o.id == out.id).unwrap();
+            assert_eq!(out.steps, clean.steps, "request {} perturbed (w={workers})", out.id);
+        }
+    }
+}
+
+/// A transient decode fault (first attempt only) is retried inside the
+/// pool: nothing is evicted, every request completes bitwise, and the
+/// serve report carries the retry accounting.
+#[test]
+fn serving_loop_retries_transient_decode_faults_without_evicting() {
+    use flashattn::coordinator::server::{BatcherConfig, ContinuousBatcher, DecodeRequest};
+
+    let cfg = BatcherConfig { d: 8, b_c: 4, span_tiles: 1, token_budget: 256 };
+    let requests = [
+        DecodeRequest { id: 7, prompt_len: 21, max_new_tokens: 3, seed: 0xB1 },
+        DecodeRequest { id: 8, prompt_len: 5, max_new_tokens: 5, seed: 0xB2 },
+    ];
+    let serve = |exec: &Exec| {
+        let mut b = ContinuousBatcher::new(cfg.clone());
+        for r in &requests {
+            b.submit(r.clone());
+        }
+        b.run(exec, &mut Hbm::new())
+    };
+    let baseline = serve(&Exec::new(1));
+    assert!(baseline.evicted.is_empty());
+    assert_eq!(baseline.faults.retries, 0);
+
+    // First attempt of span 5 poisons — again only request 7 has it.
+    let plan =
+        FaultPlan::none().with(FaultSite::DecodeSpan, 5, 0, FaultKind::PoisonedPartial);
+    for workers in [1usize, 2, 5] {
+        let report = serve(&guarded(workers, &plan));
+        assert!(report.evicted.is_empty(), "w={workers}");
+        assert_eq!(report.completed.len(), 2, "w={workers}");
+        assert!(report.faults.retries >= 1, "w={workers}");
+        assert!(report.faults.poisoned >= 1, "w={workers}");
+        for out in &report.completed {
+            let clean = baseline.completed.iter().find(|o| o.id == out.id).unwrap();
+            assert_eq!(out.steps, clean.steps, "request {} perturbed (w={workers})", out.id);
+        }
+    }
 }

@@ -1,0 +1,226 @@
+//! The split-KV decode parity wall: `flash2_decode` must be **bitwise
+//! identical** to `flash2_forward` for the same config and block
+//! geometry — for any worker count, any span size, causal or not,
+//! sharded (`kv_offset`) or not, dropout or not — and a decode over a
+//! paged-cache snapshot must be bitwise the decode over the original
+//! flat rows. These are equalities, not tolerances: the decode merge
+//! replays the fused sweep's own absorb body in global tile order, so
+//! any drift is a bug, not rounding.
+
+use flashattn::attn::flash::Blocks;
+use flashattn::attn::flash2::{flash2_decode, flash2_forward, Flash2Output};
+use flashattn::attn::kv_cache::RequestCache;
+use flashattn::attn::{AttnConfig, Exec};
+use flashattn::sim::hbm::Hbm;
+use flashattn::tensor::Tensor;
+use flashattn::util::rng::SplitMix64;
+
+fn qkv(n: usize, n_k: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = SplitMix64::new(seed);
+    (
+        Tensor::randn(&[n, d], &mut rng, 1.0),
+        Tensor::randn(&[n_k, d], &mut rng, 1.0),
+        Tensor::randn(&[n_k, d], &mut rng, 1.0),
+    )
+}
+
+fn assert_bitwise(a: &Flash2Output, b: &Flash2Output, ctx: &str) {
+    assert_eq!(a.o.data, b.o.data, "O drifted: {ctx}");
+    let same_lse = a.lse.len() == b.lse.len()
+        && a.lse.iter().zip(&b.lse).all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(same_lse, "lse drifted: {ctx}");
+}
+
+/// The tentpole equality: every (kv_len, span size, worker count,
+/// causal) cell of the grid reproduces the fused kernel bit for bit,
+/// including the 1-span (span covers everything) and span-ragged (last
+/// span shorter) edges and the ragged last column tile.
+#[test]
+fn decode_bitwise_matches_fused_forward_across_the_grid() {
+    for &(n, n_k, d, b_c) in
+        &[(1usize, 96usize, 16usize, 8usize), (1, 100, 8, 8), (3, 64, 16, 16), (2, 7, 8, 4)]
+    {
+        let (q, k, v) = qkv(n, n_k, d, 0xD0 + n as u64);
+        let blocks = Blocks::explicit(b_c, b_c);
+        for causal in [false, true] {
+            let cfg =
+                if causal { AttnConfig::new().causal() } else { AttnConfig::new() };
+            let oracle = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new());
+            let t_c = n_k.div_ceil(b_c);
+            // span_tiles = 1 (one tile per item), a mid size that leaves
+            // the last span ragged, exactly-covering, and over-covering
+            // (single span).
+            for span_tiles in [1usize, 2, 3, t_c, t_c + 7] {
+                for workers in [1usize, 2, 5] {
+                    let exec = Exec::new(workers);
+                    let mut hbm = Hbm::new();
+                    let (out, report) =
+                        flash2_decode(&q, &k, &v, &cfg, blocks, span_tiles, &exec, &mut hbm)
+                            .expect("fault-free decode");
+                    assert_eq!(report.faults(), 0);
+                    let ctx = format!(
+                        "n={n} n_k={n_k} d={d} b_c={b_c} causal={causal} \
+                         span_tiles={span_tiles} workers={workers}"
+                    );
+                    assert_bitwise(&out, &oracle, &ctx);
+                }
+            }
+        }
+    }
+}
+
+/// Sharded decode: a nonzero `kv_offset` (the ring/sequence-parallel
+/// layout) must flow through scoring, the dropout counter hash (which
+/// keys on *global* columns), and the merge identically in both
+/// kernels. The causal case with an offset beyond the local rows is the
+/// fully-masked edge: both kernels must agree on the defined zero-row /
+/// `-inf` result.
+#[test]
+fn decode_matches_fused_forward_under_kv_offset_shards() {
+    let (n, n_k, d, b_c) = (2usize, 48usize, 8usize, 8usize);
+    let (q, k, v) = qkv(n, n_k, d, 7);
+    let blocks = Blocks::explicit(b_c, b_c);
+    for offset in [8usize, 20, 40] {
+        // A shard of columns [offset, offset+n_k) of a longer sequence;
+        // dropout makes the global column index value-relevant.
+        let cfg = AttnConfig::new().dropout(0.25, 0xD15C).kv_len(offset + n_k).for_shard(offset);
+        let oracle = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(2), &mut Hbm::new());
+        for span_tiles in [1usize, 2] {
+            let (out, _) =
+                flash2_decode(&q, &k, &v, &cfg, blocks, span_tiles, &Exec::new(5), &mut Hbm::new())
+                    .expect("fault-free decode");
+            assert_bitwise(&out, &oracle, &format!("offset={offset} span_tiles={span_tiles}"));
+        }
+        // Causal + far offset: every key is above the local diagonal.
+        let masked = AttnConfig::new().causal().kv_len(offset + n_k).for_shard(offset);
+        let oracle =
+            flash2_forward(&q, &k, &v, &masked, blocks, &Exec::new(1), &mut Hbm::new());
+        assert!(oracle.lse.iter().all(|&x| x == f32::NEG_INFINITY));
+        let (out, _) =
+            flash2_decode(&q, &k, &v, &masked, blocks, 2, &Exec::new(2), &mut Hbm::new())
+                .expect("fully-masked decode");
+        assert_bitwise(&out, &oracle, &format!("fully-masked offset={offset}"));
+    }
+}
+
+/// Padding mask (`kv_len` short of the buffered keys): padded tiles are
+/// streamed-and-masked, never skipped, in both kernels — values AND
+/// traffic must agree.
+#[test]
+fn decode_matches_fused_forward_with_padded_kv() {
+    let (n, n_k, d, b_c) = (1usize, 64usize, 16usize, 8usize);
+    let (q, k, v) = qkv(n, n_k, d, 11);
+    let blocks = Blocks::explicit(b_c, b_c);
+    for kv_len in [1usize, 13, 40, 64] {
+        let cfg = AttnConfig::new().kv_len(kv_len);
+        let oracle = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new());
+        let (out, _) =
+            flash2_decode(&q, &k, &v, &cfg, blocks, 2, &Exec::new(2), &mut Hbm::new())
+                .expect("fault-free decode");
+        assert_bitwise(&out, &oracle, &format!("kv_len={kv_len}"));
+    }
+}
+
+/// Dropout rides the same per-(row, column) counter hash in the shared
+/// absorb body, so even the sampled-mask regime is a bitwise equality.
+#[test]
+fn decode_matches_fused_forward_with_dropout() {
+    let (n, n_k, d, b_c) = (2usize, 40usize, 8usize, 8usize);
+    let (q, k, v) = qkv(n, n_k, d, 13);
+    let blocks = Blocks::explicit(b_c, b_c);
+    let cfg = AttnConfig::new().dropout(0.3, 0xD120);
+    let oracle = flash2_forward(&q, &k, &v, &cfg, blocks, &Exec::new(1), &mut Hbm::new());
+    for workers in [1usize, 2, 5] {
+        let (out, _) =
+            flash2_decode(&q, &k, &v, &cfg, blocks, 1, &Exec::new(workers), &mut Hbm::new())
+                .expect("fault-free decode");
+        assert_bitwise(&out, &oracle, &format!("dropout workers={workers}"));
+    }
+}
+
+/// Span/worker invariance stated directly: every (span_tiles, workers)
+/// cell produces one identical byte-level result.
+#[test]
+fn decode_result_is_invariant_across_span_sizes_and_worker_counts() {
+    let (n, n_k, d, b_c) = (1usize, 72usize, 16usize, 8usize);
+    let (q, k, v) = qkv(n, n_k, d, 17);
+    let blocks = Blocks::explicit(b_c, b_c);
+    let cfg = AttnConfig::new();
+    let mut reference: Option<Flash2Output> = None;
+    for span_tiles in [1usize, 2, 4, 9] {
+        for workers in [1usize, 2, 5] {
+            let (out, _) =
+                flash2_decode(&q, &k, &v, &cfg, blocks, span_tiles, &Exec::new(workers), &mut Hbm::new())
+                    .expect("fault-free decode");
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => {
+                    assert_bitwise(&out, r, &format!("span_tiles={span_tiles} workers={workers}"))
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate inputs share the fused kernel's defined semantics: no
+/// keys → zero rows, lse = -inf, zero traffic.
+#[test]
+fn decode_with_no_keys_is_the_defined_empty_result() {
+    let (q, k, v) = qkv(1, 0, 8, 19);
+    let mut hbm = Hbm::new();
+    let (out, report) = flash2_decode(
+        &q,
+        &k,
+        &v,
+        &AttnConfig::new(),
+        Blocks::explicit(8, 8),
+        2,
+        &Exec::new(2),
+        &mut hbm,
+    )
+    .expect("empty decode");
+    assert!(out.o.data.iter().all(|&x| x == 0.0));
+    assert!(out.lse.iter().all(|&x| x == f32::NEG_INFINITY));
+    assert_eq!(hbm.accesses(), 0, "empty decode must cost nothing");
+    assert_eq!(report.faults(), 0);
+    let oracle =
+        flash2_forward(&q, &k, &v, &AttnConfig::new(), Blocks::explicit(8, 8), &Exec::new(1), &mut Hbm::new());
+    assert_bitwise(&out, &oracle, "n_k=0");
+}
+
+/// The serving path end to end: rows appended raggedly into a paged
+/// cache, snapshotted back out, and decoded — bitwise the decode over
+/// the original flat rows (pages preserve exact tile contents and the
+/// snapshot is a bit-exact marshal).
+#[test]
+fn decode_over_a_paged_cache_snapshot_matches_decode_over_flat_rows() {
+    let (n, n_k, d, b_c) = (1usize, 53usize, 8usize, 8usize);
+    let (q, k, v) = qkv(n, n_k, d, 23);
+    let blocks = Blocks::explicit(b_c, b_c);
+    let cfg = AttnConfig::new();
+    let (flat, _) = flash2_decode(&q, &k, &v, &cfg, blocks, 2, &Exec::new(2), &mut Hbm::new())
+        .expect("flat decode");
+
+    let mut cache = RequestCache::new(b_c, d);
+    let mut side = Hbm::new();
+    // Ragged appends: prefill-sized chunk, then token-by-token, then a
+    // page-straddling burst.
+    let mut at = 0usize;
+    for take in [19usize, 1, 1, 11, 1, 20] {
+        let take = take.min(n_k - at);
+        cache.append_kv(
+            &k.data[at * d..(at + take) * d],
+            &v.data[at * d..(at + take) * d],
+            take,
+            &mut side,
+        );
+        at += take;
+    }
+    assert_eq!(at, n_k);
+    assert_eq!(cache.len(), n_k);
+    let kc = Tensor::from_vec(&[n_k, d], cache.snapshot_k());
+    let vc = Tensor::from_vec(&[n_k, d], cache.snapshot_v());
+    let (cached, _) = flash2_decode(&q, &kc, &vc, &cfg, blocks, 2, &Exec::new(5), &mut Hbm::new())
+        .expect("cached decode");
+    assert_bitwise(&cached, &flat, "paged-cache snapshot");
+}

@@ -16,7 +16,7 @@ use flashattn::attn::distributed::{
 };
 use flashattn::attn::faults::{FaultKind, FaultPlan, FaultSite};
 use flashattn::attn::flash::{flash_backward, flash_forward, Blocks};
-use flashattn::attn::flash2::{flash2_backward, flash2_forward};
+use flashattn::attn::flash2::{flash2_backward, flash2_decode, flash2_forward};
 use flashattn::attn::masks::BlockMask;
 use flashattn::attn::standard::{standard_backward, standard_forward};
 use flashattn::attn::{AttnConfig, Exec};
@@ -897,4 +897,90 @@ fn block_sparse_fwd_sharded_tree_matches_per_shard_closed_forms() {
     assert_eq!(driver.o.data, merged.o.data, "driver != re-merged shard partials");
     assert_eq!(driver.m, merged.m);
     assert_eq!(driver.l, merged.l);
+}
+
+/// Split-KV decode traffic: the instrumented `flash2_decode` must match
+/// `cost::flash2_decode` access-for-access over the (n_k, span size,
+/// causal) grid, for every worker count — the per-span Q replication,
+/// the per-live-tile K/V streams and score spill+reload, and the single
+/// epilogue store are all modeled exactly, ragged edges included.
+#[test]
+fn flash2_decode_analytic_matches_instrumented_exactly() {
+    for &(n, n_k, d, b_c, span_tiles) in &[
+        (1usize, 96usize, 16usize, 8usize, 2usize),
+        (1, 100, 8, 8, 3), // ragged last column tile AND ragged last span
+        (3, 64, 16, 16, 1),
+        (2, 72, 8, 8, 100), // one span covers everything
+    ] {
+        let mut rng = SplitMix64::new(0xDE + n_k as u64);
+        let q = Tensor::randn(&[n, d], &mut rng, 1.0);
+        let k = Tensor::randn(&[n_k, d], &mut rng, 1.0);
+        let v = Tensor::randn(&[n_k, d], &mut rng, 1.0);
+        let blocks = Blocks::explicit(b_c, b_c);
+        for causal in [false, true] {
+            let cfg = if causal { AttnConfig::new().causal() } else { AttnConfig::new() };
+            let pred = cost::flash2_decode(
+                n as u64,
+                n_k as u64,
+                d as u64,
+                blocks,
+                span_tiles as u64,
+                causal,
+                false,
+            );
+            for workers in [1usize, 3, 8] {
+                let mut hbm = Hbm::new();
+                flash2_decode(&q, &k, &v, &cfg, blocks, span_tiles, &Exec::new(workers), &mut hbm)
+                    .expect("fault-free decode");
+                assert_eq!(
+                    hbm.accesses(),
+                    pred.hbm_elems,
+                    "n={n} n_k={n_k} d={d} b_c={b_c} span_tiles={span_tiles} \
+                     causal={causal} workers={workers}"
+                );
+            }
+        }
+    }
+}
+
+/// The decode item/merge split of the same closed form: summing
+/// `cost::flash2_decode_item` over every span plus the merge-side
+/// reloads and the epilogue reproduces the kernel's measured total —
+/// the decomposition the fault plane charges per retried span.
+#[test]
+fn flash2_decode_item_forms_partition_the_measured_total() {
+    let (n, n_k, d, b_c, span_tiles) = (2usize, 100usize, 8usize, 8usize, 3usize);
+    let mut rng = SplitMix64::new(0xDEC0);
+    let q = Tensor::randn(&[n, d], &mut rng, 1.0);
+    let k = Tensor::randn(&[n_k, d], &mut rng, 1.0);
+    let v = Tensor::randn(&[n_k, d], &mut rng, 1.0);
+    let blocks = Blocks::explicit(b_c, b_c);
+    let cfg = AttnConfig::new();
+    let mut hbm = Hbm::new();
+    flash2_decode(&q, &k, &v, &cfg, blocks, span_tiles, &Exec::new(2), &mut hbm)
+        .expect("fault-free decode");
+    let t_c = n_k.div_ceil(b_c) as u64;
+    let spans = t_c.div_ceil(span_tiles as u64);
+    let items: u64 = (0..spans)
+        .map(|sp| {
+            cost::flash2_decode_item(
+                n as u64,
+                n_k as u64,
+                d as u64,
+                blocks,
+                span_tiles as u64,
+                sp,
+                false,
+            )
+        })
+        .sum();
+    let merge: u64 = (0..t_c)
+        .map(|j| {
+            let c0 = j * b_c as u64;
+            let bc = ((j + 1) * b_c as u64).min(n_k as u64) - c0;
+            n as u64 * bc + bc * d as u64
+        })
+        .sum();
+    let epilogue = (n * d + n) as u64;
+    assert_eq!(hbm.accesses(), items + merge + epilogue);
 }

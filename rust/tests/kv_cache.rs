@@ -1,0 +1,206 @@
+//! Property tests for the paged KV cache (`attn::kv_cache`): the
+//! TGI-style ragged-batch lifecycle — append / filter / concatenate —
+//! must preserve exact tile contents, filtered-out pages must never be
+//! read (counted-access assertion), and a cache grown through an
+//! arbitrary join/leave history must replay bitwise against a fresh
+//! cache fed the same rows.
+
+use flashattn::attn::kv_cache::{KvBatch, RequestCache};
+use flashattn::sim::hbm::Hbm;
+use flashattn::util::rng::SplitMix64;
+
+/// Deterministic per-request row stream: request `id`, row `pos`.
+fn rows_for(id: u64, lo: usize, count: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut ks = Vec::with_capacity(count * d);
+    let mut vs = Vec::with_capacity(count * d);
+    for pos in lo..lo + count {
+        let mut rk = SplitMix64::new(id.wrapping_mul(1_000_003) ^ (pos as u64) ^ 0xC0FF);
+        let mut rv = SplitMix64::new(id.wrapping_mul(2_000_003) ^ (pos as u64));
+        ks.extend(rk.normal_vec(d, 1.0));
+        vs.extend(rv.normal_vec(d, 1.0));
+    }
+    (ks, vs)
+}
+
+/// Read every page of a cache back out through the counted tile
+/// accessors, reassembling the flat [len, d] K and V images.
+fn read_back(cache: &RequestCache, hbm: &mut Hbm) -> (Vec<f32>, Vec<f32>) {
+    let mut k = Vec::with_capacity(cache.len() * cache.d());
+    let mut v = Vec::with_capacity(cache.len() * cache.d());
+    for t in 0..cache.pages() {
+        k.extend_from_slice(cache.k_tile(t, hbm));
+        v.extend_from_slice(cache.v_tile(t, hbm));
+    }
+    (k, v)
+}
+
+#[test]
+fn ragged_appends_round_trip_bitwise_with_exact_page_geometry_and_traffic() {
+    let (b_c, d) = (8usize, 4usize);
+    let mut cache = RequestCache::new(b_c, d);
+    let mut hbm = Hbm::new();
+    let mut flat_k = Vec::new();
+    let mut flat_v = Vec::new();
+    let mut len = 0usize;
+    // Chunks chosen to hit: fill-within-page, exact page boundary,
+    // page-straddling burst, and the single-token decode append.
+    for take in [3usize, 5, 8, 11, 1, 1, 6] {
+        let (ks, vs) = rows_for(1, len, take, d);
+        cache.append_kv(&ks, &vs, take, &mut hbm);
+        flat_k.extend_from_slice(&ks);
+        flat_v.extend_from_slice(&vs);
+        len += take;
+        assert_eq!(cache.len(), len);
+        assert_eq!(cache.pages(), len.div_ceil(b_c), "page count after {len} rows");
+    }
+    // Append traffic: every element stored exactly once, nothing moved.
+    assert_eq!(hbm.accesses(), (2 * len * d) as u64, "append writes each element once");
+    assert_eq!(hbm.loads, 0, "append never reads");
+    // Only the last page may be partial.
+    for p in 0..cache.pages() {
+        let expect = if p + 1 < cache.pages() { b_c } else { len - p * b_c };
+        assert_eq!(cache.page_rows(p), expect, "page {p}");
+    }
+    // Counted read-back reassembles the exact flat image...
+    let mut rd = Hbm::new();
+    let (k_img, v_img) = read_back(&cache, &mut rd);
+    assert_eq!(k_img, flat_k);
+    assert_eq!(v_img, flat_v);
+    assert_eq!(rd.accesses(), (2 * len * d) as u64, "tile reads stream each element once");
+    // ...and the uncounted snapshot marshal is the same bytes for free.
+    let before = rd.accesses();
+    assert_eq!(cache.snapshot_k(), flat_k);
+    assert_eq!(cache.snapshot_v(), flat_v);
+    assert_eq!(rd.accesses(), before, "snapshots are uncounted marshals");
+}
+
+#[test]
+fn filter_keeps_exact_contents_and_never_reads_the_dropped_pages() {
+    let (b_c, d) = (4usize, 8usize);
+    let mut batch = KvBatch::new(b_c, d);
+    let mut hbm = Hbm::new();
+    let lens = [(10u64, 9usize), (11, 4), (12, 17), (13, 1)];
+    for &(id, n) in &lens {
+        batch.admit(id);
+        let (ks, vs) = rows_for(id, 0, n, d);
+        batch.append_kv(id, &ks, &vs, n, &mut hbm);
+    }
+    let snap_before: Vec<(u64, Vec<f32>, Vec<f32>)> = batch
+        .ids()
+        .iter()
+        .map(|&id| {
+            let c = batch.get(id).unwrap();
+            (id, c.snapshot_k(), c.snapshot_v())
+        })
+        .collect();
+
+    // Drop 11 and 13 (the TGI filter on request exit). Zero traffic:
+    // page ownership moves, no element is read or written.
+    let t0 = hbm.accesses();
+    let batch = batch.filter(&[10, 12]);
+    assert_eq!(hbm.accesses(), t0, "filter is a metadata move");
+    assert_eq!(batch.ids(), vec![10, 12], "batch order preserved");
+    assert_eq!(batch.total_tokens(), 9 + 17);
+
+    // Kept caches are bitwise untouched...
+    for &(id, ref ks, ref vs) in snap_before.iter().filter(|(id, ..)| *id == 10 || *id == 12) {
+        let c = batch.get(id).unwrap();
+        assert_eq!(&c.snapshot_k(), ks);
+        assert_eq!(&c.snapshot_v(), vs);
+    }
+    // ...and a full counted sweep of the surviving batch accounts for
+    // exactly the kept pages: if any dropped page were still reachable
+    // and read, the element count could not balance.
+    let mut rd = Hbm::new();
+    for &id in &batch.ids() {
+        read_back(batch.get(id).unwrap(), &mut rd);
+    }
+    assert_eq!(rd.accesses(), (2 * (9 + 17) * d) as u64, "only kept pages are readable");
+    assert!(batch.get(11).is_none() && batch.get(13).is_none());
+}
+
+#[test]
+fn concatenate_preserves_order_ids_and_exact_tile_contents() {
+    let (b_c, d) = (8usize, 4usize);
+    let mut a = KvBatch::new(b_c, d);
+    let mut b = KvBatch::new(b_c, d);
+    let mut hbm = Hbm::new();
+    for &(id, n) in &[(1u64, 11usize), (2, 3)] {
+        a.admit(id);
+        let (ks, vs) = rows_for(id, 0, n, d);
+        a.append_kv(id, &ks, &vs, n, &mut hbm);
+    }
+    for &(id, n) in &[(7u64, 8usize), (8, 5)] {
+        b.admit(id);
+        let (ks, vs) = rows_for(id, 0, n, d);
+        b.append_kv(id, &ks, &vs, n, &mut hbm);
+    }
+    let t0 = hbm.accesses();
+    let joined = KvBatch::concatenate(a, b);
+    assert_eq!(hbm.accesses(), t0, "concatenate is a metadata move");
+    assert_eq!(joined.ids(), vec![1, 2, 7, 8], "a-then-b order");
+    assert_eq!(joined.total_tokens(), 11 + 3 + 8 + 5);
+    for &(id, n) in &[(1u64, 11usize), (2, 3), (7, 8), (8, 5)] {
+        let (ks, vs) = rows_for(id, 0, n, d);
+        let c = joined.get(id).unwrap();
+        assert_eq!(c.snapshot_k(), ks, "request {id} K image");
+        assert_eq!(c.snapshot_v(), vs, "request {id} V image");
+    }
+}
+
+/// The serving lifecycle property: a cache grown through an arbitrary
+/// join → append → leave → append history holds, for every surviving
+/// request, exactly the bytes a fresh cache fed the same rows holds.
+#[test]
+fn grown_then_filtered_batch_replays_bitwise_against_fresh_caches() {
+    let (b_c, d) = (4usize, 4usize);
+    let mut batch = KvBatch::new(b_c, d);
+    let mut hbm = Hbm::new();
+    let mut produced: Vec<(u64, usize)> = Vec::new();
+    // Phase 1: three requests join and prefill.
+    for &(id, n) in &[(100u64, 6usize), (101, 13), (102, 2)] {
+        batch.admit(id);
+        let (ks, vs) = rows_for(id, 0, n, d);
+        batch.append_kv(id, &ks, &vs, n, &mut hbm);
+        produced.push((id, n));
+    }
+    // Phase 2: a few decode steps append one row to everyone.
+    for _step in 0..3 {
+        for entry in produced.iter_mut() {
+            let (ks, vs) = rows_for(entry.0, entry.1, 1, d);
+            batch.append_kv(entry.0, &ks, &vs, 1, &mut hbm);
+            entry.1 += 1;
+        }
+    }
+    // Phase 3: 101 finishes and is filtered out; a new request joins.
+    let mut batch = batch.filter(&[100, 102]);
+    produced.retain(|(id, _)| *id != 101);
+    batch.admit(103);
+    let (ks, vs) = rows_for(103, 0, 7, d);
+    batch.append_kv(103, &ks, &vs, 7, &mut hbm);
+    produced.push((103, 7));
+    // Phase 4: more decode steps for the survivors.
+    for _step in 0..2 {
+        for entry in produced.iter_mut() {
+            let (ks, vs) = rows_for(entry.0, entry.1, 1, d);
+            batch.append_kv(entry.0, &ks, &vs, 1, &mut hbm);
+            entry.1 += 1;
+        }
+    }
+    // Every survivor replays bitwise against a fresh single-shot cache.
+    for &(id, n) in &produced {
+        let (ks, vs) = rows_for(id, 0, n, d);
+        let mut fresh = RequestCache::new(b_c, d);
+        fresh.append_kv(&ks, &vs, n, &mut Hbm::new());
+        let grown = batch.get(id).unwrap();
+        assert_eq!(grown.len(), n, "request {id}");
+        assert_eq!(grown.snapshot_k(), fresh.snapshot_k(), "request {id} K image");
+        assert_eq!(grown.snapshot_v(), fresh.snapshot_v(), "request {id} V image");
+        // Page-for-page, not just flattened: the tile geometry itself
+        // must be history-independent.
+        assert_eq!(grown.pages(), fresh.pages(), "request {id} page count");
+        let (gk, gv) = read_back(grown, &mut Hbm::new());
+        let (fk, fv) = read_back(&fresh, &mut Hbm::new());
+        assert_eq!((gk, gv), (fk, fv), "request {id} tiles");
+    }
+}
